@@ -1,0 +1,232 @@
+//! ECC *training* pattern (§2): federated learning across ECs.
+//!
+//! The CC coordinates FedAvg rounds over three ECs. Each round:
+//!   1. the CC publishes the global model to every EC's file service
+//!      (control over the bridged message bus, data via object store —
+//!      the Figure 2 split);
+//!   2. each EC runs LOCAL SGD steps on its private shard using the
+//!      AOT-compiled `fl_train_step.hlo.txt` (one XLA executable, the
+//!      same artifact pattern as the classifiers);
+//!   3. ECs upload their updates; the CC federated-averages them.
+//!
+//! Client data is non-IID (each EC sees a biased slice), so the
+//! federated model must beat every client-only model on the global
+//! test set — which the example asserts.
+//!
+//! Run: `cargo run --release --example federated_training_sim`
+
+use ace::pubsub::{Bridge, Broker};
+use ace::runtime::{artifacts_dir, literal_f32, literal_i32, Engine};
+use ace::storage::{FileService, Lifecycle, ObjectStore};
+use ace::util::prng::Stream;
+
+const DIM: usize = 16;
+const BATCH: usize = 32;
+const ECS: usize = 3;
+const ROUNDS: usize = 12;
+const LOCAL_STEPS: usize = 4;
+
+/// Synthetic non-IID binary task: y = sign(w*.x); EC k only sees
+/// examples whose first feature falls in its band.
+fn make_shard(ec: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut s = Stream::new(seed + ec as u64 * 1000);
+    let mut x = Vec::with_capacity(n * DIM);
+    let mut y = Vec::with_capacity(n);
+    let mut kept = 0;
+    while kept < n {
+        let mut row = [0f32; DIM];
+        for v in row.iter_mut() {
+            *v = s.next_f32() * 2.0 - 1.0;
+        }
+        // non-IID band per EC on feature 0
+        let band = (row[0] + 1.0) / 2.0 * ECS as f32;
+        if band as usize % ECS != ec {
+            continue;
+        }
+        // true concept: mix of features 0..3
+        let score = row[0] * 1.5 - row[1] + 0.5 * row[2] + 0.25 * row[3];
+        x.extend_from_slice(&row);
+        y.push(if score > 0.0 { 1 } else { 0 });
+        kept += 1;
+    }
+    (x, y)
+}
+
+fn accuracy(w: &[f32], b: &[f32], x: &[f32], y: &[i32]) -> f64 {
+    let n = y.len();
+    let mut correct = 0;
+    for i in 0..n {
+        let row = &x[i * DIM..(i + 1) * DIM];
+        let mut logits = [b[0], b[1]];
+        for (j, v) in row.iter().enumerate() {
+            logits[0] += v * w[j * 2];
+            logits[1] += v * w[j * 2 + 1];
+        }
+        let pred = if logits[1] > logits[0] { 1 } else { 0 };
+        if pred == y[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+fn serialize_f32(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|f| f.to_le_bytes()).collect()
+}
+
+fn deserialize_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    // resource layer: CC + per-EC brokers/stores, bridged
+    let cc_broker = Broker::new("cc");
+    let ec_brokers: Vec<Broker> = (0..ECS).map(|i| Broker::new(format!("ec-{i}"))).collect();
+    let _bridges: Vec<Bridge> = ec_brokers
+        .iter()
+        .map(|ec| Bridge::start(ec, &cc_broker, &["cloud/#"], &["edge/#"]).unwrap())
+        .collect();
+    let cc_files = FileService::new(ObjectStore::new(), cc_broker.clone(), "cc");
+    let ec_files: Vec<FileService> = ec_brokers
+        .iter()
+        .enumerate()
+        .map(|(i, b)| FileService::new(ObjectStore::new(), b.clone(), format!("ec-{i}")))
+        .collect();
+
+    // runtime: the per-client train step is ONE AOT artifact
+    let engine = Engine::cpu()?;
+    let dir = artifacts_dir()?;
+    let manifest = ace::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    let step = engine.load(&dir.join(&manifest.fl_file))?;
+    println!(
+        "loaded {} (dim={} batch={})",
+        manifest.fl_file, manifest.fl_dim, manifest.fl_batch
+    );
+    assert_eq!(manifest.fl_dim, DIM);
+    assert_eq!(manifest.fl_batch, BATCH);
+
+    // data: non-IID shards + a global test set
+    let shards: Vec<(Vec<f32>, Vec<i32>)> =
+        (0..ECS).map(|ec| make_shard(ec, 256, 42)).collect();
+    let mut test_x = Vec::new();
+    let mut test_y = Vec::new();
+    for ec in 0..ECS {
+        let (x, y) = make_shard(ec, 128, 777);
+        test_x.extend(x);
+        test_y.extend(y);
+    }
+
+    // TRUE client-only baselines: same step budget, own shard only,
+    // never federated — what each EC could do without the CC.
+    let mut client_only_acc = vec![0.0f64; ECS];
+    for ec in 0..ECS {
+        let mut lw = vec![0.0f32; DIM * 2];
+        let mut lb = vec![0.0f32; 2];
+        let (x, y) = &shards[ec];
+        let nb = x.len() / (BATCH * DIM);
+        for step_i in 0..ROUNDS * LOCAL_STEPS {
+            let bi = step_i % nb;
+            let xs = &x[bi * BATCH * DIM..(bi + 1) * BATCH * DIM];
+            let ys = &y[bi * BATCH..(bi + 1) * BATCH];
+            let out = step.run(&[
+                literal_f32(&lw, &[DIM as i64, 2])?,
+                literal_f32(&lb, &[2])?,
+                literal_f32(xs, &[BATCH as i64, DIM as i64])?,
+                literal_i32(ys, &[BATCH as i64])?,
+                literal_f32(&[0.3], &[])?,
+            ])?;
+            lw = out[0].to_vec::<f32>()?;
+            lb = out[1].to_vec::<f32>()?;
+        }
+        client_only_acc[ec] = accuracy(&lw, &lb, &test_x, &test_y);
+    }
+
+    let mut w = vec![0.0f32; DIM * 2];
+    let mut b = vec![0.0f32; 2];
+
+    for round in 0..ROUNDS {
+        // 1. CC -> ECs: global model via file services (data plane) +
+        //    announcement (control plane rides the bridge)
+        cc_files.put("fl", "global", serialize_f32(&w), Lifecycle::Temporary);
+        cc_files.put("fl", "global_b", serialize_f32(&b), Lifecycle::Temporary);
+        for fs in &ec_files {
+            fs.put("fl", "global", serialize_f32(&w), Lifecycle::Temporary);
+            fs.put("fl", "global_b", serialize_f32(&b), Lifecycle::Temporary);
+        }
+
+        // 2. local training on each EC (real XLA steps)
+        let mut sum_w = vec![0.0f32; DIM * 2];
+        let mut sum_b = vec![0.0f32; 2];
+        let mut last_losses = Vec::new();
+        for (ec, fs) in ec_files.iter().enumerate() {
+            let mut lw = deserialize_f32(&fs.get("fl", "global").unwrap());
+            let mut lb = deserialize_f32(&fs.get("fl", "global_b").unwrap());
+            let (x, y) = &shards[ec];
+            let nb = x.len() / (BATCH * DIM);
+            let mut loss = 0.0f32;
+            for step_i in 0..LOCAL_STEPS {
+                let bi = (round * LOCAL_STEPS + step_i) % nb;
+                let xs = &x[bi * BATCH * DIM..(bi + 1) * BATCH * DIM];
+                let ys = &y[bi * BATCH..(bi + 1) * BATCH];
+                let out = step.run(&[
+                    literal_f32(&lw, &[DIM as i64, 2])?,
+                    literal_f32(&lb, &[2])?,
+                    literal_f32(xs, &[BATCH as i64, DIM as i64])?,
+                    literal_i32(ys, &[BATCH as i64])?,
+                    literal_f32(&[0.3], &[])?,
+                ])?;
+                lw = out[0].to_vec::<f32>()?;
+                lb = out[1].to_vec::<f32>()?;
+                loss = out[2].to_vec::<f32>()?[0];
+            }
+            last_losses.push(loss);
+            // 3. upload update (object store data plane)
+            fs.put("fl", "update", serialize_f32(&lw), Lifecycle::Temporary);
+            fs.put("fl", "update_b", serialize_f32(&lb), Lifecycle::Temporary);
+            for (acc, v) in sum_w.iter_mut().zip(&lw) {
+                *acc += v;
+            }
+            for (acc, v) in sum_b.iter_mut().zip(&lb) {
+                *acc += v;
+            }
+        }
+
+        // FedAvg at the CC
+        for v in sum_w.iter_mut() {
+            *v /= ECS as f32;
+        }
+        for v in sum_b.iter_mut() {
+            *v /= ECS as f32;
+        }
+        w = sum_w;
+        b = sum_b;
+        let acc = accuracy(&w, &b, &test_x, &test_y);
+        println!(
+            "round {round:>2}: losses {:?}  global acc {:.3}",
+            last_losses.iter().map(|l| format!("{l:.3}")).collect::<Vec<_>>(),
+            acc
+        );
+    }
+
+    let fed_acc = accuracy(&w, &b, &test_x, &test_y);
+    println!("\nfederated model accuracy : {fed_acc:.3}");
+    for (ec, acc) in client_only_acc.iter().enumerate() {
+        println!("client-only (EC {ec})      : {acc:.3}");
+    }
+    // gc temporary round files (lifecycle policy, §4.3.2)
+    let purged: usize = ec_files.iter().map(|f| f.store.gc()).sum::<usize>() + cc_files.store.gc();
+    println!("gc purged {purged} temporary objects");
+    let best_client = client_only_acc.iter().cloned().fold(0.0f64, f64::max);
+    let mean_client =
+        client_only_acc.iter().sum::<f64>() / client_only_acc.len() as f64;
+    assert!(
+        fed_acc > mean_client,
+        "federation ({fed_acc:.3}) failed to beat the mean client-only model ({mean_client:.3})"
+    );
+    println!(
+        "OK: federated {fed_acc:.3} vs client-only mean {mean_client:.3} / best {best_client:.3}"
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! §4.4.3 application management: thorough vs incremental updates.
+//!
+//! Deploys the video-query topology, then pushes three successive
+//! topology changes and shows what each update style touches:
+//!
+//!   v2 — od image bump            -> incremental touches ONLY the 9
+//!                                     camera nodes;
+//!   v3 — rs resources + new comp  -> incremental adds the new
+//!                                     component without disturbing od;
+//!   v4 — thorough update          -> full redeploy (every node).
+//!
+//! Run: `cargo run --release --example incremental_update`
+
+use ace::infra::agent::Agent;
+use ace::infra::paper_testbed;
+use ace::platform::api::ApiServer;
+use ace::platform::Controller;
+use ace::pubsub::Broker;
+use ace::topology::{Topology, VIDEOQUERY_TOPOLOGY};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+fn wait_settle() {
+    std::thread::sleep(Duration::from_millis(250));
+}
+
+fn main() -> anyhow::Result<()> {
+    let infra = paper_testbed("upd");
+    let brokers: BTreeMap<String, Broker> = infra
+        .clusters()
+        .map(|c| (c.id.leaf().to_string(), Broker::new(c.id.leaf())))
+        .collect();
+    let agents: Vec<Agent> = infra
+        .all_nodes()
+        .map(|(c, n)| Agent::start(n.id.clone(), brokers[c.id.leaf()].clone()).unwrap())
+        .collect();
+    let ctl = Controller::new(ApiServer::new(), brokers.clone());
+
+    // v1: initial deployment
+    let topo = Topology::parse(VIDEOQUERY_TOPOLOGY)?;
+    let plan = ctl.deploy(&topo, &infra)?;
+    wait_settle();
+    println!(
+        "v1 deployed: {} instances across {} nodes",
+        plan.instances.len(),
+        plan.nodes().len()
+    );
+
+    // v2: bump only od's image -> incremental touches the camera nodes
+    let mut v2 = topo.clone();
+    v2.version = 2;
+    for c in &mut v2.components {
+        if c.name == "od" {
+            c.image = "ace/object-detector:2".into();
+        }
+    }
+    let (_, touched) = ctl.update_incremental(&v2, &infra)?;
+    wait_settle();
+    let od2 = agents
+        .iter()
+        .flat_map(|a| a.running())
+        .filter(|r| r.component == "od" && r.image.ends_with(":2"))
+        .count();
+    println!("v2 incremental: touched {touched} nodes (expect 9); {od2}/9 od instances on :2");
+
+    // v3: add an alerting component on the CC; nothing else moves
+    let mut v3_doc = String::from(VIDEOQUERY_TOPOLOGY.trim_end().to_string());
+    v3_doc.push_str(
+        "
+  - name: alert
+    image: ace/alerter:1
+    location: cloud
+    resources:
+      cpu: 200
+      mem: 128
+    connections: [rs]
+",
+    );
+    let mut v3 = Topology::parse(&v3_doc)?;
+    v3.version = 3;
+    for c in &mut v3.components {
+        if c.name == "od" {
+            c.image = "ace/object-detector:2".into(); // keep v2's od
+        }
+    }
+    let (_, touched) = ctl.update_incremental(&v3, &infra)?;
+    wait_settle();
+    println!("v3 incremental: touched {touched} node(s) (expect 1 — the CC)");
+
+    // v4: thorough update re-deploys everything
+    let mut v4 = v3.clone();
+    v4.version = 4;
+    let plan4 = ctl.update_thorough(&v4, &infra)?;
+    wait_settle();
+    println!(
+        "v4 thorough: full redeploy of {} instances across {} nodes",
+        plan4.instances.len(),
+        plan4.nodes().len()
+    );
+
+    // final state check
+    let total: usize = agents.iter().map(|a| a.running().len()).sum();
+    println!("agents now run {total} instances (expect {})", plan4.instances.len());
+    ctl.remove("videoquery")?;
+    wait_settle();
+    println!("removed; agents empty: {}", agents.iter().all(|a| a.running().is_empty()));
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! §4.2.2 Validation Testbed: evaluate the video-query app under
+//! edge-cloud channel dynamics BEFORE deployment.
+//!
+//! Runs the same ACE+ workload (real XLA inference) under four WAN
+//! profiles — the paper's ideal and practical channels, a mid-run
+//! bandwidth collapse, and a high-jitter channel — and prints the
+//! side-by-side F1/BWC/EIL report a developer would use to understand
+//! "the actual performance of an ECCI application in real-world
+//! networks".
+//!
+//! Run: `cargo run --release --example validation_testbed`
+
+use ace::app::videoquery::{CellConfig, Compute, InferCache, Paradigm, ServiceTimes};
+use ace::runtime::{artifacts_dir, Engine, ModelBank};
+use ace::testbed::{evaluate, report, ChannelProfile};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let mut bank = ModelBank::load(&engine, &artifacts_dir()?)?;
+    bank.calibrate(3)?;
+    let svc = ServiceTimes::calibrated_to_paper(&bank);
+    let bank = Rc::new(bank);
+    let cache = Rc::new(RefCell::new(InferCache::new()));
+
+    let base = CellConfig {
+        paradigm: Paradigm::AceAp,
+        interval_s: 0.15,
+        duration_s: 24.0,
+        seed: 3,
+        ..Default::default()
+    };
+    let profiles = vec![
+        ChannelProfile::paper_wan(0.0),
+        ChannelProfile::paper_wan(50.0),
+        ChannelProfile::degraded(8.0, 16.0, 0.3), // WAN squeezed to 0.3 Mbps mid-run
+        ChannelProfile::jittery(50.0, 100.0),     // 50 +- [0,100] ms delay
+    ];
+
+    eprintln!(
+        "[testbed] evaluating '{}' under {} channel profiles ({}s virtual each)...",
+        "videoquery/ACE+",
+        profiles.len(),
+        base.duration_s
+    );
+    let mut results = evaluate(&base, &profiles, &svc, || Compute::Real {
+        bank: bank.clone(),
+        cache: cache.clone(),
+    })?;
+
+    println!("\n# Validation testbed report — videoquery under ACE+\n");
+    println!("{}", report(&mut results));
+    println!(
+        "(profiles: paper ideal/practical WAN; 2 Mbps squeeze during [8s,16s); 50±100 ms jitter)"
+    );
+
+    // the squeeze under the NON-adaptive Basic Policy, for contrast —
+    // exactly the what-if a developer runs on the testbed before
+    // choosing a policy
+    let mut bp = base.clone();
+    bp.paradigm = Paradigm::AceBp;
+    let mut bp_results = evaluate(
+        &bp,
+        &[ChannelProfile::paper_wan(0.0), ChannelProfile::degraded(8.0, 16.0, 0.3)],
+        &svc,
+        || Compute::Real { bank: bank.clone(), cache: cache.clone() },
+    )?;
+    println!("\n# Same squeeze under the Basic Policy (no adaptation)\n");
+    println!("{}", report(&mut bp_results));
+
+    // developer-takeaway checks, asserted so regressions get caught
+    let eil_ap: Vec<f64> = results.iter().map(|(_, m)| m.eil.mean()).collect();
+    assert!(eil_ap[1] > eil_ap[0], "practical delay should cost EIL");
+    let p99_jitter = results[3].1.eil.quantile(0.99);
+    let p99_stable = results[1].1.eil.quantile(0.99);
+    assert!(p99_jitter > p99_stable, "jitter should widen the p99 tail");
+    // the squeeze shows up in AP's tail latency (its load-balancing
+    // diversion keeps using the WAN), while BP's narrow upload band
+    // sails under even 0.3 Mbps — exactly the kind of policy-selection
+    // insight the validation testbed exists to surface (§4.2.2)
+    let ap_p99_squeeze = results[2].1.eil.quantile(0.99);
+    let ap_p99_base = results[0].1.eil.quantile(0.99);
+    assert!(
+        ap_p99_squeeze > ap_p99_base * 1.5,
+        "squeeze invisible in AP p99: {ap_p99_squeeze} vs {ap_p99_base}"
+    );
+    let bp_cost = bp_results[1].1.eil.mean() / bp_results[0].1.eil.mean();
+    println!(
+        "\nOK: delay + jitter visible; 0.3 Mbps squeeze widens AP's p99 {:.1}x while BP \
+         (narrow upload band) pays only {bp_cost:.2}x mean — the testbed exposes the \
+         policy's bandwidth appetite before deployment",
+        ap_p99_squeeze / ap_p99_base
+    );
+    Ok(())
+}

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+Kernels: `matmul` (tiled MXU matmul, fused bias/ReLU), `dwconv`
+(depthwise 3x3), `framediff` (3-frame motion score). See each module's
+docstring for the BlockSpec schedule and the VMEM footprint estimator
+used by EXPERIMENTS.md §Perf.
+"""
+
+from .matmul import matmul, pick_blocks
+from .dwconv import dwconv
+from .framediff import framediff
+from . import ref
+
+__all__ = ["matmul", "pick_blocks", "dwconv", "framediff", "ref"]

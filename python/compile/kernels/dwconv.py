@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: depthwise 3x3 convolution (+ bias + ReLU epilogue).
+
+Used by the MobileNetV2-style EOC's separable blocks. One grid step per
+image: the padded (H+2, W+2, C) input plane is staged into VMEM and the
+3x3 window is computed as nine shifted multiply-accumulates — the VMEM
+analogue of the shared-memory halo scheme a CUDA depthwise kernel would
+use (DESIGN.md §Hardware-Adaptation). Channels sit in the minor (lane)
+dimension, so each MAC is a full-width vector op on the VPU.
+
+Stride 2 is handled by computing the dense map and writing the strided
+subsample — interpret-mode cost is identical and the HLO stays fusable.
+Oracle: `ref.dwconv_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, hh, ww, stride, sy, sx, act):
+    """x_ref: (1, H+2, W+2, C) padded; w_ref: (3, 3, C); o_ref strided out.
+
+    sy/sx are the subsample start offsets that align the dense (stride-1,
+    pad-1) map with TF-style SAME padding at the requested stride: SAME
+    uses pad_top = ((OH-1)*s + 3 - H)//2, and dense index i covers input
+    rows [i-1, i+1], so out row j maps to dense row j*s + (1 - pad_top).
+    """
+    x = x_ref[0]
+    acc = jnp.zeros((hh, ww, x.shape[-1]), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            acc += x[dy : dy + hh, dx : dx + ww, :] * w_ref[dy, dx, :]
+    acc = acc + b_ref[...]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[0] = acc[sy::stride, sx::stride, :]
+
+
+def dwconv(x, w, bias=None, stride=1, act="none"):
+    """Depthwise 3x3, SAME padding.
+
+    x: (N, H, W, C) f32; w: (3, 3, C); bias: (C,) or None.
+    Output: (N, ceil(H/stride), ceil(W/stride), C).
+    """
+    n, h, wd, c = x.shape
+    assert w.shape == (3, 3, c), (w.shape, c)
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    oh = -(-h // stride)
+    ow = -(-wd // stride)
+
+    def _start(size, out):
+        pad_top = max((out - 1) * stride + 3 - size, 0) // 2
+        return 1 - pad_top
+
+    sy, sx = _start(h, oh), _start(wd, ow)
+    b = bias if bias is not None else jnp.zeros((c,), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, hh=h, ww=wd, stride=stride,
+                          sy=sy, sx=sx, act=act),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h + 2, wd + 2, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, oh, ow, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, c), jnp.float32),
+        interpret=True,
+    )(xp, w, b)
+
+
+def vmem_bytes(h, w, c):
+    """Per-step VMEM estimate: padded plane + weights + bias + dense out."""
+    return 4 * ((h + 2) * (w + 2) * c + 9 * c + c + h * w * c)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: three-frame differencing motion score map.
+
+This is the paper's OD (Object Detector): SurveilEdge-style frame
+differencing replaces a heavy detector on resource-limited edge nodes
+(§5.1.2). The rust OD has a native implementation on its hot path; this
+kernel is the XLA-offload variant (`--od-xla`) and an L1 deliverable,
+exercised by the `framediff.hlo.txt` artifact and the OD ablation bench.
+
+score(y, x) = box3x3( min(|f1 - f0|, |f2 - f1|) )
+
+i.e. motion must be present across BOTH consecutive frame pairs (this
+suppresses single-frame noise), then a 3x3 box filter suppresses isolated
+pixels. The rust connected-component pass thresholds this map into crop
+boxes.
+
+Schedule: one grid step stages all three (H, W) frames into VMEM — at the
+synthetic 96x160 resolution that is 3 * 60 KiB in + 60 KiB out, far under
+the ~16 MiB VMEM budget, so halo banding would only add grid overhead
+(see EXPERIMENTS.md §Perf L1 for the footprint table; 1080p would need
+the banded variant). Oracle: `ref.framediff_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fd_kernel(f0_ref, f1_ref, f2_ref, o_ref, *, h, w):
+    d1 = jnp.abs(f1_ref[...] - f0_ref[...])
+    d2 = jnp.abs(f2_ref[...] - f1_ref[...])
+    m = jnp.minimum(d1, d2)
+    mp = jnp.pad(m, ((1, 1), (1, 1)))
+    acc = jnp.zeros((h, w), jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            acc += mp[dy : dy + h, dx : dx + w]
+    o_ref[...] = acc * jnp.float32(1.0 / 9.0)
+
+
+def framediff(f0, f1, f2):
+    """Motion score map for three consecutive (H, W) grayscale frames."""
+    h, w = f0.shape
+    assert f1.shape == (h, w) and f2.shape == (h, w)
+    spec = pl.BlockSpec((h, w), lambda: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_fd_kernel, h=h, w=w),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(f0, f1, f2)
+
+
+def vmem_bytes(h, w):
+    """VMEM estimate: 3 frames + padded min-map + accumulator + out."""
+    return 4 * (3 * h * w + (h + 2) * (w + 2) + 2 * h * w)

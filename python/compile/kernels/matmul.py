@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + activation epilogue.
+
+This is the compute workhorse of both classifiers: every convolution is
+expressed as im2col (L2, `model.py`) followed by this kernel, and the
+dense heads call it directly. The design targets the TPU MXU (DESIGN.md
+§Hardware-Adaptation):
+
+  * grid (M/bm, N/bn, K/bk) with a VMEM accumulator scratch — the
+    classic HBM->VMEM block schedule (the role threadblock tiling plays
+    in the paper's GPU baselines);
+  * blocks default to 128x128 (MXU native tile); K is innermost so each
+    (i, j) output tile stays resident in VMEM across the K sweep;
+  * bias add + ReLU are fused into the epilogue of the last K step, so
+    the activation never round-trips to HBM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO (see aot_recipe).
+Correctness oracle: `ref.matmul_ref` (pytest + hypothesis sweeps).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, b_ref, o_ref, acc_ref, *, nk, act, has_bias):
+    """One (bm, bn) output tile; K swept by the innermost grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if has_bias:
+            out = out + b_ref[...]  # (1, bn) broadcast over rows
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def _ceil_to(v, m):
+    return -(-v // m) * m
+
+
+def pick_blocks(m, n, k, bm=128, bn=128, bk=128):
+    """Shrink default 128^3 blocks for small operands (less pad waste).
+
+    Keeps the lane dimension at >= 8 and the sublane at >= 8 so the
+    blocks stay aligned with the (8, 128) TPU vreg tiling.
+    """
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    return bm, bn, bk
+
+
+def matmul(x, y, bias=None, act="none", bm=1024, bn=128, bk=512):
+    """act(x @ y + bias) via the Pallas kernel.
+
+    x: (M, K) f32; y: (K, N) f32; bias: (N,) f32 or None;
+    act: "none" | "relu". Operands are zero-padded to block multiples and
+    the result sliced back — zero padding is exact for matmul + bias
+    broadcast (padded rows/cols are discarded before any nonlinearity is
+    observed by the caller).
+
+    Default tiles (1024, 128, 512) are the §Perf-tuned operating point:
+    interpret-mode grids pay an O(output) copy per step, so fewer/larger
+    tiles cut COC b=1 latency 4.4x vs 128^3 (EXPERIMENTS.md §Perf L1)
+    while the VMEM footprint (~3.3 MiB, `vmem_bytes`) still fits the
+    16 MiB budget a real TPU core would impose. `pick_blocks` shrinks
+    them automatically for small operands.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    bm, bn, bk = pick_blocks(m, n, k, bm, bn, bk)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    has_bias = bias is not None
+    if has_bias:
+        bp = jnp.pad(bias.reshape(1, -1), ((0, 0), (0, np_ - n)))
+    else:
+        bp = jnp.zeros((1, np_), jnp.float32)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _matmul_kernel, nk=grid[2], act=act, has_bias=has_bias
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, yp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm=128, bn=128, bk=128):
+    """Static VMEM footprint estimate of one grid step (f32).
+
+    x-tile + y-tile + bias + out-tile + accumulator. Used by the §Perf
+    analysis in EXPERIMENTS.md (interpret mode has no real VMEM).
+    """
+    return 4 * (bm * bk + bk * bn + bn + 2 * bm * bn)

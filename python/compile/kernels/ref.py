@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth (pytest + hypothesis assert the
+Pallas kernels match them) AND the fast path used for build-time
+training (`train.py` runs the ref implementations; the exported
+inference HLO runs the Pallas path — both are asserted equivalent by
+`tests/test_model.py::test_pallas_ref_parity`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y, bias=None, act="none"):
+    out = jnp.dot(x, y, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def dwconv_ref(x, w, bias=None, stride=1, act="none"):
+    """Depthwise 3x3 SAME via lax.conv_general_dilated, NHWC."""
+    c = x.shape[-1]
+    # (3, 3, C) -> (3, 3, 1, C) HWIO with feature_group_count = C
+    rhs = w.reshape(3, 3, 1, c)
+    out = jax.lax.conv_general_dilated(
+        x,
+        rhs,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    if bias is not None:
+        out = out + bias
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def framediff_ref(f0, f1, f2):
+    """min of consecutive abs-diffs, then 3x3 box mean (zero padded)."""
+    m = jnp.minimum(jnp.abs(f1 - f0), jnp.abs(f2 - f1))
+    h, w = m.shape
+    mp = jnp.pad(m, ((1, 1), (1, 1)))
+    acc = jnp.zeros_like(m)
+    for dy in range(3):
+        for dx in range(3):
+            acc = acc + mp[dy : dy + h, dx : dx + w]
+    return acc / 9.0

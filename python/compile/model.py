@@ -1,0 +1,367 @@
+"""L2 JAX models: EOC (edge) and COC (cloud) classifiers.
+
+The paper's video-query application (§5.1.2) uses:
+  * COC — ResNet152 on the Central Cloud: accurate multi-class
+    classification. Here: a ResNet-style 8-class CNN over 32x32 crops.
+  * EOC — MobileNetV2 trained on the fly, deployed on edge nodes:
+    lightweight binary ("is the queried object present") classification.
+    Here: a tiny depthwise-separable CNN with a 2-way head.
+
+Both are pure-functional: params/state are pytrees of jnp arrays. Every
+convolution is im2col (this module) + the L1 Pallas `matmul` kernel;
+EOC's depthwise stages call the L1 `dwconv` kernel. `use_pallas=False`
+switches to the `ref` oracles — that path is used for build-time
+training (fast under jit) and is asserted numerically equal to the
+Pallas path by `tests/test_model.py`.
+
+BatchNorm runs in batch-stats mode during training and is folded into
+conv weights for export (`fold_conv_bn`), so the AOT-lowered inference
+graph is conv + bias + relu only.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .kernels import ref
+from .scenes import CROP, NUM_CLASSES
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# im2col convolution: patches (L2) + Pallas matmul (L1)
+# ---------------------------------------------------------------------------
+
+
+def _same_pads(size, stride):
+    """TF-style SAME padding for a 3x3 window."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + 3 - size, 0)
+    return total // 2, total - total // 2, out
+
+
+def extract_patches_3x3(x, stride):
+    """(N,H,W,C) -> (N*OH*OW, 9*C) patch matrix, SAME padding.
+
+    The patch order (dy-major, then dx, then channel) must match the
+    weight reshape in `conv3x3`.
+    """
+    n, h, w, c = x.shape
+    pt, pb, oh = _same_pads(h, stride)
+    pl_, pr, ow = _same_pads(w, stride)
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            sl = xp[:, dy : dy + (oh - 1) * stride + 1 : stride,
+                    dx : dx + (ow - 1) * stride + 1 : stride, :]
+            cols.append(sl)
+    pat = jnp.concatenate(cols, axis=-1)  # (N, OH, OW, 9*C)
+    return pat.reshape(n * oh * ow, 9 * c), (n, oh, ow)
+
+
+def conv3x3(x, w, bias=None, stride=1, act="none", use_pallas=True):
+    """3x3 conv, SAME. w: (3,3,Cin,Cout). Returns (N,OH,OW,Cout).
+
+    Pallas path (the exported inference graph): im2col + the L1 matmul
+    kernel. Ref path (build-time training + oracle): XLA's native conv —
+    ~6x faster on this host and numerically equivalent (asserted by
+    tests/test_model.py::test_pallas_ref_parity).
+    """
+    if use_pallas:
+        cout = w.shape[-1]
+        pat, (n, oh, ow) = extract_patches_3x3(x, stride)
+        wm = w.reshape(-1, cout)
+        out = kernels.matmul(pat, wm, bias=bias, act=act)
+        return out.reshape(n, oh, ow, cout)
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if bias is not None:
+        out = out + bias
+    if act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def conv1x1(x, w, bias=None, act="none", use_pallas=True):
+    """Pointwise conv. w: (Cin, Cout)."""
+    n, h, wd, c = x.shape
+    mm = kernels.matmul if use_pallas else ref.matmul_ref
+    out = mm(x.reshape(-1, c), w, bias=bias, act=act)
+    return out.reshape(n, h, wd, -1)
+
+
+def dense(x, w, bias=None, act="none", use_pallas=True):
+    mm = kernels.matmul if use_pallas else ref.matmul_ref
+    return mm(x, w, bias=bias, act=act)
+
+
+def dwconv3x3(x, w, bias=None, stride=1, act="none", use_pallas=True):
+    fn = kernels.dwconv if use_pallas else ref.dwconv_ref
+    return fn(x, w, bias=bias, stride=stride, act=act)
+
+
+# ---------------------------------------------------------------------------
+# Conv + BatchNorm unit (training) and its folded inference form
+# ---------------------------------------------------------------------------
+
+
+def init_conv_bn(rng, cin, cout, pointwise=False):
+    fan_in = cin if pointwise else 9 * cin
+    std = np.sqrt(2.0 / fan_in)
+    shape = (cin, cout) if pointwise else (3, 3, cin, cout)
+    return {
+        "w": jnp.asarray(rng.standard_normal(shape) * std, jnp.float32),
+        "gamma": jnp.ones((cout,), jnp.float32),
+        "beta": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def init_conv_bn_state(cout):
+    return {
+        "mu": jnp.zeros((cout,), jnp.float32),
+        "var": jnp.ones((cout,), jnp.float32),
+    }
+
+
+def conv_bn(p, s, x, stride=1, act="none", train=False, use_pallas=True,
+            pointwise=False):
+    """conv -> BN -> act. Returns (y, new_state)."""
+    if pointwise:
+        y = conv1x1(x, p["w"], use_pallas=use_pallas)
+    else:
+        y = conv3x3(x, p["w"], stride=stride, use_pallas=use_pallas)
+    if train:
+        mu = jnp.mean(y, axis=(0, 1, 2))
+        var = jnp.var(y, axis=(0, 1, 2))
+        new_s = {
+            "mu": BN_MOMENTUM * s["mu"] + (1 - BN_MOMENTUM) * mu,
+            "var": BN_MOMENTUM * s["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mu, var = s["mu"], s["var"]
+        new_s = s
+    y = (y - mu) * jax.lax.rsqrt(var + BN_EPS) * p["gamma"] + p["beta"]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y, new_s
+
+
+def fold_conv_bn(p, s):
+    """Fold BN stats into conv weights: returns {"w", "b"}."""
+    scale = p["gamma"] / jnp.sqrt(s["var"] + BN_EPS)
+    w = p["w"] * scale  # broadcast over trailing Cout axis
+    b = p["beta"] - s["mu"] * scale
+    return {"w": w, "b": b}
+
+
+# ---------------------------------------------------------------------------
+# COC: ResNet-style 8-class classifier
+# ---------------------------------------------------------------------------
+
+COC_CHANNELS = (16, 32, 64)
+COC_BLOCKS = (1, 1, 1)
+
+
+def init_coc(seed=0):
+    rng = np.random.RandomState(seed)
+    params = {"stem": init_conv_bn(rng, 3, COC_CHANNELS[0])}
+    state = {"stem": init_conv_bn_state(COC_CHANNELS[0])}
+    stages = []
+    sstate = []
+    cin = COC_CHANNELS[0]
+    for si, (c, nb) in enumerate(zip(COC_CHANNELS, COC_BLOCKS)):
+        stage = {}
+        st = {}
+        if si > 0:
+            stage["down"] = init_conv_bn(rng, cin, c)
+            st["down"] = init_conv_bn_state(c)
+        for bi in range(nb):
+            stage[f"b{bi}c1"] = init_conv_bn(rng, c, c)
+            stage[f"b{bi}c2"] = init_conv_bn(rng, c, c)
+            st[f"b{bi}c1"] = init_conv_bn_state(c)
+            st[f"b{bi}c2"] = init_conv_bn_state(c)
+        stages.append(stage)
+        sstate.append(st)
+        cin = c
+    params["stages"] = stages
+    state["stages"] = sstate
+    params["head"] = {
+        "w": jnp.asarray(
+            rng.standard_normal((COC_CHANNELS[-1], NUM_CLASSES))
+            * np.sqrt(1.0 / COC_CHANNELS[-1]),
+            jnp.float32,
+        ),
+        "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+    return params, state
+
+
+def coc_apply(params, state, x, train=False, use_pallas=False):
+    """Logits of the COC. x: (N,32,32,3). Returns (logits, new_state)."""
+    ns = {"stages": [dict() for _ in COC_CHANNELS]}
+    y, ns["stem"] = conv_bn(
+        params["stem"], state["stem"], x, act="relu", train=train,
+        use_pallas=use_pallas,
+    )
+    for si, (c, nb) in enumerate(zip(COC_CHANNELS, COC_BLOCKS)):
+        stage, st = params["stages"][si], state["stages"][si]
+        if si > 0:
+            y, ns["stages"][si]["down"] = conv_bn(
+                stage["down"], st["down"], y, stride=2, act="relu",
+                train=train, use_pallas=use_pallas,
+            )
+        for bi in range(nb):
+            h1, s1 = conv_bn(
+                stage[f"b{bi}c1"], st[f"b{bi}c1"], y, act="relu",
+                train=train, use_pallas=use_pallas,
+            )
+            h2, s2 = conv_bn(
+                stage[f"b{bi}c2"], st[f"b{bi}c2"], h1, act="none",
+                train=train, use_pallas=use_pallas,
+            )
+            y = jnp.maximum(y + h2, 0.0)
+            ns["stages"][si][f"b{bi}c1"] = s1
+            ns["stages"][si][f"b{bi}c2"] = s2
+    feat = jnp.mean(y, axis=(1, 2))
+    logits = dense(
+        feat, params["head"]["w"], params["head"]["b"], use_pallas=use_pallas
+    )
+    return logits, ns
+
+
+def fold_coc(params, state):
+    """Fold all BN units -> flat inference params."""
+    f = {"stem": fold_conv_bn(params["stem"], state["stem"])}
+    f["stages"] = []
+    for si, (c, nb) in enumerate(zip(COC_CHANNELS, COC_BLOCKS)):
+        stage, st = params["stages"][si], state["stages"][si]
+        fs = {}
+        if si > 0:
+            fs["down"] = fold_conv_bn(stage["down"], st["down"])
+        for bi in range(nb):
+            fs[f"b{bi}c1"] = fold_conv_bn(stage[f"b{bi}c1"], st[f"b{bi}c1"])
+            fs[f"b{bi}c2"] = fold_conv_bn(stage[f"b{bi}c2"], st[f"b{bi}c2"])
+        f["stages"].append(fs)
+    f["head"] = dict(params["head"])
+    return f
+
+
+def coc_infer(folded, x, use_pallas=True):
+    """Folded-BN inference graph — the function lowered to HLO."""
+    y = conv3x3(x, folded["stem"]["w"], folded["stem"]["b"], act="relu",
+                use_pallas=use_pallas)
+    for si, (c, nb) in enumerate(zip(COC_CHANNELS, COC_BLOCKS)):
+        fs = folded["stages"][si]
+        if si > 0:
+            y = conv3x3(y, fs["down"]["w"], fs["down"]["b"], stride=2,
+                        act="relu", use_pallas=use_pallas)
+        for bi in range(nb):
+            h = conv3x3(y, fs[f"b{bi}c1"]["w"], fs[f"b{bi}c1"]["b"],
+                        act="relu", use_pallas=use_pallas)
+            h = conv3x3(h, fs[f"b{bi}c2"]["w"], fs[f"b{bi}c2"]["b"],
+                        act="none", use_pallas=use_pallas)
+            y = jnp.maximum(y + h, 0.0)
+    feat = jnp.mean(y, axis=(1, 2))
+    logits = dense(feat, folded["head"]["w"], folded["head"]["b"],
+                   use_pallas=use_pallas)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# EOC: MobileNetV2-style tiny binary classifier
+# ---------------------------------------------------------------------------
+
+# (cin, cout, stride) of the depthwise-separable blocks after the stem
+EOC_BLOCKS = ((8, 16, 2), (16, 24, 2), (24, 32, 1))
+EOC_STEM = 8
+
+
+def init_eoc(seed=1):
+    rng = np.random.RandomState(seed)
+    params = {"stem": init_conv_bn(rng, 3, EOC_STEM)}
+    state = {"stem": init_conv_bn_state(EOC_STEM)}
+    blocks = []
+    bstate = []
+    for cin, cout, stride in EOC_BLOCKS:
+        blk = {
+            "dw_w": jnp.asarray(
+                rng.standard_normal((3, 3, cin)) * np.sqrt(2.0 / 9.0),
+                jnp.float32,
+            ),
+            "dw_b": jnp.zeros((cin,), jnp.float32),
+            "pw": init_conv_bn(rng, cin, cout, pointwise=True),
+        }
+        blocks.append(blk)
+        bstate.append({"pw": init_conv_bn_state(cout)})
+    params["blocks"] = blocks
+    state["blocks"] = bstate
+    cfin = EOC_BLOCKS[-1][1]
+    params["head"] = {
+        "w": jnp.asarray(
+            rng.standard_normal((cfin, 2)) * np.sqrt(1.0 / cfin), jnp.float32
+        ),
+        "b": jnp.zeros((2,), jnp.float32),
+    }
+    return params, state
+
+
+def eoc_apply(params, state, x, train=False, use_pallas=False):
+    """Logits (N, 2) of the EOC. Returns (logits, new_state)."""
+    ns = {"blocks": [dict() for _ in EOC_BLOCKS]}
+    y, ns["stem"] = conv_bn(
+        params["stem"], state["stem"], x, stride=2, act="relu", train=train,
+        use_pallas=use_pallas,
+    )
+    for bi, (cin, cout, stride) in enumerate(EOC_BLOCKS):
+        blk, st = params["blocks"][bi], state["blocks"][bi]
+        y = dwconv3x3(y, blk["dw_w"], blk["dw_b"], stride=stride, act="relu",
+                      use_pallas=use_pallas)
+        y, ns["blocks"][bi]["pw"] = conv_bn(
+            blk["pw"], st["pw"], y, act="relu", train=train,
+            use_pallas=use_pallas, pointwise=True,
+        )
+    feat = jnp.mean(y, axis=(1, 2))
+    logits = dense(
+        feat, params["head"]["w"], params["head"]["b"], use_pallas=use_pallas
+    )
+    return logits, ns
+
+
+def fold_eoc(params, state):
+    f = {"stem": fold_conv_bn(params["stem"], state["stem"])}
+    f["blocks"] = []
+    for bi, _ in enumerate(EOC_BLOCKS):
+        blk, st = params["blocks"][bi], state["blocks"][bi]
+        f["blocks"].append({
+            "dw_w": blk["dw_w"],
+            "dw_b": blk["dw_b"],
+            "pw": fold_conv_bn(blk["pw"], st["pw"]),
+        })
+    f["head"] = dict(params["head"])
+    return f
+
+
+def eoc_infer(folded, x, use_pallas=True):
+    """Folded-BN EOC inference — lowered to HLO. Returns (N,2) probs."""
+    y = conv3x3(x, folded["stem"]["w"], folded["stem"]["b"], stride=2,
+                act="relu", use_pallas=use_pallas)
+    for bi, (cin, cout, stride) in enumerate(EOC_BLOCKS):
+        fb = folded["blocks"][bi]
+        y = dwconv3x3(y, fb["dw_w"], fb["dw_b"], stride=stride, act="relu",
+                      use_pallas=use_pallas)
+        y = conv1x1(y, fb["pw"]["w"], fb["pw"]["b"], act="relu",
+                    use_pallas=use_pallas)
+    feat = jnp.mean(y, axis=(1, 2))
+    logits = dense(feat, folded["head"]["w"], folded["head"]["b"],
+                   use_pallas=use_pallas)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def count_params(tree):
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))

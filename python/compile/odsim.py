@@ -1,0 +1,219 @@
+"""Python mirror of the rust frame pipeline (synth camera + OD).
+
+The paper trains EOC on crops *extracted from historical video by the
+same frame-differencing OD that runs online* (§5.1.2). To close the
+train/serve domain gap we reproduce that: this module mirrors
+`rust/src/video/synth.rs` (CameraStream) and `rust/src/video/od.rs`
+(motion map + connected components + crop extraction) so `data.py` can
+build training sets whose distribution IS the serving distribution.
+
+Bit-exactness with rust is guaranteed for the underlying primitives
+(same SplitMix64 streams, same integer geometry via scenes.py); the
+frame/OD layer mirrors the rust logic operation-for-operation, and
+`python/tests/test_odsim.py` checks the invariants.
+"""
+
+import numpy as np
+
+from . import prng, scenes
+
+FRAME_H, FRAME_W = 96, 160
+NOISE_SIGMA = np.float32(0.06)
+FPS = 30.0
+
+# OdConfig defaults — keep in sync with rust/src/video/od.rs
+OD_THRESHOLD = 0.06
+OD_MIN_AREA = 16
+OD_MAX_CROPS = 2
+
+# class sampling percentages — mirrors rust CLASS_PCT / aot EOC_WEIGHTS
+CLASS_PCT = [14, 25, 8, 8, 8, 21, 8, 8]
+
+
+def sample_class(u):
+    v = int(u) % 100
+    for c, p in enumerate(CLASS_PCT):
+        if v < p:
+            return c
+        v -= p
+    return 7
+
+
+def _sc(v, s8):
+    return (v * s8) // 8
+
+
+class MovingObject:
+    __slots__ = ("cls", "seed", "x0", "y", "vx", "s8", "t0")
+
+    def __init__(self, cls, seed, x0, y, vx, s8, t0):
+        self.cls = cls
+        self.seed = seed
+        self.x0 = x0
+        self.y = y
+        self.vx = vx
+        self.s8 = s8
+        self.t0 = t0
+
+    def x_at(self, t):
+        return int(round(self.x0 + self.vx * (t - self.t0)))
+
+    def center_at(self, t):
+        return (self.y + _sc(16, self.s8), self.x_at(t) + _sc(16, self.s8))
+
+
+class CameraStream:
+    """Mirror of rust video::synth::CameraStream."""
+
+    def __init__(self, cam_seed, slots):
+        self.cam_seed = cam_seed
+        self.h, self.w = FRAME_H, FRAME_W
+        self.fps = FPS
+        self.respawns = [0] * slots
+        self.slots = [self._spawn(i, 0, 0.0) for i in range(slots)]
+
+    def _spawn(self, slot, respawn, t):
+        seed = int(prng.stream_u64(self.cam_seed, (slot << 32) | respawn, 1)[0])
+        cls = sample_class(prng.u32_at(seed, 0))
+        lanes = max(self.h // 36, 1)
+        lane = prng.range_at(seed, 1, 0, lanes)
+        vx = 25.0 + prng.f32_at(seed, 2) * 55.0
+        s8 = prng.range_at(seed, 3, 6, 11)
+        if respawn == 0:
+            x0 = float(prng.range_at(seed, 4, -20, self.w - 20))
+        else:
+            x0 = -36.0
+        return MovingObject(cls, seed, x0, lane * 36 + 2, vx, s8, t)
+
+    def advance_to(self, t):
+        for i, o in enumerate(self.slots):
+            while self.slots[i].x_at(t) > self.w + 8:
+                self.respawns[i] += 1
+                self.slots[i] = self._spawn(i, self.respawns[i], t)
+
+    def frame_at(self, t):
+        img = np.zeros((self.h, self.w, 3), dtype=np.float32)
+        fidx = int(round(t * self.fps))
+        noise_seed = int(
+            prng.stream_u64(self.cam_seed ^ 0xBACC0FF5, fidx, 1)[0]
+        )
+        paint_background_split(img, self.cam_seed, noise_seed, NOISE_SIGMA)
+        for o in self.slots:
+            scenes.render_object(img, o.cls, o.seed, o.x_at(t), o.y, o.s8)
+        np.clip(img, 0.0, 1.0, out=img)
+        return img
+
+
+def paint_background_split(img, base_seed, noise_seed, sigma):
+    """Mirror of rust paint_background_split (vectorized)."""
+    h, w = img.shape[:2]
+    g = np.float32(prng.f32_at(base_seed, 0) * 0.3 + 0.35)
+    grad = np.float32(prng.f32_at(base_seed, 1) * 0.2 - 0.1)
+    xx = np.arange(w, dtype=np.float32) / np.float32(w)
+    base = (g + grad * xx)[None, :, None]
+    n = prng.stream_f32(noise_seed, 16, h * w * 3).reshape(h, w, 3)
+    img[...] = base + (n - np.float32(0.5)) * (np.float32(2.0) * sigma)
+
+
+def gray(img):
+    return img.mean(axis=2, dtype=np.float32)
+
+
+def motion_map(f0, f1, f2):
+    """min of consecutive abs diffs, 3x3 zero-padded box mean."""
+    m = np.minimum(np.abs(f1 - f0), np.abs(f2 - f1))
+    h, w = m.shape
+    mp = np.pad(m, 1)
+    acc = np.zeros_like(m)
+    for dy in range(3):
+        for dx in range(3):
+            acc += mp[dy : dy + h, dx : dx + w]
+    return acc / np.float32(9.0)
+
+
+def find_regions(mmap, threshold=OD_THRESHOLD, min_area=OD_MIN_AREA,
+                 max_crops=OD_MAX_CROPS):
+    """4-connected components over mmap > threshold (BFS on sparse
+    foreground). Returns [(cy, cx, area, score)] strongest-first."""
+    h, w = mmap.shape
+    fg = mmap > threshold
+    seen = np.zeros_like(fg, dtype=bool)
+    regions = []
+    ys, xs = np.nonzero(fg)
+    for y0, x0 in zip(ys, xs):
+        if seen[y0, x0]:
+            continue
+        stack = [(int(y0), int(x0))]
+        seen[y0, x0] = True
+        area = 0
+        sy = sx = 0
+        score = 0.0
+        while stack:
+            y, x = stack.pop()
+            area += 1
+            sy += y
+            sx += x
+            score += float(mmap[y, x])
+            for ny, nx in ((y - 1, x), (y + 1, x), (y, x - 1), (y, x + 1)):
+                if 0 <= ny < h and 0 <= nx < w and fg[ny, nx] and not seen[ny, nx]:
+                    seen[ny, nx] = True
+                    stack.append((ny, nx))
+        if area >= min_area:
+            regions.append((sy // area, sx // area, area, score))
+    regions.sort(key=lambda r: -r[3])
+    return regions[:max_crops]
+
+
+def extract_crop(frame, cy, cx):
+    """32x32 RGB window centered at (cy, cx), clamped — mirror of rust."""
+    c = scenes.CROP
+    half = c // 2
+    h, w = frame.shape[:2]
+    y0 = int(np.clip(cy - half, 0, h - c))
+    x0 = int(np.clip(cx - half, 0, w - c))
+    return frame[y0 : y0 + c, x0 : x0 + c, :].copy(), (y0, x0)
+
+
+def label_crop(cam, t, y0, x0, max_center_dist=14):
+    """Geometric ground-truth label for a crop window: the class of the
+    visible object whose center is nearest the window center (within
+    max_center_dist), else background (0)."""
+    c = scenes.CROP
+    wy, wx = y0 + c // 2, x0 + c // 2
+    best = None
+    for o in cam.slots:
+        oy, ox = o.center_at(t)
+        d = max(abs(oy - wy), abs(ox - wx))
+        if d <= max_center_dist and (best is None or d < best[0]):
+            best = (d, o.cls)
+    return best[1] if best is not None else 0
+
+
+def make_od_dataset(n_crops, seed, cams=6, slots=2, t_start=1.0, dt=0.35):
+    """Crops extracted by the OD pipeline from synthetic camera streams,
+    with geometric labels — the §5.1.2 'historical video' training set.
+
+    Returns (X[n,32,32,3] f32, y[n] int32).
+    """
+    streams = [CameraStream(seed * 7919 + i, slots) for i in range(cams)]
+    X = np.empty((n_crops, scenes.CROP, scenes.CROP, 3), dtype=np.float32)
+    y = np.empty(n_crops, dtype=np.int32)
+    got = 0
+    step = 0
+    while got < n_crops:
+        cam = streams[step % cams]
+        t = t_start + (step // cams) * dt
+        step += 1
+        cam.advance_to(t)
+        f0 = gray(cam.frame_at(t - 0.2))
+        f1g = cam.frame_at(t - 0.1)
+        f2 = gray(cam.frame_at(t))
+        mmap = motion_map(f0, gray(f1g), f2)
+        for cy, cx, _area, _score in find_regions(mmap):
+            crop, (y0, x0) = extract_crop(f1g, cy, cx)
+            X[got] = crop
+            y[got] = label_crop(cam, t - 0.1, y0, x0)
+            got += 1
+            if got >= n_crops:
+                break
+    return X, y

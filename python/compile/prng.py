@@ -1,0 +1,70 @@
+"""Deterministic, stateless cross-language PRNG (SplitMix64-indexed).
+
+The same generator is implemented in rust (`rust/src/util/prng.rs`). Both
+sides must produce bit-identical streams so that the procedural scene
+renderer (python: training data; rust: live video frames) draws identical
+pixels — this is asserted by the golden cross-language test
+(`rust/tests/golden_scenes.rs` vs `python/tests/test_scenes.py`).
+
+Design: value i of stream `seed` is splitmix64(seed + (i+1)*GOLDEN).
+Stateless indexing vectorizes trivially in numpy (no sequential state),
+which keeps dataset generation fast while the rust side uses plain loops.
+"""
+
+import numpy as np
+
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+
+_err = np.geterr()
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """Finalizer of SplitMix64. Input/output uint64 arrays (wrapping)."""
+    old = np.seterr(over="ignore")
+    try:
+        z = x.astype(np.uint64)
+        z ^= z >> np.uint64(30)
+        z *= _M1
+        z ^= z >> np.uint64(27)
+        z *= _M2
+        z ^= z >> np.uint64(31)
+        return z
+    finally:
+        np.seterr(**old)
+
+
+def stream_u64(seed: int, start: int, n: int) -> np.ndarray:
+    """Values [start, start+n) of stream `seed` as uint64."""
+    old = np.seterr(over="ignore")
+    try:
+        idx = np.arange(start + 1, start + n + 1, dtype=np.uint64)
+        return splitmix64(np.uint64(seed) + idx * GOLDEN)
+    finally:
+        np.seterr(**old)
+
+
+def stream_u32(seed: int, start: int, n: int) -> np.ndarray:
+    """Top 32 bits — matches rust `u32_at`."""
+    return (stream_u64(seed, start, n) >> np.uint64(32)).astype(np.uint32)
+
+
+def stream_f32(seed: int, start: int, n: int) -> np.ndarray:
+    """Uniform [0,1) f32 from the top 24 bits — matches rust `f32_at`."""
+    u = stream_u32(seed, start, n)
+    return ((u >> np.uint32(8)).astype(np.float32)) * np.float32(1.0 / (1 << 24))
+
+
+def u32_at(seed: int, i: int) -> int:
+    return int(stream_u32(seed, i, 1)[0])
+
+
+def f32_at(seed: int, i: int) -> float:
+    return float(stream_f32(seed, i, 1)[0])
+
+
+def range_at(seed: int, i: int, lo: int, hi: int) -> int:
+    """Integer in [lo, hi) — matches rust `range_at` (modulo reduction)."""
+    assert hi > lo
+    return lo + int(u32_at(seed, i) % (hi - lo))

@@ -1,0 +1,191 @@
+"""Procedural object renderer — the shared python<->rust scene spec.
+
+The paper trains/evaluates on YouTube Live surveillance clips which we do
+not have; DESIGN.md §Substitutions replaces them with procedural scenes
+rendered identically by this module (training data, build time) and by
+`rust/src/video/synth.rs` (live frames, run time). Determinism contract:
+
+  * all geometry is integer arithmetic on pixel coordinates;
+  * all colors / noise are f32 with draws taken from the indexed
+    SplitMix64 streams in `prng.py` (mirrored bit-exactly in rust);
+  * primitives are applied in a fixed documented order.
+
+`rust/tests/golden_scenes.rs` renders the crops whose (class, seed) pairs
+are listed in `artifacts/golden/scenes.json` and asserts bit-identical
+pixels against the arrays written by `aot.py`.
+
+Classes (index = label): 0 background, 1 motorcycle (the paper's query
+target), 2 car, 3 person, 4 bus, 5 bicycle (motorcycle confuser),
+6 truck, 7 dog.
+"""
+
+import numpy as np
+
+from . import prng
+
+CLASSES = [
+    "background",
+    "motorcycle",
+    "car",
+    "person",
+    "bus",
+    "bicycle",
+    "truck",
+    "dog",
+]
+NUM_CLASSES = len(CLASSES)
+TARGET_CLASS = 1  # "motorcycle" — the query task of §5
+CROP = 32  # crop side in pixels, input size of both classifiers
+
+# ---------------------------------------------------------------------------
+# Primitives. All take integer geometry in *image* coordinates and paint a
+# solid f32 RGB color. Masks are computed with integer comparisons only.
+# ---------------------------------------------------------------------------
+
+
+def _grids(img):
+    h, w = img.shape[:2]
+    yy, xx = np.mgrid[0:h, 0:w]
+    return yy, xx
+
+
+def fill_rect(img, x0, y0, x1, y1, color):
+    """Paint pixels with x0 <= x < x1 and y0 <= y < y1."""
+    yy, xx = _grids(img)
+    m = (xx >= x0) & (xx < x1) & (yy >= y0) & (yy < y1)
+    img[m] = np.asarray(color, dtype=np.float32)
+
+
+def fill_disk(img, cx, cy, r, color):
+    """Paint pixels with (x-cx)^2 + (y-cy)^2 <= r^2."""
+    yy, xx = _grids(img)
+    m = (xx - cx) ** 2 + (yy - cy) ** 2 <= r * r
+    img[m] = np.asarray(color, dtype=np.float32)
+
+
+def fill_ring(img, cx, cy, r, w, color):
+    """Paint pixels with (r-w)^2 <= d^2 <= r^2 (annulus of width w)."""
+    yy, xx = _grids(img)
+    d2 = (xx - cx) ** 2 + (yy - cy) ** 2
+    inner = max(r - w, 0)
+    m = (d2 <= r * r) & (d2 >= inner * inner)
+    img[m] = np.asarray(color, dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Object geometry. Base shapes live in a 32x32 box; `render_object` places
+# the box at integer offset (ox, oy) with scale s8/8 (s8 in [6, 11)).
+# ---------------------------------------------------------------------------
+
+DARK = (0.08, 0.08, 0.10)  # wheels / outlines
+LIGHT = (0.85, 0.88, 0.92)  # windows / highlights
+
+
+def _sc(v, s8):
+    """Scale a base-box coordinate (integer, floor division by 8)."""
+    return (v * s8) // 8
+
+
+def render_object(img, cls, seed, ox, oy, s8):
+    """Draw one object of class `cls` into `img` (H,W,3 f32, in place).
+
+    Geometry jitter and colors come from stream `seed` at fixed indices
+    (0..15 reserved for the object). Index map: 3,4,5 = body RGB.
+    Primitive order is part of the cross-language spec — do not reorder.
+    """
+    if cls == 0:
+        return  # background: no object
+    f = lambda i: prng.f32_at(seed, i)
+    body = (
+        np.float32(f(3) * 0.8 + 0.1),
+        np.float32(f(4) * 0.8 + 0.1),
+        np.float32(f(5) * 0.8 + 0.1),
+    )
+
+    def X(v):
+        return ox + _sc(v, s8)
+
+    def Y(v):
+        return oy + _sc(v, s8)
+
+    def R(v):
+        return max(_sc(v, s8), 1)
+
+    if cls == 1:  # motorcycle: two small filled wheels, low body, handlebar
+        fill_rect(img, X(6), Y(14), X(26), Y(19), body)
+        fill_rect(img, X(10), Y(10), X(18), Y(14), body)
+        fill_rect(img, X(22), Y(8), X(24), Y(16), DARK)
+        fill_disk(img, X(8), Y(24), R(4), DARK)
+        fill_disk(img, X(24), Y(24), R(4), DARK)
+    elif cls == 2:  # car: wide body + cabin + two wheels
+        fill_rect(img, X(3), Y(12), X(29), Y(22), body)
+        fill_rect(img, X(9), Y(6), X(23), Y(12), body)
+        fill_rect(img, X(11), Y(7), X(21), Y(11), LIGHT)
+        fill_disk(img, X(9), Y(23), R(3), DARK)
+        fill_disk(img, X(23), Y(23), R(3), DARK)
+    elif cls == 3:  # person: head + torso + two legs
+        fill_disk(img, X(16), Y(7), R(3), body)
+        fill_rect(img, X(13), Y(10), X(19), Y(22), body)
+        fill_rect(img, X(13), Y(22), X(15), Y(29), DARK)
+        fill_rect(img, X(17), Y(22), X(19), Y(29), DARK)
+    elif cls == 4:  # bus: large box, window strip, two wheels
+        fill_rect(img, X(3), Y(6), X(29), Y(24), body)
+        fill_rect(img, X(5), Y(9), X(27), Y(13), LIGHT)
+        fill_disk(img, X(9), Y(25), R(3), DARK)
+        fill_disk(img, X(23), Y(25), R(3), DARK)
+    elif cls == 5:  # bicycle: two RINGS (vs motorcycle's disks) + thin frame
+        fill_ring(img, X(9), Y(22), R(5), max(_sc(2, s8), 1), DARK)
+        fill_ring(img, X(23), Y(22), R(5), max(_sc(2, s8), 1), DARK)
+        fill_rect(img, X(9), Y(13), X(23), Y(15), body)
+        fill_rect(img, X(15), Y(9), X(17), Y(14), body)
+    elif cls == 6:  # truck: trailer + cab + three wheels
+        fill_rect(img, X(3), Y(8), X(20), Y(22), body)
+        fill_rect(img, X(21), Y(12), X(29), Y(22), body)
+        fill_rect(img, X(23), Y(13), X(28), Y(17), LIGHT)
+        fill_disk(img, X(8), Y(23), R(3), DARK)
+        fill_disk(img, X(16), Y(23), R(3), DARK)
+        fill_disk(img, X(25), Y(23), R(3), DARK)
+    elif cls == 7:  # dog: body + head + four legs + tail
+        fill_rect(img, X(8), Y(14), X(24), Y(20), body)
+        fill_disk(img, X(25), Y(12), R(3), body)
+        fill_rect(img, X(9), Y(20), X(11), Y(26), body)
+        fill_rect(img, X(13), Y(20), X(15), Y(26), body)
+        fill_rect(img, X(17), Y(20), X(19), Y(26), body)
+        fill_rect(img, X(21), Y(20), X(23), Y(26), body)
+        fill_rect(img, X(6), Y(12), X(8), Y(16), body)
+    else:
+        raise ValueError(f"unknown class {cls}")
+
+
+def paint_background(img, seed, sigma=np.float32(0.06)):
+    """Textured background: base gray + horizontal gradient + pixel noise.
+
+    Noise index for pixel (y, x, c) is (y*W + x)*3 + c of stream `seed` —
+    the same row-major walk the rust loop performs.
+    """
+    h, w = img.shape[:2]
+    g = np.float32(prng.f32_at(seed, 0) * 0.3 + 0.35)
+    grad = np.float32(prng.f32_at(seed, 1) * 0.2 - 0.1)
+    yy, xx = _grids(img)
+    base = g + grad * (xx.astype(np.float32) / np.float32(w))
+    img[...] = base[..., None].astype(np.float32)
+    n = prng.stream_f32(seed, 16, h * w * 3).reshape(h, w, 3)
+    img += (n - np.float32(0.5)) * (np.float32(2.0) * sigma)
+
+
+def make_crop(cls, seed):
+    """Render one 32x32 training/eval crop. Shared-spec entry point.
+
+    Stream layout: geometry+colors from stream 2*seed+1, background and
+    noise from stream 2*seed. Returns (32,32,3) f32 clipped to [0,1].
+    """
+    j = 2 * seed + 1
+    b = 2 * seed
+    img = np.zeros((CROP, CROP, 3), dtype=np.float32)
+    paint_background(img, b)
+    ox = prng.range_at(j, 0, -3, 4)
+    oy = prng.range_at(j, 1, -3, 4)
+    s8 = prng.range_at(j, 2, 6, 11)
+    render_object(img, cls, j, ox, oy, s8)
+    np.clip(img, 0.0, 1.0, out=img)
+    return img

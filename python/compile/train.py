@@ -1,0 +1,132 @@
+"""Build-time training for EOC / COC (hand-rolled SGD + momentum).
+
+The offline environment has no optax; the optimizer is ~30 lines and
+lives here. Training runs ONCE inside `make artifacts` (aot.py) on the
+ref (pure-jnp) forward path — fast under jit — then the trained weights
+are folded and exported through the Pallas inference path.
+
+Mirrors the paper's §5.1.2 asymmetry: COC is trained longer and larger
+(the stand-in for ImageNet-pretrained ResNet152); EOC is trained
+"on the fly" — few epochs, tiny model — like the paper's
+query-triggered MobileNetV2.
+"""
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+
+def ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def l2_penalty(params):
+    return sum(
+        jnp.sum(l * l)
+        for l in jax.tree_util.tree_leaves(params)
+        if l.ndim > 1  # weights only, not biases/gains
+    )
+
+
+def sgd_momentum(params, grads, vel, lr, mom=0.9):
+    new_vel = jax.tree_util.tree_map(
+        lambda v, g: mom * v + g, vel, grads
+    )
+    new_params = jax.tree_util.tree_map(
+        lambda p, v: p - lr * v, params, new_vel
+    )
+    return new_params, new_vel
+
+
+def make_step(apply_fn, weight_decay):
+    """Returns a jitted (params, state, vel, x, y, lr) -> ... step."""
+
+    def loss_fn(params, state, x, y):
+        logits, new_state = apply_fn(params, state, x, train=True)
+        loss = ce_loss(logits, y) + weight_decay * l2_penalty(params)
+        return loss, new_state
+
+    @jax.jit
+    def step(params, state, vel, x, y, lr):
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params, state, x, y)
+        params, vel = sgd_momentum(params, grads, vel, lr)
+        return params, new_state, vel, loss
+
+    return step
+
+
+def cosine_lr(base, epoch, total):
+    return base * 0.5 * (1.0 + np.cos(np.pi * epoch / total))
+
+
+def train_model(
+    apply_fn,
+    params,
+    state,
+    X,
+    y,
+    epochs,
+    batch=128,
+    base_lr=0.05,
+    weight_decay=1e-4,
+    seed=0,
+    log=print,
+    tag="model",
+):
+    """Generic training loop. Returns (params, state, history)."""
+    step = make_step(apply_fn, weight_decay)
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+    n = len(X)
+    history = []
+    for ep in range(epochs):
+        t0 = time.time()
+        Xa, ya = data.augment(X, y, seed * 997 + ep)
+        order = np.random.default_rng(seed * 131 + ep).permutation(n)
+        lr = jnp.float32(cosine_lr(base_lr, ep, epochs))
+        losses = []
+        for b0 in range(0, n - batch + 1, batch):
+            idx = order[b0 : b0 + batch]
+            params, state, vel, loss = step(
+                params, state, vel, Xa[idx], ya[idx], lr
+            )
+            losses.append(float(loss))
+        ep_loss = float(np.mean(losses))
+        history.append(ep_loss)
+        log(
+            f"[{tag}] epoch {ep + 1}/{epochs} loss={ep_loss:.4f} "
+            f"lr={float(lr):.4f} ({time.time() - t0:.1f}s)"
+        )
+    return params, state, history
+
+
+def evaluate(apply_fn, params, state, X, y, batch=256):
+    """Top-1 accuracy on (X, y) in eval mode (ref path)."""
+    correct = 0
+    for b0 in range(0, len(X), batch):
+        logits, _ = apply_fn(
+            params, state, X[b0 : b0 + batch], train=False
+        )
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[b0 : b0 + batch]))
+    return correct / len(X)
+
+
+def eval_binary(apply_fn, params, state, X, y, batch=256, thresh=0.5):
+    """Binary error rate + confidence stats for EOC-style heads."""
+    confs = []
+    for b0 in range(0, len(X), batch):
+        logits, _ = apply_fn(
+            params, state, X[b0 : b0 + batch], train=False
+        )
+        confs.append(np.asarray(jax.nn.softmax(logits, -1))[:, 1])
+    conf = np.concatenate(confs)
+    pred = (conf >= thresh).astype(np.int32)
+    err = float(np.mean(pred != y))
+    return err, conf

@@ -1,0 +1,129 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/strides; assert_allclose against ref.py is THE
+core correctness signal for the compute layer (the same kernels are
+lowered into the deployed HLO artifacts).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.matmul import pick_blocks, vmem_bytes
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    act=st.sampled_from(["none", "relu"]),
+    with_bias=st.booleans(),
+)
+def test_matmul_matches_ref(m, k, n, act, with_bias):
+    x = rand((m, k), m * 1000 + k)
+    y = rand((k, n), n * 1000 + k)
+    b = rand((n,), n) if with_bias else None
+    got = kernels.matmul(x, y, bias=None if b is None else jnp.asarray(b), act=act)
+    want = ref.matmul_ref(x, y, bias=b, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+def test_matmul_large_blocks_cross_tile_boundaries():
+    # exercise multiple grid steps in every dimension
+    x = rand((300, 260), 1)
+    y = rand((260, 140), 2)
+    got = kernels.matmul(x, y, bm=128, bn=128, bk=128)
+    np.testing.assert_allclose(np.asarray(got), x @ y, atol=5e-4, rtol=5e-4)
+
+
+def test_matmul_relu_clamps_negatives():
+    x = -np.ones((4, 4), np.float32)
+    y = np.ones((4, 4), np.float32)
+    got = np.asarray(kernels.matmul(x, y, act="relu"))
+    assert (got == 0).all()
+
+
+def test_pick_blocks_shrinks_for_small_operands():
+    bm, bn, bk = pick_blocks(4, 9, 130)
+    assert bm == 8 and bn == 16 and bk == 128
+    assert pick_blocks(1000, 1000, 1000) == (128, 128, 128)
+
+
+def test_vmem_estimate_is_positive_and_scales():
+    assert vmem_bytes(128, 128, 128) > vmem_bytes(32, 32, 32)
+
+
+# ---------------------------------------------------------------------------
+# dwconv
+# ---------------------------------------------------------------------------
+
+
+@given(
+    h=st.integers(4, 24),
+    w=st.integers(4, 24),
+    c=st.integers(1, 12),
+    n=st.integers(1, 3),
+    stride=st.sampled_from([1, 2]),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_dwconv_matches_ref(h, w, c, n, stride, act):
+    x = rand((n, h, w, c), h * 100 + w)
+    k = rand((3, 3, c), c)
+    b = rand((c,), c + 1)
+    got = kernels.dwconv(x, k, bias=jnp.asarray(b), stride=stride, act=act)
+    want = ref.dwconv_ref(x, k, bias=b, stride=stride, act=act)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_dwconv_identity_kernel_preserves_input():
+    x = rand((1, 8, 8, 4), 3)
+    k = np.zeros((3, 3, 4), np.float32)
+    k[1, 1, :] = 1.0
+    got = np.asarray(kernels.dwconv(x, k))
+    np.testing.assert_allclose(got, x, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# framediff
+# ---------------------------------------------------------------------------
+
+
+@given(h=st.integers(4, 40), w=st.integers(4, 40))
+def test_framediff_matches_ref(h, w):
+    f = [rand((h, w), i) for i in range(3)]
+    got = kernels.framediff(*f)
+    want = ref.framediff_ref(*f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_framediff_static_scene_is_zero():
+    f = rand((16, 16), 0)
+    got = np.asarray(kernels.framediff(f, f, f))
+    assert (got == 0).all()
+
+
+def test_framediff_single_frame_flash_is_suppressed():
+    # motion must appear in BOTH consecutive diffs; a one-frame flash
+    # (f1 differs, f0 == f2) passes both diffs, but a flash only in f2
+    # is suppressed by the min
+    f0 = np.zeros((8, 8), np.float32)
+    f2 = f0.copy()
+    f2[4, 4] = 1.0
+    got = np.asarray(kernels.framediff(f0, f0, f2))
+    assert got.max() == 0.0

@@ -1,0 +1,109 @@
+"""L2 model tests: shapes, Pallas/ref parity, BN folding, gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+
+BATCH = 4
+
+
+@pytest.fixture(scope="module")
+def crops():
+    X, y = data.make_crop_dataset(BATCH, seed=5)
+    return X, y
+
+
+def test_coc_shapes(crops):
+    X, _ = crops
+    p, s = model.init_coc()
+    logits, ns = model.coc_apply(p, s, X, train=False)
+    assert logits.shape == (BATCH, 8)
+    # state structure preserved
+    assert set(ns.keys()) == {"stem", "stages"}
+
+
+def test_eoc_shapes(crops):
+    X, _ = crops
+    p, s = model.init_eoc()
+    logits, _ = model.eoc_apply(p, s, X, train=False)
+    assert logits.shape == (BATCH, 2)
+
+
+def test_pallas_ref_parity(crops):
+    """The exported (Pallas) inference graph must equal the training
+    (ref/native-conv) graph numerically — the L1<->L2 contract."""
+    X, _ = crops
+    cp, cs = model.init_coc()
+    fol = model.fold_coc(cp, cs)
+    a = np.asarray(model.coc_infer(fol, X, use_pallas=False))
+    b = np.asarray(model.coc_infer(fol, X, use_pallas=True))
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+    ep, es = model.init_eoc()
+    fe = model.fold_eoc(ep, es)
+    a = np.asarray(model.eoc_infer(fe, X, use_pallas=False))
+    b = np.asarray(model.eoc_infer(fe, X, use_pallas=True))
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+def test_bn_folding_matches_eval_mode(crops):
+    """Folded conv+bias inference == unfolded eval-mode BN forward."""
+    X, _ = crops
+    p, s = model.init_coc(seed=3)
+    # make BN stats non-trivial
+    s = jax.tree_util.tree_map(
+        lambda a: a + 0.1 * jnp.arange(a.size, dtype=a.dtype).reshape(a.shape) / a.size,
+        s,
+    )
+    logits, _ = model.coc_apply(p, s, X, train=False)
+    probs_unfolded = jax.nn.softmax(logits, axis=-1)
+    fol = model.fold_coc(p, s)
+    probs_folded = model.coc_infer(fol, X, use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(probs_unfolded), np.asarray(probs_folded), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_probabilities_normalized(crops):
+    X, _ = crops
+    p, s = model.init_eoc()
+    fe = model.fold_eoc(p, s)
+    probs = np.asarray(model.eoc_infer(fe, X))
+    np.testing.assert_allclose(probs.sum(axis=1), 1.0, atol=1e-5)
+    assert (probs >= 0).all()
+
+
+def test_gradients_flow_everywhere(crops):
+    """Every parameter leaf gets a nonzero gradient signal."""
+    X, y = crops
+    p, s = model.init_coc()
+
+    def loss_fn(p):
+        logits, _ = model.coc_apply(p, s, X, train=True)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), 1))
+
+    grads = jax.grad(loss_fn)(p)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert len(leaves) > 5
+    for g in leaves:
+        assert bool(jnp.isfinite(g).all())
+    nonzero = sum(int(jnp.any(g != 0)) for g in leaves)
+    assert nonzero >= len(leaves) - 1, f"{nonzero}/{len(leaves)} leaves with signal"
+
+
+def test_stride_conv_downsamples(crops):
+    X, _ = crops
+    w = np.random.default_rng(0).standard_normal((3, 3, 3, 5)).astype(np.float32)
+    out = model.conv3x3(X, jnp.asarray(w), stride=2, use_pallas=False)
+    assert out.shape == (BATCH, 16, 16, 5)
+
+
+def test_param_counts():
+    cp, _ = model.init_coc()
+    ep, _ = model.init_eoc()
+    # the paper's asymmetry: COC is orders of magnitude bigger than EOC
+    assert model.count_params(cp) > 30 * model.count_params(ep)

@@ -1,0 +1,77 @@
+"""OD-pipeline mirror tests: the python frame/OD pipeline that builds
+the training sets must behave like the rust serving pipeline."""
+
+import numpy as np
+import pytest
+
+from compile import odsim, scenes
+from compile.kernels import ref
+
+
+def test_camera_stream_deterministic():
+    a = odsim.CameraStream(100, 2)
+    b = odsim.CameraStream(100, 2)
+    for t in np.arange(0.0, 5.0, 0.5):
+        a.advance_to(t)
+        b.advance_to(t)
+    np.testing.assert_array_equal(a.frame_at(5.0), b.frame_at(5.0))
+
+
+def test_motion_map_matches_framediff_ref():
+    cam = odsim.CameraStream(7, 2)
+    cam.advance_to(1.2)
+    f0 = odsim.gray(cam.frame_at(1.0))
+    f1 = odsim.gray(cam.frame_at(1.1))
+    f2 = odsim.gray(cam.frame_at(1.2))
+    got = odsim.motion_map(f0, f1, f2)
+    want = np.asarray(ref.framediff_ref(f0, f1, f2))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_moving_objects_are_detected():
+    cam = odsim.CameraStream(9, 2)
+    hits = 0
+    for i in range(10):
+        t = 1.0 + i * 0.5
+        cam.advance_to(t)
+        f0 = odsim.gray(cam.frame_at(t - 0.2))
+        f1 = odsim.gray(cam.frame_at(t - 0.1))
+        f2 = odsim.gray(cam.frame_at(t))
+        hits += len(odsim.find_regions(odsim.motion_map(f0, f1, f2)))
+    assert hits >= 5
+
+
+def test_static_scene_no_regions():
+    cam = odsim.CameraStream(55, 0)  # no objects: only sensor noise
+    f0 = odsim.gray(cam.frame_at(0.0))
+    f1 = odsim.gray(cam.frame_at(1 / 30))
+    f2 = odsim.gray(cam.frame_at(2 / 30))
+    assert odsim.find_regions(odsim.motion_map(f0, f1, f2)) == []
+
+
+def test_extract_crop_clamps():
+    cam = odsim.CameraStream(3, 1)
+    f = cam.frame_at(0.0)
+    crop, (y0, x0) = odsim.extract_crop(f, 0, 0)
+    assert crop.shape == (32, 32, 3)
+    assert (y0, x0) == (0, 0)
+    crop, (y0, x0) = odsim.extract_crop(f, 95, 159)
+    assert crop.shape == (32, 32, 3)
+
+
+def test_make_od_dataset_labels_sane():
+    X, y = odsim.make_od_dataset(150, seed=5)
+    assert X.shape == (150, 32, 32, 3)
+    assert X.dtype == np.float32
+    assert ((y >= 0) & (y < scenes.NUM_CLASSES)).all()
+    # motion crops should mostly contain objects, with the target class
+    # well represented (it has the largest spawn weight)
+    assert (y == scenes.TARGET_CLASS).mean() > 0.1
+    assert (y != 0).mean() > 0.5
+
+
+def test_od_dataset_deterministic():
+    X1, y1 = odsim.make_od_dataset(40, seed=9)
+    X2, y2 = odsim.make_od_dataset(40, seed=9)
+    np.testing.assert_array_equal(X1, X2)
+    np.testing.assert_array_equal(y1, y2)

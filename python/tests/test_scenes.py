@@ -1,0 +1,67 @@
+"""Scene renderer determinism + coverage (python side of the shared
+spec; the rust mirror is asserted bit-identical by golden tests)."""
+
+import numpy as np
+import pytest
+
+from compile import prng, scenes
+
+
+def test_prng_streams_are_stable_and_stateless():
+    a = prng.stream_u32(42, 0, 8)
+    b = np.array([prng.u32_at(42, i) for i in range(8)], dtype=np.uint32)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_prng_f32_in_unit_interval():
+    f = prng.stream_f32(7, 0, 10_000)
+    assert (f >= 0).all() and (f < 1).all()
+    # roughly uniform
+    assert 0.45 < f.mean() < 0.55
+
+
+def test_range_at_bounds():
+    for i in range(500):
+        v = prng.range_at(9, i, -3, 4)
+        assert -3 <= v < 4
+
+
+def test_make_crop_deterministic():
+    a = scenes.make_crop(1, 123)
+    b = scenes.make_crop(1, 123)
+    np.testing.assert_array_equal(a, b)
+    c = scenes.make_crop(1, 124)
+    assert not np.array_equal(a, c)
+
+
+@pytest.mark.parametrize("cls", range(scenes.NUM_CLASSES))
+def test_all_classes_render_in_range(cls):
+    img = scenes.make_crop(cls, 5)
+    assert img.shape == (32, 32, 3)
+    assert img.dtype == np.float32
+    assert img.min() >= 0.0 and img.max() <= 1.0
+
+
+def test_objects_differ_from_background():
+    bg = scenes.make_crop(0, 9)
+    for cls in range(1, scenes.NUM_CLASSES):
+        obj = scenes.make_crop(cls, 9)
+        assert (bg != obj).sum() > 50, f"class {cls} barely visible"
+
+
+def test_primitives_match_mask_semantics():
+    img = np.zeros((8, 8, 3), np.float32)
+    scenes.fill_rect(img, 2, 2, 5, 4, (1.0, 0.0, 0.0))
+    assert img[2, 2, 0] == 1.0 and img[3, 4, 0] == 1.0
+    assert img[4, 4, 0] == 0.0  # y1 exclusive
+    img2 = np.zeros((9, 9, 3), np.float32)
+    scenes.fill_disk(img2, 4, 4, 2, (0.0, 1.0, 0.0))
+    assert img2[4, 4, 1] == 1.0 and img2[4, 6, 1] == 1.0
+    assert img2[6, 6, 1] == 0.0  # corner outside r
+
+
+def test_ring_has_hole():
+    img = np.zeros((16, 16, 3), np.float32)
+    scenes.fill_ring(img, 8, 8, 5, 2, (1.0, 1.0, 1.0))
+    assert img[8, 8].sum() == 0.0  # center empty
+    assert img[8, 3].sum() > 0  # rim painted

@@ -1,0 +1,70 @@
+"""Build-time training sanity: loss decreases, eval helpers work."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data, model, train
+
+
+def small_set(n=96, seed=1):
+    return data.make_crop_dataset(n, seed=seed)
+
+
+def test_training_reduces_loss():
+    X, y = small_set(128)
+    p, s = model.init_coc(seed=0)
+    p, s, hist = train.train_model(
+        model.coc_apply, p, s, X, y, epochs=3, batch=32, base_lr=0.05,
+        log=lambda m: None,
+    )
+    assert hist[-1] < hist[0] * 0.98, f"no learning: {hist}"
+
+
+def test_eval_binary_returns_confidences():
+    X, y8 = small_set(64, seed=2)
+    yb = data.binary_labels(y8)
+    p, s = model.init_eoc(seed=1)
+    err, conf = train.eval_binary(model.eoc_apply, p, s, X, yb)
+    assert 0.0 <= err <= 1.0
+    assert conf.shape == (64,)
+    assert (conf >= 0).all() and (conf <= 1).all()
+
+
+def test_sgd_momentum_moves_params():
+    p = {"w": jnp.ones((3,))}
+    g = {"w": jnp.ones((3,))}
+    v = {"w": jnp.zeros((3,))}
+    p2, v2 = train.sgd_momentum(p, g, v, lr=0.1)
+    np.testing.assert_allclose(np.asarray(p2["w"]), 0.9)
+    np.testing.assert_allclose(np.asarray(v2["w"]), 1.0)
+    # momentum accumulates
+    p3, v3 = train.sgd_momentum(p2, g, v2, lr=0.1)
+    np.testing.assert_allclose(np.asarray(v3["w"]), 1.9)
+    assert float(p3["w"][0]) < float(p2["w"][0])
+
+
+def test_ce_loss_perfect_prediction_is_small():
+    logits = jnp.asarray([[10.0, -10.0], [-10.0, 10.0]])
+    y = jnp.asarray([0, 1], dtype=jnp.int32)
+    assert float(train.ce_loss(logits, y)) < 1e-4
+
+
+def test_cosine_lr_decays_to_zero():
+    assert train.cosine_lr(0.1, 0, 10) == 0.1
+    assert train.cosine_lr(0.1, 10, 10) < 1e-9
+    assert train.cosine_lr(0.1, 5, 10) < 0.1
+
+
+def test_l2_penalty_skips_biases():
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,)) * 100}
+    # only the 2x2 weight contributes: 4.0
+    assert float(train.l2_penalty(params)) == 4.0
+
+
+def test_augment_preserves_labels_and_shape():
+    X, y = small_set(16, seed=3)
+    Xa, ya = data.augment(X, y, seed=0)
+    assert Xa.shape == X.shape
+    np.testing.assert_array_equal(y, ya)
+    assert not np.array_equal(Xa, X)  # something flipped/shifted

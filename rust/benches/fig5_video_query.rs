@@ -1,0 +1,101 @@
+//! Figure 5 reproduction — the paper's headline evaluation.
+//!
+//! Sweeps paradigm {CI, EI, ACE, ACE+} x system load (OD sampling
+//! interval 0.5 -> 0.1 s) x WAN one-way delay {0, 50 ms} on the
+//! simulated §5.1.1 testbed with REAL XLA inference for every crop,
+//! and prints the three metric tables (F1 / BWC / EIL).
+//!
+//! Run: `cargo bench --bench fig5_video_query`
+//! Env:
+//!   ACE_FIG5_FAST=1    — 3 load points, 15 s virtual duration
+//!   ACE_FIG5_SECONDS=N — virtual duration override (default 30)
+//!
+//! Results land in stdout + artifacts/results_fig5.{md,csv}.
+
+use ace::app::videoquery::{run_cell, CellConfig, Compute, InferCache, Paradigm, ServiceTimes};
+use ace::metrics;
+use ace::runtime::{artifacts_dir, Engine, ModelBank};
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("ACE_FIG5_FAST").is_ok();
+    let duration: f64 = std::env::var("ACE_FIG5_SECONDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { 15.0 } else { 30.0 });
+    let intervals: Vec<f64> = if fast {
+        vec![0.5, 0.2, 0.1]
+    } else {
+        vec![0.5, 0.33, 0.2, 0.14, 0.1]
+    };
+    let delays = [0.0f64, 50.0];
+    let paradigms = [Paradigm::Ci, Paradigm::Ei, Paradigm::AceBp, Paradigm::AceAp];
+
+    eprintln!("[fig5] loading artifacts + calibrating PJRT executables...");
+    let t0 = Instant::now();
+    let engine = Engine::cpu()?;
+    let dir = artifacts_dir()?;
+    let mut bank = ModelBank::load(&engine, &dir)?;
+    bank.calibrate(3)?;
+    eprintln!(
+        "[fig5] calibrated in {:.1}s  (eoc b1 {:.2} ms, coc b1 {:.2} ms measured)",
+        t0.elapsed().as_secs_f64(),
+        bank.eoc.service_time(1) * 1e3,
+        bank.coc.service_time(1) * 1e3,
+    );
+    let svc = ServiceTimes::calibrated_to_paper(&bank);
+    eprintln!(
+        "[fig5] DES service times scaled to paper §5.2: eoc b1 {:.1} ms, coc b1 {:.1} ms",
+        svc.eoc[&1] * 1e3,
+        svc.coc[&1] * 1e3
+    );
+
+    let bank = Rc::new(bank);
+    let cache = Rc::new(RefCell::new(InferCache::new()));
+    let mut cells = Vec::new();
+    for &delay in &delays {
+        for &interval in &intervals {
+            for &paradigm in &paradigms {
+                let cfg = CellConfig {
+                    paradigm,
+                    interval_s: interval,
+                    wan_delay_ms: delay,
+                    duration_s: duration,
+                    seed: 1,
+                    ..Default::default()
+                };
+                let t = Instant::now();
+                let compute = Compute::Real { bank: bank.clone(), cache: cache.clone() };
+                let mut m = run_cell(cfg, svc.clone(), compute)?;
+                let eil_ms = m.eil_ms();
+                eprintln!(
+                    "[fig5] {:>4} interval={:.2}s delay={:>2}ms: crops={} F1={:.3} BWC={:.2}MB EIL={:.1}ms  ({:.1}s wall)",
+                    paradigm.name(),
+                    interval,
+                    delay,
+                    m.crops,
+                    m.f1.f1(),
+                    m.bwc_mb(),
+                    eil_ms,
+                    t.elapsed().as_secs_f64()
+                );
+                cells.push(m);
+            }
+        }
+    }
+
+    let tables = metrics::figure5_tables(&mut cells);
+    let csv = metrics::figure5_csv(&mut cells);
+    println!("\n# Figure 5 reproduction (virtual duration {duration} s per cell)\n{tables}");
+    std::fs::write(dir.join("results_fig5.md"), format!("# Figure 5\n{tables}"))?;
+    std::fs::write(dir.join("results_fig5.csv"), &csv)?;
+    eprintln!(
+        "[fig5] wrote {} cells -> artifacts/results_fig5.md / .csv  (cache: {} eoc execs, {} coc execs)",
+        cells.len(),
+        cache.borrow().eoc_execs,
+        cache.borrow().coc_execs
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! §5.2 inline numbers: COC vs EOC service-time asymmetry.
+//!
+//! The paper reports "the inference time of COC is about 32.3 ms on CC,
+//! and that of EOC on edge node is above 44 ms". This bench measures
+//! the real PJRT service times of both compiled classifiers across the
+//! exported batch sizes, and prints both the raw numbers and the
+//! paper-scaled DES operating point (ServiceTimes::calibrated_to_paper).
+//!
+//! Run: `cargo bench --bench inference_latency`
+
+use ace::app::videoquery::ServiceTimes;
+use ace::runtime::{artifacts_dir, Engine, ModelBank};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let dir = artifacts_dir()?;
+    let mut bank = ModelBank::load(&engine, &dir)?;
+    eprintln!("[inference] calibrating (10 reps per batch size)...");
+    bank.calibrate(10)?;
+
+    println!("# Classifier service times (measured on PJRT CPU)\n");
+    println!("| model | params | batch | total ms | ms/crop | crops/s |");
+    println!("|---|---|---|---|---|---|");
+    for (name, clf) in [("eoc", &bank.eoc), ("coc", &bank.coc)] {
+        let params = bank.manifest.models[name].params;
+        for &b in &clf.batch_sizes {
+            let t = clf.service_time(b);
+            println!(
+                "| {name} | {params} | {b} | {:.3} | {:.3} | {:.0} |",
+                t * 1e3,
+                t * 1e3 / b as f64,
+                b as f64 / t
+            );
+        }
+    }
+
+    let svc = ServiceTimes::calibrated_to_paper(&bank);
+    println!("\n# DES operating point (scaled to paper §5.2: coc b1 = 32.3 ms, eoc b1 = 44 ms)\n");
+    println!("| model | batch | total ms | ms/crop |");
+    println!("|---|---|---|---|");
+    let mut keys: Vec<_> = svc.eoc.keys().copied().collect();
+    keys.sort_unstable();
+    for (name, table) in [("eoc@miniPC", &svc.eoc), ("coc@CC", &svc.coc)] {
+        for &b in &keys {
+            let t = table[&b];
+            println!("| {name} | {b} | {:.1} | {:.2} |", t * 1e3, t * 1e3 / b as f64);
+        }
+    }
+
+    // the paper's qualitative claim: per-crop EOC on the edge is slower
+    // than per-crop COC on the cloud
+    let ratio = svc.eoc[&1] / svc.coc[&1];
+    println!(
+        "\nEOC-edge / COC-cloud per-crop ratio at b=1: {ratio:.2} (paper: 44/32.3 = 1.36)"
+    );
+    Ok(())
+}

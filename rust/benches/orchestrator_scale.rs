@@ -1,0 +1,99 @@
+//! Deployment automation at scale (Figure 4 mechanism bench).
+//!
+//! §6.1 names agile orchestration as ACE's key scaling challenge. This
+//! bench measures (a) orchestration latency (topology -> deployment
+//! plan) and (b) instruction generation+parse cost, as components and
+//! nodes grow — the regime where "prevents users from handling complex
+//! component-infrastructure mapping" must stay cheap.
+//!
+//! Run: `cargo bench --bench orchestrator_scale`
+
+use ace::infra::{InfraBuilder, NodeKind};
+use ace::platform::orchestrator;
+use ace::topology::Topology;
+use ace::yamlite;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+fn build_infra(ecs: usize, nodes_per_ec: usize) -> ace::infra::Infrastructure {
+    let mut b = InfraBuilder::register("scale");
+    for _ in 0..ecs {
+        let ec = b.claim_ec();
+        b.add_edge_node(&ec, "minipc", NodeKind::MiniPc, BTreeMap::new());
+        for r in 0..nodes_per_ec.saturating_sub(1) {
+            let mut labels = BTreeMap::new();
+            labels.insert("camera".to_string(), "true".to_string());
+            b.add_edge_node(&ec, &format!("rpi{r}"), NodeKind::RaspberryPi, labels);
+        }
+    }
+    for c in 0..4 {
+        b.add_cloud_node(&format!("srv{c}"), NodeKind::CloudServer, BTreeMap::new());
+    }
+    b.build()
+}
+
+fn build_topology(components: usize) -> Topology {
+    let mut doc = String::from("app: scale\nversion: 1\ncomponents:\n");
+    for i in 0..components {
+        let loc = if i % 3 == 0 { "cloud" } else { "edge" };
+        doc.push_str(&format!(
+            "  - name: c{i}\n    location: {loc}\n    resources:\n      cpu: 50\n      mem: 16\n",
+        ));
+    }
+    Topology::parse(&doc).unwrap()
+}
+
+fn main() {
+    println!("# Orchestration latency vs scale\n");
+    println!("| nodes | components | instances | orchestrate ms | instructions ms |");
+    println!("|---|---|---|---|---|");
+    for (ecs, npe, comps) in [
+        (3, 4, 10),
+        (10, 8, 50),
+        (30, 8, 100),
+        (50, 10, 200),
+        (100, 10, 500),
+    ] {
+        let infra = build_infra(ecs, npe);
+        let topo = build_topology(comps);
+        let nodes = infra.all_nodes().count();
+        let t0 = Instant::now();
+        let plan = orchestrator::place(&topo, &infra).expect("place");
+        let orch_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // instruction generation for every touched node (Figure 4 ②)
+        let t1 = Instant::now();
+        let mut rendered = 0usize;
+        for (_node, instances) in plan.by_node() {
+            let services: Vec<(String, String, String)> = instances
+                .iter()
+                .map(|i| (i.id.clone(), i.component.clone(), i.image.clone()))
+                .collect();
+            let doc = ace::infra::agent::compose_instruction("scale", &services);
+            let parsed = yamlite::parse(&doc).unwrap();
+            rendered += parsed.get("services").as_obj().map(|o| o.len()).unwrap_or(0);
+        }
+        let instr_ms = t1.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(rendered, plan.instances.len());
+        println!(
+            "| {nodes} | {comps} | {} | {orch_ms:.2} | {instr_ms:.2} |",
+            plan.instances.len()
+        );
+    }
+
+    // incremental update vs thorough redeploy at the largest scale
+    let infra = build_infra(50, 10);
+    let topo = build_topology(200);
+    let plan = orchestrator::place(&topo, &infra).unwrap();
+    let mut topo2 = topo.clone();
+    topo2.version = 2;
+    topo2.components[0].image = "changed:2".into();
+    let t0 = Instant::now();
+    let plan2 = orchestrator::place(&topo2, &infra).unwrap();
+    let diff = ace::deploy::diff_plans(&plan, &plan2);
+    let diff_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "\nincremental update (1 of 200 components changed): {} nodes touched of {}, {diff_ms:.2} ms",
+        diff.touched_nodes().len(),
+        plan2.nodes().len()
+    );
+}

@@ -1,0 +1,74 @@
+//! Resource-level message service microbenchmark (ablation).
+//!
+//! Measures broker publish->deliver throughput and latency across
+//! fanout (subscribers per topic) and payload-size sweeps — the
+//! envelope within which all ACE control traffic (deployment
+//! instructions, status reports, in-app control messages) operates.
+//!
+//! Run: `cargo bench --bench pubsub_throughput`
+
+use ace::pubsub::Broker;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn bench_case(fanout: usize, payload: usize, msgs: u64) -> (f64, f64) {
+    let broker = Broker::new("bench");
+    let done = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for _ in 0..fanout {
+        let sub = broker.subscribe("bench/t").unwrap();
+        let done = done.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut got = 0u64;
+            while got < msgs {
+                if sub.rx.recv().is_err() {
+                    break;
+                }
+                got += 1;
+            }
+            done.fetch_add(got, Ordering::Relaxed);
+        }));
+    }
+    let body = vec![0u8; payload];
+    let t0 = Instant::now();
+    for _ in 0..msgs {
+        broker.publish("bench/t", body.clone()).unwrap();
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let delivered = done.load(Ordering::Relaxed);
+    (delivered as f64 / dt, dt / msgs as f64 * 1e6)
+}
+
+fn main() {
+    println!("# Message service throughput (publish -> all subscribers)\n");
+    println!("| fanout | payload B | deliveries/s | us/publish |");
+    println!("|---|---|---|---|");
+    for fanout in [1usize, 4, 16] {
+        for payload in [64usize, 1024, 16 * 1024] {
+            let msgs = 20_000u64 / fanout as u64;
+            let (rate, us) = bench_case(fanout, payload, msgs);
+            println!("| {fanout} | {payload} | {rate:.0} | {us:.2} |");
+        }
+    }
+    // retained-message replay cost
+    let broker = Broker::new("retained");
+    for i in 0..1000 {
+        broker
+            .publish_retained(&format!("cfg/{i}"), vec![0u8; 128])
+            .unwrap();
+    }
+    let t0 = Instant::now();
+    let sub = broker.subscribe("cfg/#").unwrap();
+    let mut got = 0;
+    while sub.rx.try_recv().is_ok() {
+        got += 1;
+    }
+    println!(
+        "\nretained replay: {got} messages in {:.2} ms on subscribe",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+}

@@ -1,0 +1,6 @@
+//! Application layer — concrete ECCI applications built on the
+//! platform. `videoquery` is the paper's §5 evaluation application.
+
+pub mod videoquery;
+
+pub use videoquery::{run_cell, CellConfig, Compute, InferCache, Paradigm, ServiceTimes};

@@ -1,0 +1,797 @@
+//! The §5 intelligent video query application + Figure 5 experiment.
+//!
+//! Wires the paper's components over the simulated testbed:
+//!   DG  — synthetic camera streams (one per RPi, 3 per EC x 3 ECs);
+//!   OD  — frame differencing on three frames per sample (native rust);
+//!   EOC — edge binary classifier (real XLA inference, one per EC's
+//!         mini PC, service time = calibrated x edge factor);
+//!   COC — cloud multi-class classifier (real XLA inference on the CC);
+//!   IC  — in-app controller executing BP or AP (per-EC LIC + global);
+//!   RS  — result storage on the CC (metadata sink).
+//!
+//! The DES charges virtual time for LAN/WAN transfers (token-bucket
+//! links from `simnet`) and for classifier service (measured PJRT times
+//! scaled to the paper's §5.2 operating point: COC ~= 32.3 ms/crop on
+//! the CC, EOC ~= 44 ms/crop on the mini PC). Classifier OUTPUTS are
+//! real: every crop is pushed through the compiled HLO artifacts, so
+//! F1 is measured, not modeled. Ground truth follows footnote 1 (COC
+//! post-hoc labels over all extracted crops).
+
+use crate::des::Scheduler;
+use crate::inapp::{AdvancedPolicy, BasicPolicy, EdgeDecision, QueryPolicy, Route};
+use crate::metrics::{CellMetrics, F1};
+use crate::runtime::{Classifier, ModelBank};
+use crate::simnet::{sizes, EdgeCloudNet, NetConfig};
+use crate::util::stats::Percentiles;
+use crate::util::{millis, secs, SimTime};
+use crate::video::{CameraStream, ObjectDetector, OdConfig};
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+/// Implementation paradigm under comparison (§5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Paradigm {
+    /// Cloud Intelligence: every crop goes to COC.
+    Ci,
+    /// Edge Intelligence: EOC only; unconfident crops are dropped.
+    Ei,
+    /// ACE with the Basic Policy.
+    AceBp,
+    /// ACE with the customized Advanced Policy.
+    AceAp,
+}
+
+impl Paradigm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Paradigm::Ci => "CI",
+            Paradigm::Ei => "EI",
+            Paradigm::AceBp => "ACE",
+            Paradigm::AceAp => "ACE+",
+        }
+    }
+}
+
+/// Experiment cell configuration.
+#[derive(Debug, Clone)]
+pub struct CellConfig {
+    pub paradigm: Paradigm,
+    /// OD sampling interval in seconds — the system-load knob
+    /// (paper sweeps 0.5 -> 0.1).
+    pub interval_s: f64,
+    /// One-way WAN delay in ms (0 ideal, 50 practical).
+    pub wan_delay_ms: f64,
+    /// Virtual experiment duration (paper: 5-minute clips).
+    pub duration_s: f64,
+    pub num_ecs: usize,
+    pub cams_per_ec: usize,
+    pub seed: u64,
+    /// Classifier batch caps. The paper's COC serves crops individually
+    /// (32.3 ms each — and our interpret-mode COC artifact has
+    /// super-linear batch cost, see EXPERIMENTS.md §Perf L1), so COC
+    /// runs per-crop; EOC batches up to 2 (its measured per-crop cost
+    /// improves to ~36 ms there), leaving the EC borderline at peak
+    /// load — which is what activates AP's load balancing, as in §5.2.
+    pub eoc_max_batch: usize,
+    pub coc_max_batch: usize,
+    /// Optional §4.2.2 validation-testbed channel schedule; when set it
+    /// overrides `wan_delay_ms` and reshapes the WAN links per phase.
+    pub channel: Option<crate::testbed::ChannelProfile>,
+}
+
+impl Default for CellConfig {
+    fn default() -> Self {
+        CellConfig {
+            paradigm: Paradigm::AceBp,
+            interval_s: 0.5,
+            wan_delay_ms: 0.0,
+            duration_s: 30.0,
+            num_ecs: 3,
+            cams_per_ec: 3,
+            seed: 1,
+            eoc_max_batch: 2,
+            coc_max_batch: 1,
+            channel: None,
+        }
+    }
+}
+
+/// Calibrated service times scaled to the paper's operating point.
+#[derive(Debug, Clone)]
+pub struct ServiceTimes {
+    /// batch size -> seconds, EOC on a mini PC
+    pub eoc: HashMap<usize, f64>,
+    /// batch size -> seconds, COC on the CC workstation
+    pub coc: HashMap<usize, f64>,
+}
+
+/// §5.2: "the inference time of COC is about 32.3 ms on CC, and that of
+/// EOC on edge node is above 44 ms".
+pub const PAPER_COC_B1_SECS: f64 = 0.0323;
+pub const PAPER_EOC_B1_SECS: f64 = 0.0440;
+
+impl ServiceTimes {
+    /// Scale measured PJRT times so b=1 matches the paper's §5.2
+    /// numbers; the batching-efficiency CURVE stays measured (see
+    /// DESIGN.md §Substitutions).
+    pub fn calibrated_to_paper(bank: &ModelBank) -> Self {
+        let se = PAPER_EOC_B1_SECS / bank.eoc.service_time(1);
+        let sc = PAPER_COC_B1_SECS / bank.coc.service_time(1);
+        let eoc = bank
+            .eoc
+            .service_secs
+            .iter()
+            .map(|(b, t)| (*b, t * se))
+            .collect();
+        let coc = bank
+            .coc
+            .service_secs
+            .iter()
+            .map(|(b, t)| (*b, t * sc))
+            .collect();
+        ServiceTimes { eoc, coc }
+    }
+
+    /// Synthetic service-time table (unit tests without artifacts):
+    /// linear-ish batching gains.
+    pub fn synthetic() -> Self {
+        let mk = |b1: f64| -> HashMap<usize, f64> {
+            [1usize, 2, 4, 8, 16]
+                .iter()
+                .map(|&b| (b, b1 * (0.55 + 0.45 * b as f64)))
+                .collect()
+        };
+        ServiceTimes { eoc: mk(PAPER_EOC_B1_SECS), coc: mk(PAPER_COC_B1_SECS) }
+    }
+
+    fn pick(table: &HashMap<usize, f64>, n: usize, cap: usize) -> (usize, f64) {
+        let mut best = *table.keys().min().unwrap();
+        for &b in table.keys() {
+            if b <= n.min(cap) && b > best {
+                best = b;
+            }
+        }
+        (best, table[&best])
+    }
+}
+
+/// Classifier outputs for the DES: real XLA inference with a
+/// cross-paradigm cache (identical crops recur across cells; caching
+/// the OUTPUT changes nothing observable but cuts wall-clock ~4x).
+pub struct InferCache {
+    /// pixel-hash -> EOC target-confidence
+    eoc: HashMap<u64, f32>,
+    /// pixel-hash -> COC top-1 class
+    coc: HashMap<u64, u8>,
+    pub eoc_execs: u64,
+    pub coc_execs: u64,
+}
+
+fn pixel_hash(px: &[f32]) -> u64 {
+    // FNV-1a over the f32 bit patterns
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in px {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    h
+}
+
+impl InferCache {
+    pub fn new() -> Self {
+        InferCache { eoc: HashMap::new(), coc: HashMap::new(), eoc_execs: 0, coc_execs: 0 }
+    }
+
+    /// EOC confidences (P[target]) for a batch of crops.
+    pub fn eoc_conf(&mut self, clf: &Classifier, crops: &[&Vec<f32>]) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; crops.len()];
+        let mut missing = Vec::new();
+        let mut missing_idx = Vec::new();
+        for (i, c) in crops.iter().enumerate() {
+            match self.eoc.get(&pixel_hash(c)) {
+                Some(v) => out[i] = *v,
+                None => {
+                    missing.push((*c).clone());
+                    missing_idx.push(i);
+                }
+            }
+        }
+        if !missing.is_empty() {
+            self.eoc_execs += 1;
+            let probs = clf.classify(&missing)?;
+            for (j, i) in missing_idx.into_iter().enumerate() {
+                let conf = probs[j][1]; // P[class=1] = target present
+                self.eoc.insert(pixel_hash(&missing[j]), conf);
+                out[i] = conf;
+            }
+        }
+        Ok(out)
+    }
+
+    /// COC top-1 classes for a batch of crops.
+    pub fn coc_top1(&mut self, clf: &Classifier, crops: &[&Vec<f32>]) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; crops.len()];
+        let mut missing = Vec::new();
+        let mut missing_idx = Vec::new();
+        for (i, c) in crops.iter().enumerate() {
+            match self.coc.get(&pixel_hash(c)) {
+                Some(v) => out[i] = *v,
+                None => {
+                    missing.push((*c).clone());
+                    missing_idx.push(i);
+                }
+            }
+        }
+        if !missing.is_empty() {
+            self.coc_execs += 1;
+            let probs = clf.classify(&missing)?;
+            for (j, i) in missing_idx.into_iter().enumerate() {
+                let top = probs[j]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(k, _)| k as u8)
+                    .unwrap_or(0);
+                self.coc.insert(pixel_hash(&missing[j]), top);
+                out[i] = top;
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Default for InferCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-crop trace record.
+#[derive(Debug, Clone)]
+struct CropRecord {
+    ec: usize,
+    t_od: SimTime,
+    /// final predicted-positive (None until decided)
+    predicted: Option<bool>,
+    /// COC online label if it went to the cloud
+    coc_label: Option<u8>,
+    /// EIL (secs) once decided
+    eil: Option<f64>,
+    pixels: Rc<Vec<f32>>,
+}
+
+/// Compute substrate handed to the DES world. `None` models => a
+/// synthetic oracle (unit tests without artifacts).
+pub enum Compute {
+    Real { bank: Rc<ModelBank>, cache: Rc<std::cell::RefCell<InferCache>> },
+    /// (eoc_conf, coc_top1) oracles keyed by pixel hash
+    Synthetic { target_bias: f32 },
+}
+
+impl Compute {
+    fn eoc_conf(&self, crops: &[&Vec<f32>]) -> Result<Vec<f32>> {
+        match self {
+            Compute::Real { bank, cache } => cache.borrow_mut().eoc_conf(&bank.eoc, crops),
+            Compute::Synthetic { target_bias } => Ok(crops
+                .iter()
+                .map(|c| {
+                    let h = pixel_hash(c);
+                    let u = (h >> 16) as u32 as f32 / u32::MAX as f32;
+                    (u * 0.9 + target_bias).min(1.0)
+                })
+                .collect()),
+        }
+    }
+
+    fn coc_top1(&self, crops: &[&Vec<f32>]) -> Result<Vec<u8>> {
+        match self {
+            Compute::Real { bank, cache } => cache.borrow_mut().coc_top1(&bank.coc, crops),
+            Compute::Synthetic { .. } => Ok(crops
+                .iter()
+                .map(|c| (pixel_hash(c) % 8) as u8)
+                .collect()),
+        }
+    }
+
+    fn eoc_batches(&self) -> Vec<usize> {
+        match self {
+            Compute::Real { bank, .. } => bank.eoc.batch_sizes.clone(),
+            Compute::Synthetic { .. } => vec![1, 2, 4, 8, 16],
+        }
+    }
+
+    fn target_class(&self) -> u8 {
+        match self {
+            Compute::Real { bank, .. } => bank.manifest.target_class as u8,
+            Compute::Synthetic { .. } => 1,
+        }
+    }
+}
+
+/// The DES world for one experiment cell.
+pub struct World {
+    cfg: CellConfig,
+    net: EdgeCloudNet,
+    cams: Vec<CameraStream>,
+    od: ObjectDetector,
+    records: Vec<CropRecord>,
+    /// per-EC EOC queue of record ids + busy flag
+    eoc_q: Vec<VecDeque<usize>>,
+    eoc_busy: Vec<bool>,
+    coc_q: VecDeque<usize>,
+    coc_busy: bool,
+    policies: Vec<Box<dyn QueryPolicy>>,
+    svc: ServiceTimes,
+    compute: Compute,
+    sampling_done: bool,
+    pub errors: Vec<String>,
+}
+
+const EIL_FEEDBACK_BYTES: u64 = sizes::META_BYTES;
+
+impl World {
+    pub fn new(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Self {
+        let net = EdgeCloudNet::new(&NetConfig {
+            num_ecs: cfg.num_ecs,
+            wan_delay: millis(cfg.wan_delay_ms),
+            ..Default::default()
+        });
+        let mut cams = Vec::new();
+        for ec in 0..cfg.num_ecs {
+            for cam in 0..cfg.cams_per_ec {
+                // one moving object slot per camera keeps the per-EC
+                // crop rate at the highest load (~22/s) just under the
+                // EOC's 44 ms-anchored capacity (~28/s) — the paper's
+                // regime where EI/ACE EILs stay load-insensitive while
+                // CI's COC queue explodes
+                cams.push(CameraStream::new(
+                    cfg.seed * 10_007 + (ec * 97 + cam) as u64,
+                    1,
+                ));
+            }
+        }
+        let policies: Vec<Box<dyn QueryPolicy>> = (0..cfg.num_ecs)
+            .map(|_| -> Box<dyn QueryPolicy> {
+                match cfg.paradigm {
+                    Paradigm::AceAp => Box::new(AdvancedPolicy::new(
+                        PAPER_EOC_B1_SECS * 1.5,
+                        PAPER_COC_B1_SECS * 1.5,
+                    )),
+                    _ => Box::new(BasicPolicy::default()),
+                }
+            })
+            .collect();
+        World {
+            eoc_q: vec![VecDeque::new(); cfg.num_ecs],
+            eoc_busy: vec![false; cfg.num_ecs],
+            coc_q: VecDeque::new(),
+            coc_busy: false,
+            net,
+            cams,
+            od: ObjectDetector::new(OdConfig::default()),
+            records: Vec::new(),
+            policies,
+            svc,
+            compute,
+            sampling_done: false,
+            cfg,
+            errors: Vec::new(),
+        }
+    }
+
+    fn cam_ec(&self, cam_idx: usize) -> usize {
+        cam_idx / self.cfg.cams_per_ec
+    }
+
+    /// Apply one validation-testbed channel phase to all WAN links.
+    fn apply_phase(&mut self, phase: &crate::testbed::Phase) {
+        for ec in 0..self.cfg.num_ecs {
+            let up = &mut self.net.uplink[ec];
+            up.set_bw_bps((phase.uplink_mbps * 1e6) as u64);
+            up.delay = phase.delay_us();
+            up.jitter = phase.jitter_us();
+            let down = &mut self.net.downlink[ec];
+            down.set_bw_bps((phase.downlink_mbps * 1e6) as u64);
+            down.delay = phase.delay_us();
+            down.jitter = phase.jitter_us();
+        }
+    }
+
+    /// One OD sampling event on camera `cam_idx` at virtual time `now`.
+    fn sample(&mut self, sch: &mut Scheduler<World>, cam_idx: usize) {
+        let now = sch.now();
+        let t = crate::util::to_secs(now);
+        let ec = self.cam_ec(cam_idx);
+        // OD takes three frames 0.1 s apart ending at t
+        self.cams[cam_idx].advance_to(t);
+        let f0 = self.cams[cam_idx].frame_at(t - 0.2);
+        let f1 = self.cams[cam_idx].frame_at(t - 0.1);
+        let f2 = self.cams[cam_idx].frame_at(t);
+        let crops = self.od.detect(&f0, &f1, &f2);
+        for crop in crops {
+            let id = self.records.len();
+            self.records.push(CropRecord {
+                ec,
+                t_od: now,
+                predicted: None,
+                coc_label: None,
+                eil: None,
+                pixels: Rc::new(crop.pixels),
+            });
+            match self.cfg.paradigm {
+                Paradigm::Ci => self.upload_to_coc(sch, id),
+                Paradigm::Ei | Paradigm::AceBp => self.send_to_eoc(sch, id),
+                Paradigm::AceAp => match self.policies[ec].route_crop() {
+                    Route::Eoc => self.send_to_eoc(sch, id),
+                    Route::Coc => self.upload_to_coc(sch, id),
+                },
+            }
+        }
+    }
+
+    /// OD -> EOC over the EC LAN.
+    fn send_to_eoc(&mut self, sch: &mut Scheduler<World>, id: usize) {
+        let ec = self.records[id].ec;
+        let deliver = self.net.lan[ec].send(sch.now(), sizes::CROP_BYTES);
+        sch.at(deliver, move |sch, w: &mut World| {
+            w.eoc_q[ec].push_back(id);
+            w.try_serve_eoc(sch, ec);
+        });
+    }
+
+    /// crop -> COC over the EC's WAN uplink.
+    fn upload_to_coc(&mut self, sch: &mut Scheduler<World>, id: usize) {
+        let ec = self.records[id].ec;
+        let deliver = self.net.uplink[ec].send(sch.now(), sizes::CROP_BYTES);
+        sch.at(deliver, move |sch, w: &mut World| {
+            w.coc_q.push_back(id);
+            w.try_serve_coc(sch);
+        });
+    }
+
+    fn try_serve_eoc(&mut self, sch: &mut Scheduler<World>, ec: usize) {
+        if self.eoc_busy[ec] || self.eoc_q[ec].is_empty() {
+            return;
+        }
+        let (b, svc_secs) =
+            ServiceTimes::pick(&self.svc.eoc, self.eoc_q[ec].len(), self.cfg.eoc_max_batch);
+        let take = b.min(self.eoc_q[ec].len());
+        let batch: Vec<usize> = self.eoc_q[ec].drain(..take).collect();
+        self.eoc_busy[ec] = true;
+        let done = sch.now() + secs(svc_secs);
+        sch.at(done, move |sch, w: &mut World| {
+            w.finish_eoc_batch(sch, ec, &batch);
+            w.eoc_busy[ec] = false;
+            w.try_serve_eoc(sch, ec);
+        });
+    }
+
+    fn finish_eoc_batch(&mut self, sch: &mut Scheduler<World>, ec: usize, batch: &[usize]) {
+        let pixels: Vec<Rc<Vec<f32>>> =
+            batch.iter().map(|&id| self.records[id].pixels.clone()).collect();
+        let refs: Vec<&Vec<f32>> = pixels.iter().map(|p| p.as_ref()).collect();
+        let confs = match self.compute.eoc_conf(&refs) {
+            Ok(c) => c,
+            Err(e) => {
+                self.errors.push(format!("eoc: {e}"));
+                return;
+            }
+        };
+        let now = sch.now();
+        for (&id, &conf) in batch.iter().zip(&confs) {
+            let eil = crate::util::to_secs(now - self.records[id].t_od);
+            self.policies[ec].observe_eoc_eil(eil);
+            let decision = match self.cfg.paradigm {
+                // EI: positive iff confident; everything else dropped
+                Paradigm::Ei => {
+                    if conf >= 0.8 {
+                        EdgeDecision::Positive
+                    } else {
+                        EdgeDecision::Drop
+                    }
+                }
+                _ => self.policies[ec].edge_decision(conf),
+            };
+            match decision {
+                EdgeDecision::Positive => {
+                    self.records[id].predicted = Some(true);
+                    self.records[id].eil = Some(eil);
+                    // metadata to RS on the CC (paper links ③⑥⑦)
+                    self.net.uplink[ec].send(now, sizes::META_BYTES);
+                }
+                EdgeDecision::Drop => {
+                    self.records[id].predicted = Some(false);
+                    self.records[id].eil = Some(eil);
+                }
+                EdgeDecision::Upload => {
+                    let deliver = self.net.uplink[ec].send(now, sizes::CROP_BYTES);
+                    sch.at(deliver, move |sch, w: &mut World| {
+                        w.coc_q.push_back(id);
+                        w.try_serve_coc(sch);
+                    });
+                }
+            }
+        }
+    }
+
+    fn try_serve_coc(&mut self, sch: &mut Scheduler<World>) {
+        if self.coc_busy || self.coc_q.is_empty() {
+            return;
+        }
+        let (b, svc_secs) =
+            ServiceTimes::pick(&self.svc.coc, self.coc_q.len(), self.cfg.coc_max_batch);
+        let take = b.min(self.coc_q.len());
+        let batch: Vec<usize> = self.coc_q.drain(..take).collect();
+        self.coc_busy = true;
+        let done = sch.now() + secs(svc_secs);
+        sch.at(done, move |sch, w: &mut World| {
+            w.finish_coc_batch(sch, &batch);
+            w.coc_busy = false;
+            w.try_serve_coc(sch);
+        });
+    }
+
+    fn finish_coc_batch(&mut self, sch: &mut Scheduler<World>, batch: &[usize]) {
+        let pixels: Vec<Rc<Vec<f32>>> =
+            batch.iter().map(|&id| self.records[id].pixels.clone()).collect();
+        let refs: Vec<&Vec<f32>> = pixels.iter().map(|p| p.as_ref()).collect();
+        let tops = match self.compute.coc_top1(&refs) {
+            Ok(t) => t,
+            Err(e) => {
+                self.errors.push(format!("coc: {e}"));
+                return;
+            }
+        };
+        let target = self.compute.target_class();
+        let now = sch.now();
+        let mut ecs_involved: Vec<usize> = Vec::new();
+        for (&id, &top) in batch.iter().zip(&tops) {
+            let eil = crate::util::to_secs(now - self.records[id].t_od);
+            let rec = &mut self.records[id];
+            rec.coc_label = Some(top);
+            rec.predicted = Some(top == target);
+            rec.eil = Some(eil);
+            ecs_involved.push(rec.ec);
+        }
+        // AP feedback: the global IC reports COC EILs to each involved
+        // EC's LIC over the downlink (paper ⑨⑪④).
+        if self.cfg.paradigm == Paradigm::AceAp {
+            ecs_involved.sort_unstable();
+            ecs_involved.dedup();
+            for ec in ecs_involved {
+                self.net.downlink[ec].send(now, EIL_FEEDBACK_BYTES);
+                // observe the mean EIL of this EC's crops in the batch
+                let mut sum = 0.0;
+                let mut n = 0;
+                for (&id, _) in batch.iter().zip(&tops) {
+                    if self.records[id].ec == ec {
+                        sum += self.records[id].eil.unwrap_or(0.0);
+                        n += 1;
+                    }
+                }
+                if n > 0 {
+                    self.policies[ec].observe_coc_eil(sum / n as f64);
+                }
+            }
+        }
+        let _ = self.compute.eoc_batches(); // (keep Compute API uniform)
+    }
+
+    /// Post-hoc ground truth (footnote 1): COC labels for every crop
+    /// that did not already get one online.
+    fn ground_truth(&mut self) -> Result<Vec<bool>> {
+        let target = self.compute.target_class();
+        let mut gt = vec![false; self.records.len()];
+        let mut missing_px: Vec<Rc<Vec<f32>>> = Vec::new();
+        let mut missing_idx = Vec::new();
+        for (i, r) in self.records.iter().enumerate() {
+            match r.coc_label {
+                Some(l) => gt[i] = l == target,
+                None => {
+                    missing_px.push(r.pixels.clone());
+                    missing_idx.push(i);
+                }
+            }
+        }
+        // chunk of 1: the interpret-mode COC's per-crop cost is lowest
+        // at b=1 (batching is super-linear there — EXPERIMENTS.md §Perf
+        // L1), so the post-hoc pass runs per-crop like the online COC.
+        for (chunk_px, chunk_idx) in missing_px
+            .chunks(1)
+            .zip(missing_idx.chunks(1))
+        {
+            let refs: Vec<&Vec<f32>> = chunk_px.iter().map(|p| p.as_ref()).collect();
+            let tops = self.compute.coc_top1(&refs)?;
+            for (&i, &t) in chunk_idx.iter().zip(&tops) {
+                gt[i] = t == target;
+            }
+        }
+        Ok(gt)
+    }
+}
+
+/// Run one experiment cell to completion and collect its metrics.
+pub fn run_cell(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Result<CellMetrics> {
+    let mut sch: Scheduler<World> = Scheduler::new();
+    let num_cams = cfg.num_ecs * cfg.cams_per_ec;
+    let interval = secs(cfg.interval_s);
+    let horizon = secs(cfg.duration_s);
+    let mut world = World::new(cfg.clone(), svc, compute);
+
+    // validation-testbed channel schedule (§4.2.2): apply each phase at
+    // its start time
+    if let Some(profile) = &cfg.channel {
+        for phase in profile.phases.clone() {
+            sch.at(secs(phase.start_s), move |_sch, w: &mut World| {
+                w.apply_phase(&phase);
+            });
+        }
+    }
+
+    // periodic OD sampling per camera, staggered to avoid lockstep
+    for cam in 0..num_cams {
+        let offset = secs(0.3) + (cam as u64) * interval / num_cams as u64;
+        fn tick(
+            sch: &mut Scheduler<World>,
+            w: &mut World,
+            cam: usize,
+            interval: SimTime,
+            horizon: SimTime,
+        ) {
+            if sch.now() > horizon {
+                w.sampling_done = true;
+                return;
+            }
+            w.sample(sch, cam);
+            sch.after(interval, move |sch, w: &mut World| {
+                tick(sch, w, cam, interval, horizon);
+            });
+        }
+        sch.at(offset, move |sch, w: &mut World| {
+            tick(sch, w, cam, interval, horizon);
+        });
+    }
+
+    // run to exhaustion (sampling stops at the horizon; queues drain)
+    sch.run(&mut world, 50_000_000);
+    if let Some(e) = world.errors.first() {
+        anyhow::bail!("inference error during sim: {e}");
+    }
+
+    let gt = world.ground_truth()?;
+    let mut f1 = F1::default();
+    let mut eil = Percentiles::new();
+    let mut edge_decided = 0u64;
+    let mut cloud_decided = 0u64;
+    for (r, &actual) in world.records.iter().zip(&gt) {
+        let predicted = r.predicted.unwrap_or(false);
+        f1.add(predicted, actual);
+        if let Some(e) = r.eil {
+            eil.add(e);
+        }
+        if r.coc_label.is_some() {
+            cloud_decided += 1;
+        } else if r.predicted.is_some() {
+            edge_decided += 1;
+        }
+    }
+    Ok(CellMetrics {
+        paradigm: cfg.paradigm.name().to_string(),
+        interval_s: cfg.interval_s,
+        wan_delay_ms: cfg.wan_delay_ms,
+        f1,
+        eil,
+        bwc_bytes: world.net.wan_bytes(),
+        crops: world.records.len() as u64,
+        edge_decided,
+        cloud_decided,
+        sim_duration_s: cfg.duration_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(p: Paradigm, interval: f64) -> CellConfig {
+        CellConfig {
+            paradigm: p,
+            interval_s: interval,
+            duration_s: 10.0,
+            ..Default::default()
+        }
+    }
+
+    fn run(p: Paradigm, interval: f64, delay: f64) -> CellMetrics {
+        let mut cfg = quick_cfg(p, interval);
+        cfg.wan_delay_ms = delay;
+        run_cell(cfg, ServiceTimes::synthetic(), Compute::Synthetic { target_bias: 0.05 })
+            .unwrap()
+    }
+
+    #[test]
+    fn all_paradigms_produce_crops_and_decisions() {
+        for p in [Paradigm::Ci, Paradigm::Ei, Paradigm::AceBp, Paradigm::AceAp] {
+            let m = run(p, 0.5, 0.0);
+            assert!(m.crops > 10, "{:?}: {} crops", p, m.crops);
+            assert_eq!(
+                m.edge_decided + m.cloud_decided,
+                m.crops,
+                "{:?} left undecided crops",
+                p
+            );
+            assert!(!m.eil.is_empty());
+        }
+    }
+
+    #[test]
+    fn ci_has_highest_bwc_ei_lowest() {
+        let ci = run(Paradigm::Ci, 0.3, 0.0);
+        let ei = run(Paradigm::Ei, 0.3, 0.0);
+        let ace = run(Paradigm::AceBp, 0.3, 0.0);
+        assert!(ci.bwc_bytes > ace.bwc_bytes, "CI {} !> ACE {}", ci.bwc_bytes, ace.bwc_bytes);
+        assert!(ace.bwc_bytes > ei.bwc_bytes, "ACE {} !> EI {}", ace.bwc_bytes, ei.bwc_bytes);
+    }
+
+    #[test]
+    fn ci_f1_is_perfect_by_construction() {
+        // ground truth IS COC's post-hoc labels; CI sends all to COC
+        let m = run(Paradigm::Ci, 0.5, 0.0);
+        assert!((m.f1.f1() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ei_decides_everything_at_edge() {
+        let m = run(Paradigm::Ei, 0.5, 0.0);
+        assert_eq!(m.cloud_decided, 0);
+        assert_eq!(m.edge_decided, m.crops);
+    }
+
+    #[test]
+    fn wan_delay_raises_ci_eil() {
+        let mut fast = run(Paradigm::Ci, 0.5, 0.0);
+        let mut slow = run(Paradigm::Ci, 0.5, 50.0);
+        assert!(
+            slow.eil_ms() > fast.eil_ms() + 40.0,
+            "delay not reflected: {} vs {}",
+            slow.eil_ms(),
+            fast.eil_ms()
+        );
+    }
+
+    #[test]
+    fn load_increases_ci_eil_via_backlog() {
+        let mut low = run(Paradigm::Ci, 0.5, 0.0);
+        let mut high = run(Paradigm::Ci, 0.1, 0.0);
+        assert!(
+            high.eil_ms() > low.eil_ms() * 1.5,
+            "no backlog effect: {} vs {}",
+            high.eil_ms(),
+            low.eil_ms()
+        );
+    }
+
+    #[test]
+    fn ace_ap_load_balances_under_pressure() {
+        let bp = run(Paradigm::AceBp, 0.1, 0.0);
+        let ap = run(Paradigm::AceAp, 0.1, 0.0);
+        // AP routes some crops straight to COC when EOC queues build
+        assert!(ap.crops > 0 && bp.crops > 0);
+        // and its mean EIL should not be (much) worse than BP's
+        let mut bp2 = bp.clone();
+        let mut ap2 = ap.clone();
+        assert!(ap2.eil_ms() <= bp2.eil_ms() * 1.6, "AP {} vs BP {}", ap2.eil_ms(), bp2.eil_ms());
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let a = run(Paradigm::AceBp, 0.3, 0.0);
+        let b = run(Paradigm::AceBp, 0.3, 0.0);
+        assert_eq!(a.crops, b.crops);
+        assert_eq!(a.bwc_bytes, b.bwc_bytes);
+        assert_eq!(a.f1, b.f1);
+    }
+}

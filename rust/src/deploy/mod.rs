@@ -1,0 +1,177 @@
+//! Deployment plans + update diffing (§4.4.3).
+//!
+//! The orchestrator binds components to nodes producing a
+//! `DeploymentPlan` ("a topology replica modified by the orchestrator",
+//! Figure 4 'instances'); the controller transforms it into per-node
+//! compose-style instructions. Submitting a new topology triggers
+//! either a *thorough* update (remove everything, redeploy) or an
+//! *incremental* update (diff the plans and only touch changed
+//! instances) — both from §4.4.3.
+
+use crate::util::AceId;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Instance {
+    /// unique within the app, e.g. "od-ec-1-rpi2"
+    pub id: String,
+    pub component: String,
+    pub node: AceId,
+    pub image: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentPlan {
+    pub app: String,
+    pub version: u64,
+    pub instances: Vec<Instance>,
+}
+
+impl DeploymentPlan {
+    /// Instances grouped per node (for instruction generation).
+    pub fn by_node(&self) -> BTreeMap<AceId, Vec<&Instance>> {
+        let mut map: BTreeMap<AceId, Vec<&Instance>> = BTreeMap::new();
+        for inst in &self.instances {
+            map.entry(inst.node.clone()).or_default().push(inst);
+        }
+        map
+    }
+
+    pub fn instances_of(&self, component: &str) -> Vec<&Instance> {
+        self.instances.iter().filter(|i| i.component == component).collect()
+    }
+
+    pub fn nodes(&self) -> Vec<AceId> {
+        self.by_node().into_keys().collect()
+    }
+}
+
+/// Incremental-update diff between two plans.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanDiff {
+    /// instances present only in the old plan
+    pub remove: Vec<Instance>,
+    /// instances present only in the new plan
+    pub add: Vec<Instance>,
+    /// same (component, node) but different image -> redeploy in place
+    pub replace: Vec<Instance>,
+    /// untouched
+    pub unchanged: Vec<Instance>,
+}
+
+impl PlanDiff {
+    pub fn is_noop(&self) -> bool {
+        self.remove.is_empty() && self.add.is_empty() && self.replace.is_empty()
+    }
+
+    /// Nodes whose instruction must be re-sent.
+    pub fn touched_nodes(&self) -> Vec<AceId> {
+        let mut nodes: Vec<AceId> = self
+            .remove
+            .iter()
+            .chain(self.add.iter())
+            .chain(self.replace.iter())
+            .map(|i| i.node.clone())
+            .collect();
+        nodes.sort();
+        nodes.dedup();
+        nodes
+    }
+}
+
+/// Compute the incremental update between `old` and `new`.
+pub fn diff_plans(old: &DeploymentPlan, new: &DeploymentPlan) -> PlanDiff {
+    let key = |i: &Instance| (i.component.clone(), i.node.clone());
+    let old_map: BTreeMap<_, &Instance> = old.instances.iter().map(|i| (key(i), i)).collect();
+    let new_map: BTreeMap<_, &Instance> = new.instances.iter().map(|i| (key(i), i)).collect();
+    let mut diff = PlanDiff::default();
+    for (k, i) in &old_map {
+        if !new_map.contains_key(k) {
+            diff.remove.push((*i).clone());
+        }
+    }
+    for (k, i) in &new_map {
+        match old_map.get(k) {
+            None => diff.add.push((*i).clone()),
+            Some(o) if o.image != i.image => diff.replace.push((*i).clone()),
+            Some(_) => diff.unchanged.push((*i).clone()),
+        }
+    }
+    diff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(c: &str, node: &str, image: &str) -> Instance {
+        Instance {
+            id: format!("{c}-{}", node.replace('/', "-")),
+            component: c.to_string(),
+            node: AceId::parse(node),
+            image: image.to_string(),
+        }
+    }
+
+    fn plan(v: u64, instances: Vec<Instance>) -> DeploymentPlan {
+        DeploymentPlan { app: "vq".into(), version: v, instances }
+    }
+
+    #[test]
+    fn groups_by_node() {
+        let p = plan(
+            1,
+            vec![
+                inst("od", "i/ec-1/rpi1", "a"),
+                inst("dg", "i/ec-1/rpi1", "b"),
+                inst("coc", "i/cc/gpu", "c"),
+            ],
+        );
+        let by = p.by_node();
+        assert_eq!(by.len(), 2);
+        assert_eq!(by[&AceId::parse("i/ec-1/rpi1")].len(), 2);
+        assert_eq!(p.instances_of("od").len(), 1);
+    }
+
+    #[test]
+    fn diff_detects_all_cases() {
+        let old = plan(
+            1,
+            vec![
+                inst("od", "i/ec-1/rpi1", "v1"),
+                inst("eoc", "i/ec-1/minipc", "v1"),
+                inst("rs", "i/cc/gpu", "v1"),
+            ],
+        );
+        let new = plan(
+            2,
+            vec![
+                inst("od", "i/ec-1/rpi1", "v2"),  // replace (new image)
+                inst("eoc", "i/ec-1/minipc", "v1"), // unchanged
+                inst("ic", "i/cc/gpu", "v1"),     // add
+                // rs removed
+            ],
+        );
+        let d = diff_plans(&old, &new);
+        assert_eq!(d.replace.len(), 1);
+        assert_eq!(d.replace[0].component, "od");
+        assert_eq!(d.unchanged.len(), 1);
+        assert_eq!(d.add.len(), 1);
+        assert_eq!(d.add[0].component, "ic");
+        assert_eq!(d.remove.len(), 1);
+        assert_eq!(d.remove[0].component, "rs");
+        assert!(!d.is_noop());
+        // touched: rpi1 (replace), gpu (add+remove) — not minipc
+        let touched = d.touched_nodes();
+        assert_eq!(touched.len(), 2);
+        assert!(!touched.contains(&AceId::parse("i/ec-1/minipc")));
+    }
+
+    #[test]
+    fn identical_plans_are_noop() {
+        let p = plan(1, vec![inst("od", "i/ec-1/rpi1", "v1")]);
+        let d = diff_plans(&p, &p.clone());
+        assert!(d.is_noop());
+        assert_eq!(d.unchanged.len(), 1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Discrete-event simulation engine (virtual time).
+//!
+//! DESIGN.md §Substitutions: the paper's 13-node physical testbed with
+//! `tc`-shaped WAN links is replaced by a DES so the Figure 5 sweeps are
+//! fast and deterministic. The engine is generic over a `World` type —
+//! the experiment owns its state, the scheduler owns virtual time and
+//! the event heap. Events are boxed `FnOnce(&mut Scheduler<W>, &mut W)`
+//! so handlers can schedule follow-up events.
+//!
+//! Determinism: ties are broken by insertion sequence number, so a given
+//! seed always produces the same trajectory (asserted by property tests).
+
+use crate::util::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+pub type EventFn<W> = Box<dyn FnOnce(&mut Scheduler<W>, &mut W)>;
+
+struct Entry<W> {
+    at: SimTime,
+    seq: u64,
+    ev: EventFn<W>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<W> Eq for Entry<W> {}
+
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse for earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Virtual-time event scheduler.
+pub struct Scheduler<W> {
+    heap: BinaryHeap<Entry<W>>,
+    now: SimTime,
+    seq: u64,
+    executed: u64,
+}
+
+impl<W> Default for Scheduler<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> Scheduler<W> {
+    pub fn new() -> Self {
+        Scheduler { heap: BinaryHeap::new(), now: 0, seq: 0, executed: 0 }
+    }
+
+    /// Current virtual time (microseconds).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Total events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Pending events.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `ev` at absolute time `at` (clamped to now).
+    pub fn at(&mut self, at: SimTime, ev: impl FnOnce(&mut Scheduler<W>, &mut W) + 'static) {
+        let at = at.max(self.now);
+        self.seq += 1;
+        self.heap.push(Entry { at, seq: self.seq, ev: Box::new(ev) });
+    }
+
+    /// Schedule `ev` after a relative delay.
+    pub fn after(&mut self, delay: SimTime, ev: impl FnOnce(&mut Scheduler<W>, &mut W) + 'static) {
+        self.at(self.now + delay, ev);
+    }
+
+    /// Run until the heap empties or virtual time would exceed `until`.
+    /// Returns the number of events executed by this call.
+    pub fn run_until(&mut self, world: &mut W, until: SimTime) -> u64 {
+        let start = self.executed;
+        while let Some(top) = self.heap.peek() {
+            if top.at > until {
+                break;
+            }
+            let entry = self.heap.pop().unwrap();
+            debug_assert!(entry.at >= self.now, "time went backwards");
+            self.now = entry.at;
+            self.executed += 1;
+            (entry.ev)(self, world);
+        }
+        self.now = self.now.max(until.min(self.now.max(until)));
+        self.executed - start
+    }
+
+    /// Run to exhaustion (with an event-count safety valve).
+    pub fn run(&mut self, world: &mut W, max_events: u64) -> u64 {
+        let start = self.executed;
+        while let Some(entry) = self.heap.pop() {
+            debug_assert!(entry.at >= self.now);
+            self.now = entry.at;
+            self.executed += 1;
+            (entry.ev)(self, world);
+            if self.executed - start >= max_events {
+                break;
+            }
+        }
+        self.executed - start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn executes_in_time_order() {
+        let mut s: Scheduler<Vec<u64>> = Scheduler::new();
+        let mut w = Vec::new();
+        s.at(30, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        s.at(10, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        s.at(20, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        s.run(&mut w, 1000);
+        assert_eq!(w, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut s: Scheduler<Vec<u32>> = Scheduler::new();
+        let mut w = Vec::new();
+        for i in 0..10u32 {
+            s.at(5, move |_, w: &mut Vec<u32>| w.push(i));
+        }
+        s.run(&mut w, 1000);
+        assert_eq!(w, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut s: Scheduler<Vec<u64>> = Scheduler::new();
+        let mut w = Vec::new();
+        s.at(1, |sc, _w: &mut Vec<u64>| {
+            sc.after(4, |sc2, w2: &mut Vec<u64>| w2.push(sc2.now()));
+        });
+        s.run(&mut w, 1000);
+        assert_eq!(w, vec![5]);
+    }
+
+    #[test]
+    fn run_until_stops_at_horizon() {
+        let mut s: Scheduler<Vec<u64>> = Scheduler::new();
+        let mut w = Vec::new();
+        s.at(10, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        s.at(100, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        let n = s.run_until(&mut w, 50);
+        assert_eq!(n, 1);
+        assert_eq!(w, vec![10]);
+        assert_eq!(s.pending(), 1);
+        s.run(&mut w, 10);
+        assert_eq!(w, vec![10, 100]);
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut s: Scheduler<Vec<u64>> = Scheduler::new();
+        let mut w = Vec::new();
+        s.at(50, |sc, _w: &mut Vec<u64>| {
+            // scheduling "in the past" clamps to now instead of panicking
+            sc.at(1, |sc2, w2: &mut Vec<u64>| w2.push(sc2.now()));
+        });
+        s.run(&mut w, 100);
+        assert_eq!(w, vec![50]);
+    }
+
+    #[test]
+    fn max_events_safety_valve() {
+        // self-perpetuating event chain must stop at the valve
+        fn tick(sc: &mut Scheduler<u64>, w: &mut u64) {
+            *w += 1;
+            sc.after(1, tick);
+        }
+        let mut s: Scheduler<u64> = Scheduler::new();
+        let mut w = 0u64;
+        s.after(1, tick);
+        let n = s.run(&mut w, 500);
+        assert_eq!(n, 500);
+        assert_eq!(w, 500);
+    }
+}

@@ -1,0 +1,195 @@
+//! Generic in-app control operations (§4.4.2).
+//!
+//! "ACE constructs a series of general in-app control operations (e.g.,
+//! start, filter, aggregate, and terminate), component monitoring
+//! operations, and a basic control policy." This module is that generic
+//! layer: a small dataflow of control operations over `json::Value`
+//! items with monitoring counters, deployed at the CC (global
+//! coordination) and per EC (local coordination), talking over the
+//! resource-level message service.
+
+use crate::json::Value;
+use std::collections::BTreeMap;
+
+/// One general control operation.
+pub enum ControlOp {
+    /// Pass items through until terminated.
+    Start,
+    /// Keep items satisfying the predicate.
+    Filter(Box<dyn Fn(&Value) -> bool + Send>),
+    /// Fold every `window` items into one via the aggregator.
+    Aggregate {
+        window: usize,
+        f: Box<dyn Fn(&[Value]) -> Value + Send>,
+    },
+    /// Stop the pipeline; subsequent items are discarded.
+    Terminate,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpStats {
+    pub seen: u64,
+    pub emitted: u64,
+}
+
+/// A linear pipeline of control ops with per-op monitoring counters —
+/// the reusable skeleton the CC controller (global) and EC controllers
+/// (local) instantiate.
+pub struct ControlPipeline {
+    name: String,
+    ops: Vec<(String, ControlOp)>,
+    stats: Vec<OpStats>,
+    buffer: Vec<Vec<Value>>,
+    terminated: bool,
+}
+
+impl ControlPipeline {
+    pub fn new(name: impl Into<String>) -> Self {
+        ControlPipeline {
+            name: name.into(),
+            ops: Vec::new(),
+            stats: Vec::new(),
+            buffer: Vec::new(),
+            terminated: false,
+        }
+    }
+
+    pub fn op(mut self, label: impl Into<String>, op: ControlOp) -> Self {
+        self.ops.push((label.into(), op));
+        self.stats.push(OpStats::default());
+        self.buffer.push(Vec::new());
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn is_terminated(&self) -> bool {
+        self.terminated
+    }
+
+    /// Push one item through the pipeline; returns emitted items.
+    pub fn push(&mut self, item: Value) -> Vec<Value> {
+        if self.terminated {
+            return Vec::new();
+        }
+        let mut current = vec![item];
+        for i in 0..self.ops.len() {
+            if current.is_empty() {
+                break;
+            }
+            let mut next = Vec::new();
+            for item in current {
+                self.stats[i].seen += 1;
+                match &self.ops[i].1 {
+                    ControlOp::Start => next.push(item),
+                    ControlOp::Filter(pred) => {
+                        if pred(&item) {
+                            next.push(item);
+                        }
+                    }
+                    ControlOp::Aggregate { window, f } => {
+                        self.buffer[i].push(item);
+                        if self.buffer[i].len() >= *window {
+                            let agg = f(&self.buffer[i]);
+                            self.buffer[i].clear();
+                            next.push(agg);
+                        }
+                    }
+                    ControlOp::Terminate => {
+                        self.terminated = true;
+                        return Vec::new();
+                    }
+                }
+            }
+            self.stats[i].emitted += next.len() as u64;
+            current = next;
+        }
+        current
+    }
+
+    /// Monitoring snapshot: per-op (label, seen, emitted).
+    pub fn monitor(&self) -> BTreeMap<String, OpStats> {
+        self.ops
+            .iter()
+            .zip(&self.stats)
+            .map(|((label, _), s)| (label.clone(), *s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn num(v: f64) -> Value {
+        Value::num(v)
+    }
+
+    #[test]
+    fn filter_drops_items() {
+        let mut p = ControlPipeline::new("t")
+            .op("start", ControlOp::Start)
+            .op(
+                "conf>0.5",
+                ControlOp::Filter(Box::new(|v| v.as_f64().unwrap_or(0.0) > 0.5)),
+            );
+        assert_eq!(p.push(num(0.9)), vec![num(0.9)]);
+        assert_eq!(p.push(num(0.2)), vec![]);
+        let m = p.monitor();
+        assert_eq!(m["conf>0.5"], OpStats { seen: 2, emitted: 1 });
+    }
+
+    #[test]
+    fn aggregate_windows() {
+        let mut p = ControlPipeline::new("t").op(
+            "sum3",
+            ControlOp::Aggregate {
+                window: 3,
+                f: Box::new(|items| {
+                    Value::num(items.iter().filter_map(|v| v.as_f64()).sum::<f64>())
+                }),
+            },
+        );
+        assert_eq!(p.push(num(1.0)), vec![]);
+        assert_eq!(p.push(num(2.0)), vec![]);
+        assert_eq!(p.push(num(3.0)), vec![num(6.0)]);
+        assert_eq!(p.push(num(4.0)), vec![]);
+    }
+
+    #[test]
+    fn terminate_stops_pipeline() {
+        let mut p = ControlPipeline::new("t")
+            .op("start", ControlOp::Start)
+            .op("stop", ControlOp::Terminate);
+        assert_eq!(p.push(num(1.0)), vec![]);
+        assert!(p.is_terminated());
+        assert_eq!(p.push(num(2.0)), vec![]);
+        assert_eq!(p.monitor()["start"].seen, 1); // second push never entered
+    }
+
+    #[test]
+    fn chained_ops_compose() {
+        let mut p = ControlPipeline::new("t")
+            .op(
+                "pos",
+                ControlOp::Filter(Box::new(|v| v.as_f64().unwrap_or(-1.0) >= 0.0)),
+            )
+            .op(
+                "avg2",
+                ControlOp::Aggregate {
+                    window: 2,
+                    f: Box::new(|items| {
+                        Value::num(
+                            items.iter().filter_map(|v| v.as_f64()).sum::<f64>()
+                                / items.len() as f64,
+                        )
+                    }),
+                },
+            );
+        assert_eq!(p.push(num(-5.0)), vec![]);
+        assert_eq!(p.push(num(1.0)), vec![]);
+        assert_eq!(p.push(num(3.0)), vec![num(2.0)]);
+    }
+}

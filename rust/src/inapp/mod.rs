@@ -1,0 +1,366 @@
+//! Reusable in-app controller (§4.4.2) + the video-query policies (§5).
+//!
+//! ACE requires developers to decouple the control plane (in-app
+//! control operations, component monitoring, policy execution) from the
+//! workload plane (computation/storage/transmission). This module is
+//! the reusable controller: generic control operations (start, filter,
+//! aggregate, terminate), monitoring counters, and a `QueryPolicy`
+//! trait that applications inherit and override for customized
+//! optimization — exactly how §5.1.2's Advanced Policy (AP) extends the
+//! Basic Policy (BP).
+//!
+//! Policies:
+//!   * `BasicPolicy` (BP): crops always go OD->EOC; EOC confidence
+//!     >= 0.8 -> positive, <= 0.1 -> drop, else upload to COC.
+//!   * `AdvancedPolicy` (AP): BP + (a) load balancing — OD sends each
+//!     crop to whichever of EOC/COC currently has the lower *estimated*
+//!     EIL; (b) threshold shrinking — when either EIL deteriorates, the
+//!     [0.1, 0.8] band narrows so fewer crops are uploaded from EOC.
+
+pub mod control;
+
+use crate::util::stats::Summary;
+
+/// Exponentially-weighted moving average — the EIL estimator AP runs
+/// from the monitoring reports of EOC (links ⑤④) and COC (⑨⑪④).
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.value = Some(match self.value {
+            None => v,
+            Some(old) => self.alpha * v + (1.0 - self.alpha) * old,
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+}
+
+/// Where the IC routes a fresh crop from OD.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    Eoc,
+    Coc,
+}
+
+/// What the IC does with an EOC confidence score.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeDecision {
+    /// confidence >= hi: targeted object identified, metadata to RS.
+    Positive,
+    /// confidence <= lo: crop dropped.
+    Drop,
+    /// otherwise: crop uploaded to COC for accurate classification.
+    Upload,
+}
+
+/// The in-app control policy interface (§4.4.2: "developers can inherit
+/// the general in-app controller and override optimization methods").
+pub trait QueryPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Route a fresh crop from OD (BP: always EOC).
+    fn route_crop(&mut self) -> Route {
+        Route::Eoc
+    }
+
+    /// Decide on an EOC confidence.
+    fn edge_decision(&mut self, confidence: f32) -> EdgeDecision;
+
+    /// Monitoring feedback: observed end-to-end inference latencies.
+    fn observe_eoc_eil(&mut self, _secs: f64) {}
+    fn observe_coc_eil(&mut self, _secs: f64) {}
+
+    /// Current [lo, hi] confidence thresholds (for introspection).
+    fn thresholds(&self) -> (f32, f32);
+}
+
+/// BP — the §5.1.2 Basic Policy with the paper's 0.8 / 0.1 thresholds.
+#[derive(Debug, Clone)]
+pub struct BasicPolicy {
+    pub hi: f32,
+    pub lo: f32,
+}
+
+impl Default for BasicPolicy {
+    fn default() -> Self {
+        BasicPolicy { hi: 0.8, lo: 0.1 }
+    }
+}
+
+impl QueryPolicy for BasicPolicy {
+    fn name(&self) -> &'static str {
+        "BP"
+    }
+
+    fn edge_decision(&mut self, confidence: f32) -> EdgeDecision {
+        if confidence >= self.hi {
+            EdgeDecision::Positive
+        } else if confidence <= self.lo {
+            EdgeDecision::Drop
+        } else {
+            EdgeDecision::Upload
+        }
+    }
+
+    fn thresholds(&self) -> (f32, f32) {
+        (self.lo, self.hi)
+    }
+}
+
+/// AP — the §5.1.2 Advanced Policy: EIL-estimating load balancer +
+/// threshold shrinking. "Inherits" BP by embedding it and overriding
+/// the routing/adaptation methods.
+#[derive(Debug, Clone)]
+pub struct AdvancedPolicy {
+    base: BasicPolicy,
+    pub eoc_eil: Ewma,
+    pub coc_eil: Ewma,
+    /// Prior unloaded-EIL guesses (before any observation arrives).
+    pub eoc_baseline: f64,
+    pub coc_baseline: f64,
+    /// Self-calibrated floors: the minimum EIL ever observed per path.
+    /// Deterioration is measured against these, so a constant WAN
+    /// propagation delay is learned as "nominal" rather than read as
+    /// congestion (§5.2: AP reacts to *deteriorated* EILs).
+    eoc_floor: f64,
+    coc_floor: f64,
+    /// maximum fraction of the band to shrink away (0..1)
+    pub max_shrink: f64,
+    /// sensitivity of shrinking to deterioration
+    pub gain: f64,
+    /// hysteresis: divert OD->COC only when EOC's estimate exceeds
+    /// COC's by this factor (prevents route flapping on noisy EWMAs)
+    pub route_margin: f64,
+}
+
+impl AdvancedPolicy {
+    /// Baselines come from calibration: the unloaded EIL of each path
+    /// (service time + one LAN/WAN round trip).
+    pub fn new(eoc_baseline: f64, coc_baseline: f64) -> Self {
+        AdvancedPolicy {
+            base: BasicPolicy::default(),
+            eoc_eil: Ewma::new(0.2),
+            coc_eil: Ewma::new(0.2),
+            eoc_baseline,
+            coc_baseline,
+            eoc_floor: f64::INFINITY,
+            coc_floor: f64::INFINITY,
+            max_shrink: 0.7,
+            gain: 0.15,
+            route_margin: 1.1,
+        }
+    }
+
+    fn floor(observed_floor: f64, prior: f64) -> f64 {
+        if observed_floor.is_finite() {
+            observed_floor
+        } else {
+            prior
+        }
+    }
+
+    /// Deterioration factor: how much worse the worst path is vs its
+    /// self-calibrated floor (1.0 = nominal).
+    fn deterioration(&self) -> f64 {
+        let ef = Self::floor(self.eoc_floor, self.eoc_baseline);
+        let cf = Self::floor(self.coc_floor, self.coc_baseline);
+        let e = self.eoc_eil.get_or(ef) / ef;
+        let c = self.coc_eil.get_or(cf) / cf;
+        e.max(c).max(1.0)
+    }
+
+    /// Shrunk [lo, hi]: the band collapses toward its midpoint as EIL
+    /// deteriorates, cutting EOC->COC uploads (§5.1.2).
+    fn band(&self) -> (f32, f32) {
+        let d = self.deterioration();
+        let shrink = ((d - 1.0) * self.gain).min(self.max_shrink) as f32;
+        let (lo0, hi0) = (self.base.lo, self.base.hi);
+        let mid = 0.5 * (lo0 + hi0);
+        (lo0 + shrink * (mid - lo0), hi0 - shrink * (hi0 - mid))
+    }
+}
+
+impl QueryPolicy for AdvancedPolicy {
+    fn name(&self) -> &'static str {
+        "AP"
+    }
+
+    /// Load balancing (§5.1.2): "always sent to the one with a lower
+    /// estimated EIL" — with hysteresis so the default stays EOC (the
+    /// BP behaviour) until the edge path is clearly the slower one.
+    fn route_crop(&mut self) -> Route {
+        // before any feedback arrives, behave like BP (everything via
+        // EOC) — diversion is an *informed* decision
+        let (e, c) = match (self.eoc_eil.get(), self.coc_eil.get()) {
+            (Some(e), Some(c)) => (e, c),
+            _ => return Route::Eoc,
+        };
+        if e > c * self.route_margin {
+            Route::Coc
+        } else {
+            Route::Eoc
+        }
+    }
+
+    fn edge_decision(&mut self, confidence: f32) -> EdgeDecision {
+        let (lo, hi) = self.band();
+        if confidence >= hi {
+            EdgeDecision::Positive
+        } else if confidence <= lo {
+            EdgeDecision::Drop
+        } else {
+            EdgeDecision::Upload
+        }
+    }
+
+    fn observe_eoc_eil(&mut self, secs: f64) {
+        self.eoc_eil.observe(secs);
+        self.eoc_floor = self.eoc_floor.min(secs);
+    }
+
+    fn observe_coc_eil(&mut self, secs: f64) {
+        self.coc_eil.observe(secs);
+        self.coc_floor = self.coc_floor.min(secs);
+    }
+
+    fn thresholds(&self) -> (f32, f32) {
+        self.band()
+    }
+}
+
+/// Per-policy monitoring counters (the control plane's component
+/// monitoring duty).
+#[derive(Debug, Clone, Default)]
+pub struct PolicyStats {
+    pub routed_eoc: u64,
+    pub routed_coc: u64,
+    pub positives_edge: u64,
+    pub drops_edge: u64,
+    pub uploads: u64,
+    pub eoc_eil: Summary,
+    pub coc_eil: Summary,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.get(), None);
+        e.observe(10.0);
+        assert_eq!(e.get(), Some(10.0));
+        e.observe(0.0);
+        assert_eq!(e.get(), Some(5.0));
+        for _ in 0..64 {
+            e.observe(3.0);
+        }
+        assert!((e.get().unwrap() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bp_thresholds_match_paper() {
+        let mut bp = BasicPolicy::default();
+        assert_eq!(bp.edge_decision(0.85), EdgeDecision::Positive);
+        assert_eq!(bp.edge_decision(0.8), EdgeDecision::Positive);
+        assert_eq!(bp.edge_decision(0.5), EdgeDecision::Upload);
+        assert_eq!(bp.edge_decision(0.1), EdgeDecision::Drop);
+        assert_eq!(bp.edge_decision(0.05), EdgeDecision::Drop);
+        assert_eq!(bp.route_crop(), Route::Eoc); // BP never load-balances
+    }
+
+    #[test]
+    fn ap_load_balances_on_estimated_eil() {
+        let mut ap = AdvancedPolicy::new(0.050, 0.040);
+        // nominal: within the hysteresis margin -> stick with EOC (BP
+        // behaviour)
+        assert_eq!(ap.route_crop(), Route::Eoc);
+        // EOC deteriorates well past the margin -> divert to COC
+        for _ in 0..20 {
+            ap.observe_eoc_eil(2.0);
+        }
+        ap.observe_coc_eil(0.040);
+        assert_eq!(ap.route_crop(), Route::Coc);
+        // COC backlog explodes -> back to EOC
+        for _ in 0..20 {
+            ap.observe_coc_eil(10.0);
+        }
+        assert_eq!(ap.route_crop(), Route::Eoc);
+    }
+
+    #[test]
+    fn ap_learns_propagation_delay_as_nominal() {
+        // constant 50 ms WAN delay must NOT be read as deterioration
+        let mut ap = AdvancedPolicy::new(0.050, 0.040);
+        for _ in 0..30 {
+            ap.observe_coc_eil(0.090); // 40 ms service + 50 ms delay
+            ap.observe_eoc_eil(0.050);
+        }
+        let (lo, hi) = ap.thresholds();
+        assert!((lo - 0.1).abs() < 0.02, "lo drifted: {lo}");
+        assert!((hi - 0.8).abs() < 0.02, "hi drifted: {hi}");
+    }
+
+    #[test]
+    fn ap_shrinks_band_under_deterioration() {
+        let mut ap = AdvancedPolicy::new(0.050, 0.040);
+        let (lo0, hi0) = ap.thresholds();
+        assert!((lo0 - 0.1).abs() < 1e-6 && (hi0 - 0.8).abs() < 1e-6);
+        // nominal observations first (the floor self-calibrates), then
+        // a 5x deterioration on COC
+        ap.observe_coc_eil(0.040);
+        ap.observe_eoc_eil(0.050);
+        for _ in 0..20 {
+            ap.observe_coc_eil(0.200);
+        }
+        let (lo1, hi1) = ap.thresholds();
+        assert!(lo1 > lo0, "lo should rise: {lo1} vs {lo0}");
+        assert!(hi1 < hi0, "hi should fall: {hi1} vs {hi0}");
+        assert!(lo1 < hi1, "band never inverts");
+        // a borderline crop that BP would upload is now decided locally
+        assert_eq!(ap.edge_decision(0.79), EdgeDecision::Positive);
+    }
+
+    #[test]
+    fn ap_band_never_collapses_past_max_shrink() {
+        let mut ap = AdvancedPolicy::new(0.050, 0.040);
+        for _ in 0..100 {
+            ap.observe_eoc_eil(50.0); // 1000x deterioration
+        }
+        let (lo, hi) = ap.thresholds();
+        assert!(lo < hi);
+        let width = hi - lo;
+        assert!(width >= (0.8 - 0.1) * (1.0 - 0.85) - 1e-6);
+    }
+
+    #[test]
+    fn dyn_policy_dispatch() {
+        // the app holds policies as trait objects (reusable controller)
+        let mut policies: Vec<Box<dyn QueryPolicy>> = vec![
+            Box::new(BasicPolicy::default()),
+            Box::new(AdvancedPolicy::new(0.05, 0.04)),
+        ];
+        for p in policies.iter_mut() {
+            let _ = p.route_crop();
+            let _ = p.edge_decision(0.5);
+            assert!(!p.name().is_empty());
+        }
+    }
+}

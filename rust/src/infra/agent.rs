@@ -1,0 +1,257 @@
+//! Node agent (§4.3.1): deployed on every node at registration; it
+//! receives deployment instructions from the platform controller over
+//! the message service, manages "containers" (in-process component
+//! records), and reports node + component status for monitoring.
+//!
+//! Topics:
+//!   * `ace/deploy/<node-id>`   — controller -> agent: compose-YAML
+//!     instruction (deploy/remove component instances);
+//!   * `ace/status/<node-id>`   — agent -> monitoring: heartbeat +
+//!     running instance list (JSON).
+
+use crate::json::{self, Value};
+use crate::pubsub::{Broker, Message};
+use crate::util::AceId;
+use crate::yamlite;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A "container" the agent runs (instance of an application component).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Running {
+    pub instance: String,
+    pub component: String,
+    pub app: String,
+    pub image: String,
+}
+
+pub struct Agent {
+    pub node: AceId,
+    running: Arc<Mutex<Vec<Running>>>,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+    broker: Broker,
+}
+
+impl Agent {
+    /// Start the agent: subscribe to this node's deploy topic and apply
+    /// instructions as they arrive.
+    pub fn start(node: AceId, broker: Broker) -> Result<Agent, String> {
+        let topic = format!("ace/deploy/{}", node.to_string().replace('/', "."));
+        let sub = broker.subscribe(&topic)?;
+        let running: Arc<Mutex<Vec<Running>>> = Arc::new(Mutex::new(Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let r2 = running.clone();
+        let s2 = stop.clone();
+        let b2 = broker.clone();
+        let node2 = node.clone();
+        let thread = std::thread::spawn(move || {
+            while !s2.load(Ordering::Relaxed) {
+                match sub.rx.recv_timeout(std::time::Duration::from_millis(20)) {
+                    Ok(msg) => {
+                        Self::apply(&node2, &r2, &msg);
+                        Self::report(&node2, &r2, &b2);
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        });
+        Ok(Agent { node, running, stop, thread: Some(thread), broker })
+    }
+
+    /// Apply a compose-style instruction (yamlite document with a
+    /// `services` mapping; absent services are removed — the agent
+    /// converges to the instruction, like docker-compose up).
+    fn apply(node: &AceId, running: &Arc<Mutex<Vec<Running>>>, msg: &Message) {
+        let doc = match yamlite::parse(&msg.utf8()) {
+            Ok(d) => d,
+            Err(_) => return, // malformed instruction: ignored, status unchanged
+        };
+        let services = doc.get("services");
+        let mut new_running = Vec::new();
+        if let Some(obj) = services.as_obj() {
+            for (name, svc) in obj {
+                new_running.push(Running {
+                    instance: name.clone(),
+                    component: svc
+                        .get("labels")
+                        .get("ace.component")
+                        .as_str()
+                        .unwrap_or(name)
+                        .to_string(),
+                    app: svc
+                        .get("labels")
+                        .get("ace.app")
+                        .as_str()
+                        .unwrap_or("")
+                        .to_string(),
+                    image: svc.get("image").as_str().unwrap_or("").to_string(),
+                });
+            }
+        }
+        let _ = node;
+        *running.lock().unwrap() = new_running;
+    }
+
+    fn report(node: &AceId, running: &Arc<Mutex<Vec<Running>>>, broker: &Broker) {
+        let list = running.lock().unwrap();
+        let instances: Vec<Value> = list
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("instance", Value::str(&r.instance)),
+                    ("component", Value::str(&r.component)),
+                    ("app", Value::str(&r.app)),
+                    ("state", Value::str("running")),
+                ])
+            })
+            .collect();
+        let status = Value::obj(vec![
+            ("node", Value::str(node.to_string())),
+            ("instances", Value::Arr(instances)),
+        ]);
+        let topic = format!("ace/status/{}", node.to_string().replace('/', "."));
+        let _ = broker.publish(&topic, json::to_string(&status).into_bytes());
+    }
+
+    /// Force an immediate status report (heartbeat).
+    pub fn heartbeat(&self) {
+        Self::report(&self.node, &self.running, &self.broker);
+    }
+
+    pub fn running(&self) -> Vec<Running> {
+        self.running.lock().unwrap().clone()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Agent {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Render the deploy-topic name for a node (shared with the controller).
+pub fn deploy_topic(node: &AceId) -> String {
+    format!("ace/deploy/{}", node.to_string().replace('/', "."))
+}
+
+/// Render the status-topic name for a node.
+pub fn status_topic(node: &AceId) -> String {
+    format!("ace/status/{}", node.to_string().replace('/', "."))
+}
+
+/// Build a compose-style instruction document for a node.
+pub fn compose_instruction(
+    app: &str,
+    services: &[(String, String, String)], // (instance, component, image)
+) -> String {
+    let mut svc_map = BTreeMap::new();
+    for (instance, component, image) in services {
+        let labels = Value::obj(vec![
+            ("ace.app", Value::str(app)),
+            ("ace.component", Value::str(component)),
+        ]);
+        svc_map.insert(
+            instance.clone(),
+            Value::obj(vec![
+                ("image", Value::str(image)),
+                ("labels", labels),
+                ("restart", Value::str("unless-stopped")),
+            ]),
+        );
+    }
+    let doc = Value::obj(vec![
+        ("version", Value::str("3.8")),
+        ("services", Value::Obj(svc_map)),
+    ]);
+    yamlite::to_string(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn wait_for<F: Fn() -> bool>(f: F) {
+        for _ in 0..200 {
+            if f() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("condition not reached");
+    }
+
+    #[test]
+    fn agent_applies_instruction_and_reports() {
+        let broker = Broker::new("ec-1");
+        let node = AceId::parse("infra-1/ec-1/rpi1");
+        let status_sub = broker.subscribe(&status_topic(&node)).unwrap();
+        let agent = Agent::start(node.clone(), broker.clone()).unwrap();
+
+        let doc = compose_instruction(
+            "videoquery",
+            &[("od-1".into(), "od".into(), "ace/od:1".into())],
+        );
+        broker.publish(&deploy_topic(&node), doc.into_bytes()).unwrap();
+
+        wait_for(|| agent.running().len() == 1);
+        let r = &agent.running()[0];
+        assert_eq!(r.component, "od");
+        assert_eq!(r.app, "videoquery");
+        assert_eq!(r.image, "ace/od:1");
+
+        let status = status_sub.rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        let v = crate::json::parse(&status.utf8()).unwrap();
+        assert_eq!(v.get("instances").idx(0).get("state").as_str(), Some("running"));
+    }
+
+    #[test]
+    fn agent_converges_to_new_instruction() {
+        let broker = Broker::new("ec-1");
+        let node = AceId::parse("infra-1/ec-1/rpi2");
+        let agent = Agent::start(node.clone(), broker.clone()).unwrap();
+        let d1 = compose_instruction(
+            "vq",
+            &[
+                ("od-1".into(), "od".into(), "i1".into()),
+                ("eoc-1".into(), "eoc".into(), "i2".into()),
+            ],
+        );
+        broker.publish(&deploy_topic(&node), d1.into_bytes()).unwrap();
+        wait_for(|| agent.running().len() == 2);
+        // update: only one service remains -> the other is removed
+        let d2 = compose_instruction("vq", &[("od-1".into(), "od".into(), "i1b".into())]);
+        broker.publish(&deploy_topic(&node), d2.into_bytes()).unwrap();
+        wait_for(|| {
+            let r = agent.running();
+            r.len() == 1 && r[0].image == "i1b"
+        });
+    }
+
+    #[test]
+    fn empty_instruction_stops_everything() {
+        let broker = Broker::new("ec-1");
+        let node = AceId::parse("infra-1/ec-1/rpi3");
+        let agent = Agent::start(node.clone(), broker.clone()).unwrap();
+        let d1 = compose_instruction("vq", &[("x".into(), "x".into(), "i".into())]);
+        broker.publish(&deploy_topic(&node), d1.into_bytes()).unwrap();
+        wait_for(|| agent.running().len() == 1);
+        let d2 = compose_instruction("vq", &[]);
+        broker.publish(&deploy_topic(&node), d2.into_bytes()).unwrap();
+        wait_for(|| agent.running().is_empty());
+    }
+}

@@ -1,0 +1,346 @@
+//! Infrastructure organization (§4.3.1).
+//!
+//! ACE organizes each user's nodes as several Edge Clouds (ECs) plus
+//! one Central Cloud (CC). Ids are hierarchical (three layers):
+//! `infra-X / {ec-N | cc} / node`. Each EC/CC is a cluster with its own
+//! broker (resource-level message service instance) so ECs stay
+//! autonomous under WAN partition (Principle Two); node agents
+//! subscribe to their deploy topic and report status.
+
+pub mod agent;
+
+use crate::util::AceId;
+use std::collections::BTreeMap;
+
+/// Hardware class of a node — mirrors the paper's testbed (§5.1.1) and
+/// sets the DES speed factor (service time multiplier relative to the
+/// calibration host).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Camera-attached edge node (paper: Raspberry Pi).
+    RaspberryPi,
+    /// EC aggregation node (paper: X86 mini PC).
+    MiniPc,
+    /// CC node (paper: GPU workstation).
+    GpuWorkstation,
+    /// Generic cloud server.
+    CloudServer,
+}
+
+impl NodeKind {
+    /// DES service-time multiplier vs the calibration host. Chosen so
+    /// the EOC-on-edge vs COC-on-CC asymmetry matches §5.2's measured
+    /// 44 ms vs 32.3 ms shape (see DESIGN.md §Substitutions).
+    pub fn speed_factor(self) -> f64 {
+        match self {
+            NodeKind::RaspberryPi => 6.0,
+            NodeKind::MiniPc => 2.0,
+            NodeKind::GpuWorkstation => 1.0,
+            NodeKind::CloudServer => 1.0,
+        }
+    }
+
+    pub fn default_resources(self) -> Resources {
+        match self {
+            NodeKind::RaspberryPi => Resources { cpu_millis: 4000, mem_mb: 4096 },
+            NodeKind::MiniPc => Resources { cpu_millis: 8000, mem_mb: 16384 },
+            NodeKind::GpuWorkstation => Resources { cpu_millis: 32000, mem_mb: 65536 },
+            NodeKind::CloudServer => Resources { cpu_millis: 16000, mem_mb: 32768 },
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            NodeKind::RaspberryPi => "rpi",
+            NodeKind::MiniPc => "minipc",
+            NodeKind::GpuWorkstation => "gpu-ws",
+            NodeKind::CloudServer => "cloud",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub cpu_millis: u32,
+    pub mem_mb: u32,
+}
+
+impl Resources {
+    pub fn fits(&self, req: &Resources) -> bool {
+        self.cpu_millis >= req.cpu_millis && self.mem_mb >= req.mem_mb
+    }
+
+    pub fn sub(&mut self, req: &Resources) {
+        self.cpu_millis -= req.cpu_millis;
+        self.mem_mb -= req.mem_mb;
+    }
+
+    pub fn add(&mut self, req: &Resources) {
+        self.cpu_millis += req.cpu_millis;
+        self.mem_mb += req.mem_mb;
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStatus {
+    Ready,
+    /// Shielded by the controller after missed heartbeats (§4.2.1
+    /// "shields failed nodes").
+    Failed,
+    /// Administratively removed from scheduling.
+    Cordoned,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: AceId,
+    pub kind: NodeKind,
+    pub capacity: Resources,
+    pub allocatable: Resources,
+    pub labels: BTreeMap<String, String>,
+    pub status: NodeStatus,
+}
+
+impl Node {
+    pub fn schedulable(&self) -> bool {
+        self.status == NodeStatus::Ready
+    }
+
+    pub fn has_label(&self, key: &str, value: Option<&str>) -> bool {
+        match (self.labels.get(key), value) {
+            (Some(v), Some(want)) => v == want,
+            (Some(_), None) => true,
+            (None, _) => false,
+        }
+    }
+
+    pub fn is_edge(&self) -> bool {
+        matches!(self.kind, NodeKind::RaspberryPi | NodeKind::MiniPc)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterKind {
+    EdgeCloud,
+    CentralCloud,
+}
+
+/// One EC or the CC: a named cluster of nodes (§4.3.1 "internal nodes
+/// are organized as a cluster").
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub id: AceId,
+    pub kind: ClusterKind,
+    pub nodes: Vec<Node>,
+}
+
+impl Cluster {
+    pub fn node(&self, leaf: &str) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.id.leaf() == leaf)
+    }
+
+    pub fn node_mut(&mut self, leaf: &str) -> Option<&mut Node> {
+        self.nodes.iter_mut().find(|n| n.id.leaf() == leaf)
+    }
+}
+
+/// A registered user's full ECC infrastructure.
+#[derive(Debug, Clone)]
+pub struct Infrastructure {
+    pub id: AceId,
+    pub ecs: Vec<Cluster>,
+    pub cc: Cluster,
+}
+
+impl Infrastructure {
+    /// All clusters, CC last.
+    pub fn clusters(&self) -> impl Iterator<Item = &Cluster> {
+        self.ecs.iter().chain(std::iter::once(&self.cc))
+    }
+
+    pub fn cluster(&self, leaf: &str) -> Option<&Cluster> {
+        self.clusters().find(|c| c.id.leaf() == leaf)
+    }
+
+    pub fn cluster_mut(&mut self, leaf: &str) -> Option<&mut Cluster> {
+        if self.cc.id.leaf() == leaf {
+            return Some(&mut self.cc);
+        }
+        self.ecs.iter_mut().find(|c| c.id.leaf() == leaf)
+    }
+
+    pub fn all_nodes(&self) -> impl Iterator<Item = (&Cluster, &Node)> {
+        self.clusters().flat_map(|c| c.nodes.iter().map(move |n| (c, n)))
+    }
+
+    pub fn find_node(&self, id: &AceId) -> Option<&Node> {
+        self.all_nodes().map(|(_, n)| n).find(|n| &n.id == id)
+    }
+
+    pub fn find_node_mut(&mut self, id: &AceId) -> Option<&mut Node> {
+        let cluster_leaf = id.parent()?.leaf().to_string();
+        self.cluster_mut(&cluster_leaf)?.node_mut(id.leaf())
+    }
+}
+
+/// Builder reproducing the registration protocol of §4.3.1: ACE assigns
+/// the infrastructure id, then per-EC/CC ids, then per-node ids as
+/// agents check in.
+pub struct InfraBuilder {
+    id: AceId,
+    ecs: Vec<Cluster>,
+    cc_nodes: Vec<Node>,
+    next_ec: usize,
+}
+
+impl InfraBuilder {
+    pub fn register(user: &str) -> Self {
+        InfraBuilder {
+            id: AceId::root(format!("infra-{user}")),
+            ecs: Vec::new(),
+            cc_nodes: Vec::new(),
+            next_ec: 1,
+        }
+    }
+
+    /// Claim a new EC; returns its id for node registration.
+    pub fn claim_ec(&mut self) -> AceId {
+        let id = self.id.child(format!("ec-{}", self.next_ec));
+        self.next_ec += 1;
+        self.ecs.push(Cluster { id: id.clone(), kind: ClusterKind::EdgeCloud, nodes: Vec::new() });
+        id
+    }
+
+    /// Register a node into the EC with id `ec` (agent check-in).
+    pub fn add_edge_node(
+        &mut self,
+        ec: &AceId,
+        name: &str,
+        kind: NodeKind,
+        labels: BTreeMap<String, String>,
+    ) -> AceId {
+        let cluster = self
+            .ecs
+            .iter_mut()
+            .find(|c| &c.id == ec)
+            .expect("unknown EC id");
+        let id = ec.child(name);
+        let caps = kind.default_resources();
+        cluster.nodes.push(Node {
+            id: id.clone(),
+            kind,
+            capacity: caps,
+            allocatable: caps,
+            labels,
+            status: NodeStatus::Ready,
+        });
+        id
+    }
+
+    pub fn add_cloud_node(
+        &mut self,
+        name: &str,
+        kind: NodeKind,
+        labels: BTreeMap<String, String>,
+    ) -> AceId {
+        let id = self.id.child("cc").child(name);
+        let caps = kind.default_resources();
+        self.cc_nodes.push(Node {
+            id: id.clone(),
+            kind,
+            capacity: caps,
+            allocatable: caps,
+            labels,
+            status: NodeStatus::Ready,
+        });
+        id
+    }
+
+    pub fn build(self) -> Infrastructure {
+        Infrastructure {
+            cc: Cluster {
+                id: self.id.child("cc"),
+                kind: ClusterKind::CentralCloud,
+                nodes: self.cc_nodes,
+            },
+            id: self.id,
+            ecs: self.ecs,
+        }
+    }
+}
+
+/// The paper's §5.1.1 testbed: 3 ECs x (1 mini PC + 3 RPis w/ cameras)
+/// + 1 CC GPU workstation.
+pub fn paper_testbed(user: &str) -> Infrastructure {
+    let mut b = InfraBuilder::register(user);
+    for _ in 0..3 {
+        let ec = b.claim_ec();
+        b.add_edge_node(&ec, "minipc", NodeKind::MiniPc, BTreeMap::new());
+        for r in 1..=3 {
+            let mut labels = BTreeMap::new();
+            labels.insert("camera".to_string(), "true".to_string());
+            b.add_edge_node(&ec, &format!("rpi{r}"), NodeKind::RaspberryPi, labels);
+        }
+    }
+    b.add_cloud_node("gpu-ws", NodeKind::GpuWorkstation, BTreeMap::new());
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let infra = paper_testbed("u1");
+        assert_eq!(infra.ecs.len(), 3);
+        assert_eq!(infra.cc.nodes.len(), 1);
+        for ec in &infra.ecs {
+            assert_eq!(ec.nodes.len(), 4);
+            assert_eq!(
+                ec.nodes.iter().filter(|n| n.has_label("camera", None)).count(),
+                3
+            );
+        }
+        assert_eq!(infra.all_nodes().count(), 13);
+    }
+
+    #[test]
+    fn three_layer_ids() {
+        let infra = paper_testbed("u1");
+        let (_, node) = infra.all_nodes().next().unwrap();
+        assert_eq!(node.id.depth(), 3);
+        assert!(infra.id.is_ancestor_of(&node.id));
+        let found = infra.find_node(&node.id).unwrap();
+        assert_eq!(found.id, node.id);
+    }
+
+    #[test]
+    fn resources_arithmetic() {
+        let mut r = Resources { cpu_millis: 1000, mem_mb: 512 };
+        let req = Resources { cpu_millis: 300, mem_mb: 128 };
+        assert!(r.fits(&req));
+        r.sub(&req);
+        assert_eq!(r.cpu_millis, 700);
+        r.add(&req);
+        assert_eq!(r.mem_mb, 512);
+        assert!(!Resources { cpu_millis: 100, mem_mb: 512 }.fits(&req));
+    }
+
+    #[test]
+    fn find_node_mut_updates_status() {
+        let mut infra = paper_testbed("u1");
+        let id = infra.ecs[0].nodes[1].id.clone();
+        infra.find_node_mut(&id).unwrap().status = NodeStatus::Failed;
+        assert_eq!(infra.find_node(&id).unwrap().status, NodeStatus::Failed);
+        assert!(!infra.find_node(&id).unwrap().schedulable());
+    }
+
+    #[test]
+    fn speed_factors_preserve_paper_asymmetry() {
+        // EOC on mini PC vs COC on GPU WS: edge must be slower than
+        // cloud per crop, like the paper's 44 ms vs 32.3 ms.
+        assert!(NodeKind::MiniPc.speed_factor() > NodeKind::GpuWorkstation.speed_factor());
+        assert!(NodeKind::RaspberryPi.speed_factor() > NodeKind::MiniPc.speed_factor());
+    }
+}

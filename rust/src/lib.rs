@@ -1,0 +1,25 @@
+//! ACE: Application-Centric Edge-Cloud Collaborative Intelligence.
+//!
+//! Full-system reproduction of the ACE platform (DOI 10.1145/3529087):
+//! a rust L3 coordinator (platform/resource/application layers + DES
+//! testbed simulation) executing AOT-compiled JAX/Pallas classifiers
+//! via the PJRT C API. See DESIGN.md for the module inventory and the
+//! experiment index.
+
+pub mod app;
+pub mod deploy;
+pub mod des;
+pub mod inapp;
+pub mod infra;
+pub mod json;
+pub mod metrics;
+pub mod platform;
+pub mod pubsub;
+pub mod runtime;
+pub mod simnet;
+pub mod storage;
+pub mod testbed;
+pub mod topology;
+pub mod util;
+pub mod video;
+pub mod yamlite;

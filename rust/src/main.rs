@@ -1,0 +1,273 @@
+//! `ace` — the platform CLI (the paper's §4.2.1 "User Interfaces").
+//!
+//! Subcommands:
+//!   ace info                       — artifacts + model summary
+//!   ace calibrate [--reps N]       — measure PJRT service times
+//!   ace classify --model eoc|coc --cls C --seed S
+//!                                  — render one synthetic crop and
+//!                                    classify it through the runtime
+//!   ace plan [--topology FILE]     — orchestrate a topology onto the
+//!                                    paper testbed, print the plan
+//!   ace fig5 [--fast] [--seconds N] [--out DIR]
+//!                                  — run the Figure 5 sweep
+//!   ace run --paradigm P [--interval I] [--delay D] [--seconds N]
+//!                                  — run one experiment cell
+//!
+//! clap is unavailable offline; argument parsing is a ~60-line hand
+//! rolled matcher (DESIGN.md §Substitutions).
+
+use ace::app::videoquery::{run_cell, CellConfig, Compute, InferCache, Paradigm, ServiceTimes};
+use ace::infra::paper_testbed;
+use ace::platform::orchestrator;
+use ace::runtime::{artifacts_dir, Engine, ModelBank};
+use ace::topology::{Topology, VIDEOQUERY_TOPOLOGY};
+use ace::video::synth;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = HashMap::new();
+    let mut key: Option<String> = None;
+    for a in args {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some(k) = key.take() {
+                flags.insert(k, "true".to_string()); // boolean flag
+            }
+            key = Some(stripped.to_string());
+        } else if let Some(k) = key.take() {
+            flags.insert(k, a);
+        }
+    }
+    if let Some(k) = key.take() {
+        flags.insert(k, "true".to_string());
+    }
+    Args { cmd, flags }
+}
+
+impl Args {
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn f64_or(&self, k: &str, d: f64) -> f64 {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+
+    fn usize_or(&self, k: &str, d: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = artifacts_dir()?;
+    let manifest = ace::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    println!("artifacts: {}", dir.display());
+    println!("crop {}x{} | frame {}x{} | classes {:?}",
+        manifest.crop, manifest.crop, manifest.frame_h, manifest.frame_w, manifest.classes);
+    println!("target class: {} ({})", manifest.target_class,
+        manifest.classes[manifest.target_class]);
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name}: {} params, batches {:?}, accuracy {:.4}",
+            m.params, m.batch_sizes, m.accuracy
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let mut bank = ModelBank::load(&engine, &artifacts_dir()?)?;
+    let reps = args.usize_or("reps", 5);
+    bank.calibrate(reps)?;
+    println!("| model | batch | total ms | ms/crop |");
+    println!("|---|---|---|---|");
+    for clf in [&bank.eoc, &bank.coc] {
+        for &b in &clf.batch_sizes {
+            let t = clf.service_time(b);
+            println!("| {} | {b} | {:.3} | {:.3} |", clf.name, t * 1e3, t * 1e3 / b as f64);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let cls: u8 = args
+        .get("cls")
+        .context("--cls <0..7> required")?
+        .parse()?;
+    let seed: u64 = args.f64_or("seed", 42.0) as u64;
+    let model = args.get("model").unwrap_or("coc");
+    let engine = Engine::cpu()?;
+    let bank = ModelBank::load(&engine, &artifacts_dir()?)?;
+    let crop = synth::make_crop(cls, seed);
+    let clf = if model == "eoc" { &bank.eoc } else { &bank.coc };
+    let probs = &clf.classify(std::slice::from_ref(&crop.data))?[0];
+    println!(
+        "rendered class {} ({}), seed {seed}",
+        cls, synth::CLASSES[cls as usize]
+    );
+    if model == "eoc" {
+        println!("eoc P[target present] = {:.4}", probs[1]);
+    } else {
+        for (i, p) in probs.iter().enumerate() {
+            println!("  {:>12}: {:.4}{}", synth::CLASSES[i], p,
+                if i == cls as usize { "  <- true" } else { "" });
+        }
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let topo = match args.get("topology") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            Topology::parse(&text)?
+        }
+        None => Topology::parse(VIDEOQUERY_TOPOLOGY)?,
+    };
+    let infra = paper_testbed("cli");
+    let plan = orchestrator::place(&topo, &infra)?;
+    println!("app '{}' v{}: {} instances", plan.app, plan.version, plan.instances.len());
+    for (node, instances) in plan.by_node() {
+        println!("  {node}:");
+        for i in instances {
+            println!("    {} ({})", i.id, i.image);
+        }
+    }
+    Ok(())
+}
+
+fn paradigm_of(s: &str) -> Result<Paradigm> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "ci" => Paradigm::Ci,
+        "ei" => Paradigm::Ei,
+        "ace" | "bp" => Paradigm::AceBp,
+        "ace+" | "ap" => Paradigm::AceAp,
+        other => bail!("unknown paradigm '{other}' (ci|ei|ace|ace+)"),
+    })
+}
+
+fn load_real() -> Result<(Rc<ModelBank>, ServiceTimes)> {
+    let engine = Engine::cpu()?;
+    let mut bank = ModelBank::load(&engine, &artifacts_dir()?)?;
+    bank.calibrate(3)?;
+    let svc = ServiceTimes::calibrated_to_paper(&bank);
+    Ok((Rc::new(bank), svc))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let paradigm = paradigm_of(args.get("paradigm").unwrap_or("ace"))?;
+    let cfg = CellConfig {
+        paradigm,
+        interval_s: args.f64_or("interval", 0.2),
+        wan_delay_ms: args.f64_or("delay", 0.0),
+        duration_s: args.f64_or("seconds", 30.0),
+        seed: args.f64_or("seed", 1.0) as u64,
+        ..Default::default()
+    };
+    let (bank, svc) = load_real()?;
+    let cache = Rc::new(RefCell::new(InferCache::new()));
+    let mut m = run_cell(cfg, svc, Compute::Real { bank, cache })?;
+    let eil = m.eil_ms();
+    let p99 = m.eil_p99_ms();
+    println!(
+        "{}: crops={} F1={:.3} (P {:.3} / R {:.3}) BWC={:.2}MB EIL mean {eil:.1}ms p99 {p99:.1}ms",
+        m.paradigm, m.crops, m.f1.f1(), m.f1.precision(), m.f1.recall(), m.bwc_mb()
+    );
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let intervals: Vec<f64> = if args.has("fast") {
+        vec![0.5, 0.2, 0.1]
+    } else {
+        vec![0.5, 0.33, 0.2, 0.14, 0.1]
+    };
+    let duration = args.f64_or("seconds", if args.has("fast") { 15.0 } else { 30.0 });
+    let (bank, svc) = load_real()?;
+    let cache = Rc::new(RefCell::new(InferCache::new()));
+    let mut cells = Vec::new();
+    for delay in [0.0, 50.0] {
+        for &interval in &intervals {
+            for paradigm in [Paradigm::Ci, Paradigm::Ei, Paradigm::AceBp, Paradigm::AceAp] {
+                let cfg = CellConfig {
+                    paradigm,
+                    interval_s: interval,
+                    wan_delay_ms: delay,
+                    duration_s: duration,
+                    ..Default::default()
+                };
+                let m = run_cell(
+                    cfg,
+                    svc.clone(),
+                    Compute::Real { bank: bank.clone(), cache: cache.clone() },
+                )?;
+                eprintln!(
+                    "[fig5] {} i={interval} d={delay}: F1={:.3} BWC={:.2}MB",
+                    m.paradigm, m.f1.f1(), m.bwc_mb()
+                );
+                cells.push(m);
+            }
+        }
+    }
+    let tables = ace::metrics::figure5_tables(&mut cells);
+    println!("{tables}");
+    if let Some(out) = args.get("out") {
+        std::fs::create_dir_all(out)?;
+        std::fs::write(format!("{out}/results_fig5.md"), &tables)?;
+        std::fs::write(
+            format!("{out}/results_fig5.csv"),
+            ace::metrics::figure5_csv(&mut cells),
+        )?;
+        println!("wrote {out}/results_fig5.{{md,csv}}");
+    }
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "ace — Application-Centric Edge-Cloud Collaborative Intelligence
+
+USAGE: ace <command> [flags]
+
+COMMANDS:
+  info         artifacts + model summary
+  calibrate    measure PJRT service times     [--reps N]
+  classify     classify a synthetic crop      --cls C [--seed S] [--model eoc|coc]
+  plan         orchestrate a topology         [--topology FILE]
+  run          one experiment cell            --paradigm ci|ei|ace|ace+
+               [--interval S] [--delay MS] [--seconds N] [--seed S]
+  fig5         the full Figure 5 sweep        [--fast] [--seconds N] [--out DIR]
+  help         this message"
+    );
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "info" => cmd_info(),
+        "calibrate" => cmd_calibrate(&args),
+        "classify" => cmd_classify(&args),
+        "plan" => cmd_plan(&args),
+        "run" => cmd_run(&args),
+        "fig5" => cmd_fig5(&args),
+        _ => {
+            help();
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Evaluation metrics (§5.2): F1-score, bandwidth consumption (BWC),
+//! end-to-end inference latency (EIL), and table emitters.
+//!
+//! F1 follows the paper's footnote 1: real-time streams are unlabelled,
+//! so ALL crops extracted by OD are classified by COC after the run and
+//! COC's predictions are the ground truth. Footnote 2: EIL is the time
+//! from a crop being transmitted by OD until its predicted label is
+//! produced by EOC or COC.
+
+use crate::util::stats::Percentiles;
+
+/// Binary confusion counts + F1.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct F1 {
+    pub tp: u64,
+    pub fp: u64,
+    pub fn_: u64,
+    pub tn: u64,
+}
+
+impl F1 {
+    pub fn add(&mut self, predicted: bool, actual: bool) {
+        match (predicted, actual) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, true) => self.fn_ += 1,
+            (false, false) => self.tn += 1,
+        }
+    }
+
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            return 1.0; // no positive predictions: vacuous precision
+        }
+        self.tp as f64 / (self.tp + self.fp) as f64
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            return 1.0; // no actual positives in the stream
+        }
+        self.tp as f64 / (self.tp + self.fn_) as f64
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tp + self.fp + self.fn_ + self.tn
+    }
+}
+
+/// One cell of Figure 5: a (paradigm, load, delay) run's metrics.
+#[derive(Debug, Clone)]
+pub struct CellMetrics {
+    pub paradigm: String,
+    /// OD sampling interval in seconds (lower = higher system load)
+    pub interval_s: f64,
+    pub wan_delay_ms: f64,
+    pub f1: F1,
+    pub eil: Percentiles,
+    /// WAN bytes (up + down)
+    pub bwc_bytes: u64,
+    pub crops: u64,
+    /// crops decided at the edge (EOC positives + drops)
+    pub edge_decided: u64,
+    /// crops classified by COC
+    pub cloud_decided: u64,
+    pub sim_duration_s: f64,
+}
+
+impl CellMetrics {
+    /// BWC in MB (the Figure 5 middle-row unit).
+    pub fn bwc_mb(&self) -> f64 {
+        self.bwc_bytes as f64 / 1e6
+    }
+
+    /// Mean EIL in ms (Figure 5 bottom row).
+    pub fn eil_ms(&mut self) -> f64 {
+        self.eil.mean() * 1e3
+    }
+
+    pub fn eil_p99_ms(&mut self) -> f64 {
+        self.eil.quantile(0.99) * 1e3
+    }
+}
+
+/// Render Figure-5-style markdown tables (one per metric x delay).
+pub fn figure5_tables(cells: &mut [CellMetrics]) -> String {
+    let mut out = String::new();
+    let mut delays: Vec<u64> = cells.iter().map(|c| c.wan_delay_ms as u64).collect();
+    delays.sort_unstable();
+    delays.dedup();
+    let mut intervals: Vec<String> = cells.iter().map(|c| format!("{:.2}", c.interval_s)).collect();
+    intervals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    intervals.dedup();
+    let mut paradigms: Vec<String> = cells.iter().map(|c| c.paradigm.clone()).collect();
+    paradigms.sort();
+    paradigms.dedup();
+    // keep the paper's order
+    let order = ["CI", "EI", "ACE", "ACE+"];
+    paradigms.sort_by_key(|p| order.iter().position(|o| o == p).unwrap_or(99));
+
+    for delay in &delays {
+        for (metric, label) in [
+            ("f1", "F1-score"),
+            ("bwc", "BWC (MB)"),
+            ("eil", "mean EIL (ms)"),
+        ] {
+            out.push_str(&format!(
+                "\n### {label} — WAN one-way delay {delay} ms\n\n| interval (s) |"
+            ));
+            for p in &paradigms {
+                out.push_str(&format!(" {p} |"));
+            }
+            out.push_str("\n|---|");
+            for _ in &paradigms {
+                out.push_str("---|");
+            }
+            out.push('\n');
+            for iv in &intervals {
+                out.push_str(&format!("| {iv} |"));
+                for p in &paradigms {
+                    let cell = cells.iter_mut().find(|c| {
+                        c.paradigm == *p
+                            && format!("{:.2}", c.interval_s) == *iv
+                            && c.wan_delay_ms as u64 == *delay
+                    });
+                    match cell {
+                        Some(c) => {
+                            let v = match metric {
+                                "f1" => format!("{:.3}", c.f1.f1()),
+                                "bwc" => format!("{:.2}", c.bwc_mb()),
+                                _ => format!("{:.1}", c.eil_ms()),
+                            };
+                            out.push_str(&format!(" {v} |"));
+                        }
+                        None => out.push_str(" - |"),
+                    }
+                }
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+/// CSV dump (one row per cell) for external plotting.
+pub fn figure5_csv(cells: &mut [CellMetrics]) -> String {
+    let mut out = String::from(
+        "paradigm,interval_s,wan_delay_ms,f1,precision,recall,bwc_mb,eil_mean_ms,eil_p50_ms,eil_p99_ms,crops,edge_decided,cloud_decided\n",
+    );
+    for c in cells.iter_mut() {
+        out.push_str(&format!(
+            "{},{},{},{:.4},{:.4},{:.4},{:.3},{:.2},{:.2},{:.2},{},{},{}\n",
+            c.paradigm,
+            c.interval_s,
+            c.wan_delay_ms,
+            c.f1.f1(),
+            c.f1.precision(),
+            c.f1.recall(),
+            c.bwc_mb(),
+            c.eil.mean() * 1e3,
+            c.eil.quantile(0.5) * 1e3,
+            c.eil.quantile(0.99) * 1e3,
+            c.crops,
+            c.edge_decided,
+            c.cloud_decided,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f1_known_values() {
+        let mut f = F1::default();
+        // 8 TP, 2 FP, 4 FN, 6 TN
+        for _ in 0..8 {
+            f.add(true, true);
+        }
+        for _ in 0..2 {
+            f.add(true, false);
+        }
+        for _ in 0..4 {
+            f.add(false, true);
+        }
+        for _ in 0..6 {
+            f.add(false, false);
+        }
+        assert!((f.precision() - 0.8).abs() < 1e-12);
+        assert!((f.recall() - 8.0 / 12.0).abs() < 1e-12);
+        let want = 2.0 * 0.8 * (8.0 / 12.0) / (0.8 + 8.0 / 12.0);
+        assert!((f.f1() - want).abs() < 1e-12);
+        assert_eq!(f.total(), 20);
+    }
+
+    #[test]
+    fn perfect_predictor_is_one() {
+        let mut f = F1::default();
+        for _ in 0..5 {
+            f.add(true, true);
+            f.add(false, false);
+        }
+        assert_eq!(f.f1(), 1.0);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        // never predicts positive, but positives exist -> recall 0, f1 0
+        let mut f = F1::default();
+        f.add(false, true);
+        assert_eq!(f.f1(), 0.0);
+        // empty stream -> f1 defined as 1 (vacuous)
+        let g = F1::default();
+        assert_eq!(g.f1(), 1.0);
+    }
+
+    fn cell(p: &str, iv: f64, d: f64) -> CellMetrics {
+        let mut eil = Percentiles::new();
+        eil.add(0.04);
+        eil.add(0.06);
+        let mut f1 = F1::default();
+        f1.add(true, true);
+        CellMetrics {
+            paradigm: p.into(),
+            interval_s: iv,
+            wan_delay_ms: d,
+            f1,
+            eil,
+            bwc_bytes: 2_000_000,
+            crops: 1,
+            edge_decided: 0,
+            cloud_decided: 1,
+            sim_duration_s: 30.0,
+        }
+    }
+
+    #[test]
+    fn tables_have_all_paradigms() {
+        let mut cells = vec![
+            cell("CI", 0.5, 0.0),
+            cell("EI", 0.5, 0.0),
+            cell("ACE", 0.5, 0.0),
+            cell("ACE+", 0.5, 0.0),
+        ];
+        let t = figure5_tables(&mut cells);
+        assert!(t.contains("| CI | EI | ACE | ACE+ |"), "{t}");
+        assert!(t.contains("F1-score"));
+        assert!(t.contains("BWC"));
+        assert!(t.contains("EIL"));
+        let csv = figure5_csv(&mut cells);
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.contains("ACE+,0.5,0"));
+    }
+
+    #[test]
+    fn bwc_units() {
+        let c = cell("CI", 0.5, 0.0);
+        assert!((c.bwc_mb() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,187 @@
+//! API server (§4.2.1): uniform CRUD over ACE entities.
+//!
+//! "Provides uniform APIs for querying and manipulating the status of
+//! ACE entities (users, nodes, applications) to other platform manager
+//! components (orchestrator, controller)." Entities are stored as
+//! `json::Value` documents under (kind, id) with optimistic-concurrency
+//! revisions; a monotonically increasing store revision supports cheap
+//! change detection (the dashboard/CLI poll it).
+
+use crate::json::Value;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entity {
+    pub kind: String,
+    pub id: String,
+    pub revision: u64,
+    pub doc: Value,
+}
+
+#[derive(Default)]
+struct Inner {
+    entities: BTreeMap<(String, String), Entity>,
+    revision: u64,
+}
+
+/// Thread-safe entity store.
+#[derive(Clone, Default)]
+pub struct ApiServer {
+    inner: Arc<Mutex<Inner>>,
+}
+
+#[derive(Debug, PartialEq)]
+pub enum ApiError {
+    NotFound,
+    Conflict { have: u64 },
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApiError::NotFound => write!(f, "entity not found"),
+            ApiError::Conflict { have } => write!(f, "revision conflict (have {have})"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl ApiServer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create or replace unconditionally. Returns the new revision.
+    pub fn put(&self, kind: &str, id: &str, doc: Value) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.revision += 1;
+        let rev = inner.revision;
+        inner.entities.insert(
+            (kind.to_string(), id.to_string()),
+            Entity { kind: kind.to_string(), id: id.to_string(), revision: rev, doc },
+        );
+        rev
+    }
+
+    /// Compare-and-swap update: succeeds only if the entity's current
+    /// revision equals `expect`.
+    pub fn cas(&self, kind: &str, id: &str, expect: u64, doc: Value) -> Result<u64, ApiError> {
+        let mut inner = self.inner.lock().unwrap();
+        let key = (kind.to_string(), id.to_string());
+        match inner.entities.get(&key) {
+            None => Err(ApiError::NotFound),
+            Some(e) if e.revision != expect => Err(ApiError::Conflict { have: e.revision }),
+            Some(_) => {
+                inner.revision += 1;
+                let rev = inner.revision;
+                inner.entities.insert(
+                    key,
+                    Entity { kind: kind.to_string(), id: id.to_string(), revision: rev, doc },
+                );
+                Ok(rev)
+            }
+        }
+    }
+
+    pub fn get(&self, kind: &str, id: &str) -> Option<Entity> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entities
+            .get(&(kind.to_string(), id.to_string()))
+            .cloned()
+    }
+
+    pub fn delete(&self, kind: &str, id: &str) -> Result<(), ApiError> {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .entities
+            .remove(&(kind.to_string(), id.to_string()))
+            .map(|_| {
+                inner.revision += 1;
+            })
+            .ok_or(ApiError::NotFound)
+    }
+
+    /// All entities of a kind, ordered by id.
+    pub fn list(&self, kind: &str) -> Vec<Entity> {
+        self.inner
+            .lock()
+            .unwrap()
+            .entities
+            .range((kind.to_string(), String::new())..)
+            .take_while(|((k, _), _)| k == kind)
+            .map(|(_, e)| e.clone())
+            .collect()
+    }
+
+    /// Global store revision (bumps on every mutation).
+    pub fn revision(&self) -> u64 {
+        self.inner.lock().unwrap().revision
+    }
+}
+
+/// Entity kind names used across the platform.
+pub mod kinds {
+    pub const USER: &str = "user";
+    pub const INFRA: &str = "infrastructure";
+    pub const TOPOLOGY: &str = "topology";
+    pub const PLAN: &str = "plan";
+    pub const NODE_STATUS: &str = "node-status";
+    pub const APP: &str = "application";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crud_lifecycle() {
+        let api = ApiServer::new();
+        let rev = api.put(kinds::USER, "u1", Value::obj(vec![("name", Value::str("alice"))]));
+        let e = api.get(kinds::USER, "u1").unwrap();
+        assert_eq!(e.revision, rev);
+        assert_eq!(e.doc.get("name").as_str(), Some("alice"));
+        assert!(api.delete(kinds::USER, "u1").is_ok());
+        assert!(api.get(kinds::USER, "u1").is_none());
+        assert_eq!(api.delete(kinds::USER, "u1"), Err(ApiError::NotFound));
+    }
+
+    #[test]
+    fn cas_enforces_revisions() {
+        let api = ApiServer::new();
+        let rev = api.put("t", "x", Value::num(1));
+        assert!(api.cas("t", "x", rev, Value::num(2)).is_ok());
+        // stale revision rejected
+        assert!(matches!(
+            api.cas("t", "x", rev, Value::num(3)),
+            Err(ApiError::Conflict { .. })
+        ));
+        assert_eq!(api.get("t", "x").unwrap().doc.as_f64(), Some(2.0));
+        assert_eq!(api.cas("t", "ghost", 1, Value::Null), Err(ApiError::NotFound));
+    }
+
+    #[test]
+    fn list_is_kind_scoped_and_ordered() {
+        let api = ApiServer::new();
+        api.put("a", "2", Value::Null);
+        api.put("a", "1", Value::Null);
+        api.put("b", "0", Value::Null);
+        let ids: Vec<String> = api.list("a").into_iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec!["1", "2"]);
+        assert_eq!(api.list("b").len(), 1);
+        assert_eq!(api.list("zz").len(), 0);
+    }
+
+    #[test]
+    fn revision_increases_monotonically() {
+        let api = ApiServer::new();
+        let r1 = api.put("k", "1", Value::Null);
+        let r2 = api.put("k", "2", Value::Null);
+        assert!(r2 > r1);
+        api.delete("k", "1").unwrap();
+        assert!(api.revision() > r2);
+    }
+}

@@ -1,0 +1,357 @@
+//! Platform controller (§4.2.1, Figure 4 step ②).
+//!
+//! Transforms deployment plans into per-node compose-style instructions
+//! and publishes them on the message service for node agents; manages
+//! application lifecycle (deploy / thorough update / incremental update
+//! / remove) and shields failed nodes based on monitoring heartbeats.
+
+use crate::deploy::{diff_plans, DeploymentPlan};
+use crate::infra::agent::{compose_instruction, deploy_topic};
+use crate::infra::Infrastructure;
+use crate::json::{self, Value};
+use crate::platform::api::{kinds, ApiServer};
+use crate::platform::orchestrator;
+use crate::pubsub::Broker;
+use crate::topology::Topology;
+use crate::util::AceId;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+/// The controller talks to node agents through per-cluster brokers
+/// (each EC + the CC runs its own message service; the platform reaches
+/// them over the bridged links).
+pub struct Controller {
+    pub api: ApiServer,
+    /// cluster leaf ("ec-1", "cc") -> broker handle
+    brokers: BTreeMap<String, Broker>,
+}
+
+fn plan_to_value(plan: &DeploymentPlan) -> Value {
+    Value::obj(vec![
+        ("app", Value::str(&plan.app)),
+        ("version", Value::num(plan.version as f64)),
+        (
+            "instances",
+            Value::Arr(
+                plan.instances
+                    .iter()
+                    .map(|i| {
+                        Value::obj(vec![
+                            ("id", Value::str(&i.id)),
+                            ("component", Value::str(&i.component)),
+                            ("node", Value::str(i.node.to_string())),
+                            ("image", Value::str(&i.image)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn plan_from_value(v: &Value) -> Result<DeploymentPlan> {
+    let instances = v
+        .get("instances")
+        .as_arr()
+        .context("plan: instances")?
+        .iter()
+        .map(|i| {
+            Ok(crate::deploy::Instance {
+                id: i.get("id").as_str().context("id")?.to_string(),
+                component: i.get("component").as_str().context("component")?.to_string(),
+                node: AceId::parse(i.get("node").as_str().context("node")?),
+                image: i.get("image").as_str().context("image")?.to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(DeploymentPlan {
+        app: v.get("app").as_str().context("app")?.to_string(),
+        version: v.get("version").as_i64().unwrap_or(1) as u64,
+        instances,
+    })
+}
+
+impl Controller {
+    pub fn new(api: ApiServer, brokers: BTreeMap<String, Broker>) -> Self {
+        Controller { api, brokers }
+    }
+
+    fn broker_for(&self, node: &AceId) -> Result<&Broker> {
+        let cluster = node.parent().ok_or_else(|| anyhow!("node id too shallow"))?;
+        self.brokers
+            .get(cluster.leaf())
+            .ok_or_else(|| anyhow!("no broker for cluster '{}'", cluster.leaf()))
+    }
+
+    /// Send the current full instruction set for `node` given all
+    /// stored plans (agents converge to the instruction).
+    fn sync_node(&self, node: &AceId) -> Result<()> {
+        // gather every instance of every app bound to this node
+        let mut services: Vec<(String, String, String)> = Vec::new();
+        let mut app_names: Vec<String> = Vec::new();
+        for e in self.api.list(kinds::PLAN) {
+            let plan = plan_from_value(&e.doc)?;
+            for inst in &plan.instances {
+                if &inst.node == node {
+                    services.push((inst.id.clone(), inst.component.clone(), inst.image.clone()));
+                    app_names.push(plan.app.clone());
+                }
+            }
+        }
+        let app_label = app_names.first().cloned().unwrap_or_default();
+        let doc = compose_instruction(&app_label, &services);
+        let broker = self.broker_for(node)?;
+        broker
+            .publish(&deploy_topic(node), doc.into_bytes())
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(())
+    }
+
+    /// Deploy an application: orchestrate, persist topology + plan,
+    /// push instructions to every bound node. Returns the plan.
+    pub fn deploy(&self, topo: &Topology, infra: &Infrastructure) -> Result<DeploymentPlan> {
+        let plan = orchestrator::place(topo, infra)?;
+        self.api.put(
+            kinds::TOPOLOGY,
+            &topo.app,
+            crate::json::parse(&format!("{{\"version\": {}}}", topo.version)).unwrap(),
+        );
+        self.api.put(kinds::PLAN, &plan.app, plan_to_value(&plan));
+        self.api.put(
+            kinds::APP,
+            &plan.app,
+            Value::obj(vec![
+                ("state", Value::str("deployed")),
+                ("version", Value::num(plan.version as f64)),
+            ]),
+        );
+        for node in plan.nodes() {
+            self.sync_node(&node)?;
+        }
+        Ok(plan)
+    }
+
+    /// Incremental update (§4.4.3): only nodes whose instance set
+    /// changed receive a new instruction. Returns (plan, touched-node
+    /// count).
+    pub fn update_incremental(
+        &self,
+        topo: &Topology,
+        infra: &Infrastructure,
+    ) -> Result<(DeploymentPlan, usize)> {
+        let old = self
+            .api
+            .get(kinds::PLAN, &topo.app)
+            .ok_or_else(|| anyhow!("app '{}' not deployed", topo.app))?;
+        let old_plan = plan_from_value(&old.doc)?;
+        let new_plan = orchestrator::place(topo, infra)?;
+        let diff = diff_plans(&old_plan, &new_plan);
+        self.api.put(kinds::PLAN, &new_plan.app, plan_to_value(&new_plan));
+        self.api.put(
+            kinds::APP,
+            &new_plan.app,
+            Value::obj(vec![
+                ("state", Value::str("deployed")),
+                ("version", Value::num(new_plan.version as f64)),
+            ]),
+        );
+        let touched = diff.touched_nodes();
+        for node in &touched {
+            self.sync_node(node)?;
+        }
+        Ok((new_plan, touched.len()))
+    }
+
+    /// Thorough update (§4.4.3): delete + full redeploy.
+    pub fn update_thorough(
+        &self,
+        topo: &Topology,
+        infra: &Infrastructure,
+    ) -> Result<DeploymentPlan> {
+        let _ = self.remove(&topo.app);
+        self.deploy(topo, infra)
+    }
+
+    /// Remove an application: clear its plan and re-sync every node it
+    /// touched (agents converge to instance removal).
+    pub fn remove(&self, app: &str) -> Result<()> {
+        let plan_e = self
+            .api
+            .get(kinds::PLAN, app)
+            .ok_or_else(|| anyhow!("app '{app}' not deployed"))?;
+        let plan = plan_from_value(&plan_e.doc)?;
+        self.api.delete(kinds::PLAN, app).map_err(|e| anyhow!("{e}"))?;
+        let _ = self.api.delete(kinds::APP, app);
+        let _ = self.api.delete(kinds::TOPOLOGY, app);
+        for node in plan.nodes() {
+            self.sync_node(&node)?;
+        }
+        Ok(())
+    }
+
+    /// Shield nodes whose last heartbeat is older than `cutoff_unix_ms`
+    /// (monitoring writes `node-status` entities). Marks them Failed in
+    /// `infra`; returns shielded ids (§4.2.1 "shields failed nodes").
+    pub fn shield_failed(
+        &self,
+        infra: &mut Infrastructure,
+        cutoff_unix_ms: u64,
+    ) -> Vec<AceId> {
+        let mut shielded = Vec::new();
+        let node_ids: Vec<AceId> =
+            infra.all_nodes().map(|(_, n)| n.id.clone()).collect();
+        for id in node_ids {
+            let key = id.to_string().replace('/', ".");
+            let stale = match self.api.get(kinds::NODE_STATUS, &key) {
+                Some(e) => {
+                    (e.doc.get("last_seen_ms").as_f64().unwrap_or(0.0) as u64) < cutoff_unix_ms
+                }
+                None => true,
+            };
+            if stale {
+                if let Some(n) = infra.find_node_mut(&id) {
+                    if n.status == crate::infra::NodeStatus::Ready {
+                        n.status = crate::infra::NodeStatus::Failed;
+                        shielded.push(id);
+                    }
+                }
+            }
+        }
+        shielded
+    }
+
+    /// Stored plan for an app (if deployed).
+    pub fn plan(&self, app: &str) -> Option<DeploymentPlan> {
+        self.api
+            .get(kinds::PLAN, app)
+            .and_then(|e| plan_from_value(&e.doc).ok())
+    }
+}
+
+/// Record a heartbeat (normally done by the monitoring service).
+pub fn record_heartbeat(api: &ApiServer, node: &AceId, unix_ms: u64, doc: Value) {
+    let key = node.to_string().replace('/', ".");
+    let mut obj = match doc {
+        Value::Obj(o) => o,
+        _ => Default::default(),
+    };
+    obj.insert("last_seen_ms".to_string(), Value::num(unix_ms as f64));
+    api.put(kinds::NODE_STATUS, &key, Value::Obj(obj));
+}
+
+#[allow(unused)]
+fn unused(_: &json::Value) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infra::agent::{status_topic, Agent};
+    use crate::infra::paper_testbed;
+    use crate::topology::VIDEOQUERY_TOPOLOGY;
+    use std::time::Duration;
+
+    fn brokers_for(infra: &Infrastructure) -> BTreeMap<String, Broker> {
+        infra
+            .clusters()
+            .map(|c| (c.id.leaf().to_string(), Broker::new(c.id.leaf())))
+            .collect()
+    }
+
+    fn wait_for<F: Fn() -> bool>(f: F) {
+        for _ in 0..300 {
+            if f() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("condition not reached");
+    }
+
+    #[test]
+    fn deploy_reaches_agents() {
+        let infra = paper_testbed("u1");
+        let brokers = brokers_for(&infra);
+        let ctl = Controller::new(ApiServer::new(), brokers.clone());
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+
+        // start agents on one EC's camera node and the CC node
+        let cam = infra.ecs[0].nodes[1].id.clone();
+        let cc = infra.cc.nodes[0].id.clone();
+        let a1 = Agent::start(cam.clone(), brokers["ec-1"].clone()).unwrap();
+        let a2 = Agent::start(cc.clone(), brokers["cc"].clone()).unwrap();
+
+        let plan = ctl.deploy(&topo, &infra).unwrap();
+        assert_eq!(plan.instances_of("od").len(), 9);
+
+        wait_for(|| a1.running().iter().any(|r| r.component == "od"));
+        wait_for(|| a2.running().iter().any(|r| r.component == "coc"));
+        assert!(a1.running().iter().any(|r| r.component == "dg"));
+        assert_eq!(
+            a2.running().len(),
+            3, // coc + ic + rs all bind to the single CC node
+        );
+    }
+
+    #[test]
+    fn incremental_update_touches_minimal_nodes() {
+        let infra = paper_testbed("u1");
+        let ctl = Controller::new(ApiServer::new(), brokers_for(&infra));
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        ctl.deploy(&topo, &infra).unwrap();
+
+        // bump only od's image
+        let mut topo2 = topo.clone();
+        topo2.version = 2;
+        for c in &mut topo2.components {
+            if c.name == "od" {
+                c.image = "ace/object-detector:2".into();
+            }
+        }
+        let (_plan, touched) = ctl.update_incremental(&topo2, &infra).unwrap();
+        assert_eq!(touched, 9); // only the 9 camera nodes
+    }
+
+    #[test]
+    fn remove_clears_plan_and_instructions() {
+        let infra = paper_testbed("u1");
+        let brokers = brokers_for(&infra);
+        let ctl = Controller::new(ApiServer::new(), brokers.clone());
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        let cam = infra.ecs[0].nodes[1].id.clone();
+        let agent = Agent::start(cam.clone(), brokers["ec-1"].clone()).unwrap();
+        ctl.deploy(&topo, &infra).unwrap();
+        wait_for(|| !agent.running().is_empty());
+        ctl.remove("videoquery").unwrap();
+        wait_for(|| agent.running().is_empty());
+        assert!(ctl.plan("videoquery").is_none());
+        assert!(ctl.remove("videoquery").is_err());
+    }
+
+    #[test]
+    fn shield_failed_marks_stale_nodes() {
+        let mut infra = paper_testbed("u1");
+        let ctl = Controller::new(ApiServer::new(), brokers_for(&infra));
+        // heartbeat only the CC node at t=1000
+        let cc = infra.cc.nodes[0].id.clone();
+        record_heartbeat(&ctl.api, &cc, 1000, Value::obj(vec![]));
+        let shielded = ctl.shield_failed(&mut infra, 500);
+        // all 12 edge nodes never heartbeated -> shielded; CC survives
+        assert_eq!(shielded.len(), 12);
+        assert!(infra.find_node(&cc).unwrap().schedulable());
+    }
+
+    #[test]
+    fn agent_status_flows_back() {
+        let infra = paper_testbed("u1");
+        let brokers = brokers_for(&infra);
+        let ctl = Controller::new(ApiServer::new(), brokers.clone());
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        let cam = infra.ecs[0].nodes[1].id.clone();
+        let sub = brokers["ec-1"].subscribe(&status_topic(&cam)).unwrap();
+        let _agent = Agent::start(cam.clone(), brokers["ec-1"].clone()).unwrap();
+        ctl.deploy(&topo, &infra).unwrap();
+        let status = sub.rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        let v = crate::json::parse(&status.utf8()).unwrap();
+        assert!(v.get("instances").as_arr().unwrap().len() >= 1);
+    }
+}

@@ -1,0 +1,12 @@
+//! Platform layer (§4.2): controller, orchestrator, API server,
+//! monitoring service. (The Pub/Sub service itself lives in `pubsub`;
+//! user interfaces are the CLI in `main.rs`.)
+
+pub mod api;
+pub mod controller;
+pub mod monitor;
+pub mod orchestrator;
+
+pub use api::{ApiServer, Entity};
+pub use controller::Controller;
+pub use monitor::Monitor;

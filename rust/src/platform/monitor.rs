@@ -1,0 +1,196 @@
+//! Monitoring service (§4.2.1): collects status, performance metrics,
+//! and runtime logs of nodes + application components.
+//!
+//! Subscribes `ace/status/#` on every cluster broker; each report is
+//! folded into the API server as a `node-status` entity (with a
+//! `last_seen_ms` stamp the controller's failure shielding reads) and
+//! into in-memory metric counters queryable by the CLI/dashboard.
+
+use crate::json::{self, Value};
+use crate::platform::api::{kinds, ApiServer};
+use crate::pubsub::Broker;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+fn unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ComponentHealth {
+    pub running: usize,
+    pub nodes: Vec<String>,
+}
+
+pub struct Monitor {
+    api: ApiServer,
+    reports: Arc<AtomicU64>,
+    components: Arc<Mutex<BTreeMap<String, ComponentHealth>>>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Monitor {
+    /// Start collection threads, one per cluster broker.
+    pub fn start(api: ApiServer, brokers: &BTreeMap<String, Broker>) -> Result<Monitor, String> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let reports = Arc::new(AtomicU64::new(0));
+        let components: Arc<Mutex<BTreeMap<String, ComponentHealth>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
+        let mut threads = Vec::new();
+        for broker in brokers.values() {
+            let sub = broker.subscribe("ace/status/#")?;
+            let api = api.clone();
+            let stop = stop.clone();
+            let reports = reports.clone();
+            let components = components.clone();
+            threads.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match sub.rx.recv_timeout(std::time::Duration::from_millis(20)) {
+                        Ok(msg) => {
+                            if let Ok(v) = json::parse(&msg.utf8()) {
+                                Self::ingest(&api, &components, &v);
+                                reports.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            }));
+        }
+        Ok(Monitor { api, reports, components, stop, threads })
+    }
+
+    fn ingest(
+        api: &ApiServer,
+        components: &Arc<Mutex<BTreeMap<String, ComponentHealth>>>,
+        v: &Value,
+    ) {
+        let node = v.get("node").as_str().unwrap_or("?").to_string();
+        let key = node.replace('/', ".");
+        let mut doc = match v.clone() {
+            Value::Obj(o) => o,
+            _ => return,
+        };
+        doc.insert("last_seen_ms".to_string(), Value::num(unix_ms() as f64));
+        api.put(kinds::NODE_STATUS, &key, Value::Obj(doc));
+        // fold per-component health
+        let mut comp = components.lock().unwrap();
+        // remove this node from all entries, then re-add from the report
+        for h in comp.values_mut() {
+            h.nodes.retain(|n| n != &node);
+            h.running = h.nodes.len();
+        }
+        if let Some(instances) = v.get("instances").as_arr() {
+            for inst in instances {
+                if let Some(c) = inst.get("component").as_str() {
+                    let h = comp.entry(c.to_string()).or_default();
+                    h.nodes.push(node.clone());
+                    h.running = h.nodes.len();
+                }
+            }
+        }
+        comp.retain(|_, h| h.running > 0);
+    }
+
+    /// Total status reports ingested.
+    pub fn reports(&self) -> u64 {
+        self.reports.load(Ordering::Relaxed)
+    }
+
+    /// Health snapshot per component.
+    pub fn component_health(&self) -> BTreeMap<String, ComponentHealth> {
+        self.components.lock().unwrap().clone()
+    }
+
+    /// Node-status entities currently known (from the API server).
+    pub fn node_statuses(&self) -> Vec<(String, Value)> {
+        self.api
+            .list(kinds::NODE_STATUS)
+            .into_iter()
+            .map(|e| (e.id, e.doc))
+            .collect()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infra::agent::{compose_instruction, deploy_topic, Agent};
+    use crate::util::AceId;
+    use std::time::Duration;
+
+    fn wait_for<F: Fn() -> bool>(f: F) {
+        for _ in 0..300 {
+            if f() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("condition not reached");
+    }
+
+    #[test]
+    fn monitor_ingests_agent_reports() {
+        let broker = Broker::new("ec-1");
+        let mut brokers = BTreeMap::new();
+        brokers.insert("ec-1".to_string(), broker.clone());
+        let api = ApiServer::new();
+        let monitor = Monitor::start(api.clone(), &brokers).unwrap();
+
+        let node = AceId::parse("infra-1/ec-1/rpi1");
+        let _agent = Agent::start(node.clone(), broker.clone()).unwrap();
+        let doc = compose_instruction("vq", &[("od-1".into(), "od".into(), "img".into())]);
+        broker.publish(&deploy_topic(&node), doc.into_bytes()).unwrap();
+
+        wait_for(|| monitor.reports() >= 1);
+        wait_for(|| monitor.component_health().contains_key("od"));
+        let health = monitor.component_health();
+        assert_eq!(health["od"].running, 1);
+        assert_eq!(health["od"].nodes, vec!["infra-1/ec-1/rpi1".to_string()]);
+
+        // node-status entity exists with a heartbeat stamp
+        let statuses = monitor.node_statuses();
+        assert_eq!(statuses.len(), 1);
+        assert!(statuses[0].1.get("last_seen_ms").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn component_health_updates_on_removal() {
+        let broker = Broker::new("ec-1");
+        let mut brokers = BTreeMap::new();
+        brokers.insert("ec-1".to_string(), broker.clone());
+        let monitor = Monitor::start(ApiServer::new(), &brokers).unwrap();
+        let node = AceId::parse("infra-1/ec-1/rpi2");
+        let _agent = Agent::start(node.clone(), broker.clone()).unwrap();
+        let d1 = compose_instruction("vq", &[("x-1".into(), "x".into(), "i".into())]);
+        broker.publish(&deploy_topic(&node), d1.into_bytes()).unwrap();
+        wait_for(|| monitor.component_health().contains_key("x"));
+        let d2 = compose_instruction("vq", &[]);
+        broker.publish(&deploy_topic(&node), d2.into_bytes()).unwrap();
+        wait_for(|| !monitor.component_health().contains_key("x"));
+    }
+}

@@ -1,0 +1,276 @@
+//! Platform-layer orchestrator (§4.2.1, §4.4.3, Figure 4 step ①).
+//!
+//! Binds every component of a topology to concrete nodes such that all
+//! resource (cpu/mem) and user (edge/cloud location, node labels)
+//! requirements hold. Placement:
+//!
+//!   * filter: schedulable + location + label + resources fit;
+//!   * score: spread — pick the candidate with the most free CPU after
+//!     allocation (keeps ECs balanced, mirrors the paper's goal of not
+//!     hand-mapping components to nodes);
+//!   * `per-label` pins one instance on EVERY matching node, `per-ec`
+//!     one per EC, `replicas(n)` the n best nodes.
+//!
+//! Resources are deducted on a scratch copy as instances are placed, so
+//! co-located components contend for the same capacity (Principle
+//! Three: multiple applications can share an infrastructure — call
+//! `place_onto` with the live infrastructure to persist allocations).
+
+use crate::deploy::{DeploymentPlan, Instance};
+use crate::infra::{Cluster, ClusterKind, Infrastructure, Node};
+use crate::topology::{ComponentSpec, Location, Placement, Topology};
+use anyhow::{bail, Result};
+
+fn label_matches(node: &Node, label: &Option<String>) -> bool {
+    match label {
+        None => true,
+        Some(l) => match l.split_once('=') {
+            Some((k, v)) => node.has_label(k, Some(v)),
+            None => node.has_label(l, None),
+        },
+    }
+}
+
+fn location_matches(cluster: &Cluster, loc: Location) -> bool {
+    match loc {
+        Location::Any => true,
+        Location::Edge => cluster.kind == ClusterKind::EdgeCloud,
+        Location::Cloud => cluster.kind == ClusterKind::CentralCloud,
+    }
+}
+
+fn instance_id(component: &str, node: &crate::util::AceId) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    let s = node.to_string();
+    for p in s.split('/').skip(1) {
+        parts.push(p);
+    }
+    format!("{component}-{}", parts.join("-"))
+}
+
+/// Orchestrate `topo` onto (a scratch copy of) `infra`.
+pub fn place(topo: &Topology, infra: &Infrastructure) -> Result<DeploymentPlan> {
+    let mut scratch = infra.clone();
+    place_onto(topo, &mut scratch)
+}
+
+/// Orchestrate and DEDUCT allocations from `infra` (persistent form,
+/// used when several applications share the infrastructure).
+pub fn place_onto(topo: &Topology, infra: &mut Infrastructure) -> Result<DeploymentPlan> {
+    let mut instances = Vec::new();
+    for comp in &topo.components {
+        let placed = place_component(comp, infra)?;
+        instances.extend(placed);
+    }
+    Ok(DeploymentPlan { app: topo.app.clone(), version: topo.version, instances })
+}
+
+fn candidates<'a>(
+    comp: &ComponentSpec,
+    infra: &'a Infrastructure,
+) -> Vec<(&'a Cluster, &'a Node)> {
+    infra
+        .clusters()
+        .filter(|c| location_matches(c, comp.location))
+        .flat_map(|c| c.nodes.iter().map(move |n| (c, n)))
+        .filter(|(_, n)| n.schedulable())
+        .filter(|(_, n)| label_matches(n, &comp.label))
+        .filter(|(_, n)| n.allocatable.fits(&comp.resources))
+        .collect()
+}
+
+fn commit(infra: &mut Infrastructure, comp: &ComponentSpec, node_id: &crate::util::AceId) -> Instance {
+    let node = infra.find_node_mut(node_id).expect("placed node exists");
+    node.allocatable.sub(&comp.resources);
+    Instance {
+        id: instance_id(&comp.name, node_id),
+        component: comp.name.clone(),
+        node: node_id.clone(),
+        image: comp.image.clone(),
+    }
+}
+
+fn place_component(comp: &ComponentSpec, infra: &mut Infrastructure) -> Result<Vec<Instance>> {
+    match &comp.placement {
+        Placement::PerLabel => {
+            let ids: Vec<_> = candidates(comp, infra)
+                .into_iter()
+                .map(|(_, n)| n.id.clone())
+                .collect();
+            if ids.is_empty() {
+                bail!(
+                    "component '{}': no node matches label {:?} with {:?} free",
+                    comp.name,
+                    comp.label,
+                    comp.resources
+                );
+            }
+            Ok(ids.iter().map(|id| commit(infra, comp, id)).collect())
+        }
+        Placement::PerEc => {
+            // best (most free cpu) node in each EC
+            let mut picks = Vec::new();
+            let ec_leafs: Vec<String> =
+                infra.ecs.iter().map(|c| c.id.leaf().to_string()).collect();
+            for leaf in ec_leafs {
+                let best = candidates(comp, infra)
+                    .into_iter()
+                    .filter(|(c, _)| c.id.leaf() == leaf)
+                    .max_by_key(|(_, n)| n.allocatable.cpu_millis)
+                    .map(|(_, n)| n.id.clone());
+                match best {
+                    Some(id) => picks.push(commit(infra, comp, &id)),
+                    None => bail!(
+                        "component '{}': EC '{leaf}' has no feasible node (need {:?})",
+                        comp.name,
+                        comp.resources
+                    ),
+                }
+            }
+            Ok(picks)
+        }
+        Placement::Replicas(n) => {
+            let mut placed = Vec::new();
+            for i in 0..*n {
+                let best = candidates(comp, infra)
+                    .into_iter()
+                    .max_by_key(|(_, nd)| nd.allocatable.cpu_millis)
+                    .map(|(_, nd)| nd.id.clone());
+                match best {
+                    Some(id) => {
+                        let mut inst = commit(infra, comp, &id);
+                        if *n > 1 {
+                            inst.id = format!("{}-{i}", inst.id);
+                        }
+                        placed.push(inst);
+                    }
+                    None => bail!(
+                        "component '{}': replica {i}/{n} unplaceable (need {:?})",
+                        comp.name,
+                        comp.resources
+                    ),
+                }
+            }
+            Ok(placed)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infra::paper_testbed;
+    use crate::topology::{Topology, VIDEOQUERY_TOPOLOGY};
+
+    #[test]
+    fn videoquery_places_on_paper_testbed() {
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        let infra = paper_testbed("u1");
+        let plan = place(&topo, &infra).unwrap();
+        // od + dg on each of 9 camera RPis; eoc + lic per EC (3); coc,
+        // ic, rs on CC
+        assert_eq!(plan.instances_of("od").len(), 9);
+        assert_eq!(plan.instances_of("dg").len(), 9);
+        assert_eq!(plan.instances_of("eoc").len(), 3);
+        assert_eq!(plan.instances_of("lic").len(), 3);
+        assert_eq!(plan.instances_of("coc").len(), 1);
+        for inst in plan.instances_of("od") {
+            let node = infra.find_node(&inst.node).unwrap();
+            assert!(node.has_label("camera", None));
+            assert!(node.is_edge());
+        }
+        for inst in plan.instances_of("coc") {
+            assert_eq!(inst.node.parent().unwrap().leaf(), "cc");
+        }
+        // eoc lands on the mini PCs (most free cpu in each EC)
+        for inst in plan.instances_of("eoc") {
+            assert_eq!(inst.node.leaf(), "minipc");
+        }
+    }
+
+    #[test]
+    fn resources_are_deducted() {
+        let topo = Topology::parse(
+            "
+app: greedy
+components:
+  - name: big
+    location: cloud
+    replicas: 2
+    resources:
+      cpu: 20000
+      mem: 1024
+",
+        )
+        .unwrap();
+        let infra = paper_testbed("u1");
+        // CC has 32000 cpu_millis: first replica fits, second cannot
+        let err = place(&topo, &infra).unwrap_err().to_string();
+        assert!(err.contains("replica 1/2"), "{err}");
+    }
+
+    #[test]
+    fn label_value_filters() {
+        let topo = Topology::parse(
+            "
+app: x
+components:
+  - name: cam
+    location: edge
+    placement: per-label
+    label: camera=true
+    resources:
+      cpu: 100
+      mem: 64
+",
+        )
+        .unwrap();
+        let infra = paper_testbed("u1");
+        let plan = place(&topo, &infra).unwrap();
+        assert_eq!(plan.instances.len(), 9);
+    }
+
+    #[test]
+    fn failed_nodes_are_shielded_from_placement() {
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        let mut infra = paper_testbed("u1");
+        // fail one camera node -> od lands on only 8
+        let id = infra.ecs[0].nodes[1].id.clone();
+        infra.find_node_mut(&id).unwrap().status = crate::infra::NodeStatus::Failed;
+        let plan = place(&topo, &infra).unwrap();
+        assert_eq!(plan.instances_of("od").len(), 8);
+        assert!(plan.instances.iter().all(|i| i.node != id));
+    }
+
+    #[test]
+    fn cloud_component_never_on_edge() {
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        let infra = paper_testbed("u1");
+        let plan = place(&topo, &infra).unwrap();
+        for name in ["coc", "ic", "rs"] {
+            for inst in plan.instances_of(name) {
+                assert_eq!(inst.node.parent().unwrap().leaf(), "cc", "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_app_contention_via_place_onto() {
+        let topo = Topology::parse(
+            "
+app: hog
+components:
+  - name: svc
+    location: cloud
+    resources:
+      cpu: 30000
+      mem: 1024
+",
+        )
+        .unwrap();
+        let mut infra = paper_testbed("u1");
+        assert!(place_onto(&topo, &mut infra).is_ok());
+        // second app no longer fits on the CC
+        assert!(place_onto(&topo, &mut infra).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! EC<->CC topic bridging — the long-lasting service link of Figure 2.
+//!
+//! §4.3.2: "the long-lasting link between EC and CC message services is
+//! established using MQTT topic-bridging". A `Bridge` forwards messages
+//! matching configured filters between two brokers, in both directions,
+//! with origin-based loop prevention (a message is never forwarded back
+//! into a broker it has already visited — mirroring mosquitto's
+//! `local`/`remote` prefix behaviour).
+//!
+//! The bridge is what lets an EC client publish to `cloud/...` against
+//! its LOCAL broker and have the CC client receive it — the paper's
+//! argument for why developers stop hand-wiring per-client CC
+//! authorization (evaluated in `benches/bridge_vs_direct.rs`).
+
+use super::broker::{Broker, Message};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Forwarding rule: messages matching `filter` flow `a -> b` (and a
+/// mirrored rule handles `b -> a` if added).
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub filter: String,
+}
+
+pub struct Bridge {
+    stop: Arc<AtomicBool>,
+    forwarded: Arc<AtomicU64>,
+    forwarded_bytes: Arc<AtomicU64>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Bridge {
+    /// Bridge `a` and `b`: `a_to_b` filters forward a->b, `b_to_a`
+    /// filters forward b->a. Forwarding threads run until `shutdown`.
+    pub fn start(
+        a: &Broker,
+        b: &Broker,
+        a_to_b: &[&str],
+        b_to_a: &[&str],
+    ) -> Result<Bridge, String> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let forwarded = Arc::new(AtomicU64::new(0));
+        let forwarded_bytes = Arc::new(AtomicU64::new(0));
+        let mut threads = Vec::new();
+        for (src, dst, filters) in [(a, b, a_to_b), (b, a, b_to_a)] {
+            for f in filters {
+                let sub = src.subscribe(f)?;
+                let dst = dst.clone();
+                let dst_name = dst.name();
+                let stop = stop.clone();
+                let fwd = forwarded.clone();
+                let fwd_b = forwarded_bytes.clone();
+                threads.push(std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match sub.rx.recv_timeout(std::time::Duration::from_millis(20)) {
+                            Ok(msg) => {
+                                // loop prevention: never forward into the
+                                // broker the message originated from
+                                if msg.origin == dst_name {
+                                    continue;
+                                }
+                                let bytes = msg.payload.len() as u64;
+                                let m = Message {
+                                    topic: msg.topic,
+                                    payload: msg.payload,
+                                    origin: msg.origin,
+                                };
+                                if dst.publish_opts(m, false).is_ok() {
+                                    fwd.fetch_add(1, Ordering::Relaxed);
+                                    fwd_b.fetch_add(bytes, Ordering::Relaxed);
+                                }
+                            }
+                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                }));
+            }
+        }
+        Ok(Bridge { stop, forwarded, forwarded_bytes, threads })
+    }
+
+    /// Messages forwarded so far (both directions).
+    pub fn forwarded(&self) -> u64 {
+        self.forwarded.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes forwarded so far — the bridged-WAN counter.
+    pub fn forwarded_bytes(&self) -> u64 {
+        self.forwarded_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Bridge {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn recv(sub: &crate::pubsub::broker::SubHandle) -> Message {
+        sub.rx.recv_timeout(Duration::from_secs(2)).expect("message")
+    }
+
+    #[test]
+    fn forwards_ec_to_cc() {
+        let ec = Broker::new("ec-1");
+        let cc = Broker::new("cc");
+        let _bridge = Bridge::start(&ec, &cc, &["cloud/#"], &["edge/ec-1/#"]).unwrap();
+        let cc_sub = cc.subscribe("cloud/#").unwrap();
+        // EC client talks to its LOCAL broker only
+        ec.publish("cloud/results/q1", b"crop-meta".to_vec()).unwrap();
+        let m = recv(&cc_sub);
+        assert_eq!(m.topic, "cloud/results/q1");
+        assert_eq!(m.origin, "ec-1");
+    }
+
+    #[test]
+    fn forwards_cc_to_ec() {
+        let ec = Broker::new("ec-1");
+        let cc = Broker::new("cc");
+        let _bridge = Bridge::start(&ec, &cc, &["cloud/#"], &["edge/ec-1/#"]).unwrap();
+        let ec_sub = ec.subscribe("edge/ec-1/ctrl").unwrap();
+        cc.publish("edge/ec-1/ctrl", b"deploy".to_vec()).unwrap();
+        assert_eq!(recv(&ec_sub).utf8(), "deploy");
+    }
+
+    #[test]
+    fn no_forwarding_loop() {
+        let ec = Broker::new("ec-1");
+        let cc = Broker::new("cc");
+        // symmetric filters would loop without origin tracking
+        let bridge = Bridge::start(&ec, &cc, &["shared/#"], &["shared/#"]).unwrap();
+        let _cc_sub = cc.subscribe("shared/x").unwrap();
+        ec.publish("shared/x", b"once".to_vec()).unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        // exactly one forward (ec->cc); the echo back is suppressed
+        assert_eq!(bridge.forwarded(), 1);
+        assert_eq!(bridge.forwarded_bytes(), 4);
+    }
+
+    #[test]
+    fn multi_ec_fanin() {
+        let cc = Broker::new("cc");
+        let ecs: Vec<Broker> = (0..3).map(|i| Broker::new(format!("ec-{i}"))).collect();
+        let _bridges: Vec<Bridge> = ecs
+            .iter()
+            .map(|ec| Bridge::start(ec, &cc, &["cloud/#"], &[]).unwrap())
+            .collect();
+        let sub = cc.subscribe("cloud/#").unwrap();
+        for (i, ec) in ecs.iter().enumerate() {
+            ec.publish("cloud/up", format!("m{i}").into_bytes()).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            got.push(recv(&sub).utf8());
+        }
+        got.sort();
+        assert_eq!(got, vec!["m0", "m1", "m2"]);
+    }
+}

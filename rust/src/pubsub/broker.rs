@@ -1,0 +1,254 @@
+//! In-process MQTT-like broker — the resource-level message service.
+//!
+//! §4.3.2: ACE deploys a message service on every EC and on the CC;
+//! application components only ever talk to their *local* broker, and
+//! EC<->CC unicast rides the long-lasting bridge (see `bridge.rs`,
+//! Figure 2 link ②). QoS-0 semantics, retained messages, `+`/`#`
+//! filters. Subscribers receive on std mpsc channels; byte counters
+//! support the bridged-vs-direct ablation bench.
+
+use super::topic;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// A published message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub topic: String,
+    pub payload: Vec<u8>,
+    /// Broker the message FIRST entered (loop prevention in bridges).
+    pub origin: String,
+}
+
+impl Message {
+    pub fn new(topic: impl Into<String>, payload: impl Into<Vec<u8>>) -> Self {
+        Message { topic: topic.into(), payload: payload.into(), origin: String::new() }
+    }
+
+    pub fn utf8(&self) -> String {
+        String::from_utf8_lossy(&self.payload).into_owned()
+    }
+}
+
+struct Subscription {
+    filter: String,
+    tx: Sender<Message>,
+    id: u64,
+}
+
+struct Inner {
+    name: String,
+    subs: Vec<Subscription>,
+    retained: HashMap<String, Message>,
+    next_id: u64,
+    /// (messages, payload bytes) accepted by publish.
+    pub_count: u64,
+    pub_bytes: u64,
+    /// (messages, payload bytes) delivered to subscribers.
+    deliver_count: u64,
+    deliver_bytes: u64,
+}
+
+/// Handle to a broker (cheaply cloneable).
+#[derive(Clone)]
+pub struct Broker {
+    inner: Arc<Mutex<Inner>>,
+}
+
+/// A subscription handle; dropping it does NOT unsubscribe (call
+/// `Broker::unsubscribe`), but a closed receiver is garbage-collected on
+/// the next publish that routes to it.
+pub struct SubHandle {
+    pub id: u64,
+    pub rx: Receiver<Message>,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BrokerStats {
+    pub pub_count: u64,
+    pub pub_bytes: u64,
+    pub deliver_count: u64,
+    pub deliver_bytes: u64,
+    pub subscriptions: usize,
+}
+
+impl Broker {
+    pub fn new(name: impl Into<String>) -> Self {
+        Broker {
+            inner: Arc::new(Mutex::new(Inner {
+                name: name.into(),
+                subs: Vec::new(),
+                retained: HashMap::new(),
+                next_id: 1,
+                pub_count: 0,
+                pub_bytes: 0,
+                deliver_count: 0,
+                deliver_bytes: 0,
+            })),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.inner.lock().unwrap().name.clone()
+    }
+
+    /// Subscribe to `filter`; retained messages matching the filter are
+    /// delivered immediately.
+    pub fn subscribe(&self, filter: &str) -> Result<SubHandle, String> {
+        if !topic::valid_filter(filter) {
+            return Err(format!("invalid filter '{filter}'"));
+        }
+        let (tx, rx) = channel();
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        // replay retained
+        let mut replayed = Vec::new();
+        for (t, m) in inner.retained.iter() {
+            if topic::matches(filter, t) {
+                replayed.push(m.clone());
+            }
+        }
+        for m in replayed {
+            let bytes = m.payload.len() as u64;
+            if tx.send(m).is_ok() {
+                inner.deliver_count += 1;
+                inner.deliver_bytes += bytes;
+            }
+        }
+        inner.subs.push(Subscription { filter: filter.to_string(), tx, id });
+        Ok(SubHandle { id, rx })
+    }
+
+    pub fn unsubscribe(&self, id: u64) {
+        self.inner.lock().unwrap().subs.retain(|s| s.id != id);
+    }
+
+    /// Publish; `retain` keeps the last message per topic for future
+    /// subscribers. Returns the number of subscribers reached.
+    pub fn publish_opts(&self, mut msg: Message, retain: bool) -> Result<usize, String> {
+        if !topic::valid_name(&msg.topic) {
+            return Err(format!("invalid topic '{}'", msg.topic));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if msg.origin.is_empty() {
+            msg.origin = inner.name.clone();
+        }
+        inner.pub_count += 1;
+        inner.pub_bytes += msg.payload.len() as u64;
+        if retain {
+            inner.retained.insert(msg.topic.clone(), msg.clone());
+        }
+        let mut reached = 0;
+        let mut dead = Vec::new();
+        let mut delivered_bytes = 0u64;
+        for s in inner.subs.iter() {
+            if topic::matches(&s.filter, &msg.topic) {
+                if s.tx.send(msg.clone()).is_ok() {
+                    reached += 1;
+                    delivered_bytes += msg.payload.len() as u64;
+                } else {
+                    dead.push(s.id);
+                }
+            }
+        }
+        inner.deliver_count += reached as u64;
+        inner.deliver_bytes += delivered_bytes;
+        if !dead.is_empty() {
+            inner.subs.retain(|s| !dead.contains(&s.id));
+        }
+        Ok(reached)
+    }
+
+    pub fn publish(&self, topic: &str, payload: impl Into<Vec<u8>>) -> Result<usize, String> {
+        self.publish_opts(Message::new(topic, payload), false)
+    }
+
+    pub fn publish_retained(&self, topic: &str, payload: impl Into<Vec<u8>>) -> Result<usize, String> {
+        self.publish_opts(Message::new(topic, payload), true)
+    }
+
+    pub fn stats(&self) -> BrokerStats {
+        let inner = self.inner.lock().unwrap();
+        BrokerStats {
+            pub_count: inner.pub_count,
+            pub_bytes: inner.pub_bytes,
+            deliver_count: inner.deliver_count,
+            deliver_bytes: inner.deliver_bytes,
+            subscriptions: inner.subs.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn pub_sub_roundtrip() {
+        let b = Broker::new("cc");
+        let sub = b.subscribe("query/+/result").unwrap();
+        let n = b.publish("query/42/result", b"hit".to_vec()).unwrap();
+        assert_eq!(n, 1);
+        let m = sub.rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(m.topic, "query/42/result");
+        assert_eq!(m.payload, b"hit");
+        assert_eq!(m.origin, "cc");
+    }
+
+    #[test]
+    fn no_match_no_delivery() {
+        let b = Broker::new("b");
+        let sub = b.subscribe("a/b").unwrap();
+        assert_eq!(b.publish("a/c", b"x".to_vec()).unwrap(), 0);
+        assert!(sub.rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn retained_replay_on_subscribe() {
+        let b = Broker::new("b");
+        b.publish_retained("cfg/threshold", b"0.8".to_vec()).unwrap();
+        let sub = b.subscribe("cfg/#").unwrap();
+        let m = sub.rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(m.utf8(), "0.8");
+    }
+
+    #[test]
+    fn unsubscribe_stops_delivery() {
+        let b = Broker::new("b");
+        let sub = b.subscribe("t/x").unwrap();
+        b.unsubscribe(sub.id);
+        assert_eq!(b.publish("t/x", b"1".to_vec()).unwrap(), 0);
+    }
+
+    #[test]
+    fn dead_receivers_are_pruned() {
+        let b = Broker::new("b");
+        let sub = b.subscribe("t/x").unwrap();
+        drop(sub.rx);
+        b.publish("t/x", b"1".to_vec()).unwrap();
+        assert_eq!(b.stats().subscriptions, 0);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let b = Broker::new("b");
+        assert!(b.subscribe("a/#/b").is_err());
+        assert!(b.publish("a/+/b", b"".to_vec()).is_err());
+    }
+
+    #[test]
+    fn stats_count_bytes() {
+        let b = Broker::new("b");
+        let _s1 = b.subscribe("t/#").unwrap();
+        let _s2 = b.subscribe("t/x").unwrap();
+        b.publish("t/x", vec![0u8; 100]).unwrap();
+        let st = b.stats();
+        assert_eq!(st.pub_count, 1);
+        assert_eq!(st.pub_bytes, 100);
+        assert_eq!(st.deliver_count, 2);
+        assert_eq!(st.deliver_bytes, 200);
+    }
+}

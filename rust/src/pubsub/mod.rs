@@ -1,0 +1,13 @@
+//! Resource-level message service (§4.3.2, Figure 2).
+//!
+//! * `topic` — MQTT-style topic matching, shared by all routers.
+//! * `broker` — per-EC / per-CC in-process broker (QoS-0, retained).
+//! * `bridge` — the long-lasting EC<->CC topic bridge (link ② in
+//!   Figure 2) with loop prevention.
+
+pub mod bridge;
+pub mod broker;
+pub mod topic;
+
+pub use bridge::Bridge;
+pub use broker::{Broker, BrokerStats, Message, SubHandle};

@@ -1,0 +1,91 @@
+//! MQTT-style topic names and filters (`+` and `#` wildcards).
+//!
+//! Shared by the threaded broker (platform control plane) and the DES
+//! message router (experiment data plane), so both agree on semantics.
+
+/// Is `name` a valid concrete topic (no wildcards, non-empty levels)?
+pub fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && !name.contains(['+', '#'])
+        && name.split('/').all(|l| !l.is_empty())
+}
+
+/// Is `filter` a valid subscription filter?
+/// `+` matches one level; `#` matches the rest and must be last.
+pub fn valid_filter(filter: &str) -> bool {
+    if filter.is_empty() {
+        return false;
+    }
+    let levels: Vec<&str> = filter.split('/').collect();
+    for (i, l) in levels.iter().enumerate() {
+        if l.is_empty() {
+            return false;
+        }
+        if l.contains('#') && (*l != "#" || i != levels.len() - 1) {
+            return false;
+        }
+        if l.contains('+') && *l != "+" {
+            return false;
+        }
+    }
+    true
+}
+
+/// MQTT topic matching: does `filter` match concrete `name`?
+pub fn matches(filter: &str, name: &str) -> bool {
+    let mut f = filter.split('/');
+    let mut n = name.split('/');
+    loop {
+        match (f.next(), n.next()) {
+            (Some("#"), _) => return true,
+            (Some("+"), Some(_)) => continue,
+            (Some(fl), Some(nl)) if fl == nl => continue,
+            (None, None) => return true,
+            _ => return false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match() {
+        assert!(matches("a/b/c", "a/b/c"));
+        assert!(!matches("a/b/c", "a/b"));
+        assert!(!matches("a/b", "a/b/c"));
+    }
+
+    #[test]
+    fn plus_matches_one_level() {
+        assert!(matches("a/+/c", "a/b/c"));
+        assert!(matches("+/b/c", "a/b/c"));
+        assert!(!matches("a/+", "a/b/c"));
+        assert!(!matches("a/+/c", "a/c"));
+    }
+
+    #[test]
+    fn hash_matches_rest() {
+        assert!(matches("a/#", "a/b/c"));
+        assert!(matches("#", "anything/at/all"));
+        assert!(matches("a/#", "a/b"));
+        // MQTT spec: `a/#` matches the parent `a` itself too.
+        assert!(matches("a/#", "a"));
+        assert!(!matches("a/#", "b"));
+    }
+
+    #[test]
+    fn validity() {
+        assert!(valid_name("a/b/c"));
+        assert!(!valid_name("a//c"));
+        assert!(!valid_name("a/+/c"));
+        assert!(!valid_name(""));
+        assert!(valid_filter("a/+/c"));
+        assert!(valid_filter("a/#"));
+        assert!(valid_filter("#"));
+        assert!(!valid_filter("a/#/c"));
+        assert!(!valid_filter("a/b+"));
+        assert!(!valid_filter("a//b"));
+    }
+}

@@ -1,0 +1,146 @@
+//! Typed view over `artifacts/manifest.json` (written by aot.py).
+
+use crate::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub files: Vec<String>,
+    pub batch_sizes: Vec<usize>,
+    pub outputs: usize,
+    pub params: usize,
+    /// COC: top-1 accuracy; EOC: 1 - binary_error (as reported by aot).
+    pub accuracy: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub crop: usize,
+    pub classes: Vec<String>,
+    pub target_class: usize,
+    pub frame_h: usize,
+    pub frame_w: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub framediff_file: String,
+    pub fl_file: String,
+    pub fl_dim: usize,
+    pub fl_batch: usize,
+    pub quick: bool,
+}
+
+impl Manifest {
+    pub fn parse(v: &Value) -> Result<Self> {
+        let mut models = BTreeMap::new();
+        let mobj = v
+            .get("models")
+            .as_obj()
+            .context("manifest: missing models")?;
+        for (name, m) in mobj {
+            let acc = if name == "eoc" {
+                1.0 - m.get("binary_error").as_f64().unwrap_or(0.0)
+            } else {
+                m.get("top1").as_f64().unwrap_or(0.0)
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    files: m
+                        .get("files")
+                        .as_arr()
+                        .context("files")?
+                        .iter()
+                        .filter_map(|f| f.as_str().map(|s| s.to_string()))
+                        .collect(),
+                    batch_sizes: m
+                        .get("batch_sizes")
+                        .as_arr()
+                        .context("batch_sizes")?
+                        .iter()
+                        .filter_map(|b| b.as_usize())
+                        .collect(),
+                    outputs: m.get("outputs").as_usize().context("outputs")?,
+                    params: m.get("params").as_usize().unwrap_or(0),
+                    accuracy: acc,
+                },
+            );
+        }
+        Ok(Manifest {
+            crop: v.get("crop").as_usize().context("crop")?,
+            classes: v
+                .get("classes")
+                .as_arr()
+                .context("classes")?
+                .iter()
+                .filter_map(|c| c.as_str().map(|s| s.to_string()))
+                .collect(),
+            target_class: v.get("target_class").as_usize().context("target_class")?,
+            frame_h: v.get("frame").get("h").as_usize().context("frame.h")?,
+            frame_w: v.get("frame").get("w").as_usize().context("frame.w")?,
+            models,
+            framediff_file: v
+                .get("framediff")
+                .get("file")
+                .as_str()
+                .unwrap_or("framediff.hlo.txt")
+                .to_string(),
+            fl_file: v
+                .get("fl")
+                .get("file")
+                .as_str()
+                .unwrap_or("fl_train_step.hlo.txt")
+                .to_string(),
+            fl_dim: v.get("fl").get("dim").as_usize().unwrap_or(16),
+            fl_batch: v.get("fl").get("batch").as_usize().unwrap_or(32),
+            quick: v.get("quick").as_bool().unwrap_or(false),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {path:?}"))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::parse(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "crop": 32,
+      "classes": ["background", "motorcycle"],
+      "target_class": 1,
+      "frame": {"h": 96, "w": 160},
+      "models": {
+        "eoc": {"files": ["eoc_b1.hlo.txt"], "batch_sizes": [1, 4],
+                 "outputs": 2, "params": 2202, "binary_error": 0.11},
+        "coc": {"files": ["coc_b1.hlo.txt"], "batch_sizes": [1],
+                 "outputs": 8, "params": 272000, "top1": 0.95}
+      },
+      "framediff": {"file": "framediff.hlo.txt", "h": 96, "w": 160},
+      "fl": {"file": "fl_train_step.hlo.txt", "dim": 16, "classes": 2, "batch": 32},
+      "quick": false
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = crate::json::parse(SAMPLE).unwrap();
+        let m = Manifest::parse(&v).unwrap();
+        assert_eq!(m.crop, 32);
+        assert_eq!(m.target_class, 1);
+        assert_eq!(m.frame_w, 160);
+        assert_eq!(m.models["eoc"].batch_sizes, vec![1, 4]);
+        assert!((m.models["eoc"].accuracy - 0.89).abs() < 1e-9);
+        assert!((m.models["coc"].accuracy - 0.95).abs() < 1e-9);
+        assert_eq!(m.models["coc"].outputs, 8);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let v = crate::json::parse(r#"{"crop": 32}"#).unwrap();
+        assert!(Manifest::parse(&v).is_err());
+    }
+}

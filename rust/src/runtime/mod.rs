@@ -1,0 +1,263 @@
+//! PJRT runtime: load AOT artifacts, execute them on the request path.
+//!
+//! This is the rust half of the AOT bridge: `python/compile/aot.py`
+//! lowers the L2 JAX graphs (which call the L1 Pallas kernels) to HLO
+//! *text*; this module parses the text, compiles one executable per
+//! (model, batch-size) on the PJRT CPU client, caches them, and serves
+//! batched inference. Python never runs here.
+//!
+//! Also provides `calibrate`, which measures real per-batch service
+//! times — the DES (Figure 5 experiments) charges these measured times
+//! (scaled by a node speed factor) as virtual service times, so the
+//! latency curves are grounded in actual XLA execution cost.
+
+pub mod manifest;
+
+use crate::util::stats::Summary;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+pub use manifest::Manifest;
+
+/// Shared PJRT client (CPU).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable { exe, path: path.to_path_buf() })
+    }
+}
+
+/// One compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with the given inputs; outputs are the flattened tuple
+    /// elements (aot.py lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {:?}: {e:?}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {:?}: {e:?}", self.path))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+/// f32 tensor input helper.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {dims:?} != data len {}", data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {dims:?} != data len {}", data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// A classifier with one compiled executable per exported batch size
+/// (the paper's EOC or COC).
+pub struct Classifier {
+    pub name: String,
+    pub crop: usize,
+    pub outputs: usize,
+    /// sorted ascending
+    pub batch_sizes: Vec<usize>,
+    exes: HashMap<usize, Executable>,
+    /// measured mean service seconds per batch size (after calibrate)
+    pub service_secs: HashMap<usize, f64>,
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Classifier {
+    /// Load `<name>_b{B}.hlo.txt` for every batch size in the manifest.
+    pub fn load(engine: &Engine, dir: &Path, manifest: &Manifest, name: &str) -> Result<Self> {
+        let m = manifest
+            .models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))?;
+        let mut exes = HashMap::new();
+        for &b in &m.batch_sizes {
+            let path = dir.join(format!("{name}_b{b}.hlo.txt"));
+            exes.insert(b, engine.load(&path)?);
+        }
+        let mut batch_sizes = m.batch_sizes.clone();
+        batch_sizes.sort_unstable();
+        Ok(Classifier {
+            name: name.to_string(),
+            crop: manifest.crop,
+            outputs: m.outputs,
+            batch_sizes,
+            exes,
+            service_secs: HashMap::new(),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Largest exported batch size <= n (or the smallest exported).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        let mut best = self.batch_sizes[0];
+        for &b in &self.batch_sizes {
+            if b <= n {
+                best = b;
+            }
+        }
+        best
+    }
+
+    /// Classify `crops` (each crop*crop*3 f32s). Splits into exported
+    /// batch sizes, padding the tail batch by repeating its last real
+    /// crop (padded outputs are discarded). Returns one probability
+    /// vector per crop.
+    pub fn classify(&self, crops: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let pix = self.crop * self.crop * 3;
+        let mut out = Vec::with_capacity(crops.len());
+        let mut i = 0;
+        while i < crops.len() {
+            let remaining = crops.len() - i;
+            let b = self.pick_batch(remaining);
+            let take = b.min(remaining);
+            let mut flat = Vec::with_capacity(b * pix);
+            for j in 0..b {
+                let c = &crops[i + j.min(take - 1)];
+                if c.len() != pix {
+                    bail!("crop {} has {} floats, want {pix}", i + j, c.len());
+                }
+                flat.extend_from_slice(c);
+            }
+            let lit = literal_f32(&flat, &[b as i64, self.crop as i64, self.crop as i64, 3])?;
+            let exe = self.exes.get(&b).unwrap();
+            let probs = exe.run(std::slice::from_ref(&lit))?;
+            self.exec_count.set(self.exec_count.get() + 1);
+            let v = probs[0]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output: {e:?}"))?;
+            for j in 0..take {
+                out.push(v[j * self.outputs..(j + 1) * self.outputs].to_vec());
+            }
+            i += take;
+        }
+        Ok(out)
+    }
+
+    /// Measure mean wall-clock service time per batch size.
+    pub fn calibrate(&mut self, reps: usize) -> Result<()> {
+        let pix = self.crop * self.crop * 3;
+        let sizes = self.batch_sizes.clone();
+        for b in sizes {
+            let crop = vec![0.5f32; pix];
+            let flat: Vec<f32> = (0..b).flat_map(|_| crop.iter().copied()).collect();
+            let lit = literal_f32(&flat, &[b as i64, self.crop as i64, self.crop as i64, 3])?;
+            let exe = self.exes.get(&b).unwrap();
+            exe.run(std::slice::from_ref(&lit))?; // warmup
+            let mut s = Summary::new();
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                exe.run(std::slice::from_ref(&lit))?;
+                s.add(t0.elapsed().as_secs_f64());
+            }
+            self.service_secs.insert(b, s.mean());
+        }
+        Ok(())
+    }
+
+    /// Calibrated mean service seconds for batch size `b`.
+    pub fn service_time(&self, b: usize) -> f64 {
+        *self
+            .service_secs
+            .get(&b)
+            .unwrap_or_else(|| panic!("batch {b} not calibrated for {}", self.name))
+    }
+}
+
+/// Everything the coordinator loads from `artifacts/`.
+pub struct ModelBank {
+    pub manifest: Manifest,
+    pub eoc: Classifier,
+    pub coc: Classifier,
+    pub dir: PathBuf,
+}
+
+impl ModelBank {
+    pub fn load(engine: &Engine, dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let eoc = Classifier::load(engine, dir, &manifest, "eoc")?;
+        let coc = Classifier::load(engine, dir, &manifest, "coc")?;
+        Ok(ModelBank { manifest, eoc, coc, dir: dir.to_path_buf() })
+    }
+
+    pub fn calibrate(&mut self, reps: usize) -> Result<()> {
+        self.eoc.calibrate(reps)?;
+        self.coc.calibrate(reps)?;
+        Ok(())
+    }
+}
+
+/// Locate the artifacts directory: `$ACE_ARTIFACTS` or an `artifacts/`
+/// dir found walking up from cwd (so tests work from any subdir).
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("ACE_ARTIFACTS") {
+        return Ok(PathBuf::from(p));
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!("artifacts/ not found; run `make artifacts` or set ACE_ARTIFACTS");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0], &[3]).is_ok());
+        assert!(literal_i32(&[1, 2], &[2, 2]).is_err());
+    }
+
+    // Full artifact round-trip tests live in rust/tests/runtime_golden.rs
+    // (they require `make artifacts` to have run).
+}

@@ -1,0 +1,267 @@
+//! Simulated network links: bandwidth serialization + one-way delay.
+//!
+//! Models the paper's testbed network (§5.1.1): each EC has a 100 Mbps
+//! LAN; every EC reaches the CC over a WAN shaped to 20 Mbps uplink /
+//! 40 Mbps downlink with a configurable one-way delay (0 ms ideal,
+//! 50 ms practical). A `Link` is a FIFO serialization queue: a message
+//! of `n` bytes occupies the link for `n*8/bw` seconds starting when the
+//! link frees up, then arrives `delay` later. Per-link byte counters
+//! feed the BWC metric (edge-cloud bandwidth consumption, Figure 5 mid
+//! row).
+//!
+//! The struct is plain data (no coupling to the DES): `send` returns the
+//! delivery time and the caller schedules the delivery event.
+
+use crate::util::{SimTime, MICROS_PER_SEC};
+
+/// One directed link.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: String,
+    /// Bits per second (mutable: the §4.2.2 validation testbed applies
+    /// time-varying channel profiles through `set_bw_bps`).
+    pub bw_bps: u64,
+    /// One-way propagation delay (µs).
+    pub delay: SimTime,
+    /// Max extra per-message delay (µs); each message gets a
+    /// deterministic uniform sample in [0, jitter] (§4.2.2 "the impact
+    /// of edge-cloud channel dynamics (bandwidth, delay, jitter)").
+    pub jitter: SimTime,
+    /// Stream seed for jitter samples (indexed by message count).
+    pub jitter_seed: u64,
+    /// Time the serialization queue frees up.
+    busy_until: SimTime,
+    /// Total payload bytes accepted (the BWC counter).
+    pub bytes_sent: u64,
+    /// Messages accepted.
+    pub msgs_sent: u64,
+}
+
+impl Link {
+    pub fn new(name: impl Into<String>, bw_bps: u64, delay: SimTime) -> Self {
+        let name = name.into();
+        let jitter_seed = name
+            .bytes()
+            .fold(0xACEu64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+        Link {
+            name,
+            bw_bps,
+            delay,
+            jitter: 0,
+            jitter_seed,
+            busy_until: 0,
+            bytes_sent: 0,
+            msgs_sent: 0,
+        }
+    }
+
+    /// Re-shape the link (validation-testbed channel dynamics).
+    pub fn set_bw_bps(&mut self, bw_bps: u64) {
+        self.bw_bps = bw_bps.max(1);
+    }
+
+    /// Convenience: megabit/s link.
+    pub fn mbps(name: impl Into<String>, mbps: f64, delay: SimTime) -> Self {
+        Link::new(name, (mbps * 1e6) as u64, delay)
+    }
+
+    /// Serialization time of `bytes` on this link (µs, >= 1).
+    pub fn ser_time(&self, bytes: u64) -> SimTime {
+        ((bytes as u128 * 8 * MICROS_PER_SEC as u128) / self.bw_bps as u128).max(1) as SimTime
+    }
+
+    /// Enqueue `bytes` at `now`; returns the delivery time.
+    pub fn send(&mut self, now: SimTime, bytes: u64) -> SimTime {
+        let start = self.busy_until.max(now);
+        let done = start + self.ser_time(bytes);
+        self.busy_until = done;
+        self.bytes_sent += bytes;
+        self.msgs_sent += 1;
+        let j = if self.jitter > 0 {
+            crate::util::prng::u32_at(self.jitter_seed, self.msgs_sent) as u64
+                % (self.jitter + 1)
+        } else {
+            0
+        };
+        done + self.delay + j
+    }
+
+    /// Queueing delay a new message would currently experience (µs).
+    pub fn backlog(&self, now: SimTime) -> SimTime {
+        self.busy_until.saturating_sub(now)
+    }
+
+    /// Reset counters (between experiment repetitions).
+    pub fn reset(&mut self) {
+        self.busy_until = 0;
+        self.bytes_sent = 0;
+        self.msgs_sent = 0;
+    }
+}
+
+/// The §5.1.1 testbed topology: per-EC LAN + EC<->CC WAN pairs.
+#[derive(Debug, Clone)]
+pub struct EdgeCloudNet {
+    /// Per-EC node->local links (LAN, symmetric). Indexed by EC.
+    pub lan: Vec<Link>,
+    /// EC -> CC uplinks (20 Mbps in the paper).
+    pub uplink: Vec<Link>,
+    /// CC -> EC downlinks (40 Mbps in the paper).
+    pub downlink: Vec<Link>,
+}
+
+/// Network parameters mirroring §5.1.1.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    pub num_ecs: usize,
+    pub lan_mbps: f64,
+    pub uplink_mbps: f64,
+    pub downlink_mbps: f64,
+    /// One-way WAN delay (µs): 0 = ideal, 50_000 = practical.
+    pub wan_delay: SimTime,
+    /// LAN delay (µs); small but nonzero.
+    pub lan_delay: SimTime,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            num_ecs: 3,
+            lan_mbps: 100.0,
+            uplink_mbps: 20.0,
+            downlink_mbps: 40.0,
+            wan_delay: 0,
+            lan_delay: 500, // 0.5 ms switch+stack latency
+        }
+    }
+}
+
+impl EdgeCloudNet {
+    pub fn new(cfg: &NetConfig) -> Self {
+        let mut lan = Vec::new();
+        let mut uplink = Vec::new();
+        let mut downlink = Vec::new();
+        for ec in 0..cfg.num_ecs {
+            lan.push(Link::mbps(format!("lan-ec{ec}"), cfg.lan_mbps, cfg.lan_delay));
+            uplink.push(Link::mbps(format!("up-ec{ec}"), cfg.uplink_mbps, cfg.wan_delay));
+            downlink.push(Link::mbps(format!("down-ec{ec}"), cfg.downlink_mbps, cfg.wan_delay));
+        }
+        EdgeCloudNet { lan, uplink, downlink }
+    }
+
+    /// Total WAN bytes (up + down) — the paper's BWC metric.
+    pub fn wan_bytes(&self) -> u64 {
+        self.uplink.iter().map(|l| l.bytes_sent).sum::<u64>()
+            + self.downlink.iter().map(|l| l.bytes_sent).sum::<u64>()
+    }
+
+    /// Uplink-only bytes (crop uploads dominate; reported separately).
+    pub fn wan_up_bytes(&self) -> u64 {
+        self.uplink.iter().map(|l| l.bytes_sent).sum()
+    }
+
+    pub fn reset(&mut self) {
+        for l in self
+            .lan
+            .iter_mut()
+            .chain(self.uplink.iter_mut())
+            .chain(self.downlink.iter_mut())
+        {
+            l.reset();
+        }
+    }
+}
+
+/// Standard sizes used by the video-query experiment (bytes).
+pub mod sizes {
+    /// One 32x32 RGB crop, 8-bit per channel, plus framing metadata.
+    pub const CROP_BYTES: u64 = 32 * 32 * 3 + 64;
+    /// A small control / metadata message (result record, EIL report).
+    pub const META_BYTES: u64 = 128;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::millis;
+
+    #[test]
+    fn serialization_time_matches_bandwidth() {
+        let l = Link::mbps("l", 20.0, 0);
+        // 20 Mbps = 2.5 MB/s; 2500 bytes -> 1 ms
+        assert_eq!(l.ser_time(2500), 1000);
+    }
+
+    #[test]
+    fn fifo_queueing_accumulates() {
+        let mut l = Link::mbps("l", 20.0, millis(50.0));
+        let d1 = l.send(0, 2500);
+        let d2 = l.send(0, 2500);
+        assert_eq!(d1, 1000 + 50_000);
+        assert_eq!(d2, 2000 + 50_000); // waits behind the first
+        assert_eq!(l.bytes_sent, 5000);
+        assert_eq!(l.backlog(0), 2000);
+    }
+
+    #[test]
+    fn idle_link_restarts_at_now() {
+        let mut l = Link::mbps("l", 20.0, 0);
+        l.send(0, 2500);
+        let d = l.send(10_000, 2500);
+        assert_eq!(d, 11_000); // no residual backlog
+    }
+
+    #[test]
+    fn edge_cloud_net_shape() {
+        let net = EdgeCloudNet::new(&NetConfig { num_ecs: 3, wan_delay: millis(50.0), ..Default::default() });
+        assert_eq!(net.lan.len(), 3);
+        assert_eq!(net.uplink.len(), 3);
+        assert_eq!(net.uplink[0].delay, 50_000);
+        assert_eq!(net.wan_bytes(), 0);
+    }
+
+    #[test]
+    fn wan_accounting_sums_both_directions() {
+        let mut net = EdgeCloudNet::new(&NetConfig::default());
+        net.uplink[0].send(0, 1000);
+        net.downlink[2].send(0, 234);
+        assert_eq!(net.wan_bytes(), 1234);
+        assert_eq!(net.wan_up_bytes(), 1000);
+        net.reset();
+        assert_eq!(net.wan_bytes(), 0);
+    }
+
+    #[test]
+    fn tiny_message_still_takes_time() {
+        let l = Link::mbps("l", 1000.0, 0);
+        assert!(l.ser_time(1) >= 1);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let mk = || {
+            let mut l = Link::mbps("j", 100.0, 1000);
+            l.jitter = 5000;
+            l
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for i in 0..200u64 {
+            let da = a.send(i * 10_000, 100);
+            let db = b.send(i * 10_000, 100);
+            assert_eq!(da, db, "jitter must be deterministic");
+            // base delivery = start + ser + delay; jitter adds <= 5000
+            let base = i * 10_000 + a.ser_time(100).max(1) + 1000;
+            assert!(da >= base && da <= base + 5000, "msg {i}: {da} vs {base}");
+        }
+    }
+
+    #[test]
+    fn reshaping_bandwidth_changes_ser_time() {
+        let mut l = Link::mbps("r", 20.0, 0);
+        let before = l.ser_time(2500);
+        l.set_bw_bps((5.0 * 1e6) as u64); // degrade to 5 Mbps
+        assert_eq!(l.ser_time(2500), before * 4);
+        l.set_bw_bps(0); // clamps, never div-by-zero
+        assert!(l.ser_time(1) > 0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Resource-level storage: object store + file service (§4.3.2).
+//!
+//! Figure 2's file service separates CONTROL flow from DATA flow: file
+//! operations are announced over the message service (links ③/④) while
+//! payload bytes move through the object storage service (links ⑤/⑥) —
+//! "for transmission simplification". We reproduce that structure:
+//!
+//! * `ObjectStore` — bucketed KV blob store (one per EC + one on CC);
+//! * `FileService` — put/get/delete + lifecycle (temporary vs permanent
+//!   objects, §4.3.2's "temporary storage for intermittent models and
+//!   data, permanent storage for final trained models"), announcing
+//!   every mutation on the message service so remote peers can mirror.
+
+use crate::pubsub::Broker;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Object lifecycle class (§4.3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Intermittent models/data — purged by `gc()`.
+    Temporary,
+    /// Final trained models — survives gc.
+    Permanent,
+}
+
+#[derive(Debug, Clone)]
+struct Object {
+    data: Vec<u8>,
+    lifecycle: Lifecycle,
+    version: u64,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    buckets: BTreeMap<String, BTreeMap<String, Object>>,
+    put_bytes: u64,
+    get_bytes: u64,
+}
+
+/// Thread-safe bucketed blob store.
+#[derive(Clone, Default)]
+pub struct ObjectStore {
+    inner: Arc<Mutex<StoreInner>>,
+}
+
+impl ObjectStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&self, bucket: &str, key: &str, data: Vec<u8>, lifecycle: Lifecycle) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.put_bytes += data.len() as u64;
+        let b = inner.buckets.entry(bucket.to_string()).or_default();
+        let version = b.get(key).map(|o| o.version + 1).unwrap_or(1);
+        b.insert(key.to_string(), Object { data, lifecycle, version });
+        version
+    }
+
+    pub fn get(&self, bucket: &str, key: &str) -> Option<Vec<u8>> {
+        let mut inner = self.inner.lock().unwrap();
+        let data = inner.buckets.get(bucket)?.get(key)?.data.clone();
+        inner.get_bytes += data.len() as u64;
+        Some(data)
+    }
+
+    pub fn version(&self, bucket: &str, key: &str) -> Option<u64> {
+        let inner = self.inner.lock().unwrap();
+        Some(inner.buckets.get(bucket)?.get(key)?.version)
+    }
+
+    pub fn delete(&self, bucket: &str, key: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .buckets
+            .get_mut(bucket)
+            .map(|b| b.remove(key).is_some())
+            .unwrap_or(false)
+    }
+
+    pub fn list(&self, bucket: &str) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .buckets
+            .get(bucket)
+            .map(|b| b.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// Purge all Temporary objects; returns number purged.
+    pub fn gc(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let mut purged = 0;
+        for b in inner.buckets.values_mut() {
+            let before = b.len();
+            b.retain(|_, o| o.lifecycle == Lifecycle::Permanent);
+            purged += before - b.len();
+        }
+        purged
+    }
+
+    /// (bytes written, bytes read) so far.
+    pub fn traffic(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.put_bytes, inner.get_bytes)
+    }
+}
+
+/// File service: object store data plane + message-service control
+/// plane. `announce_topic` is where mutations are published (Figure 2
+/// links ③/④); payloads never touch the broker.
+pub struct FileService {
+    pub store: ObjectStore,
+    broker: Broker,
+    scope: String,
+}
+
+impl FileService {
+    pub fn new(store: ObjectStore, broker: Broker, scope: impl Into<String>) -> Self {
+        FileService { store, broker, scope: scope.into() }
+    }
+
+    fn announce(&self, op: &str, bucket: &str, key: &str, size: usize, version: u64) {
+        let topic = format!("svc/file/{}/{}", self.scope, op);
+        let payload = format!(
+            "{{\"bucket\":\"{bucket}\",\"key\":\"{key}\",\"size\":{size},\"version\":{version}}}"
+        );
+        let _ = self.broker.publish(&topic, payload.into_bytes());
+    }
+
+    pub fn put(&self, bucket: &str, key: &str, data: Vec<u8>, lifecycle: Lifecycle) -> u64 {
+        let size = data.len();
+        let v = self.store.put(bucket, key, data, lifecycle);
+        self.announce("put", bucket, key, size, v);
+        v
+    }
+
+    pub fn get(&self, bucket: &str, key: &str) -> Option<Vec<u8>> {
+        let data = self.store.get(bucket, key)?;
+        self.announce("get", bucket, key, data.len(), 0);
+        Some(data)
+    }
+
+    pub fn delete(&self, bucket: &str, key: &str) -> bool {
+        let ok = self.store.delete(bucket, key);
+        if ok {
+            self.announce("delete", bucket, key, 0, 0);
+        }
+        ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn put_get_roundtrip_and_versions() {
+        let s = ObjectStore::new();
+        assert_eq!(s.put("models", "eoc", vec![1, 2, 3], Lifecycle::Permanent), 1);
+        assert_eq!(s.put("models", "eoc", vec![4, 5], Lifecycle::Permanent), 2);
+        assert_eq!(s.get("models", "eoc"), Some(vec![4, 5]));
+        assert_eq!(s.version("models", "eoc"), Some(2));
+        assert_eq!(s.get("models", "missing"), None);
+    }
+
+    #[test]
+    fn gc_purges_temporary_only() {
+        let s = ObjectStore::new();
+        s.put("b", "tmp", vec![0], Lifecycle::Temporary);
+        s.put("b", "final", vec![1], Lifecycle::Permanent);
+        assert_eq!(s.gc(), 1);
+        assert_eq!(s.get("b", "tmp"), None);
+        assert_eq!(s.get("b", "final"), Some(vec![1]));
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let s = ObjectStore::new();
+        s.put("b", "k", vec![0u8; 10], Lifecycle::Permanent);
+        s.get("b", "k");
+        s.get("b", "k");
+        assert_eq!(s.traffic(), (10, 20));
+    }
+
+    #[test]
+    fn list_and_delete() {
+        let s = ObjectStore::new();
+        s.put("b", "a", vec![], Lifecycle::Permanent);
+        s.put("b", "c", vec![], Lifecycle::Permanent);
+        assert_eq!(s.list("b"), vec!["a".to_string(), "c".to_string()]);
+        assert!(s.delete("b", "a"));
+        assert!(!s.delete("b", "a"));
+        assert_eq!(s.list("b"), vec!["c".to_string()]);
+    }
+
+    #[test]
+    fn file_service_announces_control_flow() {
+        let broker = Broker::new("ec-1");
+        let sub = broker.subscribe("svc/file/ec-1/#").unwrap();
+        let fs = FileService::new(ObjectStore::new(), broker, "ec-1");
+        fs.put("models", "eoc-v1", vec![0u8; 2048], Lifecycle::Temporary);
+        let m = sub.rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(m.topic, "svc/file/ec-1/put");
+        assert!(m.utf8().contains("\"size\":2048"));
+        // control message is small — data plane stayed in the store
+        assert!(m.payload.len() < 200);
+        let got = fs.get("models", "eoc-v1").unwrap();
+        assert_eq!(got.len(), 2048);
+        let m2 = sub.rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(m2.topic, "svc/file/ec-1/get");
+    }
+}

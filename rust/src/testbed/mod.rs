@@ -1,0 +1,209 @@
+//! Validation testbed (§4.2.2): evaluate an ECCI application under
+//! controlled edge-cloud channel dynamics before deploying it.
+//!
+//! "The impact of edge-cloud channel dynamics (e.g., bandwidth, delay,
+//! jitter) on the testbed can help users understand the actual
+//! performance of an ECCI application in real-world networks." A
+//! `ChannelProfile` is a piecewise schedule of WAN shapes; the
+//! video-query world applies each phase to its uplinks/downlinks at the
+//! scheduled virtual time (the SDN-reconfiguration analogue), and
+//! `evaluate` runs the same workload under several profiles for
+//! comparison.
+
+use crate::app::videoquery::{run_cell, CellConfig, Compute, ServiceTimes};
+use crate::metrics::CellMetrics;
+use crate::util::SimTime;
+use anyhow::Result;
+
+/// One WAN shape, active from `start_s` until the next phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Phase {
+    pub start_s: f64,
+    pub uplink_mbps: f64,
+    pub downlink_mbps: f64,
+    pub delay_ms: f64,
+    pub jitter_ms: f64,
+}
+
+impl Phase {
+    pub fn stable(uplink_mbps: f64, downlink_mbps: f64, delay_ms: f64) -> Self {
+        Phase { start_s: 0.0, uplink_mbps, downlink_mbps, delay_ms, jitter_ms: 0.0 }
+    }
+
+    pub fn delay_us(&self) -> SimTime {
+        crate::util::millis(self.delay_ms)
+    }
+
+    pub fn jitter_us(&self) -> SimTime {
+        crate::util::millis(self.jitter_ms)
+    }
+}
+
+/// A named piecewise channel schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelProfile {
+    pub name: String,
+    /// must be sorted by start_s; phase 0 should start at 0
+    pub phases: Vec<Phase>,
+}
+
+impl ChannelProfile {
+    pub fn new(name: impl Into<String>, phases: Vec<Phase>) -> Self {
+        let mut phases = phases;
+        phases.sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap());
+        ChannelProfile { name: name.into(), phases }
+    }
+
+    /// The paper's baseline: 20/40 Mbps, fixed delay, no jitter.
+    pub fn paper_wan(delay_ms: f64) -> Self {
+        ChannelProfile::new(
+            format!("paper-{delay_ms}ms"),
+            vec![Phase::stable(20.0, 40.0, delay_ms)],
+        )
+    }
+
+    /// Mid-run degradation: bandwidth collapses for `[from_s, to_s)`.
+    pub fn degraded(from_s: f64, to_s: f64, mbps: f64) -> Self {
+        ChannelProfile::new(
+            format!("degraded-{mbps}mbps"),
+            vec![
+                Phase::stable(20.0, 40.0, 0.0),
+                Phase { start_s: from_s, uplink_mbps: mbps, downlink_mbps: mbps * 2.0, delay_ms: 0.0, jitter_ms: 0.0 },
+                Phase { start_s: to_s, ..Phase::stable(20.0, 40.0, 0.0) },
+            ],
+        )
+    }
+
+    /// Jittery channel: fixed bandwidth, delay with +/- jitter.
+    pub fn jittery(delay_ms: f64, jitter_ms: f64) -> Self {
+        ChannelProfile::new(
+            format!("jittery-{delay_ms}+-{jitter_ms}ms"),
+            vec![Phase { start_s: 0.0, uplink_mbps: 20.0, downlink_mbps: 40.0, delay_ms, jitter_ms }],
+        )
+    }
+
+    /// Phase active at time `t` (seconds).
+    pub fn phase_at(&self, t: f64) -> &Phase {
+        let mut cur = &self.phases[0];
+        for p in &self.phases {
+            if p.start_s <= t {
+                cur = p;
+            }
+        }
+        cur
+    }
+}
+
+/// Run one workload cell under each profile; returns (profile name,
+/// metrics) pairs for a side-by-side report.
+pub fn evaluate(
+    base: &CellConfig,
+    profiles: &[ChannelProfile],
+    svc: &ServiceTimes,
+    mut compute: impl FnMut() -> Compute,
+) -> Result<Vec<(String, CellMetrics)>> {
+    let mut out = Vec::new();
+    for profile in profiles {
+        let mut cfg = base.clone();
+        cfg.channel = Some(profile.clone());
+        let m = run_cell(cfg, svc.clone(), compute())?;
+        out.push((profile.name.clone(), m));
+    }
+    Ok(out)
+}
+
+/// Markdown report for an `evaluate` result.
+pub fn report(results: &mut [(String, CellMetrics)]) -> String {
+    let mut out = String::from(
+        "| profile | F1 | BWC (MB) | EIL mean ms | EIL p99 ms |\n|---|---|---|---|---|\n",
+    );
+    for (name, m) in results.iter_mut() {
+        let eil = m.eil_ms();
+        let p99 = m.eil_p99_ms();
+        out.push_str(&format!(
+            "| {name} | {:.3} | {:.2} | {eil:.1} | {p99:.1} |\n",
+            m.f1.f1(),
+            m.bwc_mb()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::app::videoquery::Paradigm;
+
+    #[test]
+    fn profile_phase_lookup() {
+        let p = ChannelProfile::degraded(10.0, 20.0, 5.0);
+        assert_eq!(p.phase_at(0.0).uplink_mbps, 20.0);
+        assert_eq!(p.phase_at(12.0).uplink_mbps, 5.0);
+        assert_eq!(p.phase_at(25.0).uplink_mbps, 20.0);
+    }
+
+    #[test]
+    fn phases_sorted_on_construction() {
+        let p = ChannelProfile::new(
+            "x",
+            vec![
+                Phase { start_s: 10.0, ..Phase::stable(1.0, 1.0, 0.0) },
+                Phase::stable(20.0, 40.0, 0.0),
+            ],
+        );
+        assert_eq!(p.phases[0].start_s, 0.0);
+    }
+
+    #[test]
+    fn degraded_channel_raises_upload_latency() {
+        let base = CellConfig {
+            paradigm: Paradigm::Ci, // every crop crosses the WAN
+            interval_s: 0.5,
+            duration_s: 12.0,
+            ..Default::default()
+        };
+        let svc = ServiceTimes::synthetic();
+        let mut results = evaluate(
+            &base,
+            &[
+                ChannelProfile::paper_wan(0.0),
+                ChannelProfile::degraded(3.0, 12.0, 1.0),
+            ],
+            &svc,
+            || Compute::Synthetic { target_bias: 0.05 },
+        )
+        .unwrap();
+        let stable = results[0].1.eil.mean();
+        let degraded = results[1].1.eil.mean();
+        assert!(
+            degraded > stable * 1.3,
+            "1 Mbps squeeze had no effect: {degraded} vs {stable}"
+        );
+        let text = report(&mut results);
+        assert!(text.contains("degraded-1mbps"), "{text}");
+    }
+
+    #[test]
+    fn jitter_widens_tail_latency() {
+        let base = CellConfig {
+            paradigm: Paradigm::Ci,
+            interval_s: 0.5,
+            duration_s: 12.0,
+            ..Default::default()
+        };
+        let svc = ServiceTimes::synthetic();
+        let mut results = evaluate(
+            &base,
+            &[ChannelProfile::paper_wan(20.0), ChannelProfile::jittery(20.0, 80.0)],
+            &svc,
+            || Compute::Synthetic { target_bias: 0.05 },
+        )
+        .unwrap();
+        let stable_p99 = results[0].1.eil.quantile(0.99);
+        let jitter_p99 = results[1].1.eil.quantile(0.99);
+        assert!(
+            jitter_p99 > stable_p99 + 0.020,
+            "jitter invisible in p99: {jitter_p99} vs {stable_p99}"
+        );
+    }
+}

@@ -1,0 +1,374 @@
+//! Topology files (§4.4.3, Figure 4): the application specification.
+//!
+//! A topology file is an "extended YAML" document describing the app,
+//! its components (images, resource requirements, placement labels,
+//! connections) and how many instances to run. The orchestrator turns
+//! it into a deployment plan; submitting an updated file triggers a
+//! thorough or incremental update (`deploy::diff_plans`).
+//!
+//! Example (matches Figure 4's fields):
+//!
+//! ```yaml
+//! app: videoquery
+//! version: 2
+//! components:
+//!   - name: od
+//!     image: ace/od:2
+//!     location: edge
+//!     placement: per-label
+//!     label: camera
+//!     resources:
+//!       cpu: 500
+//!       mem: 256
+//!     connections: [lic, eoc, coc]
+//! ```
+
+use crate::infra::Resources;
+use crate::json::Value;
+use crate::yamlite;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Where a component may run (the paper's edge/cloud user requirement).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Location {
+    Edge,
+    Cloud,
+    Any,
+}
+
+impl Location {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "edge" => Location::Edge,
+            "cloud" => Location::Cloud,
+            "any" => Location::Any,
+            other => bail!("bad location '{other}' (edge|cloud|any)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Location::Edge => "edge",
+            Location::Cloud => "cloud",
+            Location::Any => "any",
+        }
+    }
+}
+
+/// Placement mode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Placement {
+    /// N instances anywhere satisfying the constraints.
+    Replicas(usize),
+    /// One instance on EVERY matching node (e.g. OD on each camera
+    /// node); `label` is required.
+    PerLabel,
+    /// One instance per EC (e.g. the EC-local in-app controller).
+    PerEc,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComponentSpec {
+    pub name: String,
+    pub image: String,
+    pub location: Location,
+    pub placement: Placement,
+    /// node label filter, `key` or `key=value`
+    pub label: Option<String>,
+    pub resources: Resources,
+    pub connections: Vec<String>,
+    /// free-form parameters forwarded to the component
+    pub params: BTreeMap<String, String>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Topology {
+    pub app: String,
+    pub version: u64,
+    pub components: Vec<ComponentSpec>,
+}
+
+impl Topology {
+    pub fn component(&self, name: &str) -> Option<&ComponentSpec> {
+        self.components.iter().find(|c| c.name == name)
+    }
+
+    /// Parse + validate a topology document.
+    pub fn parse(src: &str) -> Result<Topology> {
+        let doc = yamlite::parse(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_value(&doc)
+    }
+
+    pub fn from_value(doc: &Value) -> Result<Topology> {
+        let app = doc
+            .get("app")
+            .as_str()
+            .context("topology: missing 'app'")?
+            .to_string();
+        let version = doc.get("version").as_i64().unwrap_or(1) as u64;
+        let comps = doc
+            .get("components")
+            .as_arr()
+            .context("topology: missing 'components'")?;
+        let mut components = Vec::new();
+        for (i, c) in comps.iter().enumerate() {
+            let name = c
+                .get("name")
+                .as_str()
+                .with_context(|| format!("component #{i}: missing 'name'"))?
+                .to_string();
+            let image = c
+                .get("image")
+                .as_str()
+                .unwrap_or(&format!("ace/{name}:latest"))
+                .to_string();
+            let location = Location::parse(c.get("location").as_str().unwrap_or("any"))?;
+            let label = c.get("label").as_str().map(|s| s.to_string());
+            let placement = match c.get("placement").as_str().unwrap_or("replicas") {
+                "per-label" => {
+                    if label.is_none() {
+                        bail!("component '{name}': per-label placement requires 'label'");
+                    }
+                    Placement::PerLabel
+                }
+                "per-ec" => Placement::PerEc,
+                "replicas" => {
+                    Placement::Replicas(c.get("replicas").as_usize().unwrap_or(1))
+                }
+                other => bail!("component '{name}': bad placement '{other}'"),
+            };
+            let resources = Resources {
+                cpu_millis: c.get("resources").get("cpu").as_usize().unwrap_or(100) as u32,
+                mem_mb: c.get("resources").get("mem").as_usize().unwrap_or(64) as u32,
+            };
+            if resources.cpu_millis == 0 || resources.mem_mb == 0 {
+                bail!("component '{name}': zero resource request");
+            }
+            let connections = c
+                .get("connections")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                .collect();
+            let mut params = BTreeMap::new();
+            if let Some(obj) = c.get("params").as_obj() {
+                for (k, v) in obj {
+                    let s = match v {
+                        Value::Str(s) => s.clone(),
+                        other => crate::json::to_string(other),
+                    };
+                    params.insert(k.clone(), s);
+                }
+            }
+            components.push(ComponentSpec {
+                name,
+                image,
+                location,
+                placement,
+                label,
+                resources,
+                connections,
+                params,
+            });
+        }
+        let topo = Topology { app, version, components };
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// Structural validation: unique names, resolvable connections, no
+    /// self-connection.
+    pub fn validate(&self) -> Result<()> {
+        let mut names = BTreeSet::new();
+        for c in &self.components {
+            if !names.insert(c.name.as_str()) {
+                bail!("duplicate component name '{}'", c.name);
+            }
+        }
+        for c in &self.components {
+            for conn in &c.connections {
+                if conn == &c.name {
+                    bail!("component '{}' connects to itself", c.name);
+                }
+                if !names.contains(conn.as_str()) {
+                    bail!("component '{}' connects to unknown '{conn}'", c.name);
+                }
+            }
+        }
+        if self.components.is_empty() {
+            bail!("topology has no components");
+        }
+        Ok(())
+    }
+
+    /// Connection edges (unordered pairs, deduped).
+    pub fn edges(&self) -> BTreeSet<(String, String)> {
+        let mut out = BTreeSet::new();
+        for c in &self.components {
+            for conn in &c.connections {
+                let (a, b) = if c.name < *conn {
+                    (c.name.clone(), conn.clone())
+                } else {
+                    (conn.clone(), c.name.clone())
+                };
+                out.insert((a, b));
+            }
+        }
+        out
+    }
+}
+
+/// The video-query application topology used throughout §5 (DG, OD,
+/// EOC, COC, IC [global + per-EC local], RS).
+pub const VIDEOQUERY_TOPOLOGY: &str = r#"
+app: videoquery
+version: 1
+components:
+  - name: dg
+    image: ace/datagen:1
+    location: edge
+    placement: per-label
+    label: camera
+    resources:
+      cpu: 200
+      mem: 128
+    connections: [od]
+  - name: od
+    image: ace/object-detector:1
+    location: edge
+    placement: per-label
+    label: camera
+    resources:
+      cpu: 1000
+      mem: 256
+    connections: [lic, eoc, coc]
+    params:
+      interval: "0.5"
+  - name: eoc
+    image: ace/edge-classifier:1
+    location: edge
+    placement: per-ec
+    resources:
+      cpu: 4000
+      mem: 2048
+    connections: [lic, coc]
+  - name: lic
+    image: ace/inapp-controller:1
+    location: edge
+    placement: per-ec
+    resources:
+      cpu: 500
+      mem: 256
+    connections: [ic]
+  - name: coc
+    image: ace/cloud-classifier:1
+    location: cloud
+    resources:
+      cpu: 16000
+      mem: 8192
+    connections: [ic, rs]
+  - name: ic
+    image: ace/inapp-controller:1
+    location: cloud
+    resources:
+      cpu: 1000
+      mem: 512
+    connections: [rs]
+  - name: rs
+    image: ace/result-storage:1
+    location: cloud
+    resources:
+      cpu: 500
+      mem: 1024
+    connections: []
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_videoquery_topology() {
+        let t = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        assert_eq!(t.app, "videoquery");
+        assert_eq!(t.components.len(), 7);
+        let od = t.component("od").unwrap();
+        assert_eq!(od.location, Location::Edge);
+        assert_eq!(od.placement, Placement::PerLabel);
+        assert_eq!(od.label.as_deref(), Some("camera"));
+        assert_eq!(od.resources.cpu_millis, 1000);
+        assert_eq!(od.connections, vec!["lic", "eoc", "coc"]);
+        assert_eq!(od.params.get("interval").map(|s| s.as_str()), Some("0.5"));
+        let coc = t.component("coc").unwrap();
+        assert_eq!(coc.location, Location::Cloud);
+        assert_eq!(coc.placement, Placement::Replicas(1));
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let bad = "
+app: x
+components:
+  - name: a
+  - name: a
+";
+        assert!(Topology::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_connection() {
+        let bad = "
+app: x
+components:
+  - name: a
+    connections: [ghost]
+";
+        assert!(Topology::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_self_connection() {
+        let bad = "
+app: x
+components:
+  - name: a
+    connections: [a]
+";
+        assert!(Topology::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_per_label_without_label() {
+        let bad = "
+app: x
+components:
+  - name: a
+    placement: per-label
+";
+        assert!(Topology::parse(bad).is_err());
+    }
+
+    #[test]
+    fn edges_are_deduped_and_unordered() {
+        let t = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        let edges = t.edges();
+        assert!(edges.contains(&("coc".to_string(), "od".to_string())));
+        // od->coc and no duplicate reverse edge
+        assert_eq!(
+            edges.iter().filter(|(a, b)| (a == "coc" && b == "od") || (a == "od" && b == "coc")).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let t = Topology::parse("app: mini\ncomponents:\n  - name: solo\n").unwrap();
+        let c = t.component("solo").unwrap();
+        assert_eq!(c.location, Location::Any);
+        assert_eq!(c.placement, Placement::Replicas(1));
+        assert_eq!(c.resources.cpu_millis, 100);
+        assert_eq!(t.version, 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Shared utilities: deterministic PRNG, simulated/real time, stats.
+
+pub mod prng;
+pub mod stats;
+
+use std::fmt;
+
+/// Simulated time in microseconds (the DES clock unit).
+pub type SimTime = u64;
+
+pub const MICROS_PER_SEC: u64 = 1_000_000;
+
+/// Convert seconds (f64) to simulated microseconds.
+pub fn secs(s: f64) -> SimTime {
+    (s * MICROS_PER_SEC as f64).round() as SimTime
+}
+
+/// Convert milliseconds (f64) to simulated microseconds.
+pub fn millis(ms: f64) -> SimTime {
+    secs(ms / 1e3)
+}
+
+/// Simulated microseconds back to seconds.
+pub fn to_secs(t: SimTime) -> f64 {
+    t as f64 / MICROS_PER_SEC as f64
+}
+
+/// Simulated microseconds to milliseconds.
+pub fn to_millis(t: SimTime) -> f64 {
+    t as f64 / 1e3
+}
+
+/// Hierarchical ACE entity id (§4.3.1): infrastructure -> EC/CC -> node.
+///
+/// Rendered as e.g. `infra-7/ec-1/rpi-2`. The three-level scheme is the
+/// paper's id assignment: ACE assigns a unique infrastructure id, a
+/// second-layer id per EC/CC, and a third-layer id per node.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AceId {
+    parts: Vec<String>,
+}
+
+impl AceId {
+    pub fn root(infra: impl Into<String>) -> Self {
+        AceId { parts: vec![infra.into()] }
+    }
+
+    pub fn child(&self, part: impl Into<String>) -> Self {
+        let mut parts = self.parts.clone();
+        parts.push(part.into());
+        AceId { parts }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn parent(&self) -> Option<AceId> {
+        if self.parts.len() <= 1 {
+            None
+        } else {
+            Some(AceId { parts: self.parts[..self.parts.len() - 1].to_vec() })
+        }
+    }
+
+    pub fn leaf(&self) -> &str {
+        self.parts.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn is_ancestor_of(&self, other: &AceId) -> bool {
+        other.parts.len() > self.parts.len()
+            && other.parts[..self.parts.len()] == self.parts[..]
+    }
+
+    pub fn parse(s: &str) -> Self {
+        AceId { parts: s.split('/').map(|p| p.to_string()).collect() }
+    }
+}
+
+impl fmt::Display for AceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.parts.join("/"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_roundtrip() {
+        assert_eq!(secs(1.0), MICROS_PER_SEC);
+        assert_eq!(millis(50.0), 50_000);
+        assert!((to_secs(secs(3.25)) - 3.25).abs() < 1e-9);
+        assert!((to_millis(millis(12.5)) - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ace_id_hierarchy() {
+        let infra = AceId::root("infra-1");
+        let ec = infra.child("ec-1");
+        let node = ec.child("rpi-2");
+        assert_eq!(node.to_string(), "infra-1/ec-1/rpi-2");
+        assert_eq!(node.depth(), 3);
+        assert!(infra.is_ancestor_of(&node));
+        assert!(ec.is_ancestor_of(&node));
+        assert!(!node.is_ancestor_of(&ec));
+        assert_eq!(node.parent().unwrap(), ec);
+        assert_eq!(AceId::parse("infra-1/ec-1/rpi-2"), node);
+        assert_eq!(node.leaf(), "rpi-2");
+    }
+}

@@ -1,0 +1,118 @@
+//! Small statistics helpers used by metrics and the bench harnesses.
+
+/// Online mean/min/max/count accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Reservoir-free percentile helper: stores all samples (fine at the
+/// scales the experiments run at) and answers arbitrary quantiles.
+#[derive(Debug, Clone, Default)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Percentiles { samples: Vec::new(), sorted: true }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// q in [0, 1]; nearest-rank on the sorted samples.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let idx = ((self.samples.len() as f64 - 1.0) * q).round() as usize;
+        self.samples[idx.min(self.samples.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_tracks_extrema() {
+        let mut s = Summary::new();
+        for v in [3.0, 1.0, 2.0] {
+            s.add(v);
+        }
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let mut p = Percentiles::new();
+        for i in 0..100 {
+            p.add(i as f64);
+        }
+        assert_eq!(p.quantile(0.0), 0.0);
+        assert_eq!(p.quantile(1.0), 99.0);
+        let p50 = p.quantile(0.5);
+        let p99 = p.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!((p.mean() - 49.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let mut p = Percentiles::new();
+        assert_eq!(p.quantile(0.5), 0.0);
+        assert_eq!(p.mean(), 0.0);
+        assert!(p.is_empty());
+    }
+}

@@ -1,0 +1,8 @@
+//! Video substrate: synthetic camera streams (Data Generator) and the
+//! frame-differencing Object Detector (§5.1.2).
+
+pub mod od;
+pub mod synth;
+
+pub use od::{Crop, ObjectDetector, OdConfig};
+pub use synth::{CameraStream, Image};

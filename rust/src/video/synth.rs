@@ -1,0 +1,485 @@
+//! Procedural scene renderer — bit-exact mirror of
+//! `python/compile/scenes.py` (the shared python<->rust scene spec).
+//!
+//! Determinism contract (see scenes.py): integer geometry, f32 colors
+//! computed in f64 then rounded once (matching numpy's
+//! `np.float32(py_float_expr)`), noise drawn from the indexed SplitMix64
+//! streams in `util::prng`, primitives applied in a fixed order.
+//! `rust/tests/golden_scenes.rs` asserts bit-identical crops against
+//! `artifacts/golden/crops.bin`.
+
+use crate::util::prng;
+
+pub const CROP: usize = 32;
+pub const NUM_CLASSES: usize = 8;
+/// "motorcycle" — the §5 query target.
+pub const TARGET_CLASS: u8 = 1;
+
+pub const CLASSES: [&str; 8] = [
+    "background",
+    "motorcycle",
+    "car",
+    "person",
+    "bus",
+    "bicycle",
+    "truck",
+    "dog",
+];
+
+pub const DARK: [f32; 3] = [0.08, 0.08, 0.10];
+pub const LIGHT: [f32; 3] = [0.85, 0.88, 0.92];
+
+/// Row-major (y, x, c) RGB f32 image.
+#[derive(Debug, Clone)]
+pub struct Image {
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn zeros(h: usize, w: usize) -> Self {
+        Image { h, w, data: vec![0.0; h * w * 3] }
+    }
+
+    #[inline]
+    pub fn idx(&self, y: usize, x: usize, c: usize) -> usize {
+        (y * self.w + x) * 3 + c
+    }
+
+    #[inline]
+    pub fn set_px(&mut self, y: usize, x: usize, color: &[f32; 3]) {
+        let i = self.idx(y, x, 0);
+        self.data[i] = color[0];
+        self.data[i + 1] = color[1];
+        self.data[i + 2] = color[2];
+    }
+
+    pub fn clip01(&mut self) {
+        for v in &mut self.data {
+            *v = v.clamp(0.0, 1.0);
+        }
+    }
+
+    /// Grayscale plane: (r + g + b) / 3 per pixel.
+    pub fn gray(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.h * self.w);
+        for p in self.data.chunks_exact(3) {
+            out.push((p[0] + p[1] + p[2]) * (1.0 / 3.0));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitives (mirror of scenes.py; same names, same semantics)
+// ---------------------------------------------------------------------------
+
+pub fn fill_rect(img: &mut Image, x0: i64, y0: i64, x1: i64, y1: i64, color: &[f32; 3]) {
+    let ys = y0.max(0) as usize;
+    let ye = y1.clamp(0, img.h as i64) as usize;
+    let xs = x0.max(0) as usize;
+    let xe = x1.clamp(0, img.w as i64) as usize;
+    for y in ys..ye {
+        for x in xs..xe {
+            img.set_px(y, x, color);
+        }
+    }
+}
+
+pub fn fill_disk(img: &mut Image, cx: i64, cy: i64, r: i64, color: &[f32; 3]) {
+    let ys = (cy - r).max(0) as usize;
+    let ye = (cy + r + 1).clamp(0, img.h as i64) as usize;
+    let xs = (cx - r).max(0) as usize;
+    let xe = (cx + r + 1).clamp(0, img.w as i64) as usize;
+    for y in ys..ye {
+        for x in xs..xe {
+            let dx = x as i64 - cx;
+            let dy = y as i64 - cy;
+            if dx * dx + dy * dy <= r * r {
+                img.set_px(y, x, color);
+            }
+        }
+    }
+}
+
+pub fn fill_ring(img: &mut Image, cx: i64, cy: i64, r: i64, w: i64, color: &[f32; 3]) {
+    let inner = (r - w).max(0);
+    let ys = (cy - r).max(0) as usize;
+    let ye = (cy + r + 1).clamp(0, img.h as i64) as usize;
+    let xs = (cx - r).max(0) as usize;
+    let xe = (cx + r + 1).clamp(0, img.w as i64) as usize;
+    for y in ys..ye {
+        for x in xs..xe {
+            let dx = x as i64 - cx;
+            let dy = y as i64 - cy;
+            let d2 = dx * dx + dy * dy;
+            if d2 <= r * r && d2 >= inner * inner {
+                img.set_px(y, x, color);
+            }
+        }
+    }
+}
+
+#[inline]
+fn sc(v: i64, s8: i64) -> i64 {
+    (v * s8).div_euclid(8)
+}
+
+/// Draw one object of class `cls` at offset (ox, oy) with scale s8/8.
+/// Stream index map matches scenes.py: 3,4,5 = body RGB.
+pub fn render_object(img: &mut Image, cls: u8, seed: u64, ox: i64, oy: i64, s8: i64) {
+    if cls == 0 {
+        return;
+    }
+    // numpy computes f(i)*0.8+0.1 in f64 then casts to f32 once
+    let f = |i: u64| -> f32 { (prng::f32_at(seed, i) as f64 * 0.8 + 0.1) as f32 };
+    let body = [f(3), f(4), f(5)];
+    let xx = |v: i64| ox + sc(v, s8);
+    let yy = |v: i64| oy + sc(v, s8);
+    let rr = |v: i64| sc(v, s8).max(1);
+    match cls {
+        1 => {
+            // motorcycle: two small filled wheels, low body, handlebar
+            fill_rect(img, xx(6), yy(14), xx(26), yy(19), &body);
+            fill_rect(img, xx(10), yy(10), xx(18), yy(14), &body);
+            fill_rect(img, xx(22), yy(8), xx(24), yy(16), &DARK);
+            fill_disk(img, xx(8), yy(24), rr(4), &DARK);
+            fill_disk(img, xx(24), yy(24), rr(4), &DARK);
+        }
+        2 => {
+            // car: wide body + cabin + two wheels
+            fill_rect(img, xx(3), yy(12), xx(29), yy(22), &body);
+            fill_rect(img, xx(9), yy(6), xx(23), yy(12), &body);
+            fill_rect(img, xx(11), yy(7), xx(21), yy(11), &LIGHT);
+            fill_disk(img, xx(9), yy(23), rr(3), &DARK);
+            fill_disk(img, xx(23), yy(23), rr(3), &DARK);
+        }
+        3 => {
+            // person: head + torso + two legs
+            fill_disk(img, xx(16), yy(7), rr(3), &body);
+            fill_rect(img, xx(13), yy(10), xx(19), yy(22), &body);
+            fill_rect(img, xx(13), yy(22), xx(15), yy(29), &DARK);
+            fill_rect(img, xx(17), yy(22), xx(19), yy(29), &DARK);
+        }
+        4 => {
+            // bus: large box, window strip, two wheels
+            fill_rect(img, xx(3), yy(6), xx(29), yy(24), &body);
+            fill_rect(img, xx(5), yy(9), xx(27), yy(13), &LIGHT);
+            fill_disk(img, xx(9), yy(25), rr(3), &DARK);
+            fill_disk(img, xx(23), yy(25), rr(3), &DARK);
+        }
+        5 => {
+            // bicycle: two RINGS (vs motorcycle's disks) + thin frame
+            fill_ring(img, xx(9), yy(22), rr(5), sc(2, s8).max(1), &DARK);
+            fill_ring(img, xx(23), yy(22), rr(5), sc(2, s8).max(1), &DARK);
+            fill_rect(img, xx(9), yy(13), xx(23), yy(15), &body);
+            fill_rect(img, xx(15), yy(9), xx(17), yy(14), &body);
+        }
+        6 => {
+            // truck: trailer + cab + three wheels
+            fill_rect(img, xx(3), yy(8), xx(20), yy(22), &body);
+            fill_rect(img, xx(21), yy(12), xx(29), yy(22), &body);
+            fill_rect(img, xx(23), yy(13), xx(28), yy(17), &LIGHT);
+            fill_disk(img, xx(8), yy(23), rr(3), &DARK);
+            fill_disk(img, xx(16), yy(23), rr(3), &DARK);
+            fill_disk(img, xx(25), yy(23), rr(3), &DARK);
+        }
+        7 => {
+            // dog: body + head + four legs + tail
+            fill_rect(img, xx(8), yy(14), xx(24), yy(20), &body);
+            fill_disk(img, xx(25), yy(12), rr(3), &body);
+            fill_rect(img, xx(9), yy(20), xx(11), yy(26), &body);
+            fill_rect(img, xx(13), yy(20), xx(15), yy(26), &body);
+            fill_rect(img, xx(17), yy(20), xx(19), yy(26), &body);
+            fill_rect(img, xx(21), yy(20), xx(23), yy(26), &body);
+            fill_rect(img, xx(6), yy(12), xx(8), yy(16), &body);
+        }
+        _ => panic!("unknown class {cls}"),
+    }
+}
+
+pub const NOISE_SIGMA: f32 = 0.06;
+
+/// Textured background: base gray + horizontal gradient + pixel noise.
+/// Noise index for (y, x, c) is `(y*W + x)*3 + c`, starting at 16.
+pub fn paint_background(img: &mut Image, seed: u64, sigma: f32) {
+    let g = (prng::f32_at(seed, 0) as f64 * 0.3 + 0.35) as f32;
+    let grad = (prng::f32_at(seed, 1) as f64 * 0.2 - 0.1) as f32;
+    let w = img.w;
+    let h = img.h;
+    let scale = 2.0f32 * sigma;
+    for y in 0..h {
+        for x in 0..w {
+            let base = g + grad * (x as f32 / w as f32);
+            for c in 0..3 {
+                let i = ((y * w + x) * 3 + c) as u64;
+                let n = prng::f32_at(seed, 16 + i);
+                img.data[(y * w + x) * 3 + c] = base + (n - 0.5) * scale;
+            }
+        }
+    }
+}
+
+/// Render one 32x32 crop — MUST match scenes.make_crop bit-exactly.
+pub fn make_crop(cls: u8, seed: u64) -> Image {
+    let j = 2 * seed + 1;
+    let b = 2 * seed;
+    let mut img = Image::zeros(CROP, CROP);
+    paint_background(&mut img, b, NOISE_SIGMA);
+    let ox = prng::range_at(j, 0, -3, 4);
+    let oy = prng::range_at(j, 1, -3, 4);
+    let s8 = prng::range_at(j, 2, 6, 11);
+    render_object(&mut img, cls, j, ox, oy, s8);
+    img.clip01();
+    img
+}
+
+// ---------------------------------------------------------------------------
+// Frame synthesis (rust-only: the Data Generator's video streams)
+// ---------------------------------------------------------------------------
+
+/// Default synthetic frame geometry (matches artifacts manifest).
+pub const FRAME_H: usize = 96;
+pub const FRAME_W: usize = 160;
+
+/// A moving object in a camera's scene.
+#[derive(Debug, Clone)]
+pub struct MovingObject {
+    pub cls: u8,
+    pub seed: u64,
+    /// x position of the object's base-box origin at `t0` (pixels).
+    pub x0: f64,
+    pub y: i64,
+    /// horizontal speed (px/s)
+    pub vx: f64,
+    pub s8: i64,
+    pub t0: f64,
+}
+
+impl MovingObject {
+    pub fn x_at(&self, t: f64) -> i64 {
+        (self.x0 + self.vx * (t - self.t0)).round() as i64
+    }
+
+    /// Object center in frame coordinates at time `t`.
+    pub fn center_at(&self, t: f64) -> (i64, i64) {
+        (self.y + sc(16, self.s8), self.x_at(t) + sc(16, self.s8))
+    }
+}
+
+/// Deterministic synthetic camera stream: a static textured background
+/// with per-frame temporal noise and `slots` moving objects that respawn
+/// with new classes once they exit. Class mix matches the EOC training
+/// distribution (target + confuser boosted) so the classifiers operate
+/// in distribution.
+#[derive(Debug, Clone)]
+pub struct CameraStream {
+    pub cam_seed: u64,
+    pub h: usize,
+    pub w: usize,
+    pub fps: f64,
+    slots: Vec<MovingObject>,
+    respawns: Vec<u64>,
+}
+
+/// Class sampling weights (percent) — mirrors aot.py EOC_WEIGHTS.
+const CLASS_PCT: [u64; 8] = [14, 25, 8, 8, 8, 21, 8, 8];
+
+fn sample_class(u: u32) -> u8 {
+    let mut v = (u as u64) % 100;
+    for (c, p) in CLASS_PCT.iter().enumerate() {
+        if v < *p {
+            return c as u8;
+        }
+        v -= p;
+    }
+    7
+}
+
+impl CameraStream {
+    pub fn new(cam_seed: u64, slots: usize) -> Self {
+        let mut s = CameraStream {
+            cam_seed,
+            h: FRAME_H,
+            w: FRAME_W,
+            fps: 30.0,
+            slots: Vec::new(),
+            respawns: vec![0; slots],
+        };
+        for i in 0..slots {
+            s.slots.push(s.spawn(i, 0, 0.0));
+        }
+        s
+    }
+
+    /// Deterministic object for (slot, respawn#).
+    fn spawn(&self, slot: usize, respawn: u64, t: f64) -> MovingObject {
+        let seed = prng::u64_at(self.cam_seed, (slot as u64) << 32 | respawn);
+        let cls = sample_class(prng::u32_at(seed, 0));
+        let lanes = self.h as i64 / 36;
+        let lane = prng::range_at(seed, 1, 0, lanes.max(1));
+        let vx = 25.0 + prng::f32_at(seed, 2) as f64 * 55.0; // 25..80 px/s
+        let s8 = prng::range_at(seed, 3, 6, 11);
+        // stagger initial spawns across the frame; respawns enter left
+        let x0 = if respawn == 0 {
+            prng::range_at(seed, 4, -20, self.w as i64 - 20) as f64
+        } else {
+            -36.0
+        };
+        MovingObject {
+            cls,
+            seed,
+            x0,
+            y: lane * 36 + 2,
+            vx,
+            s8,
+            t0: t,
+        }
+    }
+
+    /// Advance respawn state up to time `t` (monotonic calls).
+    pub fn advance_to(&mut self, t: f64) {
+        for i in 0..self.slots.len() {
+            while self.slots[i].x_at(t) > self.w as i64 + 8 {
+                self.respawns[i] += 1;
+                self.slots[i] = self.spawn(i, self.respawns[i], t);
+            }
+        }
+    }
+
+    /// Objects currently visible (their center inside the frame).
+    pub fn visible_at(&self, t: f64) -> Vec<&MovingObject> {
+        self.slots
+            .iter()
+            .filter(|o| {
+                let (_, cx) = o.center_at(t);
+                cx >= 0 && cx < self.w as i64
+            })
+            .collect()
+    }
+
+    /// Render the frame at time `t` (frame index = round(t * fps)).
+    pub fn frame_at(&self, t: f64) -> Image {
+        let mut img = Image::zeros(self.h, self.w);
+        let fidx = (t * self.fps).round() as u64;
+        // static base pattern + temporal noise: background stream is
+        // fixed per camera, noise stream varies per frame
+        let noise_seed = prng::u64_at(self.cam_seed ^ 0xBACC_0FF5, fidx);
+        paint_background_split(&mut img, self.cam_seed, noise_seed, NOISE_SIGMA);
+        for o in &self.slots {
+            render_object(&mut img, o.cls, o.seed, o.x_at(t), o.y, o.s8);
+        }
+        img.clip01();
+        img
+    }
+}
+
+/// Background where the base pattern and the per-frame noise come from
+/// different streams (static scene + temporal sensor noise).
+pub fn paint_background_split(img: &mut Image, base_seed: u64, noise_seed: u64, sigma: f32) {
+    let g = (prng::f32_at(base_seed, 0) as f64 * 0.3 + 0.35) as f32;
+    let grad = (prng::f32_at(base_seed, 1) as f64 * 0.2 - 0.1) as f32;
+    let w = img.w;
+    let scale = 2.0f32 * sigma;
+    for y in 0..img.h {
+        for x in 0..w {
+            let base = g + grad * (x as f32 / w as f32);
+            for c in 0..3 {
+                let i = ((y * w + x) * 3 + c) as u64;
+                let n = prng::f32_at(noise_seed, 16 + i);
+                img.data[(y * w + x) * 3 + c] = base + (n - 0.5) * scale;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crops_are_deterministic() {
+        let a = make_crop(1, 42);
+        let b = make_crop(1, 42);
+        assert_eq!(a.data, b.data);
+        let c = make_crop(1, 43);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn crop_values_in_unit_range() {
+        for cls in 0..8u8 {
+            let img = make_crop(cls, 7);
+            assert!(img.data.iter().all(|v| (0.0..=1.0).contains(v)));
+            assert_eq!(img.data.len(), CROP * CROP * 3);
+        }
+    }
+
+    #[test]
+    fn objects_change_pixels() {
+        let bg = make_crop(0, 5);
+        for cls in 1..8u8 {
+            let obj = make_crop(cls, 5);
+            let diff = bg
+                .data
+                .iter()
+                .zip(&obj.data)
+                .filter(|(a, b)| a != b)
+                .count();
+            assert!(diff > 50, "class {cls} changed only {diff} px");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinct() {
+        // motorcycle vs bicycle must differ (rings vs disks)
+        let m = make_crop(1, 9);
+        let b = make_crop(5, 9);
+        assert_ne!(m.data, b.data);
+    }
+
+    #[test]
+    fn stream_respawns_deterministically() {
+        let mut s1 = CameraStream::new(100, 2);
+        let mut s2 = CameraStream::new(100, 2);
+        for i in 0..20 {
+            let t = i as f64 * 0.5;
+            s1.advance_to(t);
+            s2.advance_to(t);
+        }
+        let f1 = s1.frame_at(10.0);
+        let f2 = s2.frame_at(10.0);
+        assert_eq!(f1.data, f2.data);
+    }
+
+    #[test]
+    fn stream_has_visible_objects() {
+        let mut s = CameraStream::new(3, 3);
+        let mut total = 0;
+        for i in 0..20 {
+            let t = i as f64;
+            s.advance_to(t);
+            total += s.visible_at(t).len();
+        }
+        assert!(total > 10, "only {total} object-sightings in 20s");
+    }
+
+    #[test]
+    fn gray_is_mean_of_channels() {
+        let img = make_crop(2, 3);
+        let g = img.gray();
+        let i = 5 * CROP + 7;
+        let want = (img.data[i * 3] + img.data[i * 3 + 1] + img.data[i * 3 + 2]) / 3.0;
+        assert!((g[i] - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn moving_object_moves() {
+        let mut s = CameraStream::new(8, 1);
+        s.advance_to(0.0);
+        let f0 = s.frame_at(0.0);
+        let f1 = s.frame_at(0.5);
+        assert_ne!(f0.data, f1.data);
+    }
+}

@@ -1,0 +1,510 @@
+//! YAML-subset parser + emitter ("yamlite").
+//!
+//! The paper's topology files are "extended YAML" (§5.1.3, Fig 4) and
+//! the controller renders deployment instructions as docker-compose
+//! YAML. With serde_yaml unavailable offline we implement the subset
+//! those files need:
+//!
+//!   * block mappings + block sequences nested by indentation (spaces);
+//!   * `- ` list items, including inline `- key: value` mapping starts;
+//!   * flow sequences `[a, b, c]` of scalars;
+//!   * scalars: quoted/unquoted strings, ints, floats, bools, null;
+//!   * `#` comments and blank lines.
+//!
+//! Anchors, multi-doc, flow mappings, and block scalars are rejected
+//! with an error rather than mis-parsed. Values land in `json::Value`,
+//! so topology code shares one data model with the JSON manifest.
+
+use crate::json::Value;
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
+
+struct Line {
+    indent: usize,
+    text: String, // content with indent stripped
+    no: usize,    // 1-based source line number
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, YamlError> {
+    Err(YamlError { line, msg: msg.into() })
+}
+
+fn scan_lines(src: &str) -> Result<Vec<Line>, YamlError> {
+    let mut out = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let no = i + 1;
+        if raw.contains('\t') {
+            return err(no, "tabs are not allowed for indentation");
+        }
+        // strip comments that are not inside quotes
+        let mut text = String::new();
+        let mut in_s = false;
+        let mut in_d = false;
+        for c in raw.chars() {
+            match c {
+                '\'' if !in_d => in_s = !in_s,
+                '"' if !in_s => in_d = !in_d,
+                '#' if !in_s && !in_d => break,
+                _ => {}
+            }
+            text.push(c);
+        }
+        let trimmed_end = text.trim_end();
+        let indent = trimmed_end.len() - trimmed_end.trim_start().len();
+        let content = trimmed_end.trim_start().to_string();
+        if content.is_empty() {
+            continue;
+        }
+        if content.starts_with("---") || content.starts_with('&') || content.starts_with('*') {
+            return err(no, "unsupported yaml feature (multi-doc/anchor)");
+        }
+        out.push(Line { indent, text: content, no });
+    }
+    Ok(out)
+}
+
+/// Parse an unquoted or quoted scalar.
+pub fn parse_scalar(s: &str) -> Value {
+    let t = s.trim();
+    if t.is_empty() || t == "~" || t == "null" {
+        return Value::Null;
+    }
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Value::Str(t[1..t.len() - 1].to_string());
+    }
+    match t {
+        "true" | "True" => return Value::Bool(true),
+        "false" | "False" => return Value::Bool(false),
+        _ => {}
+    }
+    if let Ok(n) = t.parse::<i64>() {
+        return Value::Num(n as f64);
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Value::Num(f);
+    }
+    Value::Str(t.to_string())
+}
+
+fn parse_flow_seq(s: &str, line: usize) -> Result<Value, YamlError> {
+    let inner = &s[1..s.len() - 1];
+    let mut items = Vec::new();
+    if !inner.trim().is_empty() {
+        for part in inner.split(',') {
+            if part.contains('[') || part.contains('{') {
+                return err(line, "nested flow collections unsupported");
+            }
+            items.push(parse_scalar(part));
+        }
+    }
+    Ok(Value::Arr(items))
+}
+
+fn parse_rhs(s: &str, line: usize) -> Result<Value, YamlError> {
+    let t = s.trim();
+    if t.starts_with('[') && t.ends_with(']') {
+        parse_flow_seq(t, line)
+    } else if t == "{}" {
+        // the one flow mapping we accept: the empty one (emitted for
+        // empty containers, e.g. a node with no services left)
+        Ok(Value::Obj(BTreeMap::new()))
+    } else if t.starts_with('{') {
+        err(line, "flow mappings unsupported")
+    } else if t.starts_with('|') || t.starts_with('>') {
+        err(line, "block scalars unsupported")
+    } else {
+        Ok(parse_scalar(t))
+    }
+}
+
+/// Split `key: value` at the first unquoted `: ` (or trailing `:`).
+fn split_kv(s: &str) -> Option<(&str, &str)> {
+    let b = s.as_bytes();
+    let mut in_s = false;
+    let mut in_d = false;
+    for i in 0..b.len() {
+        match b[i] {
+            b'\'' if !in_d => in_s = !in_s,
+            b'"' if !in_s => in_d = !in_d,
+            b':' if !in_s && !in_d => {
+                if i + 1 == b.len() {
+                    return Some((&s[..i], ""));
+                }
+                if b[i + 1] == b' ' {
+                    return Some((&s[..i], &s[i + 2..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+struct P {
+    lines: Vec<Line>,
+    pos: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Line> {
+        self.lines.get(self.pos)
+    }
+
+    /// Parse a block (mapping or sequence) whose items sit at `indent`.
+    fn block(&mut self, indent: usize) -> Result<Value, YamlError> {
+        let first = match self.peek() {
+            Some(l) => l,
+            None => return Ok(Value::Null),
+        };
+        if first.text.starts_with("- ") || first.text == "-" {
+            self.sequence(indent)
+        } else {
+            self.mapping(indent)
+        }
+    }
+
+    fn mapping(&mut self, indent: usize) -> Result<Value, YamlError> {
+        let mut map = BTreeMap::new();
+        while let Some(l) = self.peek() {
+            if l.indent < indent {
+                break;
+            }
+            if l.indent > indent {
+                return err(l.no, "unexpected indent");
+            }
+            if l.text.starts_with("- ") || l.text == "-" {
+                return err(l.no, "sequence item inside mapping");
+            }
+            let no = l.no;
+            let (k, v) = match split_kv(&l.text) {
+                Some(kv) => kv,
+                None => return err(no, format!("expected 'key: value', got '{}'", l.text)),
+            };
+            let key = match parse_scalar(k) {
+                Value::Str(s) => s,
+                other => match other {
+                    Value::Num(n) => format!("{n}"),
+                    Value::Bool(b) => format!("{b}"),
+                    _ => return err(no, "bad mapping key"),
+                },
+            };
+            let vtrim = v.trim().to_string();
+            self.pos += 1;
+            let val = if vtrim.is_empty() {
+                // nested block (or empty value if no deeper lines)
+                match self.peek() {
+                    Some(n) if n.indent > indent => self.block(n.indent)?,
+                    _ => Value::Null,
+                }
+            } else {
+                parse_rhs(&vtrim, no)?
+            };
+            if map.insert(key.clone(), val).is_some() {
+                return err(no, format!("duplicate key '{key}'"));
+            }
+        }
+        Ok(Value::Obj(map))
+    }
+
+    fn sequence(&mut self, indent: usize) -> Result<Value, YamlError> {
+        let mut arr = Vec::new();
+        while let Some(l) = self.peek() {
+            if l.indent < indent {
+                break;
+            }
+            if l.indent > indent {
+                return err(l.no, "unexpected indent in sequence");
+            }
+            if !(l.text.starts_with("- ") || l.text == "-") {
+                break;
+            }
+            let no = l.no;
+            let rest = if l.text == "-" { "" } else { &l.text[2..] }.trim().to_string();
+            // virtual indent of inline content after "- "
+            let vindent = indent + 2;
+            self.pos += 1;
+            if rest.is_empty() {
+                // nested block item
+                match self.peek() {
+                    Some(n) if n.indent >= vindent => {
+                        let ni = n.indent;
+                        arr.push(self.block(ni)?);
+                    }
+                    _ => arr.push(Value::Null),
+                }
+            } else if let Some((k, v)) = split_kv(&rest) {
+                // inline mapping start: `- key: value` then continuation
+                // lines at vindent
+                let mut map = BTreeMap::new();
+                let key = match parse_scalar(k) {
+                    Value::Str(s) => s,
+                    _ => return err(no, "bad mapping key in sequence item"),
+                };
+                let vtrim = v.trim();
+                let val = if vtrim.is_empty() {
+                    match self.peek() {
+                        Some(n) if n.indent > vindent => self.block(n.indent)?,
+                        _ => Value::Null,
+                    }
+                } else {
+                    parse_rhs(vtrim, no)?
+                };
+                map.insert(key, val);
+                // continuation keys
+                if let Some(n) = self.peek() {
+                    if n.indent == vindent && !(n.text.starts_with("- ") || n.text == "-") {
+                        if let Value::Obj(rest_map) = self.mapping(vindent)? {
+                            for (k, v) in rest_map {
+                                if map.insert(k.clone(), v).is_some() {
+                                    return err(no, format!("duplicate key '{k}'"));
+                                }
+                            }
+                        }
+                    }
+                }
+                arr.push(Value::Obj(map));
+            } else {
+                arr.push(parse_rhs(&rest, no)?);
+            }
+        }
+        Ok(Value::Arr(arr))
+    }
+}
+
+/// Parse a yamlite document into a `json::Value`.
+pub fn parse(src: &str) -> Result<Value, YamlError> {
+    let lines = scan_lines(src)?;
+    if lines.is_empty() {
+        return Ok(Value::Null);
+    }
+    let indent = lines[0].indent;
+    let mut p = P { lines, pos: 0 };
+    let v = p.block(indent)?;
+    if let Some(l) = p.peek() {
+        return err(l.no, "trailing content at lower indent");
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Emitter — block style, deterministic key order (BTreeMap)
+// ---------------------------------------------------------------------------
+
+fn needs_quotes(s: &str) -> bool {
+    s.is_empty()
+        || s.contains(": ")
+        || s.ends_with(':')
+        || s.starts_with(['-', '[', ']', '{', '}', '#', '&', '*', '!', '|', '>', '\'', '"', '%', '@'])
+        || s.parse::<f64>().is_ok()
+        || matches!(s, "true" | "false" | "null" | "~" | "True" | "False")
+        || s.contains('\n')
+}
+
+fn emit_scalar(v: &Value) -> String {
+    match v {
+        Value::Null => "null".to_string(),
+        Value::Bool(b) => format!("{b}"),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                format!("{}", *n as i64)
+            } else {
+                format!("{n}")
+            }
+        }
+        Value::Str(s) => {
+            if needs_quotes(s) {
+                format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\""))
+            } else {
+                s.clone()
+            }
+        }
+        _ => unreachable!("emit_scalar on container"),
+    }
+}
+
+fn emit_into(v: &Value, indent: usize, out: &mut String) {
+    let pad = " ".repeat(indent);
+    match v {
+        Value::Obj(o) => {
+            for (k, val) in o {
+                match val {
+                    Value::Obj(inner) if !inner.is_empty() => {
+                        out.push_str(&format!("{pad}{k}:\n"));
+                        emit_into(val, indent + 2, out);
+                    }
+                    Value::Arr(inner) if !inner.is_empty() => {
+                        out.push_str(&format!("{pad}{k}:\n"));
+                        emit_into(val, indent + 2, out);
+                    }
+                    Value::Obj(_) => out.push_str(&format!("{pad}{k}: {{}}\n")),
+                    Value::Arr(_) => out.push_str(&format!("{pad}{k}: []\n")),
+                    _ => out.push_str(&format!("{pad}{k}: {}\n", emit_scalar(val))),
+                }
+            }
+        }
+        Value::Arr(a) => {
+            for item in a {
+                match item {
+                    Value::Obj(o) if !o.is_empty() => {
+                        // `- key: value` first line, rest indented
+                        let mut first = true;
+                        for (k, val) in o {
+                            let lead = if first {
+                                format!("{pad}- ")
+                            } else {
+                                format!("{pad}  ")
+                            };
+                            first = false;
+                            match val {
+                                Value::Obj(inner) if !inner.is_empty() => {
+                                    out.push_str(&format!("{lead}{k}:\n"));
+                                    emit_into(val, indent + 4, out);
+                                }
+                                Value::Arr(inner) if !inner.is_empty() => {
+                                    out.push_str(&format!("{lead}{k}:\n"));
+                                    emit_into(val, indent + 4, out);
+                                }
+                                Value::Obj(_) => out.push_str(&format!("{lead}{k}: {{}}\n")),
+                                Value::Arr(_) => out.push_str(&format!("{lead}{k}: []\n")),
+                                _ => out.push_str(&format!("{lead}{k}: {}\n", emit_scalar(val))),
+                            }
+                        }
+                    }
+                    Value::Arr(_) | Value::Obj(_) => {
+                        out.push_str(&format!("{pad}-\n"));
+                        emit_into(item, indent + 2, out);
+                    }
+                    _ => out.push_str(&format!("{pad}- {}\n", emit_scalar(item))),
+                }
+            }
+        }
+        _ => out.push_str(&format!("{pad}{}\n", emit_scalar(v))),
+    }
+}
+
+/// Emit a yamlite document (parseable by `parse`).
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    emit_into(v, 0, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_mapping() {
+        let doc = "
+app: videoquery
+resources:
+  cpu: 2
+  mem: 512
+labels: [edge, camera]
+enabled: true
+ratio: 0.5
+";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("app").as_str(), Some("videoquery"));
+        assert_eq!(v.get("resources").get("cpu").as_i64(), Some(2));
+        assert_eq!(v.get("labels").idx(1).as_str(), Some("camera"));
+        assert_eq!(v.get("enabled").as_bool(), Some(true));
+        assert_eq!(v.get("ratio").as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn parses_sequences_of_mappings() {
+        let doc = "
+components:
+  - name: od
+    kind: detector
+    resources:
+      cpu: 1
+  - name: eoc
+    kind: classifier
+";
+        let v = parse(doc).unwrap();
+        let comps = v.get("components").as_arr().unwrap();
+        assert_eq!(comps.len(), 2);
+        assert_eq!(comps[0].get("name").as_str(), Some("od"));
+        assert_eq!(comps[0].get("resources").get("cpu").as_i64(), Some(1));
+        assert_eq!(comps[1].get("kind").as_str(), Some("classifier"));
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let doc = "
+name: \"a # not comment\" # real comment
+note: 'single # kept'
+";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").as_str(), Some("a # not comment"));
+        assert_eq!(v.get("note").as_str(), Some("single # kept"));
+    }
+
+    #[test]
+    fn scalar_sequence() {
+        let v = parse("- 1\n- two\n- false\n").unwrap();
+        let a = v.as_arr().unwrap();
+        assert_eq!(a[0].as_i64(), Some(1));
+        assert_eq!(a[1].as_str(), Some("two"));
+        assert_eq!(a[2].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn empty_flow_containers() {
+        let v = parse("services: {}\nitems: []\n").unwrap();
+        assert_eq!(v.get("services"), &Value::Obj(BTreeMap::new()));
+        assert_eq!(v.get("items"), &Value::Arr(vec![]));
+    }
+
+    #[test]
+    fn rejects_unsupported() {
+        assert!(parse("a: |\n  block\n").is_err());
+        assert!(parse("x: {a: 1}").is_err());
+        assert!(parse("a: 1\na: 2\n").is_err());
+        assert!(parse("\tfoo: 1").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let doc = "
+app: vq
+components:
+  - name: od
+    labels: [edge, camera]
+    resources:
+      cpu: 1
+      mem: 128
+  - name: coc
+    resources:
+      cpu: 8
+      gpu: true
+";
+        let v = parse(doc).unwrap();
+        let emitted = to_string(&v);
+        let v2 = parse(&emitted).unwrap();
+        assert_eq!(v, v2, "emitted:\n{emitted}");
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("  \n# only comment\n").unwrap(), Value::Null);
+    }
+}

@@ -1,0 +1,79 @@
+//! Cross-language golden test: the rust scene renderer must produce
+//! BIT-IDENTICAL pixels to the python renderer that generated the
+//! training data (see scenes.py / video::synth determinism contract).
+//!
+//! Requires `make artifacts` (reads artifacts/golden/*).
+
+use ace::json;
+use ace::video::synth;
+
+fn artifacts() -> std::path::PathBuf {
+    ace::runtime::artifacts_dir().expect("run `make artifacts` first")
+}
+
+fn load_golden() -> (json::Value, Vec<Vec<f32>>) {
+    let dir = artifacts();
+    let meta = std::fs::read_to_string(dir.join("golden/scenes.json")).unwrap();
+    let meta = json::parse(&meta).unwrap();
+    let bin = std::fs::read(dir.join("golden/crops.bin")).unwrap();
+    let n = u32::from_le_bytes(bin[0..4].try_into().unwrap()) as usize;
+    let crop = u32::from_le_bytes(bin[4..8].try_into().unwrap()) as usize;
+    let ch = u32::from_le_bytes(bin[8..12].try_into().unwrap()) as usize;
+    assert_eq!(crop, synth::CROP);
+    assert_eq!(ch, 3);
+    let mut crops = Vec::with_capacity(n);
+    let px = crop * crop * ch;
+    for i in 0..n {
+        let start = 12 + i * px * 4;
+        let mut v = Vec::with_capacity(px);
+        for j in 0..px {
+            let o = start + j * 4;
+            v.push(f32::from_le_bytes(bin[o..o + 4].try_into().unwrap()));
+        }
+        crops.push(v);
+    }
+    (meta, crops)
+}
+
+#[test]
+fn rust_renderer_matches_python_bit_exactly() {
+    let (meta, crops) = load_golden();
+    let scenes = meta.get("scenes").as_arr().expect("scenes list");
+    assert_eq!(scenes.len(), crops.len());
+    assert!(scenes.len() >= 8, "golden set should cover all classes");
+    for (i, (scene, py_pixels)) in scenes.iter().zip(&crops).enumerate() {
+        let cls = scene.get("cls").as_usize().unwrap() as u8;
+        let seed = scene.get("seed").as_usize().unwrap() as u64;
+        let img = synth::make_crop(cls, seed);
+        assert_eq!(
+            img.data.len(),
+            py_pixels.len(),
+            "golden {i} size mismatch"
+        );
+        let mut first_bad = None;
+        let mut nbad = 0;
+        for (j, (r, p)) in img.data.iter().zip(py_pixels.iter()).enumerate() {
+            if r.to_bits() != p.to_bits() {
+                nbad += 1;
+                if first_bad.is_none() {
+                    first_bad = Some((j, *r, *p));
+                }
+            }
+        }
+        assert_eq!(
+            nbad, 0,
+            "golden {i} (cls={cls} seed={seed}): {nbad} differing pixels, first at {:?}",
+            first_bad
+        );
+    }
+}
+
+#[test]
+fn golden_covers_every_class() {
+    let (meta, _) = load_golden();
+    let mut seen = [false; 8];
+    for s in meta.get("scenes").as_arr().unwrap() {
+        seen[s.get("cls").as_usize().unwrap()] = true;
+    }
+    assert!(seen.iter().all(|s| *s), "classes missing from goldens: {seen:?}");
+}

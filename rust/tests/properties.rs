@@ -1,0 +1,288 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state). proptest is unavailable offline, so this uses a small
+//! deterministic fuzz harness over `util::prng` streams: 200+ random
+//! cases per property, fully reproducible by seed.
+
+use ace::deploy::{diff_plans, DeploymentPlan, Instance};
+use ace::des::Scheduler;
+use ace::inapp::{AdvancedPolicy, QueryPolicy};
+use ace::json;
+use ace::pubsub::topic;
+use ace::simnet::Link;
+use ace::util::prng::Stream;
+use ace::util::AceId;
+use ace::yamlite;
+
+const CASES: u64 = 200;
+
+// ---------------------------------------------------------------------------
+// topic matching
+// ---------------------------------------------------------------------------
+
+fn rand_topic(s: &mut Stream, wildcards: bool) -> String {
+    let levels = s.next_range(1, 5);
+    let mut parts = Vec::new();
+    for _ in 0..levels {
+        let r = s.next_range(0, if wildcards { 10 } else { 8 });
+        parts.push(match r {
+            8 => "+".to_string(),
+            9 => "#".to_string(),
+            v => format!("l{v}"),
+        });
+    }
+    parts.join("/")
+}
+
+#[test]
+fn prop_topic_exact_name_always_matches_itself() {
+    let mut s = Stream::new(1);
+    for _ in 0..CASES {
+        let name = rand_topic(&mut s, false);
+        assert!(topic::matches(&name, &name), "{name}");
+    }
+}
+
+#[test]
+fn prop_hash_filter_matches_everything() {
+    let mut s = Stream::new(2);
+    for _ in 0..CASES {
+        let name = rand_topic(&mut s, false);
+        assert!(topic::matches("#", &name));
+        let pref = name.split('/').next().unwrap().to_string();
+        assert!(topic::matches(&format!("{pref}/#"), &name));
+    }
+}
+
+#[test]
+fn prop_plus_is_single_level() {
+    let mut s = Stream::new(3);
+    for _ in 0..CASES {
+        let name = rand_topic(&mut s, false);
+        let levels: Vec<&str> = name.split('/').collect();
+        // replace one level with '+': must still match
+        let i = s.next_range(0, levels.len() as i64) as usize;
+        let mut f = levels.clone();
+        f[i] = "+";
+        assert!(topic::matches(&f.join("/"), &name), "{name}");
+        // a filter with MORE levels never matches
+        let longer = format!("{name}/extra");
+        assert!(!topic::matches(&longer, &name));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simnet: link conservation + FIFO
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_link_deliveries_are_fifo_and_conserve_bytes() {
+    let mut s = Stream::new(4);
+    for case in 0..CASES {
+        let mut link = Link::mbps(
+            "l",
+            1.0 + s.next_f32() as f64 * 99.0,
+            s.next_range(0, 50_000) as u64,
+        );
+        let n = s.next_range(1, 30) as usize;
+        let mut total = 0u64;
+        let mut last_delivery = 0u64;
+        let mut now = 0u64;
+        for _ in 0..n {
+            now += s.next_range(0, 10_000) as u64;
+            let bytes = s.next_range(1, 50_000) as u64;
+            total += bytes;
+            let d = link.send(now, bytes);
+            assert!(d > now, "case {case}: delivery not in future");
+            assert!(d >= last_delivery, "case {case}: FIFO violated");
+            last_delivery = d;
+        }
+        assert_eq!(link.bytes_sent, total, "case {case}: byte conservation");
+        assert_eq!(link.msgs_sent, n as u64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DES: executes every event exactly once, in nondecreasing time
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_des_executes_all_events_in_order() {
+    let mut s = Stream::new(5);
+    for _ in 0..50 {
+        let n = s.next_range(1, 100) as usize;
+        let mut sched: Scheduler<Vec<u64>> = Scheduler::new();
+        for _ in 0..n {
+            let at = s.next_range(0, 1_000_000) as u64;
+            sched.at(at, move |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        }
+        let mut w = Vec::new();
+        sched.run(&mut w, 10_000);
+        assert_eq!(w.len(), n);
+        assert!(w.windows(2).all(|p| p[0] <= p[1]), "time went backwards");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// plan diffing: add/remove/replace/unchanged partition the union
+// ---------------------------------------------------------------------------
+
+fn rand_plan(s: &mut Stream, version: u64) -> DeploymentPlan {
+    let n = s.next_range(0, 12) as usize;
+    let mut instances: Vec<Instance> = Vec::new();
+    for _ in 0..n {
+        let comp = format!("c{}", s.next_range(0, 5));
+        let node = AceId::parse(&format!(
+            "i/ec-{}/n{}",
+            s.next_range(1, 3),
+            s.next_range(0, 4)
+        ));
+        if instances
+            .iter()
+            .any(|i| i.component == comp && i.node == node)
+        {
+            continue;
+        }
+        instances.push(Instance {
+            id: format!("{comp}-{}", node.leaf()),
+            component: comp,
+            node,
+            image: format!("img:{}", s.next_range(1, 3)),
+        });
+    }
+    DeploymentPlan { app: "a".into(), version, instances }
+}
+
+#[test]
+fn prop_diff_partitions_instances() {
+    let mut s = Stream::new(6);
+    for case in 0..CASES {
+        let old = rand_plan(&mut s, 1);
+        let new = rand_plan(&mut s, 2);
+        let d = diff_plans(&old, &new);
+        // every new instance lands in exactly one of add/replace/unchanged
+        assert_eq!(
+            d.add.len() + d.replace.len() + d.unchanged.len(),
+            new.instances.len(),
+            "case {case}"
+        );
+        // every old instance is either removed or still present
+        assert_eq!(
+            d.remove.len() + d.replace.len() + d.unchanged.len(),
+            old.instances.len(),
+            "case {case}"
+        );
+        // diff against self is a noop
+        let dd = diff_plans(&new, &new);
+        assert!(dd.is_noop(), "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AP thresholds: band stays inside [lo0, hi0] and never inverts
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ap_band_invariants() {
+    let mut s = Stream::new(7);
+    for _ in 0..CASES {
+        let mut ap = AdvancedPolicy::new(0.05, 0.04);
+        for _ in 0..s.next_range(0, 50) {
+            if s.next_f32() < 0.5 {
+                ap.observe_eoc_eil(s.next_f32() as f64 * 10.0);
+            } else {
+                ap.observe_coc_eil(s.next_f32() as f64 * 10.0);
+            }
+            let (lo, hi) = ap.thresholds();
+            assert!(lo >= 0.1 - 1e-6, "lo {lo}");
+            assert!(hi <= 0.8 + 1e-6, "hi {hi}");
+            assert!(lo < hi, "band inverted: [{lo}, {hi}]");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// json / yamlite round trips on random documents
+// ---------------------------------------------------------------------------
+
+fn rand_value(s: &mut Stream, depth: usize) -> json::Value {
+    use json::Value;
+    let kind = if depth >= 3 {
+        s.next_range(0, 4)
+    } else {
+        s.next_range(0, 6)
+    };
+    match kind {
+        0 => Value::Null,
+        1 => Value::Bool(s.next_f32() < 0.5),
+        2 => Value::Num(s.next_range(-1000, 1000) as f64),
+        3 => Value::Str(format!("s{}", s.next_range(0, 1000))),
+        4 => {
+            let n = s.next_range(0, 4) as usize;
+            Value::Arr((0..n).map(|_| rand_value(s, depth + 1)).collect())
+        }
+        _ => {
+            let n = s.next_range(0, 4) as usize;
+            let mut map = std::collections::BTreeMap::new();
+            for i in 0..n {
+                map.insert(format!("k{i}"), rand_value(s, depth + 1));
+            }
+            Value::Obj(map)
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    let mut s = Stream::new(8);
+    for case in 0..CASES {
+        let v = rand_value(&mut s, 0);
+        let text = json::to_string(&v);
+        let back =
+            json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}: {text}");
+    }
+}
+
+#[test]
+fn prop_yamlite_roundtrip_on_mappings() {
+    let mut s = Stream::new(9);
+    for case in 0..CASES {
+        // yamlite documents are mappings at top level
+        let v = match rand_value(&mut s, 1) {
+            json::Value::Obj(o) if !o.is_empty() => json::Value::Obj(o),
+            _ => continue,
+        };
+        let text = yamlite::to_string(&v);
+        let back = yamlite::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}:\n{text}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// classifier batching: the splitting loop always covers all crops
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batch_splitting_covers_all_crops() {
+    let mut s = Stream::new(10);
+    let sizes = [1usize, 2, 4, 8, 16];
+    for _ in 0..CASES {
+        let n = s.next_range(1, 200) as usize;
+        let mut covered = 0;
+        let mut execs = 0;
+        while covered < n {
+            let remaining = n - covered;
+            let mut b = sizes[0];
+            for &x in &sizes {
+                if x <= remaining {
+                    b = x;
+                }
+            }
+            covered += b.min(remaining);
+            execs += 1;
+            assert!(execs < 400, "no progress");
+        }
+        assert_eq!(covered, n);
+    }
+}
