@@ -15,59 +15,24 @@
 //!
 //! Run: `cargo run --release --example federated_training_sim`
 
+use ace::app::fedtrain::{self, Model, DIM};
 use ace::pubsub::{Bridge, Broker};
 use ace::runtime::{artifacts_dir, literal_f32, literal_i32, Engine};
 use ace::storage::{FileService, Lifecycle, ObjectStore};
-use ace::util::prng::Stream;
 
-const DIM: usize = 16;
 const BATCH: usize = 32;
 const ECS: usize = 3;
 const ROUNDS: usize = 12;
 const LOCAL_STEPS: usize = 4;
 
-/// Synthetic non-IID binary task: y = sign(w*.x); EC k only sees
-/// examples whose first feature falls in its band.
+/// Same non-IID shard generator as the in-DES `app/fedtrain` workload
+/// (one definition, so the example and the simulation cannot drift).
 fn make_shard(ec: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
-    let mut s = Stream::new(seed + ec as u64 * 1000);
-    let mut x = Vec::with_capacity(n * DIM);
-    let mut y = Vec::with_capacity(n);
-    let mut kept = 0;
-    while kept < n {
-        let mut row = [0f32; DIM];
-        for v in row.iter_mut() {
-            *v = s.next_f32() * 2.0 - 1.0;
-        }
-        // non-IID band per EC on feature 0
-        let band = (row[0] + 1.0) / 2.0 * ECS as f32;
-        if band as usize % ECS != ec {
-            continue;
-        }
-        // true concept: mix of features 0..3
-        let score = row[0] * 1.5 - row[1] + 0.5 * row[2] + 0.25 * row[3];
-        x.extend_from_slice(&row);
-        y.push(if score > 0.0 { 1 } else { 0 });
-        kept += 1;
-    }
-    (x, y)
+    fedtrain::make_shard(ec, ECS, n, seed)
 }
 
 fn accuracy(w: &[f32], b: &[f32], x: &[f32], y: &[i32]) -> f64 {
-    let n = y.len();
-    let mut correct = 0;
-    for i in 0..n {
-        let row = &x[i * DIM..(i + 1) * DIM];
-        let mut logits = [b[0], b[1]];
-        for (j, v) in row.iter().enumerate() {
-            logits[0] += v * w[j * 2];
-            logits[1] += v * w[j * 2 + 1];
-        }
-        let pred = if logits[1] > logits[0] { 1 } else { 0 };
-        if pred == y[i] {
-            correct += 1;
-        }
-    }
-    correct as f64 / n as f64
+    fedtrain::accuracy(&Model { w: w.to_vec(), b: b.to_vec() }, x, y)
 }
 
 fn serialize_f32(v: &[f32]) -> Vec<u8> {

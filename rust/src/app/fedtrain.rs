@@ -1,0 +1,573 @@
+//! Federated training (§2's ECC *training* pattern) on the `svcgraph`
+//! runtime — the second workload proving the runtime is generic.
+//!
+//! FedAvg over the ECs: a `coordinator` component on the CC broadcasts
+//! the global model to a `trainer` on every EC (over the `edge/ec<k>/#`
+//! bridge, charged on the downlinks), each trainer runs local SGD steps
+//! on its private non-IID shard (virtual service time per step), and
+//! uploads its update over the `cloud/#` bridge (charged on the
+//! uplinks). The CC averages and starts the next round. BWC falls out
+//! of the same simnet link counters the video-query app uses.
+//!
+//! The model is a tiny softmax regression trained natively (bit-exact
+//! deterministic rust; no XLA needed), mirroring the math of the
+//! `fl_train_step` HLO artifact exercised by
+//! `examples/federated_training_sim.rs`.
+
+use crate::infra::{InfraBuilder, Infrastructure, NodeKind};
+use crate::platform::orchestrator;
+use crate::simnet::{EdgeCloudNet, NetConfig};
+use crate::svcgraph::{ClusterRef, Component, Ctx, GraphMsg, GraphRuntime};
+use crate::topology::Topology;
+use crate::util::prng::Stream;
+use crate::util::{millis, secs, to_secs};
+use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Input dimensionality of the toy task (matches the FL artifact).
+pub const DIM: usize = 16;
+
+/// The Figure-4 topology of the federated-training app.
+pub const FEDTRAIN_TOPOLOGY: &str = r#"
+app: fedtrain
+version: 1
+components:
+  - name: trainer
+    image: ace/fl-trainer:1
+    location: edge
+    placement: per-ec
+    resources:
+      cpu: 2000
+      mem: 1024
+    connections: [coordinator]
+  - name: coordinator
+    image: ace/fl-coordinator:1
+    location: cloud
+    resources:
+      cpu: 4000
+      mem: 2048
+    connections: []
+"#;
+
+#[derive(Debug, Clone)]
+pub struct FedConfig {
+    pub num_ecs: usize,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub batch: usize,
+    pub samples_per_ec: usize,
+    pub lr: f32,
+    /// One-way WAN delay in ms (0 ideal, 50 practical).
+    pub wan_delay_ms: f64,
+    pub seed: u64,
+    /// Virtual service time of ONE local SGD step on a mini PC (ms).
+    pub step_ms: f64,
+}
+
+impl Default for FedConfig {
+    fn default() -> Self {
+        FedConfig {
+            num_ecs: 3,
+            rounds: 12,
+            local_steps: 4,
+            batch: 32,
+            samples_per_ec: 256,
+            lr: 0.3,
+            wan_delay_ms: 0.0,
+            seed: 42,
+            step_ms: 2.0,
+        }
+    }
+}
+
+/// Softmax-regression model (2 classes over DIM features), the same
+/// `w[j*2+c]` layout the FL artifact uses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl Model {
+    pub fn zeros() -> Self {
+        Model { w: vec![0.0; DIM * 2], b: vec![0.0; 2] }
+    }
+
+    /// Serialized size on the wire (weights + biases + framing).
+    pub fn wire_bytes() -> u64 {
+        ((DIM * 2 + 2) * 4 + 16) as u64
+    }
+}
+
+/// One SGD step of softmax cross-entropy on a batch; returns the mean
+/// loss. Native mirror of the `fl_train_step` artifact's math.
+pub fn train_step(m: &mut Model, xs: &[f32], ys: &[i32], lr: f32) -> f32 {
+    let bsz = ys.len();
+    debug_assert_eq!(xs.len(), bsz * DIM);
+    let mut gw = vec![0.0f32; DIM * 2];
+    let mut gb = [0.0f32; 2];
+    let mut loss = 0.0f32;
+    for i in 0..bsz {
+        let row = &xs[i * DIM..(i + 1) * DIM];
+        let mut logits = [m.b[0], m.b[1]];
+        for (j, v) in row.iter().enumerate() {
+            logits[0] += v * m.w[j * 2];
+            logits[1] += v * m.w[j * 2 + 1];
+        }
+        let mx = logits[0].max(logits[1]);
+        let e0 = (logits[0] - mx).exp();
+        let e1 = (logits[1] - mx).exp();
+        let z = e0 + e1;
+        let p = [e0 / z, e1 / z];
+        let y = ys[i] as usize;
+        loss += -(p[y].max(1e-12)).ln();
+        for c in 0..2 {
+            let d = p[c] - if c == y { 1.0 } else { 0.0 };
+            gb[c] += d;
+            for (j, v) in row.iter().enumerate() {
+                gw[j * 2 + c] += v * d;
+            }
+        }
+    }
+    let scale = lr / bsz as f32;
+    for (w, g) in m.w.iter_mut().zip(&gw) {
+        *w -= scale * g;
+    }
+    for (b, g) in m.b.iter_mut().zip(&gb) {
+        *b -= scale * g;
+    }
+    loss / bsz as f32
+}
+
+/// Synthetic non-IID binary task: y = sign(w*.x); EC k only sees
+/// examples whose first feature falls in its band (same generator as
+/// `examples/federated_training_sim.rs`).
+pub fn make_shard(ec: usize, num_ecs: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut s = Stream::new(seed + ec as u64 * 1000);
+    let mut x = Vec::with_capacity(n * DIM);
+    let mut y = Vec::with_capacity(n);
+    let mut kept = 0;
+    while kept < n {
+        let mut row = [0f32; DIM];
+        for v in row.iter_mut() {
+            *v = s.next_f32() * 2.0 - 1.0;
+        }
+        // non-IID band per EC on feature 0
+        let band = (row[0] + 1.0) / 2.0 * num_ecs as f32;
+        if band as usize % num_ecs != ec {
+            continue;
+        }
+        // true concept: mix of features 0..3
+        let score = row[0] * 1.5 - row[1] + 0.5 * row[2] + 0.25 * row[3];
+        x.extend_from_slice(&row);
+        y.push(if score > 0.0 { 1 } else { 0 });
+        kept += 1;
+    }
+    (x, y)
+}
+
+pub fn accuracy(m: &Model, x: &[f32], y: &[i32]) -> f64 {
+    let n = y.len();
+    let mut correct = 0;
+    for i in 0..n {
+        let row = &x[i * DIM..(i + 1) * DIM];
+        let mut logits = [m.b[0], m.b[1]];
+        for (j, v) in row.iter().enumerate() {
+            logits[0] += v * m.w[j * 2];
+            logits[1] += v * m.w[j * 2 + 1];
+        }
+        let pred = if logits[1] > logits[0] { 1 } else { 0 };
+        if pred == y[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub accuracy: f64,
+    pub mean_loss: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct FedMetrics {
+    pub rounds: Vec<RoundRecord>,
+    pub final_accuracy: f64,
+    /// What each EC achieves alone with the same step budget.
+    pub client_only_acc: Vec<f64>,
+    /// WAN bytes (up + down) — read off the simnet link counters.
+    pub wan_bytes: u64,
+    pub bridged_up: u64,
+    pub bridged_down: u64,
+    pub virtual_secs: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Message bodies + topics
+// ---------------------------------------------------------------------------
+
+const UPDATE_TOPIC: &str = "cloud/fl/update";
+
+fn model_topic(seg: &str) -> String {
+    format!("edge/{seg}/fl/model")
+}
+
+struct ModelBody {
+    round: usize,
+    model: Model,
+}
+
+struct UpdateBody {
+    ec: usize,
+    round: usize,
+    model: Model,
+    loss: f32,
+}
+
+// ---------------------------------------------------------------------------
+// Shared state + components
+// ---------------------------------------------------------------------------
+
+struct FedState {
+    cfg: FedConfig,
+    test_x: Vec<f32>,
+    test_y: Vec<i32>,
+    rounds: RefCell<Vec<RoundRecord>>,
+    /// Model after the last completed round (for post-run inspection).
+    final_model: RefCell<Model>,
+}
+
+type Shared = Rc<FedState>;
+
+/// Per-EC trainer: local SGD on the private shard, charging virtual
+/// service time per step before uploading the update.
+struct Trainer {
+    shared: Shared,
+    ec: usize,
+    in_topic: String,
+    shard_x: Vec<f32>,
+    shard_y: Vec<i32>,
+    pending: Option<ModelBody>,
+}
+
+impl Component for Trainer {
+    fn subscriptions(&self) -> Vec<String> {
+        vec![self.in_topic.clone()]
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
+        let Some(mb) = msg.body_as::<ModelBody>() else {
+            return;
+        };
+        self.pending = Some(ModelBody { round: mb.round, model: mb.model.clone() });
+        let cfg = &self.shared.cfg;
+        ctx.set_timer(secs(cfg.local_steps as f64 * cfg.step_ms / 1e3), 0);
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
+        let Some(ModelBody { round, mut model }) = self.pending.take() else {
+            return;
+        };
+        let cfg = &self.shared.cfg;
+        let nb = self.shard_x.len() / (cfg.batch * DIM);
+        let mut loss = 0.0;
+        for s in 0..cfg.local_steps {
+            let bi = (round * cfg.local_steps + s) % nb;
+            let xs = &self.shard_x[bi * cfg.batch * DIM..(bi + 1) * cfg.batch * DIM];
+            let ys = &self.shard_y[bi * cfg.batch..(bi + 1) * cfg.batch];
+            loss = train_step(&mut model, xs, ys, cfg.lr);
+        }
+        // update rides the cloud/# bridge over this EC's uplink
+        ctx.publish(
+            UPDATE_TOPIC,
+            Model::wire_bytes(),
+            Rc::new(UpdateBody { ec: self.ec, round, model, loss }),
+        );
+    }
+}
+
+/// CC coordinator: broadcast → collect → FedAvg → next round.
+struct Coordinator {
+    shared: Shared,
+    model: Model,
+    round: usize,
+    received: Vec<UpdateBody>,
+}
+
+impl Coordinator {
+    fn broadcast(&self, ctx: &mut Ctx) {
+        for k in 0..self.shared.cfg.num_ecs {
+            ctx.publish(
+                &model_topic(&ClusterRef::Ec(k).seg()),
+                Model::wire_bytes(),
+                Rc::new(ModelBody { round: self.round, model: self.model.clone() }),
+            );
+        }
+    }
+}
+
+impl Component for Coordinator {
+    fn subscriptions(&self) -> Vec<String> {
+        vec![UPDATE_TOPIC.to_string()]
+    }
+
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        self.broadcast(ctx);
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
+        let Some(u) = msg.body_as::<UpdateBody>() else {
+            return;
+        };
+        if u.round != self.round {
+            return; // stale update from an earlier round
+        }
+        self.received.push(UpdateBody {
+            ec: u.ec,
+            round: u.round,
+            model: u.model.clone(),
+            loss: u.loss,
+        });
+        let n = self.shared.cfg.num_ecs;
+        if self.received.len() < n {
+            return;
+        }
+        // FedAvg at the CC
+        let mut avg = Model::zeros();
+        let mut loss_sum = 0.0f32;
+        for upd in self.received.drain(..) {
+            for (a, v) in avg.w.iter_mut().zip(&upd.model.w) {
+                *a += v / n as f32;
+            }
+            for (a, v) in avg.b.iter_mut().zip(&upd.model.b) {
+                *a += v / n as f32;
+            }
+            loss_sum += upd.loss;
+        }
+        self.model = avg;
+        let acc = accuracy(&self.model, &self.shared.test_x, &self.shared.test_y);
+        self.shared.rounds.borrow_mut().push(RoundRecord {
+            round: self.round,
+            accuracy: acc,
+            mean_loss: loss_sum / n as f32,
+        });
+        *self.shared.final_model.borrow_mut() = self.model.clone();
+        self.round += 1;
+        if self.round < self.shared.cfg.rounds {
+            self.broadcast(ctx);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn fed_infra(cfg: &FedConfig) -> Infrastructure {
+    let mut b = InfraBuilder::register("fed");
+    for _ in 0..cfg.num_ecs {
+        let ec = b.claim_ec();
+        b.add_edge_node(&ec, "minipc", NodeKind::MiniPc, BTreeMap::new());
+    }
+    b.add_cloud_node("gpu-ws", NodeKind::GpuWorkstation, BTreeMap::new());
+    b.build()
+}
+
+/// Run the federated-training app end-to-end on the svcgraph runtime:
+/// topology → orchestrator placement → components → bridged transport.
+pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
+    anyhow::ensure!(cfg.num_ecs >= 1, "fedtrain needs at least one EC");
+    anyhow::ensure!(
+        cfg.batch > 0 && cfg.samples_per_ec >= cfg.batch,
+        "samples_per_ec ({}) must cover at least one batch ({})",
+        cfg.samples_per_ec,
+        cfg.batch
+    );
+    let infra = fed_infra(&cfg);
+    let topo = Topology::parse(FEDTRAIN_TOPOLOGY)?;
+    let plan = orchestrator::place(&topo, &infra)?;
+
+    let net = EdgeCloudNet::new(&NetConfig {
+        num_ecs: cfg.num_ecs,
+        wan_delay: millis(cfg.wan_delay_ms),
+        ..Default::default()
+    });
+    let mut rt = GraphRuntime::new(net);
+
+    // global test set spans every band (same recipe as the example)
+    let mut test_x = Vec::new();
+    let mut test_y = Vec::new();
+    for ec in 0..cfg.num_ecs {
+        let (x, y) = make_shard(ec, cfg.num_ecs, 128, 777);
+        test_x.extend(x);
+        test_y.extend(y);
+    }
+    let shared: Shared = Rc::new(FedState {
+        test_x,
+        test_y,
+        rounds: RefCell::new(Vec::new()),
+        final_model: RefCell::new(Model::zeros()),
+        cfg: cfg.clone(),
+    });
+
+    rt.deploy(&plan, |inst, site| {
+        Ok(match inst.component.as_str() {
+            "trainer" => {
+                let ec = match site.cluster {
+                    ClusterRef::Ec(k) => k,
+                    ClusterRef::Cc => anyhow::bail!("trainer placed on the CC"),
+                };
+                let (shard_x, shard_y) =
+                    make_shard(ec, cfg.num_ecs, cfg.samples_per_ec, cfg.seed);
+                Some(Box::new(Trainer {
+                    shared: shared.clone(),
+                    ec,
+                    in_topic: model_topic(&site.cluster.seg()),
+                    shard_x,
+                    shard_y,
+                    pending: None,
+                }) as Box<dyn Component>)
+            }
+            "coordinator" => Some(Box::new(Coordinator {
+                shared: shared.clone(),
+                model: Model::zeros(),
+                round: 0,
+                received: Vec::new(),
+            })),
+            _ => None,
+        })
+    })?;
+
+    rt.run(10_000_000);
+
+    // TRUE client-only baselines: same step budget, own shard only,
+    // never federated — what each EC could do without the CC.
+    let mut client_only_acc = Vec::new();
+    for ec in 0..cfg.num_ecs {
+        let (x, y) = make_shard(ec, cfg.num_ecs, cfg.samples_per_ec, cfg.seed);
+        let nb = x.len() / (cfg.batch * DIM);
+        let mut m = Model::zeros();
+        for step_i in 0..cfg.rounds * cfg.local_steps {
+            let bi = step_i % nb;
+            let xs = &x[bi * cfg.batch * DIM..(bi + 1) * cfg.batch * DIM];
+            let ys = &y[bi * cfg.batch..(bi + 1) * cfg.batch];
+            train_step(&mut m, xs, ys, cfg.lr);
+        }
+        client_only_acc.push(accuracy(&m, &shared.test_x, &shared.test_y));
+    }
+
+    let rounds = shared.rounds.borrow().clone();
+    // re-derive from the stored model: must agree with the last round
+    let final_accuracy = if rounds.is_empty() {
+        0.0
+    } else {
+        accuracy(&shared.final_model.borrow(), &shared.test_x, &shared.test_y)
+    };
+    Ok(FedMetrics {
+        rounds,
+        final_accuracy,
+        client_only_acc,
+        wan_bytes: rt.net().wan_bytes(),
+        bridged_up: rt.fabric().bridged_up,
+        bridged_down: rt.fabric().bridged_down,
+        virtual_secs: to_secs(rt.now()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> FedConfig {
+        FedConfig::default()
+    }
+
+    #[test]
+    fn topology_places_one_trainer_per_ec() {
+        let cfg = quick();
+        let topo = Topology::parse(FEDTRAIN_TOPOLOGY).unwrap();
+        let plan = orchestrator::place(&topo, &fed_infra(&cfg)).unwrap();
+        assert_eq!(plan.instances_of("trainer").len(), cfg.num_ecs);
+        assert_eq!(plan.instances_of("coordinator").len(), 1);
+    }
+
+    #[test]
+    fn federation_beats_client_only_mean() {
+        let m = run_fedtrain(quick()).unwrap();
+        assert_eq!(m.rounds.len(), 12, "all rounds must complete");
+        let mean_client =
+            m.client_only_acc.iter().sum::<f64>() / m.client_only_acc.len() as f64;
+        assert!(
+            m.final_accuracy > mean_client,
+            "federated {:.3} failed to beat client-only mean {:.3}",
+            m.final_accuracy,
+            mean_client
+        );
+        assert!(m.final_accuracy > 0.7, "final acc {:.3}", m.final_accuracy);
+    }
+
+    #[test]
+    fn training_traffic_rides_the_wan_links() {
+        let cfg = quick();
+        let m = run_fedtrain(cfg.clone()).unwrap();
+        // every round: num_ecs model broadcasts down + num_ecs updates up
+        let per_round = cfg.num_ecs as u64;
+        assert_eq!(m.bridged_down, per_round * cfg.rounds as u64);
+        assert_eq!(m.bridged_up, per_round * cfg.rounds as u64);
+        assert_eq!(
+            m.wan_bytes,
+            2 * per_round * cfg.rounds as u64 * Model::wire_bytes(),
+            "BWC must equal the bridged model traffic"
+        );
+        assert!(m.virtual_secs > 0.0);
+    }
+
+    #[test]
+    fn wan_delay_stretches_wall_clock_but_not_learning() {
+        let fast = run_fedtrain(quick()).unwrap();
+        let mut slow_cfg = quick();
+        slow_cfg.wan_delay_ms = 50.0;
+        let slow = run_fedtrain(slow_cfg).unwrap();
+        assert!(slow.virtual_secs > fast.virtual_secs + 0.9,
+            "50 ms RTTs over 12 rounds must cost > 1.2 virtual secs: {} vs {}",
+            slow.virtual_secs, fast.virtual_secs);
+        assert!((slow.final_accuracy - fast.final_accuracy).abs() < 1e-12,
+            "delay must not change the math");
+    }
+
+    #[test]
+    fn determinism_same_seed_same_result() {
+        let a = run_fedtrain(quick()).unwrap();
+        let b = run_fedtrain(quick()).unwrap();
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+        assert_eq!(a.wan_bytes, b.wan_bytes);
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits());
+            assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn degenerate_configs_error_cleanly() {
+        // batch larger than the shard used to hit a modulo-by-zero in
+        // the trainer; now it is a validation error
+        let err = run_fedtrain(FedConfig { samples_per_ec: 16, batch: 32, ..Default::default() })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("batch"), "{err}");
+        assert!(run_fedtrain(FedConfig { num_ecs: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn loss_decreases_over_rounds() {
+        let m = run_fedtrain(quick()).unwrap();
+        let first = m.rounds.first().unwrap().mean_loss;
+        let last = m.rounds.last().unwrap().mean_loss;
+        assert!(last < first, "loss did not drop: {first} -> {last}");
+    }
+}

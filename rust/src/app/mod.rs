@@ -1,6 +1,10 @@
 //! Application layer — concrete ECCI applications built on the
-//! platform. `videoquery` is the paper's §5 evaluation application.
+//! generic `svcgraph` runtime. `videoquery` is the paper's §5
+//! evaluation application; `fedtrain` is the §2 training pattern,
+//! proving the runtime generalizes beyond one workload.
 
+pub mod fedtrain;
 pub mod videoquery;
 
+pub use fedtrain::{run_fedtrain, FedConfig, FedMetrics};
 pub use videoquery::{run_cell, CellConfig, Compute, InferCache, Paradigm, ServiceTimes};

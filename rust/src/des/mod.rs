@@ -92,7 +92,8 @@ impl<W> Scheduler<W> {
         self.at(self.now + delay, ev);
     }
 
-    /// Run until the heap empties or virtual time would exceed `until`.
+    /// Run until the heap empties or virtual time would exceed `until`,
+    /// then advance the clock to the horizon (never backwards).
     /// Returns the number of events executed by this call.
     pub fn run_until(&mut self, world: &mut W, until: SimTime) -> u64 {
         let start = self.executed;
@@ -106,7 +107,7 @@ impl<W> Scheduler<W> {
             self.executed += 1;
             (entry.ev)(self, world);
         }
-        self.now = self.now.max(until.min(self.now.max(until)));
+        self.now = self.now.max(until);
         self.executed - start
     }
 
@@ -175,6 +176,29 @@ mod tests {
         assert_eq!(s.pending(), 1);
         s.run(&mut w, 10);
         assert_eq!(w, vec![10, 100]);
+    }
+
+    #[test]
+    fn run_until_advances_now_to_horizon() {
+        // regression: after draining every event at or before `until`,
+        // the clock must sit exactly AT the horizon, so back-to-back
+        // run_until windows tile virtual time without gaps
+        let mut s: Scheduler<Vec<u64>> = Scheduler::new();
+        let mut w = Vec::new();
+        s.at(10, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        s.run_until(&mut w, 50);
+        assert_eq!(s.now(), 50);
+        // an empty window still advances the clock
+        s.run_until(&mut w, 75);
+        assert_eq!(s.now(), 75);
+        // a horizon in the past never moves the clock backwards
+        s.run_until(&mut w, 10);
+        assert_eq!(s.now(), 75);
+        // and events scheduled "now" relative to the advanced clock run
+        // at the advanced time
+        s.after(5, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        s.run(&mut w, 10);
+        assert_eq!(w, vec![10, 80]);
     }
 
     #[test]

@@ -18,6 +18,7 @@ pub mod pubsub;
 pub mod runtime;
 pub mod simnet;
 pub mod storage;
+pub mod svcgraph;
 pub mod testbed;
 pub mod topology;
 pub mod util;

@@ -12,10 +12,16 @@
 //!                                  — run the Figure 5 sweep
 //!   ace run --paradigm P [--interval I] [--delay D] [--seconds N]
 //!                                  — run one experiment cell
+//!   ace svcrun --app videoquery|fedtrain [flags]
+//!                                  — run an application END-TO-END on
+//!                                    the generic svcgraph runtime
+//!                                    (topology -> orchestrator ->
+//!                                    components -> bridged pub/sub)
 //!
 //! clap is unavailable offline; argument parsing is a ~60-line hand
 //! rolled matcher (DESIGN.md §Substitutions).
 
+use ace::app::fedtrain::{run_fedtrain, FedConfig};
 use ace::app::videoquery::{run_cell, CellConfig, Compute, InferCache, Paradigm, ServiceTimes};
 use ace::infra::paper_testbed;
 use ace::platform::orchestrator;
@@ -191,6 +197,79 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_svcrun(args: &Args) -> Result<()> {
+    match args.get("app").unwrap_or("videoquery") {
+        "videoquery" => {
+            let paradigm = paradigm_of(args.get("paradigm").unwrap_or("ace"))?;
+            let cfg = CellConfig {
+                paradigm,
+                interval_s: args.f64_or("interval", 0.2),
+                wan_delay_ms: args.f64_or("delay", 0.0),
+                duration_s: args.f64_or("seconds", 30.0),
+                seed: args.f64_or("seed", 1.0) as u64,
+                num_ecs: args.usize_or("ecs", 3),
+                cams_per_ec: args.usize_or("cams", 3),
+                ..Default::default()
+            };
+            // --real pushes every crop through the compiled HLO
+            // artifacts; the default synthetic oracle needs nothing
+            let (svc, compute) = if args.has("real") {
+                let (bank, svc) = load_real()?;
+                let cache = Rc::new(RefCell::new(InferCache::new()));
+                (svc, Compute::Real { bank, cache })
+            } else {
+                (ServiceTimes::synthetic(), Compute::Synthetic { target_bias: 0.05 })
+            };
+            let mut m = run_cell(cfg, svc, compute)?;
+            let eil = m.eil_ms();
+            let p99 = m.eil_p99_ms();
+            println!(
+                "svcgraph/videoquery {}: crops={} F1={:.3} (P {:.3} / R {:.3}) \
+                 BWC={:.2}MB (from simnet link counters) EIL mean {eil:.1}ms p99 {p99:.1}ms \
+                 edge/cloud decided {}/{}",
+                m.paradigm,
+                m.crops,
+                m.f1.f1(),
+                m.f1.precision(),
+                m.f1.recall(),
+                m.bwc_mb(),
+                m.edge_decided,
+                m.cloud_decided,
+            );
+            Ok(())
+        }
+        "fedtrain" => {
+            let cfg = FedConfig {
+                rounds: args.usize_or("rounds", 12),
+                num_ecs: args.usize_or("ecs", 3),
+                wan_delay_ms: args.f64_or("delay", 0.0),
+                seed: args.f64_or("seed", 42.0) as u64,
+                ..Default::default()
+            };
+            let m = run_fedtrain(cfg)?;
+            println!("| round | mean loss | global acc |");
+            println!("|---|---|---|");
+            for r in &m.rounds {
+                println!("| {:>2} | {:.3} | {:.3} |", r.round, r.mean_loss, r.accuracy);
+            }
+            let mean_client =
+                m.client_only_acc.iter().sum::<f64>() / m.client_only_acc.len().max(1) as f64;
+            println!(
+                "svcgraph/fedtrain: federated {:.3} vs client-only mean {:.3}; \
+                 BWC {:.3} MB over {} up + {} down bridged messages; {:.2} virtual s",
+                m.final_accuracy,
+                mean_client,
+                m.wan_bytes as f64 / 1e6,
+                m.bridged_up,
+                m.bridged_down,
+                m.virtual_secs,
+            );
+            Ok(())
+        }
+        other => bail!("unknown app '{other}' (videoquery|fedtrain)"),
+    }
+}
+
 fn cmd_fig5(args: &Args) -> Result<()> {
     let intervals: Vec<f64> = if args.has("fast") {
         vec![0.5, 0.2, 0.1]
@@ -252,6 +331,11 @@ COMMANDS:
   run          one experiment cell            --paradigm ci|ei|ace|ace+
                [--interval S] [--delay MS] [--seconds N] [--seed S]
   fig5         the full Figure 5 sweep        [--fast] [--seconds N] [--out DIR]
+  svcrun       an app end-to-end on the       --app videoquery|fedtrain
+               generic svcgraph runtime       [--paradigm P] [--interval S]
+                                              [--delay MS] [--seconds N]
+                                              [--ecs N] [--cams N] [--rounds N]
+                                              [--seed S] [--real]
   help         this message"
     );
 }
@@ -265,6 +349,7 @@ fn main() -> Result<()> {
         "plan" => cmd_plan(&args),
         "run" => cmd_run(&args),
         "fig5" => cmd_fig5(&args),
+        "svcrun" => cmd_svcrun(&args),
         _ => {
             help();
             Ok(())

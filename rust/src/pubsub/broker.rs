@@ -8,22 +8,28 @@
 //! support the bridged-vs-direct ablation bench.
 
 use super::topic;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-/// A published message.
+/// A published message. The payload sits behind an `Arc` so fanning a
+/// message out to N subscribers shares one buffer instead of cloning N
+/// copies (the broker's hot path).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Message {
     pub topic: String,
-    pub payload: Vec<u8>,
+    pub payload: Arc<[u8]>,
     /// Broker the message FIRST entered (loop prevention in bridges).
     pub origin: String,
 }
 
 impl Message {
     pub fn new(topic: impl Into<String>, payload: impl Into<Vec<u8>>) -> Self {
-        Message { topic: topic.into(), payload: payload.into(), origin: String::new() }
+        Message {
+            topic: topic.into(),
+            payload: Arc::from(payload.into()),
+            origin: String::new(),
+        }
     }
 
     pub fn utf8(&self) -> String {
@@ -141,21 +147,23 @@ impl Broker {
             inner.retained.insert(msg.topic.clone(), msg.clone());
         }
         let mut reached = 0;
-        let mut dead = Vec::new();
+        let mut dead: HashSet<u64> = HashSet::new();
         let mut delivered_bytes = 0u64;
         for s in inner.subs.iter() {
             if topic::matches(&s.filter, &msg.topic) {
+                // Arc payload: per-subscriber clone is a refcount bump
                 if s.tx.send(msg.clone()).is_ok() {
                     reached += 1;
                     delivered_bytes += msg.payload.len() as u64;
                 } else {
-                    dead.push(s.id);
+                    dead.insert(s.id);
                 }
             }
         }
         inner.deliver_count += reached as u64;
         inner.deliver_bytes += delivered_bytes;
         if !dead.is_empty() {
+            // single O(subs) retain pass with O(1) membership tests
             inner.subs.retain(|s| !dead.contains(&s.id));
         }
         Ok(reached)
@@ -194,7 +202,7 @@ mod tests {
         assert_eq!(n, 1);
         let m = sub.rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(m.topic, "query/42/result");
-        assert_eq!(m.payload, b"hit");
+        assert_eq!(&m.payload[..], b"hit");
         assert_eq!(m.origin, "cc");
     }
 

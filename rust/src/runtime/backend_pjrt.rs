@@ -1,0 +1,81 @@
+//! Real PJRT/XLA execution backend (feature `pjrt`).
+//!
+//! Requires the vendored `xla` crate (see Cargo.toml). This is the
+//! original runtime implementation: parse HLO text, compile one
+//! executable per artifact on the PJRT CPU client, execute batched
+//! inference.
+
+use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
+
+pub type Literal = xla::Literal;
+
+/// Shared PJRT client (CPU).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable { exe, path: path.to_path_buf() })
+    }
+}
+
+/// One compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with the given inputs; outputs are the flattened tuple
+    /// elements (aot.py lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self
+            .exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow!("execute {:?}: {e:?}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {:?}: {e:?}", self.path))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+}
+
+/// f32 tensor input helper.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {dims:?} != data len {}", data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        bail!("literal shape {dims:?} != data len {}", data.len());
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}

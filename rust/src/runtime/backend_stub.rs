@@ -1,0 +1,118 @@
+//! Offline stand-in for the PJRT/XLA execution backend.
+//!
+//! The build image ships no vendored `xla` crate, so the default build
+//! compiles this stub: the full `runtime` API surface exists (types,
+//! signatures, shape validation), but `Engine::cpu()` reports that the
+//! backend is unavailable instead of constructing a PJRT client.
+//! `Engine` is uninhabited and is the only producer of `Executable`s,
+//! so every execution path is statically unreachable — simulated
+//! workloads (`svcrun`, `Compute::Synthetic`) never get here. Enable
+//! the `pjrt` feature (plus the vendored `xla` dependency declared in
+//! Cargo.toml) for real execution.
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Uninhabited engine: construction always fails in stub builds.
+pub enum Engine {}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        bail!(
+            "PJRT backend unavailable: built without the `pjrt` feature \
+             (requires a vendored `xla` crate); simulated workloads \
+             (`ace svcrun`, synthetic compute) do not need it"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        match *self {}
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load(&self, _path: &Path) -> Result<Executable> {
+        match *self {}
+    }
+}
+
+/// One compiled computation. Only an `Engine` can produce one, so in
+/// stub builds this type is uninhabited too.
+pub struct Executable {
+    never: std::convert::Infallible,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with the given inputs; outputs are the flattened tuple
+    /// elements (aot.py lowers with return_tuple=True).
+    pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        match self.never {}
+    }
+}
+
+/// Host-side literal: data + dims, so experiment code can build inputs
+/// (and tests can validate shapes) without a PJRT client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: LitData,
+    dims: Vec<i64>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum LitData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Literal {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Mirror of `xla::Literal::to_vec` for the element types ACE uses.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::from_literal(self)
+    }
+}
+
+/// Element types extractable from a stub `Literal`.
+pub trait Element: Sized {
+    fn from_literal(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn from_literal(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            LitData::F32(v) => Ok(v.clone()),
+            LitData::I32(_) => bail!("literal holds i32, asked for f32"),
+        }
+    }
+}
+
+impl Element for i32 {
+    fn from_literal(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            LitData::I32(v) => Ok(v.clone()),
+            LitData::F32(_) => bail!("literal holds f32, asked for i32"),
+        }
+    }
+}
+
+fn check_shape(len: usize, dims: &[i64]) -> Result<()> {
+    let n: i64 = dims.iter().product();
+    if n as usize != len {
+        bail!("literal shape {dims:?} != data len {len}");
+    }
+    Ok(())
+}
+
+/// f32 tensor input helper.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    check_shape(data.len(), dims)?;
+    Ok(Literal { data: LitData::F32(data.to_vec()), dims: dims.to_vec() })
+}
+
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    check_shape(data.len(), dims)?;
+    Ok(Literal { data: LitData::I32(data.to_vec()), dims: dims.to_vec() })
+}

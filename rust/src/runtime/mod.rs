@@ -6,12 +6,29 @@
 //! (model, batch-size) on the PJRT CPU client, caches them, and serves
 //! batched inference. Python never runs here.
 //!
+//! The execution backend is feature-gated: `pjrt` selects the real
+//! XLA-backed `backend_pjrt` (requires the vendored `xla` crate, see
+//! Cargo.toml); the default offline build compiles `backend_stub`,
+//! which keeps the whole API surface (so the platform, DES, and the
+//! svcgraph apps build and run with synthetic compute) but reports the
+//! backend as unavailable if real inference is requested.
+//!
 //! Also provides `calibrate`, which measures real per-batch service
 //! times — the DES (Figure 5 experiments) charges these measured times
 //! (scaled by a node speed factor) as virtual service times, so the
 //! latency curves are grounded in actual XLA execution cost.
 
 pub mod manifest;
+
+#[cfg(feature = "pjrt")]
+mod backend_pjrt;
+#[cfg(feature = "pjrt")]
+pub use backend_pjrt::{literal_f32, literal_i32, Engine, Executable, Literal};
+
+#[cfg(not(feature = "pjrt"))]
+mod backend_stub;
+#[cfg(not(feature = "pjrt"))]
+pub use backend_stub::{literal_f32, literal_i32, Element, Engine, Executable, Literal};
 
 use crate::util::stats::Summary;
 use anyhow::{anyhow, bail, Context, Result};
@@ -20,76 +37,6 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 pub use manifest::Manifest;
-
-/// Shared PJRT client (CPU).
-pub struct Engine {
-    client: xla::PjRtClient,
-}
-
-impl Engine {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
-        Ok(Engine { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load one HLO-text artifact and compile it.
-    pub fn load(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
-        Ok(Executable { exe, path: path.to_path_buf() })
-    }
-}
-
-/// One compiled computation.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
-
-impl Executable {
-    /// Execute with the given inputs; outputs are the flattened tuple
-    /// elements (aot.py lowers with return_tuple=True).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("execute {:?}: {e:?}", self.path))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {:?}: {e:?}", self.path))?;
-        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
-    }
-}
-
-/// f32 tensor input helper.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    if n as usize != data.len() {
-        bail!("literal shape {dims:?} != data len {}", data.len());
-    }
-    xla::Literal::vec1(data)
-        .reshape(dims)
-        .map_err(|e| anyhow!("reshape: {e:?}"))
-}
-
-pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    if n as usize != data.len() {
-        bail!("literal shape {dims:?} != data len {}", data.len());
-    }
-    xla::Literal::vec1(data)
-        .reshape(dims)
-        .map_err(|e| anyhow!("reshape: {e:?}"))
-}
 
 /// A classifier with one compiled executable per exported batch size
 /// (the paper's EOC or COC).
@@ -258,6 +205,24 @@ mod tests {
         assert!(literal_i32(&[1, 2], &[2, 2]).is_err());
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = Engine::cpu().err().expect("stub must not construct");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_literal_roundtrips_values() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert_eq!(lit.dims(), &[2, 2]);
+        // scalars: empty dims == one element
+        assert!(literal_f32(&[0.5], &[]).is_ok());
+    }
+
     // Full artifact round-trip tests live in rust/tests/runtime_golden.rs
-    // (they require `make artifacts` to have run).
+    // (they require `make artifacts` and the `pjrt` feature).
 }

@@ -1,0 +1,635 @@
+//! Generic service-graph runtime: execute an orchestrated application
+//! end-to-end inside the DES.
+//!
+//! This is the layer that makes ACE's core claim (§4, Figures 2/4)
+//! operational in the simulation: applications are *component graphs*
+//! the platform places, deploys, and wires user-transparently.
+//!
+//! ```text
+//! Topology ──► Orchestrator ──► DeploymentPlan
+//!                                    │  deploy(plan, factory)
+//!                                    ▼
+//!                     Component instances (one per placed Instance)
+//!                                    │  publish/subscribe on the
+//!                                    ▼  LOCAL cluster bus only
+//!      per-EC bus ◄──── bridges ────► CC bus        (§4.3.2, Fig. 2 ②)
+//!                                    │
+//!                                    ▼
+//!            simnet links (LAN / WAN up / WAN down) charge virtual
+//!            time + bytes ──► BWC falls out of the transport layer
+//! ```
+//!
+//! Components implement [`Component`]: they receive `on_message` /
+//! `on_timer` callbacks under virtual time and talk to the world only
+//! through [`Ctx`] (publish to the local bus, set timers). Routing:
+//!
+//!   * same node            → delivered instantly (in-process hand-off);
+//!   * same EC, other node  → charged on the EC's LAN link;
+//!   * `cloud/#` from an EC → bridged to the CC bus over that EC's WAN
+//!     uplink (serialization + delay + jitter, FIFO queueing);
+//!   * `edge/ec<k>/#` from the CC → bridged to EC k over its downlink.
+//!
+//! Byte counters on the links ARE the paper's BWC metric — applications
+//! no longer hand-compute bandwidth, they just send messages.
+
+use crate::deploy::{DeploymentPlan, Instance};
+use crate::des::Scheduler;
+use crate::pubsub::topic;
+use crate::simnet::EdgeCloudNet;
+use crate::util::SimTime;
+use anyhow::{anyhow, bail, Result};
+use std::any::Any;
+use std::rc::Rc;
+
+/// Which per-cluster message service an instance is bound to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterRef {
+    Ec(usize),
+    Cc,
+}
+
+impl ClusterRef {
+    /// Topic segment naming this cluster (`ec0`, `ec1`, ... / `cc`).
+    pub fn seg(self) -> String {
+        match self {
+            ClusterRef::Ec(k) => format!("ec{k}"),
+            ClusterRef::Cc => "cc".to_string(),
+        }
+    }
+}
+
+/// Where a component instance runs: its cluster + node (leaf name).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Site {
+    pub cluster: ClusterRef,
+    pub node: Rc<str>,
+}
+
+/// Derive a site from a placed instance's hierarchical node id
+/// (`infra-x/ec-N/node` → EC N-1; `infra-x/cc/node` → CC).
+pub fn site_of(inst: &Instance) -> Result<Site> {
+    let cluster_id = inst
+        .node
+        .parent()
+        .ok_or_else(|| anyhow!("instance '{}': node id too shallow", inst.id))?;
+    let leaf = cluster_id.leaf().to_string();
+    let cluster = if leaf == "cc" {
+        ClusterRef::Cc
+    } else if let Some(n) = leaf.strip_prefix("ec-") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow!("instance '{}': bad EC id '{leaf}'", inst.id))?;
+        if n == 0 {
+            bail!("instance '{}': EC ids start at 1", inst.id);
+        }
+        ClusterRef::Ec(n - 1)
+    } else {
+        bail!("instance '{}': unknown cluster '{leaf}'", inst.id);
+    };
+    Ok(Site { cluster, node: inst.node.leaf().into() })
+}
+
+/// A message travelling the service graph.
+#[derive(Clone)]
+pub struct GraphMsg {
+    pub topic: Rc<str>,
+    /// Component index of the sender (see [`GraphRuntime::deploy`]).
+    pub from: usize,
+    /// Bytes charged to simnet links when this message crosses nodes.
+    pub wire_bytes: u64,
+    /// In-memory payload; receivers downcast to the concrete type.
+    pub body: Rc<dyn Any>,
+}
+
+impl GraphMsg {
+    pub fn body_as<T: 'static>(&self) -> Option<&T> {
+        self.body.downcast_ref::<T>()
+    }
+}
+
+/// An application component instance executing under the DES.
+///
+/// Mirrors §4.4's programming model: the platform binds the instance to
+/// its node's local message service; the component never addresses
+/// peers directly, only topics.
+pub trait Component {
+    /// Topic filters this component consumes from its LOCAL cluster bus.
+    fn subscriptions(&self) -> Vec<String>;
+
+    /// Called once at t=0 when the deployment comes up.
+    fn on_start(&mut self, _ctx: &mut Ctx) {}
+
+    /// A subscribed message arrived (after transport charging).
+    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg);
+
+    /// A timer set through [`Ctx::set_timer`] fired.
+    fn on_timer(&mut self, _ctx: &mut Ctx, _token: u64) {}
+}
+
+struct Subscription {
+    filter: String,
+    target: usize,
+}
+
+/// One directed topic-bridge rule between two cluster buses.
+struct BridgeRule {
+    from: ClusterRef,
+    to: ClusterRef,
+    filter: String,
+}
+
+fn cidx(c: ClusterRef, num_ecs: usize) -> usize {
+    match c {
+        ClusterRef::Ec(k) => k,
+        ClusterRef::Cc => num_ecs,
+    }
+}
+
+/// The transport fabric: per-cluster subscription tables, bridge rules,
+/// and the simnet links that charge virtual time and count BWC bytes.
+pub struct Fabric {
+    pub net: EdgeCloudNet,
+    num_ecs: usize,
+    /// Per cluster bus: ECs 0..num_ecs-1, then the CC at index num_ecs.
+    subs: Vec<Vec<Subscription>>,
+    bridges: Vec<BridgeRule>,
+    sites: Vec<Site>,
+    /// Messages forwarded over the EC→CC / CC→EC bridges.
+    pub bridged_up: u64,
+    pub bridged_down: u64,
+}
+
+impl Fabric {
+    /// Route `msg` on `cluster`'s bus: deliver to local subscribers
+    /// (charging the LAN when the hop crosses nodes) and forward over
+    /// matching bridges (charging the WAN links). `from_site` is the
+    /// sender's site for a locally published message, or `None` when
+    /// the message just arrived over a bridge. `origin` is the cluster
+    /// the message FIRST entered (loop prevention, like the threaded
+    /// `pubsub::Bridge`).
+    fn route(
+        &mut self,
+        sch: &mut Scheduler<SvcWorld>,
+        origin: ClusterRef,
+        cluster: ClusterRef,
+        from_site: Option<&Site>,
+        msg: &GraphMsg,
+    ) {
+        let now = sch.now();
+        let ci = cidx(cluster, self.num_ecs);
+        for s in &self.subs[ci] {
+            if !topic::matches(&s.filter, &msg.topic) {
+                continue;
+            }
+            let arrival = match from_site {
+                // bridge arrivals fan out locally at no modelled cost
+                // (the cluster message service is on the receiving LAN)
+                None => now,
+                Some(f) => {
+                    if self.sites[s.target].node == f.node {
+                        now // node-internal hand-off
+                    } else {
+                        match cluster {
+                            ClusterRef::Ec(k) => self.net.lan[k].send(now, msg.wire_bytes),
+                            // the CC is a single modelled node; no CC
+                            // LAN in the §5.1.1 testbed
+                            ClusterRef::Cc => now,
+                        }
+                    }
+                }
+            };
+            let target = s.target;
+            let m = msg.clone();
+            sch.at(arrival, move |sch, w: &mut SvcWorld| {
+                SvcWorld::dispatch(sch, w, target, Event::Msg(m));
+            });
+        }
+        for b in &self.bridges {
+            if b.from != cluster || b.to == origin {
+                continue;
+            }
+            if !topic::matches(&b.filter, &msg.topic) {
+                continue;
+            }
+            let to = b.to;
+            let arrival = match (b.from, to) {
+                (ClusterRef::Ec(k), ClusterRef::Cc) => {
+                    self.bridged_up += 1;
+                    self.net.uplink[k].send(now, msg.wire_bytes)
+                }
+                (ClusterRef::Cc, ClusterRef::Ec(k)) => {
+                    self.bridged_down += 1;
+                    self.net.downlink[k].send(now, msg.wire_bytes)
+                }
+                // EC↔EC bridges have no modelled link: instant
+                _ => now,
+            };
+            let m = msg.clone();
+            sch.at(arrival, move |sch, w: &mut SvcWorld| {
+                w.fabric.route(sch, origin, to, None, &m);
+            });
+        }
+    }
+
+    /// Bytes bridged across the WAN so far (both directions) — reads
+    /// straight off the simnet link counters.
+    pub fn wan_bytes(&self) -> u64 {
+        self.net.wan_bytes()
+    }
+}
+
+enum Event {
+    Start,
+    Msg(GraphMsg),
+    Timer(u64),
+}
+
+/// DES world: the deployed components plus the transport fabric.
+pub struct SvcWorld {
+    comps: Vec<Option<Box<dyn Component>>>,
+    pub fabric: Fabric,
+}
+
+impl SvcWorld {
+    fn dispatch(sch: &mut Scheduler<SvcWorld>, w: &mut SvcWorld, idx: usize, ev: Event) {
+        let Some(mut c) = w.comps[idx].take() else {
+            return;
+        };
+        {
+            let mut ctx = Ctx { sch, fabric: &mut w.fabric, self_idx: idx };
+            match ev {
+                Event::Start => c.on_start(&mut ctx),
+                Event::Msg(m) => c.on_message(&mut ctx, &m),
+                Event::Timer(t) => c.on_timer(&mut ctx, t),
+            }
+        }
+        w.comps[idx] = Some(c);
+    }
+}
+
+/// The component's handle onto the world during a callback.
+pub struct Ctx<'a> {
+    sch: &'a mut Scheduler<SvcWorld>,
+    fabric: &'a mut Fabric,
+    self_idx: usize,
+}
+
+impl Ctx<'_> {
+    /// Current virtual time (µs).
+    pub fn now(&self) -> SimTime {
+        self.sch.now()
+    }
+
+    /// This component's placement site.
+    pub fn site(&self) -> &Site {
+        &self.fabric.sites[self.self_idx]
+    }
+
+    /// Publish to this component's LOCAL cluster message service;
+    /// transport (LAN / bridged WAN) is charged by the fabric.
+    pub fn publish(&mut self, topic: &str, wire_bytes: u64, body: Rc<dyn Any>) {
+        let site = self.fabric.sites[self.self_idx].clone();
+        let msg = GraphMsg { topic: topic.into(), from: self.self_idx, wire_bytes, body };
+        self.fabric
+            .route(self.sch, site.cluster, site.cluster, Some(&site), &msg);
+    }
+
+    /// Fire `on_timer(token)` on this component after `delay` µs.
+    pub fn set_timer(&mut self, delay: SimTime, token: u64) {
+        let idx = self.self_idx;
+        self.sch.after(delay, move |sch, w: &mut SvcWorld| {
+            SvcWorld::dispatch(sch, w, idx, Event::Timer(token));
+        });
+    }
+
+    /// Read-only view of the network (for introspection/policies).
+    pub fn net(&self) -> &EdgeCloudNet {
+        &self.fabric.net
+    }
+}
+
+/// Executes a deployed component graph under the DES.
+pub struct GraphRuntime {
+    world: SvcWorld,
+    sch: Scheduler<SvcWorld>,
+    started: bool,
+}
+
+impl GraphRuntime {
+    /// A runtime over `net` (one LAN per EC + WAN pairs to the CC),
+    /// with the standard bridge rules of §4.3.2: `cloud/#` EC→CC and
+    /// `edge/ec<k>/#` CC→EC k.
+    pub fn new(net: EdgeCloudNet) -> Self {
+        let num_ecs = net.uplink.len();
+        let mut bridges = Vec::new();
+        for k in 0..num_ecs {
+            bridges.push(BridgeRule {
+                from: ClusterRef::Ec(k),
+                to: ClusterRef::Cc,
+                filter: "cloud/#".to_string(),
+            });
+            bridges.push(BridgeRule {
+                from: ClusterRef::Cc,
+                to: ClusterRef::Ec(k),
+                filter: format!("edge/ec{k}/#"),
+            });
+        }
+        GraphRuntime {
+            world: SvcWorld {
+                comps: Vec::new(),
+                fabric: Fabric {
+                    net,
+                    num_ecs,
+                    subs: (0..=num_ecs).map(|_| Vec::new()).collect(),
+                    bridges,
+                    sites: Vec::new(),
+                    bridged_up: 0,
+                    bridged_down: 0,
+                },
+            },
+            sch: Scheduler::new(),
+            started: false,
+        }
+    }
+
+    /// Bind one component at `site`; registers its subscriptions on the
+    /// site's cluster bus. Returns the component index.
+    pub fn add(&mut self, site: Site, comp: Box<dyn Component>) -> usize {
+        let idx = self.world.comps.len();
+        let ci = cidx(site.cluster, self.world.fabric.num_ecs);
+        for filter in comp.subscriptions() {
+            self.world.fabric.subs[ci].push(Subscription { filter, target: idx });
+        }
+        self.world.fabric.sites.push(site);
+        self.world.comps.push(Some(comp));
+        idx
+    }
+
+    /// Instantiate every placed instance of `plan` through `factory`
+    /// (Figure 4 step ②: plan → per-node components). The factory may
+    /// return `None` for instances the experiment does not model.
+    /// Returns the number of components deployed.
+    pub fn deploy<F>(&mut self, plan: &DeploymentPlan, mut factory: F) -> Result<usize>
+    where
+        F: FnMut(&Instance, &Site) -> Result<Option<Box<dyn Component>>>,
+    {
+        let mut n = 0;
+        for inst in &plan.instances {
+            let site = site_of(inst)?;
+            if let Some(c) = factory(inst, &site)? {
+                self.add(site, c);
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Schedule a raw event (testbed channel phases etc.).
+    pub fn at(
+        &mut self,
+        at: SimTime,
+        ev: impl FnOnce(&mut Scheduler<SvcWorld>, &mut SvcWorld) + 'static,
+    ) {
+        self.sch.at(at, ev);
+    }
+
+    fn start(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        for idx in 0..self.world.comps.len() {
+            self.sch.at(0, move |sch, w: &mut SvcWorld| {
+                SvcWorld::dispatch(sch, w, idx, Event::Start);
+            });
+        }
+    }
+
+    /// Deliver `on_start` to every component, then run to exhaustion
+    /// under the event-count safety valve. Returns events executed.
+    pub fn run(&mut self, max_events: u64) -> u64 {
+        self.start();
+        self.sch.run(&mut self.world, max_events)
+    }
+
+    /// Run until virtual time `until` (starting components first).
+    pub fn run_until(&mut self, until: SimTime) -> u64 {
+        self.start();
+        self.sch.run_until(&mut self.world, until)
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.sch.now()
+    }
+
+    pub fn executed(&self) -> u64 {
+        self.sch.executed()
+    }
+
+    pub fn net(&self) -> &EdgeCloudNet {
+        &self.world.fabric.net
+    }
+
+    pub fn fabric(&self) -> &Fabric {
+        &self.world.fabric
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::NetConfig;
+    use crate::util::millis;
+    use std::cell::RefCell;
+
+    /// Records (arrival µs, topic) of everything it receives.
+    struct Probe {
+        filters: Vec<String>,
+        log: Rc<RefCell<Vec<(SimTime, String)>>>,
+    }
+
+    impl Component for Probe {
+        fn subscriptions(&self) -> Vec<String> {
+            self.filters.clone()
+        }
+        fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
+            self.log.borrow_mut().push((ctx.now(), msg.topic.to_string()));
+        }
+    }
+
+    /// Publishes one message at start.
+    struct Shot {
+        topic: String,
+        bytes: u64,
+    }
+
+    impl Component for Shot {
+        fn subscriptions(&self) -> Vec<String> {
+            Vec::new()
+        }
+        fn on_start(&mut self, ctx: &mut Ctx) {
+            ctx.publish(&self.topic, self.bytes, Rc::new(()));
+        }
+        fn on_message(&mut self, _ctx: &mut Ctx, _msg: &GraphMsg) {}
+    }
+
+    fn site(cluster: ClusterRef, node: &str) -> Site {
+        Site { cluster, node: node.into() }
+    }
+
+    fn rt(wan_delay_ms: f64) -> GraphRuntime {
+        GraphRuntime::new(EdgeCloudNet::new(&NetConfig {
+            num_ecs: 2,
+            wan_delay: millis(wan_delay_ms),
+            ..Default::default()
+        }))
+    }
+
+    #[test]
+    fn same_node_delivery_is_instant() {
+        let mut r = rt(0.0);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        r.add(
+            site(ClusterRef::Ec(0), "rpi1"),
+            Box::new(Probe { filters: vec!["a/#".into()], log: log.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Ec(0), "rpi1"),
+            Box::new(Shot { topic: "a/x".into(), bytes: 10_000 }),
+        );
+        r.run(1000);
+        assert_eq!(log.borrow().len(), 1);
+        assert_eq!(log.borrow()[0].0, 0, "same-node hop must not be charged");
+        assert_eq!(r.net().wan_bytes(), 0);
+    }
+
+    #[test]
+    fn cross_node_ec_hop_rides_the_lan() {
+        let mut r = rt(0.0);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        r.add(
+            site(ClusterRef::Ec(0), "minipc"),
+            Box::new(Probe { filters: vec!["a/#".into()], log: log.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Ec(0), "rpi1"),
+            Box::new(Shot { topic: "a/x".into(), bytes: 12_500 }),
+        );
+        r.run(1000);
+        // 12.5 kB on a 100 Mbps LAN = 1 ms serialization + 0.5 ms delay
+        assert_eq!(log.borrow().len(), 1);
+        assert_eq!(log.borrow()[0].0, 1500);
+        assert_eq!(r.net().lan[0].bytes_sent, 12_500);
+        assert_eq!(r.net().wan_bytes(), 0, "LAN hop must not touch the WAN");
+    }
+
+    #[test]
+    fn cloud_topics_bridge_over_the_uplink() {
+        let mut r = rt(50.0);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        r.add(
+            site(ClusterRef::Cc, "gpu-ws"),
+            Box::new(Probe { filters: vec!["cloud/#".into()], log: log.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Ec(1), "rpi1"),
+            Box::new(Shot { topic: "cloud/up".into(), bytes: 2_500 }),
+        );
+        r.run(1000);
+        // 2.5 kB at 20 Mbps = 1 ms, + 50 ms one-way delay
+        assert_eq!(log.borrow().len(), 1);
+        assert_eq!(log.borrow()[0].0, 51_000);
+        assert_eq!(r.net().uplink[1].bytes_sent, 2_500);
+        assert_eq!(r.net().wan_bytes(), 2_500);
+        assert_eq!(r.fabric().bridged_up, 1);
+    }
+
+    #[test]
+    fn edge_topics_bridge_down_to_the_right_ec_only() {
+        let mut r = rt(0.0);
+        let log0 = Rc::new(RefCell::new(Vec::new()));
+        let log1 = Rc::new(RefCell::new(Vec::new()));
+        r.add(
+            site(ClusterRef::Ec(0), "minipc"),
+            Box::new(Probe { filters: vec!["edge/ec0/#".into()], log: log0.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Ec(1), "minipc"),
+            Box::new(Probe { filters: vec!["edge/#".into()], log: log1.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Cc, "gpu-ws"),
+            Box::new(Shot { topic: "edge/ec0/ctl".into(), bytes: 128 }),
+        );
+        r.run(1000);
+        assert_eq!(log0.borrow().len(), 1, "EC 0 must receive its control message");
+        assert!(log1.borrow().is_empty(), "EC 1 must not see EC 0 traffic");
+        assert!(r.net().downlink[0].bytes_sent > 0);
+        assert_eq!(r.net().downlink[1].bytes_sent, 0);
+        assert_eq!(r.fabric().bridged_down, 1);
+    }
+
+    #[test]
+    fn timers_fire_in_order_and_carry_tokens() {
+        struct Ticker {
+            seen: Rc<RefCell<Vec<(SimTime, u64)>>>,
+        }
+        impl Component for Ticker {
+            fn subscriptions(&self) -> Vec<String> {
+                Vec::new()
+            }
+            fn on_start(&mut self, ctx: &mut Ctx) {
+                ctx.set_timer(300, 3);
+                ctx.set_timer(100, 1);
+                ctx.set_timer(200, 2);
+            }
+            fn on_message(&mut self, _ctx: &mut Ctx, _msg: &GraphMsg) {}
+            fn on_timer(&mut self, ctx: &mut Ctx, token: u64) {
+                self.seen.borrow_mut().push((ctx.now(), token));
+            }
+        }
+        let mut r = rt(0.0);
+        let seen = Rc::new(RefCell::new(Vec::new()));
+        r.add(site(ClusterRef::Cc, "gpu-ws"), Box::new(Ticker { seen: seen.clone() }));
+        r.run(1000);
+        assert_eq!(*seen.borrow(), vec![(100, 1), (200, 2), (300, 3)]);
+    }
+
+    #[test]
+    fn site_of_parses_plan_node_ids() {
+        use crate::infra::paper_testbed;
+        use crate::platform::orchestrator;
+        use crate::topology::{Topology, VIDEOQUERY_TOPOLOGY};
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        let plan = orchestrator::place(&topo, &paper_testbed("sg")).unwrap();
+        for inst in &plan.instances {
+            let s = site_of(inst).unwrap();
+            match inst.component.as_str() {
+                "coc" | "ic" | "rs" => assert_eq!(s.cluster, ClusterRef::Cc, "{}", inst.id),
+                _ => assert!(matches!(s.cluster, ClusterRef::Ec(k) if k < 3), "{}", inst.id),
+            }
+        }
+    }
+
+    #[test]
+    fn deploy_instantiates_every_modelled_instance() {
+        use crate::infra::paper_testbed;
+        use crate::platform::orchestrator;
+        use crate::topology::{Topology, VIDEOQUERY_TOPOLOGY};
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        let plan = orchestrator::place(&topo, &paper_testbed("sg")).unwrap();
+        let mut r = GraphRuntime::new(EdgeCloudNet::new(&NetConfig::default()));
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let n = r
+            .deploy(&plan, |inst, _site| {
+                Ok(if inst.component == "rs" {
+                    None // not modelled
+                } else {
+                    Some(Box::new(Probe { filters: Vec::new(), log: log.clone() })
+                        as Box<dyn Component>)
+                })
+            })
+            .unwrap();
+        assert_eq!(n, plan.instances.len() - 1);
+    }
+}

@@ -1,6 +1,10 @@
 //! AOT round-trip integration tests: artifacts built by python
 //! (`make artifacts`) must load, compile, and reproduce python's own
 //! numerics through the rust PJRT runtime.
+//!
+//! Compiled only with the `pjrt` feature (the offline default build has
+//! no XLA backend; see runtime/backend_stub.rs).
+#![cfg(feature = "pjrt")]
 
 use ace::runtime::{artifacts_dir, Engine, ModelBank};
 use ace::video::od;
@@ -137,7 +141,7 @@ fn framediff_artifact_matches_native_od() {
     let f0 = cam.frame_at(1.0).gray();
     let f1 = cam.frame_at(1.1).gray();
     let f2 = cam.frame_at(1.2).gray();
-    let lits: Vec<xla::Literal> = [&f0, &f1, &f2]
+    let lits: Vec<ace::runtime::Literal> = [&f0, &f1, &f2]
         .iter()
         .map(|f| runtime::literal_f32(f, &[h as i64, w as i64]).unwrap())
         .collect();
