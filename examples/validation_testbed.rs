@@ -13,16 +13,15 @@
 use ace::app::videoquery::{CellConfig, Compute, InferCache, Paradigm, ServiceTimes};
 use ace::runtime::{artifacts_dir, Engine, ModelBank};
 use ace::testbed::{evaluate, report, ChannelProfile};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::cpu()?;
     let mut bank = ModelBank::load(&engine, &artifacts_dir()?)?;
     bank.calibrate(3)?;
     let svc = ServiceTimes::calibrated_to_paper(&bank);
-    let bank = Rc::new(bank);
-    let cache = Rc::new(RefCell::new(InferCache::new()));
+    let bank = Arc::new(bank);
+    let cache = Arc::new(Mutex::new(InferCache::new()));
 
     let base = CellConfig {
         paradigm: Paradigm::AceAp,
@@ -44,13 +43,13 @@ fn main() -> anyhow::Result<()> {
         profiles.len(),
         base.duration_s
     );
-    let mut results = evaluate(&base, &profiles, &svc, || Compute::Real {
+    let results = evaluate(&base, &profiles, &svc, || Compute::Real {
         bank: bank.clone(),
         cache: cache.clone(),
     })?;
 
     println!("\n# Validation testbed report — videoquery under ACE+\n");
-    println!("{}", report(&mut results));
+    println!("{}", report(&results));
     println!(
         "(profiles: paper ideal/practical WAN; 2 Mbps squeeze during [8s,16s); 50±100 ms jitter)"
     );
@@ -60,14 +59,14 @@ fn main() -> anyhow::Result<()> {
     // choosing a policy
     let mut bp = base.clone();
     bp.paradigm = Paradigm::AceBp;
-    let mut bp_results = evaluate(
+    let bp_results = evaluate(
         &bp,
         &[ChannelProfile::paper_wan(0.0), ChannelProfile::degraded(8.0, 16.0, 0.3)],
         &svc,
         || Compute::Real { bank: bank.clone(), cache: cache.clone() },
     )?;
     println!("\n# Same squeeze under the Basic Policy (no adaptation)\n");
-    println!("{}", report(&mut bp_results));
+    println!("{}", report(&bp_results));
 
     // developer-takeaway checks, asserted so regressions get caught
     let eil_ap: Vec<f64> = results.iter().map(|(_, m)| m.eil.mean()).collect();

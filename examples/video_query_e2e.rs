@@ -26,9 +26,8 @@ use ace::platform::{Controller, Monitor};
 use ace::pubsub::{Bridge, Broker};
 use ace::runtime::{artifacts_dir, Engine, ModelBank};
 use ace::topology::{Topology, VIDEOQUERY_TOPOLOGY};
-use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
@@ -103,10 +102,10 @@ fn main() -> anyhow::Result<()> {
         seed: 7,
         ..Default::default()
     };
-    let bank = Rc::new(bank);
-    let cache = Rc::new(RefCell::new(InferCache::new()));
+    let bank = Arc::new(bank);
+    let cache = Arc::new(Mutex::new(InferCache::new()));
     let t0 = Instant::now();
-    let mut m = run_cell(
+    let m = run_cell(
         cfg.clone(),
         svc,
         Compute::Real { bank: bank.clone(), cache: cache.clone() },
@@ -129,11 +128,13 @@ fn main() -> anyhow::Result<()> {
         m.crops as f64 / cfg.duration_s,
         m.crops as f64 / wall
     );
+    // one guard: two lock() calls in a single statement would deadlock
+    let c = cache.lock().unwrap();
     println!(
         "      real XLA execs  : {} eoc + {} coc batches",
-        cache.borrow().eoc_execs,
-        cache.borrow().coc_execs
+        c.eoc_execs, c.coc_execs
     );
+    drop(c);
 
     // ---- phase 6: teardown ----
     ctl.remove("videoquery")?;

@@ -5,18 +5,22 @@
 //! simulated §5.1.1 testbed with REAL XLA inference for every crop,
 //! and prints the three metric tables (F1 / BWC / EIL).
 //!
+//! Cells are independent DES worlds and run on the parallel sweep
+//! engine (`run_sweep`): wall-clock is max-of-cells, results are
+//! bit-identical to the serial order.
+//!
 //! Run: `cargo bench --bench fig5_video_query`
 //! Env:
 //!   ACE_FIG5_FAST=1    — 3 load points, 15 s virtual duration
 //!   ACE_FIG5_SECONDS=N — virtual duration override (default 30)
+//!   ACE_FIG5_WORKERS=N — worker threads (default: all cores)
 //!
 //! Results land in stdout + artifacts/results_fig5.{md,csv}.
 
-use ace::app::videoquery::{run_cell, CellConfig, Compute, InferCache, Paradigm, ServiceTimes};
+use ace::app::videoquery::{fig5_grid, run_sweep, Compute, InferCache, ServiceTimes};
 use ace::metrics;
 use ace::runtime::{artifacts_dir, Engine, ModelBank};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -25,13 +29,15 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(if fast { 15.0 } else { 30.0 });
+    let workers: usize = std::env::var("ACE_FIG5_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(ace::sweep::default_workers);
     let intervals: Vec<f64> = if fast {
         vec![0.5, 0.2, 0.1]
     } else {
         vec![0.5, 0.33, 0.2, 0.14, 0.1]
     };
-    let delays = [0.0f64, 50.0];
-    let paradigms = [Paradigm::Ci, Paradigm::Ei, Paradigm::AceBp, Paradigm::AceAp];
 
     eprintln!("[fig5] loading artifacts + calibrating PJRT executables...");
     let t0 = Instant::now();
@@ -52,50 +58,37 @@ fn main() -> anyhow::Result<()> {
         svc.coc[&1] * 1e3
     );
 
-    let bank = Rc::new(bank);
-    let cache = Rc::new(RefCell::new(InferCache::new()));
-    let mut cells = Vec::new();
-    for &delay in &delays {
-        for &interval in &intervals {
-            for &paradigm in &paradigms {
-                let cfg = CellConfig {
-                    paradigm,
-                    interval_s: interval,
-                    wan_delay_ms: delay,
-                    duration_s: duration,
-                    seed: 1,
-                    ..Default::default()
-                };
-                let t = Instant::now();
-                let compute = Compute::Real { bank: bank.clone(), cache: cache.clone() };
-                let mut m = run_cell(cfg, svc.clone(), compute)?;
-                let eil_ms = m.eil_ms();
-                eprintln!(
-                    "[fig5] {:>4} interval={:.2}s delay={:>2}ms: crops={} F1={:.3} BWC={:.2}MB EIL={:.1}ms  ({:.1}s wall)",
-                    paradigm.name(),
-                    interval,
-                    delay,
-                    m.crops,
-                    m.f1.f1(),
-                    m.bwc_mb(),
-                    eil_ms,
-                    t.elapsed().as_secs_f64()
-                );
-                cells.push(m);
-            }
-        }
+    let bank = Arc::new(bank);
+    let cfgs = fig5_grid(&intervals, &[0.0, 50.0], duration, 1);
+    let n = cfgs.len();
+    eprintln!("[fig5] running {n} cells on {workers} worker(s)...");
+    let t0 = Instant::now();
+    let cells = run_sweep(cfgs, workers, || {
+        // one InferCache per worker: identical crops recur across that
+        // worker's cells, and workers never contend on a shared lock
+        let cache = Arc::new(Mutex::new(InferCache::new()));
+        (svc.clone(), Compute::Real { bank: bank.clone(), cache })
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    for m in &cells {
+        eprintln!(
+            "[fig5] {:>4} interval={:.2}s delay={:>2}ms: crops={} F1={:.3} BWC={:.2}MB EIL={:.1}ms",
+            m.paradigm,
+            m.interval_s,
+            m.wan_delay_ms,
+            m.crops,
+            m.f1.f1(),
+            m.bwc_mb(),
+            m.eil_ms(),
+        );
     }
+    eprintln!("[fig5] {n} cells in {wall:.1}s wall ({:.1}s/cell)", wall / n as f64);
 
-    let tables = metrics::figure5_tables(&mut cells);
-    let csv = metrics::figure5_csv(&mut cells);
+    let tables = metrics::figure5_tables(&cells);
+    let csv = metrics::figure5_csv(&cells);
     println!("\n# Figure 5 reproduction (virtual duration {duration} s per cell)\n{tables}");
     std::fs::write(dir.join("results_fig5.md"), format!("# Figure 5\n{tables}"))?;
     std::fs::write(dir.join("results_fig5.csv"), &csv)?;
-    eprintln!(
-        "[fig5] wrote {} cells -> artifacts/results_fig5.md / .csv  (cache: {} eoc execs, {} coc execs)",
-        cells.len(),
-        cache.borrow().eoc_execs,
-        cache.borrow().coc_execs
-    );
+    eprintln!("[fig5] wrote {n} cells -> artifacts/results_fig5.md / .csv");
     Ok(())
 }

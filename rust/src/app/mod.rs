@@ -6,5 +6,7 @@
 pub mod fedtrain;
 pub mod videoquery;
 
-pub use fedtrain::{run_fedtrain, FedConfig, FedMetrics};
-pub use videoquery::{run_cell, CellConfig, Compute, InferCache, Paradigm, ServiceTimes};
+pub use fedtrain::{run_fedtrain, run_fedtrain_seeds, FedConfig, FedMetrics};
+pub use videoquery::{
+    fig5_grid, run_cell, run_sweep, CellConfig, Compute, InferCache, Paradigm, ServiceTimes,
+};

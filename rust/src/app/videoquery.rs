@@ -41,6 +41,7 @@ use anyhow::Result;
 use std::cell::{Cell, RefCell};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Implementation paradigm under comparison (§5.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -170,8 +171,10 @@ impl ServiceTimes {
 }
 
 /// Classifier outputs for the DES: real XLA inference with a
-/// cross-paradigm cache (identical crops recur across cells; caching
-/// the OUTPUT changes nothing observable but cuts wall-clock ~4x).
+/// cross-cell cache (identical crops recur across cells; caching the
+/// OUTPUT changes nothing observable but cuts wall-clock ~4x). Under
+/// the parallel sweep each worker owns one cache (`run_sweep`), so the
+/// compute hot path never contends on a shared lock.
 pub struct InferCache {
     /// pixel-hash -> EOC target-confidence
     eoc: HashMap<u64, f32>,
@@ -279,8 +282,13 @@ struct CropRecord {
 
 /// Compute substrate handed to the components. `Synthetic` is an
 /// oracle keyed by pixel hash (unit tests without artifacts).
+///
+/// `Real` is thread-shareable (`Arc` bank + `Arc<Mutex>` cache) so
+/// sweep workers can run cells concurrently against one loaded model
+/// bank; cloning is a refcount bump.
+#[derive(Clone)]
 pub enum Compute {
-    Real { bank: Rc<ModelBank>, cache: Rc<std::cell::RefCell<InferCache>> },
+    Real { bank: Arc<ModelBank>, cache: Arc<Mutex<InferCache>> },
     /// (eoc_conf, coc_top1) oracles keyed by pixel hash
     Synthetic { target_bias: f32 },
 }
@@ -288,7 +296,7 @@ pub enum Compute {
 impl Compute {
     fn eoc_conf(&self, crops: &[&Vec<f32>]) -> Result<Vec<f32>> {
         match self {
-            Compute::Real { bank, cache } => cache.borrow_mut().eoc_conf(&bank.eoc, crops),
+            Compute::Real { bank, cache } => cache.lock().unwrap().eoc_conf(&bank.eoc, crops),
             Compute::Synthetic { target_bias } => Ok(crops
                 .iter()
                 .map(|c| {
@@ -302,7 +310,7 @@ impl Compute {
 
     fn coc_top1(&self, crops: &[&Vec<f32>]) -> Result<Vec<u8>> {
         match self {
-            Compute::Real { bank, cache } => cache.borrow_mut().coc_top1(&bank.coc, crops),
+            Compute::Real { bank, cache } => cache.lock().unwrap().coc_top1(&bank.coc, crops),
             Compute::Synthetic { .. } => Ok(crops
                 .iter()
                 .map(|c| (pixel_hash(c) % 8) as u8)
@@ -968,7 +976,7 @@ pub fn run_cell(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Result<
         shared.rs_meta.get(),
         edge_positives
     );
-    Ok(CellMetrics {
+    let mut m = CellMetrics {
         paradigm: cfg.paradigm.name().to_string(),
         interval_s: cfg.interval_s,
         wan_delay_ms: cfg.wan_delay_ms,
@@ -979,7 +987,67 @@ pub fn run_cell(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Result<
         edge_decided,
         cloud_decided,
         sim_duration_s: cfg.duration_s,
-    })
+    };
+    // sort the quantile buffer once here, so every downstream reader
+    // (tables, CSV, hashes) takes the O(1) indexed path through &self
+    m.finalize();
+    Ok(m)
+}
+
+// ---------------------------------------------------------------------------
+// Multi-cell sweeps (Figure 5)
+// ---------------------------------------------------------------------------
+
+/// The Figure-5 cell grid: paradigm x load (OD interval) x WAN delay,
+/// in the paper's sweep order (delay outermost, then load, then
+/// paradigm) — the order `run_sweep` preserves in its results.
+pub fn fig5_grid(intervals: &[f64], delays: &[f64], duration_s: f64, seed: u64) -> Vec<CellConfig> {
+    let mut cfgs = Vec::with_capacity(delays.len() * intervals.len() * 4);
+    for &delay in delays {
+        for &interval in intervals {
+            for paradigm in [Paradigm::Ci, Paradigm::Ei, Paradigm::AceBp, Paradigm::AceAp] {
+                cfgs.push(CellConfig {
+                    paradigm,
+                    interval_s: interval,
+                    wan_delay_ms: delay,
+                    duration_s,
+                    seed,
+                    ..Default::default()
+                });
+            }
+        }
+    }
+    cfgs
+}
+
+/// Run every cell of `cfgs` on a pool of `workers` threads
+/// (`sweep::parallel_map_init`), returning metrics in `cfgs` order.
+///
+/// `make_compute` is called once per worker to build its
+/// (service-times, compute) pair — with `Compute::Real` that means one
+/// `InferCache` per worker sharing one `Arc<ModelBank>`, so workers
+/// never block each other on inference. Cells are independent DES
+/// worlds, so the parallel sweep is metric-identical to the serial
+/// one (golden-tested in `tests/svcgraph_integration.rs`); only the
+/// wall-clock drops from sum-of-cells to max-of-cells.
+pub fn run_sweep<F>(
+    cfgs: Vec<CellConfig>,
+    workers: usize,
+    make_compute: F,
+) -> Result<Vec<CellMetrics>>
+where
+    F: Fn() -> (ServiceTimes, Compute) + Sync,
+{
+    crate::sweep::parallel_map_init(
+        cfgs,
+        workers,
+        &make_compute,
+        |state: &mut (ServiceTimes, Compute), cfg: CellConfig| {
+            run_cell(cfg, state.0.clone(), state.1.clone())
+        },
+    )
+    .into_iter()
+    .collect()
 }
 
 #[cfg(test)]
@@ -1042,8 +1110,8 @@ mod tests {
 
     #[test]
     fn wan_delay_raises_ci_eil() {
-        let mut fast = run(Paradigm::Ci, 0.5, 0.0);
-        let mut slow = run(Paradigm::Ci, 0.5, 50.0);
+        let fast = run(Paradigm::Ci, 0.5, 0.0);
+        let slow = run(Paradigm::Ci, 0.5, 50.0);
         assert!(
             slow.eil_ms() > fast.eil_ms() + 40.0,
             "delay not reflected: {} vs {}",
@@ -1054,8 +1122,8 @@ mod tests {
 
     #[test]
     fn load_increases_ci_eil_via_backlog() {
-        let mut low = run(Paradigm::Ci, 0.5, 0.0);
-        let mut high = run(Paradigm::Ci, 0.1, 0.0);
+        let low = run(Paradigm::Ci, 0.5, 0.0);
+        let high = run(Paradigm::Ci, 0.1, 0.0);
         assert!(
             high.eil_ms() > low.eil_ms() * 1.5,
             "no backlog effect: {} vs {}",
@@ -1071,9 +1139,7 @@ mod tests {
         // AP routes some crops straight to COC when EOC queues build
         assert!(ap.crops > 0 && bp.crops > 0);
         // and its mean EIL should not be (much) worse than BP's
-        let mut bp2 = bp.clone();
-        let mut ap2 = ap.clone();
-        assert!(ap2.eil_ms() <= bp2.eil_ms() * 1.6, "AP {} vs BP {}", ap2.eil_ms(), bp2.eil_ms());
+        assert!(ap.eil_ms() <= bp.eil_ms() * 1.6, "AP {} vs BP {}", ap.eil_ms(), bp.eil_ms());
     }
 
     #[test]
@@ -1083,6 +1149,24 @@ mod tests {
         assert_eq!(a.crops, b.crops);
         assert_eq!(a.bwc_bytes, b.bwc_bytes);
         assert_eq!(a.f1, b.f1);
+    }
+
+    #[test]
+    fn sweep_grid_order_and_parallel_equivalence() {
+        let grid = fig5_grid(&[0.5], &[0.0, 50.0], 5.0, 3);
+        assert_eq!(grid.len(), 8, "2 delays x 1 interval x 4 paradigms");
+        assert_eq!(grid[0].wan_delay_ms, 0.0);
+        assert_eq!(grid[4].wan_delay_ms, 50.0);
+        assert_eq!(grid[0].paradigm, Paradigm::Ci);
+        let mk = || (ServiceTimes::synthetic(), Compute::Synthetic { target_bias: 0.05 });
+        let serial = run_sweep(grid.clone(), 1, mk).unwrap();
+        let parallel = run_sweep(grid, 3, mk).unwrap();
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.paradigm, b.paradigm, "result order must be grid order");
+            assert_eq!(a.crops, b.crops);
+            assert_eq!(a.bwc_bytes, b.bwc_bytes);
+            assert_eq!(a.f1, b.f1);
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod runtime;
 pub mod simnet;
 pub mod storage;
 pub mod svcgraph;
+pub mod sweep;
 pub mod testbed;
 pub mod topology;
 pub mod util;

@@ -8,8 +8,12 @@
 //!                                    classify it through the runtime
 //!   ace plan [--topology FILE]     — orchestrate a topology onto the
 //!                                    paper testbed, print the plan
-//!   ace fig5 [--fast] [--seconds N] [--out DIR]
-//!                                  — run the Figure 5 sweep
+//!   ace fig5 [--fast] [--seconds N] [--out DIR] [--workers N]
+//!            [--synthetic]         — run the Figure 5 sweep on a
+//!                                    parallel worker pool (cells are
+//!                                    independent DES worlds; results
+//!                                    are order- and bit-identical to
+//!                                    the serial sweep)
 //!   ace run --paradigm P [--interval I] [--delay D] [--seconds N]
 //!                                  — run one experiment cell
 //!   ace svcrun --app videoquery|fedtrain [flags]
@@ -21,17 +25,19 @@
 //! clap is unavailable offline; argument parsing is a ~60-line hand
 //! rolled matcher (DESIGN.md §Substitutions).
 
-use ace::app::fedtrain::{run_fedtrain, FedConfig};
-use ace::app::videoquery::{run_cell, CellConfig, Compute, InferCache, Paradigm, ServiceTimes};
+use ace::app::fedtrain::{run_fedtrain, run_fedtrain_seeds, FedConfig};
+use ace::app::videoquery::{
+    fig5_grid, run_cell, run_sweep, CellConfig, Compute, InferCache, Paradigm, ServiceTimes,
+};
 use ace::infra::paper_testbed;
 use ace::platform::orchestrator;
 use ace::runtime::{artifacts_dir, Engine, ModelBank};
 use ace::topology::{Topology, VIDEOQUERY_TOPOLOGY};
 use ace::video::synth;
 use anyhow::{bail, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 struct Args {
     cmd: String,
@@ -167,12 +173,12 @@ fn paradigm_of(s: &str) -> Result<Paradigm> {
     })
 }
 
-fn load_real() -> Result<(Rc<ModelBank>, ServiceTimes)> {
+fn load_real() -> Result<(Arc<ModelBank>, ServiceTimes)> {
     let engine = Engine::cpu()?;
     let mut bank = ModelBank::load(&engine, &artifacts_dir()?)?;
     bank.calibrate(3)?;
     let svc = ServiceTimes::calibrated_to_paper(&bank);
-    Ok((Rc::new(bank), svc))
+    Ok((Arc::new(bank), svc))
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -186,8 +192,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let (bank, svc) = load_real()?;
-    let cache = Rc::new(RefCell::new(InferCache::new()));
-    let mut m = run_cell(cfg, svc, Compute::Real { bank, cache })?;
+    let cache = Arc::new(Mutex::new(InferCache::new()));
+    let m = run_cell(cfg, svc, Compute::Real { bank, cache })?;
     let eil = m.eil_ms();
     let p99 = m.eil_p99_ms();
     println!(
@@ -215,12 +221,12 @@ fn cmd_svcrun(args: &Args) -> Result<()> {
             // artifacts; the default synthetic oracle needs nothing
             let (svc, compute) = if args.has("real") {
                 let (bank, svc) = load_real()?;
-                let cache = Rc::new(RefCell::new(InferCache::new()));
+                let cache = Arc::new(Mutex::new(InferCache::new()));
                 (svc, Compute::Real { bank, cache })
             } else {
                 (ServiceTimes::synthetic(), Compute::Synthetic { target_bias: 0.05 })
             };
-            let mut m = run_cell(cfg, svc, compute)?;
+            let m = run_cell(cfg, svc, compute)?;
             let eil = m.eil_ms();
             let p99 = m.eil_p99_ms();
             println!(
@@ -246,6 +252,38 @@ fn cmd_svcrun(args: &Args) -> Result<()> {
                 seed: args.f64_or("seed", 42.0) as u64,
                 ..Default::default()
             };
+            let num_seeds = args.usize_or("seeds", 1);
+            if num_seeds > 1 {
+                // multi-seed robustness sweep on the worker pool
+                let workers = args.usize_or("workers", ace::sweep::default_workers());
+                let seeds: Vec<u64> = (0..num_seeds as u64).map(|i| cfg.seed + i).collect();
+                let t0 = Instant::now();
+                let runs = run_fedtrain_seeds(&cfg, &seeds, workers)?;
+                let wall = t0.elapsed().as_secs_f64();
+                println!("| seed | federated acc | client-only mean | BWC MB | virtual s |");
+                println!("|---|---|---|---|---|");
+                for (seed, m) in seeds.iter().zip(&runs) {
+                    let mean_client = m.client_only_acc.iter().sum::<f64>()
+                        / m.client_only_acc.len().max(1) as f64;
+                    println!(
+                        "| {seed} | {:.3} | {:.3} | {:.3} | {:.2} |",
+                        m.final_accuracy,
+                        mean_client,
+                        m.wan_bytes as f64 / 1e6,
+                        m.virtual_secs,
+                    );
+                }
+                let accs: Vec<f64> = runs.iter().map(|m| m.final_accuracy).collect();
+                let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+                let min = accs.iter().cloned().fold(f64::INFINITY, f64::min);
+                let max = accs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                println!(
+                    "svcgraph/fedtrain: {} seeds on {workers} workers in {wall:.2}s wall; \
+                     federated acc mean {mean:.3} (min {min:.3} / max {max:.3})",
+                    seeds.len(),
+                );
+                return Ok(());
+            }
             let m = run_fedtrain(cfg)?;
             println!("| round | mean loss | global acc |");
             println!("|---|---|---|");
@@ -277,40 +315,47 @@ fn cmd_fig5(args: &Args) -> Result<()> {
         vec![0.5, 0.33, 0.2, 0.14, 0.1]
     };
     let duration = args.f64_or("seconds", if args.has("fast") { 15.0 } else { 30.0 });
-    let (bank, svc) = load_real()?;
-    let cache = Rc::new(RefCell::new(InferCache::new()));
-    let mut cells = Vec::new();
-    for delay in [0.0, 50.0] {
-        for &interval in &intervals {
-            for paradigm in [Paradigm::Ci, Paradigm::Ei, Paradigm::AceBp, Paradigm::AceAp] {
-                let cfg = CellConfig {
-                    paradigm,
-                    interval_s: interval,
-                    wan_delay_ms: delay,
-                    duration_s: duration,
-                    ..Default::default()
-                };
-                let m = run_cell(
-                    cfg,
-                    svc.clone(),
-                    Compute::Real { bank: bank.clone(), cache: cache.clone() },
-                )?;
-                eprintln!(
-                    "[fig5] {} i={interval} d={delay}: F1={:.3} BWC={:.2}MB",
-                    m.paradigm, m.f1.f1(), m.bwc_mb()
-                );
-                cells.push(m);
-            }
-        }
+    let workers = args.usize_or("workers", ace::sweep::default_workers());
+    let cfgs = fig5_grid(&intervals, &[0.0, 50.0], duration, 1);
+    let n = cfgs.len();
+    // load + calibrate BEFORE the timer, so the printed wall-clock
+    // measures the sweep alone (the number the serial-vs-parallel
+    // comparison in the CI smoke step reads)
+    let real = if args.has("synthetic") { None } else { Some(load_real()?) };
+    let t0 = Instant::now();
+    // cells run on the worker pool; with real compute each worker gets
+    // its own InferCache over one shared Arc<ModelBank>, so inference
+    // never serializes across workers
+    let cells = match real {
+        None => run_sweep(cfgs, workers, || {
+            (ServiceTimes::synthetic(), Compute::Synthetic { target_bias: 0.05 })
+        })?,
+        Some((bank, svc)) => run_sweep(cfgs, workers, move || {
+            let cache = Arc::new(Mutex::new(InferCache::new()));
+            (svc.clone(), Compute::Real { bank: bank.clone(), cache })
+        })?,
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    for m in &cells {
+        eprintln!(
+            "[fig5] {} i={} d={}: F1={:.3} BWC={:.2}MB",
+            m.paradigm,
+            m.interval_s,
+            m.wan_delay_ms,
+            m.f1.f1(),
+            m.bwc_mb()
+        );
     }
-    let tables = ace::metrics::figure5_tables(&mut cells);
+    // stderr like the per-cell lines: stdout stays the tables only
+    eprintln!("[fig5] {n} cells on {workers} worker(s) in {wall:.2}s wall");
+    let tables = ace::metrics::figure5_tables(&cells);
     println!("{tables}");
     if let Some(out) = args.get("out") {
         std::fs::create_dir_all(out)?;
         std::fs::write(format!("{out}/results_fig5.md"), &tables)?;
         std::fs::write(
             format!("{out}/results_fig5.csv"),
-            ace::metrics::figure5_csv(&mut cells),
+            ace::metrics::figure5_csv(&cells),
         )?;
         println!("wrote {out}/results_fig5.{{md,csv}}");
     }
@@ -330,12 +375,14 @@ COMMANDS:
   plan         orchestrate a topology         [--topology FILE]
   run          one experiment cell            --paradigm ci|ei|ace|ace+
                [--interval S] [--delay MS] [--seconds N] [--seed S]
-  fig5         the full Figure 5 sweep        [--fast] [--seconds N] [--out DIR]
+  fig5         the full Figure 5 sweep on a   [--fast] [--seconds N] [--out DIR]
+               parallel worker pool           [--workers N] [--synthetic]
   svcrun       an app end-to-end on the       --app videoquery|fedtrain
                generic svcgraph runtime       [--paradigm P] [--interval S]
                                               [--delay MS] [--seconds N]
                                               [--ecs N] [--cams N] [--rounds N]
-                                              [--seed S] [--real]
+                                              [--seed S] [--seeds N] [--workers N]
+                                              [--real]
   help         this message"
     );
 }

@@ -83,17 +83,26 @@ impl CellMetrics {
     }
 
     /// Mean EIL in ms (Figure 5 bottom row).
-    pub fn eil_ms(&mut self) -> f64 {
+    pub fn eil_ms(&self) -> f64 {
         self.eil.mean() * 1e3
     }
 
-    pub fn eil_p99_ms(&mut self) -> f64 {
+    pub fn eil_p99_ms(&self) -> f64 {
         self.eil.quantile(0.99) * 1e3
+    }
+
+    /// Sort the EIL sample buffer once, so every later quantile read
+    /// (tables, CSV, hashes) is an O(1) index through `&self`.
+    /// `run_cell` calls this before returning.
+    pub fn finalize(&mut self) {
+        self.eil.sort_samples();
     }
 }
 
 /// Render Figure-5-style markdown tables (one per metric x delay).
-pub fn figure5_tables(cells: &mut [CellMetrics]) -> String {
+/// Cells are read-only: quantile buffers are sorted once upfront by
+/// [`CellMetrics::finalize`], not re-sorted per emitter.
+pub fn figure5_tables(cells: &[CellMetrics]) -> String {
     let mut out = String::new();
     let mut delays: Vec<u64> = cells.iter().map(|c| c.wan_delay_ms as u64).collect();
     delays.sort_unstable();
@@ -128,7 +137,7 @@ pub fn figure5_tables(cells: &mut [CellMetrics]) -> String {
             for iv in &intervals {
                 out.push_str(&format!("| {iv} |"));
                 for p in &paradigms {
-                    let cell = cells.iter_mut().find(|c| {
+                    let cell = cells.iter().find(|c| {
                         c.paradigm == *p
                             && format!("{:.2}", c.interval_s) == *iv
                             && c.wan_delay_ms as u64 == *delay
@@ -153,11 +162,11 @@ pub fn figure5_tables(cells: &mut [CellMetrics]) -> String {
 }
 
 /// CSV dump (one row per cell) for external plotting.
-pub fn figure5_csv(cells: &mut [CellMetrics]) -> String {
+pub fn figure5_csv(cells: &[CellMetrics]) -> String {
     let mut out = String::from(
         "paradigm,interval_s,wan_delay_ms,f1,precision,recall,bwc_mb,eil_mean_ms,eil_p50_ms,eil_p99_ms,crops,edge_decided,cloud_decided\n",
     );
-    for c in cells.iter_mut() {
+    for c in cells.iter() {
         out.push_str(&format!(
             "{},{},{},{:.4},{:.4},{:.4},{:.3},{:.2},{:.2},{:.2},{},{},{}\n",
             c.paradigm,
@@ -248,18 +257,18 @@ mod tests {
 
     #[test]
     fn tables_have_all_paradigms() {
-        let mut cells = vec![
+        let cells = vec![
             cell("CI", 0.5, 0.0),
             cell("EI", 0.5, 0.0),
             cell("ACE", 0.5, 0.0),
             cell("ACE+", 0.5, 0.0),
         ];
-        let t = figure5_tables(&mut cells);
+        let t = figure5_tables(&cells);
         assert!(t.contains("| CI | EI | ACE | ACE+ |"), "{t}");
         assert!(t.contains("F1-score"));
         assert!(t.contains("BWC"));
         assert!(t.contains("EIL"));
-        let csv = figure5_csv(&mut cells);
+        let csv = figure5_csv(&cells);
         assert_eq!(csv.lines().count(), 5);
         assert!(csv.contains("ACE+,0.5,0"));
     }

@@ -6,9 +6,14 @@
 //! Figure 2 link ②). QoS-0 semantics, retained messages, `+`/`#`
 //! filters. Subscribers receive on std mpsc channels; byte counters
 //! support the bridged-vs-direct ablation bench.
+//!
+//! Routing is indexed: subscriptions live in a [`topic::TopicTrie`],
+//! so a publish walks O(topic depth) trie nodes instead of scanning
+//! every subscription (the same index `svcgraph::Fabric` uses on the
+//! DES data plane). Delivery order stays insertion order.
 
-use super::topic;
-use std::collections::{HashMap, HashSet};
+use super::topic::{self, TopicTrie};
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
@@ -38,14 +43,16 @@ impl Message {
 }
 
 struct Subscription {
-    filter: String,
     tx: Sender<Message>,
     id: u64,
 }
 
 struct Inner {
     name: String,
-    subs: Vec<Subscription>,
+    /// Subscription index: one publish routes in O(topic depth).
+    subs: TopicTrie<Subscription>,
+    /// id -> filter, so unsubscribe/pruning can address the trie path.
+    filters: HashMap<u64, String>,
     retained: HashMap<String, Message>,
     next_id: u64,
     /// (messages, payload bytes) accepted by publish.
@@ -84,7 +91,8 @@ impl Broker {
         Broker {
             inner: Arc::new(Mutex::new(Inner {
                 name: name.into(),
-                subs: Vec::new(),
+                subs: TopicTrie::new(),
+                filters: HashMap::new(),
                 retained: HashMap::new(),
                 next_id: 1,
                 pub_count: 0,
@@ -123,12 +131,16 @@ impl Broker {
                 inner.deliver_bytes += bytes;
             }
         }
-        inner.subs.push(Subscription { filter: filter.to_string(), tx, id });
+        inner.subs.insert(filter, Subscription { tx, id });
+        inner.filters.insert(id, filter.to_string());
         Ok(SubHandle { id, rx })
     }
 
     pub fn unsubscribe(&self, id: u64) {
-        self.inner.lock().unwrap().subs.retain(|s| s.id != id);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(filter) = inner.filters.remove(&id) {
+            inner.subs.remove(&filter, |s| s.id == id);
+        }
     }
 
     /// Publish; `retain` keeps the last message per topic for future
@@ -137,7 +149,8 @@ impl Broker {
         if !topic::valid_name(&msg.topic) {
             return Err(format!("invalid topic '{}'", msg.topic));
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
         if msg.origin.is_empty() {
             msg.origin = inner.name.clone();
         }
@@ -147,24 +160,27 @@ impl Broker {
             inner.retained.insert(msg.topic.clone(), msg.clone());
         }
         let mut reached = 0;
-        let mut dead: HashSet<u64> = HashSet::new();
+        let mut dead: Vec<u64> = Vec::new();
         let mut delivered_bytes = 0u64;
-        for s in inner.subs.iter() {
-            if topic::matches(&s.filter, &msg.topic) {
-                // Arc payload: per-subscriber clone is a refcount bump
-                if s.tx.send(msg.clone()).is_ok() {
-                    reached += 1;
-                    delivered_bytes += msg.payload.len() as u64;
-                } else {
-                    dead.insert(s.id);
-                }
+        // O(topic depth) trie walk; matches come back in insertion
+        // (i.e. subscription) order
+        for s in inner.subs.collect_matches(&msg.topic) {
+            // Arc payload: per-subscriber clone is a refcount bump
+            if s.tx.send(msg.clone()).is_ok() {
+                reached += 1;
+                delivered_bytes += msg.payload.len() as u64;
+            } else {
+                dead.push(s.id);
             }
         }
         inner.deliver_count += reached as u64;
         inner.deliver_bytes += delivered_bytes;
-        if !dead.is_empty() {
-            // single O(subs) retain pass with O(1) membership tests
-            inner.subs.retain(|s| !dead.contains(&s.id));
+        // garbage-collect closed receivers: each is one targeted trie
+        // path removal, not a scan over every subscription
+        for id in dead {
+            if let Some(filter) = inner.filters.remove(&id) {
+                inner.subs.remove(&filter, |s| s.id == id);
+            }
         }
         Ok(reached)
     }

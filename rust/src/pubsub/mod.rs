@@ -1,6 +1,9 @@
 //! Resource-level message service (§4.3.2, Figure 2).
 //!
-//! * `topic` — MQTT-style topic matching, shared by all routers.
+//! * `topic` — MQTT-style topic matching + the `TopicTrie`
+//!   subscription index shared by all routers (broker AND the DES
+//!   `svcgraph::Fabric`), so one publish routes in O(topic depth)
+//!   instead of O(subscriptions).
 //! * `broker` — per-EC / per-CC in-process broker (QoS-0, retained).
 //! * `bridge` — the long-lasting EC<->CC topic bridge (link ② in
 //!   Figure 2) with loop prevention.
@@ -11,3 +14,4 @@ pub mod topic;
 
 pub use bridge::Bridge;
 pub use broker::{Broker, BrokerStats, Message, SubHandle};
+pub use topic::TopicTrie;

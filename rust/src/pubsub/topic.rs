@@ -2,6 +2,23 @@
 //!
 //! Shared by the threaded broker (platform control plane) and the DES
 //! message router (experiment data plane), so both agree on semantics.
+//!
+//! Two matching engines live here and MUST agree:
+//!
+//! * [`matches`] — the reference scalar matcher, O(filter levels) per
+//!   (filter, name) pair; a router holding N subscriptions pays O(N)
+//!   per publish with it.
+//! * [`TopicTrie`] — the subscription *index*: filters are stored as
+//!   paths in a level trie (literal edges, a `+` edge, `#` terminals),
+//!   so one publish walks O(topic depth) nodes regardless of N. Both
+//!   `svcgraph::Fabric` (DES data plane) and `pubsub::Broker`
+//!   (threaded control plane) route through it.
+//!
+//! Agreement (including `+`/`#` edge cases like `a/#` matching the
+//! parent `a`) is enforced by a differential property test in
+//! `tests/properties.rs`.
+
+use std::collections::HashMap;
 
 /// Is `name` a valid concrete topic (no wildcards, non-empty levels)?
 pub fn valid_name(name: &str) -> bool {
@@ -42,6 +59,184 @@ pub fn matches(filter: &str, name: &str) -> bool {
             (Some(fl), Some(nl)) if fl == nl => continue,
             (None, None) => return true,
             _ => return false,
+        }
+    }
+}
+
+/// One stored subscription: `seq` is the global insertion sequence,
+/// used to report matches in insertion order (delivery-order parity
+/// with the linear scan the trie replaced — and, through the DES
+/// scheduler's insertion-sequence tie-breaking, determinism).
+struct TrieEntry<T> {
+    seq: u64,
+    value: T,
+}
+
+/// One trie node = one topic level. Filters terminate either exactly
+/// here (`here`) or with a `#` that swallows this node's subtree AND
+/// the node itself (`hash` — MQTT: `a/#` matches the parent `a`).
+struct TrieNode<T> {
+    children: HashMap<String, TrieNode<T>>,
+    plus: Option<Box<TrieNode<T>>>,
+    here: Vec<TrieEntry<T>>,
+    hash: Vec<TrieEntry<T>>,
+}
+
+impl<T> TrieNode<T> {
+    fn new() -> Self {
+        TrieNode { children: HashMap::new(), plus: None, here: Vec::new(), hash: Vec::new() }
+    }
+
+    fn is_unused(&self) -> bool {
+        self.children.is_empty()
+            && self.plus.is_none()
+            && self.here.is_empty()
+            && self.hash.is_empty()
+    }
+}
+
+impl<T> Default for TrieNode<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Topic-trie subscription index: `insert`/`remove` filters, then
+/// `collect_matches(name)` returns every stored value whose filter
+/// matches `name`, in insertion order, walking O(topic depth) nodes
+/// instead of scanning all subscriptions.
+///
+/// Semantics mirror [`matches`] verbatim for ANY filter string, valid
+/// or not: levels are compared literally, `+` matches exactly one
+/// level, and a `#` level terminates the filter (the reference matcher
+/// also ignores anything after a `#`).
+pub struct TopicTrie<T> {
+    root: TrieNode<T>,
+    next_seq: u64,
+    len: usize,
+}
+
+impl<T> Default for TopicTrie<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> TopicTrie<T> {
+    pub fn new() -> Self {
+        TopicTrie { root: TrieNode::new(), next_seq: 0, len: 0 }
+    }
+
+    /// Stored subscriptions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Store `value` under `filter`. Returns the insertion sequence
+    /// number (monotonic; also the delivery-order key).
+    pub fn insert(&mut self, filter: &str, value: T) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.len += 1;
+        let entry = TrieEntry { seq, value };
+        let mut node = &mut self.root;
+        for level in filter.split('/') {
+            if level == "#" {
+                // `#` terminates the filter; like the reference
+                // matcher, anything after it is ignored
+                node.hash.push(entry);
+                return seq;
+            }
+            node = if level == "+" {
+                &mut **node.plus.get_or_insert_with(Box::default)
+            } else {
+                node.children.entry(level.to_string()).or_default()
+            };
+        }
+        node.here.push(entry);
+        seq
+    }
+
+    /// Remove every entry under `filter` whose value satisfies `pred`;
+    /// returns how many were removed. Emptied trie branches are pruned.
+    pub fn remove(&mut self, filter: &str, mut pred: impl FnMut(&T) -> bool) -> usize {
+        let levels: Vec<&str> = filter.split('/').collect();
+        let removed = Self::remove_rec(&mut self.root, &levels, &mut pred);
+        self.len -= removed;
+        removed
+    }
+
+    fn remove_rec(
+        node: &mut TrieNode<T>,
+        levels: &[&str],
+        pred: &mut impl FnMut(&T) -> bool,
+    ) -> usize {
+        let Some((level, rest)) = levels.split_first() else {
+            let before = node.here.len();
+            node.here.retain(|e| !pred(&e.value));
+            return before - node.here.len();
+        };
+        if *level == "#" {
+            let before = node.hash.len();
+            node.hash.retain(|e| !pred(&e.value));
+            return before - node.hash.len();
+        }
+        if *level == "+" {
+            let Some(plus) = node.plus.as_mut() else { return 0 };
+            let n = Self::remove_rec(plus, rest, pred);
+            if plus.is_unused() {
+                node.plus = None;
+            }
+            n
+        } else {
+            let Some(child) = node.children.get_mut(*level) else { return 0 };
+            let n = Self::remove_rec(child, rest, pred);
+            if child.is_unused() {
+                node.children.remove(*level);
+            }
+            n
+        }
+    }
+
+    /// Every stored value whose filter matches the concrete `name`,
+    /// in insertion order. One walk visits at most 2^w paths where w
+    /// is the number of `+`-branches taken — O(topic depth) for the
+    /// exact-and-`#` filters that dominate real tables.
+    pub fn collect_matches(&self, name: &str) -> Vec<&T> {
+        let levels: Vec<&str> = name.split('/').collect();
+        let mut hits: Vec<(u64, &T)> = Vec::new();
+        Self::walk(&self.root, &levels, 0, &mut hits);
+        // insertion order == linear-scan delivery order
+        hits.sort_unstable_by_key(|&(seq, _)| seq);
+        hits.into_iter().map(|(_, v)| v).collect()
+    }
+
+    fn walk<'a>(
+        node: &'a TrieNode<T>,
+        levels: &[&str],
+        i: usize,
+        hits: &mut Vec<(u64, &'a T)>,
+    ) {
+        // `#` at this depth matches the remaining levels — including
+        // zero of them (`a/#` matches `a`)
+        for e in &node.hash {
+            hits.push((e.seq, &e.value));
+        }
+        if i == levels.len() {
+            for e in &node.here {
+                hits.push((e.seq, &e.value));
+            }
+            return;
+        }
+        if let Some(child) = node.children.get(levels[i]) {
+            Self::walk(child, levels, i + 1, hits);
+        }
+        if let Some(plus) = &node.plus {
+            Self::walk(plus, levels, i + 1, hits);
         }
     }
 }
@@ -87,5 +282,99 @@ mod tests {
         assert!(!valid_filter("a/#/c"));
         assert!(!valid_filter("a/b+"));
         assert!(!valid_filter("a//b"));
+    }
+
+    #[test]
+    fn trie_exact_plus_hash() {
+        let mut t = TopicTrie::new();
+        t.insert("a/b/c", 0usize);
+        t.insert("a/+/c", 1);
+        t.insert("a/#", 2);
+        t.insert("#", 3);
+        t.insert("x/y", 4);
+        assert_eq!(t.len(), 5);
+        let got: Vec<usize> = t.collect_matches("a/b/c").into_iter().copied().collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        let got: Vec<usize> = t.collect_matches("x/y").into_iter().copied().collect();
+        assert_eq!(got, vec![3, 4]);
+    }
+
+    #[test]
+    fn trie_hash_matches_parent_level() {
+        // the MQTT edge case: `a/#` matches `a` itself
+        let mut t = TopicTrie::new();
+        t.insert("a/#", 0usize);
+        t.insert("+/#", 1);
+        assert_eq!(
+            t.collect_matches("a").into_iter().copied().collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        assert!(t.collect_matches("b").into_iter().copied().collect::<Vec<_>>() == vec![1]);
+    }
+
+    #[test]
+    fn trie_plus_is_exactly_one_level() {
+        let mut t = TopicTrie::new();
+        t.insert("a/+", 0usize);
+        assert_eq!(t.collect_matches("a/b").len(), 1);
+        assert!(t.collect_matches("a").is_empty());
+        assert!(t.collect_matches("a/b/c").is_empty());
+    }
+
+    #[test]
+    fn trie_reports_matches_in_insertion_order() {
+        let mut t = TopicTrie::new();
+        // interleave filters so trie layout differs from insertion order
+        t.insert("z/#", 10usize);
+        t.insert("a/b", 11);
+        t.insert("#", 12);
+        t.insert("a/+", 13);
+        t.insert("a/b", 14);
+        let got: Vec<usize> = t.collect_matches("a/b").into_iter().copied().collect();
+        assert_eq!(got, vec![11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn trie_remove_prunes_and_recounts() {
+        let mut t = TopicTrie::new();
+        t.insert("a/b/c", 1usize);
+        t.insert("a/b/c", 2);
+        t.insert("a/+/c", 3);
+        t.insert("a/#", 4);
+        assert_eq!(t.remove("a/b/c", |v| *v == 1), 1);
+        assert_eq!(t.len(), 3);
+        let got: Vec<usize> = t.collect_matches("a/b/c").into_iter().copied().collect();
+        assert_eq!(got, vec![2, 3, 4]);
+        // removing a filter that is not stored is a no-op
+        assert_eq!(t.remove("a/b", |_| true), 0);
+        assert_eq!(t.remove("a/+/c", |_| true), 1);
+        assert_eq!(t.remove("a/#", |_| true), 1);
+        assert_eq!(t.remove("a/b/c", |_| true), 1);
+        assert!(t.is_empty());
+        // branches were pruned: root is empty again
+        assert!(t.root.is_unused());
+    }
+
+    #[test]
+    fn trie_mirrors_reference_on_the_spec_examples() {
+        for (filter, name, want) in [
+            ("a/b/c", "a/b/c", true),
+            ("a/b/c", "a/b", false),
+            ("a/+/c", "a/b/c", true),
+            ("a/+/c", "a/c", false),
+            ("a/#", "a/b/c", true),
+            ("a/#", "a", true),
+            ("a/#", "b", false),
+            ("#", "anything/at/all", true),
+        ] {
+            let mut t = TopicTrie::new();
+            t.insert(filter, ());
+            assert_eq!(matches(filter, name), want, "reference {filter} vs {name}");
+            assert_eq!(
+                !t.collect_matches(name).is_empty(),
+                want,
+                "trie {filter} vs {name}"
+            );
+        }
     }
 }

@@ -49,7 +49,9 @@ pub struct Classifier {
     exes: HashMap<usize, Executable>,
     /// measured mean service seconds per batch size (after calibrate)
     pub service_secs: HashMap<usize, f64>,
-    pub exec_count: std::cell::Cell<u64>,
+    /// Atomic so a `ModelBank` behind an `Arc` can serve concurrent
+    /// sweep workers (`sweep::parallel_map`) through `&self`.
+    pub exec_count: std::sync::atomic::AtomicU64,
 }
 
 impl Classifier {
@@ -73,7 +75,7 @@ impl Classifier {
             batch_sizes,
             exes,
             service_secs: HashMap::new(),
-            exec_count: std::cell::Cell::new(0),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
         })
     }
 
@@ -111,7 +113,7 @@ impl Classifier {
             let lit = literal_f32(&flat, &[b as i64, self.crop as i64, self.crop as i64, 3])?;
             let exe = self.exes.get(&b).unwrap();
             let probs = exe.run(std::slice::from_ref(&lit))?;
-            self.exec_count.set(self.exec_count.get() + 1);
+            self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             let v = probs[0]
                 .to_vec::<f32>()
                 .map_err(|e| anyhow!("output: {e:?}"))?;

@@ -34,7 +34,7 @@
 
 use crate::deploy::{DeploymentPlan, Instance};
 use crate::des::Scheduler;
-use crate::pubsub::topic;
+use crate::pubsub::topic::TopicTrie;
 use crate::simnet::EdgeCloudNet;
 use crate::util::SimTime;
 use anyhow::{anyhow, bail, Result};
@@ -126,18 +126,6 @@ pub trait Component {
     fn on_timer(&mut self, _ctx: &mut Ctx, _token: u64) {}
 }
 
-struct Subscription {
-    filter: String,
-    target: usize,
-}
-
-/// One directed topic-bridge rule between two cluster buses.
-struct BridgeRule {
-    from: ClusterRef,
-    to: ClusterRef,
-    filter: String,
-}
-
 fn cidx(c: ClusterRef, num_ecs: usize) -> usize {
     match c {
         ClusterRef::Ec(k) => k,
@@ -151,8 +139,12 @@ pub struct Fabric {
     pub net: EdgeCloudNet,
     num_ecs: usize,
     /// Per cluster bus: ECs 0..num_ecs-1, then the CC at index num_ecs.
-    subs: Vec<Vec<Subscription>>,
-    bridges: Vec<BridgeRule>,
+    /// Topic-trie index of component subscriptions (value = component
+    /// index): one publish routes in O(topic depth), not O(subs).
+    subs: Vec<TopicTrie<usize>>,
+    /// Per FROM-cluster index of bridge rules (value = destination
+    /// cluster), so bridge matching is trie-indexed too.
+    bridge_subs: Vec<TopicTrie<ClusterRef>>,
     sites: Vec<Site>,
     /// Messages forwarded over the EC→CC / CC→EC bridges.
     pub bridged_up: u64,
@@ -177,16 +169,19 @@ impl Fabric {
     ) {
         let now = sch.now();
         let ci = cidx(cluster, self.num_ecs);
-        for s in &self.subs[ci] {
-            if !topic::matches(&s.filter, &msg.topic) {
-                continue;
-            }
+        // trie walk returns targets in subscription-insertion order —
+        // the exact order the old linear scan delivered in, which the
+        // DES scheduler's insertion-sequence tie-breaking turns into
+        // an identical event trajectory
+        let targets: Vec<usize> =
+            self.subs[ci].collect_matches(&msg.topic).into_iter().copied().collect();
+        for target in targets {
             let arrival = match from_site {
                 // bridge arrivals fan out locally at no modelled cost
                 // (the cluster message service is on the receiving LAN)
                 None => now,
                 Some(f) => {
-                    if self.sites[s.target].node == f.node {
+                    if self.sites[target].node == f.node {
                         now // node-internal hand-off
                     } else {
                         match cluster {
@@ -198,21 +193,20 @@ impl Fabric {
                     }
                 }
             };
-            let target = s.target;
             let m = msg.clone();
             sch.at(arrival, move |sch, w: &mut SvcWorld| {
                 SvcWorld::dispatch(sch, w, target, Event::Msg(m));
             });
         }
-        for b in &self.bridges {
-            if b.from != cluster || b.to == origin {
-                continue;
+        // bridge rules are indexed per FROM-cluster, so only this
+        // cluster's rules are even considered
+        let rules: Vec<ClusterRef> =
+            self.bridge_subs[ci].collect_matches(&msg.topic).into_iter().copied().collect();
+        for to in rules {
+            if to == origin {
+                continue; // loop prevention, like the threaded Bridge
             }
-            if !topic::matches(&b.filter, &msg.topic) {
-                continue;
-            }
-            let to = b.to;
-            let arrival = match (b.from, to) {
+            let arrival = match (cluster, to) {
                 (ClusterRef::Ec(k), ClusterRef::Cc) => {
                     self.bridged_up += 1;
                     self.net.uplink[k].send(now, msg.wire_bytes)
@@ -321,18 +315,12 @@ impl GraphRuntime {
     /// `edge/ec<k>/#` CC→EC k.
     pub fn new(net: EdgeCloudNet) -> Self {
         let num_ecs = net.uplink.len();
-        let mut bridges = Vec::new();
+        let mut bridge_subs: Vec<TopicTrie<ClusterRef>> =
+            (0..=num_ecs).map(|_| TopicTrie::new()).collect();
         for k in 0..num_ecs {
-            bridges.push(BridgeRule {
-                from: ClusterRef::Ec(k),
-                to: ClusterRef::Cc,
-                filter: "cloud/#".to_string(),
-            });
-            bridges.push(BridgeRule {
-                from: ClusterRef::Cc,
-                to: ClusterRef::Ec(k),
-                filter: format!("edge/ec{k}/#"),
-            });
+            bridge_subs[cidx(ClusterRef::Ec(k), num_ecs)].insert("cloud/#", ClusterRef::Cc);
+            bridge_subs[cidx(ClusterRef::Cc, num_ecs)]
+                .insert(&format!("edge/ec{k}/#"), ClusterRef::Ec(k));
         }
         GraphRuntime {
             world: SvcWorld {
@@ -340,8 +328,8 @@ impl GraphRuntime {
                 fabric: Fabric {
                     net,
                     num_ecs,
-                    subs: (0..=num_ecs).map(|_| Vec::new()).collect(),
-                    bridges,
+                    subs: (0..=num_ecs).map(|_| TopicTrie::new()).collect(),
+                    bridge_subs,
                     sites: Vec::new(),
                     bridged_up: 0,
                     bridged_down: 0,
@@ -358,7 +346,7 @@ impl GraphRuntime {
         let idx = self.world.comps.len();
         let ci = cidx(site.cluster, self.world.fabric.num_ecs);
         for filter in comp.subscriptions() {
-            self.world.fabric.subs[ci].push(Subscription { filter, target: idx });
+            self.world.fabric.subs[ci].insert(&filter, idx);
         }
         self.world.fabric.sites.push(site);
         self.world.comps.push(Some(comp));

@@ -1,0 +1,143 @@
+//! Parallel multi-cell sweep engine.
+//!
+//! Figure-5 cells (and fedtrain multi-seed runs) are embarrassingly
+//! parallel: each cell is an independent DES over its own world, so
+//! sweep wall-clock should be max-of-cells, not sum-of-cells. This
+//! module provides the worker pool that makes that true — plain std
+//! threads (no external deps), a shared work queue, and results
+//! written back by input index so output order is deterministic and
+//! identical to the serial path.
+//!
+//! Determinism argument: each job runs a complete, self-contained
+//! simulation — all scheduling through `des::Scheduler`, all
+//! randomness through seed-indexed `util::prng` streams. Threads share
+//! nothing but the job queue and the result slots, so interleaving can
+//! only change *when* a cell computes, never *what* it computes.
+//! `tests/svcgraph_integration.rs` pins this with a byte-identical
+//! serial-vs-parallel `figure5_csv` golden.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Worker count to use when the caller does not specify one.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` over `items` on `workers` threads, with one worker-local
+/// state created per thread by `init` (e.g. a per-worker inference
+/// cache, so workers never contend on a shared lock in their compute
+/// hot path). Results come back in input order. A `workers <= 1` call
+/// degenerates to a plain serial loop on the calling thread.
+///
+/// Panics in `f` propagate (the scope joins all workers first).
+pub fn parallel_map_init<T, R, S, I, F>(items: Vec<T>, workers: usize, init: I, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, T) -> R + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n <= 1 {
+        let mut state = init();
+        return items.into_iter().map(|item| f(&mut state, item)).collect();
+    }
+    let workers = workers.min(n);
+    let queue: Mutex<VecDeque<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect());
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    // lock released before the (long) job runs
+                    let job = queue.lock().unwrap().pop_front();
+                    let Some((i, item)) = job else { break };
+                    let r = f(&mut state, item);
+                    slots.lock().unwrap()[i] = Some(r);
+                }
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every queued job completes"))
+        .collect()
+}
+
+/// Stateless convenience wrapper over [`parallel_map_init`].
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    parallel_map_init(items, workers, || (), |_, item| f(item))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        let items: Vec<usize> = (0..64).collect();
+        let out = parallel_map(items.clone(), 8, |i| {
+            // stagger so completion order differs from input order
+            std::thread::sleep(std::time::Duration::from_micros(((i * 37) % 64) as u64));
+            i * 2
+        });
+        assert_eq!(out, items.iter().map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..33).collect();
+        let serial = parallel_map(items.clone(), 1, |i| i * i + 1);
+        let parallel = parallel_map(items, 4, |i| i * i + 1);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn init_runs_once_per_worker() {
+        let inits = AtomicUsize::new(0);
+        let out = parallel_map_init(
+            (0..16).collect::<Vec<usize>>(),
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0usize
+            },
+            |state, i| {
+                *state += 1;
+                i
+            },
+        );
+        assert_eq!(out.len(), 16);
+        let n = inits.load(Ordering::Relaxed);
+        assert!((1..=4).contains(&n), "{n} inits for 4 workers");
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        assert!(parallel_map(Vec::<u8>::new(), 4, |v| v).is_empty());
+        assert_eq!(parallel_map(vec![7], 16, |v| v + 1), vec![8]);
+        assert_eq!(parallel_map(vec![1, 2], 0, |v| v), vec![1, 2]);
+    }
+
+    #[test]
+    fn every_item_processed_exactly_once() {
+        let hits = AtomicUsize::new(0);
+        let out = parallel_map((0..100).collect::<Vec<usize>>(), 7, |i| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert_eq!(out, (0..100).collect::<Vec<_>>());
+    }
+}

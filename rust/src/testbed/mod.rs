@@ -113,11 +113,11 @@ pub fn evaluate(
 }
 
 /// Markdown report for an `evaluate` result.
-pub fn report(results: &mut [(String, CellMetrics)]) -> String {
+pub fn report(results: &[(String, CellMetrics)]) -> String {
     let mut out = String::from(
         "| profile | F1 | BWC (MB) | EIL mean ms | EIL p99 ms |\n|---|---|---|---|---|\n",
     );
-    for (name, m) in results.iter_mut() {
+    for (name, m) in results.iter() {
         let eil = m.eil_ms();
         let p99 = m.eil_p99_ms();
         out.push_str(&format!(
@@ -163,7 +163,7 @@ mod tests {
             ..Default::default()
         };
         let svc = ServiceTimes::synthetic();
-        let mut results = evaluate(
+        let results = evaluate(
             &base,
             &[
                 ChannelProfile::paper_wan(0.0),
@@ -179,7 +179,7 @@ mod tests {
             degraded > stable * 1.3,
             "1 Mbps squeeze had no effect: {degraded} vs {stable}"
         );
-        let text = report(&mut results);
+        let text = report(&results);
         assert!(text.contains("degraded-1mbps"), "{text}");
     }
 
@@ -192,7 +192,7 @@ mod tests {
             ..Default::default()
         };
         let svc = ServiceTimes::synthetic();
-        let mut results = evaluate(
+        let results = evaluate(
             &base,
             &[ChannelProfile::paper_wan(20.0), ChannelProfile::jittery(20.0, 80.0)],
             &svc,

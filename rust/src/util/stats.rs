@@ -56,17 +56,34 @@ impl Percentiles {
         self.samples.is_empty()
     }
 
-    /// q in [0, 1]; nearest-rank on the sorted samples.
-    pub fn quantile(&mut self, q: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
+    /// Sort the sample buffer in place (idempotent). Call once after
+    /// the last `add`; every later `quantile` is then an O(1) index.
+    pub fn sort_samples(&mut self) {
         if !self.sorted {
             self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
             self.sorted = true;
         }
+    }
+
+    /// q in [0, 1]; nearest-rank on the sorted samples. Readers that
+    /// called `sort_samples` first hit the indexed fast path; on an
+    /// unsorted buffer this selects on a scratch copy instead (correct
+    /// but O(n) per call), so shared `&` access never observes a
+    /// half-sorted buffer.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         let idx = ((self.samples.len() as f64 - 1.0) * q).round() as usize;
-        self.samples[idx.min(self.samples.len() - 1)]
+        let idx = idx.min(self.samples.len() - 1);
+        if self.sorted {
+            self.samples[idx]
+        } else {
+            let mut scratch = self.samples.clone();
+            let (_, v, _) =
+                scratch.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+            *v
+        }
     }
 
     pub fn mean(&self) -> f64 {
@@ -109,8 +126,21 @@ mod tests {
     }
 
     #[test]
-    fn empty_is_zero() {
+    fn sorted_fast_path_matches_unsorted_selection() {
         let mut p = Percentiles::new();
+        for v in [5.0, 1.0, 9.0, 3.0, 7.0, 2.0] {
+            p.add(v);
+        }
+        let qs = [0.0, 0.25, 0.5, 0.75, 0.99, 1.0];
+        let cold: Vec<f64> = qs.iter().map(|&q| p.quantile(q)).collect();
+        p.sort_samples();
+        let hot: Vec<f64> = qs.iter().map(|&q| p.quantile(q)).collect();
+        assert_eq!(cold, hot);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let p = Percentiles::new();
         assert_eq!(p.quantile(0.5), 0.0);
         assert_eq!(p.mean(), 0.0);
         assert!(p.is_empty());

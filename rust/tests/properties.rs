@@ -71,6 +71,105 @@ fn prop_plus_is_single_level() {
 }
 
 // ---------------------------------------------------------------------------
+// topic trie: differential against the reference matcher
+// ---------------------------------------------------------------------------
+
+use ace::pubsub::TopicTrie;
+
+/// The routing index and the reference scalar matcher must agree on
+/// membership AND order (insertion order == linear-scan delivery
+/// order) over random filter/name corpora.
+#[test]
+fn prop_trie_collect_matches_agrees_with_reference() {
+    for case in 0..CASES {
+        let mut s = Stream::new(9_000 + case);
+        let n_filters = s.next_range(1, 40) as usize;
+        let mut trie = TopicTrie::new();
+        let mut filters: Vec<String> = Vec::new();
+        for _ in 0..n_filters {
+            let f = rand_topic(&mut s, true);
+            if !topic::valid_filter(&f) {
+                continue; // rand wildcards can produce e.g. mid-`#`
+            }
+            trie.insert(&f, filters.len());
+            filters.push(f);
+        }
+        for _ in 0..16 {
+            let name = rand_topic(&mut s, false);
+            let expect: Vec<usize> = filters
+                .iter()
+                .enumerate()
+                .filter(|(_, f)| topic::matches(f, &name))
+                .map(|(i, _)| i)
+                .collect();
+            let got: Vec<usize> = trie.collect_matches(&name).into_iter().copied().collect();
+            assert_eq!(got, expect, "case {case}: name {name} filters {filters:?}");
+        }
+    }
+}
+
+/// Same agreement after random removals — the trie prunes without
+/// forgetting surviving subscriptions.
+#[test]
+fn prop_trie_remove_preserves_agreement() {
+    for case in 0..CASES {
+        let mut s = Stream::new(17_000 + case);
+        let mut trie = TopicTrie::new();
+        let mut filters: Vec<(String, bool)> = Vec::new();
+        for _ in 0..20 {
+            let f = rand_topic(&mut s, true);
+            if !topic::valid_filter(&f) {
+                continue;
+            }
+            trie.insert(&f, filters.len());
+            filters.push((f, true));
+        }
+        // remove a random half
+        for (i, (f, alive)) in filters.iter_mut().enumerate() {
+            if s.next_range(0, 2) == 0 {
+                assert_eq!(trie.remove(f, |v| *v == i), 1, "case {case}: remove {f}");
+                *alive = false;
+            }
+        }
+        assert_eq!(trie.len(), filters.iter().filter(|(_, a)| *a).count());
+        for _ in 0..16 {
+            let name = rand_topic(&mut s, false);
+            let expect: Vec<usize> = filters
+                .iter()
+                .enumerate()
+                .filter(|(_, (f, alive))| *alive && topic::matches(f, &name))
+                .map(|(i, _)| i)
+                .collect();
+            let got: Vec<usize> = trie.collect_matches(&name).into_iter().copied().collect();
+            assert_eq!(got, expect, "case {case}: name {name} filters {filters:?}");
+        }
+    }
+}
+
+/// Directed `+`/`#` edge cases the PRNG corpus might miss.
+#[test]
+fn trie_wildcard_edge_cases_match_reference() {
+    for (filter, names) in [
+        ("a/#", &["a", "a/b", "a/b/c", "b", "ab"][..]),
+        ("#", &["x", "x/y", "a/b/c/d"][..]),
+        ("+", &["a", "a/b"][..]),
+        ("+/+", &["a/b", "a", "a/b/c"][..]),
+        ("+/#", &["a", "a/b", "a/b/c"][..]),
+        ("a/+/c", &["a/b/c", "a/c", "a/b/b/c"][..]),
+    ] {
+        let mut trie = TopicTrie::new();
+        trie.insert(filter, ());
+        for name in names {
+            assert_eq!(
+                !trie.collect_matches(name).is_empty(),
+                topic::matches(filter, name),
+                "trie vs reference disagree: filter {filter}, name {name}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // simnet: link conservation + FIFO
 // ---------------------------------------------------------------------------
 

@@ -4,9 +4,11 @@
 //!
 //! No artifacts required (synthetic compute).
 
-use ace::app::fedtrain::{run_fedtrain, FedConfig};
-use ace::app::videoquery::{run_cell, CellConfig, Compute, Paradigm, ServiceTimes};
-use ace::metrics::CellMetrics;
+use ace::app::fedtrain::{run_fedtrain, run_fedtrain_seeds, FedConfig};
+use ace::app::videoquery::{
+    fig5_grid, run_cell, run_sweep, CellConfig, Compute, Paradigm, ServiceTimes,
+};
+use ace::metrics::{figure5_csv, figure5_tables, CellMetrics};
 
 fn fnv(h: &mut u64, bytes: &[u8]) {
     for &b in bytes {
@@ -88,6 +90,39 @@ fn cross_layer_fedtrain_runs_on_the_same_substrate() {
     let m2 = run_fedtrain(FedConfig::default()).unwrap();
     assert_eq!(m.final_accuracy.to_bits(), m2.final_accuracy.to_bits());
     assert_eq!(m.wan_bytes, m2.wan_bytes);
+}
+
+#[test]
+fn parallel_fig5_sweep_is_byte_identical_to_serial() {
+    // the determinism regression golden for the sweep engine: the
+    // parallel worker pool must produce the EXACT bytes the serial
+    // loop produces — same cells, same order, same metrics — because
+    // each cell is a self-contained DES world and result slots are
+    // written by input index
+    let grid = fig5_grid(&[0.5, 0.2], &[0.0, 50.0], 4.0, 7);
+    assert_eq!(grid.len(), 16, "2 intervals x 2 delays x 4 paradigms");
+    let mk = || (ServiceTimes::synthetic(), Compute::Synthetic { target_bias: 0.05 });
+    let serial = run_sweep(grid.clone(), 1, mk).unwrap();
+    let parallel = run_sweep(grid, 4, mk).unwrap();
+    assert_eq!(
+        figure5_csv(&serial),
+        figure5_csv(&parallel),
+        "parallel sweep CSV must be byte-identical to the serial path"
+    );
+    assert_eq!(figure5_tables(&serial), figure5_tables(&parallel));
+}
+
+#[test]
+fn parallel_fedtrain_seed_sweep_matches_serial() {
+    let base = FedConfig { rounds: 3, ..Default::default() };
+    let seeds = [1u64, 2, 3, 4];
+    let parallel = run_fedtrain_seeds(&base, &seeds, 4).unwrap();
+    let serial = run_fedtrain_seeds(&base, &seeds, 1).unwrap();
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.final_accuracy.to_bits(), b.final_accuracy.to_bits());
+        assert_eq!(a.wan_bytes, b.wan_bytes);
+        assert_eq!(a.rounds.len(), b.rounds.len());
+    }
 }
 
 #[test]
