@@ -1,0 +1,55 @@
+//! Zero-allocation event hot path (PR 3 ablation): typed by-value DES
+//! events vs the boxed closure lane, trie match collection with vs
+//! without a reused scratch buffer, and the end-to-end 10k-component
+//! fabric storm riding the allocation-free `Fabric::route`.
+//!
+//! The measurement bodies live in `ace::benchkit` so `ace bench
+//! --json` (the CI `BENCH_*.json` emitter) runs the same code.
+//!
+//! Run: `cargo bench --bench des_throughput`
+
+use ace::benchkit;
+
+fn main() {
+    println!("# DES event hot path: typed lane vs boxed closure lane\n");
+    println!("| pattern | events | boxed ev/s | typed ev/s | speedup |");
+    println!("|---|---|---|---|---|");
+    for &n in &[100_000u64, 1_000_000] {
+        let d = benchkit::des_throughput(n);
+        println!(
+            "| chained ticks | {n} | {:.0} | {:.0} | {:.2}x |",
+            d.boxed_chain_eps,
+            d.typed_chain_eps,
+            d.typed_chain_eps / d.boxed_chain_eps
+        );
+        println!(
+            "| random heap | {n} | {:.0} | {:.0} | {:.2}x |",
+            d.boxed_heap_eps,
+            d.typed_heap_eps,
+            d.typed_heap_eps / d.boxed_heap_eps
+        );
+    }
+
+    println!("\n# Route match collection: fresh Vec vs reused scratch\n");
+    println!("| subs | pubs | alloc pubs/s | scratch pubs/s | speedup |");
+    println!("|---|---|---|---|---|");
+    for n_subs in [1_000usize, 10_000] {
+        let r = benchkit::route_scratch(n_subs, 20_000);
+        println!(
+            "| {} | {} | {:.0} | {:.0} | {:.2}x |",
+            r.subs,
+            r.pubs,
+            r.alloc_pubs_per_s,
+            r.scratch_pubs_per_s,
+            r.scratch_pubs_per_s / r.alloc_pubs_per_s
+        );
+    }
+
+    let st = benchkit::fabric_storm(10_000, 2_000);
+    println!(
+        "\nfabric storm (zero-alloc publish path): {} comps, {} publishes -> \
+         {} deliveries, {} DES events, {:.0} pubs/s",
+        st.components, st.publishes, st.deliveries, st.des_events, st.pubs_per_s
+    );
+    println!("\nOK: typed/boxed and alloc/scratch paths agree at every scale");
+}

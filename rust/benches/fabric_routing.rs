@@ -6,44 +6,16 @@
 //! This is the scale the ROADMAP calls out: a linear scan per publish
 //! is fine at 40 components and wrong at 10k. The trie routes in
 //! O(topic depth); the linear reference below is exactly what
-//! `Fabric::route` and `Broker::publish` did before the index.
+//! `Fabric::route` and `Broker::publish` did before the index. The
+//! corpus generators and the storm body live in `ace::benchkit`
+//! (shared with `benches/des_throughput.rs` and `ace bench`).
 //!
 //! Run: `cargo bench --bench fabric_routing`
 
+use ace::benchkit::{self, make_filters, make_names};
 use ace::pubsub::topic::{self, TopicTrie};
-use ace::simnet::{EdgeCloudNet, NetConfig};
-use ace::svcgraph::{ClusterRef, Component, Ctx, GraphMsg, GraphRuntime, Site};
 use ace::util::prng::Stream;
-use std::cell::Cell;
-use std::rc::Rc;
 use std::time::Instant;
-
-/// Wildcard-heavy filter table: ~60% exact, ~20% `+`, ~20% `#`,
-/// spread over `groups` topic groups (tenants/apps).
-fn make_filters(n: usize, groups: usize, s: &mut Stream) -> Vec<String> {
-    (0..n)
-        .map(|i| {
-            let g = i % groups;
-            let t = s.next_range(0, 50);
-            match s.next_range(0, 10) {
-                0 | 1 => format!("app/g{g}/#"),
-                2 => format!("app/+/t{t}/data"),
-                3 => format!("app/g{g}/+/data"),
-                _ => format!("app/g{g}/t{t}/data"),
-            }
-        })
-        .collect()
-}
-
-fn make_names(n: usize, groups: usize, s: &mut Stream) -> Vec<String> {
-    (0..n)
-        .map(|_| {
-            let g = s.next_range(0, groups as i64);
-            let t = s.next_range(0, 50);
-            format!("app/g{g}/t{t}/data")
-        })
-        .collect()
-}
 
 fn bench_index(n_subs: usize, n_pubs: usize) {
     let groups = 64;
@@ -80,88 +52,6 @@ fn bench_index(n_subs: usize, n_pubs: usize) {
     );
 }
 
-/// Sink component: counts deliveries.
-struct Sink {
-    filters: Vec<String>,
-    hits: Rc<Cell<u64>>,
-}
-
-impl Component for Sink {
-    fn subscriptions(&self) -> Vec<String> {
-        self.filters.clone()
-    }
-    fn on_message(&mut self, _ctx: &mut Ctx, _msg: &GraphMsg) {
-        self.hits.set(self.hits.get() + 1);
-    }
-}
-
-/// Publisher component: one publish per timer tick until done.
-struct Blaster {
-    topics: Vec<String>,
-    i: usize,
-}
-
-impl Component for Blaster {
-    fn subscriptions(&self) -> Vec<String> {
-        Vec::new()
-    }
-    fn on_start(&mut self, ctx: &mut Ctx) {
-        ctx.set_timer(1, 0);
-    }
-    fn on_message(&mut self, _ctx: &mut Ctx, _msg: &GraphMsg) {}
-    fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
-        if self.i >= self.topics.len() {
-            return;
-        }
-        let t = self.topics[self.i].clone();
-        self.i += 1;
-        ctx.publish(&t, 256, Rc::new(()));
-        ctx.set_timer(1, 0);
-    }
-}
-
-/// End-to-end: 10k components subscribed on a 4-EC fabric, one
-/// publisher per EC blasting through the trie-indexed `route`.
-fn bench_fabric(n_comps: usize, pubs_per_ec: usize) {
-    let num_ecs = 4;
-    let groups = 64;
-    let mut s = Stream::new(11);
-    let mut rt = GraphRuntime::new(EdgeCloudNet::new(&NetConfig {
-        num_ecs,
-        ..Default::default()
-    }));
-    let hits = Rc::new(Cell::new(0u64));
-    let filters = make_filters(n_comps, groups, &mut s);
-    for (i, f) in filters.into_iter().enumerate() {
-        let ec = i % num_ecs;
-        rt.add(
-            Site { cluster: ClusterRef::Ec(ec), node: format!("node{}", i % 7).into() },
-            Box::new(Sink { filters: vec![f], hits: hits.clone() }),
-        );
-    }
-    let mut total_pubs = 0usize;
-    for ec in 0..num_ecs {
-        let topics = make_names(pubs_per_ec, groups, &mut s);
-        total_pubs += topics.len();
-        rt.add(
-            Site { cluster: ClusterRef::Ec(ec), node: "pub".into() },
-            Box::new(Blaster { topics, i: 0 }),
-        );
-    }
-    let t0 = Instant::now();
-    rt.run(u64::MAX);
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "fabric storm: {n_comps} comps, {total_pubs} publishes -> {} deliveries, \
-         {} DES events in {:.2}s ({:.0} pubs/s)",
-        hits.get(),
-        rt.executed(),
-        dt,
-        total_pubs as f64 / dt
-    );
-    assert!(hits.get() > 0, "storm must reach subscribers");
-}
-
 fn main() {
     println!("# Routing index: trie vs linear scan (wildcard-heavy tables)\n");
     println!("| subscriptions | publishes | linear pubs/s | trie pubs/s | speedup |");
@@ -170,6 +60,14 @@ fn main() {
         bench_index(n_subs, 20_000);
     }
     println!();
-    bench_fabric(10_000, 2_000);
+    // end-to-end: 10k components subscribed on a 4-EC fabric, one
+    // publisher per EC blasting through the trie-indexed, allocation-
+    // free `route`
+    let st = benchkit::fabric_storm(10_000, 2_000);
+    println!(
+        "fabric storm: {} comps, {} publishes -> {} deliveries, \
+         {} DES events ({:.0} pubs/s)",
+        st.components, st.publishes, st.deliveries, st.des_events, st.pubs_per_s
+    );
     println!("\nOK: trie agrees with the linear reference at every scale");
 }

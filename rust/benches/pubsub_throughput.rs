@@ -55,7 +55,7 @@ fn main() {
             println!("| {fanout} | {payload} | {rate:.0} | {us:.2} |");
         }
     }
-    // retained-message replay cost
+    // retained-message replay cost: wide filter (replays everything)
     let broker = Broker::new("retained");
     for i in 0..1000 {
         broker
@@ -69,8 +69,28 @@ fn main() {
         got += 1;
     }
     println!(
-        "\nretained replay: {got} messages in {:.2} ms on subscribe",
+        "\nretained replay (wide cfg/#): {got} messages in {:.2} ms on subscribe",
         t0.elapsed().as_secs_f64() * 1e3
+    );
+    assert_eq!(got, 1000);
+    // narrow filter: the name-keyed retained trie walks ONE path
+    // instead of scanning all 1000 retained topics per subscribe (the
+    // pre-PR-3 full-HashMap scan)
+    const NARROW: u64 = 10_000;
+    let t0 = Instant::now();
+    let mut got = 0u64;
+    for i in 0..NARROW {
+        let sub = broker.subscribe(&format!("cfg/{}", i % 1000)).unwrap();
+        while sub.rx.try_recv().is_ok() {
+            got += 1;
+        }
+        broker.unsubscribe(sub.id);
+    }
+    let per_sub_us = t0.elapsed().as_secs_f64() / NARROW as f64 * 1e6;
+    assert_eq!(got, NARROW, "each narrow subscribe replays exactly one message");
+    println!(
+        "retained replay (narrow, 1000 retained topics): {per_sub_us:.2} us/subscribe \
+         (trie path walk, not a full retained scan)"
     );
 
     // --- dead-subscriber pruning: one O(subs) retain pass ---

@@ -1,0 +1,370 @@
+//! Shared micro-benchmark measurements.
+//!
+//! criterion is unavailable offline (DESIGN.md §Substitutions), so the
+//! repo's benches are plain `main()` programs. The measurement bodies
+//! live here so `benches/*.rs` and the `ace bench --json` CLI (the
+//! machine-readable `BENCH_*.json` perf trajectory CI emits) run the
+//! SAME code — a bench number and a CI number are never two different
+//! experiments.
+//!
+//! Everything here measures the PR-3 hot paths: typed by-value DES
+//! events vs the boxed closure lane, trie match collection with vs
+//! without a reused scratch buffer, and the end-to-end 10k-component
+//! fabric publish storm (DESIGN.md §Event-engine).
+
+use crate::des::{Scheduler, SimEvent};
+use crate::pubsub::topic::TopicTrie;
+use crate::simnet::{EdgeCloudNet, NetConfig};
+use crate::svcgraph::{ClusterRef, Component, Ctx, GraphMsg, GraphRuntime, Site};
+use crate::util::prng::Stream;
+use crate::util::SimTime;
+use std::cell::Cell;
+use std::rc::Rc;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// DES engine: typed lane vs boxed closure lane
+// ---------------------------------------------------------------------------
+
+/// Minimal typed event for the engine benches — the same two patterns
+/// the closure lane runs, but by value (no `Box` per event).
+pub enum TickEvent {
+    /// Self-rescheduling tick (the sampling-tick pattern).
+    Tick { period: SimTime },
+    /// One-shot counter bump (the transfer-completion pattern).
+    Once,
+}
+
+impl SimEvent<u64> for TickEvent {
+    fn fire(self, sch: &mut Scheduler<u64, TickEvent>, w: &mut u64) {
+        match self {
+            TickEvent::Tick { period } => {
+                *w += 1;
+                sch.push_after(period, TickEvent::Tick { period });
+            }
+            TickEvent::Once => *w += 1,
+        }
+    }
+}
+
+/// Events/second for each (lane, pattern) combination.
+pub struct DesNumbers {
+    pub events: u64,
+    pub typed_chain_eps: f64,
+    pub boxed_chain_eps: f64,
+    pub typed_heap_eps: f64,
+    pub boxed_heap_eps: f64,
+}
+
+pub fn des_throughput(events: u64) -> DesNumbers {
+    // chained ticks, typed lane
+    let typed_chain_eps = {
+        let mut sched: Scheduler<u64, TickEvent> = Scheduler::new();
+        let mut world = 0u64;
+        sched.push_after(1, TickEvent::Tick { period: 10 });
+        let t0 = Instant::now();
+        sched.run(&mut world, events);
+        events as f64 / t0.elapsed().as_secs_f64()
+    };
+    // chained ticks, boxed closure lane. The closure CAPTURES its
+    // period (like the pre-PR-3 svcgraph closures captured a
+    // GraphMsg/target): boxing a capturing closure allocates per
+    // event, whereas a non-capturing closure or fn item is a ZST and
+    // `Box::new` would never touch the allocator — a baseline that
+    // would measure only dispatch, not the allocation under test.
+    let boxed_chain_eps = {
+        fn schedule_tick(sc: &mut Scheduler<u64>, period: SimTime) {
+            sc.after(period, move |sc, w: &mut u64| {
+                *w += 1;
+                schedule_tick(sc, period);
+            });
+        }
+        let mut sched: Scheduler<u64> = Scheduler::new();
+        let mut world = 0u64;
+        schedule_tick(&mut sched, 10);
+        let t0 = Instant::now();
+        sched.run(&mut world, events);
+        events as f64 / t0.elapsed().as_secs_f64()
+    };
+    // pre-seeded random heap, typed lane
+    let typed_heap_eps = {
+        let mut sched: Scheduler<u64, TickEvent> = Scheduler::new();
+        let mut world = 0u64;
+        let mut s = Stream::new(7);
+        for _ in 0..events {
+            let at = s.next_range(0, 1_000_000_000) as u64;
+            sched.push_at(at, TickEvent::Once);
+        }
+        let t0 = Instant::now();
+        sched.run(&mut world, events + 1);
+        events as f64 / t0.elapsed().as_secs_f64()
+    };
+    // pre-seeded random heap, boxed closure lane (capturing closure —
+    // see the chained-ticks note; `inc` makes each box a real
+    // per-event allocation)
+    let boxed_heap_eps = {
+        let mut sched: Scheduler<u64> = Scheduler::new();
+        let mut world = 0u64;
+        let mut s = Stream::new(7);
+        for _ in 0..events {
+            let at = s.next_range(0, 1_000_000_000) as u64;
+            // a captured u64 is part of the closure's layout, so each
+            // Box::new is a real 8-byte allocation
+            let inc = 1u64;
+            sched.at(at, move |_, w: &mut u64| *w += inc);
+        }
+        let t0 = Instant::now();
+        sched.run(&mut world, events + 1);
+        events as f64 / t0.elapsed().as_secs_f64()
+    };
+    DesNumbers {
+        events,
+        typed_chain_eps,
+        boxed_chain_eps,
+        typed_heap_eps,
+        boxed_heap_eps,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// topic corpora + trie match collection with vs without scratch reuse
+// ---------------------------------------------------------------------------
+
+/// Wildcard-heavy filter table: ~60% exact, ~20% `+`, ~20% `#`,
+/// spread over `groups` topic groups (tenants/apps).
+pub fn make_filters(n: usize, groups: usize, s: &mut Stream) -> Vec<String> {
+    (0..n)
+        .map(|i| {
+            let g = i % groups;
+            let t = s.next_range(0, 50);
+            match s.next_range(0, 10) {
+                0 | 1 => format!("app/g{g}/#"),
+                2 => format!("app/+/t{t}/data"),
+                3 => format!("app/g{g}/+/data"),
+                _ => format!("app/g{g}/t{t}/data"),
+            }
+        })
+        .collect()
+}
+
+pub fn make_names(n: usize, groups: usize, s: &mut Stream) -> Vec<String> {
+    (0..n)
+        .map(|_| {
+            let g = s.next_range(0, groups as i64);
+            let t = s.next_range(0, 50);
+            format!("app/g{g}/t{t}/data")
+        })
+        .collect()
+}
+
+/// Publishes/second through `collect_matches` (fresh `Vec` per call)
+/// vs `collect_matches_into` (one reused scratch buffer) — the
+/// `Fabric::route` allocation ablation.
+pub struct RouteNumbers {
+    pub subs: usize,
+    pub pubs: usize,
+    pub hits: usize,
+    pub alloc_pubs_per_s: f64,
+    pub scratch_pubs_per_s: f64,
+}
+
+pub fn route_scratch(n_subs: usize, n_pubs: usize) -> RouteNumbers {
+    let groups = 64;
+    let mut s = Stream::new(7);
+    let filters = make_filters(n_subs, groups, &mut s);
+    let names = make_names(n_pubs, groups, &mut s);
+    let mut trie = TopicTrie::new();
+    for (i, f) in filters.iter().enumerate() {
+        trie.insert(f, i);
+    }
+
+    // untimed warm-up over the full corpus so the first TIMED loop is
+    // not additionally paying to fault the trie into cache (both timed
+    // loops then see the same warmed state)
+    let mut warm_hits = 0usize;
+    for name in &names {
+        warm_hits += trie.collect_matches(name).len();
+    }
+
+    let t0 = Instant::now();
+    let mut alloc_hits = 0usize;
+    for name in &names {
+        alloc_hits += trie.collect_matches(name).len();
+    }
+    let alloc_s = t0.elapsed().as_secs_f64();
+
+    let mut scratch: Vec<(u64, usize)> = Vec::new();
+    let t0 = Instant::now();
+    let mut scratch_hits = 0usize;
+    for name in &names {
+        trie.collect_matches_into(name, &mut scratch);
+        scratch_hits += scratch.len();
+    }
+    let scratch_s = t0.elapsed().as_secs_f64();
+
+    assert_eq!(warm_hits, alloc_hits, "warm-up and timed passes must agree");
+    assert_eq!(alloc_hits, scratch_hits, "scratch path must agree with the allocating path");
+    RouteNumbers {
+        subs: n_subs,
+        pubs: n_pubs,
+        hits: alloc_hits,
+        alloc_pubs_per_s: n_pubs as f64 / alloc_s,
+        scratch_pubs_per_s: n_pubs as f64 / scratch_s,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end fabric publish storm
+// ---------------------------------------------------------------------------
+
+/// Sink component: counts deliveries.
+struct Sink {
+    filters: Vec<String>,
+    hits: Rc<Cell<u64>>,
+}
+
+impl Component for Sink {
+    fn subscriptions(&self) -> Vec<String> {
+        self.filters.clone()
+    }
+    fn on_message(&mut self, _ctx: &mut Ctx, _msg: &GraphMsg) {
+        self.hits.set(self.hits.get() + 1);
+    }
+}
+
+/// Publisher component: one publish per timer tick until done.
+struct Blaster {
+    topics: Vec<String>,
+    i: usize,
+}
+
+impl Component for Blaster {
+    fn subscriptions(&self) -> Vec<String> {
+        Vec::new()
+    }
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        ctx.set_timer(1, 0);
+    }
+    fn on_message(&mut self, _ctx: &mut Ctx, _msg: &GraphMsg) {}
+    fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
+        if self.i >= self.topics.len() {
+            return;
+        }
+        let t = self.topics[self.i].clone();
+        self.i += 1;
+        ctx.publish(&t, 256, Rc::new(()));
+        ctx.set_timer(1, 0);
+    }
+}
+
+/// Publisher that republishes ONE topic with ONE shared body forever
+/// (timer-paced) — nothing app-owned allocates per publish, so an
+/// allocation-counting harness can isolate the fabric's own cost.
+struct Repeater {
+    topic: String,
+    body: Rc<()>,
+}
+
+impl Component for Repeater {
+    fn subscriptions(&self) -> Vec<String> {
+        Vec::new()
+    }
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        ctx.set_timer(50, 0);
+    }
+    fn on_message(&mut self, _ctx: &mut Ctx, _msg: &GraphMsg) {}
+    fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
+        // &str from the stored String, Rc bump for the body: the
+        // publish itself is the only machinery under test
+        ctx.publish(&self.topic, 8, self.body.clone());
+        ctx.set_timer(50, 0);
+    }
+}
+
+/// A runtime exercising EVERY steady-state hot-path arm, forever
+/// (timer-paced, one publish per topic per 50 µs): an EC-local topic
+/// fanning out to `n_sinks` subscribers over 4 EC nodes (same-node
+/// hand-offs + LAN-charged hops) AND a `cloud/...` topic riding the
+/// `Event::Bridge` arm over the WAN uplink to a CC subscriber. Drive
+/// it with `run_until` windows: warm one window (interner, scratch,
+/// heap capacity), then assert the next window performs ZERO heap
+/// allocations — the `tests/zero_alloc.rs` enforcement of DESIGN.md
+/// §Event-engine's allocation budget, bridge-forwarding row included.
+/// Returns the runtime and the delivery counter.
+pub fn steady_state_runtime(n_sinks: usize) -> (GraphRuntime, Rc<Cell<u64>>) {
+    let mut rt = GraphRuntime::new(EdgeCloudNet::new(&NetConfig {
+        num_ecs: 1,
+        ..Default::default()
+    }));
+    let hits = Rc::new(Cell::new(0u64));
+    for i in 0..n_sinks {
+        rt.add(
+            Site { cluster: ClusterRef::Ec(0), node: format!("node{}", i % 4).into() },
+            Box::new(Sink { filters: vec!["app/steady/data".into()], hits: hits.clone() }),
+        );
+    }
+    rt.add(
+        Site { cluster: ClusterRef::Cc, node: "gpu-ws".into() },
+        Box::new(Sink { filters: vec!["cloud/steady/data".into()], hits: hits.clone() }),
+    );
+    rt.add(
+        Site { cluster: ClusterRef::Ec(0), node: "node0".into() },
+        Box::new(Repeater { topic: "app/steady/data".into(), body: Rc::new(()) }),
+    );
+    rt.add(
+        Site { cluster: ClusterRef::Ec(0), node: "node0".into() },
+        Box::new(Repeater { topic: "cloud/steady/data".into(), body: Rc::new(()) }),
+    );
+    (rt, hits)
+}
+
+pub struct StormNumbers {
+    pub components: usize,
+    pub publishes: usize,
+    pub deliveries: u64,
+    pub des_events: u64,
+    pub pubs_per_s: f64,
+}
+
+/// End-to-end: `n_comps` components subscribed on a 4-EC fabric, one
+/// publisher per EC blasting timer-paced publishes through the
+/// zero-allocation `Fabric::route` path (typed events, interned
+/// topics, scratch reuse).
+pub fn fabric_storm(n_comps: usize, pubs_per_ec: usize) -> StormNumbers {
+    let num_ecs = 4;
+    let groups = 64;
+    let mut s = Stream::new(11);
+    let mut rt = GraphRuntime::new(EdgeCloudNet::new(&NetConfig {
+        num_ecs,
+        ..Default::default()
+    }));
+    let hits = Rc::new(Cell::new(0u64));
+    let filters = make_filters(n_comps, groups, &mut s);
+    for (i, f) in filters.into_iter().enumerate() {
+        let ec = i % num_ecs;
+        rt.add(
+            Site { cluster: ClusterRef::Ec(ec), node: format!("node{}", i % 7).into() },
+            Box::new(Sink { filters: vec![f], hits: hits.clone() }),
+        );
+    }
+    let mut total_pubs = 0usize;
+    for ec in 0..num_ecs {
+        let topics = make_names(pubs_per_ec, groups, &mut s);
+        total_pubs += topics.len();
+        rt.add(
+            Site { cluster: ClusterRef::Ec(ec), node: "pub".into() },
+            Box::new(Blaster { topics, i: 0 }),
+        );
+    }
+    let t0 = Instant::now();
+    rt.run(u64::MAX);
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(hits.get() > 0, "storm must reach subscribers");
+    StormNumbers {
+        components: n_comps,
+        publishes: total_pubs,
+        deliveries: hits.get(),
+        des_events: rt.executed(),
+        pubs_per_s: total_pubs as f64 / dt,
+    }
+}

@@ -4,39 +4,70 @@
 //! `tc`-shaped WAN links is replaced by a DES so the Figure 5 sweeps are
 //! fast and deterministic. The engine is generic over a `World` type —
 //! the experiment owns its state, the scheduler owns virtual time and
-//! the event heap. Events are boxed `FnOnce(&mut Scheduler<W>, &mut W)`
-//! so handlers can schedule follow-up events.
+//! the event heap.
+//!
+//! Two event lanes (DESIGN.md §Event-engine):
+//!
+//! * **Typed lane** — `Scheduler<W, E>` where `E: SimEvent<W>` stores
+//!   events *by value* in the heap, so scheduling is allocation-free
+//!   (`push_at`/`push_after`). This is the hot path: `svcgraph` runs
+//!   millions of `Event::{Start, Msg, Timer, Bridge}` per cell through
+//!   it without a single per-event heap allocation.
+//! * **Boxed closure lane** — the default `E = BoxedEvent<W>` wraps a
+//!   `Box<dyn FnOnce>`, trading one allocation per event for ad-hoc
+//!   ergonomics (`at`/`after`). Setup-time and rare events (validation
+//!   testbed channel phases) ride this lane; a typed-event engine can
+//!   embed it as one enum variant (see `svcgraph::Event::Call`).
 //!
 //! Determinism: ties are broken by insertion sequence number, so a given
-//! seed always produces the same trajectory (asserted by property tests).
+//! seed always produces the same trajectory regardless of the lane
+//! (asserted by the typed-vs-boxed differential in `tests/properties.rs`).
 
 use crate::util::SimTime;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::marker::PhantomData;
 
-pub type EventFn<W> = Box<dyn FnOnce(&mut Scheduler<W>, &mut W)>;
-
-struct Entry<W> {
-    at: SimTime,
-    seq: u64,
-    ev: EventFn<W>,
+/// A value-typed simulation event: `fire` consumes the event and may
+/// schedule follow-ups through the scheduler it ran on.
+pub trait SimEvent<W>: Sized {
+    fn fire(self, sch: &mut Scheduler<W, Self>, world: &mut W);
 }
 
-impl<W> PartialEq for Entry<W> {
+/// The boxed-closure event payload (the default lane).
+pub type EventFn<W> = Box<dyn FnOnce(&mut Scheduler<W>, &mut W)>;
+
+/// Adapter making a boxed closure a [`SimEvent`]; the default event
+/// type, so `Scheduler<W>` keeps the original closure-only API.
+pub struct BoxedEvent<W>(pub EventFn<W>);
+
+impl<W> SimEvent<W> for BoxedEvent<W> {
+    fn fire(self, sch: &mut Scheduler<W>, world: &mut W) {
+        (self.0)(sch, world)
+    }
+}
+
+struct Entry<E> {
+    at: SimTime,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
         self.at == other.at && self.seq == other.seq
     }
 }
 
-impl<W> Eq for Entry<W> {}
+impl<E> Eq for Entry<E> {}
 
-impl<W> PartialOrd for Entry<W> {
+impl<E> PartialOrd for Entry<E> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl<W> Ord for Entry<W> {
+impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap; reverse for earliest-first.
         other
@@ -46,23 +77,32 @@ impl<W> Ord for Entry<W> {
     }
 }
 
-/// Virtual-time event scheduler.
-pub struct Scheduler<W> {
-    heap: BinaryHeap<Entry<W>>,
+/// Virtual-time event scheduler, generic over the event type `E`
+/// (typed lane). `Scheduler<W>` defaults `E` to [`BoxedEvent`], the
+/// closure lane.
+pub struct Scheduler<W, E: SimEvent<W> = BoxedEvent<W>> {
+    heap: BinaryHeap<Entry<E>>,
     now: SimTime,
     seq: u64,
     executed: u64,
+    _world: PhantomData<fn(&mut W)>,
 }
 
-impl<W> Default for Scheduler<W> {
+impl<W, E: SimEvent<W>> Default for Scheduler<W, E> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<W> Scheduler<W> {
+impl<W, E: SimEvent<W>> Scheduler<W, E> {
     pub fn new() -> Self {
-        Scheduler { heap: BinaryHeap::new(), now: 0, seq: 0, executed: 0 }
+        Scheduler {
+            heap: BinaryHeap::new(),
+            now: 0,
+            seq: 0,
+            executed: 0,
+            _world: PhantomData,
+        }
     }
 
     /// Current virtual time (microseconds).
@@ -80,16 +120,18 @@ impl<W> Scheduler<W> {
         self.heap.len()
     }
 
-    /// Schedule `ev` at absolute time `at` (clamped to now).
-    pub fn at(&mut self, at: SimTime, ev: impl FnOnce(&mut Scheduler<W>, &mut W) + 'static) {
+    /// Schedule a typed event at absolute time `at` (clamped to now).
+    /// The event is stored by value — no allocation beyond amortized
+    /// heap growth.
+    pub fn push_at(&mut self, at: SimTime, ev: E) {
         let at = at.max(self.now);
         self.seq += 1;
-        self.heap.push(Entry { at, seq: self.seq, ev: Box::new(ev) });
+        self.heap.push(Entry { at, seq: self.seq, ev });
     }
 
-    /// Schedule `ev` after a relative delay.
-    pub fn after(&mut self, delay: SimTime, ev: impl FnOnce(&mut Scheduler<W>, &mut W) + 'static) {
-        self.at(self.now + delay, ev);
+    /// Schedule a typed event after a relative delay.
+    pub fn push_after(&mut self, delay: SimTime, ev: E) {
+        self.push_at(self.now + delay, ev);
     }
 
     /// Run until the heap empties or virtual time would exceed `until`,
@@ -105,7 +147,7 @@ impl<W> Scheduler<W> {
             debug_assert!(entry.at >= self.now, "time went backwards");
             self.now = entry.at;
             self.executed += 1;
-            (entry.ev)(self, world);
+            entry.ev.fire(self, world);
         }
         self.now = self.now.max(until);
         self.executed - start
@@ -118,12 +160,28 @@ impl<W> Scheduler<W> {
             debug_assert!(entry.at >= self.now);
             self.now = entry.at;
             self.executed += 1;
-            (entry.ev)(self, world);
+            entry.ev.fire(self, world);
             if self.executed - start >= max_events {
                 break;
             }
         }
         self.executed - start
+    }
+}
+
+/// Closure-lane sugar (only on the default `E = BoxedEvent<W>`): each
+/// call boxes the closure — fine for setup, wrong for per-message hot
+/// paths (use a typed event engine there).
+impl<W> Scheduler<W> {
+    /// Schedule `ev` at absolute time `at` (clamped to now).
+    pub fn at(&mut self, at: SimTime, ev: impl FnOnce(&mut Scheduler<W>, &mut W) + 'static) {
+        self.push_at(at, BoxedEvent(Box::new(ev)));
+    }
+
+    /// Schedule `ev` after a relative delay.
+    pub fn after(&mut self, delay: SimTime, ev: impl FnOnce(&mut Scheduler<W>, &mut W) + 'static) {
+        let at = self.now + delay;
+        self.at(at, ev);
     }
 }
 
@@ -226,5 +284,87 @@ mod tests {
         let n = s.run(&mut w, 500);
         assert_eq!(n, 500);
         assert_eq!(w, 500);
+    }
+
+    // --- typed lane ---
+
+    /// Minimal typed event: records (now, id) or chains a follow-up.
+    enum Ev {
+        Emit(u32),
+        Chain { delay: SimTime, id: u32, hops: u8 },
+    }
+
+    impl SimEvent<Vec<(SimTime, u32)>> for Ev {
+        fn fire(self, sc: &mut Scheduler<Vec<(SimTime, u32)>, Ev>, w: &mut Vec<(SimTime, u32)>) {
+            match self {
+                Ev::Emit(id) => w.push((sc.now(), id)),
+                Ev::Chain { delay, id, hops } => {
+                    w.push((sc.now(), id));
+                    if hops > 0 {
+                        sc.push_after(delay, Ev::Chain { delay, id, hops: hops - 1 });
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn typed_events_execute_in_time_order() {
+        let mut s: Scheduler<Vec<(SimTime, u32)>, Ev> = Scheduler::new();
+        let mut w = Vec::new();
+        s.push_at(30, Ev::Emit(3));
+        s.push_at(10, Ev::Emit(1));
+        s.push_at(20, Ev::Emit(2));
+        s.run(&mut w, 1000);
+        assert_eq!(w, vec![(10, 1), (20, 2), (30, 3)]);
+    }
+
+    #[test]
+    fn typed_ties_break_by_push_order() {
+        let mut s: Scheduler<Vec<(SimTime, u32)>, Ev> = Scheduler::new();
+        let mut w = Vec::new();
+        for i in 0..10u32 {
+            s.push_at(5, Ev::Emit(i));
+        }
+        s.run(&mut w, 1000);
+        assert_eq!(w, (0..10).map(|i| (5, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn typed_events_can_chain_and_respect_horizon() {
+        let mut s: Scheduler<Vec<(SimTime, u32)>, Ev> = Scheduler::new();
+        let mut w = Vec::new();
+        s.push_at(10, Ev::Chain { delay: 20, id: 7, hops: 5 });
+        let n = s.run_until(&mut w, 55);
+        assert_eq!(n, 3); // at 10, 30, 50
+        assert_eq!(w, vec![(10, 7), (30, 7), (50, 7)]);
+        assert_eq!(s.now(), 55);
+        s.run(&mut w, 100);
+        assert_eq!(w.last(), Some(&(110, 7)));
+    }
+
+    #[test]
+    fn typed_and_boxed_lanes_share_trajectory_semantics() {
+        // the same workload scheduled on each lane yields the same
+        // (time, id) trajectory — the per-lane seq counters assign
+        // identical tie-breaks for identical push orders
+        let plan: Vec<(SimTime, u32)> = vec![(5, 0), (5, 1), (3, 2), (9, 3), (3, 4)];
+
+        let mut typed: Scheduler<Vec<(SimTime, u32)>, Ev> = Scheduler::new();
+        let mut tw = Vec::new();
+        for &(at, id) in &plan {
+            typed.push_at(at, Ev::Emit(id));
+        }
+        typed.run(&mut tw, 1000);
+
+        let mut boxed: Scheduler<Vec<(SimTime, u32)>> = Scheduler::new();
+        let mut bw = Vec::new();
+        for &(at, id) in &plan {
+            boxed.at(at, move |sc, w: &mut Vec<(SimTime, u32)>| w.push((sc.now(), id)));
+        }
+        boxed.run(&mut bw, 1000);
+
+        assert_eq!(tw, bw);
+        assert_eq!(typed.executed(), boxed.executed());
     }
 }

@@ -7,6 +7,7 @@
 //! experiment index.
 
 pub mod app;
+pub mod benchkit;
 pub mod deploy;
 pub mod des;
 pub mod inapp;

@@ -21,6 +21,13 @@
 //!                                    the generic svcgraph runtime
 //!                                    (topology -> orchestrator ->
 //!                                    components -> bridged pub/sub)
+//!   ace bench [--json] [--events N] [--subs N] [--pubs N] [--comps N]
+//!             [--storm-pubs N]     — hot-path micro-benchmarks
+//!                                    (typed vs boxed DES events,
+//!                                    scratch-reuse routing, fabric
+//!                                    storm); --json emits the
+//!                                    machine-readable BENCH_*.json
+//!                                    perf-trajectory record CI logs
 //!
 //! clap is unavailable offline; argument parsing is a ~60-line hand
 //! rolled matcher (DESIGN.md §Substitutions).
@@ -308,6 +315,91 @@ fn cmd_svcrun(args: &Args) -> Result<()> {
     }
 }
 
+fn cmd_bench(args: &Args) -> Result<()> {
+    use ace::benchkit;
+    use ace::json::Value;
+
+    let events = args.usize_or("events", 1_000_000) as u64;
+    let subs = args.usize_or("subs", 10_000);
+    let pubs = args.usize_or("pubs", 20_000);
+    let comps = args.usize_or("comps", 10_000);
+    let storm_pubs = args.usize_or("storm-pubs", 500);
+
+    let des = benchkit::des_throughput(events);
+    let route = benchkit::route_scratch(subs, pubs);
+    let storm = benchkit::fabric_storm(comps, storm_pubs);
+
+    // one measurement pass serves both renderings: the table goes to
+    // stderr so `--json` output stays pipeable AND the log stays
+    // human-readable without a second (noisier) bench run
+    eprintln!("| measurement | boxed/alloc | typed/scratch | speedup |");
+    eprintln!("|---|---|---|---|");
+    eprintln!(
+        "| DES chained ticks ({events} ev) | {:.0}/s | {:.0}/s | {:.2}x |",
+        des.boxed_chain_eps,
+        des.typed_chain_eps,
+        des.typed_chain_eps / des.boxed_chain_eps
+    );
+    eprintln!(
+        "| DES random heap ({events} ev) | {:.0}/s | {:.0}/s | {:.2}x |",
+        des.boxed_heap_eps,
+        des.typed_heap_eps,
+        des.typed_heap_eps / des.boxed_heap_eps
+    );
+    eprintln!(
+        "| route matches ({subs} subs, {pubs} pubs) | {:.0}/s | {:.0}/s | {:.2}x |",
+        route.alloc_pubs_per_s,
+        route.scratch_pubs_per_s,
+        route.scratch_pubs_per_s / route.alloc_pubs_per_s
+    );
+    eprintln!(
+        "fabric storm: {} comps, {} publishes -> {} deliveries, {} DES events, {:.0} pubs/s",
+        storm.components, storm.publishes, storm.deliveries, storm.des_events, storm.pubs_per_s
+    );
+
+    if args.has("json") {
+        // the BENCH_*.json perf-trajectory record (one object per PR,
+        // emitted by CI so numbers always come from a real toolchain)
+        let num = |f: f64| Value::Num((f as u64) as f64); // whole units
+        let obj = Value::obj;
+        let v = obj(vec![
+            ("bench_schema", Value::Num(1.0)),
+            (
+                "des_events_per_sec",
+                obj(vec![
+                    ("events", Value::Num(des.events as f64)),
+                    ("typed_chain", num(des.typed_chain_eps)),
+                    ("boxed_chain", num(des.boxed_chain_eps)),
+                    ("typed_heap", num(des.typed_heap_eps)),
+                    ("boxed_heap", num(des.boxed_heap_eps)),
+                ]),
+            ),
+            (
+                "route_match_collection",
+                obj(vec![
+                    ("subs", Value::Num(route.subs as f64)),
+                    ("pubs", Value::Num(route.pubs as f64)),
+                    ("hits", Value::Num(route.hits as f64)),
+                    ("alloc_pubs_per_sec", num(route.alloc_pubs_per_s)),
+                    ("scratch_pubs_per_sec", num(route.scratch_pubs_per_s)),
+                ]),
+            ),
+            (
+                "fabric_storm",
+                obj(vec![
+                    ("components", Value::Num(storm.components as f64)),
+                    ("publishes", Value::Num(storm.publishes as f64)),
+                    ("deliveries", Value::Num(storm.deliveries as f64)),
+                    ("des_events", Value::Num(storm.des_events as f64)),
+                    ("pubs_per_sec", num(storm.pubs_per_s)),
+                ]),
+            ),
+        ]);
+        println!("{}", ace::json::to_string(&v));
+    }
+    Ok(())
+}
+
 fn cmd_fig5(args: &Args) -> Result<()> {
     let intervals: Vec<f64> = if args.has("fast") {
         vec![0.5, 0.2, 0.1]
@@ -383,6 +475,9 @@ COMMANDS:
                                               [--ecs N] [--cams N] [--rounds N]
                                               [--seed S] [--seeds N] [--workers N]
                                               [--real]
+  bench        hot-path micro-benchmarks      [--json] [--events N] [--subs N]
+               (BENCH_*.json perf trajectory) [--pubs N] [--comps N]
+                                              [--storm-pubs N]
   help         this message"
     );
 }
@@ -397,6 +492,7 @@ fn main() -> Result<()> {
         "run" => cmd_run(&args),
         "fig5" => cmd_fig5(&args),
         "svcrun" => cmd_svcrun(&args),
+        "bench" => cmd_bench(&args),
         _ => {
             help();
             Ok(())

@@ -128,7 +128,7 @@ mod tests {
         ec.publish("cloud/results/q1", b"crop-meta".to_vec()).unwrap();
         let m = recv(&cc_sub);
         assert_eq!(m.topic, "cloud/results/q1");
-        assert_eq!(m.origin, "ec-1");
+        assert_eq!(&*m.origin, "ec-1");
     }
 
     #[test]

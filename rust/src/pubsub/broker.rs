@@ -11,21 +11,39 @@
 //! so a publish walks O(topic depth) trie nodes instead of scanning
 //! every subscription (the same index `svcgraph::Fabric` uses on the
 //! DES data plane). Delivery order stays insertion order.
+//!
+//! Hot-path economics (DESIGN.md §Event-engine): the broker name lives
+//! in an `Arc<str>` OUTSIDE the lock, so stamping `Message::origin` is
+//! a refcount bump, not a `String` clone per publish; counters are
+//! atomics, so `name()`/`stats()` never contend with the publish path;
+//! retained messages live in a name-keyed [`TopicTrie`], so subscribe
+//! replays only the trie paths its filter selects instead of scanning
+//! every retained topic.
 
 use super::topic::{self, TopicTrie};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// The shared empty origin (allocated once per process), so
+/// `Message::new` itself allocates nothing for the origin slot.
+fn no_origin() -> Arc<str> {
+    static EMPTY: OnceLock<Arc<str>> = OnceLock::new();
+    EMPTY.get_or_init(|| Arc::from("")).clone()
+}
 
 /// A published message. The payload sits behind an `Arc` so fanning a
 /// message out to N subscribers shares one buffer instead of cloning N
-/// copies (the broker's hot path).
+/// copies (the broker's hot path); `origin` shares the broker's name
+/// allocation the same way.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Message {
     pub topic: String,
     pub payload: Arc<[u8]>,
-    /// Broker the message FIRST entered (loop prevention in bridges).
-    pub origin: String,
+    /// Broker the message FIRST entered (loop prevention in bridges);
+    /// empty until the first broker stamps it.
+    pub origin: Arc<str>,
 }
 
 impl Message {
@@ -33,7 +51,7 @@ impl Message {
         Message {
             topic: topic.into(),
             payload: Arc::from(payload.into()),
-            origin: String::new(),
+            origin: no_origin(),
         }
     }
 
@@ -48,25 +66,38 @@ struct Subscription {
 }
 
 struct Inner {
-    name: String,
     /// Subscription index: one publish routes in O(topic depth).
     subs: TopicTrie<Subscription>,
     /// id -> filter, so unsubscribe/pruning can address the trie path.
     filters: HashMap<u64, String>,
-    retained: HashMap<String, Message>,
+    /// Retained messages keyed by topic NAME; subscribe walks the trie
+    /// directed by its filter (`for_each_name_match`) instead of
+    /// scanning the whole map.
+    retained: TopicTrie<Message>,
     next_id: u64,
+}
+
+/// Publish/delivery counters — atomics outside the lock, so stats
+/// reads never contend with the publish path.
+#[derive(Default)]
+struct Counters {
     /// (messages, payload bytes) accepted by publish.
-    pub_count: u64,
-    pub_bytes: u64,
+    pub_count: AtomicU64,
+    pub_bytes: AtomicU64,
     /// (messages, payload bytes) delivered to subscribers.
-    deliver_count: u64,
-    deliver_bytes: u64,
+    deliver_count: AtomicU64,
+    deliver_bytes: AtomicU64,
+    /// Live subscriptions (mirrors `subs.len()`, maintained under the
+    /// lock, readable without it).
+    subscriptions: AtomicUsize,
 }
 
 /// Handle to a broker (cheaply cloneable).
 #[derive(Clone)]
 pub struct Broker {
     inner: Arc<Mutex<Inner>>,
+    name: Arc<str>,
+    counters: Arc<Counters>,
 }
 
 /// A subscription handle; dropping it does NOT unsubscribe (call
@@ -90,25 +121,24 @@ impl Broker {
     pub fn new(name: impl Into<String>) -> Self {
         Broker {
             inner: Arc::new(Mutex::new(Inner {
-                name: name.into(),
                 subs: TopicTrie::new(),
                 filters: HashMap::new(),
-                retained: HashMap::new(),
+                retained: TopicTrie::new(),
                 next_id: 1,
-                pub_count: 0,
-                pub_bytes: 0,
-                deliver_count: 0,
-                deliver_bytes: 0,
             })),
+            name: Arc::from(name.into()),
+            counters: Arc::new(Counters::default()),
         }
     }
 
-    pub fn name(&self) -> String {
-        self.inner.lock().unwrap().name.clone()
+    /// Broker name — lock-free (shared `Arc<str>`, no contention with
+    /// the publish path).
+    pub fn name(&self) -> Arc<str> {
+        self.name.clone()
     }
 
     /// Subscribe to `filter`; retained messages matching the filter are
-    /// delivered immediately.
+    /// delivered immediately (in retain order).
     pub fn subscribe(&self, filter: &str) -> Result<SubHandle, String> {
         if !topic::valid_filter(filter) {
             return Err(format!("invalid filter '{filter}'"));
@@ -117,22 +147,27 @@ impl Broker {
         let mut inner = self.inner.lock().unwrap();
         let id = inner.next_id;
         inner.next_id += 1;
-        // replay retained
-        let mut replayed = Vec::new();
-        for (t, m) in inner.retained.iter() {
-            if topic::matches(filter, t) {
-                replayed.push(m.clone());
-            }
-        }
-        for m in replayed {
+        // replay retained: a filter-directed trie walk visits only the
+        // matching paths, not every retained topic; sorting by the
+        // insertion seq makes replay order deterministic (retain order)
+        // where the old full map scan was HashMap-ordered
+        let mut replayed: Vec<(u64, Message)> = Vec::new();
+        inner
+            .retained
+            .for_each_name_match(filter, |seq, m| replayed.push((seq, m.clone())));
+        replayed.sort_unstable_by_key(|&(seq, _)| seq);
+        for (_, m) in replayed {
             let bytes = m.payload.len() as u64;
             if tx.send(m).is_ok() {
-                inner.deliver_count += 1;
-                inner.deliver_bytes += bytes;
+                self.counters.deliver_count.fetch_add(1, Ordering::Relaxed);
+                self.counters.deliver_bytes.fetch_add(bytes, Ordering::Relaxed);
             }
         }
         inner.subs.insert(filter, Subscription { tx, id });
         inner.filters.insert(id, filter.to_string());
+        self.counters
+            .subscriptions
+            .store(inner.subs.len(), Ordering::Relaxed);
         Ok(SubHandle { id, rx })
     }
 
@@ -141,6 +176,9 @@ impl Broker {
         if let Some(filter) = inner.filters.remove(&id) {
             inner.subs.remove(&filter, |s| s.id == id);
         }
+        self.counters
+            .subscriptions
+            .store(inner.subs.len(), Ordering::Relaxed);
     }
 
     /// Publish; `retain` keeps the last message per topic for future
@@ -149,15 +187,21 @@ impl Broker {
         if !topic::valid_name(&msg.topic) {
             return Err(format!("invalid topic '{}'", msg.topic));
         }
+        if msg.origin.is_empty() {
+            // refcount bump on the broker's shared name, no String clone
+            msg.origin = self.name.clone();
+        }
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
-        if msg.origin.is_empty() {
-            msg.origin = inner.name.clone();
-        }
-        inner.pub_count += 1;
-        inner.pub_bytes += msg.payload.len() as u64;
+        self.counters.pub_count.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .pub_bytes
+            .fetch_add(msg.payload.len() as u64, Ordering::Relaxed);
         if retain {
-            inner.retained.insert(msg.topic.clone(), msg.clone());
+            // last-writer-wins per topic: drop any previous retained
+            // message for this name, then store under a fresh seq
+            inner.retained.remove(&msg.topic, |_| true);
+            inner.retained.insert(&msg.topic, msg.clone());
         }
         let mut reached = 0;
         let mut dead: Vec<u64> = Vec::new();
@@ -173,14 +217,23 @@ impl Broker {
                 dead.push(s.id);
             }
         }
-        inner.deliver_count += reached as u64;
-        inner.deliver_bytes += delivered_bytes;
+        self.counters
+            .deliver_count
+            .fetch_add(reached as u64, Ordering::Relaxed);
+        self.counters
+            .deliver_bytes
+            .fetch_add(delivered_bytes, Ordering::Relaxed);
         // garbage-collect closed receivers: each is one targeted trie
         // path removal, not a scan over every subscription
-        for id in dead {
-            if let Some(filter) = inner.filters.remove(&id) {
-                inner.subs.remove(&filter, |s| s.id == id);
+        if !dead.is_empty() {
+            for id in dead {
+                if let Some(filter) = inner.filters.remove(&id) {
+                    inner.subs.remove(&filter, |s| s.id == id);
+                }
             }
+            self.counters
+                .subscriptions
+                .store(inner.subs.len(), Ordering::Relaxed);
         }
         Ok(reached)
     }
@@ -189,18 +242,23 @@ impl Broker {
         self.publish_opts(Message::new(topic, payload), false)
     }
 
-    pub fn publish_retained(&self, topic: &str, payload: impl Into<Vec<u8>>) -> Result<usize, String> {
+    pub fn publish_retained(
+        &self,
+        topic: &str,
+        payload: impl Into<Vec<u8>>,
+    ) -> Result<usize, String> {
         self.publish_opts(Message::new(topic, payload), true)
     }
 
+    /// Lock-free counter snapshot (atomics; never contends with the
+    /// publish path).
     pub fn stats(&self) -> BrokerStats {
-        let inner = self.inner.lock().unwrap();
         BrokerStats {
-            pub_count: inner.pub_count,
-            pub_bytes: inner.pub_bytes,
-            deliver_count: inner.deliver_count,
-            deliver_bytes: inner.deliver_bytes,
-            subscriptions: inner.subs.len(),
+            pub_count: self.counters.pub_count.load(Ordering::Relaxed),
+            pub_bytes: self.counters.pub_bytes.load(Ordering::Relaxed),
+            deliver_count: self.counters.deliver_count.load(Ordering::Relaxed),
+            deliver_bytes: self.counters.deliver_bytes.load(Ordering::Relaxed),
+            subscriptions: self.counters.subscriptions.load(Ordering::Relaxed),
         }
     }
 }
@@ -219,7 +277,7 @@ mod tests {
         let m = sub.rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(m.topic, "query/42/result");
         assert_eq!(&m.payload[..], b"hit");
-        assert_eq!(m.origin, "cc");
+        assert_eq!(&*m.origin, "cc");
     }
 
     #[test]
@@ -237,6 +295,61 @@ mod tests {
         let sub = b.subscribe("cfg/#").unwrap();
         let m = sub.rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(m.utf8(), "0.8");
+    }
+
+    #[test]
+    fn retained_keeps_only_the_last_message_per_topic() {
+        let b = Broker::new("b");
+        b.publish_retained("cfg/threshold", b"0.5".to_vec()).unwrap();
+        b.publish_retained("cfg/threshold", b"0.8".to_vec()).unwrap();
+        let sub = b.subscribe("cfg/threshold").unwrap();
+        let m = sub.rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(m.utf8(), "0.8", "last retain wins");
+        assert!(sub.rx.try_recv().is_err(), "old retained must be replaced");
+    }
+
+    #[test]
+    fn retained_replay_is_filter_directed_and_in_retain_order() {
+        let b = Broker::new("b");
+        for i in 0..20 {
+            b.publish_retained(&format!("cfg/k{i}"), format!("{i}").into_bytes())
+                .unwrap();
+        }
+        b.publish_retained("other/x", b"nope".to_vec()).unwrap();
+        // narrow filter: exactly one retained topic replays
+        let sub = b.subscribe("cfg/k7").unwrap();
+        assert_eq!(sub.rx.recv_timeout(Duration::from_secs(1)).unwrap().utf8(), "7");
+        assert!(sub.rx.try_recv().is_err());
+        // wildcard filter: all cfg topics replay, in retain order
+        let sub = b.subscribe("cfg/+").unwrap();
+        let got: Vec<String> = (0..20)
+            .map(|_| sub.rx.recv_timeout(Duration::from_secs(1)).unwrap().utf8())
+            .collect();
+        assert_eq!(got, (0..20).map(|i| i.to_string()).collect::<Vec<_>>());
+        assert!(sub.rx.try_recv().is_err(), "other/x must not replay");
+    }
+
+    #[test]
+    fn name_and_stats_are_lock_free_reads() {
+        // hold the inner lock hostage on another thread via a long
+        // publish storm while name()/stats() keep returning — they
+        // read the Arc'd name and atomic counters, not the Mutex
+        let b = Broker::new("contended");
+        assert_eq!(&*b.name(), "contended");
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            for _ in 0..10_000 {
+                b2.publish("t/x", b"x".to_vec()).unwrap();
+            }
+        });
+        for _ in 0..100 {
+            let _ = b.stats();
+            let _ = b.name();
+        }
+        t.join().unwrap();
+        let st = b.stats();
+        assert_eq!(st.pub_count, 10_000);
+        assert_eq!(st.pub_bytes, 10_000);
     }
 
     #[test]

@@ -202,41 +202,121 @@ impl<T> TopicTrie<T> {
         }
     }
 
-    /// Every stored value whose filter matches the concrete `name`,
-    /// in insertion order. One walk visits at most 2^w paths where w
-    /// is the number of `+`-branches taken — O(topic depth) for the
+    /// Visit every stored value whose filter matches the concrete
+    /// `name`, in *trie-walk* order (NOT insertion order) — the
+    /// zero-allocation primitive under `collect_matches*`. `f` receives
+    /// each entry's insertion sequence so callers needing delivery
+    /// order can sort. One walk visits at most 2^w paths where w is
+    /// the number of `+`-branches taken — O(topic depth) for the
     /// exact-and-`#` filters that dominate real tables.
+    pub fn for_each_match<'a>(&'a self, name: &str, mut f: impl FnMut(u64, &'a T)) {
+        Self::walk(&self.root, name.split('/'), &mut f);
+    }
+
+    /// Every stored value whose filter matches the concrete `name`,
+    /// in insertion order. Allocates the result vector; steady-state
+    /// routers should use [`collect_matches_into`] with a reused
+    /// scratch buffer instead.
+    ///
+    /// [`collect_matches_into`]: TopicTrie::collect_matches_into
     pub fn collect_matches(&self, name: &str) -> Vec<&T> {
-        let levels: Vec<&str> = name.split('/').collect();
         let mut hits: Vec<(u64, &T)> = Vec::new();
-        Self::walk(&self.root, &levels, 0, &mut hits);
+        self.for_each_match(name, |seq, v| hits.push((seq, v)));
         // insertion order == linear-scan delivery order
         hits.sort_unstable_by_key(|&(seq, _)| seq);
         hits.into_iter().map(|(_, v)| v).collect()
     }
 
+    /// Zero-allocation match collection for `Copy` values: clears
+    /// `out` and refills it with `(insertion seq, value)` pairs sorted
+    /// by seq (delivery order), reusing the buffer's capacity. The
+    /// router hot path (`svcgraph::Fabric` keeps the scratch vectors
+    /// across publishes).
+    pub fn collect_matches_into(&self, name: &str, out: &mut Vec<(u64, T)>)
+    where
+        T: Copy,
+    {
+        out.clear();
+        self.for_each_match(name, |seq, v| out.push((seq, *v)));
+        out.sort_unstable_by_key(|&(seq, _)| seq);
+    }
+
     fn walk<'a>(
         node: &'a TrieNode<T>,
-        levels: &[&str],
-        i: usize,
-        hits: &mut Vec<(u64, &'a T)>,
+        mut rest: std::str::Split<'_, char>,
+        f: &mut impl FnMut(u64, &'a T),
     ) {
         // `#` at this depth matches the remaining levels — including
         // zero of them (`a/#` matches `a`)
         for e in &node.hash {
-            hits.push((e.seq, &e.value));
+            f(e.seq, &e.value);
         }
-        if i == levels.len() {
-            for e in &node.here {
-                hits.push((e.seq, &e.value));
+        match rest.next() {
+            None => {
+                for e in &node.here {
+                    f(e.seq, &e.value);
+                }
             }
-            return;
+            Some(level) => {
+                if let Some(child) = node.children.get(level) {
+                    Self::walk(child, rest.clone(), f);
+                }
+                if let Some(plus) = &node.plus {
+                    Self::walk(plus, rest, f);
+                }
+            }
         }
-        if let Some(child) = node.children.get(levels[i]) {
-            Self::walk(child, levels, i + 1, hits);
+    }
+
+    /// The INVERSE lookup direction: treat stored keys as concrete
+    /// topic *names* and walk the trie directed by the wildcard
+    /// `filter`, visiting every stored value whose name the filter
+    /// matches (visit order is unspecified; `f` receives the insertion
+    /// seq for deterministic ordering). This is retained-message
+    /// replay: the broker keys retained messages by name and a new
+    /// subscription replays only the trie paths its filter selects,
+    /// instead of scanning every retained topic.
+    ///
+    /// Assumes stored keys are wildcard-free (the broker validates
+    /// names before retaining); entries stored under `+`/`#` filter
+    /// keys are not visited.
+    pub fn for_each_name_match<'a>(&'a self, filter: &str, mut f: impl FnMut(u64, &'a T)) {
+        Self::name_walk(&self.root, filter.split('/'), &mut f);
+    }
+
+    fn name_walk<'a>(
+        node: &'a TrieNode<T>,
+        mut rest: std::str::Split<'_, char>,
+        f: &mut impl FnMut(u64, &'a T),
+    ) {
+        match rest.next() {
+            None => {
+                for e in &node.here {
+                    f(e.seq, &e.value);
+                }
+            }
+            // `#` swallows the rest INCLUDING zero levels: this node's
+            // own entry and its entire literal subtree
+            Some("#") => Self::collect_name_subtree(node, f),
+            Some("+") => {
+                for child in node.children.values() {
+                    Self::name_walk(child, rest.clone(), f);
+                }
+            }
+            Some(level) => {
+                if let Some(child) = node.children.get(level) {
+                    Self::name_walk(child, rest, f);
+                }
+            }
         }
-        if let Some(plus) = &node.plus {
-            Self::walk(plus, levels, i + 1, hits);
+    }
+
+    fn collect_name_subtree<'a>(node: &'a TrieNode<T>, f: &mut impl FnMut(u64, &'a T)) {
+        for e in &node.here {
+            f(e.seq, &e.value);
+        }
+        for child in node.children.values() {
+            Self::collect_name_subtree(child, f);
         }
     }
 }
@@ -353,6 +433,55 @@ mod tests {
         assert!(t.is_empty());
         // branches were pruned: root is empty again
         assert!(t.root.is_unused());
+    }
+
+    #[test]
+    fn collect_matches_into_reuses_scratch_and_agrees() {
+        let mut t = TopicTrie::new();
+        t.insert("z/#", 10usize);
+        t.insert("a/b", 11);
+        t.insert("#", 12);
+        t.insert("a/+", 13);
+        t.insert("a/b", 14);
+        let mut scratch: Vec<(u64, usize)> = Vec::with_capacity(8);
+        t.collect_matches_into("a/b", &mut scratch);
+        let got: Vec<usize> = scratch.iter().map(|&(_, v)| v).collect();
+        assert_eq!(got, vec![11, 12, 13, 14]);
+        // reuse: cleared and refilled, old contents never leak
+        t.collect_matches_into("z/q", &mut scratch);
+        let got: Vec<usize> = scratch.iter().map(|&(_, v)| v).collect();
+        assert_eq!(got, vec![10, 12]);
+        // agreement with the allocating API on every query
+        for name in ["a/b", "a/x", "z", "q/r/s"] {
+            t.collect_matches_into(name, &mut scratch);
+            let fast: Vec<usize> = scratch.iter().map(|&(_, v)| v).collect();
+            let slow: Vec<usize> = t.collect_matches(name).into_iter().copied().collect();
+            assert_eq!(fast, slow, "{name}");
+        }
+    }
+
+    #[test]
+    fn name_match_walks_only_filter_directed_paths() {
+        // retained-replay direction: keys are concrete names, the
+        // query is a filter
+        let mut t = TopicTrie::new();
+        t.insert("cfg/a", 0usize);
+        t.insert("cfg/b", 1);
+        t.insert("cfg/b/deep", 2);
+        t.insert("other/x", 3);
+        let collect = |filter: &str| {
+            let mut got: Vec<(u64, usize)> = Vec::new();
+            t.for_each_name_match(filter, |seq, v| got.push((seq, *v)));
+            got.sort_unstable();
+            got.into_iter().map(|(_, v)| v).collect::<Vec<_>>()
+        };
+        assert_eq!(collect("cfg/a"), vec![0]);
+        assert_eq!(collect("cfg/+"), vec![0, 1]);
+        assert_eq!(collect("cfg/#"), vec![0, 1, 2]);
+        assert_eq!(collect("#"), vec![0, 1, 2, 3]);
+        assert_eq!(collect("cfg/b/#"), vec![1, 2], "b/# matches parent b too");
+        assert_eq!(collect("+/x"), vec![3]);
+        assert_eq!(collect("nope/#"), Vec::<usize>::new());
     }
 
     #[test]

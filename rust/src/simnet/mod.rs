@@ -31,6 +31,10 @@ pub struct Link {
     pub jitter_seed: u64,
     /// Time the serialization queue frees up.
     busy_until: SimTime,
+    /// Latest delivery time handed out — the FIFO guard: per-message
+    /// jitter (or a mid-run delay re-shape) must never let message n+1
+    /// arrive before message n on the same link.
+    last_delivery: SimTime,
     /// Total payload bytes accepted (the BWC counter).
     pub bytes_sent: u64,
     /// Messages accepted.
@@ -50,6 +54,7 @@ impl Link {
             jitter: 0,
             jitter_seed,
             busy_until: 0,
+            last_delivery: 0,
             bytes_sent: 0,
             msgs_sent: 0,
         }
@@ -70,7 +75,11 @@ impl Link {
         ((bytes as u128 * 8 * MICROS_PER_SEC as u128) / self.bw_bps as u128).max(1) as SimTime
     }
 
-    /// Enqueue `bytes` at `now`; returns the delivery time.
+    /// Enqueue `bytes` at `now`; returns the delivery time. Deliveries
+    /// on one link are FIFO: when a small jitter sample (or a delay
+    /// re-shape) would land message n+1 before message n, the delivery
+    /// is clamped to the previous one — jitter can stretch gaps, never
+    /// reorder a serialization queue.
     pub fn send(&mut self, now: SimTime, bytes: u64) -> SimTime {
         let start = self.busy_until.max(now);
         let done = start + self.ser_time(bytes);
@@ -83,7 +92,9 @@ impl Link {
         } else {
             0
         };
-        done + self.delay + j
+        let delivery = (done + self.delay + j).max(self.last_delivery);
+        self.last_delivery = delivery;
+        delivery
     }
 
     /// Queueing delay a new message would currently experience (µs).
@@ -94,6 +105,7 @@ impl Link {
     /// Reset counters (between experiment repetitions).
     pub fn reset(&mut self) {
         self.busy_until = 0;
+        self.last_delivery = 0;
         self.bytes_sent = 0;
         self.msgs_sent = 0;
     }
@@ -213,7 +225,11 @@ mod tests {
 
     #[test]
     fn edge_cloud_net_shape() {
-        let net = EdgeCloudNet::new(&NetConfig { num_ecs: 3, wan_delay: millis(50.0), ..Default::default() });
+        let net = EdgeCloudNet::new(&NetConfig {
+            num_ecs: 3,
+            wan_delay: millis(50.0),
+            ..Default::default()
+        });
         assert_eq!(net.lan.len(), 3);
         assert_eq!(net.uplink.len(), 3);
         assert_eq!(net.uplink[0].delay, 50_000);
@@ -253,6 +269,30 @@ mod tests {
             let base = i * 10_000 + a.ser_time(100).max(1) + 1000;
             assert!(da >= base && da <= base + 5000, "msg {i}: {da} vs {base}");
         }
+    }
+
+    #[test]
+    fn jitter_never_reorders_a_fifo_link() {
+        // regression: with jitter much larger than serialization time,
+        // back-to-back sends used to get independent jitter samples, so
+        // message n+1 (small sample) could arrive before message n
+        // (large sample) — impossible on a FIFO serialization queue.
+        // The clamp makes delivery times monotonic per link.
+        let mut l = Link::mbps("fifo-jitter", 1000.0, 1000);
+        l.jitter = 50_000; // 50 ms of jitter vs ~1 us serialization
+        let mut last = 0;
+        let mut clamped = false;
+        for i in 0..500u64 {
+            let d = l.send(i, 100); // near-simultaneous sends
+            assert!(d >= last, "msg {i}: delivery {d} before previous {last}");
+            if d == last && i > 0 {
+                clamped = true;
+            }
+            last = d;
+        }
+        // the clamp must actually have fired for this jitter profile,
+        // otherwise the regression test tests nothing
+        assert!(clamped, "expected at least one clamped delivery");
     }
 
     #[test]

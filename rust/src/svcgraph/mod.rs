@@ -31,14 +31,21 @@
 //!
 //! Byte counters on the links ARE the paper's BWC metric — applications
 //! no longer hand-compute bandwidth, they just send messages.
+//!
+//! Hot path (DESIGN.md §Event-engine): every steady-state step —
+//! publish, route, deliver, timer — is a typed [`Event`] stored BY
+//! VALUE in the scheduler heap, topics are interned `Rc<str>`s, and
+//! `route` reuses scratch buffers, so publish→deliver performs zero
+//! heap allocations (enforced by `tests/zero_alloc.rs`).
 
 use crate::deploy::{DeploymentPlan, Instance};
-use crate::des::Scheduler;
+use crate::des::{Scheduler, SimEvent};
 use crate::pubsub::topic::TopicTrie;
 use crate::simnet::EdgeCloudNet;
 use crate::util::SimTime;
 use anyhow::{anyhow, bail, Result};
 use std::any::Any;
+use std::collections::HashSet;
 use std::rc::Rc;
 
 /// Which per-cluster message service an instance is bound to.
@@ -146,12 +153,32 @@ pub struct Fabric {
     /// cluster), so bridge matching is trie-indexed too.
     bridge_subs: Vec<TopicTrie<ClusterRef>>,
     sites: Vec<Site>,
+    /// Interned published topics: steady-state publishes of a known
+    /// topic reuse one `Rc<str>` (refcount bump) instead of allocating
+    /// a fresh topic string per message. Bounded by the number of
+    /// distinct topics the application publishes.
+    topics: HashSet<Rc<str>>,
+    /// Reusable match scratch for `route` (DESIGN.md §Event-engine:
+    /// the publish path performs zero steady-state allocations).
+    target_scratch: Vec<(u64, usize)>,
+    bridge_scratch: Vec<(u64, ClusterRef)>,
     /// Messages forwarded over the EC→CC / CC→EC bridges.
     pub bridged_up: u64,
     pub bridged_down: u64,
 }
 
 impl Fabric {
+    /// One `Rc<str>` per distinct published topic.
+    fn intern(&mut self, topic: &str) -> Rc<str> {
+        if let Some(t) = self.topics.get(topic) {
+            t.clone()
+        } else {
+            let t: Rc<str> = topic.into();
+            self.topics.insert(t.clone());
+            t
+        }
+    }
+
     /// Route `msg` on `cluster`'s bus: deliver to local subscribers
     /// (charging the LAN when the hop crosses nodes) and forward over
     /// matching bridges (charging the WAN links). `from_site` is the
@@ -161,7 +188,7 @@ impl Fabric {
     /// `pubsub::Bridge`).
     fn route(
         &mut self,
-        sch: &mut Scheduler<SvcWorld>,
+        sch: &mut SvcScheduler,
         origin: ClusterRef,
         cluster: ClusterRef,
         from_site: Option<&Site>,
@@ -169,13 +196,16 @@ impl Fabric {
     ) {
         let now = sch.now();
         let ci = cidx(cluster, self.num_ecs);
-        // trie walk returns targets in subscription-insertion order —
-        // the exact order the old linear scan delivered in, which the
-        // DES scheduler's insertion-sequence tie-breaking turns into
-        // an identical event trajectory
-        let targets: Vec<usize> =
-            self.subs[ci].collect_matches(&msg.topic).into_iter().copied().collect();
-        for target in targets {
+        // trie walk fills the reused scratch in subscription-insertion
+        // order — the exact order the old linear scan delivered in,
+        // which the DES scheduler's insertion-sequence tie-breaking
+        // turns into an identical event trajectory. The buffers are
+        // swapped out of `self` so the loop bodies can charge links
+        // through `&mut self` (and a re-entrant route could not alias
+        // them); they go back afterwards, keeping their capacity.
+        let mut targets = std::mem::take(&mut self.target_scratch);
+        self.subs[ci].collect_matches_into(&msg.topic, &mut targets);
+        for &(_, target) in &targets {
             let arrival = match from_site {
                 // bridge arrivals fan out locally at no modelled cost
                 // (the cluster message service is on the receiving LAN)
@@ -193,16 +223,15 @@ impl Fabric {
                     }
                 }
             };
-            let m = msg.clone();
-            sch.at(arrival, move |sch, w: &mut SvcWorld| {
-                SvcWorld::dispatch(sch, w, target, Event::Msg(m));
-            });
+            // typed by-value event: Rc refcount bumps, no Box
+            sch.push_at(arrival, Event::Msg { target, msg: msg.clone() });
         }
+        self.target_scratch = targets;
         // bridge rules are indexed per FROM-cluster, so only this
         // cluster's rules are even considered
-        let rules: Vec<ClusterRef> =
-            self.bridge_subs[ci].collect_matches(&msg.topic).into_iter().copied().collect();
-        for to in rules {
+        let mut rules = std::mem::take(&mut self.bridge_scratch);
+        self.bridge_subs[ci].collect_matches_into(&msg.topic, &mut rules);
+        for &(_, to) in &rules {
             if to == origin {
                 continue; // loop prevention, like the threaded Bridge
             }
@@ -218,11 +247,9 @@ impl Fabric {
                 // EC↔EC bridges have no modelled link: instant
                 _ => now,
             };
-            let m = msg.clone();
-            sch.at(arrival, move |sch, w: &mut SvcWorld| {
-                w.fabric.route(sch, origin, to, None, &m);
-            });
+            sch.push_at(arrival, Event::Bridge { origin, to, msg: msg.clone() });
         }
+        self.bridge_scratch = rules;
     }
 
     /// Bytes bridged across the WAN so far (both directions) — reads
@@ -232,10 +259,46 @@ impl Fabric {
     }
 }
 
-enum Event {
-    Start,
-    Msg(GraphMsg),
-    Timer(u64),
+/// The closure lane's payload (rare setup events; see [`Event::Call`]).
+pub type SvcCall = Box<dyn FnOnce(&mut SvcScheduler, &mut SvcWorld)>;
+
+/// The svcgraph scheduler: typed events, stored by value in the heap.
+pub type SvcScheduler = Scheduler<SvcWorld, Event>;
+
+/// Typed DES event (DESIGN.md §Event-engine). The steady-state
+/// variants (`Msg`, `Timer`, `Bridge`) carry their payload by value —
+/// scheduling one is a heap push plus `Rc` refcount bumps, never a
+/// `Box` allocation. `Call` is the boxed closure lane for rare setup
+/// work (validation-testbed channel phases).
+pub enum Event {
+    /// Deliver `on_start` to a component.
+    Start { target: usize },
+    /// Deliver a routed message to a component.
+    Msg { target: usize, msg: GraphMsg },
+    /// Deliver `on_timer(token)` to a component.
+    Timer { target: usize, token: u64 },
+    /// A message crossing a bridge re-enters `Fabric::route` at `to`.
+    Bridge { origin: ClusterRef, to: ClusterRef, msg: GraphMsg },
+    /// Boxed closure lane (setup / testbed phases only).
+    Call(SvcCall),
+}
+
+impl SimEvent<SvcWorld> for Event {
+    fn fire(self, sch: &mut SvcScheduler, w: &mut SvcWorld) {
+        match self {
+            Event::Start { target } => {
+                SvcWorld::with_component(sch, w, target, |c, ctx| c.on_start(ctx));
+            }
+            Event::Msg { target, msg } => {
+                SvcWorld::with_component(sch, w, target, |c, ctx| c.on_message(ctx, &msg));
+            }
+            Event::Timer { target, token } => {
+                SvcWorld::with_component(sch, w, target, |c, ctx| c.on_timer(ctx, token));
+            }
+            Event::Bridge { origin, to, msg } => w.fabric.route(sch, origin, to, None, &msg),
+            Event::Call(f) => f(sch, w),
+        }
+    }
 }
 
 /// DES world: the deployed components plus the transport fabric.
@@ -245,17 +308,21 @@ pub struct SvcWorld {
 }
 
 impl SvcWorld {
-    fn dispatch(sch: &mut Scheduler<SvcWorld>, w: &mut SvcWorld, idx: usize, ev: Event) {
+    /// Run one component callback with a `Ctx` over the world. The
+    /// component is taken out for the duration so the callback can
+    /// borrow the rest of the world mutably.
+    fn with_component(
+        sch: &mut SvcScheduler,
+        w: &mut SvcWorld,
+        idx: usize,
+        f: impl FnOnce(&mut dyn Component, &mut Ctx),
+    ) {
         let Some(mut c) = w.comps[idx].take() else {
             return;
         };
         {
             let mut ctx = Ctx { sch, fabric: &mut w.fabric, self_idx: idx };
-            match ev {
-                Event::Start => c.on_start(&mut ctx),
-                Event::Msg(m) => c.on_message(&mut ctx, &m),
-                Event::Timer(t) => c.on_timer(&mut ctx, t),
-            }
+            f(&mut *c, &mut ctx);
         }
         w.comps[idx] = Some(c);
     }
@@ -263,7 +330,7 @@ impl SvcWorld {
 
 /// The component's handle onto the world during a callback.
 pub struct Ctx<'a> {
-    sch: &'a mut Scheduler<SvcWorld>,
+    sch: &'a mut SvcScheduler,
     fabric: &'a mut Fabric,
     self_idx: usize,
 }
@@ -280,20 +347,21 @@ impl Ctx<'_> {
     }
 
     /// Publish to this component's LOCAL cluster message service;
-    /// transport (LAN / bridged WAN) is charged by the fabric.
+    /// transport (LAN / bridged WAN) is charged by the fabric. The
+    /// topic is interned (no per-publish string allocation) and every
+    /// resulting delivery is a typed by-value event.
     pub fn publish(&mut self, topic: &str, wire_bytes: u64, body: Rc<dyn Any>) {
+        let topic = self.fabric.intern(topic);
         let site = self.fabric.sites[self.self_idx].clone();
-        let msg = GraphMsg { topic: topic.into(), from: self.self_idx, wire_bytes, body };
+        let msg = GraphMsg { topic, from: self.self_idx, wire_bytes, body };
         self.fabric
             .route(self.sch, site.cluster, site.cluster, Some(&site), &msg);
     }
 
     /// Fire `on_timer(token)` on this component after `delay` µs.
     pub fn set_timer(&mut self, delay: SimTime, token: u64) {
-        let idx = self.self_idx;
-        self.sch.after(delay, move |sch, w: &mut SvcWorld| {
-            SvcWorld::dispatch(sch, w, idx, Event::Timer(token));
-        });
+        self.sch
+            .push_after(delay, Event::Timer { target: self.self_idx, token });
     }
 
     /// Read-only view of the network (for introspection/policies).
@@ -305,7 +373,7 @@ impl Ctx<'_> {
 /// Executes a deployed component graph under the DES.
 pub struct GraphRuntime {
     world: SvcWorld,
-    sch: Scheduler<SvcWorld>,
+    sch: SvcScheduler,
     started: bool,
 }
 
@@ -331,6 +399,9 @@ impl GraphRuntime {
                     subs: (0..=num_ecs).map(|_| TopicTrie::new()).collect(),
                     bridge_subs,
                     sites: Vec::new(),
+                    topics: HashSet::new(),
+                    target_scratch: Vec::new(),
+                    bridge_scratch: Vec::new(),
                     bridged_up: 0,
                     bridged_down: 0,
                 },
@@ -372,13 +443,15 @@ impl GraphRuntime {
         Ok(n)
     }
 
-    /// Schedule a raw event (testbed channel phases etc.).
+    /// Schedule a raw closure event (testbed channel phases etc.) —
+    /// the boxed [`Event::Call`] lane; fine for setup, not for the
+    /// per-message hot path.
     pub fn at(
         &mut self,
         at: SimTime,
-        ev: impl FnOnce(&mut Scheduler<SvcWorld>, &mut SvcWorld) + 'static,
+        ev: impl FnOnce(&mut SvcScheduler, &mut SvcWorld) + 'static,
     ) {
-        self.sch.at(at, ev);
+        self.sch.push_at(at, Event::Call(Box::new(ev)));
     }
 
     fn start(&mut self) {
@@ -387,9 +460,7 @@ impl GraphRuntime {
         }
         self.started = true;
         for idx in 0..self.world.comps.len() {
-            self.sch.at(0, move |sch, w: &mut SvcWorld| {
-                SvcWorld::dispatch(sch, w, idx, Event::Start);
-            });
+            self.sch.push_at(0, Event::Start { target: idx });
         }
     }
 

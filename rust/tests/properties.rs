@@ -169,6 +169,43 @@ fn trie_wildcard_edge_cases_match_reference() {
     }
 }
 
+/// Retained-message replay: the filter-directed walk over a
+/// name-keyed trie (`for_each_name_match`, what the broker does on
+/// subscribe) must select exactly the names the old full scan with
+/// `topic::matches` selected.
+#[test]
+fn prop_retained_trie_replay_agrees_with_full_scan() {
+    for case in 0..CASES {
+        let mut s = Stream::new(23_000 + case);
+        // retained set: concrete names, last-writer-wins per name
+        // (mirroring Broker::publish_opts retain semantics)
+        let mut trie: TopicTrie<usize> = TopicTrie::new();
+        let mut map: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
+        for i in 0..s.next_range(1, 40) as usize {
+            let name = rand_topic(&mut s, false);
+            trie.remove(&name, |_| true);
+            trie.insert(&name, i);
+            map.insert(name, i);
+        }
+        for _ in 0..16 {
+            let filter = rand_topic(&mut s, true);
+            if !topic::valid_filter(&filter) {
+                continue;
+            }
+            let mut expect: Vec<usize> = map
+                .iter()
+                .filter(|(n, _)| topic::matches(&filter, n))
+                .map(|(_, v)| *v)
+                .collect();
+            expect.sort_unstable();
+            let mut got: Vec<usize> = Vec::new();
+            trie.for_each_name_match(&filter, |_, v| got.push(*v));
+            got.sort_unstable();
+            assert_eq!(got, expect, "case {case}: filter {filter}");
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // simnet: link conservation + FIFO
 // ---------------------------------------------------------------------------
@@ -200,6 +237,35 @@ fn prop_link_deliveries_are_fifo_and_conserve_bytes() {
     }
 }
 
+/// Same FIFO invariant with per-message jitter enabled — the PR-3
+/// regression: independent jitter samples used to let message n+1
+/// overtake message n on a FIFO serialization queue.
+#[test]
+fn prop_jittered_link_deliveries_stay_fifo() {
+    let mut s = Stream::new(44);
+    for case in 0..CASES {
+        let mut link = Link::mbps(
+            "j",
+            1.0 + s.next_f32() as f64 * 999.0,
+            s.next_range(0, 50_000) as u64,
+        );
+        link.jitter = s.next_range(0, 100_000) as u64;
+        link.jitter_seed = s.next_range(0, i64::MAX) as u64;
+        let mut last_delivery = 0u64;
+        let mut now = 0u64;
+        for i in 0..200 {
+            now += s.next_range(0, 5_000) as u64;
+            let d = link.send(now, s.next_range(1, 50_000) as u64);
+            assert!(d > now, "case {case} msg {i}: delivery not in future");
+            assert!(
+                d >= last_delivery,
+                "case {case} msg {i}: jitter reordered a FIFO link ({d} < {last_delivery})"
+            );
+            last_delivery = d;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // DES: executes every event exactly once, in nondecreasing time
 // ---------------------------------------------------------------------------
@@ -218,6 +284,98 @@ fn prop_des_executes_all_events_in_order() {
         sched.run(&mut w, 10_000);
         assert_eq!(w.len(), n);
         assert!(w.windows(2).all(|p| p[0] <= p[1]), "time went backwards");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DES: typed-event lane vs boxed-closure lane — identical trajectories
+// ---------------------------------------------------------------------------
+
+use ace::des::SimEvent;
+
+type Trace = Vec<(u64, u32)>;
+
+/// Typed mirror of the boxed workload below: record (now, id), then
+/// optionally chain a follow-up.
+enum DiffEv {
+    Emit(u32),
+    Chain { delay: u64, id: u32, hops: u8 },
+}
+
+impl SimEvent<Trace> for DiffEv {
+    fn fire(self, sc: &mut Scheduler<Trace, DiffEv>, w: &mut Trace) {
+        match self {
+            DiffEv::Emit(id) => w.push((sc.now(), id)),
+            DiffEv::Chain { delay, id, hops } => {
+                w.push((sc.now(), id));
+                if hops > 0 {
+                    sc.push_after(delay, DiffEv::Chain { delay, id, hops: hops - 1 });
+                }
+            }
+        }
+    }
+}
+
+fn chain_boxed(sc: &mut Scheduler<Trace>, w: &mut Trace, delay: u64, id: u32, hops: u8) {
+    w.push((sc.now(), id));
+    if hops > 0 {
+        sc.after(delay, move |sc, w: &mut Trace| {
+            chain_boxed(sc, w, delay, id, hops - 1)
+        });
+    }
+}
+
+/// The tentpole determinism guarantee: the SAME workload scheduled on
+/// the typed lane and the boxed closure lane must execute the
+/// identical (time, seq) interleaving — same trajectory, same event
+/// count. This is what makes the svcgraph closures→typed-events
+/// refactor golden-preserving: each lane's seq counter assigns the
+/// same tie-breaks to the same push order.
+#[test]
+fn prop_typed_events_match_boxed_closure_trajectory() {
+    for case in 0..CASES {
+        let mut s = Stream::new(31_000 + case);
+        // random seed workload: many same-time collisions (small time
+        // range) + self-rescheduling chains
+        let n = s.next_range(1, 60) as usize;
+        // (at, id, hops, delay): collision-heavy times, hops 0 = plain
+        // emit, otherwise a self-rescheduling chain
+        let plan: Vec<(u64, u32, u8, u64)> = (0..n)
+            .map(|i| {
+                (
+                    s.next_range(0, 40) as u64,
+                    i as u32,
+                    s.next_range(0, 4) as u8,
+                    1 + s.next_range(0, 20) as u64,
+                )
+            })
+            .collect();
+
+        let mut typed: Scheduler<Trace, DiffEv> = Scheduler::new();
+        let mut tw: Trace = Vec::new();
+        for &(at, id, hops, delay) in &plan {
+            if hops == 0 {
+                typed.push_at(at, DiffEv::Emit(id));
+            } else {
+                typed.push_at(at, DiffEv::Chain { delay, id, hops });
+            }
+        }
+        typed.run(&mut tw, 100_000);
+
+        let mut boxed: Scheduler<Trace> = Scheduler::new();
+        let mut bw: Trace = Vec::new();
+        for &(at, id, hops, delay) in &plan {
+            if hops == 0 {
+                boxed.at(at, move |sc, w: &mut Trace| w.push((sc.now(), id)));
+            } else {
+                boxed.at(at, move |sc, w: &mut Trace| chain_boxed(sc, w, delay, id, hops));
+            }
+        }
+        boxed.run(&mut bw, 100_000);
+
+        assert_eq!(tw, bw, "case {case}: lanes diverged");
+        assert_eq!(typed.executed(), boxed.executed(), "case {case}");
+        assert_eq!(typed.now(), boxed.now(), "case {case}");
     }
 }
 

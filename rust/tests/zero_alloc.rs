@@ -1,0 +1,69 @@
+//! Enforces the PR-3 acceptance criterion directly: the steady-state
+//! publish→deliver path in `svcgraph` performs ZERO heap allocations
+//! (no `Box` per event, no per-publish `Vec`, no per-publish topic
+//! string) — DESIGN.md §Event-engine's allocation budget.
+//!
+//! This integration test is its own binary, so it can install a
+//! counting global allocator without affecting any other test; it
+//! contains exactly ONE test so no concurrent test pollutes the
+//! counter.
+
+use ace::benchkit;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_publish_deliver_allocates_nothing() {
+    // 8 sinks over 4 EC nodes (same-node hand-offs AND LAN-charged
+    // cross-node hops) plus a CC subscriber fed over the Event::Bridge
+    // WAN arm, one publish per topic every 50 µs
+    let (mut rt, hits) = benchkit::steady_state_runtime(8);
+    // warm-up: deploy, topic interning, scratch buffers, event-heap
+    // capacity all reach steady state
+    rt.run_until(200_000);
+    let warm_hits = hits.get();
+    let warm_bridged = rt.fabric().bridged_up;
+    assert!(warm_hits > 0, "warm-up must deliver");
+    assert!(warm_bridged > 0, "warm-up must bridge");
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    rt.run_until(2_000_000); // 1.8 virtual seconds of steady state
+    let allocs = ALLOCS.load(Ordering::Relaxed) - before;
+    let delivered = hits.get() - warm_hits;
+    let bridged = rt.fabric().bridged_up - warm_bridged;
+
+    assert!(
+        delivered > 100_000,
+        "steady-state window too small to be meaningful: {delivered}"
+    );
+    assert!(
+        bridged > 10_000,
+        "the bridge arm must run inside the counted window: {bridged}"
+    );
+    assert_eq!(
+        allocs, 0,
+        "steady-state publish→deliver must not touch the allocator \
+         ({delivered} deliveries + {bridged} bridge hops performed {allocs} allocations)"
+    );
+}
