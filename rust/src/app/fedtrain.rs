@@ -14,15 +14,20 @@
 //! `fl_train_step` HLO artifact exercised by
 //! `examples/federated_training_sim.rs`.
 
+use crate::deploy::Instance;
 use crate::infra::{InfraBuilder, Infrastructure, NodeKind};
 use crate::platform::orchestrator;
 use crate::simnet::{EdgeCloudNet, NetConfig};
-use crate::svcgraph::{ClusterRef, Component, Ctx, GraphMsg, GraphRuntime};
+use crate::svcgraph::lifecycle::{
+    ControlPlane, ControlPlaneConfig, InstanceFactory, LifecycleReport, LifecycleScenario,
+    PlanHook,
+};
+use crate::svcgraph::{ClusterRef, Component, Ctx, GraphMsg, GraphRuntime, Site};
 use crate::topology::Topology;
 use crate::util::prng::Stream;
 use crate::util::{millis, secs, to_secs};
 use anyhow::Result;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
@@ -64,6 +69,11 @@ pub struct FedConfig {
     pub seed: u64,
     /// Virtual service time of ONE local SGD step on a mini PC (ms).
     pub step_ms: f64,
+    /// Lifecycle runs only: a round closes at this deadline with
+    /// whoever reported (stragglers dropped), so trainer scale-downs /
+    /// restarts mid-round never wedge the coordinator. Unused in plain
+    /// runs (no deadline is armed).
+    pub round_deadline_ms: f64,
 }
 
 impl Default for FedConfig {
@@ -78,6 +88,7 @@ impl Default for FedConfig {
             wan_delay_ms: 0.0,
             seed: 42,
             step_ms: 2.0,
+            round_deadline_ms: 2000.0,
         }
     }
 }
@@ -186,11 +197,19 @@ pub fn accuracy(m: &Model, x: &[f32], y: &[i32]) -> f64 {
     correct as f64 / n as f64
 }
 
+/// One completed FedAvg round.
 #[derive(Debug, Clone, Copy)]
 pub struct RoundRecord {
+    /// Round index (0-based).
     pub round: usize,
+    /// Global-model accuracy on the cross-band test set after the
+    /// round's average.
     pub accuracy: f64,
+    /// Mean final local loss across the updates averaged this round.
     pub mean_loss: f32,
+    /// Updates averaged — the live trainer count the round closed with
+    /// (lifecycle runs scale this up and down mid-training).
+    pub trainers: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -239,6 +258,12 @@ struct FedState {
     rounds: RefCell<Vec<RoundRecord>>,
     /// Model after the last completed round (for post-run inspection).
     final_model: RefCell<Model>,
+    /// Trainer count the platform currently intends (plan-driven; the
+    /// lifecycle control plane updates it through its plan hook).
+    expected_trainers: Cell<usize>,
+    /// True under the lifecycle control plane: arms round deadlines so
+    /// mid-round scaling cannot wedge the coordinator.
+    lifecycle: bool,
 }
 
 type Shared = Rc<FedState>;
@@ -252,6 +277,9 @@ struct Trainer {
     shard_x: Vec<f32>,
     shard_y: Vec<i32>,
     pending: Option<ModelBody>,
+    /// Last round whose model this trainer accepted — dedupes the
+    /// coordinator's recovery re-broadcasts (lifecycle runs).
+    last_round: Option<usize>,
 }
 
 impl Component for Trainer {
@@ -263,12 +291,22 @@ impl Component for Trainer {
         let Some(mb) = msg.body_as::<ModelBody>() else {
             return;
         };
+        if self.last_round == Some(mb.round) {
+            return; // recovery re-broadcast of a round already accepted
+        }
+        self.last_round = Some(mb.round);
         self.pending = Some(ModelBody { round: mb.round, model: mb.model.clone() });
         let cfg = &self.shared.cfg;
-        ctx.set_timer(secs(cfg.local_steps as f64 * cfg.step_ms / 1e3), 0);
+        // the timer token carries the round, so a stale timer from a
+        // deadline-closed round cannot consume the NEXT round's model
+        // early (which would undercharge its training time)
+        ctx.set_timer(secs(cfg.local_steps as f64 * cfg.step_ms / 1e3), mb.round as u64);
     }
 
-    fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
+    fn on_timer(&mut self, ctx: &mut Ctx, token: u64) {
+        if self.pending.as_ref().map(|p| p.round as u64) != Some(token) {
+            return; // stale timer: this round was superseded mid-training
+        }
         let Some(ModelBody { round, mut model }) = self.pending.take() else {
             return;
         };
@@ -308,35 +346,28 @@ impl Coordinator {
             );
         }
     }
-}
 
-impl Component for Coordinator {
-    fn subscriptions(&self) -> Vec<String> {
-        vec![UPDATE_TOPIC.to_string()]
+    /// Updates a round waits for: the platform's live trainer count
+    /// (equal to `num_ecs` in plain runs; plan-driven under the
+    /// lifecycle control plane).
+    fn expected(&self) -> usize {
+        self.shared.expected_trainers.get().max(1)
     }
 
-    fn on_start(&mut self, ctx: &mut Ctx) {
-        self.broadcast(ctx);
+    /// Lifecycle runs only: a timer token carrying the round number,
+    /// so a deadline firing after the round already closed is ignored.
+    fn arm_deadline(&self, ctx: &mut Ctx) {
+        if self.shared.lifecycle {
+            ctx.set_timer(millis(self.shared.cfg.round_deadline_ms), self.round as u64);
+        }
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
-        let Some(u) = msg.body_as::<UpdateBody>() else {
-            return;
-        };
-        if u.round != self.round {
-            return; // stale update from an earlier round
-        }
-        self.received.push(UpdateBody {
-            ec: u.ec,
-            round: u.round,
-            model: u.model.clone(),
-            loss: u.loss,
-        });
-        let n = self.shared.cfg.num_ecs;
-        if self.received.len() < n {
+    /// FedAvg over whatever arrived, record the round, start the next.
+    fn finalize_round(&mut self, ctx: &mut Ctx) {
+        let n = self.received.len();
+        if n == 0 {
             return;
         }
-        // FedAvg at the CC
         let mut avg = Model::zeros();
         let mut loss_sum = 0.0f32;
         for upd in self.received.drain(..) {
@@ -354,11 +385,58 @@ impl Component for Coordinator {
             round: self.round,
             accuracy: acc,
             mean_loss: loss_sum / n as f32,
+            trainers: n,
         });
         *self.shared.final_model.borrow_mut() = self.model.clone();
         self.round += 1;
         if self.round < self.shared.cfg.rounds {
             self.broadcast(ctx);
+            self.arm_deadline(ctx);
+        }
+    }
+}
+
+impl Component for Coordinator {
+    fn subscriptions(&self) -> Vec<String> {
+        vec![UPDATE_TOPIC.to_string()]
+    }
+
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        self.broadcast(ctx);
+        self.arm_deadline(ctx);
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
+        let Some(u) = msg.body_as::<UpdateBody>() else {
+            return;
+        };
+        if u.round != self.round {
+            return; // stale update from an earlier round
+        }
+        self.received.push(UpdateBody {
+            ec: u.ec,
+            round: u.round,
+            model: u.model.clone(),
+            loss: u.loss,
+        });
+        if self.received.len() >= self.expected() {
+            self.finalize_round(ctx);
+        }
+    }
+
+    /// Round deadline (armed only in lifecycle runs): close the round
+    /// on whoever reported, or — if NOBODY did, e.g. every trainer was
+    /// replaced since the broadcast — re-broadcast the current model
+    /// to the live trainer set and re-arm.
+    fn on_timer(&mut self, ctx: &mut Ctx, token: u64) {
+        if token != self.round as u64 {
+            return; // deadline of an already-closed round
+        }
+        if self.received.is_empty() {
+            self.broadcast(ctx);
+            self.arm_deadline(ctx);
+        } else {
+            self.finalize_round(ctx);
         }
     }
 }
@@ -377,9 +455,7 @@ fn fed_infra(cfg: &FedConfig) -> Infrastructure {
     b.build()
 }
 
-/// Run the federated-training app end-to-end on the svcgraph runtime:
-/// topology → orchestrator placement → components → bridged transport.
-pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
+fn validate(cfg: &FedConfig) -> Result<()> {
     anyhow::ensure!(cfg.num_ecs >= 1, "fedtrain needs at least one EC");
     anyhow::ensure!(
         cfg.batch > 0 && cfg.samples_per_ec >= cfg.batch,
@@ -387,18 +463,11 @@ pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
         cfg.samples_per_ec,
         cfg.batch
     );
-    let infra = fed_infra(&cfg);
-    let topo = Topology::parse(FEDTRAIN_TOPOLOGY)?;
-    let plan = orchestrator::place(&topo, &infra)?;
+    Ok(())
+}
 
-    let net = EdgeCloudNet::new(&NetConfig {
-        num_ecs: cfg.num_ecs,
-        wan_delay: millis(cfg.wan_delay_ms),
-        ..Default::default()
-    });
-    let mut rt = GraphRuntime::new(net);
-
-    // global test set spans every band (same recipe as the example)
+/// Cross-band global test set (same recipe as the example).
+fn make_test_set(cfg: &FedConfig) -> (Vec<f32>, Vec<i32>) {
     let mut test_x = Vec::new();
     let mut test_y = Vec::new();
     for ec in 0..cfg.num_ecs {
@@ -406,46 +475,49 @@ pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
         test_x.extend(x);
         test_y.extend(y);
     }
-    let shared: Shared = Rc::new(FedState {
-        test_x,
-        test_y,
-        rounds: RefCell::new(Vec::new()),
-        final_model: RefCell::new(Model::zeros()),
-        cfg: cfg.clone(),
-    });
+    (test_x, test_y)
+}
 
-    rt.deploy(&plan, |inst, site| {
-        Ok(match inst.component.as_str() {
-            "trainer" => {
-                let ec = match site.cluster {
-                    ClusterRef::Ec(k) => k,
-                    ClusterRef::Cc => anyhow::bail!("trainer placed on the CC"),
-                };
-                let (shard_x, shard_y) =
-                    make_shard(ec, cfg.num_ecs, cfg.samples_per_ec, cfg.seed);
-                Some(Box::new(Trainer {
-                    shared: shared.clone(),
-                    ec,
-                    in_topic: model_topic(&site.cluster.seg()),
-                    shard_x,
-                    shard_y,
-                    pending: None,
-                }) as Box<dyn Component>)
-            }
-            "coordinator" => Some(Box::new(Coordinator {
+/// Build the component for one placed instance — shared by the static
+/// deploy and the lifecycle control plane's factory, so a scaled-up
+/// trainer is built exactly like an initial one. Trainers co-located
+/// on one EC share that EC's data shard.
+fn fed_component_for(
+    shared: &Shared,
+    inst: &Instance,
+    site: &Site,
+) -> Result<Option<Box<dyn Component>>> {
+    let cfg = &shared.cfg;
+    Ok(match inst.component.as_str() {
+        "trainer" => {
+            let ec = match site.cluster {
+                ClusterRef::Ec(k) => k,
+                ClusterRef::Cc => anyhow::bail!("trainer placed on the CC"),
+            };
+            let (shard_x, shard_y) = make_shard(ec, cfg.num_ecs, cfg.samples_per_ec, cfg.seed);
+            Some(Box::new(Trainer {
                 shared: shared.clone(),
-                model: Model::zeros(),
-                round: 0,
-                received: Vec::new(),
-            })),
-            _ => None,
-        })
-    })?;
+                ec,
+                in_topic: model_topic(&site.cluster.seg()),
+                shard_x,
+                shard_y,
+                pending: None,
+                last_round: None,
+            }) as Box<dyn Component>)
+        }
+        "coordinator" => Some(Box::new(Coordinator {
+            shared: shared.clone(),
+            model: Model::zeros(),
+            round: 0,
+            received: Vec::new(),
+        })),
+        _ => None,
+    })
+}
 
-    rt.run(10_000_000);
-
-    // TRUE client-only baselines: same step budget, own shard only,
-    // never federated — what each EC could do without the CC.
+/// TRUE client-only baselines: same step budget, own shard only, never
+/// federated — what each EC could do without the CC.
+fn client_only_baselines(cfg: &FedConfig, test_x: &[f32], test_y: &[i32]) -> Vec<f64> {
     let mut client_only_acc = Vec::new();
     for ec in 0..cfg.num_ecs {
         let (x, y) = make_shard(ec, cfg.num_ecs, cfg.samples_per_ec, cfg.seed);
@@ -457,9 +529,13 @@ pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
             let ys = &y[bi * cfg.batch..(bi + 1) * cfg.batch];
             train_step(&mut m, xs, ys, cfg.lr);
         }
-        client_only_acc.push(accuracy(&m, &shared.test_x, &shared.test_y));
+        client_only_acc.push(accuracy(&m, test_x, test_y));
     }
+    client_only_acc
+}
 
+fn collect_metrics(cfg: &FedConfig, shared: &Shared, rt: &GraphRuntime) -> FedMetrics {
+    let client_only_acc = client_only_baselines(cfg, &shared.test_x, &shared.test_y);
     let rounds = shared.rounds.borrow().clone();
     // re-derive from the stored model: must agree with the last round
     let final_accuracy = if rounds.is_empty() {
@@ -467,7 +543,7 @@ pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
     } else {
         accuracy(&shared.final_model.borrow(), &shared.test_x, &shared.test_y)
     };
-    Ok(FedMetrics {
+    FedMetrics {
         rounds,
         final_accuracy,
         client_only_acc,
@@ -475,7 +551,94 @@ pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
         bridged_up: rt.fabric().bridged_up,
         bridged_down: rt.fabric().bridged_down,
         virtual_secs: to_secs(rt.now()),
-    })
+    }
+}
+
+/// Run the federated-training app end-to-end on the svcgraph runtime:
+/// topology → orchestrator placement → components → bridged transport.
+pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
+    validate(&cfg)?;
+    let infra = fed_infra(&cfg);
+    let topo = Topology::parse(FEDTRAIN_TOPOLOGY)?;
+    let plan = orchestrator::place(&topo, &infra)?;
+
+    let net = EdgeCloudNet::new(&NetConfig {
+        num_ecs: cfg.num_ecs,
+        wan_delay: millis(cfg.wan_delay_ms),
+        ..Default::default()
+    });
+    let mut rt = GraphRuntime::new(net);
+
+    let (test_x, test_y) = make_test_set(&cfg);
+    let shared: Shared = Rc::new(FedState {
+        test_x,
+        test_y,
+        rounds: RefCell::new(Vec::new()),
+        final_model: RefCell::new(Model::zeros()),
+        expected_trainers: Cell::new(plan.instances_of("trainer").len()),
+        lifecycle: false,
+        cfg: cfg.clone(),
+    });
+
+    rt.deploy(&plan, |inst, site| fed_component_for(&shared, inst, site))?;
+
+    rt.run(10_000_000);
+
+    Ok(collect_metrics(&cfg, &shared, &rt))
+}
+
+/// Run federated training under the VIRTUAL-TIME control plane
+/// (DESIGN.md §Control-plane): the scenario deploys/updates the
+/// fedtrain topology mid-run, scaling trainers up and down while
+/// rounds are in flight. The coordinator learns the live trainer count
+/// through the control plane's plan hook and closes each round on
+/// whoever reports within the round deadline, so scale-downs and
+/// instance restarts never wedge a round.
+pub fn run_fedtrain_scenario(
+    cfg: FedConfig,
+    scenario: &LifecycleScenario,
+) -> Result<(FedMetrics, LifecycleReport)> {
+    validate(&cfg)?;
+    let infra = fed_infra(&cfg);
+    let net = EdgeCloudNet::new(&NetConfig {
+        num_ecs: cfg.num_ecs,
+        wan_delay: millis(cfg.wan_delay_ms),
+        ..Default::default()
+    });
+    let mut rt = GraphRuntime::new(net);
+    let (test_x, test_y) = make_test_set(&cfg);
+    let shared: Shared = Rc::new(FedState {
+        test_x,
+        test_y,
+        rounds: RefCell::new(Vec::new()),
+        final_model: RefCell::new(Model::zeros()),
+        expected_trainers: Cell::new(0),
+        lifecycle: true,
+        cfg: cfg.clone(),
+    });
+    let factory: InstanceFactory = {
+        let shared = shared.clone();
+        Rc::new(move |inst, site| fed_component_for(&shared, inst, site))
+    };
+    // platform intent → coordinator expectation (trainer count)
+    let hook: PlanHook = {
+        let shared = shared.clone();
+        Rc::new(move |_app, plan| {
+            shared
+                .expected_trainers
+                .set(plan.instances_of("trainer").len());
+        })
+    };
+    let plane = ControlPlane::install(
+        &mut rt,
+        infra,
+        factory,
+        Some(hook),
+        scenario,
+        ControlPlaneConfig::default(),
+    )?;
+    rt.run_until(scenario.duration);
+    Ok((collect_metrics(&cfg, &shared, &rt), plane.report()))
 }
 
 /// Run `base` once per seed on a pool of `workers` threads, results in

@@ -26,13 +26,17 @@
 //! measured, not modeled. Ground truth follows footnote 1 (COC post-hoc
 //! labels over all extracted crops).
 
+use crate::deploy::Instance;
 use crate::inapp::{AdvancedPolicy, BasicPolicy, EdgeDecision, QueryPolicy, Route};
 use crate::infra::{InfraBuilder, Infrastructure, NodeKind};
 use crate::metrics::{CellMetrics, F1};
 use crate::platform::orchestrator;
 use crate::runtime::{Classifier, ModelBank};
 use crate::simnet::{sizes, EdgeCloudNet, NetConfig};
-use crate::svcgraph::{ClusterRef, Component, Ctx, GraphMsg, GraphRuntime, SvcWorld};
+use crate::svcgraph::lifecycle::{
+    ControlPlane, ControlPlaneConfig, InstanceFactory, LifecycleReport, LifecycleScenario,
+};
+use crate::svcgraph::{ClusterRef, Component, Ctx, GraphMsg, GraphRuntime, Site, SvcWorld};
 use crate::topology::{Topology, VIDEOQUERY_TOPOLOGY};
 use crate::util::stats::Percentiles;
 use crate::util::{millis, secs, to_secs, SimTime};
@@ -811,6 +815,162 @@ fn ground_truth(compute: &Compute, records: &[CropRecord]) -> Result<Vec<bool>> 
     Ok(gt)
 }
 
+/// Build the shared cell state (trace, per-EC policies, compute).
+fn make_shared(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Shared {
+    let policies: Vec<RefCell<Box<dyn QueryPolicy>>> = (0..cfg.num_ecs)
+        .map(|_| -> RefCell<Box<dyn QueryPolicy>> {
+            RefCell::new(match cfg.paradigm {
+                Paradigm::AceAp => Box::new(AdvancedPolicy::new(
+                    PAPER_EOC_B1_SECS * 1.5,
+                    PAPER_COC_B1_SECS * 1.5,
+                )),
+                _ => Box::new(BasicPolicy::default()),
+            })
+        })
+        .collect();
+    Rc::new(CellState {
+        svc,
+        compute,
+        records: RefCell::new(Vec::new()),
+        policies,
+        errors: RefCell::new(Vec::new()),
+        rs_meta: Cell::new(0),
+        horizon: secs(cfg.duration_s),
+        num_cams: cfg.num_ecs * cfg.cams_per_ec,
+        cfg,
+    })
+}
+
+/// Camera ordinal within its EC, derived from the node name (`rpi3` →
+/// 2) — stable across re-deploys, and identical to the deploy-order
+/// counter it replaced for the standard `rpi1..rpiN` naming (per-label
+/// placement visits camera nodes in registration order).
+fn cam_index(node: &str) -> usize {
+    node.trim_start_matches(|c: char| !c.is_ascii_digit())
+        .parse::<usize>()
+        .map(|n| n.saturating_sub(1))
+        .unwrap_or(0)
+}
+
+/// Build the component for one placed instance (Figure 4 step ④) —
+/// shared by `run_cell`'s static deploy and the virtual-time control
+/// plane's factory, so a redeployed instance is built exactly like a
+/// statically deployed one.
+fn component_for(
+    shared: &Shared,
+    interval: SimTime,
+    inst: &Instance,
+    site: &Site,
+) -> Result<Option<Box<dyn Component>>> {
+    let cfg = &shared.cfg;
+    let seg = site.cluster.seg();
+    let ec = match site.cluster {
+        ClusterRef::Ec(k) => k,
+        ClusterRef::Cc => 0,
+    };
+    Ok(match inst.component.as_str() {
+        "dg" => {
+            let cam_in_ec = cam_index(&site.node);
+            let cam_global = ec * cfg.cams_per_ec + cam_in_ec;
+            Some(Box::new(DataGen {
+                shared: shared.clone(),
+                // one moving object slot per camera keeps the per-EC
+                // crop rate at the highest load (~22/s) just under
+                // the EOC's 44 ms-anchored capacity (~28/s) — the
+                // paper's regime where EI/ACE EILs stay
+                // load-insensitive while CI's COC queue explodes
+                cam: CameraStream::new(cfg.seed * 10_007 + (ec * 97 + cam_in_ec) as u64, 1),
+                cam_global,
+                interval,
+                out_topic: frames_topic(&seg, &site.node),
+            }) as Box<dyn Component>)
+        }
+        "od" => Some(Box::new(ObjectDet {
+            shared: shared.clone(),
+            od: ObjectDetector::new(OdConfig::default()),
+            ec,
+            in_topic: frames_topic(&seg, &site.node),
+            eoc_topic: eoc_topic(&seg),
+        })),
+        "eoc" => Some(Box::new(EdgeClassifier {
+            shared: shared.clone(),
+            ec,
+            in_topic: eoc_topic(&seg),
+            out_topic: verdict_topic(&seg),
+            q: VecDeque::new(),
+            busy: false,
+            in_flight: Vec::new(),
+        })),
+        "lic" => Some(Box::new(LocalController {
+            shared: shared.clone(),
+            ec,
+            verdict_topic: verdict_topic(&seg),
+            eil_topic: eil_topic(&seg),
+        })),
+        "coc" => Some(Box::new(CloudClassifier {
+            shared: shared.clone(),
+            q: VecDeque::new(),
+            busy: false,
+            in_flight: Vec::new(),
+        })),
+        "ic" => Some(Box::new(GlobalController { shared: shared.clone() })),
+        "rs" => Some(Box::new(ResultStore { shared: shared.clone() })),
+        _ => None,
+    })
+}
+
+/// Fold the trace into `CellMetrics` (F1 vs post-hoc ground truth, EIL
+/// percentiles, BWC off the WAN link counters). Returns the metrics
+/// plus the edge-positive count for `run_cell`'s RS-delivery
+/// invariant.
+fn finalize_metrics(
+    cfg: &CellConfig,
+    shared: &Shared,
+    rt: &GraphRuntime,
+) -> Result<(CellMetrics, u64)> {
+    if let Some(e) = shared.errors.borrow().first() {
+        anyhow::bail!("inference error during sim: {e}");
+    }
+    let records = shared.records.borrow();
+    let gt = ground_truth(&shared.compute, &records)?;
+    let mut f1 = F1::default();
+    let mut eil = Percentiles::new();
+    let mut edge_decided = 0u64;
+    let mut cloud_decided = 0u64;
+    let mut edge_positives = 0u64;
+    for (r, &actual) in records.iter().zip(&gt) {
+        let predicted = r.predicted.unwrap_or(false);
+        f1.add(predicted, actual);
+        if let Some(e) = r.eil {
+            eil.add(e);
+        }
+        if r.coc_label.is_some() {
+            cloud_decided += 1;
+        } else if r.predicted.is_some() {
+            edge_decided += 1;
+            if predicted {
+                edge_positives += 1;
+            }
+        }
+    }
+    let mut m = CellMetrics {
+        paradigm: cfg.paradigm.name().to_string(),
+        interval_s: cfg.interval_s,
+        wan_delay_ms: cfg.wan_delay_ms,
+        f1,
+        eil,
+        bwc_bytes: rt.net().wan_bytes(),
+        crops: records.len() as u64,
+        edge_decided,
+        cloud_decided,
+        sim_duration_s: cfg.duration_s,
+    };
+    // sort the quantile buffer once here, so every downstream reader
+    // (tables, CSV, hashes) takes the O(1) indexed path through &self
+    m.finalize();
+    Ok((m, edge_positives))
+}
+
 /// Run one experiment cell to completion and collect its metrics.
 ///
 /// Figure-4 lifecycle, end to end: infrastructure → topology →
@@ -840,93 +1000,11 @@ pub fn run_cell(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Result<
         ..Default::default()
     });
     let mut rt = GraphRuntime::new(net);
-
-    let policies: Vec<RefCell<Box<dyn QueryPolicy>>> = (0..cfg.num_ecs)
-        .map(|_| -> RefCell<Box<dyn QueryPolicy>> {
-            RefCell::new(match cfg.paradigm {
-                Paradigm::AceAp => Box::new(AdvancedPolicy::new(
-                    PAPER_EOC_B1_SECS * 1.5,
-                    PAPER_COC_B1_SECS * 1.5,
-                )),
-                _ => Box::new(BasicPolicy::default()),
-            })
-        })
-        .collect();
-    let shared: Shared = Rc::new(CellState {
-        svc,
-        compute,
-        records: RefCell::new(Vec::new()),
-        policies,
-        errors: RefCell::new(Vec::new()),
-        rs_meta: Cell::new(0),
-        horizon: secs(cfg.duration_s),
-        num_cams: cfg.num_ecs * cfg.cams_per_ec,
-        cfg: cfg.clone(),
-    });
+    let shared = make_shared(cfg.clone(), svc, compute);
 
     // ③ every placed instance becomes a Component on its node
     let interval = secs(interval_s);
-    let mut cams_in_ec = vec![0usize; cfg.num_ecs];
-    rt.deploy(&plan, |inst, site| {
-        let seg = site.cluster.seg();
-        let ec = match site.cluster {
-            ClusterRef::Ec(k) => k,
-            ClusterRef::Cc => 0,
-        };
-        Ok(match inst.component.as_str() {
-            "dg" => {
-                let cam_in_ec = cams_in_ec[ec];
-                cams_in_ec[ec] += 1;
-                let cam_global = ec * cfg.cams_per_ec + cam_in_ec;
-                Some(Box::new(DataGen {
-                    shared: shared.clone(),
-                    // one moving object slot per camera keeps the per-EC
-                    // crop rate at the highest load (~22/s) just under
-                    // the EOC's 44 ms-anchored capacity (~28/s) — the
-                    // paper's regime where EI/ACE EILs stay
-                    // load-insensitive while CI's COC queue explodes
-                    cam: CameraStream::new(
-                        cfg.seed * 10_007 + (ec * 97 + cam_in_ec) as u64,
-                        1,
-                    ),
-                    cam_global,
-                    interval,
-                    out_topic: frames_topic(&seg, &site.node),
-                }) as Box<dyn Component>)
-            }
-            "od" => Some(Box::new(ObjectDet {
-                shared: shared.clone(),
-                od: ObjectDetector::new(OdConfig::default()),
-                ec,
-                in_topic: frames_topic(&seg, &site.node),
-                eoc_topic: eoc_topic(&seg),
-            })),
-            "eoc" => Some(Box::new(EdgeClassifier {
-                shared: shared.clone(),
-                ec,
-                in_topic: eoc_topic(&seg),
-                out_topic: verdict_topic(&seg),
-                q: VecDeque::new(),
-                busy: false,
-                in_flight: Vec::new(),
-            })),
-            "lic" => Some(Box::new(LocalController {
-                shared: shared.clone(),
-                ec,
-                verdict_topic: verdict_topic(&seg),
-                eil_topic: eil_topic(&seg),
-            })),
-            "coc" => Some(Box::new(CloudClassifier {
-                shared: shared.clone(),
-                q: VecDeque::new(),
-                busy: false,
-                in_flight: Vec::new(),
-            })),
-            "ic" => Some(Box::new(GlobalController { shared: shared.clone() })),
-            "rs" => Some(Box::new(ResultStore { shared: shared.clone() })),
-            _ => None,
-        })
-    })?;
+    rt.deploy(&plan, |inst, site| component_for(&shared, interval, inst, site))?;
 
     // validation-testbed channel schedule (§4.2.2): apply each phase at
     // its start time
@@ -940,33 +1018,9 @@ pub fn run_cell(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Result<
 
     // ④ run to exhaustion (sampling stops at the horizon; queues drain)
     rt.run(50_000_000);
-    if let Some(e) = shared.errors.borrow().first() {
-        anyhow::bail!("inference error during sim: {e}");
-    }
 
     // ⑤ metrics: F1 vs post-hoc ground truth; BWC off the WAN links
-    let records = shared.records.borrow();
-    let gt = ground_truth(&shared.compute, &records)?;
-    let mut f1 = F1::default();
-    let mut eil = Percentiles::new();
-    let mut edge_decided = 0u64;
-    let mut cloud_decided = 0u64;
-    let mut edge_positives = 0u64;
-    for (r, &actual) in records.iter().zip(&gt) {
-        let predicted = r.predicted.unwrap_or(false);
-        f1.add(predicted, actual);
-        if let Some(e) = r.eil {
-            eil.add(e);
-        }
-        if r.coc_label.is_some() {
-            cloud_decided += 1;
-        } else if r.predicted.is_some() {
-            edge_decided += 1;
-            if predicted {
-                edge_positives += 1;
-            }
-        }
-    }
+    let (m, edge_positives) = finalize_metrics(&cfg, &shared, &rt)?;
     // transport invariant: every edge positive published result
     // metadata that must have reached RS over the bridge by the time
     // the event heap drained
@@ -976,22 +1030,68 @@ pub fn run_cell(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Result<
         shared.rs_meta.get(),
         edge_positives
     );
-    let mut m = CellMetrics {
-        paradigm: cfg.paradigm.name().to_string(),
-        interval_s: cfg.interval_s,
-        wan_delay_ms: cfg.wan_delay_ms,
-        f1,
-        eil,
-        bwc_bytes: rt.net().wan_bytes(),
-        crops: records.len() as u64,
-        edge_decided,
-        cloud_decided,
-        sim_duration_s: cfg.duration_s,
-    };
-    // sort the quantile buffer once here, so every downstream reader
-    // (tables, CSV, hashes) takes the O(1) indexed path through &self
-    m.finalize();
     Ok(m)
+}
+
+/// Outcome of a lifecycle-scenario run: application metrics plus the
+/// control plane's audit trail.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    /// The usual cell metrics. Crops still undecided when an op killed
+    /// their pipeline stage count as predicted-negative, and BWC
+    /// includes the platform's own instruction/heartbeat traffic.
+    pub metrics: CellMetrics,
+    /// The control plane's deterministic audit trail.
+    pub report: LifecycleReport,
+}
+
+/// Run the video-query application under the VIRTUAL-TIME control
+/// plane (DESIGN.md §Control-plane): the scenario's scripted
+/// deploy/update/fail-node/remove ops drive the LIVE graph mid-run —
+/// agents converge instances, heartbeats flow, failed nodes are
+/// shielded and their instances re-placed — while transport, queues,
+/// and policies behave exactly as in [`run_cell`]. One divergence
+/// from `run_cell`: the OD sampling interval comes from
+/// `cfg.interval_s` (the factory outlives any single topology), so an
+/// `od` `interval` param inside a scenario topology is ignored.
+pub fn run_scenario(
+    cfg: CellConfig,
+    svc: ServiceTimes,
+    compute: Compute,
+    scenario: &LifecycleScenario,
+) -> Result<ScenarioOutcome> {
+    let infra = cell_infra(&cfg);
+    let net = EdgeCloudNet::new(&NetConfig {
+        num_ecs: cfg.num_ecs,
+        wan_delay: millis(cfg.wan_delay_ms),
+        ..Default::default()
+    });
+    let mut rt = GraphRuntime::new(net);
+    let interval = secs(cfg.interval_s);
+    let shared = make_shared(cfg.clone(), svc, compute);
+    let factory: InstanceFactory = {
+        let shared = shared.clone();
+        Rc::new(move |inst, site| component_for(&shared, interval, inst, site))
+    };
+    let plane = ControlPlane::install(
+        &mut rt,
+        infra,
+        factory,
+        None,
+        scenario,
+        ControlPlaneConfig::default(),
+    )?;
+    // the §4.2.2 channel schedule applies under scenarios too
+    if let Some(profile) = &cfg.channel {
+        for phase in profile.phases.clone() {
+            rt.at(secs(phase.start_s), move |_sch, w: &mut SvcWorld| {
+                apply_phase(&mut w.fabric.net, &phase);
+            });
+        }
+    }
+    rt.run_until(scenario.duration);
+    let (metrics, _) = finalize_metrics(&cfg, &shared, &rt)?;
+    Ok(ScenarioOutcome { metrics, report: plane.report() })
 }
 
 // ---------------------------------------------------------------------------

@@ -10,9 +10,13 @@
 //! Everything here measures the PR-3 hot paths: typed by-value DES
 //! events vs the boxed closure lane, trie match collection with vs
 //! without a reused scratch buffer, and the end-to-end 10k-component
-//! fabric publish storm (DESIGN.md §Event-engine).
+//! fabric publish storm (DESIGN.md §Event-engine) — plus, since PR 4,
+//! the THREADED plane's broker (publish/deliver throughput and
+//! filter-directed retained replay), so `BENCH_*.json` covers both
+//! planes.
 
 use crate::des::{Scheduler, SimEvent};
+use crate::pubsub::Broker;
 use crate::pubsub::topic::TopicTrie;
 use crate::simnet::{EdgeCloudNet, NetConfig};
 use crate::svcgraph::{ClusterRef, Component, Ctx, GraphMsg, GraphRuntime, Site};
@@ -210,6 +214,98 @@ pub fn route_scratch(n_subs: usize, n_pubs: usize) -> RouteNumbers {
         hits: alloc_hits,
         alloc_pubs_per_s: n_pubs as f64 / alloc_s,
         scratch_pubs_per_s: n_pubs as f64 / scratch_s,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// threaded broker: publish/deliver throughput + retained replay
+// ---------------------------------------------------------------------------
+
+/// Broker-side numbers (the threaded control plane), so the perf
+/// trajectory covers both planes: trie-routed publish throughput with
+/// a wildcard-heavy subscription table, and filter-directed
+/// retained-message replay on subscribe.
+pub struct BrokerNumbers {
+    pub subs: usize,
+    pub pubs: usize,
+    /// Deliveries performed by the publish pass (from broker stats).
+    pub delivered: u64,
+    pub publish_per_s: f64,
+    pub deliver_per_s: f64,
+    /// Retained publishes stored before the replay pass (distinct
+    /// topics may be fewer: last-writer-wins).
+    pub retained_topics: usize,
+    /// Wildcard subscribes timed against the retained trie.
+    pub replay_subscribes: usize,
+    /// Messages replayed to those subscribers.
+    pub replayed: u64,
+    pub replay_subscribes_per_s: f64,
+}
+
+/// Measure the threaded `pubsub::Broker`: `n_subs` subscriptions from
+/// the shared wildcard-heavy corpus, `n_pubs` publishes through the
+/// trie router, then `replay_subscribes` wildcard subscribes against
+/// `retained_topics` retained messages (the name-keyed retained trie's
+/// filter-directed replay).
+pub fn broker_throughput(
+    n_subs: usize,
+    n_pubs: usize,
+    retained_topics: usize,
+    replay_subscribes: usize,
+) -> BrokerNumbers {
+    let groups = 64;
+    let mut s = Stream::new(13);
+
+    // publish/deliver throughput
+    let b = Broker::new("bench");
+    let filters = make_filters(n_subs, groups, &mut s);
+    let mut handles = Vec::with_capacity(filters.len());
+    for f in &filters {
+        handles.push(b.subscribe(f).expect("bench filter"));
+    }
+    let names = make_names(n_pubs, groups, &mut s);
+    let payload = vec![0u8; 64];
+    let t0 = Instant::now();
+    for name in &names {
+        b.publish(name, payload.clone()).expect("bench publish");
+    }
+    let pub_secs = t0.elapsed().as_secs_f64();
+    let delivered = b.stats().deliver_count;
+    assert!(delivered > 0, "publish storm must reach subscribers");
+    drop(handles);
+
+    // retained replay: R retained names, K filter-directed subscribes
+    let br = Broker::new("bench-retained");
+    let rnames = make_names(retained_topics, groups, &mut s);
+    for (i, name) in rnames.iter().enumerate() {
+        br.publish_retained(name, vec![(i & 0xff) as u8])
+            .expect("bench retain");
+    }
+    let mut replayed = 0u64;
+    let t0 = Instant::now();
+    for k in 0..replay_subscribes {
+        // group-scoped wildcard: replays only that group's trie paths
+        let sub = br
+            .subscribe(&format!("app/g{}/#", k % groups))
+            .expect("bench replay filter");
+        while sub.rx.try_recv().is_ok() {
+            replayed += 1;
+        }
+        br.unsubscribe(sub.id);
+    }
+    let replay_secs = t0.elapsed().as_secs_f64();
+    assert!(replayed > 0, "retained replay must deliver");
+
+    BrokerNumbers {
+        subs: n_subs,
+        pubs: n_pubs,
+        delivered,
+        publish_per_s: n_pubs as f64 / pub_secs,
+        deliver_per_s: delivered as f64 / pub_secs,
+        retained_topics,
+        replay_subscribes,
+        replayed,
+        replay_subscribes_per_s: replay_subscribes as f64 / replay_secs,
     }
 }
 

@@ -80,21 +80,69 @@ impl PlanDiff {
 }
 
 /// Compute the incremental update between `old` and `new`.
+///
+/// Instances are grouped per `(component, node)` and matched as a
+/// MULTISET within each group, so scale-out (several instances of one
+/// component on one node) diffs correctly:
+///
+///   * a new instance matching an old one's image consumes that slot
+///     → `unchanged`;
+///   * an image-mismatched new instance consumes a leftover old slot
+///     → `replace` (in-place redeploy);
+///   * new instances beyond the old count → `add`;
+///   * old instances beyond the new count → `remove`.
+///
+/// With at most one instance per `(component, node)` — every placement
+/// mode except scaled `replicas` — this reduces exactly to the
+/// original one-slot semantics.
+///
+/// Caveat: the diff matches by image, but agents converge by INSTANCE
+/// ID, and the orchestrator suffixes replica ids with `-{i}` only when
+/// n > 1 — so scaling `replicas: 1` → `replicas: 2` renames the kept
+/// instance and the agent restarts it even though the diff calls it
+/// unchanged. Scaling between multi-replica counts keeps ids stable.
 pub fn diff_plans(old: &DeploymentPlan, new: &DeploymentPlan) -> PlanDiff {
     let key = |i: &Instance| (i.component.clone(), i.node.clone());
-    let old_map: BTreeMap<_, &Instance> = old.instances.iter().map(|i| (key(i), i)).collect();
-    let new_map: BTreeMap<_, &Instance> = new.instances.iter().map(|i| (key(i), i)).collect();
+    let mut old_map: BTreeMap<(String, AceId), Vec<&Instance>> = BTreeMap::new();
+    for i in &old.instances {
+        old_map.entry(key(i)).or_default().push(i);
+    }
+    let mut new_map: BTreeMap<(String, AceId), Vec<&Instance>> = BTreeMap::new();
+    for i in &new.instances {
+        new_map.entry(key(i)).or_default().push(i);
+    }
     let mut diff = PlanDiff::default();
-    for (k, i) in &old_map {
+    for (k, olds) in &old_map {
         if !new_map.contains_key(k) {
-            diff.remove.push((*i).clone());
+            diff.remove.extend(olds.iter().map(|i| (*i).clone()));
         }
     }
-    for (k, i) in &new_map {
-        match old_map.get(k) {
-            None => diff.add.push((*i).clone()),
-            Some(o) if o.image != i.image => diff.replace.push((*i).clone()),
-            Some(_) => diff.unchanged.push((*i).clone()),
+    for (k, news) in &new_map {
+        let olds: &[&Instance] = old_map.get(k).map(|v| v.as_slice()).unwrap_or(&[]);
+        let mut old_used = vec![false; olds.len()];
+        let mut pending: Vec<&Instance> = Vec::new();
+        for &n in news {
+            match (0..olds.len()).find(|&j| !old_used[j] && olds[j].image == n.image) {
+                Some(j) => {
+                    old_used[j] = true;
+                    diff.unchanged.push(n.clone());
+                }
+                None => pending.push(n),
+            }
+        }
+        for n in pending {
+            match old_used.iter().position(|u| !u) {
+                Some(j) => {
+                    old_used[j] = true;
+                    diff.replace.push((*n).clone());
+                }
+                None => diff.add.push((*n).clone()),
+            }
+        }
+        for (j, o) in olds.iter().enumerate() {
+            if !old_used[j] {
+                diff.remove.push((*o).clone());
+            }
         }
     }
     diff
@@ -173,5 +221,109 @@ mod tests {
         let d = diff_plans(&p, &p.clone());
         assert!(d.is_noop());
         assert_eq!(d.unchanged.len(), 1);
+    }
+
+    #[test]
+    fn instance_moved_between_nodes_is_remove_plus_add() {
+        let old = plan(1, vec![inst("od", "i/ec-1/rpi1", "v1")]);
+        let new = plan(2, vec![inst("od", "i/ec-1/rpi2", "v1")]);
+        let d = diff_plans(&old, &new);
+        assert_eq!(d.remove.len(), 1);
+        assert_eq!(d.remove[0].node, AceId::parse("i/ec-1/rpi1"));
+        assert_eq!(d.add.len(), 1);
+        assert_eq!(d.add[0].node, AceId::parse("i/ec-1/rpi2"));
+        assert!(d.replace.is_empty() && d.unchanged.is_empty());
+        // both the vacated and the newly occupied node get instructions
+        let touched = d.touched_nodes();
+        assert_eq!(touched.len(), 2);
+        assert!(touched.contains(&AceId::parse("i/ec-1/rpi1")));
+        assert!(touched.contains(&AceId::parse("i/ec-1/rpi2")));
+    }
+
+    #[test]
+    fn version_bump_with_identical_instances_is_noop() {
+        // §4.4.3: a topology resubmission that places identically must
+        // touch zero nodes, regardless of the version counter
+        let instances = vec![
+            inst("od", "i/ec-1/rpi1", "v1"),
+            inst("coc", "i/cc/gpu", "v1"),
+        ];
+        let d = diff_plans(&plan(1, instances.clone()), &plan(7, instances));
+        assert!(d.is_noop());
+        assert_eq!(d.unchanged.len(), 2);
+        assert!(d.touched_nodes().is_empty());
+    }
+
+    #[test]
+    fn empty_to_full_is_all_adds_and_back_is_all_removes() {
+        let empty = plan(1, vec![]);
+        let full = plan(
+            2,
+            vec![inst("od", "i/ec-1/rpi1", "v1"), inst("eoc", "i/ec-1/minipc", "v1")],
+        );
+        let up = diff_plans(&empty, &full);
+        assert_eq!(up.add.len(), 2);
+        assert!(up.remove.is_empty() && up.replace.is_empty() && up.unchanged.is_empty());
+        assert_eq!(up.touched_nodes().len(), 2);
+        let down = diff_plans(&full, &empty);
+        assert_eq!(down.remove.len(), 2);
+        assert!(down.add.is_empty() && down.replace.is_empty() && down.unchanged.is_empty());
+        assert_eq!(down.touched_nodes().len(), 2);
+        // empty vs empty: nothing at all
+        assert!(diff_plans(&empty, &empty.clone()).is_noop());
+    }
+
+    fn inst_n(c: &str, node: &str, image: &str, i: usize) -> Instance {
+        let mut x = inst(c, node, image);
+        x.id = format!("{}-{i}", x.id);
+        x
+    }
+
+    #[test]
+    fn scale_out_on_one_node_diffs_as_multiset() {
+        // 1 trainer -> 2 trainers on the SAME node, same image: one
+        // unchanged slot + one add (the old single-slot diff collapsed
+        // both into one key and called it unchanged)
+        let old = plan(1, vec![inst_n("trainer", "i/ec-1/minipc", "v1", 0)]);
+        let new = plan(
+            2,
+            vec![
+                inst_n("trainer", "i/ec-1/minipc", "v1", 0),
+                inst_n("trainer", "i/ec-1/minipc", "v1", 1),
+            ],
+        );
+        let d = diff_plans(&old, &new);
+        assert_eq!(d.unchanged.len(), 1);
+        assert_eq!(d.add.len(), 1);
+        assert!(d.remove.is_empty() && d.replace.is_empty());
+        assert_eq!(d.touched_nodes().len(), 1);
+        // and scale-in reverses to one remove
+        let d = diff_plans(&new, &old);
+        assert_eq!(d.unchanged.len(), 1);
+        assert_eq!(d.remove.len(), 1);
+        assert!(d.add.is_empty() && d.replace.is_empty());
+    }
+
+    #[test]
+    fn image_bump_on_one_of_two_colocated_instances() {
+        let old = plan(
+            1,
+            vec![
+                inst_n("w", "i/ec-1/minipc", "v1", 0),
+                inst_n("w", "i/ec-1/minipc", "v1", 1),
+            ],
+        );
+        let new = plan(
+            2,
+            vec![
+                inst_n("w", "i/ec-1/minipc", "v1", 0),
+                inst_n("w", "i/ec-1/minipc", "v2", 1),
+            ],
+        );
+        let d = diff_plans(&old, &new);
+        assert_eq!(d.unchanged.len(), 1, "the image-stable instance stays");
+        assert_eq!(d.replace.len(), 1, "the bumped one redeploys in place");
+        assert_eq!(d.replace[0].image, "v2");
+        assert!(d.add.is_empty() && d.remove.is_empty());
     }
 }

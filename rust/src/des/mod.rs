@@ -120,6 +120,23 @@ impl<W, E: SimEvent<W>> Scheduler<W, E> {
         self.heap.len()
     }
 
+    /// Pre-size the event heap for at least `additional` more pending
+    /// events. Deployment-shaped workloads know their steady-state
+    /// in-flight event count up front (a few events per placed
+    /// instance), so reserving once at deploy time means the heap never
+    /// reallocates mid-run — `tests/zero_alloc.rs` pins this by
+    /// asserting the capacity is unchanged across the steady-state
+    /// window.
+    pub fn reserve_events(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
+    /// Current event-heap capacity (for pre-sizing / no-regrowth
+    /// assertions; see [`reserve_events`](Self::reserve_events)).
+    pub fn heap_capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
     /// Schedule a typed event at absolute time `at` (clamped to now).
     /// The event is stored by value — no allocation beyond amortized
     /// heap growth.
@@ -269,6 +286,22 @@ mod tests {
         });
         s.run(&mut w, 100);
         assert_eq!(w, vec![50]);
+    }
+
+    #[test]
+    fn reserve_events_presizes_the_heap() {
+        let mut s: Scheduler<Vec<u64>> = Scheduler::new();
+        s.reserve_events(1000);
+        let cap = s.heap_capacity();
+        assert!(cap >= 1000);
+        let mut w = Vec::new();
+        // a workload smaller than the reservation never regrows the heap
+        for i in 0..1000u64 {
+            s.at(i, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        }
+        assert_eq!(s.heap_capacity(), cap, "pre-sized heap must not regrow");
+        s.run(&mut w, 2000);
+        assert_eq!(w.len(), 1000);
     }
 
     #[test]

@@ -21,25 +21,37 @@
 //!                                    the generic svcgraph runtime
 //!                                    (topology -> orchestrator ->
 //!                                    components -> bridged pub/sub)
+//!   ace svcrun --scenario FILE     — run an app under the VIRTUAL-TIME
+//!                                    control plane: a scripted
+//!                                    lifecycle (deploy / incremental
+//!                                    update / node failure with
+//!                                    shield+redeploy / remove) drives
+//!                                    the live graph mid-run
 //!   ace bench [--json] [--events N] [--subs N] [--pubs N] [--comps N]
-//!             [--storm-pubs N]     — hot-path micro-benchmarks
-//!                                    (typed vs boxed DES events,
-//!                                    scratch-reuse routing, fabric
-//!                                    storm); --json emits the
-//!                                    machine-readable BENCH_*.json
+//!             [--storm-pubs N] [--broker-subs N] [--broker-pubs N]
+//!             [--retained N] [--replay-subs N]
+//!                                  — hot-path micro-benchmarks on BOTH
+//!                                    planes (typed vs boxed DES
+//!                                    events, scratch-reuse routing,
+//!                                    fabric storm, broker throughput +
+//!                                    retained replay); --json emits
+//!                                    the machine-readable BENCH_*.json
 //!                                    perf-trajectory record CI logs
 //!
 //! clap is unavailable offline; argument parsing is a ~60-line hand
 //! rolled matcher (DESIGN.md §Substitutions).
 
-use ace::app::fedtrain::{run_fedtrain, run_fedtrain_seeds, FedConfig};
+use ace::app::fedtrain::{run_fedtrain, run_fedtrain_scenario, run_fedtrain_seeds, FedConfig};
 use ace::app::videoquery::{
-    fig5_grid, run_cell, run_sweep, CellConfig, Compute, InferCache, Paradigm, ServiceTimes,
+    fig5_grid, run_cell, run_scenario, run_sweep, CellConfig, Compute, InferCache, Paradigm,
+    ServiceTimes,
 };
 use ace::infra::paper_testbed;
 use ace::platform::orchestrator;
 use ace::runtime::{artifacts_dir, Engine, ModelBank};
+use ace::svcgraph::lifecycle::{LifecycleReport, LifecycleScenario};
 use ace::topology::{Topology, VIDEOQUERY_TOPOLOGY};
+use ace::util::to_secs;
 use ace::video::synth;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -210,7 +222,99 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_report(report: &LifecycleReport) {
+    for (at, msg) in &report.events {
+        println!("[{:>9.3}s] {msg}", to_secs(*at));
+    }
+    println!(
+        "lifecycle: {} spawned / {} retired / {} status reports / {} redeploys / shielded {:?}",
+        report.spawned, report.retired, report.status_reports, report.redeploys, report.shielded,
+    );
+}
+
+/// `--scenario FILE`: run an app under the virtual-time control plane
+/// (deploy/update/fail-node/remove ops driving the live graph).
+fn cmd_svcrun_scenario(args: &Args, path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let scenario = LifecycleScenario::parse(&text)?;
+    let app = scenario
+        .first_app()
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| args.get("app").unwrap_or("videoquery").to_string());
+    match app.as_str() {
+        "videoquery" => {
+            let paradigm = paradigm_of(args.get("paradigm").unwrap_or("ace"))?;
+            let cfg = CellConfig {
+                paradigm,
+                interval_s: args.f64_or("interval", 0.2),
+                wan_delay_ms: args.f64_or("delay", 0.0),
+                // without --seconds, sample right up to the scenario
+                // horizon so post-redeploy phases still produce crops
+                duration_s: args.f64_or("seconds", to_secs(scenario.duration)),
+                seed: args.f64_or("seed", 1.0) as u64,
+                num_ecs: args.usize_or("ecs", 3),
+                cams_per_ec: args.usize_or("cams", 3),
+                ..Default::default()
+            };
+            let (svc, compute) = if args.has("real") {
+                let (bank, svc) = load_real()?;
+                let cache = Arc::new(Mutex::new(InferCache::new()));
+                (svc, Compute::Real { bank, cache })
+            } else {
+                (ServiceTimes::synthetic(), Compute::Synthetic { target_bias: 0.05 })
+            };
+            let out = run_scenario(cfg, svc, compute, &scenario)?;
+            print_report(&out.report);
+            let m = &out.metrics;
+            println!(
+                "scenario/videoquery {}: crops={} F1={:.3} BWC={:.2}MB \
+                 (incl. platform traffic) edge/cloud decided {}/{}",
+                m.paradigm,
+                m.crops,
+                m.f1.f1(),
+                m.bwc_mb(),
+                m.edge_decided,
+                m.cloud_decided,
+            );
+            Ok(())
+        }
+        "fedtrain" => {
+            let cfg = FedConfig {
+                rounds: args.usize_or("rounds", 12),
+                num_ecs: args.usize_or("ecs", 3),
+                wan_delay_ms: args.f64_or("delay", 0.0),
+                seed: args.f64_or("seed", 42.0) as u64,
+                step_ms: args.f64_or("step-ms", 200.0),
+                ..Default::default()
+            };
+            let (m, report) = run_fedtrain_scenario(cfg, &scenario)?;
+            print_report(&report);
+            println!("| round | trainers | mean loss | global acc |");
+            println!("|---|---|---|---|");
+            for r in &m.rounds {
+                println!(
+                    "| {:>2} | {} | {:.3} | {:.3} |",
+                    r.round, r.trainers, r.mean_loss, r.accuracy
+                );
+            }
+            println!(
+                "scenario/fedtrain: {} rounds, final acc {:.3}, BWC {:.3} MB, {:.2} virtual s",
+                m.rounds.len(),
+                m.final_accuracy,
+                m.wan_bytes as f64 / 1e6,
+                m.virtual_secs,
+            );
+            Ok(())
+        }
+        other => bail!("scenario deploys unknown app '{other}' (videoquery|fedtrain)"),
+    }
+}
+
 fn cmd_svcrun(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("scenario") {
+        let path = path.to_string();
+        return cmd_svcrun_scenario(args, &path);
+    }
     match args.get("app").unwrap_or("videoquery") {
         "videoquery" => {
             let paradigm = paradigm_of(args.get("paradigm").unwrap_or("ace"))?;
@@ -257,6 +361,7 @@ fn cmd_svcrun(args: &Args) -> Result<()> {
                 num_ecs: args.usize_or("ecs", 3),
                 wan_delay_ms: args.f64_or("delay", 0.0),
                 seed: args.f64_or("seed", 42.0) as u64,
+                step_ms: args.f64_or("step-ms", 2.0),
                 ..Default::default()
             };
             let num_seeds = args.usize_or("seeds", 1);
@@ -324,10 +429,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let pubs = args.usize_or("pubs", 20_000);
     let comps = args.usize_or("comps", 10_000);
     let storm_pubs = args.usize_or("storm-pubs", 500);
+    let broker_subs = args.usize_or("broker-subs", 2_000);
+    let broker_pubs = args.usize_or("broker-pubs", 20_000);
+    let retained = args.usize_or("retained", 2_000);
+    let replay_subs = args.usize_or("replay-subs", 500);
 
     let des = benchkit::des_throughput(events);
     let route = benchkit::route_scratch(subs, pubs);
     let storm = benchkit::fabric_storm(comps, storm_pubs);
+    let broker = benchkit::broker_throughput(broker_subs, broker_pubs, retained, replay_subs);
 
     // one measurement pass serves both renderings: the table goes to
     // stderr so `--json` output stays pipeable AND the log stays
@@ -355,6 +465,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
     eprintln!(
         "fabric storm: {} comps, {} publishes -> {} deliveries, {} DES events, {:.0} pubs/s",
         storm.components, storm.publishes, storm.deliveries, storm.des_events, storm.pubs_per_s
+    );
+    eprintln!(
+        "broker: {} subs, {} publishes -> {} deliveries, {:.0} pubs/s, {:.0} delivers/s",
+        broker.subs, broker.pubs, broker.delivered, broker.publish_per_s, broker.deliver_per_s
+    );
+    eprintln!(
+        "broker retained replay: {} retained, {} subscribes -> {} replayed, {:.0} subscribes/s",
+        broker.retained_topics,
+        broker.replay_subscribes,
+        broker.replayed,
+        broker.replay_subscribes_per_s
     );
 
     if args.has("json") {
@@ -392,6 +513,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     ("deliveries", Value::Num(storm.deliveries as f64)),
                     ("des_events", Value::Num(storm.des_events as f64)),
                     ("pubs_per_sec", num(storm.pubs_per_s)),
+                ]),
+            ),
+            (
+                "broker",
+                obj(vec![
+                    ("subs", Value::Num(broker.subs as f64)),
+                    ("pubs", Value::Num(broker.pubs as f64)),
+                    ("delivered", Value::Num(broker.delivered as f64)),
+                    ("publish_per_sec", num(broker.publish_per_s)),
+                    ("deliver_per_sec", num(broker.deliver_per_s)),
+                    ("retained_topics", Value::Num(broker.retained_topics as f64)),
+                    ("replay_subscribes", Value::Num(broker.replay_subscribes as f64)),
+                    ("replayed", Value::Num(broker.replayed as f64)),
+                    ("replay_subscribes_per_sec", num(broker.replay_subscribes_per_s)),
                 ]),
             ),
         ]);
@@ -475,9 +610,17 @@ COMMANDS:
                                               [--ecs N] [--cams N] [--rounds N]
                                               [--seed S] [--seeds N] [--workers N]
                                               [--real]
-  bench        hot-path micro-benchmarks      [--json] [--events N] [--subs N]
-               (BENCH_*.json perf trajectory) [--pubs N] [--comps N]
-                                              [--storm-pubs N]
+               with --scenario FILE: a        [--scenario FILE] [--step-ms MS]
+               scripted lifecycle (deploy,
+               incremental update, node
+               failure -> shield/redeploy,
+               remove) drives the live graph
+               under virtual time
+  bench        hot-path micro-benchmarks,     [--json] [--events N] [--subs N]
+               both planes                    [--pubs N] [--comps N]
+               (BENCH_*.json perf trajectory) [--storm-pubs N] [--broker-subs N]
+                                              [--broker-pubs N] [--retained N]
+                                              [--replay-subs N]
   help         this message"
     );
 }

@@ -11,11 +11,17 @@ use crate::json::Value;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
+/// One stored ACE entity: a JSON document under `(kind, id)` with an
+/// optimistic-concurrency revision.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Entity {
+    /// Entity kind (see [`kinds`]).
     pub kind: String,
+    /// Id, unique within the kind.
     pub id: String,
+    /// Revision assigned by the last write (CAS token).
     pub revision: u64,
+    /// The document itself.
     pub doc: Value,
 }
 
@@ -31,10 +37,16 @@ pub struct ApiServer {
     inner: Arc<Mutex<Inner>>,
 }
 
+/// API-server errors (CRUD over entities).
 #[derive(Debug, PartialEq)]
 pub enum ApiError {
+    /// No entity under that `(kind, id)`.
     NotFound,
-    Conflict { have: u64 },
+    /// CAS lost: the entity's current revision is `have`.
+    Conflict {
+        /// The revision actually stored.
+        have: u64,
+    },
 }
 
 impl std::fmt::Display for ApiError {
@@ -49,6 +61,7 @@ impl std::fmt::Display for ApiError {
 impl std::error::Error for ApiError {}
 
 impl ApiServer {
+    /// An empty store at revision 0.
     pub fn new() -> Self {
         Self::default()
     }
@@ -85,6 +98,7 @@ impl ApiServer {
         }
     }
 
+    /// Read one entity.
     pub fn get(&self, kind: &str, id: &str) -> Option<Entity> {
         self.inner
             .lock()
@@ -94,6 +108,7 @@ impl ApiServer {
             .cloned()
     }
 
+    /// Delete one entity (bumps the store revision on success).
     pub fn delete(&self, kind: &str, id: &str) -> Result<(), ApiError> {
         let mut inner = self.inner.lock().unwrap();
         inner

@@ -8,7 +8,7 @@
 use crate::deploy::{diff_plans, DeploymentPlan};
 use crate::infra::agent::{compose_instruction, deploy_topic};
 use crate::infra::Infrastructure;
-use crate::json::{self, Value};
+use crate::json::Value;
 use crate::platform::api::{kinds, ApiServer};
 use crate::platform::orchestrator;
 use crate::pubsub::Broker;
@@ -21,12 +21,16 @@ use std::collections::BTreeMap;
 /// (each EC + the CC runs its own message service; the platform reaches
 /// them over the bridged links).
 pub struct Controller {
+    /// The platform's entity store (plans, app states, node statuses).
     pub api: ApiServer,
     /// cluster leaf ("ec-1", "cc") -> broker handle
     brokers: BTreeMap<String, Broker>,
 }
 
-fn plan_to_value(plan: &DeploymentPlan) -> Value {
+/// Serialize a deployment plan as the API server's wire document
+/// (shared by the threaded controller and the virtual-time
+/// `svcgraph::lifecycle` control plane).
+pub fn plan_to_value(plan: &DeploymentPlan) -> Value {
     Value::obj(vec![
         ("app", Value::str(&plan.app)),
         ("version", Value::num(plan.version as f64)),
@@ -49,7 +53,9 @@ fn plan_to_value(plan: &DeploymentPlan) -> Value {
     ])
 }
 
-fn plan_from_value(v: &Value) -> Result<DeploymentPlan> {
+/// Parse a deployment plan back out of its API-server document
+/// (inverse of [`plan_to_value`]).
+pub fn plan_from_value(v: &Value) -> Result<DeploymentPlan> {
     let instances = v
         .get("instances")
         .as_arr()
@@ -72,6 +78,8 @@ fn plan_from_value(v: &Value) -> Result<DeploymentPlan> {
 }
 
 impl Controller {
+    /// A controller over `api` talking to `brokers` (cluster leaf →
+    /// broker handle).
     pub fn new(api: ApiServer, brokers: BTreeMap<String, Broker>) -> Self {
         Controller { api, brokers }
     }
@@ -238,9 +246,6 @@ pub fn record_heartbeat(api: &ApiServer, node: &AceId, unix_ms: u64, doc: Value)
     obj.insert("last_seen_ms".to_string(), Value::num(unix_ms as f64));
     api.put(kinds::NODE_STATUS, &key, Value::Obj(obj));
 }
-
-#[allow(unused)]
-fn unused(_: &json::Value) {}
 
 #[cfg(test)]
 mod tests {

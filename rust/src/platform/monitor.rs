@@ -22,12 +22,17 @@ fn unix_ms() -> u64 {
         .unwrap_or(0)
 }
 
+/// Live health of one component, folded from agent status reports.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ComponentHealth {
+    /// Running instance count.
     pub running: usize,
+    /// Nodes currently reporting an instance of the component.
     pub nodes: Vec<String>,
 }
 
+/// The monitoring service (collection threads, one per cluster
+/// broker); see the module docs.
 pub struct Monitor {
     api: ApiServer,
     reports: Arc<AtomicU64>,
@@ -119,6 +124,7 @@ impl Monitor {
             .collect()
     }
 
+    /// Stop the collection threads and wait for them to exit.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         for t in self.threads.drain(..) {

@@ -79,7 +79,11 @@ fn candidates<'a>(
         .collect()
 }
 
-fn commit(infra: &mut Infrastructure, comp: &ComponentSpec, node_id: &crate::util::AceId) -> Instance {
+fn commit(
+    infra: &mut Infrastructure,
+    comp: &ComponentSpec,
+    node_id: &crate::util::AceId,
+) -> Instance {
     let node = infra.find_node_mut(node_id).expect("placed node exists");
     node.allocatable.sub(&comp.resources);
     Instance {

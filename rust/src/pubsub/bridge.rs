@@ -21,9 +21,12 @@ use std::thread::JoinHandle;
 /// mirrored rule handles `b -> a` if added).
 #[derive(Debug, Clone)]
 pub struct Rule {
+    /// Topic filter selecting what this rule forwards.
     pub filter: String,
 }
 
+/// A running pair of forwarding loops between two brokers (one thread
+/// per direction per filter), with origin-based loop prevention.
 pub struct Bridge {
     stop: Arc<AtomicBool>,
     forwarded: Arc<AtomicU64>,
@@ -92,6 +95,7 @@ impl Bridge {
         self.forwarded_bytes.load(Ordering::Relaxed)
     }
 
+    /// Stop the forwarding threads and wait for them to exit.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         for t in self.threads.drain(..) {

@@ -47,6 +47,8 @@ pub struct Message {
 }
 
 impl Message {
+    /// A fresh message with no origin stamp (the first broker it
+    /// enters stamps it).
     pub fn new(topic: impl Into<String>, payload: impl Into<Vec<u8>>) -> Self {
         Message {
             topic: topic.into(),
@@ -55,6 +57,7 @@ impl Message {
         }
     }
 
+    /// Payload decoded as (lossy) UTF-8 — JSON/yamlite wire documents.
     pub fn utf8(&self) -> String {
         String::from_utf8_lossy(&self.payload).into_owned()
     }
@@ -104,20 +107,30 @@ pub struct Broker {
 /// `Broker::unsubscribe`), but a closed receiver is garbage-collected on
 /// the next publish that routes to it.
 pub struct SubHandle {
+    /// Subscription id (for [`Broker::unsubscribe`]).
     pub id: u64,
+    /// Receiving end: matching messages (and retained replays).
     pub rx: Receiver<Message>,
 }
 
+/// Snapshot of a broker's publish/delivery counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct BrokerStats {
+    /// Messages accepted by publish.
     pub pub_count: u64,
+    /// Payload bytes accepted by publish.
     pub pub_bytes: u64,
+    /// Messages delivered to subscribers.
     pub deliver_count: u64,
+    /// Payload bytes delivered to subscribers.
     pub deliver_bytes: u64,
+    /// Live subscriptions.
     pub subscriptions: usize,
 }
 
 impl Broker {
+    /// A fresh broker named `name` (the per-cluster message service
+    /// instance of §4.3.2).
     pub fn new(name: impl Into<String>) -> Self {
         Broker {
             inner: Arc::new(Mutex::new(Inner {
@@ -171,6 +184,8 @@ impl Broker {
         Ok(SubHandle { id, rx })
     }
 
+    /// Drop subscription `id`: a targeted trie-path removal, not a
+    /// scan over every subscription.
     pub fn unsubscribe(&self, id: u64) {
         let mut inner = self.inner.lock().unwrap();
         if let Some(filter) = inner.filters.remove(&id) {
@@ -238,10 +253,13 @@ impl Broker {
         Ok(reached)
     }
 
+    /// Publish without retaining. Returns the subscribers reached.
     pub fn publish(&self, topic: &str, payload: impl Into<Vec<u8>>) -> Result<usize, String> {
         self.publish_opts(Message::new(topic, payload), false)
     }
 
+    /// Publish and retain (last-writer-wins per topic) for future
+    /// subscribers. Returns the subscribers reached now.
     pub fn publish_retained(
         &self,
         topic: &str,

@@ -1,0 +1,965 @@
+//! Virtual-time control plane: the platform manages application
+//! lifecycle INSIDE the DES (Figure 4 steps ②→④ under virtual time).
+//!
+//! Before this module the threaded `platform::{Controller, Monitor}` /
+//! `infra::Agent` ran only on the wall-clock broker plane, disconnected
+//! from the `svcgraph` DES where applications actually execute. Here
+//! the same ②→④ loop is simulated end to end:
+//!
+//! ```text
+//! LifecycleScenario (yamlite script: deploy / update / fail-node /
+//!                    remove at virtual times)
+//!    │  Event::Call at each op's time
+//!    ▼
+//! ControlPlane  ── orchestrator::place ──► DeploymentPlan     (②)
+//!    │  diff_plans vs the stored plan → per-node compose
+//!    │  instructions (yamlite docs, the real wire format)
+//!    ▼
+//! `ace/deploy/<node>` on the node's cluster bus                (③)
+//!    │  (downlink-charged for EC nodes — the platform reaches
+//!    │   EC message services over the WAN, §4.3.2)
+//!    ▼
+//! NodeAgent (a simulated Component on every registered node)   (④)
+//!    │  converges: SvcWorld::spawn / SvcWorld::retire via the
+//!    │  Event::Call lane; heartbeats + instance status on
+//!    │  `cloud/ace/status/<node>` (uplink-charged)
+//!    ▼
+//! MonitorTap on the CC ──► ApiServer `node-status` entities
+//!    │  (virtual-ms heartbeat stamps)
+//!    ▼
+//! monitor sweep every P seconds: stale heartbeat ⇒ node shielded
+//! (marked Failed) ⇒ re-place each app ⇒ diff ⇒ instructions to
+//! touched nodes — the §4.2.1 shield/redeploy loop, deterministic.
+//! ```
+//!
+//! Determinism: every step above is a DES event (ops and sweeps on the
+//! boxed `Call` lane, transport on the typed lanes), so the same
+//! scenario replays bit-identically; `tests/lifecycle.rs` pins the
+//! trajectory hash. Components untouched by an op keep their exact
+//! `(at, seq)` trajectories (see DESIGN.md §Control-plane).
+//!
+//! Scenario file format (yamlite; `ace svcrun --scenario <FILE>`):
+//!
+//! ```yaml
+//! duration: 110          # virtual seconds to simulate
+//! ops:
+//!   - at: 0              # virtual seconds
+//!     op: deploy         # deploy | update | fail-node | remove
+//!     topology:          # a full topology document, inline
+//!       app: videoquery
+//!       version: 1
+//!       components:
+//!         - name: od
+//!           image: ace/object-detector:1
+//!           ...
+//!   - at: 60
+//!     op: fail-node
+//!     node: infra-cell/ec-1/minipc
+//!   - at: 90
+//!     op: remove
+//!     app: videoquery
+//! ```
+
+use super::{
+    site_of_node, ClusterRef, Component, Ctx, Event, GraphMsg, GraphRuntime, Site, SvcScheduler,
+    SvcWorld,
+};
+use crate::deploy::{diff_plans, DeploymentPlan, Instance};
+use crate::infra::agent::{compose_instruction, deploy_topic, status_topic};
+use crate::infra::{Infrastructure, NodeStatus};
+use crate::json::{self, Value};
+use crate::platform::api::{kinds, ApiServer};
+use crate::platform::controller::plan_to_value;
+use crate::platform::orchestrator;
+use crate::topology::Topology;
+use crate::util::{secs, to_millis, AceId, SimTime};
+use crate::yamlite;
+use anyhow::{anyhow, bail, Context, Result};
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Builds the component for a placed instance — the application half of
+/// Figure 4 step ④. `None` means "not modelled" (the instance is
+/// tracked by the platform but runs no DES logic).
+pub type InstanceFactory = Rc<dyn Fn(&Instance, &Site) -> Result<Option<Box<dyn Component>>>>;
+
+/// Called whenever the control plane stores a new plan for an app
+/// (deploy, update, shield/redeploy, remove — remove passes an empty
+/// plan). Lets applications track platform intent, e.g. fedtrain's
+/// coordinator learning the live trainer count.
+pub type PlanHook = Rc<dyn Fn(&str, &DeploymentPlan)>;
+
+/// One scripted lifecycle operation.
+#[derive(Debug, Clone)]
+pub enum LifecycleOp {
+    /// Submit a topology for a fresh application (§4.4.3).
+    Deploy(Topology),
+    /// Submit an updated topology: the controller diffs plans and only
+    /// touches changed nodes (incremental update, §4.4.3).
+    Update(Topology),
+    /// Crash a node: everything running on it dies silently; the
+    /// platform must NOTICE via missed heartbeats and shield it.
+    FailNode(AceId),
+    /// Remove a deployed application entirely.
+    Remove(String),
+}
+
+/// A lifecycle op pinned to a virtual time.
+#[derive(Debug, Clone)]
+pub struct ScenarioStep {
+    /// Virtual time (µs) the op is applied at.
+    pub at: SimTime,
+    /// The operation.
+    pub op: LifecycleOp,
+}
+
+/// A scripted application-lifecycle scenario (see the module docs for
+/// the yamlite file format).
+#[derive(Debug, Clone)]
+pub struct LifecycleScenario {
+    /// Ops in script order (times need not be sorted; the DES orders
+    /// them).
+    pub steps: Vec<ScenarioStep>,
+    /// Virtual horizon (µs): the run stops here.
+    pub duration: SimTime,
+}
+
+impl LifecycleScenario {
+    /// Parse a yamlite scenario document.
+    pub fn parse(src: &str) -> Result<LifecycleScenario> {
+        let doc = yamlite::parse(src).map_err(|e| anyhow!("{e}"))?;
+        Self::from_value(&doc)
+    }
+
+    /// Build a scenario from an already-parsed yamlite/JSON value.
+    pub fn from_value(doc: &Value) -> Result<LifecycleScenario> {
+        let duration = secs(
+            doc.get("duration")
+                .as_f64()
+                .context("scenario: missing 'duration' (virtual seconds)")?,
+        );
+        let ops = doc.get("ops").as_arr().context("scenario: missing 'ops'")?;
+        let mut steps = Vec::new();
+        for (i, o) in ops.iter().enumerate() {
+            let at = secs(
+                o.get("at")
+                    .as_f64()
+                    .with_context(|| format!("op #{i}: missing 'at' (virtual seconds)"))?,
+            );
+            let kind = o
+                .get("op")
+                .as_str()
+                .with_context(|| format!("op #{i}: missing 'op'"))?;
+            let op = match kind {
+                "deploy" | "update" => {
+                    let topo = Topology::from_value(o.get("topology"))
+                        .with_context(|| format!("op #{i}: bad 'topology'"))?;
+                    if kind == "deploy" {
+                        LifecycleOp::Deploy(topo)
+                    } else {
+                        LifecycleOp::Update(topo)
+                    }
+                }
+                "fail-node" => LifecycleOp::FailNode(AceId::parse(
+                    o.get("node")
+                        .as_str()
+                        .with_context(|| format!("op #{i}: missing 'node'"))?,
+                )),
+                "remove" => LifecycleOp::Remove(
+                    o.get("app")
+                        .as_str()
+                        .with_context(|| format!("op #{i}: missing 'app'"))?
+                        .to_string(),
+                ),
+                other => bail!("op #{i}: unknown op '{other}' (deploy|update|fail-node|remove)"),
+            };
+            steps.push(ScenarioStep { at, op });
+        }
+        if steps.is_empty() {
+            bail!("scenario has no ops");
+        }
+        Ok(LifecycleScenario { steps, duration })
+    }
+
+    /// App named by the first deploy/update op (CLI dispatch).
+    pub fn first_app(&self) -> Option<&str> {
+        self.steps.iter().find_map(|s| match &s.op {
+            LifecycleOp::Deploy(t) | LifecycleOp::Update(t) => Some(t.app.as_str()),
+            _ => None,
+        })
+    }
+}
+
+/// Timing knobs of the simulated platform services.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlPlaneConfig {
+    /// Agent heartbeat period (virtual seconds).
+    pub heartbeat_period_s: f64,
+    /// A node whose last heartbeat is older than this is shielded.
+    pub failure_timeout_s: f64,
+    /// Monitor sweep period (virtual seconds).
+    pub sweep_period_s: f64,
+}
+
+impl Default for ControlPlaneConfig {
+    fn default() -> Self {
+        ControlPlaneConfig {
+            heartbeat_period_s: 2.0,
+            failure_timeout_s: 5.0,
+            sweep_period_s: 5.0,
+        }
+    }
+}
+
+/// Deterministic audit trail of everything the control plane did —
+/// hashed by the lifecycle goldens.
+#[derive(Debug, Clone, Default)]
+pub struct LifecycleReport {
+    /// `(virtual µs, event)` in execution order.
+    pub events: Vec<(SimTime, String)>,
+    /// Component instances started by agents.
+    pub spawned: u64,
+    /// Component instances stopped (converged away, or died with their
+    /// node).
+    pub retired: u64,
+    /// Status reports ingested by the monitor tap.
+    pub status_reports: u64,
+    /// Nodes shielded after missed heartbeats, in shield order.
+    pub shielded: Vec<String>,
+    /// Shield-triggered re-placements that changed a plan.
+    pub redeploys: u64,
+}
+
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+impl LifecycleReport {
+    fn log(&mut self, at: SimTime, msg: String) {
+        self.events.push((at, msg));
+    }
+
+    /// FNV digest over the full audit trail (times, messages,
+    /// counters) — two runs of the same scenario must agree.
+    pub fn hash(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for (at, msg) in &self.events {
+            fnv(&mut h, &at.to_le_bytes());
+            fnv(&mut h, msg.as_bytes());
+        }
+        for v in [self.spawned, self.retired, self.status_reports, self.redeploys] {
+            fnv(&mut h, &v.to_le_bytes());
+        }
+        for s in &self.shielded {
+            fnv(&mut h, s.as_bytes());
+        }
+        h
+    }
+}
+
+/// Shared control-plane state, reachable from scenario `Call` closures
+/// and the simulated agents/monitor alike.
+struct PlaneState {
+    api: ApiServer,
+    infra: RefCell<Infrastructure>,
+    factory: InstanceFactory,
+    plan_hook: Option<PlanHook>,
+    /// app → (submitted topology, current plan).
+    apps: RefCell<BTreeMap<String, (Topology, DeploymentPlan)>>,
+    /// instance id → live component index.
+    registry: RefCell<BTreeMap<String, usize>>,
+    /// node → its agent's component index (removed when the node dies).
+    agents: RefCell<BTreeMap<AceId, usize>>,
+    report: RefCell<LifecycleReport>,
+    heartbeat_period: SimTime,
+    failure_timeout: SimTime,
+}
+
+/// Handle onto an installed control plane (post-run inspection).
+pub struct ControlPlane {
+    state: Rc<PlaneState>,
+}
+
+/// Status reports cross the wire as JSON (the threaded plane's format).
+struct StatusBody {
+    json: String,
+}
+
+/// Deployment instructions cross the wire as compose-style yamlite —
+/// the same documents `infra::agent::compose_instruction` renders for
+/// the threaded plane.
+struct InstructionBody {
+    doc: String,
+}
+
+/// Topic filter the CC monitor tap listens on: EC agents publish
+/// `cloud/ace/status/<node>` so reports ride the existing `cloud/#`
+/// uplink bridge.
+const MONITOR_FILTER: &str = "cloud/ace/status/#";
+
+impl ControlPlane {
+    /// Install the control plane into a NOT-yet-started runtime: one
+    /// node-agent component per registered node, a monitor tap on the
+    /// CC, every scenario op as a `Call` event at its time, and
+    /// recurring monitor sweeps until the scenario horizon. Drive the
+    /// runtime with `run_until(scenario.duration)` afterwards.
+    pub fn install(
+        rt: &mut GraphRuntime,
+        infra: Infrastructure,
+        factory: InstanceFactory,
+        plan_hook: Option<PlanHook>,
+        scenario: &LifecycleScenario,
+        cfg: ControlPlaneConfig,
+    ) -> Result<ControlPlane> {
+        anyhow::ensure!(
+            cfg.heartbeat_period_s > 0.0 && cfg.failure_timeout_s > 0.0 && cfg.sweep_period_s > 0.0,
+            "control-plane periods must be positive"
+        );
+        let state = Rc::new(PlaneState {
+            api: ApiServer::new(),
+            infra: RefCell::new(infra),
+            factory,
+            plan_hook,
+            apps: RefCell::new(BTreeMap::new()),
+            registry: RefCell::new(BTreeMap::new()),
+            agents: RefCell::new(BTreeMap::new()),
+            report: RefCell::new(LifecycleReport::default()),
+            heartbeat_period: secs(cfg.heartbeat_period_s),
+            failure_timeout: secs(cfg.failure_timeout_s),
+        });
+        // one agent per registered node (§4.3.1: agents are deployed at
+        // node registration, before any application exists)
+        let nodes: Vec<AceId> = state
+            .infra
+            .borrow()
+            .all_nodes()
+            .map(|(_, n)| n.id.clone())
+            .collect();
+        for node in nodes {
+            let site = site_of_node(&node)?;
+            let agent = NodeAgent {
+                state: state.clone(),
+                node: node.clone(),
+                site: site.clone(),
+                deploy_filter: deploy_topic(&node),
+                status_wire_topic: format!("cloud/{}", status_topic(&node)),
+                running: BTreeMap::new(),
+            };
+            let idx = rt.add(site, Box::new(agent));
+            state.agents.borrow_mut().insert(node, idx);
+        }
+        // the monitoring service's ingest point on the CC
+        let tap_node: Rc<str> = state
+            .infra
+            .borrow()
+            .cc
+            .nodes
+            .first()
+            .map(|n| n.id.leaf().into())
+            .unwrap_or_else(|| "monitor".into());
+        rt.add(
+            Site { cluster: ClusterRef::Cc, node: tap_node },
+            Box::new(MonitorTap { state: state.clone() }),
+        );
+        // scripted ops ride the closure lane at their virtual times
+        for step in &scenario.steps {
+            let st = state.clone();
+            let op = step.op.clone();
+            rt.at(step.at, move |sch, w| apply_op(&st, sch, w, op));
+        }
+        // recurring monitor sweeps (§4.2.1 failure shielding): ONE
+        // self-rescheduling Call keeps exactly one sweep event in the
+        // heap at a time, however long the scenario runs. Min 1 µs so
+        // a degenerate period can never loop in place.
+        let sweep = secs(cfg.sweep_period_s).max(1);
+        if sweep <= scenario.duration {
+            let st = state.clone();
+            let horizon = scenario.duration;
+            rt.at(sweep, move |sch, w| sweep_chain(st, sweep, horizon, sch, w));
+        }
+        Ok(ControlPlane { state })
+    }
+
+    /// The platform's entity store (plans, app states, node statuses).
+    pub fn api(&self) -> ApiServer {
+        self.state.api.clone()
+    }
+
+    /// Snapshot of the audit trail.
+    pub fn report(&self) -> LifecycleReport {
+        self.state.report.borrow().clone()
+    }
+
+    /// Current stored plan for `app`, if deployed.
+    pub fn plan(&self, app: &str) -> Option<DeploymentPlan> {
+        self.state.apps.borrow().get(app).map(|(_, p)| p.clone())
+    }
+
+    /// Snapshot of the (possibly shielded) infrastructure.
+    pub fn infra(&self) -> Infrastructure {
+        self.state.infra.borrow().clone()
+    }
+}
+
+fn apply_op(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, op: LifecycleOp) {
+    match op {
+        LifecycleOp::Deploy(topo) | LifecycleOp::Update(topo) => submit_topology(st, sch, w, topo),
+        LifecycleOp::FailNode(node) => fail_node(st, sch, w, &node),
+        LifecycleOp::Remove(app) => remove_app(st, sch, w, &app),
+    }
+}
+
+/// §4.4.3: submitting a topology deploys the app if new, otherwise
+/// triggers an incremental update (diff the plans, touch only changed
+/// nodes).
+fn submit_topology(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, topo: Topology) {
+    let now = sch.now();
+    let new_plan = match orchestrator::place(&topo, &st.infra.borrow()) {
+        Ok(p) => p,
+        Err(e) => {
+            st.report
+                .borrow_mut()
+                .log(now, format!("ERROR placing '{}' v{}: {e}", topo.app, topo.version));
+            return;
+        }
+    };
+    let old = st.apps.borrow().get(&topo.app).map(|(_, p)| p.clone());
+    let touched: Vec<AceId> = match &old {
+        None => {
+            st.report.borrow_mut().log(
+                now,
+                format!(
+                    "deploy '{}' v{}: {} instances placed",
+                    topo.app,
+                    topo.version,
+                    new_plan.instances.len()
+                ),
+            );
+            new_plan.nodes()
+        }
+        Some(old_plan) => {
+            let diff = diff_plans(old_plan, &new_plan);
+            let touched = diff.touched_nodes();
+            st.report.borrow_mut().log(
+                now,
+                format!(
+                    "update '{}' v{}: +{} -{} ~{}, {} nodes touched",
+                    topo.app,
+                    topo.version,
+                    diff.add.len(),
+                    diff.remove.len(),
+                    diff.replace.len(),
+                    touched.len()
+                ),
+            );
+            touched
+        }
+    };
+    store_plan(st, &topo.app, Some((topo.clone(), new_plan.clone())));
+    for node in &touched {
+        send_node_instruction(st, sch, w, node);
+    }
+    if let Some(hook) = &st.plan_hook {
+        hook(&topo.app, &new_plan);
+    }
+}
+
+/// Crash a node: the agent and every application instance on it die
+/// silently. The platform only learns of it through missed heartbeats.
+fn fail_node(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, node: &AceId) {
+    let now = sch.now();
+    st.report
+        .borrow_mut()
+        .log(now, format!("FAULT injected: node {node} crashes"));
+    if let Some(agent_idx) = st.agents.borrow_mut().remove(node) {
+        w.retire(agent_idx);
+    }
+    let Ok(site) = site_of_node(node) else { return };
+    let dead: Vec<(String, usize)> = st
+        .registry
+        .borrow()
+        .iter()
+        .filter(|(_, &idx)| w.component_site(idx).is_some_and(|s| *s == site))
+        .map(|(id, &idx)| (id.clone(), idx))
+        .collect();
+    for (id, idx) in dead {
+        w.retire(idx);
+        st.registry.borrow_mut().remove(&id);
+        let mut rep = st.report.borrow_mut();
+        rep.retired += 1;
+        rep.log(now, format!("instance '{id}' died with {node}"));
+    }
+}
+
+fn remove_app(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, app: &str) {
+    let now = sch.now();
+    let Some(plan) = st.apps.borrow().get(app).map(|(_, p)| p.clone()) else {
+        st.report
+            .borrow_mut()
+            .log(now, format!("ERROR remove '{app}': not deployed"));
+        return;
+    };
+    store_plan(st, app, None);
+    st.report.borrow_mut().log(
+        now,
+        format!("remove '{app}': {} instances wound down", plan.instances.len()),
+    );
+    for node in plan.nodes() {
+        send_node_instruction(st, sch, w, &node);
+    }
+    if let Some(hook) = &st.plan_hook {
+        hook(
+            app,
+            &DeploymentPlan { app: app.to_string(), version: plan.version, instances: Vec::new() },
+        );
+    }
+}
+
+/// Persist (or clear) an app's topology + plan in the state and the
+/// API server (the dashboard/CLI view of platform intent).
+fn store_plan(st: &Rc<PlaneState>, app: &str, entry: Option<(Topology, DeploymentPlan)>) {
+    match entry {
+        Some((topo, plan)) => {
+            st.api.put(kinds::PLAN, app, plan_to_value(&plan));
+            st.api.put(
+                kinds::APP,
+                app,
+                Value::obj(vec![
+                    ("state", Value::str("deployed")),
+                    ("version", Value::num(plan.version as f64)),
+                ]),
+            );
+            st.apps.borrow_mut().insert(app.to_string(), (topo, plan));
+        }
+        None => {
+            let _ = st.api.delete(kinds::PLAN, app);
+            let _ = st.api.delete(kinds::APP, app);
+            st.apps.borrow_mut().remove(app);
+        }
+    }
+}
+
+/// Figure 4 step ③: render the node's full convergent instruction
+/// (every instance of every stored app bound to it) as a compose
+/// document and deliver it on the node's cluster bus, charging the EC
+/// downlink — the platform reaches EC message services over the WAN.
+///
+/// Known limitation (shared with the threaded controller's
+/// `sync_node`): `compose_instruction` stamps ONE app label on the
+/// whole document, so when instances of several apps co-locate on a
+/// node, status reports attribute them all to the first app.
+fn send_node_instruction(
+    st: &Rc<PlaneState>,
+    sch: &mut SvcScheduler,
+    w: &mut SvcWorld,
+    node: &AceId,
+) {
+    let now = sch.now();
+    let mut services: Vec<(String, String, String)> = Vec::new();
+    let mut app_label = String::new();
+    for (app, (_topo, plan)) in st.apps.borrow().iter() {
+        for inst in &plan.instances {
+            if &inst.node == node {
+                services.push((inst.id.clone(), inst.component.clone(), inst.image.clone()));
+                if app_label.is_empty() {
+                    app_label = app.clone();
+                }
+            }
+        }
+    }
+    let doc = compose_instruction(&app_label, &services);
+    let Ok(site) = site_of_node(node) else {
+        st.report
+            .borrow_mut()
+            .log(now, format!("ERROR instruction for malformed node id {node}"));
+        return;
+    };
+    let bytes = doc.len() as u64;
+    let arrival = match site.cluster {
+        ClusterRef::Ec(k) if k < w.fabric.net.downlink.len() => {
+            w.fabric.net.downlink[k].send(now, bytes)
+        }
+        ClusterRef::Ec(_) => {
+            st.report
+                .borrow_mut()
+                .log(now, format!("ERROR no downlink for {node}'s cluster"));
+            return;
+        }
+        ClusterRef::Cc => now,
+    };
+    let topic: Rc<str> = deploy_topic(node).into();
+    let body: Rc<dyn Any> = Rc::new(InstructionBody { doc });
+    let msg = GraphMsg { topic, from: usize::MAX, wire_bytes: bytes, body };
+    sch.push_at(arrival, Event::Bridge { origin: ClusterRef::Cc, to: site.cluster, msg });
+    st.report.borrow_mut().log(
+        now,
+        format!("instruction → {node} ({} services, {bytes} B)", services.len()),
+    );
+}
+
+/// Run one monitor sweep, then re-arm the next one until the horizon
+/// (a single outstanding boxed Call per control plane).
+fn sweep_chain(
+    st: Rc<PlaneState>,
+    period: SimTime,
+    horizon: SimTime,
+    sch: &mut SvcScheduler,
+    w: &mut SvcWorld,
+) {
+    monitor_sweep(&st, sch, w);
+    let next = sch.now() + period;
+    if next <= horizon {
+        sch.push_at(
+            next,
+            Event::Call(Box::new(move |sch2: &mut SvcScheduler, w2: &mut SvcWorld| {
+                sweep_chain(st, period, horizon, sch2, w2)
+            })),
+        );
+    }
+}
+
+/// §4.2.1 monitoring + shielding: nodes whose heartbeat went stale are
+/// marked Failed; every deployed app is then re-placed around them and
+/// only the changed nodes receive new instructions.
+fn monitor_sweep(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld) {
+    let now = sch.now();
+    let now_ms = to_millis(now);
+    let timeout_ms = to_millis(st.failure_timeout);
+    let mut shielded: Vec<AceId> = Vec::new();
+    {
+        let mut infra = st.infra.borrow_mut();
+        let ready: Vec<AceId> = infra
+            .all_nodes()
+            .filter(|(_, n)| n.status == NodeStatus::Ready)
+            .map(|(_, n)| n.id.clone())
+            .collect();
+        for id in ready {
+            let key = id.to_string().replace('/', ".");
+            let last = st
+                .api
+                .get(kinds::NODE_STATUS, &key)
+                .and_then(|e| e.doc.get("last_seen_ms").as_f64());
+            let stale = match last {
+                Some(ms) => ms < now_ms - timeout_ms,
+                // never seen at all: give it one full timeout of grace
+                None => now_ms > timeout_ms,
+            };
+            if stale {
+                if let Some(n) = infra.find_node_mut(&id) {
+                    n.status = NodeStatus::Failed;
+                }
+                shielded.push(id);
+            }
+        }
+    }
+    if shielded.is_empty() {
+        return;
+    }
+    for id in &shielded {
+        let mut rep = st.report.borrow_mut();
+        rep.shielded.push(id.to_string());
+        rep.log(now, format!("monitor: heartbeat lost, node {id} shielded"));
+    }
+    let apps: Vec<(String, Topology, DeploymentPlan)> = st
+        .apps
+        .borrow()
+        .iter()
+        .map(|(a, (t, p))| (a.clone(), t.clone(), p.clone()))
+        .collect();
+    for (app, topo, old_plan) in apps {
+        let new_plan = match orchestrator::place(&topo, &st.infra.borrow()) {
+            Ok(p) => p,
+            Err(e) => {
+                st.report
+                    .borrow_mut()
+                    .log(now, format!("ERROR re-placing '{app}' after shield: {e}"));
+                continue;
+            }
+        };
+        let diff = diff_plans(&old_plan, &new_plan);
+        if diff.is_noop() {
+            continue;
+        }
+        let touched = diff.touched_nodes();
+        {
+            let mut rep = st.report.borrow_mut();
+            rep.redeploys += 1;
+            rep.log(
+                now,
+                format!(
+                    "shield/redeploy '{app}': +{} -{} ~{} across {} nodes",
+                    diff.add.len(),
+                    diff.remove.len(),
+                    diff.replace.len(),
+                    touched.len()
+                ),
+            );
+        }
+        store_plan(st, &app, Some((topo, new_plan.clone())));
+        for node in touched {
+            send_node_instruction(st, sch, w, &node);
+        }
+        if let Some(hook) = &st.plan_hook {
+            hook(&app, &new_plan);
+        }
+    }
+}
+
+/// What the agent believes one of its instances looks like.
+#[derive(Debug, Clone, PartialEq)]
+struct RunningInst {
+    component: String,
+    image: String,
+    app: String,
+}
+
+/// The simulated node agent (§4.3.1): subscribed to its node's deploy
+/// topic, converges running instances to each instruction, heartbeats
+/// its status.
+struct NodeAgent {
+    state: Rc<PlaneState>,
+    node: AceId,
+    site: Site,
+    deploy_filter: String,
+    status_wire_topic: String,
+    running: BTreeMap<String, RunningInst>,
+}
+
+impl NodeAgent {
+    fn report_status(&self, ctx: &mut Ctx) {
+        let instances: Vec<Value> = self
+            .running
+            .iter()
+            .map(|(id, r)| {
+                Value::obj(vec![
+                    ("instance", Value::str(id)),
+                    ("component", Value::str(&r.component)),
+                    ("app", Value::str(&r.app)),
+                    ("state", Value::str("running")),
+                ])
+            })
+            .collect();
+        let status = Value::obj(vec![
+            ("node", Value::str(self.node.to_string())),
+            ("instances", Value::Arr(instances)),
+        ]);
+        let payload = json::to_string(&status);
+        let bytes = payload.len() as u64;
+        ctx.publish(&self.status_wire_topic, bytes, Rc::new(StatusBody { json: payload }));
+    }
+}
+
+impl Component for NodeAgent {
+    fn subscriptions(&self) -> Vec<String> {
+        vec![self.deploy_filter.clone()]
+    }
+
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        // first heartbeat at registration, then periodically
+        self.report_status(ctx);
+        ctx.set_timer(self.state.heartbeat_period, 0);
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
+        let Some(ib) = msg.body_as::<InstructionBody>() else {
+            return;
+        };
+        let Ok(doc) = yamlite::parse(&ib.doc) else {
+            return; // malformed instruction: ignored, status unchanged
+        };
+        let mut target: BTreeMap<String, RunningInst> = BTreeMap::new();
+        if let Some(obj) = doc.get("services").as_obj() {
+            for (name, svc) in obj {
+                target.insert(
+                    name.clone(),
+                    RunningInst {
+                        component: svc
+                            .get("labels")
+                            .get("ace.component")
+                            .as_str()
+                            .unwrap_or(name)
+                            .to_string(),
+                        image: svc.get("image").as_str().unwrap_or("").to_string(),
+                        app: svc.get("labels").get("ace.app").as_str().unwrap_or("").to_string(),
+                    },
+                );
+            }
+        }
+        // converge DOWN: instances absent from the instruction (or with
+        // a changed image — in-place redeploy) are stopped
+        let stale: Vec<String> = self
+            .running
+            .iter()
+            .filter(|(id, r)| {
+                target
+                    .get(id.as_str())
+                    .is_none_or(|t| t.image != r.image || t.component != r.component)
+            })
+            .map(|(id, _)| id.clone())
+            .collect();
+        for id in stale {
+            self.running.remove(&id);
+            let st = self.state.clone();
+            let node = self.node.clone();
+            // the agent cannot mutate the component table from inside
+            // its own callback: defer to the Call lane (same virtual
+            // time, later sequence)
+            ctx.call(0, move |sch, w| {
+                if let Some(idx) = st.registry.borrow_mut().remove(&id) {
+                    if w.retire(idx) {
+                        let mut rep = st.report.borrow_mut();
+                        rep.retired += 1;
+                        rep.log(sch.now(), format!("agent {node}: stopped '{id}'"));
+                    }
+                }
+            });
+        }
+        // converge UP: new instances are built through the factory
+        for (id, t) in &target {
+            if self.running.contains_key(id) {
+                continue;
+            }
+            self.running.insert(id.clone(), t.clone());
+            let st = self.state.clone();
+            let inst = Instance {
+                id: id.clone(),
+                component: t.component.clone(),
+                node: self.node.clone(),
+                image: t.image.clone(),
+            };
+            let site = self.site.clone();
+            let node = self.node.clone();
+            ctx.call(0, move |sch, w| match (st.factory)(&inst, &site) {
+                Ok(Some(c)) => {
+                    let idx = w.spawn(sch, site.clone(), c);
+                    st.registry.borrow_mut().insert(inst.id.clone(), idx);
+                    let mut rep = st.report.borrow_mut();
+                    rep.spawned += 1;
+                    let line = format!("agent {node}: started '{}' ({})", inst.id, inst.image);
+                    rep.log(sch.now(), line);
+                }
+                Ok(None) => {
+                    let line = format!("agent {node}: '{}' not modelled, skipped", inst.id);
+                    st.report.borrow_mut().log(sch.now(), line);
+                }
+                Err(e) => {
+                    st.report
+                        .borrow_mut()
+                        .log(sch.now(), format!("ERROR agent {node}: spawning '{}': {e}", inst.id));
+                }
+            });
+        }
+        // immediate status report reflecting the convergence
+        self.report_status(ctx);
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
+        self.report_status(ctx);
+        ctx.set_timer(self.state.heartbeat_period, 0);
+    }
+}
+
+/// The monitoring service's ingest point (§4.2.1) as a CC component:
+/// folds every status report into the API server with a VIRTUAL-time
+/// heartbeat stamp the shielding sweep reads.
+struct MonitorTap {
+    state: Rc<PlaneState>,
+}
+
+impl Component for MonitorTap {
+    fn subscriptions(&self) -> Vec<String> {
+        vec![MONITOR_FILTER.to_string()]
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
+        let Some(sb) = msg.body_as::<StatusBody>() else {
+            return;
+        };
+        let Ok(v) = json::parse(&sb.json) else {
+            return;
+        };
+        let node = v.get("node").as_str().unwrap_or("?").to_string();
+        let key = node.replace('/', ".");
+        let Value::Obj(mut obj) = v else {
+            return;
+        };
+        obj.insert("last_seen_ms".to_string(), Value::num(to_millis(ctx.now())));
+        self.state.api.put(kinds::NODE_STATUS, &key, Value::Obj(obj));
+        self.state.report.borrow_mut().status_reports += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SCENARIO: &str = "
+duration: 20
+ops:
+  - at: 0
+    op: deploy
+    topology:
+      app: mini
+      version: 1
+      components:
+        - name: solo
+          image: img:1
+          location: cloud
+  - at: 5
+    op: update
+    topology:
+      app: mini
+      version: 2
+      components:
+        - name: solo
+          image: img:2
+          location: cloud
+  - at: 10
+    op: fail-node
+    node: infra-u/ec-1/rpi1
+  - at: 15
+    op: remove
+    app: mini
+";
+
+    #[test]
+    fn scenario_parses_all_op_kinds() {
+        let s = LifecycleScenario::parse(SCENARIO).unwrap();
+        assert_eq!(s.duration, secs(20.0));
+        assert_eq!(s.steps.len(), 4);
+        assert_eq!(s.first_app(), Some("mini"));
+        assert!(matches!(&s.steps[0].op, LifecycleOp::Deploy(t) if t.version == 1));
+        assert!(matches!(&s.steps[1].op, LifecycleOp::Update(t) if t.version == 2
+            && t.component("solo").unwrap().image == "img:2"));
+        assert!(matches!(&s.steps[2].op, LifecycleOp::FailNode(n)
+            if n.to_string() == "infra-u/ec-1/rpi1"));
+        assert!(matches!(&s.steps[3].op, LifecycleOp::Remove(a) if a == "mini"));
+        assert_eq!(s.steps[2].at, secs(10.0));
+    }
+
+    #[test]
+    fn scenario_rejects_garbage() {
+        assert!(LifecycleScenario::parse("duration: 5\nops: []\n").is_err());
+        assert!(LifecycleScenario::parse("ops:\n  - at: 0\n    op: deploy\n").is_err());
+        let bad_op = "
+duration: 5
+ops:
+  - at: 0
+    op: reboot
+";
+        let err = LifecycleScenario::parse(bad_op).unwrap_err().to_string();
+        assert!(err.contains("unknown op"), "{err}");
+        let no_topo = "
+duration: 5
+ops:
+  - at: 0
+    op: deploy
+";
+        assert!(LifecycleScenario::parse(no_topo).is_err());
+    }
+}

@@ -37,6 +37,18 @@
 //! VALUE in the scheduler heap, topics are interned `Rc<str>`s, and
 //! `route` reuses scratch buffers, so publish→deliver performs zero
 //! heap allocations (enforced by `tests/zero_alloc.rs`).
+//!
+//! Lifecycle (DESIGN.md §Control-plane): component graphs are no longer
+//! frozen at deploy time. [`SvcWorld::spawn`] / [`SvcWorld::retire`]
+//! add and remove components MID-RUN — a retired component id is never
+//! reused, its subscriptions are unindexed from the topic trie, and
+//! in-flight events addressed to it are dropped on delivery, so
+//! components untouched by a lifecycle op keep their exact `(at, seq)`
+//! event trajectory. The [`lifecycle`] module drives this from scripted
+//! scenarios through a virtual-time control plane (controller → node
+//! agents → monitor, Figure 4 steps ②→④).
+
+pub mod lifecycle;
 
 use crate::deploy::{DeploymentPlan, Instance};
 use crate::des::{Scheduler, SimEvent};
@@ -68,37 +80,45 @@ impl ClusterRef {
 /// Where a component instance runs: its cluster + node (leaf name).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Site {
+    /// Which cluster bus the instance is bound to.
     pub cluster: ClusterRef,
+    /// Node leaf name within the cluster (e.g. `rpi1`).
     pub node: Rc<str>,
 }
 
-/// Derive a site from a placed instance's hierarchical node id
+/// Derive a site from a hierarchical node id
 /// (`infra-x/ec-N/node` → EC N-1; `infra-x/cc/node` → CC).
-pub fn site_of(inst: &Instance) -> Result<Site> {
-    let cluster_id = inst
-        .node
+pub fn site_of_node(node: &crate::util::AceId) -> Result<Site> {
+    let cluster_id = node
         .parent()
-        .ok_or_else(|| anyhow!("instance '{}': node id too shallow", inst.id))?;
+        .ok_or_else(|| anyhow!("node id '{node}' too shallow"))?;
     let leaf = cluster_id.leaf().to_string();
     let cluster = if leaf == "cc" {
         ClusterRef::Cc
     } else if let Some(n) = leaf.strip_prefix("ec-") {
         let n: usize = n
             .parse()
-            .map_err(|_| anyhow!("instance '{}': bad EC id '{leaf}'", inst.id))?;
+            .map_err(|_| anyhow!("node '{node}': bad EC id '{leaf}'"))?;
         if n == 0 {
-            bail!("instance '{}': EC ids start at 1", inst.id);
+            bail!("node '{node}': EC ids start at 1");
         }
         ClusterRef::Ec(n - 1)
     } else {
-        bail!("instance '{}': unknown cluster '{leaf}'", inst.id);
+        bail!("node '{node}': unknown cluster '{leaf}'");
     };
-    Ok(Site { cluster, node: inst.node.leaf().into() })
+    Ok(Site { cluster, node: node.leaf().into() })
+}
+
+/// Derive a site from a placed instance's node id (see
+/// [`site_of_node`]).
+pub fn site_of(inst: &Instance) -> Result<Site> {
+    site_of_node(&inst.node).map_err(|e| anyhow!("instance '{}': {e}", inst.id))
 }
 
 /// A message travelling the service graph.
 #[derive(Clone)]
 pub struct GraphMsg {
+    /// Interned topic name.
     pub topic: Rc<str>,
     /// Component index of the sender (see [`GraphRuntime::deploy`]).
     pub from: usize,
@@ -143,6 +163,7 @@ fn cidx(c: ClusterRef, num_ecs: usize) -> usize {
 /// The transport fabric: per-cluster subscription tables, bridge rules,
 /// and the simnet links that charge virtual time and count BWC bytes.
 pub struct Fabric {
+    /// The simulated links (LAN per EC, WAN pairs to the CC).
     pub net: EdgeCloudNet,
     num_ecs: usize,
     /// Per cluster bus: ECs 0..num_ecs-1, then the CC at index num_ecs.
@@ -153,6 +174,10 @@ pub struct Fabric {
     /// cluster), so bridge matching is trie-indexed too.
     bridge_subs: Vec<TopicTrie<ClusterRef>>,
     sites: Vec<Site>,
+    /// Per-component subscription filters, parallel to `sites` — kept
+    /// so [`SvcWorld::retire`] can unindex exactly the retired
+    /// component's trie entries (cleared on retirement).
+    sub_filters: Vec<Vec<String>>,
     /// Interned published topics: steady-state publishes of a known
     /// topic reuse one `Rc<str>` (refcount bump) instead of allocating
     /// a fresh topic string per message. Bounded by the number of
@@ -308,6 +333,72 @@ pub struct SvcWorld {
 }
 
 impl SvcWorld {
+    /// Bind one component at `site` WITHOUT scheduling its `on_start`:
+    /// registers its subscriptions on the site's cluster bus and
+    /// returns the component index. Setup-time path —
+    /// [`GraphRuntime::add`]/[`GraphRuntime::deploy`] use it and
+    /// `on_start` fires when the runtime starts; mid-run callers want
+    /// [`SvcWorld::spawn`] instead.
+    pub fn bind(&mut self, site: Site, comp: Box<dyn Component>) -> usize {
+        let idx = self.comps.len();
+        let ci = cidx(site.cluster, self.fabric.num_ecs);
+        let filters = comp.subscriptions();
+        for filter in &filters {
+            self.fabric.subs[ci].insert(filter, idx);
+        }
+        self.fabric.sub_filters.push(filters);
+        self.fabric.sites.push(site);
+        self.comps.push(Some(comp));
+        idx
+    }
+
+    /// Add a component to a RUNNING graph: bind it and deliver its
+    /// `on_start` at the current virtual time (Figure 4 step ④, an
+    /// agent bringing an instance up mid-run). New subscriptions get
+    /// fresh (higher) trie insertion sequences, so existing
+    /// subscribers' delivery order — and therefore their `(at, seq)`
+    /// trajectories — are untouched.
+    pub fn spawn(&mut self, sch: &mut SvcScheduler, site: Site, comp: Box<dyn Component>) -> usize {
+        let idx = self.bind(site, comp);
+        sch.push_at(sch.now(), Event::Start { target: idx });
+        idx
+    }
+
+    /// Remove a live component: its subscriptions are unindexed from
+    /// the topic trie (targeted path removals) and its id is RETIRED —
+    /// never reused, so in-flight events addressed to it are dropped on
+    /// delivery instead of reaching a stranger. Untouched components
+    /// keep their trie insertion sequences, hence their exact delivery
+    /// order. Returns false if `idx` was never bound or already
+    /// retired.
+    pub fn retire(&mut self, idx: usize) -> bool {
+        if self.comps.get(idx).is_none_or(|c| c.is_none()) {
+            return false;
+        }
+        self.comps[idx] = None;
+        let ci = cidx(self.fabric.sites[idx].cluster, self.fabric.num_ecs);
+        let filters = std::mem::take(&mut self.fabric.sub_filters[idx]);
+        for filter in &filters {
+            self.fabric.subs[ci].remove(filter, |&v| v == idx);
+        }
+        true
+    }
+
+    /// Is component `idx` bound and not retired?
+    pub fn is_live(&self, idx: usize) -> bool {
+        self.comps.get(idx).is_some_and(|c| c.is_some())
+    }
+
+    /// Number of live (non-retired) components.
+    pub fn live_count(&self) -> usize {
+        self.comps.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// The site a component was bound at (also for retired ids).
+    pub fn component_site(&self, idx: usize) -> Option<&Site> {
+        self.fabric.sites.get(idx)
+    }
+
     /// Run one component callback with a `Ctx` over the world. The
     /// component is taken out for the duration so the callback can
     /// borrow the rest of the world mutably.
@@ -364,6 +455,21 @@ impl Ctx<'_> {
             .push_after(delay, Event::Timer { target: self.self_idx, token });
     }
 
+    /// Schedule a raw closure over the whole world after `delay` µs —
+    /// the boxed [`Event::Call`] lane. This is the lifecycle escape
+    /// hatch: a component (e.g. a node agent applying a deployment
+    /// instruction) cannot mutate the component table from inside its
+    /// own callback, so it defers the [`SvcWorld::spawn`] /
+    /// [`SvcWorld::retire`] to a `Call` event at the same virtual time
+    /// (later sequence). Rare ops only; not for per-message hot paths.
+    pub fn call(
+        &mut self,
+        delay: SimTime,
+        f: impl FnOnce(&mut SvcScheduler, &mut SvcWorld) + 'static,
+    ) {
+        self.sch.push_after(delay, Event::Call(Box::new(f)));
+    }
+
     /// Read-only view of the network (for introspection/policies).
     pub fn net(&self) -> &EdgeCloudNet {
         &self.fabric.net
@@ -399,6 +505,7 @@ impl GraphRuntime {
                     subs: (0..=num_ecs).map(|_| TopicTrie::new()).collect(),
                     bridge_subs,
                     sites: Vec::new(),
+                    sub_filters: Vec::new(),
                     topics: HashSet::new(),
                     target_scratch: Vec::new(),
                     bridge_scratch: Vec::new(),
@@ -412,26 +519,31 @@ impl GraphRuntime {
     }
 
     /// Bind one component at `site`; registers its subscriptions on the
-    /// site's cluster bus. Returns the component index.
+    /// site's cluster bus. Returns the component index. Setup-time
+    /// path (`on_start` fires when the runtime starts); for mid-run
+    /// additions use [`SvcWorld::spawn`] from a [`Event::Call`]
+    /// closure.
     pub fn add(&mut self, site: Site, comp: Box<dyn Component>) -> usize {
-        let idx = self.world.comps.len();
-        let ci = cidx(site.cluster, self.world.fabric.num_ecs);
-        for filter in comp.subscriptions() {
-            self.world.fabric.subs[ci].insert(&filter, idx);
-        }
-        self.world.fabric.sites.push(site);
-        self.world.comps.push(Some(comp));
-        idx
+        self.world.bind(site, comp)
+    }
+
+    /// Retire a live component mid-run (see [`SvcWorld::retire`]).
+    pub fn remove(&mut self, idx: usize) -> bool {
+        self.world.retire(idx)
     }
 
     /// Instantiate every placed instance of `plan` through `factory`
     /// (Figure 4 step ②: plan → per-node components). The factory may
     /// return `None` for instances the experiment does not model.
+    /// Pre-sizes the event heap from the plan's instance count (each
+    /// instance keeps a bounded handful of events in flight — timers
+    /// plus fan-out deliveries), so steady state never regrows it.
     /// Returns the number of components deployed.
     pub fn deploy<F>(&mut self, plan: &DeploymentPlan, mut factory: F) -> Result<usize>
     where
         F: FnMut(&Instance, &Site) -> Result<Option<Box<dyn Component>>>,
     {
+        self.sch.reserve_events(plan.instances.len() * 8 + 64);
         let mut n = 0;
         for inst in &plan.instances {
             let site = site_of(inst)?;
@@ -477,20 +589,35 @@ impl GraphRuntime {
         self.sch.run_until(&mut self.world, until)
     }
 
+    /// Current virtual time (µs).
     pub fn now(&self) -> SimTime {
         self.sch.now()
     }
 
+    /// Total DES events executed so far.
     pub fn executed(&self) -> u64 {
         self.sch.executed()
     }
 
+    /// The simulated network (links + byte counters).
     pub fn net(&self) -> &EdgeCloudNet {
         &self.world.fabric.net
     }
 
+    /// The transport fabric (subscription tables + bridge counters).
     pub fn fabric(&self) -> &Fabric {
         &self.world.fabric
+    }
+
+    /// The component world (live-component queries for tests/tools).
+    pub fn world(&self) -> &SvcWorld {
+        &self.world
+    }
+
+    /// Event-heap capacity (pre-sizing / no-regrowth assertions; see
+    /// `des::Scheduler::reserve_events`).
+    pub fn event_heap_capacity(&self) -> usize {
+        self.sch.heap_capacity()
     }
 }
 
@@ -652,6 +779,129 @@ mod tests {
         r.add(site(ClusterRef::Cc, "gpu-ws"), Box::new(Ticker { seen: seen.clone() }));
         r.run(1000);
         assert_eq!(*seen.borrow(), vec![(100, 1), (200, 2), (300, 3)]);
+    }
+
+    /// Publishes one message every `period` µs, forever.
+    struct Pulser {
+        topic: String,
+        period: SimTime,
+        horizon: SimTime,
+    }
+
+    impl Component for Pulser {
+        fn subscriptions(&self) -> Vec<String> {
+            Vec::new()
+        }
+        fn on_start(&mut self, ctx: &mut Ctx) {
+            ctx.set_timer(self.period, 0);
+        }
+        fn on_message(&mut self, _ctx: &mut Ctx, _msg: &GraphMsg) {}
+        fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
+            if ctx.now() > self.horizon {
+                return;
+            }
+            ctx.publish(&self.topic, 0, Rc::new(()));
+            ctx.set_timer(self.period, 0);
+        }
+    }
+
+    #[test]
+    fn retired_component_stops_receiving_and_id_is_never_reused() {
+        let mut r = rt(0.0);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        let probe = r.add(
+            site(ClusterRef::Ec(0), "rpi1"),
+            Box::new(Probe { filters: vec!["a/#".into()], log: log.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Ec(0), "rpi1"),
+            Box::new(Pulser { topic: "a/x".into(), period: 1000, horizon: 10_000 }),
+        );
+        // retire the probe at t=5500: deliveries after that are dropped
+        r.at(5500, move |_sch, w: &mut SvcWorld| {
+            assert!(w.retire(probe));
+            assert!(!w.retire(probe), "double retire must be a no-op");
+        });
+        r.run(100_000);
+        let seen = log.borrow().len();
+        assert_eq!(seen, 5, "only pre-retire pulses may arrive: {seen}");
+        assert!(!r.world().is_live(probe));
+        // a spawn after the retirement gets a FRESH id
+        let log2 = Rc::new(RefCell::new(Vec::new()));
+        let l2 = log2.clone();
+        r.at(r.now(), move |sch, w: &mut SvcWorld| {
+            let idx = w.spawn(
+                sch,
+                Site { cluster: ClusterRef::Ec(0), node: "rpi1".into() },
+                Box::new(Probe { filters: vec!["a/#".into()], log: l2.clone() }),
+            );
+            assert!(idx > probe, "retired ids are never reused");
+        });
+        r.run(100);
+    }
+
+    #[test]
+    fn spawned_component_starts_and_receives_mid_run() {
+        let mut r = rt(0.0);
+        let log = Rc::new(RefCell::new(Vec::new()));
+        r.add(
+            site(ClusterRef::Ec(0), "rpi1"),
+            Box::new(Pulser { topic: "a/x".into(), period: 1000, horizon: 10_000 }),
+        );
+        let l = log.clone();
+        r.at(4500, move |sch, w: &mut SvcWorld| {
+            w.spawn(
+                sch,
+                Site { cluster: ClusterRef::Ec(0), node: "rpi1".into() },
+                Box::new(Probe { filters: vec!["a/#".into()], log: l.clone() }),
+            );
+        });
+        r.run(100_000);
+        // pulses at 5000..=10000 arrive; 1000..=4000 predate the spawn
+        assert_eq!(log.borrow().len(), 6);
+        assert!(log.borrow().iter().all(|&(at, _)| at >= 5000));
+    }
+
+    #[test]
+    fn lifecycle_ops_do_not_disturb_untouched_component_trajectories() {
+        // the acceptance property: spawning/retiring components in EC 1
+        // leaves an EC-0 component's (time, topic) delivery log
+        // byte-identical to a run without any lifecycle op
+        let run = |with_ops: bool| {
+            let mut r = rt(0.0);
+            let log = Rc::new(RefCell::new(Vec::new()));
+            r.add(
+                site(ClusterRef::Ec(0), "rpi1"),
+                Box::new(Probe { filters: vec!["a/#".into()], log: log.clone() }),
+            );
+            r.add(
+                site(ClusterRef::Ec(0), "rpi1"),
+                Box::new(Pulser { topic: "a/x".into(), period: 700, horizon: 20_000 }),
+            );
+            // bystander traffic in EC 1 that the ops churn
+            let victim = r.add(
+                site(ClusterRef::Ec(1), "rpi1"),
+                Box::new(Pulser { topic: "b/x".into(), period: 500, horizon: 20_000 }),
+            );
+            if with_ops {
+                r.at(6000, move |_sch, w: &mut SvcWorld| {
+                    w.retire(victim);
+                });
+                r.at(9000, |sch, w: &mut SvcWorld| {
+                    w.spawn(
+                        sch,
+                        Site { cluster: ClusterRef::Ec(1), node: "rpi2".into() },
+                        Box::new(Pulser { topic: "b/x".into(), period: 300, horizon: 20_000 }),
+                    );
+                });
+            }
+            r.run(1_000_000);
+            log.borrow().clone()
+        };
+        let quiet = run(false);
+        let churned = run(true);
+        assert!(!quiet.is_empty());
+        assert_eq!(quiet, churned, "untouched trajectory must be identical");
     }
 
     #[test]

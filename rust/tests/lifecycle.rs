@@ -1,0 +1,206 @@
+//! Acceptance goldens for the virtual-time control plane (DESIGN.md
+//! §Control-plane): a scripted deploy → incremental-update →
+//! node-failure → shield/redeploy → remove scenario replays
+//! bit-identically, and both applications survive lifecycle ops
+//! mid-run. (The untouched-component `(at, seq)` trajectory property
+//! is pinned by unit tests in `svcgraph::tests`.)
+//!
+//! No artifacts required (synthetic compute).
+
+use ace::app::fedtrain::{run_fedtrain_scenario, FedConfig};
+use ace::app::videoquery::{run_scenario, CellConfig, Compute, Paradigm, ServiceTimes};
+use ace::metrics::CellMetrics;
+use ace::svcgraph::lifecycle::{LifecycleReport, LifecycleScenario};
+use ace::topology::Topology;
+
+/// The canonical lifecycle script shipped with the CLI
+/// (`ace svcrun --scenario scenarios/videoquery_lifecycle.yaml`):
+/// parsing it here keeps the example honest.
+const VIDEOQUERY_SCENARIO: &str = include_str!("../scenarios/videoquery_lifecycle.yaml");
+
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+}
+
+/// Trajectory digest: everything observable from a scenario run — the
+/// control plane's full audit trail plus the application metrics.
+fn outcome_hash(m: &CellMetrics, report: &LifecycleReport) -> u64 {
+    let mut h = report.hash();
+    fnv(&mut h, &m.crops.to_le_bytes());
+    fnv(&mut h, &m.bwc_bytes.to_le_bytes());
+    fnv(&mut h, &m.edge_decided.to_le_bytes());
+    fnv(&mut h, &m.cloud_decided.to_le_bytes());
+    for v in [m.f1.tp, m.f1.fp, m.f1.fn_, m.f1.tn] {
+        fnv(&mut h, &v.to_le_bytes());
+    }
+    fnv(&mut h, &m.eil.mean().to_bits().to_le_bytes());
+    h
+}
+
+fn vq_cfg() -> CellConfig {
+    CellConfig {
+        paradigm: Paradigm::AceBp,
+        interval_s: 0.3,
+        duration_s: 40.0, // sampling horizon; the scenario runs to 44
+        seed: 7,
+        ..Default::default()
+    }
+}
+
+fn run_vq() -> (CellMetrics, LifecycleReport) {
+    let scenario = LifecycleScenario::parse(VIDEOQUERY_SCENARIO).unwrap();
+    let out = run_scenario(
+        vq_cfg(),
+        ServiceTimes::synthetic(),
+        Compute::Synthetic { target_bias: 0.05 },
+        &scenario,
+    )
+    .unwrap();
+    (out.metrics, out.report)
+}
+
+#[test]
+fn videoquery_lifecycle_golden_is_deterministic_and_complete() {
+    let (m1, r1) = run_vq();
+
+    // the app actually ran: crops were produced and decided both ways
+    assert!(m1.crops > 50, "only {} crops", m1.crops);
+    assert!(m1.edge_decided > 0);
+    assert!(m1.bwc_bytes > 0, "platform + app traffic must cross the WAN");
+
+    // ② deploy: 27 modelled instances came up through agents
+    assert!(r1.spawned >= 27, "spawned only {}", r1.spawned);
+    // ③ incremental update: the od image bump redeployed exactly the
+    // camera nodes (9 replaces show up as retire+spawn pairs)
+    assert!(
+        r1.events.iter().any(|(_, e)| e.contains("update 'videoquery' v2")),
+        "update op missing from the audit trail"
+    );
+    let od_restarts = r1
+        .events
+        .iter()
+        .filter(|(_, e)| e.contains("started") && e.contains("ace/object-detector:2"))
+        .count();
+    assert_eq!(od_restarts, 9, "every camera node must restart od on v2");
+
+    // ④ failure → shield → redeploy: the minipc crash is noticed via
+    // missed heartbeats, the node is shielded, eoc/lic re-place
+    assert!(
+        r1.shielded.iter().any(|n| n.ends_with("ec-1/minipc")),
+        "minipc not shielded: {:?}",
+        r1.shielded
+    );
+    assert!(r1.redeploys >= 1, "shield must trigger a redeploy");
+    assert!(
+        r1.events
+            .iter()
+            .any(|(_, e)| e.contains("shield/redeploy 'videoquery'")),
+        "redeploy missing from the audit trail"
+    );
+    // the re-placed eoc came up on a surviving EC-1 node (an rpi)
+    assert!(
+        r1.events
+            .iter()
+            .any(|(at, e)| *at > ace::util::secs(24.0)
+                && e.contains("started 'eoc-ec-1-")
+                && !e.contains("minipc")),
+        "eoc was not re-placed onto a surviving node"
+    );
+
+    // remove: everything the agents started was wound down again
+    // (instances that died with the node count as retired too)
+    assert_eq!(r1.spawned, r1.retired, "leaked instances after remove");
+    assert!(r1.status_reports > 100, "heartbeats must keep flowing");
+
+    // the golden: a second full run produces the identical trajectory
+    let (m2, r2) = run_vq();
+    assert_eq!(
+        outcome_hash(&m1, &r1),
+        outcome_hash(&m2, &r2),
+        "lifecycle scenario must replay bit-identically"
+    );
+    assert_eq!(r1.events, r2.events);
+}
+
+fn fed_topo(replicas: usize, version: u64) -> Topology {
+    Topology::parse(&format!(
+        "
+app: fedtrain
+version: {version}
+components:
+  - name: trainer
+    image: ace/fl-trainer:1
+    location: edge
+    replicas: {replicas}
+    resources:
+      cpu: 2000
+      mem: 1024
+    connections: [coordinator]
+  - name: coordinator
+    image: ace/fl-coordinator:1
+    location: cloud
+    resources:
+      cpu: 4000
+      mem: 2048
+    connections: []
+"
+    ))
+    .unwrap()
+}
+
+fn fed_scenario() -> LifecycleScenario {
+    use ace::svcgraph::lifecycle::{LifecycleOp, ScenarioStep};
+    use ace::util::secs;
+    LifecycleScenario {
+        steps: vec![
+            ScenarioStep { at: secs(0.0), op: LifecycleOp::Deploy(fed_topo(3, 1)) },
+            ScenarioStep { at: secs(4.0), op: LifecycleOp::Update(fed_topo(6, 2)) },
+            ScenarioStep { at: secs(9.0), op: LifecycleOp::Update(fed_topo(2, 3)) },
+        ],
+        duration: secs(14.0),
+    }
+}
+
+fn fed_cfg() -> FedConfig {
+    FedConfig {
+        rounds: 50,     // capped by the scenario horizon, not the count
+        step_ms: 200.0, // ~0.8 s rounds, so ops land mid-training
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fedtrain_scales_trainers_up_and_down_mid_run() {
+    let (m, report) = run_fedtrain_scenario(fed_cfg(), &fed_scenario()).unwrap();
+    assert!(m.rounds.len() >= 5, "only {} rounds completed", m.rounds.len());
+    // scale-out was live: some round averaged >= 5 trainer updates
+    let max_trainers = m.rounds.iter().map(|r| r.trainers).max().unwrap();
+    assert!(max_trainers >= 5, "scale-out never took effect: max {max_trainers}");
+    // scale-in was live: the final rounds run with <= 3 trainers
+    let last = m.rounds.last().unwrap();
+    assert!(last.trainers <= 3, "scale-in never took effect: {}", last.trainers);
+    // learning still works across the churn
+    assert!(m.final_accuracy > 0.6, "final acc {:.3}", m.final_accuracy);
+    assert!(m.wan_bytes > 0);
+    // id-stable instances survive scaling: scale 3→6 adds 3 instances
+    // without restarting the 3 kept ones (3 trainers + 1 coordinator
+    // at deploy, then 3 more trainers)
+    assert!(report.spawned >= 7, "spawned {}", report.spawned);
+    assert!(
+        report.events.iter().any(|(_, e)| e.contains("update 'fedtrain' v2: +3 -0 ~0")),
+        "scale-out must diff as pure adds (id-stable multiset diff)"
+    );
+    assert!(
+        report.events.iter().any(|(_, e)| e.contains("update 'fedtrain' v3: +0 -4 ~0")),
+        "scale-in must diff as pure removes"
+    );
+
+    // determinism golden
+    let (m2, report2) = run_fedtrain_scenario(fed_cfg(), &fed_scenario()).unwrap();
+    assert_eq!(report.hash(), report2.hash());
+    assert_eq!(m.final_accuracy.to_bits(), m2.final_accuracy.to_bits());
+    assert_eq!(m.rounds.len(), m2.rounds.len());
+}

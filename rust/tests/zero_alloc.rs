@@ -48,10 +48,19 @@ fn steady_state_publish_deliver_allocates_nothing() {
     assert!(warm_bridged > 0, "warm-up must bridge");
 
     let before = ALLOCS.load(Ordering::Relaxed);
+    let heap_cap = rt.event_heap_capacity();
     rt.run_until(2_000_000); // 1.8 virtual seconds of steady state
     let allocs = ALLOCS.load(Ordering::Relaxed) - before;
     let delivered = hits.get() - warm_hits;
     let bridged = rt.fabric().bridged_up - warm_bridged;
+
+    // the event heap reached its working size during warm-up (deploy
+    // pre-sizes it from the plan shape) and must never regrow
+    assert_eq!(
+        rt.event_heap_capacity(),
+        heap_cap,
+        "event heap regrew during steady state"
+    );
 
     assert!(
         delivered > 100_000,
