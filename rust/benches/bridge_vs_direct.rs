@@ -16,12 +16,11 @@
 
 use ace::pubsub::{Bridge, Broker};
 use ace::simnet::Link;
-use ace::util::millis;
 
 /// Simulated-WAN cost of `n` unicast messages of `bytes` each, all
 /// serialized on the shared EC uplink.
 fn wan_cost_us(n: u64, bytes: u64, delay_ms: f64) -> u64 {
-    let mut link = Link::mbps("up", 20.0, millis(delay_ms));
+    let mut link = Link::mbps("up", 20.0, delay_ms * 1e3);
     let mut last = 0;
     for i in 0..n {
         last = link.send(i, bytes); // near-simultaneous burst

@@ -1,0 +1,32 @@
+//! Hop-charged routing throughput: the degenerate flat fabric (one
+//! shared LAN send per cross-node delivery) vs the PR-5 per-node link
+//! graph (src NIC → LAN → dst NIC per delivery).
+//!
+//! Shares its measurement body with `ace bench` (`benchkit::
+//! netfabric_hops`), so a bench number and a CI number are never two
+//! different experiments.
+//!
+//! Run: `cargo bench --bench netfabric_hops`
+
+use ace::benchkit;
+
+fn main() {
+    println!("# NetFabric hop-charged routing (flat vs per-node)\n");
+    println!("| pubs | sinks | deliveries | flat pubs/s | hop-charged pubs/s | overhead |");
+    println!("|---|---|---|---|---|---|");
+    for (pubs, sinks) in [(5_000usize, 16usize), (20_000, 64), (50_000, 128)] {
+        let h = benchkit::netfabric_hops(pubs, sinks);
+        println!(
+            "| {} | {} | {} | {:.0} | {:.0} | {:.2}x |",
+            h.pubs,
+            h.sinks,
+            h.deliveries,
+            h.flat_pubs_per_s,
+            h.hop_pubs_per_s,
+            h.flat_pubs_per_s / h.hop_pubs_per_s.max(1.0)
+        );
+    }
+    println!("\n(Each cross-node delivery on the per-node fabric pays three FIFO");
+    println!("legs instead of one; the overhead bounds what NIC modelling costs");
+    println!("the routing hot path.)");
+}

@@ -16,8 +16,8 @@
 
 use crate::deploy::Instance;
 use crate::infra::{InfraBuilder, Infrastructure, NodeKind};
-use crate::platform::orchestrator;
-use crate::simnet::{EdgeCloudNet, NetConfig};
+use crate::platform::orchestrator::{self, NetHints};
+use crate::simnet::{NetConfig, NetFabric};
 use crate::svcgraph::lifecycle::{
     ControlPlane, ControlPlaneConfig, InstanceFactory, LifecycleReport, LifecycleScenario,
     PlanHook,
@@ -445,13 +445,18 @@ impl Component for Coordinator {
 // Driver
 // ---------------------------------------------------------------------------
 
-fn fed_infra(cfg: &FedConfig) -> Infrastructure {
+/// `cc_nodes` grows the CC beyond the single workstation (scenario
+/// `network: cc_nodes` — same knob as videoquery's cell).
+fn fed_infra(cfg: &FedConfig, cc_nodes: usize) -> Infrastructure {
     let mut b = InfraBuilder::register("fed");
     for _ in 0..cfg.num_ecs {
         let ec = b.claim_ec();
         b.add_edge_node(&ec, "minipc", NodeKind::MiniPc, BTreeMap::new());
     }
     b.add_cloud_node("gpu-ws", NodeKind::GpuWorkstation, BTreeMap::new());
+    for s in 1..cc_nodes.max(1) {
+        b.add_cloud_node(&format!("srv{s}"), NodeKind::CloudServer, BTreeMap::new());
+    }
     b.build()
 }
 
@@ -558,11 +563,11 @@ fn collect_metrics(cfg: &FedConfig, shared: &Shared, rt: &GraphRuntime) -> FedMe
 /// topology → orchestrator placement → components → bridged transport.
 pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
     validate(&cfg)?;
-    let infra = fed_infra(&cfg);
+    let infra = fed_infra(&cfg, 1);
     let topo = Topology::parse(FEDTRAIN_TOPOLOGY)?;
     let plan = orchestrator::place(&topo, &infra)?;
 
-    let net = EdgeCloudNet::new(&NetConfig {
+    let net = NetFabric::new(&NetConfig {
         num_ecs: cfg.num_ecs,
         wan_delay: millis(cfg.wan_delay_ms),
         ..Default::default()
@@ -599,12 +604,20 @@ pub fn run_fedtrain_scenario(
     scenario: &LifecycleScenario,
 ) -> Result<(FedMetrics, LifecycleReport)> {
     validate(&cfg)?;
-    let infra = fed_infra(&cfg);
-    let net = EdgeCloudNet::new(&NetConfig {
+    // the scenario's `network:` block reshapes the fabric (per-node
+    // NICs, link shaping) and may grow the CC into a real cluster
+    let mut netcfg = NetConfig {
         num_ecs: cfg.num_ecs,
         wan_delay: millis(cfg.wan_delay_ms),
         ..Default::default()
-    });
+    };
+    let mut cc_nodes = 1;
+    if let Some(ov) = &scenario.network {
+        cc_nodes = ov.apply_with_cc(&mut netcfg, cc_nodes);
+    }
+    let infra = fed_infra(&cfg, cc_nodes);
+    let net = NetFabric::new(&netcfg);
+    let hints = NetHints::from_net(&net);
     let mut rt = GraphRuntime::new(net);
     let (test_x, test_y) = make_test_set(&cfg);
     let shared: Shared = Rc::new(FedState {
@@ -636,6 +649,7 @@ pub fn run_fedtrain_scenario(
         Some(hook),
         scenario,
         ControlPlaneConfig::default(),
+        hints,
     )?;
     rt.run_until(scenario.duration);
     Ok((collect_metrics(&cfg, &shared, &rt), plane.report()))
@@ -672,7 +686,7 @@ mod tests {
     fn topology_places_one_trainer_per_ec() {
         let cfg = quick();
         let topo = Topology::parse(FEDTRAIN_TOPOLOGY).unwrap();
-        let plan = orchestrator::place(&topo, &fed_infra(&cfg)).unwrap();
+        let plan = orchestrator::place(&topo, &fed_infra(&cfg, 1)).unwrap();
         assert_eq!(plan.instances_of("trainer").len(), cfg.num_ecs);
         assert_eq!(plan.instances_of("coordinator").len(), 1);
     }

@@ -30,9 +30,9 @@ use crate::deploy::Instance;
 use crate::inapp::{AdvancedPolicy, BasicPolicy, EdgeDecision, QueryPolicy, Route};
 use crate::infra::{InfraBuilder, Infrastructure, NodeKind};
 use crate::metrics::{CellMetrics, F1};
-use crate::platform::orchestrator;
+use crate::platform::orchestrator::{self, NetHints};
 use crate::runtime::{Classifier, ModelBank};
-use crate::simnet::{sizes, EdgeCloudNet, NetConfig};
+use crate::simnet::{sizes, NetConfig, NetFabric};
 use crate::svcgraph::lifecycle::{
     ControlPlane, ControlPlaneConfig, InstanceFactory, LifecycleReport, LifecycleScenario,
 };
@@ -96,6 +96,14 @@ pub struct CellConfig {
     /// Optional §4.2.2 validation-testbed channel schedule; when set it
     /// overrides `wan_delay_ms` and reshapes the WAN links per phase.
     pub channel: Option<crate::testbed::ChannelProfile>,
+    /// CC cluster size (1 = the degenerate single-workstation CC of
+    /// §5.1.1; more nodes make the CC a real LAN-connected cluster).
+    pub cc_nodes: usize,
+    /// Optional full network shape (per-node NICs, CC LAN, link
+    /// shaping). `None` = the degenerate flat model derived from
+    /// `num_ecs`/`wan_delay_ms`. When set, its `num_ecs`/`wan_delay`
+    /// must be kept consistent with this config by the caller.
+    pub net: Option<NetConfig>,
 }
 
 impl Default for CellConfig {
@@ -111,6 +119,8 @@ impl Default for CellConfig {
             eoc_max_batch: 2,
             coc_max_batch: 1,
             channel: None,
+            cc_nodes: 1,
+            net: None,
         }
     }
 }
@@ -756,8 +766,9 @@ impl Component for ResultStore {
 // ---------------------------------------------------------------------------
 
 /// Build the cell's infrastructure: `num_ecs` ECs of one mini PC +
-/// `cams_per_ec` camera RPis, plus the CC workstation (the §5.1.1
-/// testbed when 3×3).
+/// `cams_per_ec` camera RPis, plus the CC — the §5.1.1 testbed's one
+/// GPU workstation, joined by `cc_nodes - 1` cloud servers when the
+/// scenario makes the CC a real cluster.
 fn cell_infra(cfg: &CellConfig) -> Infrastructure {
     let mut b = InfraBuilder::register("cell");
     for _ in 0..cfg.num_ecs {
@@ -770,10 +781,24 @@ fn cell_infra(cfg: &CellConfig) -> Infrastructure {
         }
     }
     b.add_cloud_node("gpu-ws", NodeKind::GpuWorkstation, BTreeMap::new());
+    for s in 1..cfg.cc_nodes.max(1) {
+        b.add_cloud_node(&format!("srv{s}"), NodeKind::CloudServer, BTreeMap::new());
+    }
     b.build()
 }
 
-fn apply_phase(net: &mut EdgeCloudNet, phase: &crate::testbed::Phase) {
+/// The cell's network shape: the explicit `cfg.net` when given, else
+/// the degenerate flat model (`num_ecs` shared LANs + WAN pairs, free
+/// NICs, free CC backplane) that reproduces the pre-PR-5 trajectories.
+fn cell_netcfg(cfg: &CellConfig) -> NetConfig {
+    cfg.net.clone().unwrap_or_else(|| NetConfig {
+        num_ecs: cfg.num_ecs,
+        wan_delay: millis(cfg.wan_delay_ms),
+        ..Default::default()
+    })
+}
+
+fn apply_phase(net: &mut NetFabric, phase: &crate::testbed::Phase) {
     for ec in 0..net.uplink.len() {
         let up = &mut net.uplink[ec];
         up.set_bw_bps((phase.uplink_mbps * 1e6) as u64);
@@ -978,13 +1003,17 @@ fn finalize_metrics(
 /// `svcgraph` component → pub/sub transport over bridged simnet links →
 /// metrics (BWC straight off the WAN link counters).
 pub fn run_cell(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Result<CellMetrics> {
-    // ① user submits the topology; the orchestrator binds components
+    // ① user submits the topology; the orchestrator binds components —
+    // network-aware when the cell's fabric has constrained NICs (the
+    // degenerate default reproduces the CPU-spread placement exactly)
     let infra = cell_infra(&cfg);
+    let net = NetFabric::new(&cell_netcfg(&cfg));
+    let hints = NetHints::from_net(&net);
     let mut topo = Topology::parse(VIDEOQUERY_TOPOLOGY)?;
     if let Some(od) = topo.components.iter_mut().find(|c| c.name == "od") {
         od.params.insert("interval".to_string(), format!("{}", cfg.interval_s));
     }
-    let plan = orchestrator::place(&topo, &infra)?;
+    let plan = orchestrator::place_with_net(&topo, &infra, Some(&hints))?;
     // the sampling interval flows through the topology, like a real
     // component parameter (Figure 4's `params`)
     let interval_s: f64 = topo
@@ -993,12 +1022,8 @@ pub fn run_cell(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Result<
         .and_then(|s| s.parse().ok())
         .unwrap_or(cfg.interval_s);
 
-    // ② transport: per-cluster message services bridged over the WAN
-    let net = EdgeCloudNet::new(&NetConfig {
-        num_ecs: cfg.num_ecs,
-        wan_delay: millis(cfg.wan_delay_ms),
-        ..Default::default()
-    });
+    // ② transport: per-cluster message services bridged over the WAN,
+    // hop-charged on the per-node link graph
     let mut rt = GraphRuntime::new(net);
     let shared = make_shared(cfg.clone(), svc, compute);
 
@@ -1055,17 +1080,20 @@ pub struct ScenarioOutcome {
 /// `cfg.interval_s` (the factory outlives any single topology), so an
 /// `od` `interval` param inside a scenario topology is ignored.
 pub fn run_scenario(
-    cfg: CellConfig,
+    mut cfg: CellConfig,
     svc: ServiceTimes,
     compute: Compute,
     scenario: &LifecycleScenario,
 ) -> Result<ScenarioOutcome> {
+    // the scenario's `network:` block reshapes the fabric (and may
+    // grow the CC into a multi-node cluster) on top of the cell config
+    let mut netcfg = cell_netcfg(&cfg);
+    if let Some(ov) = &scenario.network {
+        cfg.cc_nodes = ov.apply_with_cc(&mut netcfg, cfg.cc_nodes);
+    }
     let infra = cell_infra(&cfg);
-    let net = EdgeCloudNet::new(&NetConfig {
-        num_ecs: cfg.num_ecs,
-        wan_delay: millis(cfg.wan_delay_ms),
-        ..Default::default()
-    });
+    let net = NetFabric::new(&netcfg);
+    let hints = NetHints::from_net(&net);
     let mut rt = GraphRuntime::new(net);
     let interval = secs(cfg.interval_s);
     let shared = make_shared(cfg.clone(), svc, compute);
@@ -1080,6 +1108,7 @@ pub fn run_scenario(
         None,
         scenario,
         ControlPlaneConfig::default(),
+        hints,
     )?;
     // the §4.2.2 channel schedule applies under scenarios too
     if let Some(profile) = &cfg.channel {

@@ -16,9 +16,10 @@
 //! planes.
 
 use crate::des::{Scheduler, SimEvent};
+use crate::json::Value;
 use crate::pubsub::Broker;
 use crate::pubsub::topic::TopicTrie;
-use crate::simnet::{EdgeCloudNet, NetConfig};
+use crate::simnet::{NetConfig, NetFabric, NicSpec};
 use crate::svcgraph::{ClusterRef, Component, Ctx, GraphMsg, GraphRuntime, Site};
 use crate::util::prng::Stream;
 use crate::util::SimTime;
@@ -388,7 +389,7 @@ impl Component for Repeater {
 /// §Event-engine's allocation budget, bridge-forwarding row included.
 /// Returns the runtime and the delivery counter.
 pub fn steady_state_runtime(n_sinks: usize) -> (GraphRuntime, Rc<Cell<u64>>) {
-    let mut rt = GraphRuntime::new(EdgeCloudNet::new(&NetConfig {
+    let mut rt = GraphRuntime::new(NetFabric::new(&NetConfig {
         num_ecs: 1,
         ..Default::default()
     }));
@@ -430,7 +431,7 @@ pub fn fabric_storm(n_comps: usize, pubs_per_ec: usize) -> StormNumbers {
     let num_ecs = 4;
     let groups = 64;
     let mut s = Stream::new(11);
-    let mut rt = GraphRuntime::new(EdgeCloudNet::new(&NetConfig {
+    let mut rt = GraphRuntime::new(NetFabric::new(&NetConfig {
         num_ecs,
         ..Default::default()
     }));
@@ -462,5 +463,265 @@ pub fn fabric_storm(n_comps: usize, pubs_per_ec: usize) -> StormNumbers {
         deliveries: hits.get(),
         des_events: rt.executed(),
         pubs_per_s: total_pubs as f64 / dt,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// hop-charged routing: flat degenerate fabric vs per-node link graph
+// ---------------------------------------------------------------------------
+
+pub struct HopNumbers {
+    pub pubs: usize,
+    pub sinks: usize,
+    /// Deliveries on each fabric (must agree: the NIC legs change
+    /// arrival TIMES and counters, never who receives what).
+    pub deliveries: u64,
+    pub flat_pubs_per_s: f64,
+    pub hop_pubs_per_s: f64,
+}
+
+/// Same cross-node publish storm on two fabrics: the degenerate flat
+/// model (no NICs) vs a per-node link graph where EVERY node has a
+/// shaped access link — so each delivery pays src NIC → LAN → dst NIC
+/// instead of one LAN send. The ratio is the hop-charging overhead of
+/// the PR-5 `NetFabric` on the routing hot path.
+pub fn netfabric_hops(n_pubs: usize, n_sinks: usize) -> HopNumbers {
+    let run = |nics: Vec<NicSpec>| -> (u64, f64) {
+        let mut rt = GraphRuntime::new(NetFabric::new(&NetConfig {
+            num_ecs: 1,
+            nics,
+            ..Default::default()
+        }));
+        let hits = Rc::new(Cell::new(0u64));
+        for i in 0..n_sinks {
+            rt.add(
+                Site { cluster: ClusterRef::Ec(0), node: format!("node{}", i % 4).into() },
+                Box::new(Sink { filters: vec!["hop/data".into()], hits: hits.clone() }),
+            );
+        }
+        rt.add(
+            Site { cluster: ClusterRef::Ec(0), node: "node0".into() },
+            Box::new(Blaster {
+                topics: (0..n_pubs).map(|_| "hop/data".to_string()).collect(),
+                i: 0,
+            }),
+        );
+        let t0 = Instant::now();
+        rt.run(u64::MAX);
+        (hits.get(), t0.elapsed().as_secs_f64())
+    };
+    let (flat_deliveries, flat_s) = run(Vec::new());
+    let shaped: Vec<NicSpec> = (0..4)
+        .map(|i| NicSpec {
+            cluster: "ec-1".into(),
+            node: format!("node{i}"),
+            mbps: 1000.0,
+            delay_us: 10.0,
+        })
+        .collect();
+    let (hop_deliveries, hop_s) = run(shaped);
+    assert_eq!(
+        flat_deliveries, hop_deliveries,
+        "hop charging must not change who receives what"
+    );
+    assert!(flat_deliveries > 0, "hop storm must reach subscribers");
+    HopNumbers {
+        pubs: n_pubs,
+        sinks: n_sinks,
+        deliveries: flat_deliveries,
+        flat_pubs_per_s: n_pubs as f64 / flat_s,
+        hop_pubs_per_s: n_pubs as f64 / hop_s,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bench-regression gate (`ace bench --check BASELINE.json`)
+// ---------------------------------------------------------------------------
+
+/// The throughput metrics the regression gate compares, as
+/// `(object, key)` paths into the `BENCH_*.json` record. All are
+/// higher-is-better rates.
+pub const CHECKED_METRICS: &[(&str, &str)] = &[
+    ("des_events_per_sec", "typed_chain"),
+    ("des_events_per_sec", "typed_heap"),
+    ("route_match_collection", "scratch_pubs_per_sec"),
+    ("fabric_storm", "pubs_per_sec"),
+    ("broker", "publish_per_sec"),
+    ("broker", "deliver_per_sec"),
+    ("broker", "replay_subscribes_per_sec"),
+    ("netfabric", "hop_pubs_per_sec"),
+];
+
+/// Outcome of comparing a fresh bench record against a baseline.
+#[derive(Debug, Default)]
+pub struct BenchCheck {
+    /// `(metric path, baseline, fresh)` for every compared metric.
+    pub compared: Vec<(String, f64, f64)>,
+    /// Metric paths the baseline had no number for (e.g. the committed
+    /// placeholder records, or a baseline predating a new row).
+    pub skipped: Vec<String>,
+    /// Human-readable lines for metrics below `baseline * (1 - tol)`.
+    pub regressions: Vec<String>,
+}
+
+/// Fold several `BENCH_*.json` records into one baseline value taking
+/// the per-metric MEDIAN (lower-middle for even counts). This is what
+/// CI gates against — a rolling window of recent successful runs —
+/// because shared runners vary: a single fast-runner outlier must not
+/// ratchet the floor up and fail every later median-runner run.
+/// Records missing a metric simply don't vote on it; a metric nobody
+/// has a number for stays absent (skipped by the check).
+pub fn median_baseline(records: &[Value]) -> Value {
+    use std::collections::BTreeMap;
+    let mut objs: BTreeMap<String, Value> = BTreeMap::new();
+    for (obj, key) in CHECKED_METRICS {
+        let mut vals: Vec<f64> = records
+            .iter()
+            .filter_map(|r| r.get(obj).get(key).as_f64())
+            .filter(|v| *v > 0.0)
+            .collect();
+        if vals.is_empty() {
+            continue;
+        }
+        vals.sort_by(f64::total_cmp);
+        let median = vals[(vals.len() - 1) / 2];
+        let entry = objs
+            .entry(obj.to_string())
+            .or_insert_with(|| Value::Obj(Default::default()));
+        if let Value::Obj(o) = entry {
+            o.insert(key.to_string(), Value::Num(median));
+        }
+    }
+    Value::Obj(objs)
+}
+
+/// Compare `fresh` against `baseline` (both `BENCH_*.json` values):
+/// a metric regresses when it falls below `baseline * (1 - tolerance)`.
+/// Metrics absent from the baseline are skipped, so a placeholder
+/// baseline (no toolchain in the authoring container — numbers only
+/// ever come from CI) passes vacuously until a numeric record lands.
+pub fn check_regression(baseline: &Value, fresh: &Value, tolerance: f64) -> BenchCheck {
+    let mut out = BenchCheck::default();
+    for (obj, key) in CHECKED_METRICS {
+        let path = format!("{obj}.{key}");
+        let base = baseline.get(obj).get(key).as_f64();
+        let Some(base) = base.filter(|b| *b > 0.0) else {
+            out.skipped.push(path);
+            continue;
+        };
+        let now = fresh.get(obj).get(key).as_f64().unwrap_or(0.0);
+        let floor = base * (1.0 - tolerance);
+        if now < floor {
+            out.regressions.push(format!(
+                "{path}: {now:.0}/s < floor {floor:.0}/s (baseline {base:.0}/s, tolerance {:.0}%)",
+                tolerance * 100.0
+            ));
+        }
+        out.compared.push((path, base, now));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(scale: f64) -> Value {
+        Value::obj(vec![
+            (
+                "des_events_per_sec",
+                Value::obj(vec![
+                    ("typed_chain", Value::num(1_000_000.0 * scale)),
+                    ("typed_heap", Value::num(800_000.0 * scale)),
+                ]),
+            ),
+            (
+                "route_match_collection",
+                Value::obj(vec![("scratch_pubs_per_sec", Value::num(500_000.0 * scale))]),
+            ),
+            ("fabric_storm", Value::obj(vec![("pubs_per_sec", Value::num(50_000.0 * scale))])),
+            (
+                "broker",
+                Value::obj(vec![
+                    ("publish_per_sec", Value::num(200_000.0 * scale)),
+                    ("deliver_per_sec", Value::num(900_000.0 * scale)),
+                    ("replay_subscribes_per_sec", Value::num(30_000.0 * scale)),
+                ]),
+            ),
+            ("netfabric", Value::obj(vec![("hop_pubs_per_sec", Value::num(40_000.0 * scale))])),
+        ])
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        // 20% down on a 25% tolerance: noisy but acceptable
+        let check = check_regression(&record(1.0), &record(0.8), 0.25);
+        assert!(check.regressions.is_empty(), "{:?}", check.regressions);
+        assert_eq!(check.compared.len(), CHECKED_METRICS.len());
+        assert!(check.skipped.is_empty());
+        // and improvements are obviously fine
+        assert!(check_regression(&record(1.0), &record(1.5), 0.25).regressions.is_empty());
+    }
+
+    #[test]
+    fn injected_regression_fails() {
+        // a >25% drop on every metric: the gate must name each one
+        let check = check_regression(&record(1.0), &record(0.5), 0.25);
+        assert_eq!(check.regressions.len(), CHECKED_METRICS.len());
+        assert!(check.regressions[0].contains("typed_chain"), "{}", check.regressions[0]);
+        // a single-metric regression is also caught
+        let mut fresh = record(1.0);
+        if let Value::Obj(o) = &mut fresh {
+            o.insert(
+                "netfabric".to_string(),
+                Value::obj(vec![("hop_pubs_per_sec", Value::num(1_000.0))]),
+            );
+        }
+        let check = check_regression(&record(1.0), &fresh, 0.25);
+        assert_eq!(check.regressions.len(), 1);
+        assert!(check.regressions[0].contains("netfabric.hop_pubs_per_sec"));
+    }
+
+    #[test]
+    fn median_baseline_resists_a_single_outlier() {
+        // window of 1.0x, 1.0x, 1.4x (a fast-runner fluke): the median
+        // stays 1.0x, so a fresh 0.85x run passes a 25% gate instead
+        // of being measured against the outlier
+        let window = [record(1.0), record(1.4), record(1.0)];
+        let base = median_baseline(&window);
+        assert_eq!(
+            base.get("des_events_per_sec").get("typed_chain").as_f64(),
+            Some(1_000_000.0)
+        );
+        let check = check_regression(&base, &record(0.85), 0.25);
+        assert!(check.regressions.is_empty(), "{:?}", check.regressions);
+        // even count takes the lower middle (conservative floor)
+        let base = median_baseline(&[record(1.0), record(1.4)]);
+        assert_eq!(
+            base.get("fabric_storm").get("pubs_per_sec").as_f64(),
+            Some(50_000.0)
+        );
+        // records without a metric don't vote; all-placeholder windows
+        // produce an empty baseline (vacuous check)
+        let placeholder = Value::obj(vec![("status", Value::str("pending-ci-run"))]);
+        let base = median_baseline(&[placeholder.clone(), record(2.0)]);
+        assert_eq!(
+            base.get("broker").get("publish_per_sec").as_f64(),
+            Some(400_000.0),
+            "the one numeric record decides"
+        );
+        let empty = median_baseline(&[placeholder]);
+        assert!(check_regression(&empty, &record(1.0), 0.25).compared.is_empty());
+    }
+
+    #[test]
+    fn placeholder_baseline_skips_everything() {
+        // the committed BENCH_*.json placeholders carry no numbers:
+        // every metric is skipped, none compared, gate passes
+        let placeholder = Value::obj(vec![("status", Value::str("pending-ci-run"))]);
+        let check = check_regression(&placeholder, &record(1.0), 0.25);
+        assert!(check.regressions.is_empty());
+        assert!(check.compared.is_empty());
+        assert_eq!(check.skipped.len(), CHECKED_METRICS.len());
     }
 }

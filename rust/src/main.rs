@@ -29,14 +29,21 @@
 //!                                    the live graph mid-run
 //!   ace bench [--json] [--events N] [--subs N] [--pubs N] [--comps N]
 //!             [--storm-pubs N] [--broker-subs N] [--broker-pubs N]
-//!             [--retained N] [--replay-subs N]
+//!             [--retained N] [--replay-subs N] [--hop-pubs N]
+//!             [--hop-sinks N] [--check BASELINE.json] [--tolerance T]
 //!                                  — hot-path micro-benchmarks on BOTH
 //!                                    planes (typed vs boxed DES
 //!                                    events, scratch-reuse routing,
-//!                                    fabric storm, broker throughput +
+//!                                    fabric storm, hop-charged NetFabric
+//!                                    routing, broker throughput +
 //!                                    retained replay); --json emits
 //!                                    the machine-readable BENCH_*.json
-//!                                    perf-trajectory record CI logs
+//!                                    perf-trajectory record CI logs;
+//!                                    --check compares the fresh run
+//!                                    against a committed BENCH_*.json
+//!                                    and exits nonzero on throughput
+//!                                    regressions beyond --tolerance
+//!                                    (default 0.25) — the CI bench gate
 //!
 //! clap is unavailable offline; argument parsing is a ~60-line hand
 //! rolled matcher (DESIGN.md §Substitutions).
@@ -433,11 +440,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let broker_pubs = args.usize_or("broker-pubs", 20_000);
     let retained = args.usize_or("retained", 2_000);
     let replay_subs = args.usize_or("replay-subs", 500);
+    let hop_pubs = args.usize_or("hop-pubs", 20_000);
+    let hop_sinks = args.usize_or("hop-sinks", 64);
 
     let des = benchkit::des_throughput(events);
     let route = benchkit::route_scratch(subs, pubs);
     let storm = benchkit::fabric_storm(comps, storm_pubs);
     let broker = benchkit::broker_throughput(broker_subs, broker_pubs, retained, replay_subs);
+    let hops = benchkit::netfabric_hops(hop_pubs, hop_sinks);
 
     // one measurement pass serves both renderings: the table goes to
     // stderr so `--json` output stays pipeable AND the log stays
@@ -477,8 +487,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
         broker.replayed,
         broker.replay_subscribes_per_s
     );
+    eprintln!(
+        "netfabric hops: {} pubs x {} sinks -> {} deliveries; \
+         flat {:.0} pubs/s vs hop-charged {:.0} pubs/s ({:.2}x overhead)",
+        hops.pubs,
+        hops.sinks,
+        hops.deliveries,
+        hops.flat_pubs_per_s,
+        hops.hop_pubs_per_s,
+        hops.flat_pubs_per_s / hops.hop_pubs_per_s.max(1.0)
+    );
 
-    if args.has("json") {
+    {
         // the BENCH_*.json perf-trajectory record (one object per PR,
         // emitted by CI so numbers always come from a real toolchain)
         let num = |f: f64| Value::Num((f as u64) as f64); // whole units
@@ -529,8 +549,96 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     ("replay_subscribes_per_sec", num(broker.replay_subscribes_per_s)),
                 ]),
             ),
+            (
+                "netfabric",
+                obj(vec![
+                    ("pubs", Value::Num(hops.pubs as f64)),
+                    ("sinks", Value::Num(hops.sinks as f64)),
+                    ("deliveries", Value::Num(hops.deliveries as f64)),
+                    ("flat_pubs_per_sec", num(hops.flat_pubs_per_s)),
+                    ("hop_pubs_per_sec", num(hops.hop_pubs_per_s)),
+                ]),
+            ),
         ]);
-        println!("{}", ace::json::to_string(&v));
+        if args.has("json") {
+            println!("{}", ace::json::to_string(&v));
+        }
+
+        // `--check BASELINE.json`: the CI bench-regression gate — exit
+        // nonzero when any throughput metric falls below
+        // baseline * (1 - tolerance). Metrics the baseline carries no
+        // number for (placeholder records) are skipped.
+        if let Some(baseline_path) = args.get("check") {
+            let tolerance = args.f64_or("tolerance", 0.25);
+            if !(0.0..1.0).contains(&tolerance) {
+                bail!("--tolerance must be in [0, 1), got {tolerance}");
+            }
+            // a FILE is used verbatim; a DIRECTORY is a rolling window
+            // of records folded to a per-metric median (robust to a
+            // single fast/slow-runner outlier — see
+            // benchkit::median_baseline)
+            let baseline = if std::path::Path::new(baseline_path).is_dir() {
+                let mut paths: Vec<_> = std::fs::read_dir(baseline_path)
+                    .with_context(|| format!("reading baseline dir {baseline_path}"))?
+                    .filter_map(|e| e.ok().map(|e| e.path()))
+                    .filter(|p| p.extension().and_then(|x| x.to_str()) == Some("json"))
+                    .collect();
+                paths.sort();
+                let mut records = Vec::new();
+                for p in &paths {
+                    let text = std::fs::read_to_string(p)
+                        .with_context(|| format!("reading baseline record {}", p.display()))?;
+                    records.push(
+                        ace::json::parse(&text)
+                            .with_context(|| format!("parsing baseline record {}", p.display()))?,
+                    );
+                }
+                eprintln!(
+                    "bench-check: median baseline over {} record(s) in {baseline_path}",
+                    records.len()
+                );
+                benchkit::median_baseline(&records)
+            } else {
+                let text = std::fs::read_to_string(baseline_path)
+                    .with_context(|| format!("reading baseline {baseline_path}"))?;
+                ace::json::parse(&text)
+                    .with_context(|| format!("parsing baseline {baseline_path}"))?
+            };
+            let check = benchkit::check_regression(&baseline, &v, tolerance);
+            for path in &check.skipped {
+                eprintln!("bench-check: no baseline number for {path}, skipped");
+            }
+            for (path, base, fresh) in &check.compared {
+                eprintln!("bench-check: {path} {fresh:.0}/s vs baseline {base:.0}/s");
+            }
+            if !check.regressions.is_empty() {
+                bail!(
+                    "bench regression vs {baseline_path}:\n  {}",
+                    check.regressions.join("\n  ")
+                );
+            }
+            if check.compared.is_empty() {
+                // a placeholder baseline makes the gate vacuous: say so
+                // LOUDLY (CI's rolling-baseline cache arms the gate
+                // from the second run onward); --require-baseline turns
+                // this into a hard failure for strict setups
+                let msg = format!(
+                    "bench-check: WARNING — {baseline_path} carries no comparable numbers; \
+                     every metric skipped, the regression gate is VACUOUS this run"
+                );
+                if args.has("require-baseline") {
+                    bail!("{msg}");
+                }
+                eprintln!("{msg}");
+            } else {
+                eprintln!(
+                    "bench-check: {} metric(s) within {:.0}% of {baseline_path} ({} skipped)",
+                    check.compared.len(),
+                    tolerance * 100.0,
+                    check.skipped.len()
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -620,7 +728,14 @@ COMMANDS:
                both planes                    [--pubs N] [--comps N]
                (BENCH_*.json perf trajectory) [--storm-pubs N] [--broker-subs N]
                                               [--broker-pubs N] [--retained N]
-                                              [--replay-subs N]
+                                              [--replay-subs N] [--hop-pubs N]
+                                              [--hop-sinks N]
+               with --check FILE: exit        [--check BASELINE.json]
+               nonzero on throughput          [--tolerance T]
+               regressions beyond T (0.25);   [--require-baseline]
+               --require-baseline also
+               fails when the baseline has
+               no comparable numbers
   help         this message"
     );
 }

@@ -8,6 +8,16 @@
 //!   * score: spread — pick the candidate with the most free CPU after
 //!     allocation (keeps ECs balanced, mirrors the paper's goal of not
 //!     hand-mapping components to nodes);
+//!   * NETWORK-AWARE scoring (PR 5): when the infrastructure has
+//!     bandwidth-constrained access links ([`NetHints`]), the score
+//!     additionally prefers co-locating chatty component pairs (the
+//!     topology's connection edges — the same edges the svcgraph
+//!     transport charges) and penalizes NICs already committed to
+//!     carry traffic relative to their bandwidth. With DEGENERATE
+//!     hints (no constrained NIC anywhere) the scoring reduces
+//!     byte-for-byte to the CPU-spread rule, so every pre-PR-5
+//!     placement — and therefore every golden trajectory — is
+//!     unchanged;
 //!   * `per-label` pins one instance on EVERY matching node, `per-ec`
 //!     one per EC, `replicas(n)` the n best nodes.
 //!
@@ -18,8 +28,50 @@
 
 use crate::deploy::{DeploymentPlan, Instance};
 use crate::infra::{Cluster, ClusterKind, Infrastructure, Node};
+use crate::simnet::NetFabric;
 use crate::topology::{ComponentSpec, Location, Placement, Topology};
+use crate::util::AceId;
 use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Per-node access-link bandwidths, as placement sees them: only
+/// CONSTRAINED NICs appear (unlimited NICs and unlisted nodes are
+/// free). Keyed cluster leaf → node leaf — `"ec-1"`/`"rpi1"`,
+/// `"cc"`/`"gpu-ws"` — matching the infra id layers; the nesting keeps
+/// the scoring-loop lookups allocation-free (`&str` probes).
+#[derive(Debug, Clone, Default)]
+pub struct NetHints {
+    nic_mbps: BTreeMap<String, BTreeMap<String, f64>>,
+}
+
+impl NetHints {
+    /// Derive hints from the simulated link graph, so the orchestrator
+    /// scores against exactly the links the transport will charge.
+    pub fn from_net(net: &NetFabric) -> NetHints {
+        let mut nic_mbps: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+        let num_ecs = net.num_ecs();
+        for (ci, cluster) in net.clusters.iter().enumerate() {
+            let leaf = crate::simnet::cluster_leaf(ci, num_ecs);
+            for (node, nic) in &cluster.nics {
+                if let Some(mbps) = nic.mbps() {
+                    nic_mbps.entry(leaf.clone()).or_default().insert(node.clone(), mbps);
+                }
+            }
+        }
+        NetHints { nic_mbps }
+    }
+
+    /// Degenerate = no constrained NIC anywhere ⇒ scoring reduces to
+    /// the pure CPU-spread rule.
+    pub fn is_degenerate(&self) -> bool {
+        self.nic_mbps.values().all(|nodes| nodes.is_empty())
+    }
+
+    /// The constrained access bandwidth of `node`, if any.
+    pub fn nic_mbps(&self, cluster_leaf: &str, node_leaf: &str) -> Option<f64> {
+        self.nic_mbps.get(cluster_leaf)?.get(node_leaf).copied()
+    }
+}
 
 fn label_matches(node: &Node, label: &Option<String>) -> bool {
     match label {
@@ -39,7 +91,7 @@ fn location_matches(cluster: &Cluster, loc: Location) -> bool {
     }
 }
 
-fn instance_id(component: &str, node: &crate::util::AceId) -> String {
+fn instance_id(component: &str, node: &AceId) -> String {
     let mut parts: Vec<&str> = Vec::new();
     let s = node.to_string();
     for p in s.split('/').skip(1) {
@@ -50,16 +102,36 @@ fn instance_id(component: &str, node: &crate::util::AceId) -> String {
 
 /// Orchestrate `topo` onto (a scratch copy of) `infra`.
 pub fn place(topo: &Topology, infra: &Infrastructure) -> Result<DeploymentPlan> {
-    let mut scratch = infra.clone();
-    place_onto(topo, &mut scratch)
+    place_with_net(topo, infra, None)
 }
 
 /// Orchestrate and DEDUCT allocations from `infra` (persistent form,
 /// used when several applications share the infrastructure).
 pub fn place_onto(topo: &Topology, infra: &mut Infrastructure) -> Result<DeploymentPlan> {
+    place_onto_with_net(topo, infra, None)
+}
+
+/// [`place`] with network-aware scoring (see the module docs). `None`
+/// or degenerate hints reproduce the CPU-spread placement exactly.
+pub fn place_with_net(
+    topo: &Topology,
+    infra: &Infrastructure,
+    hints: Option<&NetHints>,
+) -> Result<DeploymentPlan> {
+    let mut scratch = infra.clone();
+    place_onto_with_net(topo, &mut scratch, hints)
+}
+
+/// [`place_onto`] with network-aware scoring.
+pub fn place_onto_with_net(
+    topo: &Topology,
+    infra: &mut Infrastructure,
+    hints: Option<&NetHints>,
+) -> Result<DeploymentPlan> {
+    let mut placer = Placer::new(topo, hints);
     let mut instances = Vec::new();
     for comp in &topo.components {
-        let placed = place_component(comp, infra)?;
+        let placed = placer.place_component(comp, infra)?;
         instances.extend(placed);
     }
     Ok(DeploymentPlan { app: topo.app.clone(), version: topo.version, instances })
@@ -79,83 +151,185 @@ fn candidates<'a>(
         .collect()
 }
 
-fn commit(
-    infra: &mut Infrastructure,
-    comp: &ComponentSpec,
-    node_id: &crate::util::AceId,
-) -> Instance {
-    let node = infra.find_node_mut(node_id).expect("placed node exists");
-    node.allocatable.sub(&comp.resources);
-    Instance {
-        id: instance_id(&comp.name, node_id),
-        component: comp.name.clone(),
-        node: node_id.clone(),
-        image: comp.image.clone(),
-    }
+/// Placement state threaded through one `place_onto_with_net` run:
+/// what has been placed so far (for co-location affinity) and how much
+/// traffic each node's NIC is already committed to carry (for the
+/// saturation penalty).
+struct Placer<'a> {
+    hints: Option<&'a NetHints>,
+    /// Undirected component adjacency (the topology's connection
+    /// edges — what the svcgraph transport will charge).
+    adj: BTreeMap<String, BTreeSet<String>>,
+    /// Per-component edge-weight units: the `traffic` topology param
+    /// when present, else the component's connection degree.
+    units: BTreeMap<String, u64>,
+    /// Instances placed so far, in placement order.
+    placed: Vec<Instance>,
+    /// node id → committed traffic units.
+    committed: BTreeMap<AceId, u64>,
 }
 
-fn place_component(comp: &ComponentSpec, infra: &mut Infrastructure) -> Result<Vec<Instance>> {
-    match &comp.placement {
-        Placement::PerLabel => {
-            let ids: Vec<_> = candidates(comp, infra)
+impl<'a> Placer<'a> {
+    fn new(topo: &Topology, hints: Option<&'a NetHints>) -> Self {
+        let mut adj: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+        for (a, b) in topo.edges() {
+            adj.entry(a.clone()).or_default().insert(b.clone());
+            adj.entry(b).or_default().insert(a);
+        }
+        let mut units = BTreeMap::new();
+        for c in &topo.components {
+            let degree = adj.get(&c.name).map_or(1, |p| p.len().max(1)) as u64;
+            let u = c
+                .params
+                .get("traffic")
+                .and_then(|s| s.parse::<u64>().ok())
+                .unwrap_or(degree);
+            units.insert(c.name.clone(), u.max(1));
+        }
+        Placer { hints, adj, units, placed: Vec::new(), committed: BTreeMap::new() }
+    }
+
+    /// Network-aware scoring active? Only with genuinely constrained
+    /// hints — the degenerate config must reproduce the CPU-spread
+    /// placement byte-for-byte.
+    fn net_active(&self) -> bool {
+        self.hints.is_some_and(|h| !h.is_degenerate())
+    }
+
+    /// The network score of putting `comp` on `node`: co-location
+    /// affinity with already-placed connected components, minus a
+    /// penalty proportional to the traffic already committed to a
+    /// constrained NIC relative to its bandwidth.
+    fn net_score(&self, comp: &ComponentSpec, node: &Node) -> i64 {
+        let cluster = node.id.parent();
+        let mut score = 0i64;
+        if let Some(peers) = self.adj.get(&comp.name) {
+            for inst in &self.placed {
+                if !peers.contains(&inst.component) {
+                    continue;
+                }
+                if inst.node == node.id {
+                    score += 1000; // same node: the hop is free
+                } else if inst.node.parent() == cluster {
+                    score += 250; // same cluster: LAN, not WAN
+                }
+            }
+        }
+        if let (Some(h), Some(cl)) = (self.hints, &cluster) {
+            if let Some(mbps) = h.nic_mbps(cl.leaf(), node.id.leaf()) {
+                let units = self.committed.get(&node.id).copied().unwrap_or(0)
+                    + self.units.get(&comp.name).copied().unwrap_or(1);
+                // integer milli-penalty: committed units per Mbps
+                score -= ((units as f64 * 1000.0) / mbps.max(1e-3)) as i64;
+            }
+        }
+        score
+    }
+
+    /// Best candidate under the active scoring rule. Both arms keep
+    /// `max_by_key` (LAST maximum wins) so the degenerate arm is
+    /// byte-identical to the historical choice.
+    fn best(&self, comp: &ComponentSpec, cands: Vec<(&Cluster, &Node)>) -> Option<AceId> {
+        if self.net_active() {
+            cands
                 .into_iter()
+                .max_by_key(|(_, n)| (self.net_score(comp, n), n.allocatable.cpu_millis))
                 .map(|(_, n)| n.id.clone())
-                .collect();
-            if ids.is_empty() {
-                bail!(
-                    "component '{}': no node matches label {:?} with {:?} free",
-                    comp.name,
-                    comp.label,
-                    comp.resources
-                );
-            }
-            Ok(ids.iter().map(|id| commit(infra, comp, id)).collect())
+        } else {
+            cands
+                .into_iter()
+                .max_by_key(|(_, n)| n.allocatable.cpu_millis)
+                .map(|(_, n)| n.id.clone())
         }
-        Placement::PerEc => {
-            // best (most free cpu) node in each EC
-            let mut picks = Vec::new();
-            let ec_leafs: Vec<String> =
-                infra.ecs.iter().map(|c| c.id.leaf().to_string()).collect();
-            for leaf in ec_leafs {
-                let best = candidates(comp, infra)
+    }
+
+    fn commit(
+        &mut self,
+        infra: &mut Infrastructure,
+        comp: &ComponentSpec,
+        node_id: &AceId,
+    ) -> Instance {
+        let node = infra.find_node_mut(node_id).expect("placed node exists");
+        node.allocatable.sub(&comp.resources);
+        *self.committed.entry(node_id.clone()).or_insert(0) +=
+            self.units.get(&comp.name).copied().unwrap_or(1);
+        let inst = Instance {
+            id: instance_id(&comp.name, node_id),
+            component: comp.name.clone(),
+            node: node_id.clone(),
+            image: comp.image.clone(),
+        };
+        self.placed.push(inst.clone());
+        inst
+    }
+
+    fn place_component(
+        &mut self,
+        comp: &ComponentSpec,
+        infra: &mut Infrastructure,
+    ) -> Result<Vec<Instance>> {
+        match &comp.placement {
+            Placement::PerLabel => {
+                let ids: Vec<_> = candidates(comp, infra)
                     .into_iter()
-                    .filter(|(c, _)| c.id.leaf() == leaf)
-                    .max_by_key(|(_, n)| n.allocatable.cpu_millis)
-                    .map(|(_, n)| n.id.clone());
-                match best {
-                    Some(id) => picks.push(commit(infra, comp, &id)),
-                    None => bail!(
-                        "component '{}': EC '{leaf}' has no feasible node (need {:?})",
+                    .map(|(_, n)| n.id.clone())
+                    .collect();
+                if ids.is_empty() {
+                    bail!(
+                        "component '{}': no node matches label {:?} with {:?} free",
                         comp.name,
+                        comp.label,
                         comp.resources
-                    ),
+                    );
                 }
+                Ok(ids.iter().map(|id| self.commit(infra, comp, id)).collect())
             }
-            Ok(picks)
-        }
-        Placement::Replicas(n) => {
-            let mut placed = Vec::new();
-            for i in 0..*n {
-                let best = candidates(comp, infra)
-                    .into_iter()
-                    .max_by_key(|(_, nd)| nd.allocatable.cpu_millis)
-                    .map(|(_, nd)| nd.id.clone());
-                match best {
-                    Some(id) => {
-                        let mut inst = commit(infra, comp, &id);
-                        if *n > 1 {
-                            inst.id = format!("{}-{i}", inst.id);
-                        }
-                        placed.push(inst);
+            Placement::PerEc => {
+                // best node in each EC under the active scoring rule
+                let mut picks = Vec::new();
+                let ec_leafs: Vec<String> =
+                    infra.ecs.iter().map(|c| c.id.leaf().to_string()).collect();
+                for leaf in ec_leafs {
+                    let cands: Vec<_> = candidates(comp, infra)
+                        .into_iter()
+                        .filter(|(c, _)| c.id.leaf() == leaf)
+                        .collect();
+                    match self.best(comp, cands) {
+                        Some(id) => picks.push(self.commit(infra, comp, &id)),
+                        None => bail!(
+                            "component '{}': EC '{leaf}' has no feasible node (need {:?})",
+                            comp.name,
+                            comp.resources
+                        ),
                     }
-                    None => bail!(
-                        "component '{}': replica {i}/{n} unplaceable (need {:?})",
-                        comp.name,
-                        comp.resources
-                    ),
                 }
+                Ok(picks)
             }
-            Ok(placed)
+            Placement::Replicas(n) => {
+                let mut placed = Vec::new();
+                for i in 0..*n {
+                    let cands = candidates(comp, infra);
+                    match self.best(comp, cands) {
+                        Some(id) => {
+                            let mut inst = self.commit(infra, comp, &id);
+                            if *n > 1 {
+                                inst.id = format!("{}-{i}", inst.id);
+                                // keep the stored copy id-consistent
+                                if let Some(last) = self.placed.last_mut() {
+                                    last.id = inst.id.clone();
+                                }
+                            }
+                            placed.push(inst);
+                        }
+                        None => bail!(
+                            "component '{}': replica {i}/{n} unplaceable (need {:?})",
+                            comp.name,
+                            comp.resources
+                        ),
+                    }
+                }
+                Ok(placed)
+            }
         }
     }
 }
@@ -164,6 +338,7 @@ fn place_component(comp: &ComponentSpec, infra: &mut Infrastructure) -> Result<V
 mod tests {
     use super::*;
     use crate::infra::paper_testbed;
+    use crate::simnet::{NetConfig, NicSpec};
     use crate::topology::{Topology, VIDEOQUERY_TOPOLOGY};
 
     #[test]
@@ -276,5 +451,171 @@ components:
         assert!(place_onto(&topo, &mut infra).is_ok());
         // second app no longer fits on the CC
         assert!(place_onto(&topo, &mut infra).is_err());
+    }
+
+    // -- network-aware scoring ------------------------------------------------
+
+    #[test]
+    fn degenerate_hints_reproduce_the_plan_byte_for_byte() {
+        let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
+        let infra = paper_testbed("u1");
+        let flat = place(&topo, &infra).unwrap();
+        let net = NetFabric::new(&NetConfig::default());
+        let hints = NetHints::from_net(&net);
+        assert!(hints.is_degenerate());
+        let hinted = place_with_net(&topo, &infra, Some(&hints)).unwrap();
+        assert_eq!(flat, hinted, "degenerate hints must not move anything");
+        // explicit UNLIMITED nics are still degenerate for placement
+        let net = NetFabric::new(&NetConfig {
+            nics: vec![NicSpec {
+                cluster: "ec-1".into(),
+                node: "rpi1".into(),
+                mbps: f64::INFINITY,
+                delay_us: 0.0,
+            }],
+            ..Default::default()
+        });
+        let hints = NetHints::from_net(&net);
+        assert!(hints.is_degenerate());
+        assert_eq!(flat, place_with_net(&topo, &infra, Some(&hints)).unwrap());
+    }
+
+    fn hints_with(nics: Vec<NicSpec>) -> NetHints {
+        NetHints::from_net(&NetFabric::new(&NetConfig { nics, ..Default::default() }))
+    }
+
+    #[test]
+    fn chatty_pairs_co_locate_under_constrained_nics() {
+        // cam is pinned per-label on the RPis; agg connects to cam and
+        // fits anywhere on the edge. With a constrained NIC in the
+        // infra (anywhere — it activates scoring), agg must land next
+        // to its cams rather than on the fattest-CPU mini PC.
+        let topo = Topology::parse(
+            "
+app: chatty
+components:
+  - name: cam
+    location: edge
+    placement: per-label
+    label: camera
+    resources:
+      cpu: 100
+      mem: 64
+    connections: [agg]
+  - name: agg
+    location: edge
+    placement: per-ec
+    resources:
+      cpu: 500
+      mem: 128
+",
+        )
+        .unwrap();
+        let infra = paper_testbed("u1");
+        // flat scoring: the mini PC has the most free CPU
+        let flat = place(&topo, &infra).unwrap();
+        for inst in flat.instances_of("agg") {
+            assert_eq!(inst.node.leaf(), "minipc");
+        }
+        // a constrained NIC somewhere activates network-aware scoring
+        let hints = hints_with(vec![NicSpec {
+            cluster: "ec-1".into(),
+            node: "minipc".into(),
+            mbps: 10.0,
+            delay_us: 0.0,
+        }]);
+        assert!(!hints.is_degenerate());
+        let net_plan = place_with_net(&topo, &infra, Some(&hints)).unwrap();
+        for inst in net_plan.instances_of("agg") {
+            assert!(
+                inst.node.leaf().starts_with("rpi"),
+                "agg must co-locate with a cam, got {}",
+                inst.node
+            );
+        }
+    }
+
+    #[test]
+    fn saturated_nics_are_penalized() {
+        // all three EC-1 RPis host a cam; rpi1's NIC is starved, so the
+        // per-EC agg (equal affinity on every RPi) must avoid rpi1
+        let topo = Topology::parse(
+            "
+app: chatty
+components:
+  - name: cam
+    location: edge
+    placement: per-label
+    label: camera
+    resources:
+      cpu: 100
+      mem: 64
+    connections: [agg]
+  - name: agg
+    location: edge
+    placement: per-ec
+    resources:
+      cpu: 500
+      mem: 128
+",
+        )
+        .unwrap();
+        let infra = paper_testbed("u1");
+        let hints = hints_with(vec![NicSpec {
+            cluster: "ec-1".into(),
+            node: "rpi1".into(),
+            mbps: 1.0,
+            delay_us: 0.0,
+        }]);
+        let plan = place_with_net(&topo, &infra, Some(&hints)).unwrap();
+        let ec1_agg = plan
+            .instances_of("agg")
+            .into_iter()
+            .find(|i| i.node.parent().unwrap().leaf() == "ec-1")
+            .unwrap()
+            .clone();
+        assert_ne!(ec1_agg.node.leaf(), "minipc", "affinity still prefers the cams");
+        assert_ne!(ec1_agg.node.leaf(), "rpi1", "the starved NIC must repel placement");
+    }
+
+    #[test]
+    fn traffic_param_weights_the_penalty() {
+        // one replica, two candidate nodes with equally-starved NICs;
+        // the `traffic` param drives the committed-units bookkeeping
+        let topo = Topology::parse(
+            "
+app: heavy
+components:
+  - name: pump
+    location: cloud
+    params:
+      traffic: \"50\"
+  - name: sink
+    location: cloud
+    connections: [pump]
+",
+        )
+        .unwrap();
+        let mut infra = paper_testbed("u1");
+        // give the CC a second node so there is a real choice
+        let mut b = crate::infra::InfraBuilder::register("u2");
+        b.add_cloud_node("gpu-ws", crate::infra::NodeKind::GpuWorkstation, Default::default());
+        b.add_cloud_node("srv2", crate::infra::NodeKind::GpuWorkstation, Default::default());
+        infra.cc = b.build().cc;
+        let hints = NetHints::from_net(&NetFabric::new(&NetConfig {
+            nics: vec![
+                NicSpec { cluster: "cc".into(), node: "gpu-ws".into(), mbps: 10.0, delay_us: 0.0 },
+                NicSpec { cluster: "cc".into(), node: "srv2".into(), mbps: 10.0, delay_us: 0.0 },
+            ],
+            ..Default::default()
+        }));
+        let plan = place_with_net(&topo, &infra, Some(&hints)).unwrap();
+        let pump = &plan.instances_of("pump")[0].node;
+        let sink = &plan.instances_of("sink")[0].node;
+        // pump's `traffic: 50` commits 50 units to its node's 10 Mbps
+        // NIC, so co-locating sink there scores 1000 - 5100 while the
+        // other node scores 250 - 100: the saturation term must beat a
+        // single co-location bonus and push sink to the other server
+        assert_ne!(pump.leaf(), sink.leaf(), "sink must avoid the pump-saturated NIC");
     }
 }

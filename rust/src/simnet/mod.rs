@@ -1,18 +1,46 @@
-//! Simulated network links: bandwidth serialization + one-way delay.
+//! Simulated network fabric: per-node access links (NICs) feeding
+//! per-cluster LAN segments, bridged to the CC over shaped WAN pairs.
 //!
-//! Models the paper's testbed network (§5.1.1): each EC has a 100 Mbps
-//! LAN; every EC reaches the CC over a WAN shaped to 20 Mbps uplink /
+//! Models the paper's testbed network (§5.1.1) — and its generalization
+//! to heterogeneous nodes. Each cluster (every EC, and since PR 5 the
+//! CC too) is a shared LAN segment; every node MAY have its own access
+//! [`Link`] (NIC) in front of that segment, so two RPis saturating the
+//! same EC contend on their own uplinks before they contend on the
+//! LAN. Every EC reaches the CC over a WAN shaped to 20 Mbps uplink /
 //! 40 Mbps downlink with a configurable one-way delay (0 ms ideal,
-//! 50 ms practical). A `Link` is a FIFO serialization queue: a message
-//! of `n` bytes occupies the link for `n*8/bw` seconds starting when the
-//! link frees up, then arrives `delay` later. Per-link byte counters
-//! feed the BWC metric (edge-cloud bandwidth consumption, Figure 5 mid
-//! row).
+//! 50 ms practical).
 //!
-//! The struct is plain data (no coupling to the DES): `send` returns the
-//! delivery time and the caller schedules the delivery event.
+//! A message crossing nodes is charged HOP BY HOP (the src NIC at
+//! most once per publish — the one transmit up to the cluster message
+//! service — however many receivers/bridges fan out from the bus):
+//!
+//! | hop | legs charged |
+//! |---|---|
+//! | same node | none (in-process hand-off) |
+//! | same cluster, other node | src NIC → cluster LAN → dst NIC |
+//! | EC → CC (bridged) | src NIC → WAN uplink |
+//! | CC → EC (bridged) | src NIC → WAN downlink |
+//! | bridge arrival → local subscriber | dst NIC |
+//!
+//! The DEGENERATE configuration — no NIC entries, free CC backplane,
+//! one CC node — is exactly the pre-PR-5 flat model (one shared FIFO
+//! LAN per EC, free CC, WAN pairs): every absent NIC charges nothing
+//! and adds zero time, so all pre-refactor golden trajectories replay
+//! byte-for-byte (`tests/netfabric.rs`).
+//!
+//! A `Link` is a FIFO serialization queue: a message of `n` bytes
+//! occupies the link for `n*8/bw` seconds starting when the link frees
+//! up, then arrives `delay` later. Per-link byte counters feed the BWC
+//! metric (edge-cloud bandwidth consumption, Figure 5 mid row).
+//!
+//! The structs are plain data (no coupling to the DES): the charge
+//! methods return the delivery time and the caller schedules the
+//! delivery event.
 
+use crate::json::Value;
 use crate::util::{SimTime, MICROS_PER_SEC};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 
 /// One directed link.
 #[derive(Debug, Clone)]
@@ -65,9 +93,13 @@ impl Link {
         self.bw_bps = bw_bps.max(1);
     }
 
-    /// Convenience: megabit/s link.
-    pub fn mbps(name: impl Into<String>, mbps: f64, delay: SimTime) -> Self {
-        Link::new(name, (mbps * 1e6) as u64, delay)
+    /// Convenience: megabit/s link with an f64 one-way delay in µs —
+    /// both shaping knobs in f64, consistently. Clamped like
+    /// [`Link::set_bw_bps`]: non-positive/NaN bandwidth becomes 1 bps
+    /// and negative delays zero, so no scenario-supplied value can
+    /// reach [`Link::ser_time`]'s division as 0.
+    pub fn mbps(name: impl Into<String>, mbps: f64, delay_us: f64) -> Self {
+        Link::new(name, ((mbps * 1e6) as u64).max(1), delay_us.max(0.0).round() as SimTime)
     }
 
     /// Serialization time of `bytes` on this link (µs, >= 1).
@@ -111,19 +143,90 @@ impl Link {
     }
 }
 
-/// The §5.1.1 testbed topology: per-EC LAN + EC<->CC WAN pairs.
+/// A node's access link. `unlimited` is the degenerate NIC: it still
+/// counts traffic (saturation observability) but never delays — the
+/// EXACT infinite-bandwidth limit, with no 1 µs serialization floor,
+/// which is what lets an explicitly-listed unlimited NIC reproduce the
+/// no-NIC trajectories byte-for-byte.
 #[derive(Debug, Clone)]
-pub struct EdgeCloudNet {
-    /// Per-EC node->local links (LAN, symmetric). Indexed by EC.
-    pub lan: Vec<Link>,
-    /// EC -> CC uplinks (20 Mbps in the paper).
-    pub uplink: Vec<Link>,
-    /// CC -> EC downlinks (40 Mbps in the paper).
-    pub downlink: Vec<Link>,
+pub struct Nic {
+    pub link: Link,
+    /// Count traffic, never delay.
+    pub unlimited: bool,
 }
 
-/// Network parameters mirroring §5.1.1.
-#[derive(Debug, Clone, Copy)]
+impl Nic {
+    /// A shaped (bandwidth-constrained) NIC.
+    pub fn shaped(link: Link) -> Self {
+        Nic { link, unlimited: false }
+    }
+
+    /// A count-only NIC (the infinite-bandwidth degenerate case).
+    pub fn unlimited(name: impl Into<String>) -> Self {
+        Nic { link: Link::new(name, u64::MAX, 0), unlimited: true }
+    }
+
+    /// Charge `bytes` at `now`; unlimited NICs count and return `now`.
+    pub fn send(&mut self, now: SimTime, bytes: u64) -> SimTime {
+        if self.unlimited {
+            self.link.bytes_sent += bytes;
+            self.link.msgs_sent += 1;
+            now
+        } else {
+            self.link.send(now, bytes)
+        }
+    }
+
+    /// Access bandwidth in Mbps; `None` when unlimited.
+    pub fn mbps(&self) -> Option<f64> {
+        if self.unlimited {
+            None
+        } else {
+            Some(self.link.bw_bps as f64 / 1e6)
+        }
+    }
+}
+
+/// One cluster's internal network: an optional shared LAN segment
+/// (`None` = free backplane, the degenerate single-node CC) plus the
+/// access links of the nodes that have one. Nodes absent from `nics`
+/// are unconstrained AND uncounted — the flat-model fast path.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterNet {
+    pub lan: Option<Link>,
+    /// node leaf name → NIC.
+    pub nics: BTreeMap<String, Nic>,
+}
+
+impl ClusterNet {
+    /// A cluster segment: `mbps: None` = free backplane.
+    pub fn segment(name: String, mbps: Option<f64>, delay: SimTime) -> Self {
+        ClusterNet {
+            lan: mbps.map(|m| Link::mbps(name, m, delay as f64)),
+            nics: BTreeMap::new(),
+        }
+    }
+}
+
+/// One node's access-link shape, as configured in scenario/topology
+/// yamlite (`network: { nics: [...] }`).
+#[derive(Debug, Clone)]
+pub struct NicSpec {
+    /// Cluster leaf: `ec-1`..`ec-N` or `cc` (the infra id layer).
+    pub cluster: String,
+    /// Node leaf name (`rpi1`, `gpu-ws`).
+    pub node: String,
+    /// Access bandwidth in Mbps; non-finite or <= 0 = unlimited
+    /// (count-only).
+    pub mbps: f64,
+    /// One-way delay (µs).
+    pub delay_us: f64,
+}
+
+/// Network parameters mirroring §5.1.1, extended with the per-node
+/// link graph (PR 5). The default is the DEGENERATE configuration: no
+/// NICs, free single-node CC backplane — the pre-refactor flat model.
+#[derive(Debug, Clone)]
 pub struct NetConfig {
     pub num_ecs: usize,
     pub lan_mbps: f64,
@@ -133,6 +236,15 @@ pub struct NetConfig {
     pub wan_delay: SimTime,
     /// LAN delay (µs); small but nonzero.
     pub lan_delay: SimTime,
+    /// CC LAN segment bandwidth; `None` = free backplane (degenerate
+    /// single-node CC).
+    pub cc_lan_mbps: Option<f64>,
+    /// CC LAN delay (µs), used only when `cc_lan_mbps` is set.
+    pub cc_lan_delay: SimTime,
+    /// Per-node access links. Nodes not listed are unconstrained and
+    /// uncounted; specs naming clusters outside `num_ecs`/`cc` are
+    /// ignored (a scenario may configure more ECs than the run uses).
+    pub nics: Vec<NicSpec>,
 }
 
 impl Default for NetConfig {
@@ -144,21 +256,347 @@ impl Default for NetConfig {
             downlink_mbps: 40.0,
             wan_delay: 0,
             lan_delay: 500, // 0.5 ms switch+stack latency
+            cc_lan_mbps: None,
+            cc_lan_delay: 100,
+            nics: Vec::new(),
         }
     }
 }
 
-impl EdgeCloudNet {
-    pub fn new(cfg: &NetConfig) -> Self {
-        let mut lan = Vec::new();
-        let mut uplink = Vec::new();
-        let mut downlink = Vec::new();
-        for ec in 0..cfg.num_ecs {
-            lan.push(Link::mbps(format!("lan-ec{ec}"), cfg.lan_mbps, cfg.lan_delay));
-            uplink.push(Link::mbps(format!("up-ec{ec}"), cfg.uplink_mbps, cfg.wan_delay));
-            downlink.push(Link::mbps(format!("down-ec{ec}"), cfg.downlink_mbps, cfg.wan_delay));
+/// Parse an EC cluster leaf (`ec-N`, N >= 1) to its 1-based ordinal —
+/// THE copy of the leaf-naming convention shared by config parsing,
+/// fabric build, `svcgraph::site_of_node`, and the placement hints
+/// ([`cluster_leaf`] is the reverse mapping).
+pub fn parse_ec_leaf(leaf: &str) -> Option<usize> {
+    let n: usize = leaf.strip_prefix("ec-")?.parse().ok()?;
+    (n >= 1).then_some(n)
+}
+
+/// Cluster index (ECs first, CC last) → leaf name (`ec-1`.. / `cc`).
+pub fn cluster_leaf(ci: usize, num_ecs: usize) -> String {
+    if ci == num_ecs {
+        "cc".to_string()
+    } else {
+        format!("ec-{}", ci + 1)
+    }
+}
+
+impl NetConfig {
+    /// Cluster leaf (`ec-1`.. / `cc`) → cluster index (ECs first, CC
+    /// last — the same convention `svcgraph` uses).
+    pub fn cluster_index(&self, leaf: &str) -> Option<usize> {
+        if leaf == "cc" {
+            return Some(self.num_ecs);
         }
-        EdgeCloudNet { lan, uplink, downlink }
+        let n = parse_ec_leaf(leaf)?;
+        if n <= self.num_ecs {
+            Some(n - 1)
+        } else {
+            None
+        }
+    }
+}
+
+/// Overrides parsed from a scenario's `network:` yamlite block —
+/// everything optional, applied on top of the run's base [`NetConfig`]
+/// (see `svcgraph::lifecycle::LifecycleScenario`):
+///
+/// ```yaml
+/// network:
+///   lan_mbps: 100
+///   uplink_mbps: 20
+///   downlink_mbps: 40
+///   wan_delay_ms: 0
+///   lan_delay_ms: 0.5
+///   cc_nodes: 2            # CC cluster size (consumed by the app driver)
+///   cc_lan_mbps: 1000
+///   cc_lan_delay_ms: 0.1
+///   nics:
+///     - cluster: ec-1
+///       node: rpi1
+///       mbps: 2            # a starved camera-node access link
+///       delay_ms: 0.2
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct NetOverrides {
+    pub lan_mbps: Option<f64>,
+    pub uplink_mbps: Option<f64>,
+    pub downlink_mbps: Option<f64>,
+    pub wan_delay_ms: Option<f64>,
+    pub lan_delay_ms: Option<f64>,
+    /// CC cluster size — consumed by the app driver (infrastructure
+    /// shape), not by `NetFabric` itself.
+    pub cc_nodes: Option<usize>,
+    pub cc_lan_mbps: Option<f64>,
+    pub cc_lan_delay_ms: Option<f64>,
+    pub nics: Vec<NicSpec>,
+}
+
+impl NetOverrides {
+    /// Parse a `network:` block (yamlite/JSON value). Present fields
+    /// must be the right TYPE (a quoted `"50"` or a stray word is an
+    /// error, never a silent fallback to the base value), and link
+    /// bandwidths must be finite and positive (per-NIC `mbps` is the
+    /// exception: non-finite/<= 0 means "unlimited", documented on
+    /// [`NicSpec`]).
+    pub fn from_value(doc: &Value) -> Result<NetOverrides> {
+        // present-but-non-numeric is a loud error, absent is None
+        let num = |key: &str| -> Result<Option<f64>> {
+            match doc.get(key) {
+                Value::Null => Ok(None),
+                v => Ok(Some(v.as_f64().with_context(|| {
+                    format!("network.{key}: expected a number, got {v}")
+                })?)),
+            }
+        };
+        let bw = |key: &str| -> Result<Option<f64>> {
+            match num(key)? {
+                Some(v) if !(v.is_finite() && v > 0.0) => {
+                    bail!("network.{key}: bandwidth must be a positive number, got {v}")
+                }
+                v => Ok(v),
+            }
+        };
+        let mut ov = NetOverrides {
+            lan_mbps: bw("lan_mbps")?,
+            uplink_mbps: bw("uplink_mbps")?,
+            downlink_mbps: bw("downlink_mbps")?,
+            wan_delay_ms: num("wan_delay_ms")?,
+            lan_delay_ms: num("lan_delay_ms")?,
+            cc_nodes: match num("cc_nodes")? {
+                Some(v) if v.fract() != 0.0 || v < 0.0 => {
+                    bail!("network.cc_nodes: expected a non-negative integer, got {v}")
+                }
+                v => v.map(|x| x as usize),
+            },
+            cc_lan_mbps: bw("cc_lan_mbps")?,
+            cc_lan_delay_ms: num("cc_lan_delay_ms")?,
+            nics: Vec::new(),
+        };
+        if let Some(list) = doc.get("nics").as_arr() {
+            for (i, n) in list.iter().enumerate() {
+                let cluster = n
+                    .get("cluster")
+                    .as_str()
+                    .with_context(|| format!("network.nics[{i}]: missing 'cluster'"))?;
+                // validate the leaf SHAPE here (via the shared
+                // `parse_ec_leaf` convention) so typos like
+                // `ec-0`/`ec-abc` fail the parse instead of being
+                // silently dropped at fabric build; whether ec-N
+                // exists in the RUN's shape is only known later and
+                // out-of-shape specs stay ignorable.
+                if cluster != "cc" && parse_ec_leaf(cluster).is_none() {
+                    bail!("network.nics[{i}]: bad cluster '{cluster}' (ec-N|cc)");
+                }
+                let node = n
+                    .get("node")
+                    .as_str()
+                    .with_context(|| format!("network.nics[{i}]: missing 'node'"))?;
+                let mbps = n
+                    .get("mbps")
+                    .as_f64()
+                    .with_context(|| format!("network.nics[{i}]: missing 'mbps'"))?;
+                let delay_us = match n.get("delay_ms") {
+                    Value::Null => 0.0,
+                    v => {
+                        v.as_f64().with_context(|| {
+                            format!("network.nics[{i}].delay_ms: expected a number, got {v}")
+                        })? * 1e3
+                    }
+                };
+                ov.nics.push(NicSpec {
+                    cluster: cluster.to_string(),
+                    node: node.to_string(),
+                    mbps,
+                    delay_us,
+                });
+            }
+        }
+        Ok(ov)
+    }
+
+    /// [`NetOverrides::apply`] plus the knob `NetFabric` itself cannot
+    /// consume: resolves the CC cluster size the app driver should
+    /// build (the override clamped to >= 1, else `base_cc_nodes`).
+    pub fn apply_with_cc(&self, cfg: &mut NetConfig, base_cc_nodes: usize) -> usize {
+        self.apply(cfg);
+        self.cc_nodes.map_or(base_cc_nodes, |n| n.max(1))
+    }
+
+    /// Apply on top of `cfg` (absent fields keep the base value).
+    pub fn apply(&self, cfg: &mut NetConfig) {
+        if let Some(v) = self.lan_mbps {
+            cfg.lan_mbps = v;
+        }
+        if let Some(v) = self.uplink_mbps {
+            cfg.uplink_mbps = v;
+        }
+        if let Some(v) = self.downlink_mbps {
+            cfg.downlink_mbps = v;
+        }
+        if let Some(v) = self.wan_delay_ms {
+            cfg.wan_delay = crate::util::millis(v);
+        }
+        if let Some(v) = self.lan_delay_ms {
+            cfg.lan_delay = crate::util::millis(v);
+        }
+        if let Some(v) = self.cc_lan_mbps {
+            cfg.cc_lan_mbps = Some(v);
+        }
+        if let Some(v) = self.cc_lan_delay_ms {
+            cfg.cc_lan_delay = crate::util::millis(v);
+        }
+        cfg.nics.extend(self.nics.iter().cloned());
+    }
+}
+
+/// The per-node link graph: one [`ClusterNet`] per cluster (ECs
+/// 0..n-1, the CC last) plus the EC↔CC WAN pairs. All charge methods
+/// take the CLUSTER INDEX in that order — the same `cidx` convention
+/// `svcgraph` routes by.
+#[derive(Debug, Clone)]
+pub struct NetFabric {
+    /// Per-cluster segments: ECs first, the CC last.
+    pub clusters: Vec<ClusterNet>,
+    /// EC → CC uplinks (20 Mbps in the paper).
+    pub uplink: Vec<Link>,
+    /// CC → EC downlinks (40 Mbps in the paper).
+    pub downlink: Vec<Link>,
+}
+
+impl NetFabric {
+    pub fn new(cfg: &NetConfig) -> Self {
+        // one construction loop for all three per-EC links (LAN
+        // segment + WAN pair), CC segment after — no copy-pasted
+        // near-identical loops
+        let mut clusters = Vec::with_capacity(cfg.num_ecs + 1);
+        let mut uplink = Vec::with_capacity(cfg.num_ecs);
+        let mut downlink = Vec::with_capacity(cfg.num_ecs);
+        for ec in 0..cfg.num_ecs {
+            clusters.push(ClusterNet::segment(
+                format!("lan-ec{ec}"),
+                Some(cfg.lan_mbps),
+                cfg.lan_delay,
+            ));
+            uplink.push(Link::mbps(format!("up-ec{ec}"), cfg.uplink_mbps, cfg.wan_delay as f64));
+            downlink.push(Link::mbps(
+                format!("down-ec{ec}"),
+                cfg.downlink_mbps,
+                cfg.wan_delay as f64,
+            ));
+        }
+        clusters.push(ClusterNet::segment(
+            "lan-cc".to_string(),
+            cfg.cc_lan_mbps,
+            cfg.cc_lan_delay,
+        ));
+        let mut fab = NetFabric { clusters, uplink, downlink };
+        for spec in &cfg.nics {
+            let Some(ci) = cfg.cluster_index(&spec.cluster) else {
+                continue; // cluster not present in this run's shape
+            };
+            let name = format!("nic-{}-{}", spec.cluster, spec.node);
+            let nic = if spec.mbps.is_finite() && spec.mbps > 0.0 {
+                Nic::shaped(Link::mbps(name, spec.mbps, spec.delay_us))
+            } else {
+                Nic::unlimited(name)
+            };
+            fab.clusters[ci].nics.insert(spec.node.clone(), nic);
+        }
+        fab
+    }
+
+    /// Number of ECs (the CC is `clusters[num_ecs()]`).
+    pub fn num_ecs(&self) -> usize {
+        self.uplink.len()
+    }
+
+    /// Cluster index of the CC.
+    pub fn cc_index(&self) -> usize {
+        self.clusters.len() - 1
+    }
+
+    /// The shared LAN segment of cluster `ci`, if it has one.
+    pub fn lan(&self, ci: usize) -> Option<&Link> {
+        self.clusters.get(ci).and_then(|c| c.lan.as_ref())
+    }
+
+    /// Node `node`'s NIC in cluster `ci`, if it has one.
+    pub fn nic(&self, ci: usize, node: &str) -> Option<&Nic> {
+        self.clusters.get(ci).and_then(|c| c.nics.get(node))
+    }
+
+    /// Any bandwidth-constrained NIC anywhere? False = the flat
+    /// degenerate model. (Placement activation uses the same
+    /// predicate through `orchestrator::NetHints::is_degenerate`,
+    /// whose entries are derived from these NICs via
+    /// `NetHints::from_net` — keep the two in sync.)
+    pub fn has_constrained_nics(&self) -> bool {
+        self.clusters
+            .iter()
+            .any(|c| c.nics.values().any(|n| !n.unlimited))
+    }
+
+    /// Charge `node`'s NIC at `now`; nodes without one are free.
+    fn nic_send(&mut self, ci: usize, node: &str, now: SimTime, bytes: u64) -> SimTime {
+        match self.clusters[ci].nics.get_mut(node) {
+            Some(nic) => nic.send(now, bytes),
+            None => now,
+        }
+    }
+
+    /// The egress leg of a publish leaving its node: src NIC only.
+    /// One publish pays this AT MOST ONCE — the single physical
+    /// transmit up to the cluster message service — however many
+    /// receivers and bridges then fan out from the bus
+    /// (`svcgraph::Fabric::route` charges it lazily on the first hop
+    /// that leaves the node).
+    pub fn egress(&mut self, ci: usize, src: &str, now: SimTime, bytes: u64) -> SimTime {
+        self.nic_send(ci, src, now, bytes)
+    }
+
+    /// Bus → same-cluster receiver on another node: cluster LAN, then
+    /// the receiver's NIC, each leg a FIFO queue starting where the
+    /// previous one delivered.
+    pub fn lan_hop(&mut self, ci: usize, dst: &str, at: SimTime, bytes: u64) -> SimTime {
+        let t = match &mut self.clusters[ci].lan {
+            Some(lan) => lan.send(at, bytes),
+            None => at,
+        };
+        self.nic_send(ci, dst, t, bytes)
+    }
+
+    /// A complete same-cluster cross-node hop (src NIC → LAN → dst
+    /// NIC) — the single-receiver convenience over
+    /// [`NetFabric::egress`] + [`NetFabric::lan_hop`].
+    pub fn intra_hop(
+        &mut self,
+        ci: usize,
+        src: &str,
+        dst: &str,
+        now: SimTime,
+        bytes: u64,
+    ) -> SimTime {
+        let t = self.egress(ci, src, now, bytes);
+        self.lan_hop(ci, dst, t, bytes)
+    }
+
+    /// The local delivery leg after a bridge arrival: dst NIC only
+    /// (the cluster message service sits on the receiving segment).
+    pub fn ingress(&mut self, ci: usize, dst: &str, now: SimTime, bytes: u64) -> SimTime {
+        self.nic_send(ci, dst, now, bytes)
+    }
+
+    /// EC `ec` → CC over the WAN uplink, starting at `at` (the
+    /// sender-side egress delivery time). The WAN leg itself is
+    /// unchanged from the flat model.
+    pub fn wan_up(&mut self, ec: usize, at: SimTime, bytes: u64) -> SimTime {
+        self.uplink[ec].send(at, bytes)
+    }
+
+    /// CC → EC `ec` over the WAN downlink, starting at `at`.
+    pub fn wan_down(&mut self, ec: usize, at: SimTime, bytes: u64) -> SimTime {
+        self.downlink[ec].send(at, bytes)
     }
 
     /// Total WAN bytes (up + down) — the paper's BWC metric.
@@ -173,13 +611,16 @@ impl EdgeCloudNet {
     }
 
     pub fn reset(&mut self) {
-        for l in self
-            .lan
-            .iter_mut()
-            .chain(self.uplink.iter_mut())
-            .chain(self.downlink.iter_mut())
-        {
+        for l in self.uplink.iter_mut().chain(self.downlink.iter_mut()) {
             l.reset();
+        }
+        for c in self.clusters.iter_mut() {
+            if let Some(lan) = &mut c.lan {
+                lan.reset();
+            }
+            for nic in c.nics.values_mut() {
+                nic.link.reset();
+            }
         }
     }
 }
@@ -199,14 +640,14 @@ mod tests {
 
     #[test]
     fn serialization_time_matches_bandwidth() {
-        let l = Link::mbps("l", 20.0, 0);
+        let l = Link::mbps("l", 20.0, 0.0);
         // 20 Mbps = 2.5 MB/s; 2500 bytes -> 1 ms
         assert_eq!(l.ser_time(2500), 1000);
     }
 
     #[test]
     fn fifo_queueing_accumulates() {
-        let mut l = Link::mbps("l", 20.0, millis(50.0));
+        let mut l = Link::mbps("l", 20.0, 50_000.0);
         let d1 = l.send(0, 2500);
         let d2 = l.send(0, 2500);
         assert_eq!(d1, 1000 + 50_000);
@@ -217,28 +658,33 @@ mod tests {
 
     #[test]
     fn idle_link_restarts_at_now() {
-        let mut l = Link::mbps("l", 20.0, 0);
+        let mut l = Link::mbps("l", 20.0, 0.0);
         l.send(0, 2500);
         let d = l.send(10_000, 2500);
         assert_eq!(d, 11_000); // no residual backlog
     }
 
     #[test]
-    fn edge_cloud_net_shape() {
-        let net = EdgeCloudNet::new(&NetConfig {
+    fn degenerate_fabric_matches_flat_shape() {
+        let net = NetFabric::new(&NetConfig {
             num_ecs: 3,
             wan_delay: millis(50.0),
             ..Default::default()
         });
-        assert_eq!(net.lan.len(), 3);
+        assert_eq!(net.num_ecs(), 3);
+        assert_eq!(net.clusters.len(), 4, "3 ECs + the CC");
+        assert_eq!(net.cc_index(), 3);
         assert_eq!(net.uplink.len(), 3);
         assert_eq!(net.uplink[0].delay, 50_000);
+        assert!(net.lan(0).is_some(), "ECs keep their shared LAN");
+        assert!(net.lan(3).is_none(), "degenerate CC is a free backplane");
+        assert!(!net.has_constrained_nics());
         assert_eq!(net.wan_bytes(), 0);
     }
 
     #[test]
     fn wan_accounting_sums_both_directions() {
-        let mut net = EdgeCloudNet::new(&NetConfig::default());
+        let mut net = NetFabric::new(&NetConfig::default());
         net.uplink[0].send(0, 1000);
         net.downlink[2].send(0, 234);
         assert_eq!(net.wan_bytes(), 1234);
@@ -249,14 +695,149 @@ mod tests {
 
     #[test]
     fn tiny_message_still_takes_time() {
-        let l = Link::mbps("l", 1000.0, 0);
+        let l = Link::mbps("l", 1000.0, 0.0);
         assert!(l.ser_time(1) >= 1);
+    }
+
+    fn contended_cfg() -> NetConfig {
+        NetConfig {
+            num_ecs: 1,
+            lan_mbps: 100.0,
+            lan_delay: 500,
+            cc_lan_mbps: Some(1000.0),
+            cc_lan_delay: 100,
+            nics: vec![
+                NicSpec {
+                    cluster: "ec-1".into(),
+                    node: "rpi1".into(),
+                    mbps: 8.0,
+                    delay_us: 100.0,
+                },
+                NicSpec {
+                    cluster: "cc".into(),
+                    node: "srv1".into(),
+                    mbps: 1000.0,
+                    delay_us: 10.0,
+                },
+                NicSpec {
+                    cluster: "ec-9".into(), // outside the shape: ignored
+                    node: "ghost".into(),
+                    mbps: 1.0,
+                    delay_us: 0.0,
+                },
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn intra_hop_charges_src_nic_then_lan_then_dst_nic() {
+        let mut net = NetFabric::new(&contended_cfg());
+        assert!(net.has_constrained_nics());
+        assert!(net.nic(0, "rpi1").is_some());
+        assert!(net.nic(0, "ghost").is_none(), "out-of-shape spec ignored");
+        // 10_000 B from rpi1 (8 Mbps NIC, 100 µs) through the 100 Mbps
+        // LAN (500 µs) to a node with no NIC:
+        //   NIC ser 10_000*8/8e6 s = 10 ms, +100 µs → t=10_100
+        //   LAN ser 800 µs, +500 µs → t=11_400; dst free
+        let d = net.intra_hop(0, "rpi1", "rpi2", 0, 10_000);
+        assert_eq!(d, 10_000 + 100 + 800 + 500);
+        assert_eq!(net.nic(0, "rpi1").unwrap().link.bytes_sent, 10_000);
+        assert_eq!(net.lan(0).unwrap().bytes_sent, 10_000);
+        assert_eq!(net.wan_bytes(), 0, "intra-cluster hop must not touch the WAN");
+        // reverse direction: src has no NIC, dst NIC queues AFTER the
+        // LAN delivered (hop-by-hop FIFO legs)
+        let d2 = net.intra_hop(0, "rpi2", "rpi1", 0, 10_000);
+        // LAN busy until 10_800+800=... the LAN is FIFO: second send at
+        // t=0 starts when the first frees it (800*2 ser) then +500;
+        // then rpi1's NIC (busy until 10_100) takes 10 ms more.
+        assert!(d2 > d, "dst NIC must queue behind the earlier egress");
+    }
+
+    #[test]
+    fn wan_legs_start_at_the_egress_delivery_time() {
+        let mut net = NetFabric::new(&contended_cfg());
+        // at = now (no NIC upstream): exactly the flat model's charge
+        let d = net.wan_up(0, 0, 2_500);
+        assert_eq!(d, net.uplink[0].ser_time(2_500));
+        // a constrained src pays its NIC through `egress` first, and
+        // the uplink leg starts at that delivery time: 2.5 kB at
+        // 8 Mbps = 2.5 ms, + 100 µs
+        let nic_d = net.egress(0, "rpi1", 0, 2_500);
+        assert_eq!(nic_d, 2_500 + 100);
+        // uplink was busy until d; second message queues behind it
+        let d2 = net.wan_up(0, nic_d, 2_500);
+        assert_eq!(d2, d.max(nic_d) + net.uplink[0].ser_time(2_500));
+        // CC-side egress feeds the downlink: 2.5 kB at 1000 Mbps =
+        // 20 µs, + 10 µs
+        let cc = net.cc_index();
+        let srv_nic = net.egress(cc, "srv1", 0, 2_500);
+        assert_eq!(srv_nic, 20 + 10);
+        let d3 = net.wan_down(0, srv_nic, 2_500);
+        assert_eq!(d3, srv_nic + net.downlink[0].ser_time(2_500));
+    }
+
+    #[test]
+    fn lan_hop_is_bus_to_receiver_only() {
+        // `egress` + N x `lan_hop` is the fan-out shape: the source
+        // NIC is paid once, every receiver then pays LAN + own NIC
+        let mut net = NetFabric::new(&contended_cfg());
+        let bus_at = net.egress(0, "rpi1", 0, 10_000);
+        assert_eq!(bus_at, 10_000 + 100);
+        let d1 = net.lan_hop(0, "rpi2", bus_at, 10_000);
+        assert_eq!(d1, bus_at + 800 + 500);
+        // the second receiver queues on the LAN, not on rpi1's NIC
+        let d2 = net.lan_hop(0, "rpi3", bus_at, 10_000);
+        assert_eq!(d2, bus_at + 2 * 800 + 500);
+        assert_eq!(
+            net.nic(0, "rpi1").unwrap().link.msgs_sent,
+            1,
+            "one publish = one egress serialization, however many receivers"
+        );
+    }
+
+    #[test]
+    fn ingress_charges_only_the_destination_nic() {
+        let mut net = NetFabric::new(&contended_cfg());
+        let free = net.ingress(0, "rpi2", 1000, 50_000);
+        assert_eq!(free, 1000, "no NIC: bridge fan-out is free");
+        let nic = net.ingress(0, "rpi1", 1000, 8_000);
+        assert_eq!(nic, 1000 + 8_000 + 100); // 8 Mbps → 1 µs/byte, +100 µs
+        assert_eq!(net.lan(0).unwrap().bytes_sent, 0, "ingress must not touch the LAN");
+    }
+
+    #[test]
+    fn unlimited_nic_counts_but_never_delays() {
+        let mut cfg = contended_cfg();
+        cfg.nics.push(NicSpec {
+            cluster: "ec-1".into(),
+            node: "rpi3".into(),
+            mbps: f64::INFINITY,
+            delay_us: 0.0,
+        });
+        let mut net = NetFabric::new(&cfg);
+        assert_eq!(net.nic(0, "rpi3").unwrap().mbps(), None);
+        let d = net.ingress(0, "rpi3", 777, 1 << 30);
+        assert_eq!(d, 777, "unlimited NIC must add zero time");
+        assert_eq!(net.nic(0, "rpi3").unwrap().link.bytes_sent, 1 << 30);
+        assert_eq!(net.nic(0, "rpi3").unwrap().link.msgs_sent, 1);
+    }
+
+    #[test]
+    fn cc_lan_charges_cross_node_cc_hops() {
+        let mut net = NetFabric::new(&contended_cfg());
+        let cc = net.cc_index();
+        // 125_000 B on a 1000 Mbps CC LAN = 1 ms ser + 100 µs delay,
+        // srv1's NIC (1000 Mbps, 10 µs) pays first: 1 ms + 10 µs
+        let d = net.intra_hop(cc, "srv1", "srv2", 0, 125_000);
+        assert_eq!(d, (1000 + 10) + (1000 + 100));
+        assert_eq!(net.lan(cc).unwrap().bytes_sent, 125_000);
     }
 
     #[test]
     fn jitter_is_bounded_and_deterministic() {
         let mk = || {
-            let mut l = Link::mbps("j", 100.0, 1000);
+            let mut l = Link::mbps("j", 100.0, 1000.0);
             l.jitter = 5000;
             l
         };
@@ -278,7 +859,7 @@ mod tests {
         // message n+1 (small sample) could arrive before message n
         // (large sample) — impossible on a FIFO serialization queue.
         // The clamp makes delivery times monotonic per link.
-        let mut l = Link::mbps("fifo-jitter", 1000.0, 1000);
+        let mut l = Link::mbps("fifo-jitter", 1000.0, 1000.0);
         l.jitter = 50_000; // 50 ms of jitter vs ~1 us serialization
         let mut last = 0;
         let mut clamped = false;
@@ -297,11 +878,101 @@ mod tests {
 
     #[test]
     fn reshaping_bandwidth_changes_ser_time() {
-        let mut l = Link::mbps("r", 20.0, 0);
+        let mut l = Link::mbps("r", 20.0, 0.0);
         let before = l.ser_time(2500);
         l.set_bw_bps((5.0 * 1e6) as u64); // degrade to 5 Mbps
         assert_eq!(l.ser_time(2500), before * 4);
         l.set_bw_bps(0); // clamps, never div-by-zero
         assert!(l.ser_time(1) > 0);
+    }
+
+    #[test]
+    fn net_overrides_parse_and_apply() {
+        let doc = crate::yamlite::parse(
+            "
+lan_mbps: 50
+wan_delay_ms: 25
+cc_nodes: 2
+cc_lan_mbps: 1000
+nics:
+  - cluster: ec-1
+    node: rpi1
+    mbps: 2
+    delay_ms: 0.2
+  - cluster: cc
+    node: gpu-ws
+    mbps: 1000
+",
+        )
+        .unwrap();
+        let ov = NetOverrides::from_value(&doc).unwrap();
+        assert_eq!(ov.cc_nodes, Some(2));
+        assert_eq!(ov.nics.len(), 2);
+        assert_eq!(ov.nics[0].delay_us, 200.0);
+        assert_eq!(ov.nics[1].delay_us, 0.0);
+        let mut cfg = NetConfig::default();
+        ov.apply(&mut cfg);
+        assert_eq!(cfg.lan_mbps, 50.0);
+        assert_eq!(cfg.wan_delay, 25_000);
+        assert_eq!(cfg.uplink_mbps, 20.0, "absent fields keep the base value");
+        assert_eq!(cfg.cc_lan_mbps, Some(1000.0));
+        assert_eq!(cfg.nics.len(), 2);
+        let net = NetFabric::new(&cfg);
+        assert!(net.has_constrained_nics());
+        assert!(net.nic(0, "rpi1").is_some());
+        assert!(net.nic(3, "gpu-ws").is_some());
+    }
+
+    #[test]
+    fn net_overrides_reject_garbage() {
+        let bad = crate::yamlite::parse("nics:\n  - node: rpi1\n    mbps: 2\n").unwrap();
+        assert!(NetOverrides::from_value(&bad).is_err(), "missing cluster");
+        for leaf in ["lan-7", "ec-0", "ec-abc", "ec-"] {
+            let bad = crate::yamlite::parse(&format!(
+                "nics:\n  - cluster: {leaf}\n    node: x\n    mbps: 2\n"
+            ))
+            .unwrap();
+            assert!(NetOverrides::from_value(&bad).is_err(), "bad cluster leaf '{leaf}'");
+        }
+        let bad =
+            crate::yamlite::parse("nics:\n  - cluster: ec-1\n    node: x\n").unwrap();
+        assert!(NetOverrides::from_value(&bad).is_err(), "missing mbps");
+        // zero/negative link bandwidths would divide by zero downstream
+        for field in ["lan_mbps", "uplink_mbps", "downlink_mbps", "cc_lan_mbps"] {
+            for v in ["0", "-5"] {
+                let bad = crate::yamlite::parse(&format!("{field}: {v}\n")).unwrap();
+                assert!(
+                    NetOverrides::from_value(&bad).is_err(),
+                    "{field}: {v} must be rejected"
+                );
+            }
+        }
+        // present-but-mistyped fields are loud errors, never a silent
+        // fallback to the base value
+        for doc in [
+            "wan_delay_ms: \"50\"\n",
+            "lan_mbps: fast\n",
+            "cc_nodes: two\n",
+            "cc_nodes: 2.9\n",
+            "cc_nodes: -2\n",
+            "nics:\n  - cluster: ec-1\n    node: x\n    mbps: 2\n    delay_ms: abc\n",
+        ] {
+            let v = crate::yamlite::parse(doc).unwrap();
+            assert!(NetOverrides::from_value(&v).is_err(), "must reject: {doc}");
+        }
+        // and the Link constructor clamps even if one slips through
+        assert!(Link::mbps("z", 0.0, 0.0).ser_time(1) >= 1);
+        assert!(Link::mbps("n", f64::NAN, 0.0).ser_time(1_000_000) > 0);
+    }
+
+    #[test]
+    fn cluster_index_maps_leafs() {
+        let cfg = NetConfig { num_ecs: 2, ..Default::default() };
+        assert_eq!(cfg.cluster_index("ec-1"), Some(0));
+        assert_eq!(cfg.cluster_index("ec-2"), Some(1));
+        assert_eq!(cfg.cluster_index("cc"), Some(2));
+        assert_eq!(cfg.cluster_index("ec-3"), None);
+        assert_eq!(cfg.cluster_index("ec-0"), None);
+        assert_eq!(cfg.cluster_index("nope"), None);
     }
 }

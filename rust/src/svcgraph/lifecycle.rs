@@ -42,6 +42,12 @@
 //!
 //! ```yaml
 //! duration: 110          # virtual seconds to simulate
+//! network:               # OPTIONAL NetFabric overrides (per-node
+//!   cc_nodes: 2          # NICs, CC cluster shape, link shaping —
+//!   nics:                # see simnet::NetOverrides for the grammar)
+//!     - cluster: ec-1
+//!       node: rpi1
+//!       mbps: 2
 //! ops:
 //!   - at: 0              # virtual seconds
 //!     op: deploy         # deploy | update | fail-node | remove
@@ -70,7 +76,8 @@ use crate::infra::{Infrastructure, NodeStatus};
 use crate::json::{self, Value};
 use crate::platform::api::{kinds, ApiServer};
 use crate::platform::controller::plan_to_value;
-use crate::platform::orchestrator;
+use crate::platform::orchestrator::{self, NetHints};
+use crate::simnet::NetOverrides;
 use crate::topology::Topology;
 use crate::util::{secs, to_millis, AceId, SimTime};
 use crate::yamlite;
@@ -124,6 +131,9 @@ pub struct LifecycleScenario {
     pub steps: Vec<ScenarioStep>,
     /// Virtual horizon (µs): the run stops here.
     pub duration: SimTime,
+    /// Optional `network:` overrides (per-node NICs, CC cluster shape,
+    /// link shaping) the app driver applies to its base `NetConfig`.
+    pub network: Option<NetOverrides>,
 }
 
 impl LifecycleScenario {
@@ -180,7 +190,11 @@ impl LifecycleScenario {
         if steps.is_empty() {
             bail!("scenario has no ops");
         }
-        Ok(LifecycleScenario { steps, duration })
+        let network = match doc.get("network") {
+            Value::Null => None,
+            v => Some(NetOverrides::from_value(v).context("scenario: bad 'network'")?),
+        };
+        Ok(LifecycleScenario { steps, duration, network })
     }
 
     /// App named by the first deploy/update op (CLI dispatch).
@@ -278,6 +292,9 @@ struct PlaneState {
     report: RefCell<LifecycleReport>,
     heartbeat_period: SimTime,
     failure_timeout: SimTime,
+    /// Per-node NIC bandwidths for network-aware placement (degenerate
+    /// hints reproduce the CPU-spread-only scoring byte-for-byte).
+    net_hints: NetHints,
 }
 
 /// Handle onto an installed control plane (post-run inspection).
@@ -306,7 +323,10 @@ impl ControlPlane {
     /// Install the control plane into a NOT-yet-started runtime: one
     /// node-agent component per registered node, a monitor tap on the
     /// CC, every scenario op as a `Call` event at its time, and
-    /// recurring monitor sweeps until the scenario horizon. Drive the
+    /// recurring monitor sweeps until the scenario horizon. Placement
+    /// (initial and shield/redeploy) scores through `net_hints` —
+    /// derive them from the runtime's `NetFabric` so the orchestrator
+    /// sees the same access links the transport charges. Drive the
     /// runtime with `run_until(scenario.duration)` afterwards.
     pub fn install(
         rt: &mut GraphRuntime,
@@ -315,6 +335,7 @@ impl ControlPlane {
         plan_hook: Option<PlanHook>,
         scenario: &LifecycleScenario,
         cfg: ControlPlaneConfig,
+        net_hints: NetHints,
     ) -> Result<ControlPlane> {
         anyhow::ensure!(
             cfg.heartbeat_period_s > 0.0 && cfg.failure_timeout_s > 0.0 && cfg.sweep_period_s > 0.0,
@@ -331,6 +352,7 @@ impl ControlPlane {
             report: RefCell::new(LifecycleReport::default()),
             heartbeat_period: secs(cfg.heartbeat_period_s),
             failure_timeout: secs(cfg.failure_timeout_s),
+            net_hints,
         });
         // one agent per registered node (§4.3.1: agents are deployed at
         // node registration, before any application exists)
@@ -419,15 +441,16 @@ fn apply_op(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, op: L
 /// nodes).
 fn submit_topology(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, topo: Topology) {
     let now = sch.now();
-    let new_plan = match orchestrator::place(&topo, &st.infra.borrow()) {
-        Ok(p) => p,
-        Err(e) => {
-            st.report
-                .borrow_mut()
-                .log(now, format!("ERROR placing '{}' v{}: {e}", topo.app, topo.version));
-            return;
-        }
-    };
+    let new_plan =
+        match orchestrator::place_with_net(&topo, &st.infra.borrow(), Some(&st.net_hints)) {
+            Ok(p) => p,
+            Err(e) => {
+                st.report
+                    .borrow_mut()
+                    .log(now, format!("ERROR placing '{}' v{}: {e}", topo.app, topo.version));
+                return;
+            }
+        };
     let old = st.apps.borrow().get(&topo.app).map(|(_, p)| p.clone());
     let touched: Vec<AceId> = match &old {
         None => {
@@ -580,10 +603,11 @@ fn send_node_instruction(
         return;
     };
     let bytes = doc.len() as u64;
+    // the WAN downlink is charged here; the Bridge delivery then pays
+    // the TARGET NODE's access link in `Fabric::route` (bridge-arrival
+    // ingress), so instructions contend on the real node's NIC
     let arrival = match site.cluster {
-        ClusterRef::Ec(k) if k < w.fabric.net.downlink.len() => {
-            w.fabric.net.downlink[k].send(now, bytes)
-        }
+        ClusterRef::Ec(k) if k < w.fabric.net.num_ecs() => w.fabric.net.wan_down(k, now, bytes),
         ClusterRef::Ec(_) => {
             st.report
                 .borrow_mut()
@@ -672,15 +696,16 @@ fn monitor_sweep(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld) 
         .map(|(a, (t, p))| (a.clone(), t.clone(), p.clone()))
         .collect();
     for (app, topo, old_plan) in apps {
-        let new_plan = match orchestrator::place(&topo, &st.infra.borrow()) {
-            Ok(p) => p,
-            Err(e) => {
-                st.report
-                    .borrow_mut()
-                    .log(now, format!("ERROR re-placing '{app}' after shield: {e}"));
-                continue;
-            }
-        };
+        let new_plan =
+            match orchestrator::place_with_net(&topo, &st.infra.borrow(), Some(&st.net_hints)) {
+                Ok(p) => p,
+                Err(e) => {
+                    st.report
+                        .borrow_mut()
+                        .log(now, format!("ERROR re-placing '{app}' after shield: {e}"));
+                    continue;
+                }
+            };
         let diff = diff_plans(&old_plan, &new_plan);
         if diff.is_noop() {
             continue;
@@ -931,6 +956,7 @@ ops:
     fn scenario_parses_all_op_kinds() {
         let s = LifecycleScenario::parse(SCENARIO).unwrap();
         assert_eq!(s.duration, secs(20.0));
+        assert!(s.network.is_none(), "no network block in this script");
         assert_eq!(s.steps.len(), 4);
         assert_eq!(s.first_app(), Some("mini"));
         assert!(matches!(&s.steps[0].op, LifecycleOp::Deploy(t) if t.version == 1));
@@ -940,6 +966,47 @@ ops:
             if n.to_string() == "infra-u/ec-1/rpi1"));
         assert!(matches!(&s.steps[3].op, LifecycleOp::Remove(a) if a == "mini"));
         assert_eq!(s.steps[2].at, secs(10.0));
+    }
+
+    #[test]
+    fn scenario_parses_network_overrides() {
+        let s = LifecycleScenario::parse(
+            "
+duration: 5
+network:
+  cc_nodes: 2
+  cc_lan_mbps: 1000
+  nics:
+    - cluster: ec-1
+      node: rpi1
+      mbps: 2
+      delay_ms: 0.2
+ops:
+  - at: 0
+    op: remove
+    app: x
+",
+        )
+        .unwrap();
+        let net = s.network.expect("network block parsed");
+        assert_eq!(net.cc_nodes, Some(2));
+        assert_eq!(net.cc_lan_mbps, Some(1000.0));
+        assert_eq!(net.nics.len(), 1);
+        assert_eq!(net.nics[0].node, "rpi1");
+        assert_eq!(net.nics[0].mbps, 2.0);
+        // and a malformed block is an error, not silently ignored
+        let bad = "
+duration: 5
+network:
+  nics:
+    - node: rpi1
+ops:
+  - at: 0
+    op: remove
+    app: x
+";
+        let err = LifecycleScenario::parse(bad).unwrap_err().to_string();
+        assert!(err.contains("network"), "{err}");
     }
 
     #[test]

@@ -21,13 +21,26 @@
 //!
 //! Components implement [`Component`]: they receive `on_message` /
 //! `on_timer` callbacks under virtual time and talk to the world only
-//! through [`Ctx`] (publish to the local bus, set timers). Routing:
+//! through [`Ctx`] (publish to the local bus, set timers). Routing
+//! charges HOP BY HOP on the [`NetFabric`] link graph (every node may
+//! have its own access link in front of its cluster's shared LAN —
+//! the CC included, since PR 5 a real multi-node cluster):
 //!
 //!   * same node            → delivered instantly (in-process hand-off);
-//!   * same EC, other node  → charged on the EC's LAN link;
-//!   * `cloud/#` from an EC → bridged to the CC bus over that EC's WAN
-//!     uplink (serialization + delay + jitter, FIFO queueing);
-//!   * `edge/ec<k>/#` from the CC → bridged to EC k over its downlink.
+//!   * same cluster, other node → src NIC → cluster LAN → dst NIC;
+//!   * `cloud/#` from an EC → src NIC, then bridged to the CC bus over
+//!     that EC's WAN uplink (serialization + delay + jitter, FIFO
+//!     queueing); CC-side fan-out pays each receiver's NIC;
+//!   * `edge/ec<k>/#` from the CC → src NIC, then EC k's downlink,
+//!     then each receiver's NIC.
+//!
+//! The sender's NIC is paid AT MOST ONCE per publish (the single
+//! transmit up to the cluster message service); receivers and bridges
+//! fan out from that egress time.
+//!
+//! In the degenerate configuration (no NICs, free single-node CC) all
+//! NIC legs are free and this is exactly the pre-PR-5 flat model —
+//! every golden trajectory replays byte-for-byte.
 //!
 //! Byte counters on the links ARE the paper's BWC metric — applications
 //! no longer hand-compute bandwidth, they just send messages.
@@ -53,7 +66,7 @@ pub mod lifecycle;
 use crate::deploy::{DeploymentPlan, Instance};
 use crate::des::{Scheduler, SimEvent};
 use crate::pubsub::topic::TopicTrie;
-use crate::simnet::EdgeCloudNet;
+use crate::simnet::NetFabric;
 use crate::util::SimTime;
 use anyhow::{anyhow, bail, Result};
 use std::any::Any;
@@ -93,15 +106,10 @@ pub fn site_of_node(node: &crate::util::AceId) -> Result<Site> {
         .parent()
         .ok_or_else(|| anyhow!("node id '{node}' too shallow"))?;
     let leaf = cluster_id.leaf().to_string();
+    // the shared `ec-N`/`cc` leaf convention (simnet::parse_ec_leaf)
     let cluster = if leaf == "cc" {
         ClusterRef::Cc
-    } else if let Some(n) = leaf.strip_prefix("ec-") {
-        let n: usize = n
-            .parse()
-            .map_err(|_| anyhow!("node '{node}': bad EC id '{leaf}'"))?;
-        if n == 0 {
-            bail!("node '{node}': EC ids start at 1");
-        }
+    } else if let Some(n) = crate::simnet::parse_ec_leaf(&leaf) {
         ClusterRef::Ec(n - 1)
     } else {
         bail!("node '{node}': unknown cluster '{leaf}'");
@@ -163,8 +171,9 @@ fn cidx(c: ClusterRef, num_ecs: usize) -> usize {
 /// The transport fabric: per-cluster subscription tables, bridge rules,
 /// and the simnet links that charge virtual time and count BWC bytes.
 pub struct Fabric {
-    /// The simulated links (LAN per EC, WAN pairs to the CC).
-    pub net: EdgeCloudNet,
+    /// The simulated link graph (per-node NICs + per-cluster LAN
+    /// segments + WAN pairs to the CC).
+    pub net: NetFabric,
     num_ecs: usize,
     /// Per cluster bus: ECs 0..num_ecs-1, then the CC at index num_ecs.
     /// Topic-trie index of component subscriptions (value = component
@@ -221,6 +230,14 @@ impl Fabric {
     ) {
         let now = sch.now();
         let ci = cidx(cluster, self.num_ecs);
+        // A locally published message pays its sender's access link AT
+        // MOST ONCE — the single physical transmit up to the cluster
+        // message service — however many receivers/bridges fan out
+        // from the bus. Charged lazily on the first hop that actually
+        // leaves the node (same-node-only publishes never touch it);
+        // bridge re-entries (`from_site == None`) have no modelled
+        // src. In the degenerate config this is `now` either way.
+        let mut src_at: Option<SimTime> = None;
         // trie walk fills the reused scratch in subscription-insertion
         // order — the exact order the old linear scan delivered in,
         // which the DES scheduler's insertion-sequence tie-breaking
@@ -232,19 +249,24 @@ impl Fabric {
         self.subs[ci].collect_matches_into(&msg.topic, &mut targets);
         for &(_, target) in &targets {
             let arrival = match from_site {
-                // bridge arrivals fan out locally at no modelled cost
-                // (the cluster message service is on the receiving LAN)
-                None => now,
+                // bridge arrivals fan out from the cluster message
+                // service: only the receiver's access link is charged
+                None => self.net.ingress(ci, &self.sites[target].node, now, msg.wire_bytes),
                 Some(f) => {
                     if self.sites[target].node == f.node {
                         now // node-internal hand-off
                     } else {
-                        match cluster {
-                            ClusterRef::Ec(k) => self.net.lan[k].send(now, msg.wire_bytes),
-                            // the CC is a single modelled node; no CC
-                            // LAN in the §5.1.1 testbed
-                            ClusterRef::Cc => now,
-                        }
+                        // hop-by-hop: src NIC (once) → LAN → dst NIC
+                        // (free legs are exactly the flat model)
+                        let at = match src_at {
+                            Some(t) => t,
+                            None => {
+                                let t = self.net.egress(ci, &f.node, now, msg.wire_bytes);
+                                src_at = Some(t);
+                                t
+                            }
+                        };
+                        self.net.lan_hop(ci, &self.sites[target].node, at, msg.wire_bytes)
                     }
                 }
             };
@@ -260,17 +282,27 @@ impl Fabric {
             if to == origin {
                 continue; // loop prevention, like the threaded Bridge
             }
+            let at = match (src_at, from_site) {
+                (Some(t), _) => t,
+                (None, Some(f)) => {
+                    let t = self.net.egress(ci, &f.node, now, msg.wire_bytes);
+                    src_at = Some(t);
+                    t
+                }
+                (None, None) => now,
+            };
             let arrival = match (cluster, to) {
                 (ClusterRef::Ec(k), ClusterRef::Cc) => {
                     self.bridged_up += 1;
-                    self.net.uplink[k].send(now, msg.wire_bytes)
+                    self.net.wan_up(k, at, msg.wire_bytes)
                 }
                 (ClusterRef::Cc, ClusterRef::Ec(k)) => {
                     self.bridged_down += 1;
-                    self.net.downlink[k].send(now, msg.wire_bytes)
+                    self.net.wan_down(k, at, msg.wire_bytes)
                 }
-                // EC↔EC bridges have no modelled link: instant
-                _ => now,
+                // EC↔EC bridges have no modelled WAN link: the egress
+                // leg (already paid) is the whole cost
+                _ => at,
             };
             sch.push_at(arrival, Event::Bridge { origin, to, msg: msg.clone() });
         }
@@ -471,7 +503,7 @@ impl Ctx<'_> {
     }
 
     /// Read-only view of the network (for introspection/policies).
-    pub fn net(&self) -> &EdgeCloudNet {
+    pub fn net(&self) -> &NetFabric {
         &self.fabric.net
     }
 }
@@ -484,11 +516,11 @@ pub struct GraphRuntime {
 }
 
 impl GraphRuntime {
-    /// A runtime over `net` (one LAN per EC + WAN pairs to the CC),
-    /// with the standard bridge rules of §4.3.2: `cloud/#` EC→CC and
-    /// `edge/ec<k>/#` CC→EC k.
-    pub fn new(net: EdgeCloudNet) -> Self {
-        let num_ecs = net.uplink.len();
+    /// A runtime over `net` (per-node NICs + one LAN segment per
+    /// cluster + WAN pairs to the CC), with the standard bridge rules
+    /// of §4.3.2: `cloud/#` EC→CC and `edge/ec<k>/#` CC→EC k.
+    pub fn new(net: NetFabric) -> Self {
+        let num_ecs = net.num_ecs();
         let mut bridge_subs: Vec<TopicTrie<ClusterRef>> =
             (0..=num_ecs).map(|_| TopicTrie::new()).collect();
         for k in 0..num_ecs {
@@ -599,8 +631,8 @@ impl GraphRuntime {
         self.sch.executed()
     }
 
-    /// The simulated network (links + byte counters).
-    pub fn net(&self) -> &EdgeCloudNet {
+    /// The simulated network (link graph + byte counters).
+    pub fn net(&self) -> &NetFabric {
         &self.world.fabric.net
     }
 
@@ -624,7 +656,7 @@ impl GraphRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::simnet::NetConfig;
+    use crate::simnet::{NetConfig, NicSpec};
     use crate::util::millis;
     use std::cell::RefCell;
 
@@ -664,7 +696,7 @@ mod tests {
     }
 
     fn rt(wan_delay_ms: f64) -> GraphRuntime {
-        GraphRuntime::new(EdgeCloudNet::new(&NetConfig {
+        GraphRuntime::new(NetFabric::new(&NetConfig {
             num_ecs: 2,
             wan_delay: millis(wan_delay_ms),
             ..Default::default()
@@ -705,7 +737,7 @@ mod tests {
         // 12.5 kB on a 100 Mbps LAN = 1 ms serialization + 0.5 ms delay
         assert_eq!(log.borrow().len(), 1);
         assert_eq!(log.borrow()[0].0, 1500);
-        assert_eq!(r.net().lan[0].bytes_sent, 12_500);
+        assert_eq!(r.net().lan(0).unwrap().bytes_sent, 12_500);
         assert_eq!(r.net().wan_bytes(), 0, "LAN hop must not touch the WAN");
     }
 
@@ -728,6 +760,163 @@ mod tests {
         assert_eq!(r.net().uplink[1].bytes_sent, 2_500);
         assert_eq!(r.net().wan_bytes(), 2_500);
         assert_eq!(r.fabric().bridged_up, 1);
+    }
+
+    /// A runtime whose EC-0 nodes have shaped access links and whose
+    /// CC is a two-node cluster with a real LAN segment.
+    fn rt_per_node() -> GraphRuntime {
+        GraphRuntime::new(NetFabric::new(&NetConfig {
+            num_ecs: 2,
+            lan_delay: 500,
+            cc_lan_mbps: Some(1000.0),
+            cc_lan_delay: 100,
+            nics: vec![
+                NicSpec {
+                    cluster: "ec-1".into(),
+                    node: "rpi1".into(),
+                    mbps: 10.0,
+                    delay_us: 100.0,
+                },
+                NicSpec {
+                    cluster: "ec-1".into(),
+                    node: "minipc".into(),
+                    mbps: 100.0,
+                    delay_us: 50.0,
+                },
+                NicSpec {
+                    cluster: "cc".into(),
+                    node: "srv2".into(),
+                    mbps: 1000.0,
+                    delay_us: 10.0,
+                },
+            ],
+            ..Default::default()
+        }))
+    }
+
+    #[test]
+    fn cross_node_hop_pays_src_nic_lan_and_dst_nic() {
+        let mut r = rt_per_node();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        r.add(
+            site(ClusterRef::Ec(0), "minipc"),
+            Box::new(Probe { filters: vec!["a/#".into()], log: log.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Ec(0), "rpi1"),
+            Box::new(Shot { topic: "a/x".into(), bytes: 12_500 }),
+        );
+        r.run(1000);
+        // src NIC: 12.5 kB at 10 Mbps = 10 ms + 0.1 ms  → 10_100
+        // LAN:     12.5 kB at 100 Mbps = 1 ms + 0.5 ms  → 11_600
+        // dst NIC: 12.5 kB at 100 Mbps = 1 ms + 0.05 ms → 12_650
+        assert_eq!(log.borrow().len(), 1);
+        assert_eq!(log.borrow()[0].0, 12_650);
+        assert_eq!(r.net().nic(0, "rpi1").unwrap().link.bytes_sent, 12_500);
+        assert_eq!(r.net().lan(0).unwrap().bytes_sent, 12_500);
+        assert_eq!(r.net().nic(0, "minipc").unwrap().link.bytes_sent, 12_500);
+        assert_eq!(r.net().wan_bytes(), 0);
+    }
+
+    #[test]
+    fn uplink_bridge_pays_the_senders_nic_first() {
+        let mut r = rt_per_node();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        r.add(
+            site(ClusterRef::Cc, "gpu-ws"),
+            Box::new(Probe { filters: vec!["cloud/#".into()], log: log.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Ec(0), "rpi1"),
+            Box::new(Shot { topic: "cloud/up".into(), bytes: 2_500 }),
+        );
+        r.run(1000);
+        // src NIC: 2.5 kB at 10 Mbps = 2 ms + 0.1 ms → 2_100
+        // uplink:  2.5 kB at 20 Mbps = 1 ms          → 3_100
+        // gpu-ws has no NIC: CC-side fan-out is free
+        assert_eq!(log.borrow().len(), 1);
+        assert_eq!(log.borrow()[0].0, 3_100);
+        assert_eq!(r.net().nic(0, "rpi1").unwrap().link.bytes_sent, 2_500);
+        assert_eq!(r.net().wan_bytes(), 2_500);
+    }
+
+    #[test]
+    fn fanout_pays_the_senders_nic_exactly_once() {
+        // one publish matching 2 cross-node receivers AND the cloud/#
+        // bridge: the sender's access link serializes ONCE (the single
+        // physical transmit to the cluster message service); receivers
+        // queue on the LAN from that egress time, the WAN leg starts
+        // there too
+        let mut r = rt_per_node();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for node in ["minipc", "nix"] {
+            r.add(
+                site(ClusterRef::Ec(0), node),
+                Box::new(Probe { filters: vec!["cloud/#".into()], log: log.clone() }),
+            );
+        }
+        r.add(
+            site(ClusterRef::Cc, "gpu-ws"),
+            Box::new(Probe { filters: vec!["cloud/#".into()], log: log.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Ec(0), "rpi1"),
+            Box::new(Shot { topic: "cloud/up".into(), bytes: 2_500 }),
+        );
+        r.run(1000);
+        let nic = r.net().nic(0, "rpi1").unwrap();
+        assert_eq!(nic.link.msgs_sent, 1, "src NIC must serialize the publish once");
+        assert_eq!(nic.link.bytes_sent, 2_500);
+        // egress: 2.5 kB at 10 Mbps = 2 ms + 0.1 ms → 2_100
+        // receiver 1 (minipc): LAN 0.2 ms + 0.5 ms → 2_800, NIC
+        //   0.2 ms + 0.05 ms → 3_050
+        // receiver 2 (nix, no NIC): second LAN send → 3_000
+        // CC probe: uplink 1 ms from 2_100 → 3_100
+        let mut ats: Vec<SimTime> = log.borrow().iter().map(|&(at, _)| at).collect();
+        ats.sort_unstable();
+        assert_eq!(ats, vec![3_000, 3_050, 3_100]);
+        assert_eq!(r.net().lan(0).unwrap().msgs_sent, 2, "one LAN copy per receiver");
+    }
+
+    #[test]
+    fn bridge_arrival_pays_the_receivers_nic() {
+        let mut r = rt_per_node();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        r.add(
+            site(ClusterRef::Cc, "srv2"),
+            Box::new(Probe { filters: vec!["cloud/#".into()], log: log.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Ec(1), "nix"), // EC 1 has no NICs
+            Box::new(Shot { topic: "cloud/up".into(), bytes: 2_500 }),
+        );
+        r.run(1000);
+        // uplink: 1 ms → 1_000; srv2 NIC: 2.5 kB at 1000 Mbps = 20 µs
+        // + 10 µs → 1_030
+        assert_eq!(log.borrow().len(), 1);
+        assert_eq!(log.borrow()[0].0, 1_030);
+        assert_eq!(r.net().nic(r.net().cc_index(), "srv2").unwrap().link.bytes_sent, 2_500);
+    }
+
+    #[test]
+    fn cc_cross_node_hop_rides_the_cc_lan() {
+        let mut r = rt_per_node();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        r.add(
+            site(ClusterRef::Cc, "srv2"),
+            Box::new(Probe { filters: vec!["cc/#".into()], log: log.clone() }),
+        );
+        r.add(
+            site(ClusterRef::Cc, "gpu-ws"),
+            Box::new(Shot { topic: "cc/x".into(), bytes: 125_000 }),
+        );
+        r.run(1000);
+        // gpu-ws has no NIC; CC LAN: 125 kB at 1000 Mbps = 1 ms +
+        // 0.1 ms → 1_100; srv2 NIC: 1 ms + 10 µs → 2_110
+        assert_eq!(log.borrow().len(), 1);
+        assert_eq!(log.borrow()[0].0, 2_110);
+        assert_eq!(r.net().lan(r.net().cc_index()).unwrap().bytes_sent, 125_000);
+        assert_eq!(r.net().wan_bytes(), 0, "CC-internal traffic must stay off the WAN");
     }
 
     #[test]
@@ -927,7 +1116,7 @@ mod tests {
         use crate::topology::{Topology, VIDEOQUERY_TOPOLOGY};
         let topo = Topology::parse(VIDEOQUERY_TOPOLOGY).unwrap();
         let plan = orchestrator::place(&topo, &paper_testbed("sg")).unwrap();
-        let mut r = GraphRuntime::new(EdgeCloudNet::new(&NetConfig::default()));
+        let mut r = GraphRuntime::new(NetFabric::new(&NetConfig::default()));
         let log = Rc::new(RefCell::new(Vec::new()));
         let n = r
             .deploy(&plan, |inst, _site| {

@@ -161,6 +161,7 @@ fn fed_scenario() -> LifecycleScenario {
             ScenarioStep { at: secs(9.0), op: LifecycleOp::Update(fed_topo(2, 3)) },
         ],
         duration: secs(14.0),
+        network: None,
     }
 }
 

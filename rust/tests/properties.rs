@@ -217,7 +217,7 @@ fn prop_link_deliveries_are_fifo_and_conserve_bytes() {
         let mut link = Link::mbps(
             "l",
             1.0 + s.next_f32() as f64 * 99.0,
-            s.next_range(0, 50_000) as u64,
+            s.next_range(0, 50_000) as f64,
         );
         let n = s.next_range(1, 30) as usize;
         let mut total = 0u64;
@@ -247,7 +247,7 @@ fn prop_jittered_link_deliveries_stay_fifo() {
         let mut link = Link::mbps(
             "j",
             1.0 + s.next_f32() as f64 * 999.0,
-            s.next_range(0, 50_000) as u64,
+            s.next_range(0, 50_000) as f64,
         );
         link.jitter = s.next_range(0, 100_000) as u64;
         link.jitter_seed = s.next_range(0, i64::MAX) as u64;
