@@ -1,7 +1,9 @@
 //! Zero-allocation event hot path (PR 3 ablation): typed by-value DES
-//! events vs the boxed closure lane, trie match collection with vs
-//! without a reused scratch buffer, and the end-to-end 10k-component
-//! fabric storm riding the allocation-free `Fabric::route`.
+//! events vs the boxed closure lane, the calendar-queue scheduler vs
+//! the binary heap under a timer-dense heartbeat storm (PR 6), trie
+//! match collection with vs without a reused scratch buffer, and the
+//! end-to-end 10k-component fabric storm riding the allocation-free
+//! `Fabric::route`.
 //!
 //! The measurement bodies live in `ace::benchkit` so `ace bench
 //! --json` (the CI `BENCH_*.json` emitter) runs the same code.
@@ -27,6 +29,21 @@ fn main() {
             d.boxed_heap_eps,
             d.typed_heap_eps,
             d.typed_heap_eps / d.boxed_heap_eps
+        );
+    }
+
+    println!("\n# DES timer storm: calendar queue (wheel) vs binary heap\n");
+    println!("| timers | events | heap ev/s | wheel ev/s | speedup |");
+    println!("|---|---|---|---|---|");
+    for &timers in &[1_000usize, 10_000] {
+        let t = benchkit::des_timer_storm(timers, 1_000_000);
+        println!(
+            "| {} | {} | {:.0} | {:.0} | {:.2}x |",
+            t.timers,
+            t.events,
+            t.heap_events_per_sec,
+            t.wheel_events_per_sec,
+            t.wheel_events_per_sec / t.heap_events_per_sec
         );
     }
 

@@ -13,7 +13,7 @@
 //! Run: `cargo bench --bench fabric_routing`
 
 use ace::benchkit::{self, make_filters, make_names};
-use ace::pubsub::topic::{self, TopicTrie};
+use ace::pubsub::topic::{self, SymbolTable, TopicTrie};
 use ace::util::prng::Stream;
 use std::time::Instant;
 
@@ -23,9 +23,10 @@ fn bench_index(n_subs: usize, n_pubs: usize) {
     let filters = make_filters(n_subs, groups, &mut s);
     let names = make_names(n_pubs, groups, &mut s);
 
+    let mut table = SymbolTable::new();
     let mut trie = TopicTrie::new();
     for (i, f) in filters.iter().enumerate() {
-        trie.insert(f, i);
+        trie.insert(&mut table, f, i);
     }
 
     // the pre-index router: scan every subscription per publish
@@ -39,7 +40,7 @@ fn bench_index(n_subs: usize, n_pubs: usize) {
     let t0 = Instant::now();
     let mut trie_hits = 0usize;
     for name in &names {
-        trie_hits += trie.collect_matches(name).len();
+        trie_hits += trie.collect_matches(&table, name).len();
     }
     let trie_s = t0.elapsed().as_secs_f64();
 

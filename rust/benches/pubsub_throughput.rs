@@ -7,7 +7,7 @@
 //!
 //! Run: `cargo bench --bench pubsub_throughput`
 
-use ace::pubsub::topic::{self, TopicTrie};
+use ace::pubsub::topic::{self, SymbolTable, TopicTrie};
 use ace::pubsub::Broker;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -163,9 +163,10 @@ fn main() {
             _ => format!("sensor/room{}/t{}", i % TOPICS, i % 50),
         })
         .collect();
+    let mut table = SymbolTable::new();
     let mut trie = TopicTrie::new();
     for (i, f) in filters.iter().enumerate() {
-        trie.insert(f, i);
+        trie.insert(&mut table, f, i);
     }
     const PUBS: u64 = 20_000;
     let name = |i: u64| format!("sensor/room{}/t{}", i % TOPICS as u64, i % 50);
@@ -179,7 +180,7 @@ fn main() {
     let t0 = Instant::now();
     let mut trie_hits = 0usize;
     for i in 0..PUBS {
-        trie_hits += trie.collect_matches(&name(i)).len();
+        trie_hits += trie.collect_matches(&table, &name(i)).len();
     }
     let trie_us = t0.elapsed().as_secs_f64() / PUBS as f64 * 1e6;
     assert_eq!(trie_hits, linear_hits, "trie must agree with the linear scan");

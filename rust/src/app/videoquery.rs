@@ -989,6 +989,7 @@ fn finalize_metrics(
         edge_decided,
         cloud_decided,
         sim_duration_s: cfg.duration_s,
+        nic_util: rt.net().nic_utilization(),
     };
     // sort the quantile buffer once here, so every downstream reader
     // (tables, CSV, hashes) takes the O(1) indexed path through &self

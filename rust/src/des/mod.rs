@@ -4,12 +4,12 @@
 //! `tc`-shaped WAN links is replaced by a DES so the Figure 5 sweeps are
 //! fast and deterministic. The engine is generic over a `World` type —
 //! the experiment owns its state, the scheduler owns virtual time and
-//! the event heap.
+//! the event queue.
 //!
 //! Two event lanes (DESIGN.md §Event-engine):
 //!
 //! * **Typed lane** — `Scheduler<W, E>` where `E: SimEvent<W>` stores
-//!   events *by value* in the heap, so scheduling is allocation-free
+//!   events *by value* in the queue, so scheduling is allocation-free
 //!   (`push_at`/`push_after`). This is the hot path: `svcgraph` runs
 //!   millions of `Event::{Start, Msg, Timer, Bridge}` per cell through
 //!   it without a single per-event heap allocation.
@@ -19,13 +19,25 @@
 //!   testbed channel phases) ride this lane; a typed-event engine can
 //!   embed it as one enum variant (see `svcgraph::Event::Call`).
 //!
-//! Determinism: ties are broken by insertion sequence number, so a given
-//! seed always produces the same trajectory regardless of the lane
-//! (asserted by the typed-vs-boxed differential in `tests/properties.rs`).
+//! The pending-event store is a [`queue::CalendarQueue`] — a timing
+//! wheel sized for the dense-timer regime (heartbeats, deadlines,
+//! periodic publishes land O(1) in a day bucket) with an overflow heap
+//! for far-future events. The PR-5 global `BinaryHeap` survives as
+//! [`queue::HeapQueue`], the reference implementation the wheel is
+//! differentially tested against (`tests/properties.rs`) and raced
+//! against (`des_timer_storm` in `benchkit`).
+//!
+//! Determinism: ties are broken by insertion sequence number, and the
+//! wheel's `(at, seq)` merge rule reproduces the global heap's pop
+//! order exactly (see `queue`'s module docs for the argument), so a
+//! given seed always produces the same trajectory regardless of lane
+//! or queue (asserted by the typed-vs-boxed and heap-vs-wheel
+//! differentials in `tests/properties.rs`).
+
+pub mod queue;
 
 use crate::util::SimTime;
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use queue::{CalendarQueue, EventQueue};
 use std::marker::PhantomData;
 
 /// A value-typed simulation event: `fire` consumes the event and may
@@ -47,41 +59,11 @@ impl<W> SimEvent<W> for BoxedEvent<W> {
     }
 }
 
-struct Entry<E> {
-    at: SimTime,
-    seq: u64,
-    ev: E,
-}
-
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-
-impl<E> Eq for Entry<E> {}
-
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; reverse for earliest-first.
-        other
-            .at
-            .cmp(&self.at)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
 /// Virtual-time event scheduler, generic over the event type `E`
 /// (typed lane). `Scheduler<W>` defaults `E` to [`BoxedEvent`], the
 /// closure lane.
 pub struct Scheduler<W, E: SimEvent<W> = BoxedEvent<W>> {
-    heap: BinaryHeap<Entry<E>>,
+    queue: CalendarQueue<E>,
     now: SimTime,
     seq: u64,
     executed: u64,
@@ -97,7 +79,7 @@ impl<W, E: SimEvent<W>> Default for Scheduler<W, E> {
 impl<W, E: SimEvent<W>> Scheduler<W, E> {
     pub fn new() -> Self {
         Scheduler {
-            heap: BinaryHeap::new(),
+            queue: CalendarQueue::new(),
             now: 0,
             seq: 0,
             executed: 0,
@@ -117,33 +99,34 @@ impl<W, E: SimEvent<W>> Scheduler<W, E> {
 
     /// Pending events.
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        self.queue.len()
     }
 
-    /// Pre-size the event heap for at least `additional` more pending
+    /// Pre-size the event queue for at least `additional` more pending
     /// events. Deployment-shaped workloads know their steady-state
     /// in-flight event count up front (a few events per placed
-    /// instance), so reserving once at deploy time means the heap never
+    /// instance), so reserving once at deploy time means the queue never
     /// reallocates mid-run — `tests/zero_alloc.rs` pins this by
     /// asserting the capacity is unchanged across the steady-state
     /// window.
     pub fn reserve_events(&mut self, additional: usize) {
-        self.heap.reserve(additional);
+        self.queue.reserve(additional);
     }
 
-    /// Current event-heap capacity (for pre-sizing / no-regrowth
-    /// assertions; see [`reserve_events`](Self::reserve_events)).
+    /// Current event-queue capacity, summed over the wheel slab and the
+    /// current/overflow heaps (for pre-sizing / no-regrowth assertions;
+    /// see [`reserve_events`](Self::reserve_events)).
     pub fn heap_capacity(&self) -> usize {
-        self.heap.capacity()
+        self.queue.capacity()
     }
 
     /// Schedule a typed event at absolute time `at` (clamped to now).
     /// The event is stored by value — no allocation beyond amortized
-    /// heap growth.
+    /// queue growth.
     pub fn push_at(&mut self, at: SimTime, ev: E) {
         let at = at.max(self.now);
         self.seq += 1;
-        self.heap.push(Entry { at, seq: self.seq, ev });
+        self.queue.push(at, self.seq, ev);
     }
 
     /// Schedule a typed event after a relative delay.
@@ -151,20 +134,20 @@ impl<W, E: SimEvent<W>> Scheduler<W, E> {
         self.push_at(self.now + delay, ev);
     }
 
-    /// Run until the heap empties or virtual time would exceed `until`,
+    /// Run until the queue empties or virtual time would exceed `until`,
     /// then advance the clock to the horizon (never backwards).
     /// Returns the number of events executed by this call.
     pub fn run_until(&mut self, world: &mut W, until: SimTime) -> u64 {
         let start = self.executed;
-        while let Some(top) = self.heap.peek() {
-            if top.at > until {
+        while let Some(top) = self.queue.peek_time() {
+            if top > until {
                 break;
             }
-            let entry = self.heap.pop().unwrap();
-            debug_assert!(entry.at >= self.now, "time went backwards");
-            self.now = entry.at;
+            let (at, _seq, ev) = self.queue.pop().unwrap();
+            debug_assert!(at >= self.now, "time went backwards");
+            self.now = at;
             self.executed += 1;
-            entry.ev.fire(self, world);
+            ev.fire(self, world);
         }
         self.now = self.now.max(until);
         self.executed - start
@@ -173,11 +156,11 @@ impl<W, E: SimEvent<W>> Scheduler<W, E> {
     /// Run to exhaustion (with an event-count safety valve).
     pub fn run(&mut self, world: &mut W, max_events: u64) -> u64 {
         let start = self.executed;
-        while let Some(entry) = self.heap.pop() {
-            debug_assert!(entry.at >= self.now);
-            self.now = entry.at;
+        while let Some((at, _seq, ev)) = self.queue.pop() {
+            debug_assert!(at >= self.now);
+            self.now = at;
             self.executed += 1;
-            entry.ev.fire(self, world);
+            ev.fire(self, world);
             if self.executed - start >= max_events {
                 break;
             }
@@ -295,11 +278,11 @@ mod tests {
         let cap = s.heap_capacity();
         assert!(cap >= 1000);
         let mut w = Vec::new();
-        // a workload smaller than the reservation never regrows the heap
+        // a workload smaller than the reservation never regrows the queue
         for i in 0..1000u64 {
             s.at(i, |sc, w: &mut Vec<u64>| w.push(sc.now()));
         }
-        assert_eq!(s.heap_capacity(), cap, "pre-sized heap must not regrow");
+        assert_eq!(s.heap_capacity(), cap, "pre-sized queue must not regrow");
         s.run(&mut w, 2000);
         assert_eq!(w.len(), 1000);
     }
@@ -317,6 +300,19 @@ mod tests {
         let n = s.run(&mut w, 500);
         assert_eq!(n, 500);
         assert_eq!(w, 500);
+    }
+
+    #[test]
+    fn clock_jumps_cleanly_across_the_wheel_horizon() {
+        // a lone event far past the wheel's ~4.19 virtual seconds rides
+        // the overflow heap and the cursor jump, not a bucket scan
+        let far = (queue::NB as u64) << queue::WIDTH_SHIFT;
+        let mut s: Scheduler<Vec<u64>> = Scheduler::new();
+        let mut w = Vec::new();
+        s.at(10 * far + 3, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        s.at(2, |sc, w: &mut Vec<u64>| w.push(sc.now()));
+        s.run(&mut w, 10);
+        assert_eq!(w, vec![2, 10 * far + 3]);
     }
 
     // --- typed lane ---

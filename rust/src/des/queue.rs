@@ -1,0 +1,488 @@
+//! Event-queue implementations behind [`super::Scheduler`].
+//!
+//! Two queues with identical `(at, seq)`-lexicographic pop order:
+//!
+//! * [`CalendarQueue`] — a single-level timing wheel (calendar queue)
+//!   with an overflow heap. This is what the scheduler runs on: for the
+//!   dense-timer regime (heartbeats, round deadlines, periodic
+//!   publishes) insert and pop are O(1) amortized because an event only
+//!   ever sits in a small per-day heap, never in one global comparison
+//!   structure.
+//! * [`HeapQueue`] — the plain `BinaryHeap` the scheduler used through
+//!   PR 5, kept as the reference implementation. The heap-vs-wheel
+//!   differential in `tests/properties.rs` and the `des_timer_storm`
+//!   bench drive both through [`EventQueue`] and demand identical
+//!   trajectories / report the speed ratio.
+//!
+//! Bucket math (DESIGN.md §Event-engine): virtual time is microseconds;
+//! a **day** is `2^WIDTH_SHIFT` = 1024 µs of virtual time, and the
+//! wheel holds `NB` = 4096 days ≈ 4.19 virtual seconds. An event lands
+//! in one of three places by its day `d = at >> WIDTH_SHIFT` relative
+//! to the cursor day:
+//!
+//! * `d <= day`      → the `current` heap (orders the cursor day),
+//! * `d <  day + NB` → wheel bucket `d & (NB-1)`, an UNORDERED
+//!   slab-linked list — this is the O(1) fast path,
+//! * otherwise       → the `overflow` heap (far future).
+//!
+//! Determinism argument: every event in `current` has `at` strictly
+//! below `(day+1) << WIDTH_SHIFT`, and every wheel/overflow event has
+//! `at` at or above it — so whenever `current` is non-empty its top is
+//! the global `(at, seq)` minimum, and same-`at` events always meet in
+//! the same `current` heap where `seq` breaks the tie. Pop order is
+//! therefore identical to a single global heap, byte-for-byte.
+//!
+//! Rollover: advancing the cursor drains bucket `day & (NB-1)` into
+//! `current`. A bucket never mixes days — an entry is filed only when
+//! its day is within `NB` of the cursor, and the cursor reaches a
+//! bucket exactly once per `NB` days — so the drain is unconditional.
+//! After each step, overflow events whose day fell inside the new
+//! horizon are promoted (into `current` if their day is the cursor day:
+//! that bucket was already drained). When the wheel is empty the cursor
+//! jumps straight to the overflow's earliest day instead of scanning.
+
+use crate::util::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// log2 of the bucket width: one day = 1024 µs of virtual time.
+pub const WIDTH_SHIFT: u32 = 10;
+/// Number of wheel buckets (must be a power of two).
+pub const NB: usize = 4096;
+const MASK: u64 = NB as u64 - 1;
+const NIL: u32 = u32::MAX;
+
+/// A pending event: absolute time, insertion sequence, payload.
+pub struct Entry<E> {
+    pub at: SimTime,
+    pub seq: u64,
+    pub ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse for earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Common surface of the two queue implementations, so the differential
+/// tests and the `des_timer_storm` bench are generic over them.
+pub trait EventQueue<E>: Default {
+    fn push(&mut self, at: SimTime, seq: u64, ev: E);
+    fn pop(&mut self) -> Option<(SimTime, u64, E)>;
+    /// Earliest pending time. `&mut` because the calendar queue may
+    /// reposition events internally (never dropping or reordering any).
+    fn peek_time(&mut self) -> Option<SimTime>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn reserve(&mut self, additional: usize);
+    fn capacity(&self) -> usize;
+}
+
+/// The PR-3–PR-5 scheduler queue: one global binary heap. Reference
+/// implementation for the wheel differential; also the "before" side of
+/// the `des_timer_storm` bench.
+pub struct HeapQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+}
+
+impl<E> Default for HeapQueue<E> {
+    fn default() -> Self {
+        HeapQueue { heap: BinaryHeap::new() }
+    }
+}
+
+impl<E> EventQueue<E> for HeapQueue<E> {
+    fn push(&mut self, at: SimTime, seq: u64, ev: E) {
+        self.heap.push(Entry { at, seq, ev });
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, u64, E)> {
+        self.heap.pop().map(|e| (e.at, e.seq, e.ev))
+    }
+
+    fn peek_time(&mut self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
+    fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+}
+
+/// One wheel-resident event. Slots live in a slab `Vec` and chain into
+/// per-bucket singly-linked lists through `next` — filing and draining
+/// never allocate once the slab has reached its working size (the
+/// free-list recycles slots), which is what keeps `tests/zero_alloc.rs`
+/// honest on the new engine.
+struct Slot<E> {
+    at: SimTime,
+    seq: u64,
+    next: u32,
+    ev: Option<E>,
+}
+
+/// Single-level timing wheel + overflow heap. See the module docs for
+/// the bucket math and the determinism argument.
+pub struct CalendarQueue<E> {
+    /// Per-bucket head index into `slab` (`NIL` = empty).
+    buckets: Box<[u32]>,
+    slab: Vec<Slot<E>>,
+    /// Free-list head into `slab`.
+    free: u32,
+    /// Cursor: the day whose events have been merged into `current`.
+    day: u64,
+    /// Orders the cursor day (and anything pushed at or before it).
+    current: BinaryHeap<Entry<E>>,
+    /// Events at least `NB` days out.
+    overflow: BinaryHeap<Entry<E>>,
+    wheel_len: usize,
+    len: usize,
+}
+
+impl<E> Default for CalendarQueue<E> {
+    fn default() -> Self {
+        CalendarQueue {
+            buckets: vec![NIL; NB].into_boxed_slice(),
+            slab: Vec::new(),
+            free: NIL,
+            day: 0,
+            current: BinaryHeap::new(),
+            overflow: BinaryHeap::new(),
+            wheel_len: 0,
+            len: 0,
+        }
+    }
+}
+
+impl<E> CalendarQueue<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// File an event into the wheel (precondition: its day is in
+    /// `(self.day, self.day + NB)`).
+    fn push_wheel(&mut self, at: SimTime, seq: u64, ev: E) {
+        let idx = if self.free != NIL {
+            let idx = self.free;
+            let slot = &mut self.slab[idx as usize];
+            self.free = slot.next;
+            slot.at = at;
+            slot.seq = seq;
+            slot.ev = Some(ev);
+            idx
+        } else {
+            let idx = self.slab.len() as u32;
+            assert!(idx != NIL, "event slab exhausted");
+            self.slab.push(Slot { at, seq, next: NIL, ev: Some(ev) });
+            idx
+        };
+        let b = ((at >> WIDTH_SHIFT) & MASK) as usize;
+        self.slab[idx as usize].next = self.buckets[b];
+        self.buckets[b] = idx;
+        self.wheel_len += 1;
+    }
+
+    /// Move every event of bucket `b` (all of one day) into `current`.
+    fn drain_bucket(&mut self, b: usize) {
+        let mut idx = self.buckets[b];
+        self.buckets[b] = NIL;
+        while idx != NIL {
+            let slot = &mut self.slab[idx as usize];
+            let next = slot.next;
+            let ev = slot.ev.take().expect("bucket chained a free slot");
+            debug_assert_eq!(slot.at >> WIDTH_SHIFT, self.day, "bucket mixed days");
+            self.current.push(Entry { at: slot.at, seq: slot.seq, ev });
+            slot.next = self.free;
+            self.free = idx;
+            self.wheel_len -= 1;
+            idx = next;
+        }
+    }
+
+    /// Pull overflow events whose day is now within the wheel horizon.
+    /// An event landing exactly on the cursor day goes to `current` —
+    /// its bucket was already drained this round and won't be visited
+    /// again for `NB` days.
+    fn migrate_overflow(&mut self) {
+        while let Some(top) = self.overflow.peek() {
+            let d = top.at >> WIDTH_SHIFT;
+            if d >= self.day + NB as u64 {
+                break;
+            }
+            let e = self.overflow.pop().expect("peeked entry");
+            if d <= self.day {
+                self.current.push(e);
+            } else {
+                self.push_wheel(e.at, e.seq, e.ev);
+            }
+        }
+    }
+
+    /// Advance the cursor until `current` is non-empty (precondition:
+    /// `len > 0`). Only repositions events between the three homes;
+    /// nothing is dropped or reordered.
+    fn advance(&mut self) {
+        while self.current.is_empty() {
+            if self.wheel_len == 0 {
+                // nothing this side of the horizon: jump straight to
+                // the overflow's earliest day
+                let d = self
+                    .overflow
+                    .peek()
+                    .map(|e| e.at >> WIDTH_SHIFT)
+                    .expect("len > 0 with empty current and wheel implies overflow");
+                self.day = d;
+            } else {
+                self.day += 1;
+            }
+            let b = (self.day & MASK) as usize;
+            self.drain_bucket(b);
+            self.migrate_overflow();
+        }
+    }
+}
+
+impl<E> EventQueue<E> for CalendarQueue<E> {
+    fn push(&mut self, at: SimTime, seq: u64, ev: E) {
+        self.len += 1;
+        let d = at >> WIDTH_SHIFT;
+        if d <= self.day {
+            self.current.push(Entry { at, seq, ev });
+        } else if d < self.day + NB as u64 {
+            self.push_wheel(at, seq, ev);
+        } else {
+            self.overflow.push(Entry { at, seq, ev });
+        }
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, u64, E)> {
+        if self.len == 0 {
+            return None;
+        }
+        self.advance();
+        let e = self.current.pop().expect("advance leaves current non-empty");
+        self.len -= 1;
+        Some((e.at, e.seq, e.ev))
+    }
+
+    fn peek_time(&mut self) -> Option<SimTime> {
+        if self.len == 0 {
+            return None;
+        }
+        self.advance();
+        self.current.peek().map(|e| e.at)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn reserve(&mut self, additional: usize) {
+        // a pending event lives in exactly one of the three homes, but
+        // it can MOVE between them (wheel→current, overflow→either), so
+        // each home is sized for the full reservation
+        self.slab.reserve(additional);
+        self.current.reserve(additional);
+        self.overflow.reserve(additional);
+    }
+
+    fn capacity(&self) -> usize {
+        self.slab.capacity() + self.current.capacity() + self.overflow.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain<Q: EventQueue<u32>>(q: &mut Q) -> Vec<(SimTime, u64, u32)> {
+        let mut out = Vec::new();
+        while let Some(t) = q.pop() {
+            out.push(t);
+        }
+        out
+    }
+
+    const DAY: u64 = 1 << WIDTH_SHIFT;
+    const HORIZON: u64 = DAY * NB as u64;
+
+    #[test]
+    fn pops_in_time_order_within_a_day() {
+        let mut q = CalendarQueue::new();
+        q.push(30, 1, 0);
+        q.push(10, 2, 1);
+        q.push(20, 3, 2);
+        assert_eq!(drain(&mut q), vec![(10, 2, 1), (20, 3, 2), (30, 1, 0)]);
+    }
+
+    #[test]
+    fn same_tick_pops_in_seq_order() {
+        // ties meet in the same `current` heap wherever they started:
+        // cursor day, a wheel day, and beyond the horizon
+        for base in [0, DAY * 7, HORIZON * 3 + DAY / 2] {
+            let mut q = CalendarQueue::new();
+            for seq in (1..=16u64).rev() {
+                q.push(base + 5, seq, seq as u32);
+            }
+            let order: Vec<u64> = drain(&mut q).into_iter().map(|(_, s, _)| s).collect();
+            assert_eq!(order, (1..=16).collect::<Vec<_>>(), "base {base}");
+        }
+    }
+
+    #[test]
+    fn wheel_rollover_crosses_bucket_reuse() {
+        // two events NB days apart share a bucket index; the second
+        // must not surface until the wheel has gone all the way around
+        let mut q = CalendarQueue::new();
+        q.push(DAY * 2 + 1, 1, 1);
+        assert_eq!(q.pop(), Some((DAY * 2 + 1, 1, 1)));
+        // cursor now sits at day 2; same bucket, one revolution later
+        q.push(DAY * 2 + 1 + HORIZON - DAY, 2, 2); // last wheel-filable day
+        q.push(DAY * 5, 3, 3);
+        assert_eq!(q.pop(), Some((DAY * 5, 3, 3)));
+        assert_eq!(q.pop(), Some((DAY * 2 + 1 + HORIZON - DAY, 2, 2)));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn far_future_events_promote_out_of_overflow() {
+        let mut q = CalendarQueue::new();
+        // three rounds past the horizon, plus one near event
+        q.push(HORIZON * 3 + 17, 1, 1);
+        q.push(40, 2, 2);
+        assert_eq!(q.pop(), Some((40, 2, 2)));
+        // the far event is reached by the empty-wheel jump, not a scan
+        assert_eq!(q.pop(), Some((HORIZON * 3 + 17, 1, 1)));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn overflow_promotes_into_the_wheel_when_near() {
+        // overflow event whose day enters the horizon while other wheel
+        // events still pace the cursor day-by-day
+        let mut q = CalendarQueue::new();
+        q.push(HORIZON + DAY * 3, 1, 1); // overflow at push time
+        q.push(DAY * 2, 2, 2); // wheel
+        q.push(7, 3, 3); // current day
+        assert_eq!(q.pop(), Some((7, 3, 3)));
+        assert_eq!(q.pop(), Some((DAY * 2, 2, 2)));
+        assert_eq!(q.pop(), Some((HORIZON + DAY * 3, 1, 1)));
+    }
+
+    #[test]
+    fn peek_time_matches_next_pop_and_loses_nothing() {
+        let mut q = CalendarQueue::new();
+        let times = [5u64, HORIZON + 3, DAY * 9, 5, DAY * 9 + 1];
+        for (i, &t) in times.iter().enumerate() {
+            q.push(t, i as u64 + 1, i as u32);
+        }
+        let mut seen = Vec::new();
+        while let Some(at) = q.peek_time() {
+            let (pat, _, id) = q.pop().unwrap();
+            assert_eq!(at, pat, "peek disagreed with pop");
+            seen.push(id);
+        }
+        assert_eq!(seen.len(), times.len());
+        assert_eq!(seen, vec![0, 3, 2, 4, 1]);
+    }
+
+    #[test]
+    fn matches_heap_queue_on_a_mixed_workload() {
+        // deterministic mixed push/pop trace spanning ties, wheel days
+        // and overflow; the big randomized differential lives in
+        // tests/properties.rs
+        let mut wheel = CalendarQueue::new();
+        let mut heap = HeapQueue::default();
+        let mut seq = 0u64;
+        let mut now = 0u64;
+        let mut id = 0u32;
+        for step in 0u64..4_000 {
+            for k in 0..3u64 {
+                let delay = match (step + k) % 5 {
+                    0 => 0,
+                    1 => (step * 37 + k) % DAY,
+                    2 => (step * 911) % (HORIZON / 2),
+                    3 => HORIZON + (step * 131) % HORIZON,
+                    _ => (step * 7919) % (HORIZON * 4),
+                };
+                seq += 1;
+                id += 1;
+                wheel.push(now + delay, seq, id);
+                heap.push(now + delay, seq, id);
+            }
+            let (a, b) = (wheel.pop(), heap.pop());
+            assert_eq!(a, b, "diverged at step {step}");
+            now = a.map(|(at, _, _)| at).unwrap_or(now);
+            assert_eq!(wheel.len(), heap.len());
+        }
+        assert_eq!(drain(&mut wheel), drain(&mut heap));
+    }
+
+    #[test]
+    fn free_list_recycles_slots_without_slab_growth() {
+        let mut q = CalendarQueue::new();
+        let mut seq = 0u64;
+        let mut now = 0u64;
+        // warm up a periodic 64-timer population, then assert the
+        // capacity no longer moves (the zero-alloc property in miniature)
+        for _ in 0..64u32 {
+            seq += 1;
+            q.push(now + 1 + seq % 700, seq, 0);
+        }
+        for _ in 0..2_000 {
+            let (at, _, _) = q.pop().unwrap();
+            now = at;
+            seq += 1;
+            q.push(now + 700, seq, 0);
+        }
+        let cap = q.capacity();
+        for _ in 0..20_000 {
+            let (at, _, _) = q.pop().unwrap();
+            now = at;
+            seq += 1;
+            q.push(now + 700, seq, 0);
+        }
+        assert_eq!(q.capacity(), cap, "steady periodic load regrew the queue");
+    }
+
+    #[test]
+    fn reserve_presizes_every_home() {
+        let mut q: CalendarQueue<u32> = CalendarQueue::new();
+        q.reserve(100);
+        let cap = q.capacity();
+        assert!(cap >= 300, "all three homes must be sized: {cap}");
+        for i in 0..100u64 {
+            q.push(i * 17, i + 1, i as u32);
+        }
+        assert_eq!(q.capacity(), cap, "reserved queue must not regrow");
+    }
+}

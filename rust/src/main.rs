@@ -30,20 +30,27 @@
 //!   ace bench [--json] [--events N] [--subs N] [--pubs N] [--comps N]
 //!             [--storm-pubs N] [--broker-subs N] [--broker-pubs N]
 //!             [--retained N] [--replay-subs N] [--hop-pubs N]
-//!             [--hop-sinks N] [--check BASELINE.json] [--tolerance T]
+//!             [--hop-sinks N] [--timers N] [--timer-events N]
+//!             [--check BASELINE.json] [--floor FLOOR.json]
+//!             [--tolerance T]
 //!                                  — hot-path micro-benchmarks on BOTH
 //!                                    planes (typed vs boxed DES
-//!                                    events, scratch-reuse routing,
-//!                                    fabric storm, hop-charged NetFabric
-//!                                    routing, broker throughput +
-//!                                    retained replay); --json emits
-//!                                    the machine-readable BENCH_*.json
-//!                                    perf-trajectory record CI logs;
-//!                                    --check compares the fresh run
-//!                                    against a committed BENCH_*.json
-//!                                    and exits nonzero on throughput
-//!                                    regressions beyond --tolerance
-//!                                    (default 0.25) — the CI bench gate
+//!                                    events, calendar-queue vs heap
+//!                                    timer storm, scratch-reuse
+//!                                    routing, fabric storm, hop-charged
+//!                                    NetFabric routing, broker
+//!                                    throughput + retained replay);
+//!                                    --json emits the machine-readable
+//!                                    BENCH_*.json perf-trajectory
+//!                                    record CI logs; --check compares
+//!                                    the fresh run against a committed
+//!                                    BENCH_*.json (or a rolling-window
+//!                                    directory) and exits nonzero on
+//!                                    throughput regressions beyond
+//!                                    --tolerance (default 0.25);
+//!                                    --floor anchors that baseline to
+//!                                    a committed NUMERIC record via a
+//!                                    per-metric max — the CI bench gate
 //!
 //! clap is unavailable offline; argument parsing is a ~60-line hand
 //! rolled matcher (DESIGN.md §Substitutions).
@@ -229,6 +236,32 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Per-NIC traffic/occupancy table (nothing printed when the run
+/// models no NICs — the degenerate flat configuration).
+fn print_nic_util(m: &ace::metrics::CellMetrics) {
+    if m.nic_util.is_empty() {
+        return;
+    }
+    let dur_us = (m.sim_duration_s * 1e6) as u64;
+    println!("| NIC | bw | bytes | msgs | busy | util |");
+    println!("|---|---|---|---|---|---|");
+    for u in &m.nic_util {
+        let bw = match u.mbps {
+            Some(mbps) => format!("{mbps:.0} Mbps"),
+            None => "unlimited".to_string(),
+        };
+        println!(
+            "| {}/{} | {bw} | {} | {} | {:.1} ms | {:.2}% |",
+            u.cluster,
+            u.node,
+            u.bytes,
+            u.msgs,
+            u.busy_us as f64 / 1e3,
+            u.busy_share(dur_us) * 100.0,
+        );
+    }
+}
+
 fn print_report(report: &LifecycleReport) {
     for (at, msg) in &report.events {
         println!("[{:>9.3}s] {msg}", to_secs(*at));
@@ -283,6 +316,7 @@ fn cmd_svcrun_scenario(args: &Args, path: &str) -> Result<()> {
                 m.edge_decided,
                 m.cloud_decided,
             );
+            print_nic_util(m);
             Ok(())
         }
         "fedtrain" => {
@@ -360,6 +394,7 @@ fn cmd_svcrun(args: &Args) -> Result<()> {
                 m.edge_decided,
                 m.cloud_decided,
             );
+            print_nic_util(&m);
             Ok(())
         }
         "fedtrain" => {
@@ -442,8 +477,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let replay_subs = args.usize_or("replay-subs", 500);
     let hop_pubs = args.usize_or("hop-pubs", 20_000);
     let hop_sinks = args.usize_or("hop-sinks", 64);
+    let timers = args.usize_or("timers", 10_000);
+    let timer_events = args.usize_or("timer-events", 1_000_000) as u64;
 
     let des = benchkit::des_throughput(events);
+    let tstorm = benchkit::des_timer_storm(timers, timer_events);
     let route = benchkit::route_scratch(subs, pubs);
     let storm = benchkit::fabric_storm(comps, storm_pubs);
     let broker = benchkit::broker_throughput(broker_subs, broker_pubs, retained, replay_subs);
@@ -465,6 +503,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
         des.boxed_heap_eps,
         des.typed_heap_eps,
         des.typed_heap_eps / des.boxed_heap_eps
+    );
+    eprintln!(
+        "| DES timer storm ({timers} timers, {timer_events} ev, heap vs wheel) \
+         | {:.0}/s | {:.0}/s | {:.2}x |",
+        tstorm.heap_events_per_sec,
+        tstorm.wheel_events_per_sec,
+        tstorm.wheel_events_per_sec / tstorm.heap_events_per_sec
     );
     eprintln!(
         "| route matches ({subs} subs, {pubs} pubs) | {:.0}/s | {:.0}/s | {:.2}x |",
@@ -513,6 +558,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     ("boxed_chain", num(des.boxed_chain_eps)),
                     ("typed_heap", num(des.typed_heap_eps)),
                     ("boxed_heap", num(des.boxed_heap_eps)),
+                ]),
+            ),
+            (
+                "des_timer_storm",
+                obj(vec![
+                    ("timers", Value::Num(tstorm.timers as f64)),
+                    ("events", Value::Num(tstorm.events as f64)),
+                    ("wheel_events_per_sec", num(tstorm.wheel_events_per_sec)),
+                    ("heap_events_per_sec", num(tstorm.heap_events_per_sec)),
                 ]),
             ),
             (
@@ -603,6 +657,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     .with_context(|| format!("reading baseline {baseline_path}"))?;
                 ace::json::parse(&text)
                     .with_context(|| format!("parsing baseline {baseline_path}"))?
+            };
+            // `--floor FLOOR.json`: anchor the (rolling) baseline to a
+            // committed NUMERIC record via a per-metric max, so a slow
+            // streak of CI runs can never walk the gate's floor down
+            // (see benchkit::max_baseline). A placeholder floor
+            // contributes nothing.
+            let baseline = match args.get("floor") {
+                Some(floor_path) => {
+                    let text = std::fs::read_to_string(floor_path)
+                        .with_context(|| format!("reading floor {floor_path}"))?;
+                    let floor = ace::json::parse(&text)
+                        .with_context(|| format!("parsing floor {floor_path}"))?;
+                    eprintln!("bench-check: baseline anchored to committed floor {floor_path}");
+                    benchkit::max_baseline(&baseline, &floor)
+                }
+                None => baseline,
             };
             let check = benchkit::check_regression(&baseline, &v, tolerance);
             for path in &check.skipped {
@@ -729,10 +799,14 @@ COMMANDS:
                (BENCH_*.json perf trajectory) [--storm-pubs N] [--broker-subs N]
                                               [--broker-pubs N] [--retained N]
                                               [--replay-subs N] [--hop-pubs N]
-                                              [--hop-sinks N]
+                                              [--hop-sinks N] [--timers N]
+                                              [--timer-events N]
                with --check FILE: exit        [--check BASELINE.json]
                nonzero on throughput          [--tolerance T]
                regressions beyond T (0.25);   [--require-baseline]
+               --floor anchors the baseline   [--floor FLOOR.json]
+               to a committed numeric record
+               (per-metric max);
                --require-baseline also
                fails when the baseline has
                no comparable numbers

@@ -74,6 +74,9 @@ pub struct CellMetrics {
     /// crops classified by COC
     pub cloud_decided: u64,
     pub sim_duration_s: f64,
+    /// Per-NIC traffic/occupancy (empty when the run models no NICs —
+    /// the degenerate flat configuration). Surfaced by `ace svcrun`.
+    pub nic_util: Vec<crate::simnet::LinkUtil>,
 }
 
 impl CellMetrics {
@@ -252,6 +255,7 @@ mod tests {
             edge_decided: 0,
             cloud_decided: 1,
             sim_duration_s: 30.0,
+            nic_util: Vec::new(),
         }
     }
 

@@ -20,7 +20,7 @@
 //! replays only the trie paths its filter selects instead of scanning
 //! every retained topic.
 
-use super::topic::{self, TopicTrie};
+use super::topic::{self, SymbolTable, TopicTrie};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -77,6 +77,9 @@ struct Inner {
     /// directed by its filter (`for_each_name_match`) instead of
     /// scanning the whole map.
     retained: TopicTrie<Message>,
+    /// Level symbols shared by BOTH tries (subscription filters and
+    /// retained names draw from the same level vocabulary).
+    table: SymbolTable,
     next_id: u64,
 }
 
@@ -137,6 +140,7 @@ impl Broker {
                 subs: TopicTrie::new(),
                 filters: HashMap::new(),
                 retained: TopicTrie::new(),
+                table: SymbolTable::new(),
                 next_id: 1,
             })),
             name: Arc::from(name.into()),
@@ -157,7 +161,8 @@ impl Broker {
             return Err(format!("invalid filter '{filter}'"));
         }
         let (tx, rx) = channel();
-        let mut inner = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
         let id = inner.next_id;
         inner.next_id += 1;
         // replay retained: a filter-directed trie walk visits only the
@@ -167,7 +172,7 @@ impl Broker {
         let mut replayed: Vec<(u64, Message)> = Vec::new();
         inner
             .retained
-            .for_each_name_match(filter, |seq, m| replayed.push((seq, m.clone())));
+            .for_each_name_match(&inner.table, filter, |seq, m| replayed.push((seq, m.clone())));
         replayed.sort_unstable_by_key(|&(seq, _)| seq);
         for (_, m) in replayed {
             let bytes = m.payload.len() as u64;
@@ -176,7 +181,7 @@ impl Broker {
                 self.counters.deliver_bytes.fetch_add(bytes, Ordering::Relaxed);
             }
         }
-        inner.subs.insert(filter, Subscription { tx, id });
+        inner.subs.insert(&mut inner.table, filter, Subscription { tx, id });
         inner.filters.insert(id, filter.to_string());
         self.counters
             .subscriptions
@@ -187,9 +192,10 @@ impl Broker {
     /// Drop subscription `id`: a targeted trie-path removal, not a
     /// scan over every subscription.
     pub fn unsubscribe(&self, id: u64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
         if let Some(filter) = inner.filters.remove(&id) {
-            inner.subs.remove(&filter, |s| s.id == id);
+            inner.subs.remove(&inner.table, &filter, |s| s.id == id);
         }
         self.counters
             .subscriptions
@@ -215,15 +221,15 @@ impl Broker {
         if retain {
             // last-writer-wins per topic: drop any previous retained
             // message for this name, then store under a fresh seq
-            inner.retained.remove(&msg.topic, |_| true);
-            inner.retained.insert(&msg.topic, msg.clone());
+            inner.retained.remove(&inner.table, &msg.topic, |_| true);
+            inner.retained.insert(&mut inner.table, &msg.topic, msg.clone());
         }
         let mut reached = 0;
         let mut dead: Vec<u64> = Vec::new();
         let mut delivered_bytes = 0u64;
         // O(topic depth) trie walk; matches come back in insertion
         // (i.e. subscription) order
-        for s in inner.subs.collect_matches(&msg.topic) {
+        for s in inner.subs.collect_matches(&inner.table, &msg.topic) {
             // Arc payload: per-subscriber clone is a refcount bump
             if s.tx.send(msg.clone()).is_ok() {
                 reached += 1;
@@ -243,7 +249,7 @@ impl Broker {
         if !dead.is_empty() {
             for id in dead {
                 if let Some(filter) = inner.filters.remove(&id) {
-                    inner.subs.remove(&filter, |s| s.id == id);
+                    inner.subs.remove(&inner.table, &filter, |s| s.id == id);
                 }
             }
             self.counters

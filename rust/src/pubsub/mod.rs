@@ -14,4 +14,4 @@ pub mod topic;
 
 pub use bridge::Bridge;
 pub use broker::{Broker, BrokerStats, Message, SubHandle};
-pub use topic::TopicTrie;
+pub use topic::{Sym, SymbolTable, TopicTrie};

@@ -14,6 +14,15 @@
 //!   `svcgraph::Fabric` (DES data plane) and `pubsub::Broker`
 //!   (threaded control plane) route through it.
 //!
+//! Literal levels are interned to dense `u32` symbols through a
+//! [`SymbolTable`] the trie's owner supplies (the Fabric shares ONE
+//! table across its per-cluster subscription tries, its bridge tries
+//! and its topic cache; the broker keeps its own behind its mutex).
+//! Trie edges are keyed by symbol in sorted parallel vectors, so the
+//! steady-state walk compares integers over two cache-adjacent arrays
+//! instead of hashing strings — and a publisher that pre-interned its
+//! topic (`for_each_match_syms`) never touches the string at all.
+//!
 //! Agreement (including `+`/`#` edge cases like `a/#` matching the
 //! parent `a`) is enforced by a differential property test in
 //! `tests/properties.rs`.
@@ -63,6 +72,65 @@ pub fn matches(filter: &str, name: &str) -> bool {
     }
 }
 
+/// Dense id of one interned topic level.
+pub type Sym = u32;
+
+/// Interns topic levels to dense [`Sym`]s. Interning is stable and
+/// append-only: the same string always maps to the same symbol, so
+/// symbol sequences cached at publish time (`svcgraph::Fabric`'s topic
+/// cache) never go stale when later subscriptions extend the table.
+///
+/// Wildcards are STRUCTURAL in the trie (`+` edge, `#` terminal) and
+/// are never interned from filters; a level that happens to contain a
+/// wildcard character (invalid per [`valid_filter`], e.g. `a+b`) is
+/// interned literally, which is exactly the reference matcher's
+/// compare-literally behaviour.
+#[derive(Default)]
+pub struct SymbolTable {
+    map: HashMap<Box<str>, Sym>,
+}
+
+impl SymbolTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct levels interned so far.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Symbol for `level`, allocating the next dense id on first sight.
+    pub fn intern(&mut self, level: &str) -> Sym {
+        if let Some(&s) = self.map.get(level) {
+            return s;
+        }
+        let s = self.map.len() as Sym;
+        assert!(s != Sym::MAX, "symbol space exhausted");
+        self.map.insert(level.into(), s);
+        s
+    }
+
+    /// Read-only probe: `None` means the level was never interned, so
+    /// no literal trie edge anywhere can be keyed by it.
+    pub fn lookup(&self, level: &str) -> Option<Sym> {
+        self.map.get(level).copied()
+    }
+
+    /// Intern every level of the concrete `name` into the reused `out`
+    /// buffer — the publish-side half of the symbol fast path.
+    pub fn intern_levels_into(&mut self, name: &str, out: &mut Vec<Sym>) {
+        out.clear();
+        for level in name.split('/') {
+            out.push(self.intern(level));
+        }
+    }
+}
+
 /// One stored subscription: `seq` is the global insertion sequence,
 /// used to report matches in insertion order (delivery-order parity
 /// with the linear scan the trie replaced — and, through the DES
@@ -75,8 +143,14 @@ struct TrieEntry<T> {
 /// One trie node = one topic level. Filters terminate either exactly
 /// here (`here`) or with a `#` that swallows this node's subtree AND
 /// the node itself (`hash` — MQTT: `a/#` matches the parent `a`).
+///
+/// Literal edges live in `keys`/`nodes`, two parallel vectors sorted
+/// by symbol: a child lookup is one binary search over a dense `u32`
+/// array (a handful of cache lines even for wide nodes), not a string
+/// hash + equality probe.
 struct TrieNode<T> {
-    children: HashMap<String, TrieNode<T>>,
+    keys: Vec<Sym>,
+    nodes: Vec<TrieNode<T>>,
     plus: Option<Box<TrieNode<T>>>,
     here: Vec<TrieEntry<T>>,
     hash: Vec<TrieEntry<T>>,
@@ -84,14 +158,32 @@ struct TrieNode<T> {
 
 impl<T> TrieNode<T> {
     fn new() -> Self {
-        TrieNode { children: HashMap::new(), plus: None, here: Vec::new(), hash: Vec::new() }
+        TrieNode {
+            keys: Vec::new(),
+            nodes: Vec::new(),
+            plus: None,
+            here: Vec::new(),
+            hash: Vec::new(),
+        }
     }
 
     fn is_unused(&self) -> bool {
-        self.children.is_empty()
-            && self.plus.is_none()
-            && self.here.is_empty()
-            && self.hash.is_empty()
+        self.keys.is_empty() && self.plus.is_none() && self.here.is_empty() && self.hash.is_empty()
+    }
+
+    fn child(&self, sym: Sym) -> Option<&TrieNode<T>> {
+        self.keys.binary_search(&sym).ok().map(|i| &self.nodes[i])
+    }
+
+    fn child_entry(&mut self, sym: Sym) -> &mut TrieNode<T> {
+        match self.keys.binary_search(&sym) {
+            Ok(i) => &mut self.nodes[i],
+            Err(i) => {
+                self.keys.insert(i, sym);
+                self.nodes.insert(i, TrieNode::new());
+                &mut self.nodes[i]
+            }
+        }
     }
 }
 
@@ -105,6 +197,11 @@ impl<T> Default for TrieNode<T> {
 /// `collect_matches(name)` returns every stored value whose filter
 /// matches `name`, in insertion order, walking O(topic depth) nodes
 /// instead of scanning all subscriptions.
+///
+/// Every string-keyed operation takes the owner's [`SymbolTable`]:
+/// mutating ones (`insert`) intern new literal levels, read-only ones
+/// probe (`lookup`) — a level the table has never seen cannot key any
+/// edge, so the probe failing is itself the answer.
 ///
 /// Semantics mirror [`matches`] verbatim for ANY filter string, valid
 /// or not: levels are compared literally, `+` matches exactly one
@@ -136,9 +233,10 @@ impl<T> TopicTrie<T> {
         self.len == 0
     }
 
-    /// Store `value` under `filter`. Returns the insertion sequence
-    /// number (monotonic; also the delivery-order key).
-    pub fn insert(&mut self, filter: &str, value: T) -> u64 {
+    /// Store `value` under `filter`, interning its literal levels into
+    /// `tab`. Returns the insertion sequence number (monotonic; also
+    /// the delivery-order key).
+    pub fn insert(&mut self, tab: &mut SymbolTable, filter: &str, value: T) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.len += 1;
@@ -154,7 +252,7 @@ impl<T> TopicTrie<T> {
             node = if level == "+" {
                 &mut **node.plus.get_or_insert_with(Box::default)
             } else {
-                node.children.entry(level.to_string()).or_default()
+                node.child_entry(tab.intern(level))
             };
         }
         node.here.push(entry);
@@ -163,15 +261,21 @@ impl<T> TopicTrie<T> {
 
     /// Remove every entry under `filter` whose value satisfies `pred`;
     /// returns how many were removed. Emptied trie branches are pruned.
-    pub fn remove(&mut self, filter: &str, mut pred: impl FnMut(&T) -> bool) -> usize {
+    pub fn remove(
+        &mut self,
+        tab: &SymbolTable,
+        filter: &str,
+        mut pred: impl FnMut(&T) -> bool,
+    ) -> usize {
         let levels: Vec<&str> = filter.split('/').collect();
-        let removed = Self::remove_rec(&mut self.root, &levels, &mut pred);
+        let removed = Self::remove_rec(&mut self.root, tab, &levels, &mut pred);
         self.len -= removed;
         removed
     }
 
     fn remove_rec(
         node: &mut TrieNode<T>,
+        tab: &SymbolTable,
         levels: &[&str],
         pred: &mut impl FnMut(&T) -> bool,
     ) -> usize {
@@ -187,16 +291,19 @@ impl<T> TopicTrie<T> {
         }
         if *level == "+" {
             let Some(plus) = node.plus.as_mut() else { return 0 };
-            let n = Self::remove_rec(plus, rest, pred);
+            let n = Self::remove_rec(plus, tab, rest, pred);
             if plus.is_unused() {
                 node.plus = None;
             }
             n
         } else {
-            let Some(child) = node.children.get_mut(*level) else { return 0 };
-            let n = Self::remove_rec(child, rest, pred);
-            if child.is_unused() {
-                node.children.remove(*level);
+            // a level the table never interned cannot key an edge
+            let Some(sym) = tab.lookup(level) else { return 0 };
+            let Ok(i) = node.keys.binary_search(&sym) else { return 0 };
+            let n = Self::remove_rec(&mut node.nodes[i], tab, rest, pred);
+            if node.nodes[i].is_unused() {
+                node.keys.remove(i);
+                node.nodes.remove(i);
             }
             n
         }
@@ -209,8 +316,15 @@ impl<T> TopicTrie<T> {
     /// order can sort. One walk visits at most 2^w paths where w is
     /// the number of `+`-branches taken — O(topic depth) for the
     /// exact-and-`#` filters that dominate real tables.
-    pub fn for_each_match<'a>(&'a self, name: &str, mut f: impl FnMut(u64, &'a T)) {
-        Self::walk(&self.root, name.split('/'), &mut f);
+    pub fn for_each_match<'a>(&'a self, tab: &SymbolTable, name: &str, mut f: impl FnMut(u64, &'a T)) {
+        Self::walk(&self.root, tab, name.split('/'), &mut f);
+    }
+
+    /// [`for_each_match`](Self::for_each_match) for a pre-interned
+    /// name (see [`SymbolTable::intern_levels_into`]): the hot route
+    /// path — no string in sight, every level is one `u32` compare.
+    pub fn for_each_match_syms<'a>(&'a self, name: &[Sym], mut f: impl FnMut(u64, &'a T)) {
+        Self::walk_syms(&self.root, name, &mut f);
     }
 
     /// Every stored value whose filter matches the concrete `name`,
@@ -219,9 +333,9 @@ impl<T> TopicTrie<T> {
     /// scratch buffer instead.
     ///
     /// [`collect_matches_into`]: TopicTrie::collect_matches_into
-    pub fn collect_matches(&self, name: &str) -> Vec<&T> {
+    pub fn collect_matches(&self, tab: &SymbolTable, name: &str) -> Vec<&T> {
         let mut hits: Vec<(u64, &T)> = Vec::new();
-        self.for_each_match(name, |seq, v| hits.push((seq, v)));
+        self.for_each_match(tab, name, |seq, v| hits.push((seq, v)));
         // insertion order == linear-scan delivery order
         hits.sort_unstable_by_key(|&(seq, _)| seq);
         hits.into_iter().map(|(_, v)| v).collect()
@@ -229,20 +343,32 @@ impl<T> TopicTrie<T> {
 
     /// Zero-allocation match collection for `Copy` values: clears
     /// `out` and refills it with `(insertion seq, value)` pairs sorted
-    /// by seq (delivery order), reusing the buffer's capacity. The
-    /// router hot path (`svcgraph::Fabric` keeps the scratch vectors
-    /// across publishes).
-    pub fn collect_matches_into(&self, name: &str, out: &mut Vec<(u64, T)>)
+    /// by seq (delivery order), reusing the buffer's capacity.
+    pub fn collect_matches_into(&self, tab: &SymbolTable, name: &str, out: &mut Vec<(u64, T)>)
     where
         T: Copy,
     {
         out.clear();
-        self.for_each_match(name, |seq, v| out.push((seq, *v)));
+        self.for_each_match(tab, name, |seq, v| out.push((seq, *v)));
+        out.sort_unstable_by_key(|&(seq, _)| seq);
+    }
+
+    /// [`collect_matches_into`](Self::collect_matches_into) for a
+    /// pre-interned name — the router hot path (`svcgraph::Fabric`
+    /// keeps both the scratch vector and the symbol sequence across
+    /// publishes).
+    pub fn collect_matches_into_syms(&self, name: &[Sym], out: &mut Vec<(u64, T)>)
+    where
+        T: Copy,
+    {
+        out.clear();
+        self.for_each_match_syms(name, |seq, v| out.push((seq, *v)));
         out.sort_unstable_by_key(|&(seq, _)| seq);
     }
 
     fn walk<'a>(
         node: &'a TrieNode<T>,
+        tab: &SymbolTable,
         mut rest: std::str::Split<'_, char>,
         f: &mut impl FnMut(u64, &'a T),
     ) {
@@ -258,11 +384,32 @@ impl<T> TopicTrie<T> {
                 }
             }
             Some(level) => {
-                if let Some(child) = node.children.get(level) {
-                    Self::walk(child, rest.clone(), f);
+                if let Some(child) = tab.lookup(level).and_then(|s| node.child(s)) {
+                    Self::walk(child, tab, rest.clone(), f);
                 }
                 if let Some(plus) = &node.plus {
-                    Self::walk(plus, rest, f);
+                    Self::walk(plus, tab, rest, f);
+                }
+            }
+        }
+    }
+
+    fn walk_syms<'a>(node: &'a TrieNode<T>, rest: &[Sym], f: &mut impl FnMut(u64, &'a T)) {
+        for e in &node.hash {
+            f(e.seq, &e.value);
+        }
+        match rest.split_first() {
+            None => {
+                for e in &node.here {
+                    f(e.seq, &e.value);
+                }
+            }
+            Some((&sym, tail)) => {
+                if let Some(child) = node.child(sym) {
+                    Self::walk_syms(child, tail, f);
+                }
+                if let Some(plus) = &node.plus {
+                    Self::walk_syms(plus, tail, f);
                 }
             }
         }
@@ -280,12 +427,18 @@ impl<T> TopicTrie<T> {
     /// Assumes stored keys are wildcard-free (the broker validates
     /// names before retaining); entries stored under `+`/`#` filter
     /// keys are not visited.
-    pub fn for_each_name_match<'a>(&'a self, filter: &str, mut f: impl FnMut(u64, &'a T)) {
-        Self::name_walk(&self.root, filter.split('/'), &mut f);
+    pub fn for_each_name_match<'a>(
+        &'a self,
+        tab: &SymbolTable,
+        filter: &str,
+        mut f: impl FnMut(u64, &'a T),
+    ) {
+        Self::name_walk(&self.root, tab, filter.split('/'), &mut f);
     }
 
     fn name_walk<'a>(
         node: &'a TrieNode<T>,
+        tab: &SymbolTable,
         mut rest: std::str::Split<'_, char>,
         f: &mut impl FnMut(u64, &'a T),
     ) {
@@ -299,13 +452,13 @@ impl<T> TopicTrie<T> {
             // own entry and its entire literal subtree
             Some("#") => Self::collect_name_subtree(node, f),
             Some("+") => {
-                for child in node.children.values() {
-                    Self::name_walk(child, rest.clone(), f);
+                for child in &node.nodes {
+                    Self::name_walk(child, tab, rest.clone(), f);
                 }
             }
             Some(level) => {
-                if let Some(child) = node.children.get(level) {
-                    Self::name_walk(child, rest, f);
+                if let Some(child) = tab.lookup(level).and_then(|s| node.child(s)) {
+                    Self::name_walk(child, tab, rest, f);
                 }
             }
         }
@@ -315,7 +468,7 @@ impl<T> TopicTrie<T> {
         for e in &node.here {
             f(e.seq, &e.value);
         }
-        for child in node.children.values() {
+        for child in &node.nodes {
             Self::collect_name_subtree(child, f);
         }
     }
@@ -365,71 +518,95 @@ mod tests {
     }
 
     #[test]
+    fn symbols_are_dense_and_stable() {
+        let mut tab = SymbolTable::new();
+        let a = tab.intern("a");
+        let b = tab.intern("b");
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(tab.intern("a"), a, "re-interning must be stable");
+        assert_eq!(tab.lookup("b"), Some(b));
+        assert_eq!(tab.lookup("never-seen"), None);
+        assert_eq!(tab.len(), 2);
+        let mut syms = Vec::new();
+        tab.intern_levels_into("a/b/c", &mut syms);
+        assert_eq!(syms, vec![0, 1, 2]);
+        tab.intern_levels_into("c/a", &mut syms);
+        assert_eq!(syms, vec![2, 0], "buffer is cleared and refilled");
+    }
+
+    #[test]
     fn trie_exact_plus_hash() {
+        let mut tab = SymbolTable::new();
         let mut t = TopicTrie::new();
-        t.insert("a/b/c", 0usize);
-        t.insert("a/+/c", 1);
-        t.insert("a/#", 2);
-        t.insert("#", 3);
-        t.insert("x/y", 4);
+        t.insert(&mut tab, "a/b/c", 0usize);
+        t.insert(&mut tab, "a/+/c", 1);
+        t.insert(&mut tab, "a/#", 2);
+        t.insert(&mut tab, "#", 3);
+        t.insert(&mut tab, "x/y", 4);
         assert_eq!(t.len(), 5);
-        let got: Vec<usize> = t.collect_matches("a/b/c").into_iter().copied().collect();
+        let got: Vec<usize> = t.collect_matches(&tab, "a/b/c").into_iter().copied().collect();
         assert_eq!(got, vec![0, 1, 2, 3]);
-        let got: Vec<usize> = t.collect_matches("x/y").into_iter().copied().collect();
+        let got: Vec<usize> = t.collect_matches(&tab, "x/y").into_iter().copied().collect();
         assert_eq!(got, vec![3, 4]);
     }
 
     #[test]
     fn trie_hash_matches_parent_level() {
         // the MQTT edge case: `a/#` matches `a` itself
+        let mut tab = SymbolTable::new();
         let mut t = TopicTrie::new();
-        t.insert("a/#", 0usize);
-        t.insert("+/#", 1);
+        t.insert(&mut tab, "a/#", 0usize);
+        t.insert(&mut tab, "+/#", 1);
         assert_eq!(
-            t.collect_matches("a").into_iter().copied().collect::<Vec<_>>(),
+            t.collect_matches(&tab, "a").into_iter().copied().collect::<Vec<_>>(),
             vec![0, 1]
         );
-        assert!(t.collect_matches("b").into_iter().copied().collect::<Vec<_>>() == vec![1]);
+        assert!(t.collect_matches(&tab, "b").into_iter().copied().collect::<Vec<_>>() == vec![1]);
     }
 
     #[test]
     fn trie_plus_is_exactly_one_level() {
+        let mut tab = SymbolTable::new();
         let mut t = TopicTrie::new();
-        t.insert("a/+", 0usize);
-        assert_eq!(t.collect_matches("a/b").len(), 1);
-        assert!(t.collect_matches("a").is_empty());
-        assert!(t.collect_matches("a/b/c").is_empty());
+        t.insert(&mut tab, "a/+", 0usize);
+        assert_eq!(t.collect_matches(&tab, "a/b").len(), 1);
+        assert!(t.collect_matches(&tab, "a").is_empty());
+        assert!(t.collect_matches(&tab, "a/b/c").is_empty());
     }
 
     #[test]
     fn trie_reports_matches_in_insertion_order() {
+        let mut tab = SymbolTable::new();
         let mut t = TopicTrie::new();
         // interleave filters so trie layout differs from insertion order
-        t.insert("z/#", 10usize);
-        t.insert("a/b", 11);
-        t.insert("#", 12);
-        t.insert("a/+", 13);
-        t.insert("a/b", 14);
-        let got: Vec<usize> = t.collect_matches("a/b").into_iter().copied().collect();
+        t.insert(&mut tab, "z/#", 10usize);
+        t.insert(&mut tab, "a/b", 11);
+        t.insert(&mut tab, "#", 12);
+        t.insert(&mut tab, "a/+", 13);
+        t.insert(&mut tab, "a/b", 14);
+        let got: Vec<usize> = t.collect_matches(&tab, "a/b").into_iter().copied().collect();
         assert_eq!(got, vec![11, 12, 13, 14]);
     }
 
     #[test]
     fn trie_remove_prunes_and_recounts() {
+        let mut tab = SymbolTable::new();
         let mut t = TopicTrie::new();
-        t.insert("a/b/c", 1usize);
-        t.insert("a/b/c", 2);
-        t.insert("a/+/c", 3);
-        t.insert("a/#", 4);
-        assert_eq!(t.remove("a/b/c", |v| *v == 1), 1);
+        t.insert(&mut tab, "a/b/c", 1usize);
+        t.insert(&mut tab, "a/b/c", 2);
+        t.insert(&mut tab, "a/+/c", 3);
+        t.insert(&mut tab, "a/#", 4);
+        assert_eq!(t.remove(&tab, "a/b/c", |v| *v == 1), 1);
         assert_eq!(t.len(), 3);
-        let got: Vec<usize> = t.collect_matches("a/b/c").into_iter().copied().collect();
+        let got: Vec<usize> = t.collect_matches(&tab, "a/b/c").into_iter().copied().collect();
         assert_eq!(got, vec![2, 3, 4]);
         // removing a filter that is not stored is a no-op
-        assert_eq!(t.remove("a/b", |_| true), 0);
-        assert_eq!(t.remove("a/+/c", |_| true), 1);
-        assert_eq!(t.remove("a/#", |_| true), 1);
-        assert_eq!(t.remove("a/b/c", |_| true), 1);
+        assert_eq!(t.remove(&tab, "a/b", |_| true), 0);
+        // ... including one whose levels were never interned at all
+        assert_eq!(t.remove(&tab, "ghost/topic", |_| true), 0);
+        assert_eq!(t.remove(&tab, "a/+/c", |_| true), 1);
+        assert_eq!(t.remove(&tab, "a/#", |_| true), 1);
+        assert_eq!(t.remove(&tab, "a/b/c", |_| true), 1);
         assert!(t.is_empty());
         // branches were pruned: root is empty again
         assert!(t.root.is_unused());
@@ -437,41 +614,75 @@ mod tests {
 
     #[test]
     fn collect_matches_into_reuses_scratch_and_agrees() {
+        let mut tab = SymbolTable::new();
         let mut t = TopicTrie::new();
-        t.insert("z/#", 10usize);
-        t.insert("a/b", 11);
-        t.insert("#", 12);
-        t.insert("a/+", 13);
-        t.insert("a/b", 14);
+        t.insert(&mut tab, "z/#", 10usize);
+        t.insert(&mut tab, "a/b", 11);
+        t.insert(&mut tab, "#", 12);
+        t.insert(&mut tab, "a/+", 13);
+        t.insert(&mut tab, "a/b", 14);
         let mut scratch: Vec<(u64, usize)> = Vec::with_capacity(8);
-        t.collect_matches_into("a/b", &mut scratch);
+        t.collect_matches_into(&tab, "a/b", &mut scratch);
         let got: Vec<usize> = scratch.iter().map(|&(_, v)| v).collect();
         assert_eq!(got, vec![11, 12, 13, 14]);
         // reuse: cleared and refilled, old contents never leak
-        t.collect_matches_into("z/q", &mut scratch);
+        t.collect_matches_into(&tab, "z/q", &mut scratch);
         let got: Vec<usize> = scratch.iter().map(|&(_, v)| v).collect();
         assert_eq!(got, vec![10, 12]);
         // agreement with the allocating API on every query
         for name in ["a/b", "a/x", "z", "q/r/s"] {
-            t.collect_matches_into(name, &mut scratch);
+            t.collect_matches_into(&tab, name, &mut scratch);
             let fast: Vec<usize> = scratch.iter().map(|&(_, v)| v).collect();
-            let slow: Vec<usize> = t.collect_matches(name).into_iter().copied().collect();
+            let slow: Vec<usize> = t.collect_matches(&tab, name).into_iter().copied().collect();
             assert_eq!(fast, slow, "{name}");
         }
+    }
+
+    #[test]
+    fn symbol_walk_agrees_with_string_walk() {
+        let mut tab = SymbolTable::new();
+        let mut t = TopicTrie::new();
+        t.insert(&mut tab, "app/+/data", 0usize);
+        t.insert(&mut tab, "app/#", 1);
+        t.insert(&mut tab, "app/x/data", 2);
+        t.insert(&mut tab, "#", 3);
+        let mut syms = Vec::new();
+        let mut scratch: Vec<(u64, usize)> = Vec::new();
+        for name in ["app/x/data", "app/y/data", "app", "other/x"] {
+            tab.intern_levels_into(name, &mut syms);
+            t.collect_matches_into_syms(&syms, &mut scratch);
+            let fast: Vec<usize> = scratch.iter().map(|&(_, v)| v).collect();
+            let slow: Vec<usize> = t.collect_matches(&tab, name).into_iter().copied().collect();
+            assert_eq!(fast, slow, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_levels_still_match_wildcard_branches() {
+        // a name level the table has never interned can't reach any
+        // literal edge, but `+` and `#` must still swallow it
+        let mut tab = SymbolTable::new();
+        let mut t = TopicTrie::new();
+        t.insert(&mut tab, "a/+", 0usize);
+        t.insert(&mut tab, "a/#", 1);
+        t.insert(&mut tab, "a/b", 2);
+        let got: Vec<usize> = t.collect_matches(&tab, "a/unseen").into_iter().copied().collect();
+        assert_eq!(got, vec![0, 1]);
     }
 
     #[test]
     fn name_match_walks_only_filter_directed_paths() {
         // retained-replay direction: keys are concrete names, the
         // query is a filter
+        let mut tab = SymbolTable::new();
         let mut t = TopicTrie::new();
-        t.insert("cfg/a", 0usize);
-        t.insert("cfg/b", 1);
-        t.insert("cfg/b/deep", 2);
-        t.insert("other/x", 3);
+        t.insert(&mut tab, "cfg/a", 0usize);
+        t.insert(&mut tab, "cfg/b", 1);
+        t.insert(&mut tab, "cfg/b/deep", 2);
+        t.insert(&mut tab, "other/x", 3);
         let collect = |filter: &str| {
             let mut got: Vec<(u64, usize)> = Vec::new();
-            t.for_each_name_match(filter, |seq, v| got.push((seq, *v)));
+            t.for_each_name_match(&tab, filter, |seq, v| got.push((seq, *v)));
             got.sort_unstable();
             got.into_iter().map(|(_, v)| v).collect::<Vec<_>>()
         };
@@ -496,11 +707,12 @@ mod tests {
             ("a/#", "b", false),
             ("#", "anything/at/all", true),
         ] {
+            let mut tab = SymbolTable::new();
             let mut t = TopicTrie::new();
-            t.insert(filter, ());
+            t.insert(&mut tab, filter, ());
             assert_eq!(matches(filter, name), want, "reference {filter} vs {name}");
             assert_eq!(
-                !t.collect_matches(name).is_empty(),
+                !t.collect_matches(&tab, name).is_empty(),
                 want,
                 "trie {filter} vs {name}"
             );

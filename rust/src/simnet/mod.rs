@@ -18,9 +18,15 @@
 //! |---|---|
 //! | same node | none (in-process hand-off) |
 //! | same cluster, other node | src NIC → cluster LAN → dst NIC |
-//! | EC → CC (bridged) | src NIC → WAN uplink |
-//! | CC → EC (bridged) | src NIC → WAN downlink |
+//! | EC → CC (bridged) | src NIC → WAN uplink → CC LAN (gateway) |
+//! | CC → EC (bridged) | src NIC → CC LAN (gateway) → WAN downlink |
 //! | bridge arrival → local subscriber | dst NIC |
+//!
+//! The "CC LAN (gateway)" leg models the CC border router sitting ON
+//! the CC backbone segment: bridged traffic crosses that segment
+//! between the router and the CC bus ([`NetFabric::gateway_hop`]).
+//! When the CC LAN is unmodelled (`cc_lan_mbps: None`, the degenerate
+//! configuration) the leg charges nothing and adds zero time.
 //!
 //! The DEGENERATE configuration — no NIC entries, free CC backplane,
 //! one CC node — is exactly the pre-PR-5 flat model (one shared FIFO
@@ -67,6 +73,10 @@ pub struct Link {
     pub bytes_sent: u64,
     /// Messages accepted.
     pub msgs_sent: u64,
+    /// Total serialization occupancy (µs): time the link spent
+    /// actually transmitting. busy_time / sim_duration is the link's
+    /// utilization share; unlimited NICs never accumulate any.
+    pub busy_time: SimTime,
 }
 
 impl Link {
@@ -85,6 +95,7 @@ impl Link {
             last_delivery: 0,
             bytes_sent: 0,
             msgs_sent: 0,
+            busy_time: 0,
         }
     }
 
@@ -116,6 +127,7 @@ impl Link {
         let start = self.busy_until.max(now);
         let done = start + self.ser_time(bytes);
         self.busy_until = done;
+        self.busy_time += done - start;
         self.bytes_sent += bytes;
         self.msgs_sent += 1;
         let j = if self.jitter > 0 {
@@ -140,6 +152,7 @@ impl Link {
         self.last_delivery = 0;
         self.bytes_sent = 0;
         self.msgs_sent = 0;
+        self.busy_time = 0;
     }
 }
 
@@ -599,6 +612,20 @@ impl NetFabric {
         self.downlink[ec].send(at, bytes)
     }
 
+    /// The CC-backbone leg between the border router and the CC bus —
+    /// charged on every bridged message, AFTER the uplink (EC → CC)
+    /// or BEFORE the downlink (CC → EC). A free backplane
+    /// (`cc_lan_mbps: None`, the degenerate configuration) charges
+    /// nothing and returns `at` unchanged, preserving the flat-model
+    /// trajectories byte-for-byte.
+    pub fn gateway_hop(&mut self, at: SimTime, bytes: u64) -> SimTime {
+        let cc = self.cc_index();
+        match &mut self.clusters[cc].lan {
+            Some(lan) => lan.send(at, bytes),
+            None => at,
+        }
+    }
+
     /// Total WAN bytes (up + down) — the paper's BWC metric.
     pub fn wan_bytes(&self) -> u64 {
         self.uplink.iter().map(|l| l.bytes_sent).sum::<u64>()
@@ -621,6 +648,59 @@ impl NetFabric {
             for nic in c.nics.values_mut() {
                 nic.link.reset();
             }
+        }
+    }
+
+    /// Per-NIC traffic/occupancy report — one [`LinkUtil`] per
+    /// configured NIC, cluster order then node order (BTreeMap), so
+    /// the listing is deterministic. Unlimited NICs report their byte
+    /// counters with zero busy time.
+    pub fn nic_utilization(&self) -> Vec<LinkUtil> {
+        let num_ecs = self.num_ecs();
+        let mut out = Vec::new();
+        for (ci, c) in self.clusters.iter().enumerate() {
+            for (node, nic) in &c.nics {
+                out.push(LinkUtil {
+                    cluster: cluster_leaf(ci, num_ecs),
+                    node: node.clone(),
+                    mbps: nic.mbps(),
+                    bytes: nic.link.bytes_sent,
+                    msgs: nic.link.msgs_sent,
+                    busy_us: nic.link.busy_time,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// One NIC's traffic/occupancy summary (see
+/// [`NetFabric::nic_utilization`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkUtil {
+    /// Cluster leaf (`ec-1`.. / `cc`).
+    pub cluster: String,
+    /// Node leaf name.
+    pub node: String,
+    /// Access bandwidth in Mbps; `None` = unlimited (count-only).
+    pub mbps: Option<f64>,
+    /// Payload bytes accepted.
+    pub bytes: u64,
+    /// Messages accepted.
+    pub msgs: u64,
+    /// Serialization occupancy (µs).
+    pub busy_us: SimTime,
+}
+
+impl LinkUtil {
+    /// Fraction of `duration_us` the link spent transmitting, in
+    /// [0, 1] (clamped: warm-up queues can carry occupancy past the
+    /// measured window).
+    pub fn busy_share(&self, duration_us: SimTime) -> f64 {
+        if duration_us == 0 {
+            0.0
+        } else {
+            (self.busy_us as f64 / duration_us as f64).min(1.0)
         }
     }
 }
@@ -963,6 +1043,60 @@ nics:
         // and the Link constructor clamps even if one slips through
         assert!(Link::mbps("z", 0.0, 0.0).ser_time(1) >= 1);
         assert!(Link::mbps("n", f64::NAN, 0.0).ser_time(1_000_000) > 0);
+    }
+
+    #[test]
+    fn gateway_hop_charges_the_cc_lan_only_when_modelled() {
+        // degenerate CC (free backplane): zero time, zero counters
+        let mut flat = NetFabric::new(&NetConfig::default());
+        assert_eq!(flat.gateway_hop(4_321, 1 << 20), 4_321);
+        assert!(flat.lan(flat.cc_index()).is_none());
+        // shaped CC LAN: 2.5 kB at 1000 Mbps = 20 µs ser + 100 µs
+        let mut net = NetFabric::new(&contended_cfg());
+        assert_eq!(net.gateway_hop(0, 2_500), 120);
+        let cc = net.cc_index();
+        assert_eq!(net.lan(cc).unwrap().bytes_sent, 2_500);
+        // FIFO: a second bridged message queues behind the first
+        assert_eq!(net.gateway_hop(0, 2_500), 140);
+    }
+
+    #[test]
+    fn busy_time_counts_serialization_occupancy_only() {
+        let mut l = Link::mbps("b", 20.0, 50_000.0);
+        l.send(0, 2500); // 1 ms ser
+        l.send(0, 2500); // queues: 1 ms more ser, zero idle between
+        assert_eq!(l.busy_time, 2_000, "delay/jitter are not occupancy");
+        l.send(10_000, 2500); // idle 2 ms..10 ms gap is not counted
+        assert_eq!(l.busy_time, 3_000);
+        l.reset();
+        assert_eq!(l.busy_time, 0);
+    }
+
+    #[test]
+    fn nic_utilization_reports_every_nic_deterministically() {
+        let mut cfg = contended_cfg();
+        cfg.nics.push(NicSpec {
+            cluster: "ec-1".into(),
+            node: "cam2".into(),
+            mbps: f64::INFINITY, // unlimited: counted, never busy
+            delay_us: 0.0,
+        });
+        let mut net = NetFabric::new(&cfg);
+        net.egress(0, "rpi1", 0, 2_500); // 8 Mbps → 2.5 ms busy
+        net.ingress(0, "cam2", 0, 9_999);
+        let util = net.nic_utilization();
+        // BTreeMap order within the cluster: cam2 before rpi1
+        let names: Vec<_> =
+            util.iter().map(|u| (u.cluster.as_str(), u.node.as_str())).collect();
+        assert_eq!(names, vec![("ec-1", "cam2"), ("ec-1", "rpi1"), ("cc", "srv1")]);
+        assert_eq!(util[0].bytes, 9_999);
+        assert_eq!(util[0].busy_us, 0, "unlimited NICs are never busy");
+        assert_eq!(util[0].mbps, None);
+        assert_eq!(util[1].bytes, 2_500);
+        assert_eq!(util[1].busy_us, 2_500);
+        assert!((util[1].busy_share(1_000_000) - 0.0025).abs() < 1e-12);
+        assert_eq!(util[1].busy_share(0), 0.0);
+        assert_eq!(util[2].bytes, 0, "idle NICs still show up");
     }
 
     #[test]

@@ -607,7 +607,12 @@ fn send_node_instruction(
     // the TARGET NODE's access link in `Fabric::route` (bridge-arrival
     // ingress), so instructions contend on the real node's NIC
     let arrival = match site.cluster {
-        ClusterRef::Ec(k) if k < w.fabric.net.num_ecs() => w.fabric.net.wan_down(k, now, bytes),
+        ClusterRef::Ec(k) if k < w.fabric.net.num_ecs() => {
+            // CC backbone LAN out to the border router first, then the
+            // downlink (mirrors `Fabric::route`'s CC→EC bridge arm)
+            let at = w.fabric.net.gateway_hop(now, bytes);
+            w.fabric.net.wan_down(k, at, bytes)
+        }
         ClusterRef::Ec(_) => {
             st.report
                 .borrow_mut()
@@ -616,9 +621,9 @@ fn send_node_instruction(
         }
         ClusterRef::Cc => now,
     };
-    let topic: Rc<str> = deploy_topic(node).into();
+    let (topic, syms) = w.fabric.intern(&deploy_topic(node));
     let body: Rc<dyn Any> = Rc::new(InstructionBody { doc });
-    let msg = GraphMsg { topic, from: usize::MAX, wire_bytes: bytes, body };
+    let msg = GraphMsg { topic, syms, from: usize::MAX, wire_bytes: bytes, body };
     sch.push_at(arrival, Event::Bridge { origin: ClusterRef::Cc, to: site.cluster, msg });
     st.report.borrow_mut().log(
         now,

@@ -30,9 +30,12 @@
 //!   * same cluster, other node → src NIC → cluster LAN → dst NIC;
 //!   * `cloud/#` from an EC → src NIC, then bridged to the CC bus over
 //!     that EC's WAN uplink (serialization + delay + jitter, FIFO
-//!     queueing); CC-side fan-out pays each receiver's NIC;
-//!   * `edge/ec<k>/#` from the CC → src NIC, then EC k's downlink,
-//!     then each receiver's NIC.
+//!     queueing), then the CC backbone LAN (the border router sits on
+//!     it; free when the CC LAN is unmodelled); CC-side fan-out pays
+//!     each receiver's NIC;
+//!   * `edge/ec<k>/#` from the CC → src NIC, then the CC backbone LAN
+//!     out to the border router, then EC k's downlink, then each
+//!     receiver's NIC.
 //!
 //! The sender's NIC is paid AT MOST ONCE per publish (the single
 //! transmit up to the cluster message service); receivers and bridges
@@ -47,7 +50,9 @@
 //!
 //! Hot path (DESIGN.md §Event-engine): every steady-state step —
 //! publish, route, deliver, timer — is a typed [`Event`] stored BY
-//! VALUE in the scheduler heap, topics are interned `Rc<str>`s, and
+//! VALUE in the scheduler's calendar queue, topics are interned once
+//! into an `Rc<str>` PLUS a dense symbol sequence (`Rc<[Sym]>`) that
+//! the topic tries match on — integer compares, no string walks — and
 //! `route` reuses scratch buffers, so publish→deliver performs zero
 //! heap allocations (enforced by `tests/zero_alloc.rs`).
 //!
@@ -65,12 +70,12 @@ pub mod lifecycle;
 
 use crate::deploy::{DeploymentPlan, Instance};
 use crate::des::{Scheduler, SimEvent};
-use crate::pubsub::topic::TopicTrie;
+use crate::pubsub::topic::{Sym, SymbolTable, TopicTrie};
 use crate::simnet::NetFabric;
 use crate::util::SimTime;
 use anyhow::{anyhow, bail, Result};
 use std::any::Any;
-use std::collections::HashSet;
+use std::collections::HashMap;
 use std::rc::Rc;
 
 /// Which per-cluster message service an instance is bound to.
@@ -128,6 +133,10 @@ pub fn site_of(inst: &Instance) -> Result<Site> {
 pub struct GraphMsg {
     /// Interned topic name.
     pub topic: Rc<str>,
+    /// The topic's interned level symbols (same interning event as
+    /// `topic`); what the routing tries match against — cloning a
+    /// message is two refcount bumps, never a string walk.
+    pub syms: Rc<[Sym]>,
     /// Component index of the sender (see [`GraphRuntime::deploy`]).
     pub from: usize,
     /// Bytes charged to simnet links when this message crosses nodes.
@@ -187,11 +196,17 @@ pub struct Fabric {
     /// so [`SvcWorld::retire`] can unindex exactly the retired
     /// component's trie entries (cleared on retirement).
     sub_filters: Vec<Vec<String>>,
-    /// Interned published topics: steady-state publishes of a known
-    /// topic reuse one `Rc<str>` (refcount bump) instead of allocating
-    /// a fresh topic string per message. Bounded by the number of
-    /// distinct topics the application publishes.
-    topics: HashSet<Rc<str>>,
+    /// ONE level-symbol table for the whole fabric: every subscription
+    /// trie (per-cluster AND bridge rules) and every cached topic draw
+    /// from the same dense vocabulary, so a symbol sequence interned at
+    /// publish time is valid against any trie.
+    table: SymbolTable,
+    /// Interned published topics → their level-symbol sequences:
+    /// steady-state publishes of a known topic reuse one `Rc<str>` and
+    /// one `Rc<[Sym]>` (refcount bumps) instead of allocating a fresh
+    /// topic string — or re-walking it — per message. Bounded by the
+    /// number of distinct topics the application publishes.
+    topics: HashMap<Rc<str>, Rc<[Sym]>>,
     /// Reusable match scratch for `route` (DESIGN.md §Event-engine:
     /// the publish path performs zero steady-state allocations).
     target_scratch: Vec<(u64, usize)>,
@@ -202,15 +217,19 @@ pub struct Fabric {
 }
 
 impl Fabric {
-    /// One `Rc<str>` per distinct published topic.
-    fn intern(&mut self, topic: &str) -> Rc<str> {
-        if let Some(t) = self.topics.get(topic) {
-            t.clone()
-        } else {
-            let t: Rc<str> = topic.into();
-            self.topics.insert(t.clone());
-            t
+    /// One `(Rc<str>, Rc<[Sym]>)` pair per distinct published topic.
+    /// Levels are INTERNED (never just probed) so a cached symbol
+    /// sequence can never go stale: the same level maps to the same
+    /// symbol however many subscriptions arrive later.
+    fn intern(&mut self, topic: &str) -> (Rc<str>, Rc<[Sym]>) {
+        if let Some((t, s)) = self.topics.get_key_value(topic) {
+            return (t.clone(), s.clone());
         }
+        let t: Rc<str> = topic.into();
+        let syms: Vec<Sym> = topic.split('/').map(|l| self.table.intern(l)).collect();
+        let s: Rc<[Sym]> = syms.into();
+        self.topics.insert(t.clone(), s.clone());
+        (t, s)
     }
 
     /// Route `msg` on `cluster`'s bus: deliver to local subscribers
@@ -246,7 +265,7 @@ impl Fabric {
         // through `&mut self` (and a re-entrant route could not alias
         // them); they go back afterwards, keeping their capacity.
         let mut targets = std::mem::take(&mut self.target_scratch);
-        self.subs[ci].collect_matches_into(&msg.topic, &mut targets);
+        self.subs[ci].collect_matches_into_syms(&msg.syms, &mut targets);
         for &(_, target) in &targets {
             let arrival = match from_site {
                 // bridge arrivals fan out from the cluster message
@@ -277,7 +296,7 @@ impl Fabric {
         // bridge rules are indexed per FROM-cluster, so only this
         // cluster's rules are even considered
         let mut rules = std::mem::take(&mut self.bridge_scratch);
-        self.bridge_subs[ci].collect_matches_into(&msg.topic, &mut rules);
+        self.bridge_subs[ci].collect_matches_into_syms(&msg.syms, &mut rules);
         for &(_, to) in &rules {
             if to == origin {
                 continue; // loop prevention, like the threaded Bridge
@@ -294,11 +313,20 @@ impl Fabric {
             let arrival = match (cluster, to) {
                 (ClusterRef::Ec(k), ClusterRef::Cc) => {
                     self.bridged_up += 1;
-                    self.net.wan_up(k, at, msg.wire_bytes)
+                    // WAN, then the CC backbone LAN: the border router
+                    // sits on the CC's segment, so bridged traffic
+                    // crosses it to reach the CC message service (free
+                    // when the CC LAN is unmodelled — the degenerate
+                    // config is unchanged)
+                    let t = self.net.wan_up(k, at, msg.wire_bytes);
+                    self.net.gateway_hop(t, msg.wire_bytes)
                 }
                 (ClusterRef::Cc, ClusterRef::Ec(k)) => {
                     self.bridged_down += 1;
-                    self.net.wan_down(k, at, msg.wire_bytes)
+                    // CC backbone LAN out to the border router first,
+                    // then the downlink
+                    let t = self.net.gateway_hop(at, msg.wire_bytes);
+                    self.net.wan_down(k, t, msg.wire_bytes)
                 }
                 // EC↔EC bridges have no modelled WAN link: the egress
                 // leg (already paid) is the whole cost
@@ -375,8 +403,9 @@ impl SvcWorld {
         let idx = self.comps.len();
         let ci = cidx(site.cluster, self.fabric.num_ecs);
         let filters = comp.subscriptions();
+        let (subs, table) = (&mut self.fabric.subs, &mut self.fabric.table);
         for filter in &filters {
-            self.fabric.subs[ci].insert(filter, idx);
+            subs[ci].insert(table, filter, idx);
         }
         self.fabric.sub_filters.push(filters);
         self.fabric.sites.push(site);
@@ -410,8 +439,9 @@ impl SvcWorld {
         self.comps[idx] = None;
         let ci = cidx(self.fabric.sites[idx].cluster, self.fabric.num_ecs);
         let filters = std::mem::take(&mut self.fabric.sub_filters[idx]);
+        let (subs, table) = (&mut self.fabric.subs, &self.fabric.table);
         for filter in &filters {
-            self.fabric.subs[ci].remove(filter, |&v| v == idx);
+            subs[ci].remove(table, filter, |&v| v == idx);
         }
         true
     }
@@ -474,9 +504,9 @@ impl Ctx<'_> {
     /// topic is interned (no per-publish string allocation) and every
     /// resulting delivery is a typed by-value event.
     pub fn publish(&mut self, topic: &str, wire_bytes: u64, body: Rc<dyn Any>) {
-        let topic = self.fabric.intern(topic);
+        let (topic, syms) = self.fabric.intern(topic);
         let site = self.fabric.sites[self.self_idx].clone();
-        let msg = GraphMsg { topic, from: self.self_idx, wire_bytes, body };
+        let msg = GraphMsg { topic, syms, from: self.self_idx, wire_bytes, body };
         self.fabric
             .route(self.sch, site.cluster, site.cluster, Some(&site), &msg);
     }
@@ -521,12 +551,20 @@ impl GraphRuntime {
     /// of §4.3.2: `cloud/#` EC→CC and `edge/ec<k>/#` CC→EC k.
     pub fn new(net: NetFabric) -> Self {
         let num_ecs = net.num_ecs();
+        let mut table = SymbolTable::new();
         let mut bridge_subs: Vec<TopicTrie<ClusterRef>> =
             (0..=num_ecs).map(|_| TopicTrie::new()).collect();
         for k in 0..num_ecs {
-            bridge_subs[cidx(ClusterRef::Ec(k), num_ecs)].insert("cloud/#", ClusterRef::Cc);
-            bridge_subs[cidx(ClusterRef::Cc, num_ecs)]
-                .insert(&format!("edge/ec{k}/#"), ClusterRef::Ec(k));
+            bridge_subs[cidx(ClusterRef::Ec(k), num_ecs)].insert(
+                &mut table,
+                "cloud/#",
+                ClusterRef::Cc,
+            );
+            bridge_subs[cidx(ClusterRef::Cc, num_ecs)].insert(
+                &mut table,
+                &format!("edge/ec{k}/#"),
+                ClusterRef::Ec(k),
+            );
         }
         GraphRuntime {
             world: SvcWorld {
@@ -538,7 +576,8 @@ impl GraphRuntime {
                     bridge_subs,
                     sites: Vec::new(),
                     sub_filters: Vec::new(),
-                    topics: HashSet::new(),
+                    table,
+                    topics: HashMap::new(),
                     target_scratch: Vec::new(),
                     bridge_scratch: Vec::new(),
                     bridged_up: 0,
@@ -831,13 +870,19 @@ mod tests {
             Box::new(Shot { topic: "cloud/up".into(), bytes: 2_500 }),
         );
         r.run(1000);
-        // src NIC: 2.5 kB at 10 Mbps = 2 ms + 0.1 ms → 2_100
-        // uplink:  2.5 kB at 20 Mbps = 1 ms          → 3_100
+        // src NIC: 2.5 kB at 10 Mbps = 2 ms + 0.1 ms   → 2_100
+        // uplink:  2.5 kB at 20 Mbps = 1 ms            → 3_100
+        // CC LAN:  2.5 kB at 1000 Mbps = 20 µs + 100 µs → 3_220
         // gpu-ws has no NIC: CC-side fan-out is free
         assert_eq!(log.borrow().len(), 1);
-        assert_eq!(log.borrow()[0].0, 3_100);
+        assert_eq!(log.borrow()[0].0, 3_220);
         assert_eq!(r.net().nic(0, "rpi1").unwrap().link.bytes_sent, 2_500);
         assert_eq!(r.net().wan_bytes(), 2_500);
+        assert_eq!(
+            r.net().lan(r.net().cc_index()).unwrap().bytes_sent,
+            2_500,
+            "bridged traffic must cross the CC backbone LAN"
+        );
     }
 
     #[test]
@@ -871,10 +916,11 @@ mod tests {
         // receiver 1 (minipc): LAN 0.2 ms + 0.5 ms → 2_800, NIC
         //   0.2 ms + 0.05 ms → 3_050
         // receiver 2 (nix, no NIC): second LAN send → 3_000
-        // CC probe: uplink 1 ms from 2_100 → 3_100
+        // CC probe: uplink 1 ms from 2_100 → 3_100, then the CC
+        //   backbone LAN 20 µs + 100 µs → 3_220
         let mut ats: Vec<SimTime> = log.borrow().iter().map(|&(at, _)| at).collect();
         ats.sort_unstable();
-        assert_eq!(ats, vec![3_000, 3_050, 3_100]);
+        assert_eq!(ats, vec![3_000, 3_050, 3_220]);
         assert_eq!(r.net().lan(0).unwrap().msgs_sent, 2, "one LAN copy per receiver");
     }
 
@@ -891,10 +937,11 @@ mod tests {
             Box::new(Shot { topic: "cloud/up".into(), bytes: 2_500 }),
         );
         r.run(1000);
-        // uplink: 1 ms → 1_000; srv2 NIC: 2.5 kB at 1000 Mbps = 20 µs
-        // + 10 µs → 1_030
+        // uplink: 1 ms → 1_000; CC LAN (border router → CC bus): 20 µs
+        // + 100 µs → 1_120; srv2 NIC: 2.5 kB at 1000 Mbps = 20 µs
+        // + 10 µs → 1_150
         assert_eq!(log.borrow().len(), 1);
-        assert_eq!(log.borrow()[0].0, 1_030);
+        assert_eq!(log.borrow()[0].0, 1_150);
         assert_eq!(r.net().nic(r.net().cc_index(), "srv2").unwrap().link.bytes_sent, 2_500);
     }
 

@@ -164,6 +164,56 @@ fn starved_rpi_nics_raise_eil_measurably() {
         contended.eil_ms(),
         flat.eil_ms()
     );
+    // the per-NIC utilization report surfaces the contention: the flat
+    // run models no NICs, the starved run shows busy shaped links
+    assert!(flat.nic_util.is_empty(), "no NICs configured, nothing to report");
+    assert!(!contended.nic_util.is_empty());
+    assert!(
+        contended.nic_util.iter().any(|u| u.busy_us > 0 && u.bytes > 0),
+        "starved NICs must accumulate occupancy: {:?}",
+        contended.nic_util
+    );
+}
+
+#[test]
+fn shaped_cc_backbone_charges_bridged_traffic_both_ways() {
+    // CI uploads every crop and returns every verdict over the WAN; a
+    // shaped CC backbone LAN adds the gateway leg (border router ↔ CC
+    // bus) to each bridged hop in BOTH directions. 2 Mbps → ~12.5 ms
+    // extra serialization per ~3 kB crop, visible in every EIL sample.
+    let base = CellConfig {
+        paradigm: Paradigm::Ci,
+        interval_s: 0.3,
+        duration_s: 8.0,
+        seed: 7,
+        ..Default::default()
+    };
+    let nc = NetConfig {
+        num_ecs: base.num_ecs,
+        cc_lan_mbps: Some(2.0),
+        cc_lan_delay: 1_000,
+        ..Default::default()
+    };
+    let gated_cfg = CellConfig { net: Some(nc), ..base.clone() };
+    let (svc, compute) = synth();
+    let flat = run_cell(base, svc, compute).unwrap();
+    let (svc, compute) = synth();
+    let mut gated = run_cell(gated_cfg.clone(), svc, compute).unwrap();
+    assert_eq!(flat.crops, gated.crops, "the gateway leg delays crops, never drops them");
+    assert_eq!(flat.cloud_decided, gated.cloud_decided);
+    assert!(
+        gated.eil_ms() > flat.eil_ms() + 10.0,
+        "gateway LAN not visible in latency: {:.2} ms vs {:.2} ms",
+        gated.eil_ms(),
+        flat.eil_ms()
+    );
+    // the CC backbone is intra-cluster: WAN byte accounting (BWC) must
+    // not move when the gateway leg appears
+    assert_eq!(flat.bwc_bytes, gated.bwc_bytes);
+    // determinism: the gated cell replays bit-identically
+    let (svc, compute) = synth();
+    let mut again = run_cell(gated_cfg, svc, compute).unwrap();
+    assert_eq!(metrics_hash(&mut gated), metrics_hash(&mut again));
 }
 
 #[test]

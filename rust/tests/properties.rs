@@ -74,16 +74,18 @@ fn prop_plus_is_single_level() {
 // topic trie: differential against the reference matcher
 // ---------------------------------------------------------------------------
 
-use ace::pubsub::TopicTrie;
+use ace::pubsub::{SymbolTable, TopicTrie};
 
 /// The routing index and the reference scalar matcher must agree on
 /// membership AND order (insertion order == linear-scan delivery
-/// order) over random filter/name corpora.
+/// order) over random filter/name corpora — through both the string
+/// lookup path and the pre-interned symbol-sequence hot path.
 #[test]
 fn prop_trie_collect_matches_agrees_with_reference() {
     for case in 0..CASES {
         let mut s = Stream::new(9_000 + case);
         let n_filters = s.next_range(1, 40) as usize;
+        let mut table = SymbolTable::new();
         let mut trie = TopicTrie::new();
         let mut filters: Vec<String> = Vec::new();
         for _ in 0..n_filters {
@@ -91,9 +93,10 @@ fn prop_trie_collect_matches_agrees_with_reference() {
             if !topic::valid_filter(&f) {
                 continue; // rand wildcards can produce e.g. mid-`#`
             }
-            trie.insert(&f, filters.len());
+            trie.insert(&mut table, &f, filters.len());
             filters.push(f);
         }
+        let mut syms: Vec<ace::pubsub::Sym> = Vec::new();
         for _ in 0..16 {
             let name = rand_topic(&mut s, false);
             let expect: Vec<usize> = filters
@@ -102,8 +105,14 @@ fn prop_trie_collect_matches_agrees_with_reference() {
                 .filter(|(_, f)| topic::matches(f, &name))
                 .map(|(i, _)| i)
                 .collect();
-            let got: Vec<usize> = trie.collect_matches(&name).into_iter().copied().collect();
+            let got: Vec<usize> =
+                trie.collect_matches(&table, &name).into_iter().copied().collect();
             assert_eq!(got, expect, "case {case}: name {name} filters {filters:?}");
+            // the symbol hot path (what Fabric::route uses) must agree
+            table.intern_levels_into(&name, &mut syms);
+            let mut got_syms: Vec<usize> = Vec::new();
+            trie.for_each_match_syms(&syms, |_, v| got_syms.push(*v));
+            assert_eq!(got_syms, expect, "case {case}: sym path diverged on {name}");
         }
     }
 }
@@ -114,6 +123,7 @@ fn prop_trie_collect_matches_agrees_with_reference() {
 fn prop_trie_remove_preserves_agreement() {
     for case in 0..CASES {
         let mut s = Stream::new(17_000 + case);
+        let mut table = SymbolTable::new();
         let mut trie = TopicTrie::new();
         let mut filters: Vec<(String, bool)> = Vec::new();
         for _ in 0..20 {
@@ -121,13 +131,13 @@ fn prop_trie_remove_preserves_agreement() {
             if !topic::valid_filter(&f) {
                 continue;
             }
-            trie.insert(&f, filters.len());
+            trie.insert(&mut table, &f, filters.len());
             filters.push((f, true));
         }
         // remove a random half
         for (i, (f, alive)) in filters.iter_mut().enumerate() {
             if s.next_range(0, 2) == 0 {
-                assert_eq!(trie.remove(f, |v| *v == i), 1, "case {case}: remove {f}");
+                assert_eq!(trie.remove(&table, f, |v| *v == i), 1, "case {case}: remove {f}");
                 *alive = false;
             }
         }
@@ -140,7 +150,8 @@ fn prop_trie_remove_preserves_agreement() {
                 .filter(|(_, (f, alive))| *alive && topic::matches(f, &name))
                 .map(|(i, _)| i)
                 .collect();
-            let got: Vec<usize> = trie.collect_matches(&name).into_iter().copied().collect();
+            let got: Vec<usize> =
+                trie.collect_matches(&table, &name).into_iter().copied().collect();
             assert_eq!(got, expect, "case {case}: name {name} filters {filters:?}");
         }
     }
@@ -157,11 +168,12 @@ fn trie_wildcard_edge_cases_match_reference() {
         ("+/#", &["a", "a/b", "a/b/c"][..]),
         ("a/+/c", &["a/b/c", "a/c", "a/b/b/c"][..]),
     ] {
+        let mut table = SymbolTable::new();
         let mut trie = TopicTrie::new();
-        trie.insert(filter, ());
+        trie.insert(&mut table, filter, ());
         for name in names {
             assert_eq!(
-                !trie.collect_matches(name).is_empty(),
+                !trie.collect_matches(&table, name).is_empty(),
                 topic::matches(filter, name),
                 "trie vs reference disagree: filter {filter}, name {name}"
             );
@@ -179,12 +191,13 @@ fn prop_retained_trie_replay_agrees_with_full_scan() {
         let mut s = Stream::new(23_000 + case);
         // retained set: concrete names, last-writer-wins per name
         // (mirroring Broker::publish_opts retain semantics)
+        let mut table = SymbolTable::new();
         let mut trie: TopicTrie<usize> = TopicTrie::new();
         let mut map: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
         for i in 0..s.next_range(1, 40) as usize {
             let name = rand_topic(&mut s, false);
-            trie.remove(&name, |_| true);
-            trie.insert(&name, i);
+            trie.remove(&table, &name, |_| true);
+            trie.insert(&mut table, &name, i);
             map.insert(name, i);
         }
         for _ in 0..16 {
@@ -199,7 +212,7 @@ fn prop_retained_trie_replay_agrees_with_full_scan() {
                 .collect();
             expect.sort_unstable();
             let mut got: Vec<usize> = Vec::new();
-            trie.for_each_name_match(&filter, |_, v| got.push(*v));
+            trie.for_each_name_match(&table, &filter, |_, v| got.push(*v));
             got.sort_unstable();
             assert_eq!(got, expect, "case {case}: filter {filter}");
         }
@@ -376,6 +389,114 @@ fn prop_typed_events_match_boxed_closure_trajectory() {
         assert_eq!(tw, bw, "case {case}: lanes diverged");
         assert_eq!(typed.executed(), boxed.executed(), "case {case}");
         assert_eq!(typed.now(), boxed.now(), "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DES queues: calendar queue vs binary heap — identical pop sequences
+// ---------------------------------------------------------------------------
+
+use ace::des::queue::{CalendarQueue, EventQueue, HeapQueue};
+
+/// The PR-6 queue-swap determinism guarantee, extended from the PR-3
+/// lane differential: on random timer-dense traces — interleaved
+/// pushes and pops with same-tick ties, in-wheel delays, and delays
+/// spanning several wheel horizons into the overflow heap — the
+/// calendar queue must report the identical `peek_time` and pop the
+/// identical `(at, seq, ev)` sequence the reference binary heap does.
+#[test]
+fn prop_calendar_queue_matches_heap_on_random_traces() {
+    for case in 0..CASES {
+        let mut s = Stream::new(61_000 + case);
+        let mut wheel: CalendarQueue<u64> = CalendarQueue::default();
+        let mut heap: HeapQueue<u64> = HeapQueue::default();
+        let mut seq = 0u64;
+        let mut clock = 0u64; // pushes never target the past, like push_at's clamp
+        for _ in 0..s.next_range(50, 300) {
+            if s.next_range(0, 3) == 0 && !heap.is_empty() {
+                assert_eq!(wheel.peek_time(), heap.peek_time(), "case {case}: peek diverged");
+                let a = wheel.pop().unwrap();
+                let b = heap.pop().unwrap();
+                assert_eq!(a, b, "case {case}: pops diverged");
+                clock = a.0;
+            } else {
+                // tie-heavy, in-wheel (4096 buckets x 1024 µs ≈ 4.19 s
+                // horizon), a-few-horizons, and deep-overflow delays
+                let delay = match s.next_range(0, 10) {
+                    0..=3 => s.next_range(0, 3) as u64,
+                    4..=7 => s.next_range(0, 4_000_000) as u64,
+                    8 => s.next_range(0, 20_000_000) as u64,
+                    _ => s.next_range(0, 100_000_000) as u64,
+                };
+                wheel.push(clock + delay, seq, seq);
+                heap.push(clock + delay, seq, seq);
+                seq += 1;
+            }
+        }
+        loop {
+            assert_eq!(wheel.peek_time(), heap.peek_time(), "case {case}: drain peek");
+            let (a, b) = (wheel.pop(), heap.pop());
+            assert_eq!(a, b, "case {case}: drain diverged");
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+}
+
+/// Same-tick batches pushed at a common `at` must pop in push (seq)
+/// order whatever home the tick lands in — the current-day heap, a
+/// wheel bucket, or the far-future overflow.
+#[test]
+fn prop_same_tick_pops_follow_push_order_in_every_home() {
+    for case in 0..CASES {
+        let mut s = Stream::new(63_000 + case);
+        let mut q: CalendarQueue<u64> = CalendarQueue::default();
+        // three bases: day 0 (current), mid-wheel, beyond the horizon
+        let base = match case % 3 {
+            0 => s.next_range(0, 1_000) as u64,
+            1 => 1_000_000 + s.next_range(0, 1_000_000) as u64,
+            _ => 10_000_000_000 + s.next_range(0, 1_000_000) as u64,
+        };
+        let batch = 2 + s.next_range(0, 30) as u64;
+        for i in 0..batch {
+            q.push(base, i, i);
+        }
+        for want in 0..batch {
+            let (at, seq, ev) = q.pop().unwrap();
+            assert_eq!((at, seq, ev), (base, want, want), "case {case}");
+        }
+        assert!(q.is_empty());
+    }
+}
+
+/// A heartbeat population re-arming on every pop, with periods from
+/// sub-day to several horizons: rollover (bucket reuse across days)
+/// and overflow promotion never diverge from the reference heap.
+#[test]
+fn prop_heartbeat_storm_survives_many_horizon_crossings() {
+    for case in 0..24 {
+        let mut s = Stream::new(67_000 + case);
+        let mut wheel: CalendarQueue<u64> = CalendarQueue::default();
+        let mut heap: HeapQueue<u64> = HeapQueue::default();
+        let timers = 1 + s.next_range(0, 64) as u64;
+        let mut seq = 0u64;
+        for id in 0..timers {
+            let at = s.next_range(0, 1_000) as u64;
+            wheel.push(at, seq, id);
+            heap.push(at, seq, id);
+            seq += 1;
+        }
+        let period = 1 + s.next_range(0, 30_000_000) as u64;
+        for step in 0..2_000 {
+            let a = wheel.pop().unwrap();
+            let b = heap.pop().unwrap();
+            assert_eq!(a, b, "case {case} step {step} (period {period})");
+            wheel.push(a.0 + period, seq, a.2);
+            heap.push(b.0 + period, seq, b.2);
+            seq += 1;
+        }
+        assert_eq!(wheel.len(), timers as usize);
     }
 }
 
