@@ -616,7 +616,12 @@ pub fn run_fedtrain_scenario(
         cc_nodes = ov.apply_with_cc(&mut netcfg, cc_nodes);
     }
     let infra = fed_infra(&cfg, cc_nodes);
-    let net = NetFabric::new(&netcfg);
+    let mut net = NetFabric::new(&netcfg);
+    // chaos knobs arm BEFORE any traffic (loss/dup of 0 draws nothing,
+    // keeping fault-free runs byte-identical)
+    if let Some(spec) = &scenario.faults {
+        net.arm_faults(*spec);
+    }
     let hints = NetHints::from_net(&net);
     let mut rt = GraphRuntime::new(net);
     let (test_x, test_y) = make_test_set(&cfg);
@@ -652,7 +657,9 @@ pub fn run_fedtrain_scenario(
         hints,
     )?;
     rt.run_until(scenario.duration);
-    Ok((collect_metrics(&cfg, &shared, &rt), plane.report()))
+    let mut report = plane.report();
+    report.msgs_lost = rt.net().msgs_lost();
+    Ok((collect_metrics(&cfg, &shared, &rt), report))
 }
 
 /// Run `base` once per seed on a pool of `workers` threads, results in

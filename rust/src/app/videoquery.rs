@@ -1093,7 +1093,13 @@ pub fn run_scenario(
         cfg.cc_nodes = ov.apply_with_cc(&mut netcfg, cfg.cc_nodes);
     }
     let infra = cell_infra(&cfg);
-    let net = NetFabric::new(&netcfg);
+    let mut net = NetFabric::new(&netcfg);
+    // chaos knobs arm BEFORE any traffic, so link fault processes see
+    // every message from t=0 (loss/dup of 0 consumes no PRNG draws and
+    // leaves the trajectory byte-identical to a fault-free run)
+    if let Some(spec) = &scenario.faults {
+        net.arm_faults(*spec);
+    }
     let hints = NetHints::from_net(&net);
     let mut rt = GraphRuntime::new(net);
     let interval = secs(cfg.interval_s);
@@ -1121,7 +1127,9 @@ pub fn run_scenario(
     }
     rt.run_until(scenario.duration);
     let (metrics, _) = finalize_metrics(&cfg, &shared, &rt)?;
-    Ok(ScenarioOutcome { metrics, report: plane.report() })
+    let mut report = plane.report();
+    report.msgs_lost = rt.net().msgs_lost();
+    Ok(ScenarioOutcome { metrics, report })
 }
 
 // ---------------------------------------------------------------------------

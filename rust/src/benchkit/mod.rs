@@ -13,7 +13,9 @@
 //! fabric publish storm (DESIGN.md §Event-engine) — plus, since PR 4,
 //! the THREADED plane's broker (publish/deliver throughput and
 //! filter-directed retained replay), so `BENCH_*.json` covers both
-//! planes.
+//! planes, and, since PR 7, the chaos-ready control plane's full
+//! deploy → fail → rejoin cycle under seeded message loss
+//! (`churn_convergence`).
 
 use crate::des::queue::{CalendarQueue, EventQueue, HeapQueue};
 use crate::des::{Scheduler, SimEvent};
@@ -582,6 +584,140 @@ pub fn netfabric_hops(n_pubs: usize, n_sinks: usize) -> HopNumbers {
 }
 
 // ---------------------------------------------------------------------------
+// churn convergence: fail -> rejoin under instruction loss (PR 7)
+// ---------------------------------------------------------------------------
+
+/// Control-plane churn numbers: how fast the simulator replays a full
+/// deploy → fail-node → rejoin cycle with the at-least-once channel
+/// retrying under seeded message loss, plus the chaos metrics the
+/// cycle produced (identical on every run — the fault processes are
+/// seeded, so only the wall-clock rate varies).
+pub struct ChurnNumbers {
+    pub nodes: usize,
+    pub loss: f64,
+    pub runs: u64,
+    /// Full chaos cycles (60 virtual seconds each) per wall second —
+    /// the gated throughput row.
+    pub runs_per_sec: f64,
+    /// Worst virtual-time fault→all-acked convergence across the run
+    /// (informational: loss/seed-dependent, not a throughput).
+    pub convergence_ms: f64,
+    /// Instruction retries one cycle needed under `loss`.
+    pub retries: u64,
+    /// Messages the fault plane dropped in one cycle.
+    pub msgs_lost: u64,
+}
+
+/// Benchmark the chaos-ready control plane end to end: a platform-only
+/// world (null instance factory — every wire message is an
+/// instruction, heartbeat, or ack) of 2 ECs x `nodes` mini-PC nodes
+/// runs deploy → fail-node → rejoin under `loss` i.i.d. message loss,
+/// exercising the seq-stamped instruction path, agent acks, the
+/// capped-backoff retry timer, and the monitor sweep. Seeded: every
+/// cycle replays the identical trajectory, so the timed loop measures
+/// engine cost, not chaos variance.
+pub fn churn_convergence(nodes: usize, loss: f64, runs: u64) -> ChurnNumbers {
+    use crate::infra::{InfraBuilder, NodeKind};
+    use crate::platform::orchestrator::NetHints;
+    use crate::simnet::faults::FaultSpec;
+    use crate::svcgraph::lifecycle::{
+        ControlPlane, ControlPlaneConfig, InstanceFactory, LifecycleOp, LifecycleReport,
+        LifecycleScenario, ScenarioStep,
+    };
+    use crate::topology::Topology;
+    use crate::util::{secs, AceId};
+
+    let topo_src = format!(
+        "
+app: churn
+version: 1
+components:
+  - name: w
+    image: img:1
+    location: edge
+    replicas: {}
+    resources:
+      cpu: 500
+      mem: 128
+    connections: []
+",
+        2 * nodes
+    );
+    let cycle = |seed: u64| -> LifecycleReport {
+        let mut net = NetFabric::new(&NetConfig { num_ecs: 2, ..Default::default() });
+        if loss > 0.0 {
+            net.arm_faults(FaultSpec { seed, loss, dup: 0.0 });
+        }
+        let hints = NetHints::from_net(&net);
+        let mut rt = GraphRuntime::new(net);
+        let mut b = InfraBuilder::register("churnbench");
+        for _ in 0..2 {
+            let ec = b.claim_ec();
+            for j in 0..nodes {
+                b.add_edge_node(&ec, &format!("n{j}"), NodeKind::MiniPc, Default::default());
+            }
+        }
+        b.add_cloud_node("gpu-ws", NodeKind::GpuWorkstation, Default::default());
+        let infra = b.build();
+        let factory: InstanceFactory = Rc::new(|_inst, _site| Ok(None));
+        let node = AceId::parse("infra-churnbench/ec-1/n0");
+        let scenario = LifecycleScenario {
+            steps: vec![
+                ScenarioStep {
+                    at: secs(0.0),
+                    op: LifecycleOp::Deploy(Topology::parse(&topo_src).expect("bench topology")),
+                },
+                ScenarioStep { at: secs(10.0), op: LifecycleOp::FailNode(node.clone()) },
+                ScenarioStep { at: secs(30.0), op: LifecycleOp::RejoinNode(node.clone()) },
+            ],
+            duration: secs(60.0),
+            network: None,
+            faults: None, // armed directly on the fabric above
+        };
+        // long failure timeout vs the heartbeat, as in the property
+        // test: only the scripted node ever gets shielded
+        let cfg = ControlPlaneConfig {
+            heartbeat_period_s: 1.0,
+            failure_timeout_s: 12.0,
+            sweep_period_s: 4.0,
+            ..Default::default()
+        };
+        let plane = ControlPlane::install(&mut rt, infra, factory, None, &scenario, cfg, hints)
+            .expect("bench control plane");
+        rt.run_until(scenario.duration);
+        let mut report = plane.report();
+        report.msgs_lost = rt.net().msgs_lost();
+        report
+    };
+
+    // untimed warm-up cycle, which also supplies the chaos metrics
+    // (identical on every timed cycle: same seed, same trajectory)
+    let warm = cycle(7);
+    assert!(
+        !warm.convergence_us.is_empty(),
+        "churn cycle must record a fault→all-acked convergence"
+    );
+    if loss > 0.0 {
+        assert!(warm.retries > 0, "lossy churn cycle must exercise the retry path");
+    }
+
+    let t0 = Instant::now();
+    for _ in 0..runs {
+        cycle(7);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    ChurnNumbers {
+        nodes,
+        loss,
+        runs,
+        runs_per_sec: runs as f64 / dt,
+        convergence_ms: warm.max_convergence_ms(),
+        retries: warm.retries,
+        msgs_lost: warm.msgs_lost,
+    }
+}
+
+// ---------------------------------------------------------------------------
 // bench-regression gate (`ace bench --check BASELINE.json`)
 // ---------------------------------------------------------------------------
 
@@ -598,6 +734,7 @@ pub const CHECKED_METRICS: &[(&str, &str)] = &[
     ("broker", "deliver_per_sec"),
     ("broker", "replay_subscribes_per_sec"),
     ("netfabric", "hop_pubs_per_sec"),
+    ("churn_convergence", "runs_per_sec"),
 ];
 
 /// Outcome of comparing a fresh bench record against a baseline.
@@ -729,6 +866,10 @@ mod tests {
                 ]),
             ),
             ("netfabric", Value::obj(vec![("hop_pubs_per_sec", Value::num(40_000.0 * scale))])),
+            (
+                "churn_convergence",
+                Value::obj(vec![("runs_per_sec", Value::num(100.0 * scale))]),
+            ),
         ])
     }
 
@@ -829,6 +970,19 @@ mod tests {
         assert_eq!(n.events, 5_000);
         assert!(n.wheel_events_per_sec > 0.0);
         assert!(n.heap_events_per_sec > 0.0);
+    }
+
+    #[test]
+    fn churn_convergence_runs_a_lossy_cycle() {
+        // small but real: 2 nodes per EC, one timed cycle at 20% loss
+        // (the retry/convergence asserts live inside churn_convergence)
+        let n = churn_convergence(2, 0.2, 1);
+        assert_eq!(n.nodes, 2);
+        assert_eq!(n.runs, 1);
+        assert!(n.runs_per_sec > 0.0);
+        assert!(n.convergence_ms > 0.0, "chaos cycle must converge in measurable time");
+        assert!(n.retries > 0);
+        assert!(n.msgs_lost > 0);
     }
 
     #[test]

@@ -153,11 +153,33 @@ pub fn status_topic(node: &AceId) -> String {
     format!("ace/status/{}", node.to_string().replace('/', "."))
 }
 
+/// Render the instruction-ack topic name for a node (the virtual
+/// control plane's at-least-once channel).
+pub fn ack_topic(node: &AceId) -> String {
+    format!("ace/ack/{}", node.to_string().replace('/', "."))
+}
+
 /// Build a compose-style instruction document for a node.
 pub fn compose_instruction(
     app: &str,
     services: &[(String, String, String)], // (instance, component, image)
 ) -> String {
+    compose_doc(app, services, None)
+}
+
+/// [`compose_instruction`] plus a top-level monotonic `seq` stamp —
+/// the at-least-once channel's dedupe key. Backward-compatible wire
+/// format: both the threaded [`Agent`] and the simulated node agent
+/// read only `services`, so a stamped document converges identically.
+pub fn compose_instruction_seq(
+    app: &str,
+    services: &[(String, String, String)],
+    seq: u64,
+) -> String {
+    compose_doc(app, services, Some(seq))
+}
+
+fn compose_doc(app: &str, services: &[(String, String, String)], seq: Option<u64>) -> String {
     let mut svc_map = BTreeMap::new();
     for (instance, component, image) in services {
         let labels = Value::obj(vec![
@@ -173,11 +195,14 @@ pub fn compose_instruction(
             ]),
         );
     }
-    let doc = Value::obj(vec![
+    let mut pairs = vec![
         ("version", Value::str("3.8")),
         ("services", Value::Obj(svc_map)),
-    ]);
-    yamlite::to_string(&doc)
+    ];
+    if let Some(seq) = seq {
+        pairs.push(("seq", Value::num(seq as f64)));
+    }
+    yamlite::to_string(&Value::obj(pairs))
 }
 
 #[cfg(test)]
@@ -240,6 +265,29 @@ mod tests {
             let r = agent.running();
             r.len() == 1 && r[0].image == "i1b"
         });
+    }
+
+    #[test]
+    fn seq_stamp_is_backward_compatible_wire_format() {
+        let services = vec![("od-1".to_string(), "od".to_string(), "i1".to_string())];
+        let stamped = compose_instruction_seq("vq", &services, 42);
+        let v = yamlite::parse(&stamped).unwrap();
+        assert_eq!(v.get("seq").as_f64(), Some(42.0));
+        assert_eq!(
+            v.get("services"),
+            yamlite::parse(&compose_instruction("vq", &services))
+                .unwrap()
+                .get("services"),
+            "the stamp must not perturb the services mapping"
+        );
+        // and the threaded agent (which ignores unknown top-level keys)
+        // converges on a stamped document exactly as on a plain one
+        let broker = Broker::new("ec-1");
+        let node = AceId::parse("infra-1/ec-1/rpi9");
+        let agent = Agent::start(node.clone(), broker.clone()).unwrap();
+        broker.publish(&deploy_topic(&node), stamped.into_bytes()).unwrap();
+        wait_for(|| agent.running().len() == 1);
+        assert_eq!(agent.running()[0].image, "i1");
     }
 
     #[test]

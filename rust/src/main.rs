@@ -25,12 +25,16 @@
 //!                                    control plane: a scripted
 //!                                    lifecycle (deploy / incremental
 //!                                    update / node failure with
-//!                                    shield+redeploy / remove) drives
-//!                                    the live graph mid-run
+//!                                    shield+redeploy / node rejoin /
+//!                                    fail-link / degrade-nic / remove,
+//!                                    optionally under a seeded fault
+//!                                    plane) drives the live graph
+//!                                    mid-run
 //!   ace bench [--json] [--events N] [--subs N] [--pubs N] [--comps N]
 //!             [--storm-pubs N] [--broker-subs N] [--broker-pubs N]
 //!             [--retained N] [--replay-subs N] [--hop-pubs N]
 //!             [--hop-sinks N] [--timers N] [--timer-events N]
+//!             [--churn-nodes N] [--churn-loss P] [--churn-runs N]
 //!             [--check BASELINE.json] [--floor FLOOR.json]
 //!             [--tolerance T]
 //!                                  — hot-path micro-benchmarks on BOTH
@@ -39,7 +43,9 @@
 //!                                    timer storm, scratch-reuse
 //!                                    routing, fabric storm, hop-charged
 //!                                    NetFabric routing, broker
-//!                                    throughput + retained replay);
+//!                                    throughput + retained replay,
+//!                                    chaos churn cycles under seeded
+//!                                    message loss);
 //!                                    --json emits the machine-readable
 //!                                    BENCH_*.json perf-trajectory
 //!                                    record CI logs; --check compares
@@ -270,6 +276,23 @@ fn print_report(report: &LifecycleReport) {
         "lifecycle: {} spawned / {} retired / {} status reports / {} redeploys / shielded {:?}",
         report.spawned, report.retired, report.status_reports, report.redeploys, report.shielded,
     );
+    // the chaos line only appears when something chaotic happened, so
+    // fault-free runs keep their pre-fault-plane output byte-for-byte
+    if report.retries > 0
+        || report.dup_suppressed > 0
+        || report.msgs_lost > 0
+        || !report.convergence_us.is_empty()
+    {
+        println!(
+            "chaos: {} msgs lost / {} instr retries / {} dups suppressed / \
+             convergence max {:.0} ms over {} fault episode(s)",
+            report.msgs_lost,
+            report.retries,
+            report.dup_suppressed,
+            report.max_convergence_ms(),
+            report.convergence_us.len(),
+        );
+    }
 }
 
 /// `--scenario FILE`: run an app under the virtual-time control plane
@@ -479,6 +502,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let hop_sinks = args.usize_or("hop-sinks", 64);
     let timers = args.usize_or("timers", 10_000);
     let timer_events = args.usize_or("timer-events", 1_000_000) as u64;
+    let churn_nodes = args.usize_or("churn-nodes", 4);
+    let churn_loss = args.f64_or("churn-loss", 0.2);
+    let churn_runs = args.usize_or("churn-runs", 10) as u64;
 
     let des = benchkit::des_throughput(events);
     let tstorm = benchkit::des_timer_storm(timers, timer_events);
@@ -486,6 +512,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let storm = benchkit::fabric_storm(comps, storm_pubs);
     let broker = benchkit::broker_throughput(broker_subs, broker_pubs, retained, replay_subs);
     let hops = benchkit::netfabric_hops(hop_pubs, hop_sinks);
+    let churn = benchkit::churn_convergence(churn_nodes, churn_loss, churn_runs);
 
     // one measurement pass serves both renderings: the table goes to
     // stderr so `--json` output stays pipeable AND the log stays
@@ -541,6 +568,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
         hops.flat_pubs_per_s,
         hops.hop_pubs_per_s,
         hops.flat_pubs_per_s / hops.hop_pubs_per_s.max(1.0)
+    );
+    eprintln!(
+        "churn convergence: {} runs of deploy->fail->rejoin on 2x{} nodes at {:.0}% loss \
+         -> {:.1} runs/s; per cycle: {} msgs lost, {} retries, convergence max {:.0} ms",
+        churn.runs,
+        churn.nodes,
+        churn.loss * 100.0,
+        churn.runs_per_sec,
+        churn.msgs_lost,
+        churn.retries,
+        churn.convergence_ms
     );
 
     {
@@ -611,6 +649,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     ("deliveries", Value::Num(hops.deliveries as f64)),
                     ("flat_pubs_per_sec", num(hops.flat_pubs_per_s)),
                     ("hop_pubs_per_sec", num(hops.hop_pubs_per_s)),
+                ]),
+            ),
+            (
+                "churn_convergence",
+                obj(vec![
+                    ("nodes", Value::Num(churn.nodes as f64)),
+                    ("loss", Value::Num(churn.loss)),
+                    ("runs", Value::Num(churn.runs as f64)),
+                    // gated (higher is better)
+                    ("runs_per_sec", Value::Num(churn.runs_per_sec)),
+                    // informational: virtual-time chaos metrics, fixed
+                    // by the fault seed (lower-is-better convergence is
+                    // NOT a throughput, so the gate skips it)
+                    ("convergence_ms", num(churn.convergence_ms)),
+                    ("retries", Value::Num(churn.retries as f64)),
+                    ("msgs_lost", Value::Num(churn.msgs_lost as f64)),
                 ]),
             ),
         ]);
@@ -792,8 +846,11 @@ COMMANDS:
                scripted lifecycle (deploy,
                incremental update, node
                failure -> shield/redeploy,
-               remove) drives the live graph
-               under virtual time
+               node rejoin, fail-link /
+               degrade-nic chaos with a
+               seeded faults block) drives
+               the live graph under virtual
+               time
   bench        hot-path micro-benchmarks,     [--json] [--events N] [--subs N]
                both planes                    [--pubs N] [--comps N]
                (BENCH_*.json perf trajectory) [--storm-pubs N] [--broker-subs N]
@@ -801,6 +858,8 @@ COMMANDS:
                                               [--replay-subs N] [--hop-pubs N]
                                               [--hop-sinks N] [--timers N]
                                               [--timer-events N]
+                                              [--churn-nodes N] [--churn-loss P]
+                                              [--churn-runs N]
                with --check FILE: exit        [--check BASELINE.json]
                nonzero on throughput          [--tolerance T]
                regressions beyond T (0.25);   [--require-baseline]

@@ -1,0 +1,368 @@
+//! Deterministic per-link fault processes (PR 7).
+//!
+//! ACE's operational claim (§4.2) is that the PLATFORM absorbs
+//! infrastructure dynamics; to test that, the simulation must be able
+//! to make messages disappear. This module gives every named link in
+//! the [`NetFabric`](super::NetFabric) an optional [`FaultProcess`]:
+//! i.i.d. message loss, i.i.d. duplication, and scheduled outage
+//! windows (link down ⇒ drop). Verdicts are consulted at the event
+//! SCHEDULING sites (`svcgraph::Fabric::route`, the lifecycle
+//! instruction sender) — the link still charges time and bytes exactly
+//! as today, the verdict only decides whether the delivery event is
+//! pushed (or pushed twice).
+//!
+//! Determinism discipline — the same contract as `Link` jitter:
+//!
+//! * every random decision is a stateless indexed draw
+//!   (`util::prng::f32_at(seed, n)`) off a per-link seed derived from
+//!   the link NAME and the scenario-level fault seed, indexed by a
+//!   per-link monotonic decision counter — same seed ⇒ bit-identical
+//!   drop/duplicate sequences, independent of wall-clock or map order;
+//! * a knob at zero draws NOTHING (no PRNG stream is even consulted),
+//!   so a fault-free run is byte-for-byte identical to a build without
+//!   this module — every pre-PR-7 golden replays unchanged;
+//! * outage windows are plain interval arithmetic (no randomness).
+//!
+//! The per-link seed folds the link name with a different constant
+//! (`0xFA17`) than jitter's `0xACE`, then mixes the scenario seed, so
+//! the fault stream is decorrelated from the jitter stream even on the
+//! same link.
+
+use crate::json::Value;
+use crate::util::{prng, SimTime};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Per-link fault seed: link name folded with a fault-specific
+/// constant, mixed with the scenario seed (SplitMix64 odd multiplier).
+pub fn link_fault_seed(scenario_seed: u64, link: &str) -> u64 {
+    let name_hash = link
+        .bytes()
+        .fold(0xFA17u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64));
+    name_hash ^ scenario_seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xFA17)
+}
+
+/// What happens to one scheduled delivery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Push the delivery event as today.
+    Deliver,
+    /// Do not push the delivery event (message lost on the link).
+    Drop,
+    /// Push the delivery event TWICE (the second copy at the same
+    /// arrival time, a later scheduler sequence number).
+    Duplicate,
+}
+
+/// Scenario-level fault knobs, parsed from a `faults:` yamlite block:
+///
+/// ```yaml
+/// faults:
+///   seed: 7
+///   loss: 0.1        # i.i.d. per-message drop probability, [0, 1)
+///   dup: 0.02        # i.i.d. per-message duplication probability
+/// ```
+///
+/// `loss`/`dup` default to 0.0 (draw nothing); `seed` defaults to 0.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultSpec {
+    pub seed: u64,
+    pub loss: f64,
+    pub dup: f64,
+}
+
+impl FaultSpec {
+    /// Parse a `faults:` block. Unknown keys and mistyped/out-of-range
+    /// values are loud errors, never silent fallbacks (same contract
+    /// as `NetOverrides::from_value`).
+    pub fn from_value(doc: &Value) -> Result<FaultSpec> {
+        let obj = doc
+            .as_obj()
+            .context("faults: expected a mapping of {seed, loss, dup}")?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "seed" | "loss" | "dup") {
+                bail!("faults.{key}: unknown field (expected seed|loss|dup)");
+            }
+        }
+        let prob = |key: &str| -> Result<f64> {
+            match doc.get(key) {
+                Value::Null => Ok(0.0),
+                v => {
+                    let p = v.as_f64().with_context(|| {
+                        format!("faults.{key}: expected a number, got {v}")
+                    })?;
+                    if !(p.is_finite() && (0.0..1.0).contains(&p)) {
+                        bail!("faults.{key}: probability must be in [0, 1), got {p}");
+                    }
+                    Ok(p)
+                }
+            }
+        };
+        let seed = match doc.get("seed") {
+            Value::Null => 0,
+            v => {
+                let s = v
+                    .as_f64()
+                    .with_context(|| format!("faults.seed: expected a number, got {v}"))?;
+                if s.fract() != 0.0 || s < 0.0 {
+                    bail!("faults.seed: expected a non-negative integer, got {s}");
+                }
+                s as u64
+            }
+        };
+        Ok(FaultSpec { seed, loss: prob("loss")?, dup: prob("dup")? })
+    }
+
+    /// Any knob set? False = the plane stays completely inert.
+    pub fn is_active(&self) -> bool {
+        self.loss > 0.0 || self.dup > 0.0
+    }
+}
+
+/// One link's fault state: the i.i.d. knobs, the indexed-draw cursor,
+/// scheduled outage windows, and loss/duplication counters.
+#[derive(Debug, Clone, Default)]
+pub struct FaultProcess {
+    pub loss: f64,
+    pub dup: f64,
+    /// Stream seed for fault draws (see [`link_fault_seed`]).
+    pub seed: u64,
+    /// Monotonic decision counter — each consulted draw consumes one
+    /// index, so the decision sequence is a pure function of the seed.
+    decisions: u64,
+    /// Scheduled outages, `[from, until)` in virtual µs: a delivery
+    /// whose SEND time falls inside any window is dropped (no draw).
+    pub outages: Vec<(SimTime, SimTime)>,
+    /// Messages dropped (i.i.d. loss + outage windows).
+    pub lost: u64,
+    /// Messages duplicated.
+    pub duplicated: u64,
+}
+
+impl FaultProcess {
+    pub fn new(seed: u64, loss: f64, dup: f64) -> Self {
+        FaultProcess { loss, dup, seed, ..Default::default() }
+    }
+
+    /// Is `now` inside a scheduled outage window?
+    pub fn in_outage(&self, now: SimTime) -> bool {
+        self.outages.iter().any(|&(from, until)| from <= now && now < until)
+    }
+
+    /// Decide the fate of one delivery sent at `now`. Zero knobs and
+    /// no matching outage ⇒ `Deliver` without consuming any draw.
+    pub fn verdict(&mut self, now: SimTime) -> Verdict {
+        if self.in_outage(now) {
+            self.lost += 1;
+            return Verdict::Drop;
+        }
+        if self.loss > 0.0 {
+            let n = self.decisions;
+            self.decisions += 1;
+            if (prng::f32_at(self.seed, n) as f64) < self.loss {
+                self.lost += 1;
+                return Verdict::Drop;
+            }
+        }
+        if self.dup > 0.0 {
+            let n = self.decisions;
+            self.decisions += 1;
+            if (prng::f32_at(self.seed, n) as f64) < self.dup {
+                self.duplicated += 1;
+                return Verdict::Duplicate;
+            }
+        }
+        Verdict::Deliver
+    }
+}
+
+/// The fabric-wide fault plane: one optional [`FaultProcess`] per link
+/// name. Completely inert (and allocation-free on the hot path) until
+/// a [`FaultSpec`] is armed or an outage is scheduled — the zero-knob
+/// configuration is indistinguishable from the plane not existing.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlane {
+    /// The scenario-level knobs, if armed.
+    spec: Option<FaultSpec>,
+    /// Per-link processes, keyed by canonical link name (`lan-ec0`,
+    /// `up-ec0`, `down-ec0`, `lan-cc`). Created lazily on first
+    /// verdict (spec armed) or first scheduled outage.
+    links: BTreeMap<String, FaultProcess>,
+}
+
+impl FaultPlane {
+    /// Arm scenario-level i.i.d. loss/duplication. A spec with both
+    /// knobs at zero still arms the plane (the seed is recorded for
+    /// later outage-only links) but draws nothing.
+    pub fn arm(&mut self, spec: FaultSpec) {
+        self.spec = Some(spec);
+    }
+
+    /// The hot-path short-circuit: nothing armed, nothing scheduled.
+    #[inline]
+    pub fn is_idle(&self) -> bool {
+        self.spec.is_none() && self.links.is_empty()
+    }
+
+    /// Schedule an outage window `[from, until)` on `link`.
+    pub fn schedule_outage(&mut self, link: &str, from: SimTime, until: SimTime) {
+        self.process_mut(link).outages.push((from, until));
+    }
+
+    /// Decide the fate of one delivery on `link` sent at `now`.
+    pub fn verdict(&mut self, link: &str, now: SimTime) -> Verdict {
+        if self.is_idle() {
+            return Verdict::Deliver;
+        }
+        // spec armed: every link gets a process on first use; spec not
+        // armed: only links with scheduled outages have state, the
+        // rest deliver without allocating.
+        if self.spec.is_some() {
+            return self.process_mut(link).verdict(now);
+        }
+        match self.links.get_mut(link) {
+            Some(p) => p.verdict(now),
+            None => Verdict::Deliver,
+        }
+    }
+
+    fn process_mut(&mut self, link: &str) -> &mut FaultProcess {
+        let spec = self.spec.unwrap_or_default();
+        self.links.entry(link.to_string()).or_insert_with(|| {
+            FaultProcess::new(link_fault_seed(spec.seed, link), spec.loss, spec.dup)
+        })
+    }
+
+    /// Total messages dropped across all links.
+    pub fn lost(&self) -> u64 {
+        self.links.values().map(|p| p.lost).sum()
+    }
+
+    /// Total messages duplicated across all links.
+    pub fn duplicated(&self) -> u64 {
+        self.links.values().map(|p| p.duplicated).sum()
+    }
+
+    /// Per-link state, if any (tests / reporting).
+    pub fn link(&self, name: &str) -> Option<&FaultProcess> {
+        self.links.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::yamlite;
+
+    #[test]
+    fn spec_parses_and_rejects_garbage() {
+        let doc = yamlite::parse("seed: 7\nloss: 0.1\ndup: 0.02\n").unwrap();
+        let spec = FaultSpec::from_value(&doc).unwrap();
+        assert_eq!(spec, FaultSpec { seed: 7, loss: 0.1, dup: 0.02 });
+        assert!(spec.is_active());
+        // defaults: absent knobs are zero
+        let doc = yamlite::parse("seed: 3\n").unwrap();
+        let spec = FaultSpec::from_value(&doc).unwrap();
+        assert_eq!((spec.loss, spec.dup), (0.0, 0.0));
+        assert!(!spec.is_active());
+        for bad in [
+            "loss: 1.5\n",
+            "loss: -0.1\n",
+            "loss: maybe\n",
+            "dup: 1\n", // 1.0 would duplicate EVERY message forever
+            "seed: -1\n",
+            "seed: 1.5\n",
+            "seed: 7\ntypo_knob: 1\n",
+        ] {
+            let v = yamlite::parse(bad).unwrap();
+            assert!(FaultSpec::from_value(&v).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn zero_knobs_consume_no_draws() {
+        let mut p = FaultProcess::new(123, 0.0, 0.0);
+        for now in 0..10_000u64 {
+            assert_eq!(p.verdict(now), Verdict::Deliver);
+        }
+        assert_eq!(p.decisions, 0, "zero knobs must not touch the PRNG stream");
+        assert_eq!((p.lost, p.duplicated), (0, 0));
+    }
+
+    #[test]
+    fn verdicts_are_a_pure_function_of_the_seed() {
+        let run = || {
+            let mut p = FaultProcess::new(link_fault_seed(7, "up-ec0"), 0.2, 0.05);
+            (0..2_000u64).map(|now| p.verdict(now * 17)).collect::<Vec<_>>()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "same seed must yield identical decision sequences");
+        assert!(a.contains(&Verdict::Drop), "20% loss over 2000 msgs must drop");
+        assert!(a.contains(&Verdict::Duplicate));
+        // and a different scenario seed decorrelates the stream
+        let mut p = FaultProcess::new(link_fault_seed(8, "up-ec0"), 0.2, 0.05);
+        let c: Vec<_> = (0..2_000u64).map(|now| p.verdict(now * 17)).collect();
+        assert_ne!(a, c, "different seeds must yield different sequences");
+    }
+
+    #[test]
+    fn loss_rate_is_roughly_honoured() {
+        let mut p = FaultProcess::new(link_fault_seed(42, "lan-ec1"), 0.1, 0.0);
+        let n = 20_000u64;
+        for now in 0..n {
+            p.verdict(now);
+        }
+        let rate = p.lost as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.02, "empirical loss {rate} vs 0.1");
+    }
+
+    #[test]
+    fn outage_windows_drop_without_drawing() {
+        let mut p = FaultProcess::new(9, 0.0, 0.0);
+        p.outages.push((1_000, 2_000));
+        assert_eq!(p.verdict(999), Verdict::Deliver);
+        assert_eq!(p.verdict(1_000), Verdict::Drop, "window start is inclusive");
+        assert_eq!(p.verdict(1_999), Verdict::Drop);
+        assert_eq!(p.verdict(2_000), Verdict::Deliver, "window end is exclusive");
+        assert_eq!(p.lost, 2);
+        assert_eq!(p.decisions, 0, "outage drops are interval arithmetic, not draws");
+    }
+
+    #[test]
+    fn idle_plane_allocates_no_link_state() {
+        let mut plane = FaultPlane::default();
+        assert!(plane.is_idle());
+        for i in 0..1_000u64 {
+            assert_eq!(plane.verdict("lan-ec0", i), Verdict::Deliver);
+        }
+        assert!(plane.is_idle(), "idle verdicts must not materialize link state");
+        assert_eq!((plane.lost(), plane.duplicated()), (0, 0));
+    }
+
+    #[test]
+    fn armed_plane_faults_per_link_independently() {
+        let mut plane = FaultPlane::default();
+        plane.arm(FaultSpec { seed: 7, loss: 0.3, dup: 0.0 });
+        for i in 0..2_000u64 {
+            plane.verdict("up-ec0", i);
+            plane.verdict("down-ec0", i);
+        }
+        let up = plane.link("up-ec0").unwrap();
+        let down = plane.link("down-ec0").unwrap();
+        assert!(up.lost > 0 && down.lost > 0);
+        assert_ne!(up.seed, down.seed, "per-link seeds must differ");
+        assert_eq!(plane.lost(), up.lost + down.lost);
+    }
+
+    #[test]
+    fn outage_only_plane_faults_just_the_scheduled_link() {
+        let mut plane = FaultPlane::default();
+        plane.schedule_outage("up-ec1", 100, 200);
+        assert!(!plane.is_idle());
+        assert_eq!(plane.verdict("up-ec1", 150), Verdict::Drop);
+        assert_eq!(plane.verdict("up-ec1", 250), Verdict::Deliver);
+        assert_eq!(plane.verdict("up-ec0", 150), Verdict::Deliver);
+        assert!(plane.link("up-ec0").is_none(), "unscheduled links stay stateless");
+        assert_eq!(plane.lost(), 1);
+    }
+}

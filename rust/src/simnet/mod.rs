@@ -48,6 +48,10 @@ use crate::util::{SimTime, MICROS_PER_SEC};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
+pub mod faults;
+
+use faults::{FaultPlane, FaultSpec, Verdict};
+
 /// One directed link.
 #[derive(Debug, Clone)]
 pub struct Link {
@@ -475,6 +479,11 @@ pub struct NetFabric {
     pub uplink: Vec<Link>,
     /// CC → EC downlinks (40 Mbps in the paper).
     pub downlink: Vec<Link>,
+    /// Per-link fault processes (PR 7): loss / duplication / outage
+    /// windows. Inert by default — the verdict methods short-circuit
+    /// to `Deliver` without formatting a link name or touching a PRNG
+    /// stream, so fault-free runs are byte-for-byte unchanged.
+    pub faults: FaultPlane,
 }
 
 impl NetFabric {
@@ -503,7 +512,8 @@ impl NetFabric {
             cfg.cc_lan_mbps,
             cfg.cc_lan_delay,
         ));
-        let mut fab = NetFabric { clusters, uplink, downlink };
+        let mut fab =
+            NetFabric { clusters, uplink, downlink, faults: FaultPlane::default() };
         for spec in &cfg.nics {
             let Some(ci) = cfg.cluster_index(&spec.cluster) else {
                 continue; // cluster not present in this run's shape
@@ -624,6 +634,112 @@ impl NetFabric {
             Some(lan) => lan.send(at, bytes),
             None => at,
         }
+    }
+
+    // --- fault plane (PR 7) -------------------------------------------
+    //
+    // Verdicts are consulted by the event-scheduling sites
+    // (`svcgraph::Fabric::route`, the lifecycle instruction sender)
+    // AFTER the link charged time/bytes: a lost message still occupied
+    // the serialization queue (it was transmitted, then corrupted /
+    // blackholed), only its delivery event is never pushed.
+
+    /// Arm scenario-level i.i.d. loss / duplication on every link.
+    pub fn arm_faults(&mut self, spec: FaultSpec) {
+        self.faults.arm(spec);
+    }
+
+    /// Fate of one delivery on cluster `ci`'s LAN segment at `now`.
+    pub fn lan_verdict(&mut self, ci: usize, now: SimTime) -> Verdict {
+        if self.faults.is_idle() {
+            return Verdict::Deliver;
+        }
+        let name = if ci == self.cc_index() {
+            "lan-cc".to_string()
+        } else {
+            format!("lan-ec{ci}")
+        };
+        self.faults.verdict(&name, now)
+    }
+
+    /// Fate of one delivery on the EC `ec` → CC uplink at `now`.
+    pub fn up_verdict(&mut self, ec: usize, now: SimTime) -> Verdict {
+        if self.faults.is_idle() {
+            return Verdict::Deliver;
+        }
+        self.faults.verdict(&format!("up-ec{ec}"), now)
+    }
+
+    /// Fate of one delivery on the CC → EC `ec` downlink at `now`.
+    pub fn down_verdict(&mut self, ec: usize, now: SimTime) -> Verdict {
+        if self.faults.is_idle() {
+            return Verdict::Deliver;
+        }
+        self.faults.verdict(&format!("down-ec{ec}"), now)
+    }
+
+    /// Does `name` refer to one of this fabric's shared links?
+    /// (NIC outages are expressed as `degrade-nic` instead.)
+    pub fn has_link(&self, name: &str) -> bool {
+        if name == "lan-cc" {
+            return true;
+        }
+        for prefix in ["lan-ec", "up-ec", "down-ec"] {
+            if let Some(k) = name.strip_prefix(prefix) {
+                return k.parse::<usize>().is_ok_and(|k| k < self.num_ecs());
+            }
+        }
+        false
+    }
+
+    /// Schedule a full outage `[from, until)` on a named shared link:
+    /// every delivery sent inside the window is dropped (the `fail-
+    /// link` scenario op). Unknown names are loud errors.
+    pub fn fail_link(&mut self, link: &str, from: SimTime, until: SimTime) -> Result<()> {
+        if !self.has_link(link) {
+            bail!(
+                "fail-link: unknown link '{link}' (lan-ec0..{}, up-ec*, down-ec*, lan-cc)",
+                self.num_ecs().saturating_sub(1)
+            );
+        }
+        self.faults.schedule_outage(link, from, until);
+        Ok(())
+    }
+
+    /// Re-shape (or create) node `node`'s access link to `mbps` — the
+    /// `degrade-nic` scenario op. Non-finite / non-positive `mbps`
+    /// lifts the constraint back to an unlimited (count-only) NIC.
+    pub fn degrade_nic(&mut self, cluster: &str, node: &str, mbps: f64) -> Result<()> {
+        let ci = if cluster == "cc" {
+            self.cc_index()
+        } else {
+            match parse_ec_leaf(cluster) {
+                Some(n) if n <= self.num_ecs() => n - 1,
+                _ => bail!("degrade-nic: unknown cluster '{cluster}' (ec-N|cc)"),
+            }
+        };
+        let name = format!("nic-{cluster}-{node}");
+        let nic = self.clusters[ci]
+            .nics
+            .entry(node.to_string())
+            .or_insert_with(|| Nic::unlimited(name));
+        if mbps.is_finite() && mbps > 0.0 {
+            nic.unlimited = false;
+            nic.link.set_bw_bps((mbps * 1e6) as u64);
+        } else {
+            nic.unlimited = true;
+        }
+        Ok(())
+    }
+
+    /// Messages dropped by the fault plane (loss + outages).
+    pub fn msgs_lost(&self) -> u64 {
+        self.faults.lost()
+    }
+
+    /// Messages duplicated by the fault plane.
+    pub fn msgs_duplicated(&self) -> u64 {
+        self.faults.duplicated()
     }
 
     /// Total WAN bytes (up + down) — the paper's BWC metric.
@@ -1097,6 +1213,62 @@ nics:
         assert!((util[1].busy_share(1_000_000) - 0.0025).abs() < 1e-12);
         assert_eq!(util[1].busy_share(0), 0.0);
         assert_eq!(util[2].bytes, 0, "idle NICs still show up");
+    }
+
+    #[test]
+    fn fabric_verdicts_idle_by_default_and_fault_when_armed() {
+        let mut net = NetFabric::new(&NetConfig::default());
+        assert!(net.faults.is_idle());
+        for i in 0..100u64 {
+            assert_eq!(net.up_verdict(0, i), Verdict::Deliver);
+            assert_eq!(net.lan_verdict(0, i), Verdict::Deliver);
+            assert_eq!(net.down_verdict(2, i), Verdict::Deliver);
+        }
+        assert!(net.faults.is_idle(), "idle verdicts must not materialize state");
+        net.arm_faults(FaultSpec { seed: 7, loss: 0.3, dup: 0.0 });
+        let mut dropped = 0;
+        for i in 0..2_000u64 {
+            if net.up_verdict(0, i) == Verdict::Drop {
+                dropped += 1;
+            }
+        }
+        assert!(dropped > 0);
+        assert_eq!(net.msgs_lost(), dropped);
+        // the CC LAN rides its own stream under the canonical name
+        net.lan_verdict(net.cc_index(), 0);
+        assert!(net.faults.link("lan-cc").is_some());
+    }
+
+    #[test]
+    fn fail_link_schedules_an_outage_on_known_links_only() {
+        let mut net = NetFabric::new(&NetConfig::default());
+        assert!(net.fail_link("up-ec0", 1_000, 2_000).is_ok());
+        assert!(net.fail_link("lan-cc", 0, 10).is_ok());
+        for bad in ["up-ec3", "lan-ec9", "wan-up-0", "nic-ec-1-rpi1", ""] {
+            assert!(net.fail_link(bad, 0, 1).is_err(), "must reject '{bad}'");
+        }
+        assert_eq!(net.up_verdict(0, 1_500), Verdict::Drop);
+        assert_eq!(net.up_verdict(0, 2_500), Verdict::Deliver);
+        assert_eq!(net.up_verdict(1, 1_500), Verdict::Deliver, "other links unaffected");
+        assert_eq!(net.msgs_lost(), 1);
+    }
+
+    #[test]
+    fn degrade_nic_reshapes_or_creates_the_access_link() {
+        let mut net = NetFabric::new(&contended_cfg());
+        // reshape the existing 8 Mbps NIC down to 2 Mbps
+        net.degrade_nic("ec-1", "rpi1", 2.0).unwrap();
+        let nic = net.nic(0, "rpi1").unwrap();
+        assert_eq!(nic.mbps(), Some(2.0));
+        // create a constraint on a previously-unmodelled node
+        assert!(net.nic(0, "rpi2").is_none());
+        net.degrade_nic("ec-1", "rpi2", 1.0).unwrap();
+        assert_eq!(net.nic(0, "rpi2").unwrap().mbps(), Some(1.0));
+        // lift the constraint back to unlimited
+        net.degrade_nic("ec-1", "rpi2", f64::INFINITY).unwrap();
+        assert_eq!(net.nic(0, "rpi2").unwrap().mbps(), None);
+        assert!(net.degrade_nic("ec-9", "x", 1.0).is_err());
+        assert!(net.degrade_nic("lan", "x", 1.0).is_err());
     }
 
     #[test]

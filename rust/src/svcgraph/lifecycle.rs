@@ -71,19 +71,20 @@ use super::{
     SvcWorld,
 };
 use crate::deploy::{diff_plans, DeploymentPlan, Instance};
-use crate::infra::agent::{compose_instruction, deploy_topic, status_topic};
+use crate::infra::agent::{ack_topic, compose_instruction_seq, deploy_topic, status_topic};
 use crate::infra::{Infrastructure, NodeStatus};
 use crate::json::{self, Value};
 use crate::platform::api::{kinds, ApiServer};
 use crate::platform::controller::plan_to_value;
 use crate::platform::orchestrator::{self, NetHints};
+use crate::simnet::faults::{FaultSpec, Verdict};
 use crate::simnet::NetOverrides;
 use crate::topology::Topology;
-use crate::util::{secs, to_millis, AceId, SimTime};
+use crate::util::{secs, to_millis, to_secs, AceId, SimTime};
 use crate::yamlite;
 use anyhow::{anyhow, bail, Context, Result};
 use std::any::Any;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::rc::Rc;
 
@@ -109,6 +110,19 @@ pub enum LifecycleOp {
     /// Crash a node: everything running on it dies silently; the
     /// platform must NOTICE via missed heartbeats and shield it.
     FailNode(AceId),
+    /// Bring a previously failed/shielded node back: mark it Ready,
+    /// restart its agent, and re-place every app (plan rebalance).
+    RejoinNode(AceId),
+    /// Take a named shared link (`lan-ecN` / `up-ecN` / `down-ecN` /
+    /// `lan-cc`) fully down for a duration: every delivery sent inside
+    /// the window is dropped — platform traffic included.
+    FailLink {
+        link: String,
+        /// Outage duration (µs).
+        for_us: SimTime,
+    },
+    /// Re-shape a node's access link mid-run (partial degradation).
+    DegradeNic { cluster: String, node: String, mbps: f64 },
     /// Remove a deployed application entirely.
     Remove(String),
 }
@@ -134,6 +148,9 @@ pub struct LifecycleScenario {
     /// Optional `network:` overrides (per-node NICs, CC cluster shape,
     /// link shaping) the app driver applies to its base `NetConfig`.
     pub network: Option<NetOverrides>,
+    /// Optional `faults:` block (seeded i.i.d. loss/duplication on
+    /// every link) the app driver arms on its `NetFabric`.
+    pub faults: Option<FaultSpec>,
 }
 
 impl LifecycleScenario {
@@ -144,46 +161,126 @@ impl LifecycleScenario {
     }
 
     /// Build a scenario from an already-parsed yamlite/JSON value.
+    ///
+    /// Validation is loud and names WHERE: unknown top-level keys,
+    /// unknown per-op keys, and non-monotonic `at:` times are errors
+    /// carrying the op index and its virtual time — bad scripts fail
+    /// here, not deep inside the DES.
     pub fn from_value(doc: &Value) -> Result<LifecycleScenario> {
+        let top = doc.as_obj().context("scenario: expected a mapping")?;
+        for key in top.keys() {
+            if !matches!(key.as_str(), "duration" | "ops" | "network" | "faults") {
+                bail!("scenario: unknown field '{key}' (duration|ops|network|faults)");
+            }
+        }
         let duration = secs(
             doc.get("duration")
                 .as_f64()
                 .context("scenario: missing 'duration' (virtual seconds)")?,
         );
         let ops = doc.get("ops").as_arr().context("scenario: missing 'ops'")?;
-        let mut steps = Vec::new();
+        let mut steps: Vec<ScenarioStep> = Vec::new();
         for (i, o) in ops.iter().enumerate() {
-            let at = secs(
-                o.get("at")
-                    .as_f64()
-                    .with_context(|| format!("op #{i}: missing 'at' (virtual seconds)"))?,
-            );
+            let at_s = o
+                .get("at")
+                .as_f64()
+                .with_context(|| format!("op #{i}: missing 'at' (virtual seconds)"))?;
+            let at = secs(at_s);
+            if let Some(prev) = steps.last() {
+                if at < prev.at {
+                    bail!(
+                        "op #{i} at t={at_s}s: 'at' times must be non-decreasing \
+                         (op #{} is at t={}s)",
+                        i - 1,
+                        to_secs(prev.at)
+                    );
+                }
+            }
             let kind = o
                 .get("op")
                 .as_str()
-                .with_context(|| format!("op #{i}: missing 'op'"))?;
+                .with_context(|| format!("op #{i} at t={at_s}s: missing 'op'"))?;
+            // every op accepts exactly {at, op} + its own fields; a
+            // stray key is a loud error naming the op
+            let allowed: &[&str] = match kind {
+                "deploy" | "update" => &["topology"],
+                "fail-node" | "rejoin-node" => &["node"],
+                "fail-link" => &["link", "for"],
+                "degrade-nic" => &["cluster", "node", "mbps"],
+                "remove" => &["app"],
+                other => bail!(
+                    "op #{i} at t={at_s}s: unknown op '{other}' \
+                     (deploy|update|fail-node|rejoin-node|fail-link|degrade-nic|remove)"
+                ),
+            };
+            if let Some(obj) = o.as_obj() {
+                for key in obj.keys() {
+                    if key != "at" && key != "op" && !allowed.contains(&key.as_str()) {
+                        bail!(
+                            "op #{i} ('{kind}' at t={at_s}s): unknown field '{key}' \
+                             (expected {allowed:?})"
+                        );
+                    }
+                }
+            }
+            let node_field = || -> Result<AceId> {
+                Ok(AceId::parse(o.get("node").as_str().with_context(|| {
+                    format!("op #{i} ('{kind}' at t={at_s}s): missing 'node'")
+                })?))
+            };
             let op = match kind {
                 "deploy" | "update" => {
                     let topo = Topology::from_value(o.get("topology"))
-                        .with_context(|| format!("op #{i}: bad 'topology'"))?;
+                        .with_context(|| format!("op #{i} at t={at_s}s: bad 'topology'"))?;
                     if kind == "deploy" {
                         LifecycleOp::Deploy(topo)
                     } else {
                         LifecycleOp::Update(topo)
                     }
                 }
-                "fail-node" => LifecycleOp::FailNode(AceId::parse(
-                    o.get("node")
+                "fail-node" => LifecycleOp::FailNode(node_field()?),
+                "rejoin-node" => LifecycleOp::RejoinNode(node_field()?),
+                "fail-link" => {
+                    let link = o
+                        .get("link")
                         .as_str()
-                        .with_context(|| format!("op #{i}: missing 'node'"))?,
-                )),
+                        .with_context(|| format!("op #{i} at t={at_s}s: missing 'link'"))?
+                        .to_string();
+                    let for_s = o
+                        .get("for")
+                        .as_f64()
+                        .with_context(|| {
+                            format!("op #{i} at t={at_s}s: missing 'for' (outage seconds)")
+                        })?;
+                    if !(for_s.is_finite() && for_s > 0.0) {
+                        bail!("op #{i} at t={at_s}s: 'for' must be positive, got {for_s}");
+                    }
+                    LifecycleOp::FailLink { link, for_us: secs(for_s) }
+                }
+                "degrade-nic" => {
+                    let cluster = o
+                        .get("cluster")
+                        .as_str()
+                        .with_context(|| format!("op #{i} at t={at_s}s: missing 'cluster'"))?
+                        .to_string();
+                    let node = o
+                        .get("node")
+                        .as_str()
+                        .with_context(|| format!("op #{i} at t={at_s}s: missing 'node'"))?
+                        .to_string();
+                    let mbps = o
+                        .get("mbps")
+                        .as_f64()
+                        .with_context(|| format!("op #{i} at t={at_s}s: missing 'mbps'"))?;
+                    LifecycleOp::DegradeNic { cluster, node, mbps }
+                }
                 "remove" => LifecycleOp::Remove(
                     o.get("app")
                         .as_str()
-                        .with_context(|| format!("op #{i}: missing 'app'"))?
+                        .with_context(|| format!("op #{i} at t={at_s}s: missing 'app'"))?
                         .to_string(),
                 ),
-                other => bail!("op #{i}: unknown op '{other}' (deploy|update|fail-node|remove)"),
+                _ => unreachable!("kind validated above"),
             };
             steps.push(ScenarioStep { at, op });
         }
@@ -194,7 +291,11 @@ impl LifecycleScenario {
             Value::Null => None,
             v => Some(NetOverrides::from_value(v).context("scenario: bad 'network'")?),
         };
-        Ok(LifecycleScenario { steps, duration, network })
+        let faults = match doc.get("faults") {
+            Value::Null => None,
+            v => Some(FaultSpec::from_value(v).context("scenario: bad 'faults'")?),
+        };
+        Ok(LifecycleScenario { steps, duration, network, faults })
     }
 
     /// App named by the first deploy/update op (CLI dispatch).
@@ -215,6 +316,11 @@ pub struct ControlPlaneConfig {
     pub failure_timeout_s: f64,
     /// Monitor sweep period (virtual seconds).
     pub sweep_period_s: f64,
+    /// First instruction-retry delay (virtual seconds); each further
+    /// attempt doubles it up to `retry_cap_s` (at-least-once channel).
+    pub retry_base_s: f64,
+    /// Ceiling on the exponential retry backoff (virtual seconds).
+    pub retry_cap_s: f64,
 }
 
 impl Default for ControlPlaneConfig {
@@ -223,9 +329,15 @@ impl Default for ControlPlaneConfig {
             heartbeat_period_s: 2.0,
             failure_timeout_s: 5.0,
             sweep_period_s: 5.0,
+            retry_base_s: 0.5,
+            retry_cap_s: 8.0,
         }
     }
 }
+
+/// Give up redelivering an instruction after this many sends (the node
+/// is almost certainly dead; the monitor sweep will shield it anyway).
+const MAX_SEND_ATTEMPTS: u32 = 10;
 
 /// Deterministic audit trail of everything the control plane did —
 /// hashed by the lifecycle goldens.
@@ -244,6 +356,17 @@ pub struct LifecycleReport {
     pub shielded: Vec<String>,
     /// Shield-triggered re-placements that changed a plan.
     pub redeploys: u64,
+    /// Instruction retries sent by the at-least-once channel.
+    pub retries: u64,
+    /// Redelivered instructions the agents suppressed by seq-dedupe.
+    pub dup_suppressed: u64,
+    /// Messages the fault plane dropped (merged from the `NetFabric`
+    /// counters by the app driver after the run).
+    pub msgs_lost: u64,
+    /// Convergence samples (virtual µs): fault injected → every
+    /// outstanding instruction acked, one entry per completed
+    /// fault/recovery episode.
+    pub convergence_us: Vec<SimTime>,
 }
 
 fn fnv(h: &mut u64, bytes: &[u8]) {
@@ -266,13 +389,30 @@ impl LifecycleReport {
             fnv(&mut h, &at.to_le_bytes());
             fnv(&mut h, msg.as_bytes());
         }
-        for v in [self.spawned, self.retired, self.status_reports, self.redeploys] {
+        for v in [
+            self.spawned,
+            self.retired,
+            self.status_reports,
+            self.redeploys,
+            self.retries,
+            self.dup_suppressed,
+            self.msgs_lost,
+        ] {
             fnv(&mut h, &v.to_le_bytes());
         }
         for s in &self.shielded {
             fnv(&mut h, s.as_bytes());
         }
+        for c in &self.convergence_us {
+            fnv(&mut h, &c.to_le_bytes());
+        }
         h
+    }
+
+    /// Worst (largest) convergence sample in virtual ms, if any fault
+    /// episode completed — the headline churn metric.
+    pub fn max_convergence_ms(&self) -> Option<f64> {
+        self.convergence_us.iter().max().map(|&us| to_millis(us))
     }
 }
 
@@ -295,6 +435,28 @@ struct PlaneState {
     /// Per-node NIC bandwidths for network-aware placement (degenerate
     /// hints reproduce the CPU-spread-only scoring byte-for-byte).
     net_hints: NetHints,
+    /// Monotonic instruction sequence number (at-least-once channel):
+    /// every rendered compose doc carries the next value.
+    instr_seq: Cell<u64>,
+    /// node → its newest unacked instruction. An entry is cleared by a
+    /// matching ack, a give-up, or the node being failed/shielded.
+    pending: RefCell<BTreeMap<AceId, PendingInstr>>,
+    /// Start of the oldest unresolved fault episode: set by fail-node /
+    /// rejoin-node / shield, cleared (into a convergence sample) when
+    /// `pending` drains.
+    fault_at: Cell<Option<SimTime>>,
+    /// First retry delay (µs); doubles per attempt up to `retry_cap`.
+    retry_base: SimTime,
+    retry_cap: SimTime,
+}
+
+/// One node's outstanding (sent, not yet acked) instruction.
+#[derive(Debug, Clone, Copy)]
+struct PendingInstr {
+    /// Sequence number stamped into the compose doc.
+    seq: u64,
+    /// Send attempts so far for this convergence target (0 = first).
+    attempt: u32,
 }
 
 /// Handle onto an installed control plane (post-run inspection).
@@ -314,10 +476,20 @@ struct InstructionBody {
     doc: String,
 }
 
+/// Instruction acknowledgements (at-least-once channel): agents
+/// publish `{node, seq}` on `cloud/ace/ack/<node>` after converging.
+struct AckBody {
+    node: AceId,
+    seq: u64,
+}
+
 /// Topic filter the CC monitor tap listens on: EC agents publish
 /// `cloud/ace/status/<node>` so reports ride the existing `cloud/#`
 /// uplink bridge.
 const MONITOR_FILTER: &str = "cloud/ace/status/#";
+
+/// Topic filter the CC ack tap listens on (same `cloud/#` bridge).
+const ACK_FILTER: &str = "cloud/ace/ack/#";
 
 impl ControlPlane {
     /// Install the control plane into a NOT-yet-started runtime: one
@@ -341,6 +513,10 @@ impl ControlPlane {
             cfg.heartbeat_period_s > 0.0 && cfg.failure_timeout_s > 0.0 && cfg.sweep_period_s > 0.0,
             "control-plane periods must be positive"
         );
+        anyhow::ensure!(
+            cfg.retry_base_s > 0.0 && cfg.retry_cap_s >= cfg.retry_base_s,
+            "retry backoff must be positive and capped at >= the base"
+        );
         let state = Rc::new(PlaneState {
             api: ApiServer::new(),
             infra: RefCell::new(infra),
@@ -353,6 +529,11 @@ impl ControlPlane {
             heartbeat_period: secs(cfg.heartbeat_period_s),
             failure_timeout: secs(cfg.failure_timeout_s),
             net_hints,
+            instr_seq: Cell::new(0),
+            pending: RefCell::new(BTreeMap::new()),
+            fault_at: Cell::new(None),
+            retry_base: secs(cfg.retry_base_s).max(1),
+            retry_cap: secs(cfg.retry_cap_s).max(1),
         });
         // one agent per registered node (§4.3.1: agents are deployed at
         // node registration, before any application exists)
@@ -363,19 +544,13 @@ impl ControlPlane {
             .map(|(_, n)| n.id.clone())
             .collect();
         for node in nodes {
-            let site = site_of_node(&node)?;
-            let agent = NodeAgent {
-                state: state.clone(),
-                node: node.clone(),
-                site: site.clone(),
-                deploy_filter: deploy_topic(&node),
-                status_wire_topic: format!("cloud/{}", status_topic(&node)),
-                running: BTreeMap::new(),
-            };
+            let agent = NodeAgent::new(state.clone(), node.clone())?;
+            let site = agent.site.clone();
             let idx = rt.add(site, Box::new(agent));
             state.agents.borrow_mut().insert(node, idx);
         }
-        // the monitoring service's ingest point on the CC
+        // the monitoring service's ingest point on the CC, plus the
+        // at-least-once channel's ack sink next to it
         let tap_node: Rc<str> = state
             .infra
             .borrow()
@@ -385,8 +560,12 @@ impl ControlPlane {
             .map(|n| n.id.leaf().into())
             .unwrap_or_else(|| "monitor".into());
         rt.add(
-            Site { cluster: ClusterRef::Cc, node: tap_node },
+            Site { cluster: ClusterRef::Cc, node: tap_node.clone() },
             Box::new(MonitorTap { state: state.clone() }),
+        );
+        rt.add(
+            Site { cluster: ClusterRef::Cc, node: tap_node },
+            Box::new(AckTap { state: state.clone() }),
         );
         // scripted ops ride the closure lane at their virtual times
         for step in &scenario.steps {
@@ -432,6 +611,27 @@ fn apply_op(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, op: L
     match op {
         LifecycleOp::Deploy(topo) | LifecycleOp::Update(topo) => submit_topology(st, sch, w, topo),
         LifecycleOp::FailNode(node) => fail_node(st, sch, w, &node),
+        LifecycleOp::RejoinNode(node) => rejoin_node(st, sch, w, &node),
+        LifecycleOp::FailLink { link, for_us } => {
+            let now = sch.now();
+            match w.fabric.net.fail_link(&link, now, now + for_us) {
+                Ok(()) => st.report.borrow_mut().log(
+                    now,
+                    format!("FAULT injected: link {link} down for {}s", to_secs(for_us)),
+                ),
+                Err(e) => st.report.borrow_mut().log(now, format!("ERROR {e}")),
+            }
+        }
+        LifecycleOp::DegradeNic { cluster, node, mbps } => {
+            let now = sch.now();
+            match w.fabric.net.degrade_nic(&cluster, &node, mbps) {
+                Ok(()) => st.report.borrow_mut().log(
+                    now,
+                    format!("FAULT injected: NIC {cluster}/{node} reshaped to {mbps} Mbps"),
+                ),
+                Err(e) => st.report.borrow_mut().log(now, format!("ERROR {e}")),
+            }
+        }
         LifecycleOp::Remove(app) => remove_app(st, sch, w, &app),
     }
 }
@@ -496,9 +696,25 @@ fn submit_topology(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld
 /// silently. The platform only learns of it through missed heartbeats.
 fn fail_node(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, node: &AceId) {
     let now = sch.now();
+    // idempotence: a node that is already shielded (or cordoned) has
+    // nothing left to kill — a second fail-node must NOT queue another
+    // shield/redeploy pass
+    let status = st.infra.borrow().find_node(node).map(|n| n.status);
+    if matches!(status, Some(NodeStatus::Failed) | Some(NodeStatus::Cordoned)) {
+        st.report
+            .borrow_mut()
+            .log(now, format!("fail-node {node}: already shielded, no-op"));
+        return;
+    }
     st.report
         .borrow_mut()
         .log(now, format!("FAULT injected: node {node} crashes"));
+    if st.fault_at.get().is_none() {
+        st.fault_at.set(Some(now));
+    }
+    // an unacked instruction to a crashed node will never be acked:
+    // drop it so the retry loop gives up immediately
+    st.pending.borrow_mut().remove(node);
     if let Some(agent_idx) = st.agents.borrow_mut().remove(node) {
         w.retire(agent_idx);
     }
@@ -516,6 +732,114 @@ fn fail_node(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, node
         let mut rep = st.report.borrow_mut();
         rep.retired += 1;
         rep.log(now, format!("instance '{id}' died with {node}"));
+    }
+}
+
+/// Bring a previously failed node back (the REJOIN half of §4.2.1
+/// churn): mark it Ready, re-stamp its heartbeat so the very next
+/// sweep cannot instantly re-shield it, restart its agent (clean
+/// state — a rebooted node runs nothing and has seen no seq), and
+/// re-place every app so the planner can rebalance onto it.
+fn rejoin_node(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, node: &AceId) {
+    let now = sch.now();
+    let status = st.infra.borrow().find_node(node).map(|n| n.status);
+    match status {
+        None => {
+            st.report
+                .borrow_mut()
+                .log(now, format!("ERROR rejoin-node: unknown node {node}"));
+            return;
+        }
+        Some(NodeStatus::Ready) => {
+            // idempotence mirror of fail-node: rejoining a live node
+            // must not queue a redundant rebalance pass
+            st.report
+                .borrow_mut()
+                .log(now, format!("rejoin-node {node}: already Ready, no-op"));
+            return;
+        }
+        Some(_) => {}
+    }
+    let Ok(agent) = NodeAgent::new(st.clone(), node.clone()) else {
+        st.report
+            .borrow_mut()
+            .log(now, format!("ERROR rejoin-node: malformed node id {node}"));
+        return;
+    };
+    if let Some(n) = st.infra.borrow_mut().find_node_mut(node) {
+        n.status = NodeStatus::Ready;
+    }
+    // the rejoin trap: the sweep only scans Ready nodes, so without a
+    // fresh stamp the node's pre-crash heartbeat age would re-shield
+    // it on the very next sweep, before its restarted agent's first
+    // status report crosses the WAN
+    let key = node.to_string().replace('/', ".");
+    st.api.put(
+        kinds::NODE_STATUS,
+        &key,
+        Value::obj(vec![
+            ("node", Value::str(node.to_string())),
+            ("last_seen_ms", Value::num(to_millis(now))),
+        ]),
+    );
+    // stale in-flight instructions addressed to the pre-crash agent
+    // are drained: the fresh agent starts at seq 0 and the next
+    // convergence pass below re-renders current intent under a new seq
+    st.pending.borrow_mut().remove(node);
+    if st.fault_at.get().is_none() {
+        st.fault_at.set(Some(now));
+    }
+    st.report
+        .borrow_mut()
+        .log(now, format!("rejoin: node {node} back, agent restarted"));
+    let site = agent.site.clone();
+    let idx = w.spawn(sch, site, Box::new(agent));
+    st.agents.borrow_mut().insert(node.clone(), idx);
+    // re-place every app around the recovered capacity (plan
+    // rebalance through the same diff/instruction path as shielding)
+    let apps: Vec<(String, Topology, DeploymentPlan)> = st
+        .apps
+        .borrow()
+        .iter()
+        .map(|(a, (t, p))| (a.clone(), t.clone(), p.clone()))
+        .collect();
+    for (app, topo, old_plan) in apps {
+        let new_plan =
+            match orchestrator::place_with_net(&topo, &st.infra.borrow(), Some(&st.net_hints)) {
+                Ok(p) => p,
+                Err(e) => {
+                    st.report
+                        .borrow_mut()
+                        .log(now, format!("ERROR re-placing '{app}' after rejoin: {e}"));
+                    continue;
+                }
+            };
+        let diff = diff_plans(&old_plan, &new_plan);
+        if diff.is_noop() {
+            continue;
+        }
+        let touched = diff.touched_nodes();
+        {
+            let mut rep = st.report.borrow_mut();
+            rep.redeploys += 1;
+            rep.log(
+                now,
+                format!(
+                    "rejoin/rebalance '{app}': +{} -{} ~{} across {} nodes",
+                    diff.add.len(),
+                    diff.remove.len(),
+                    diff.replace.len(),
+                    touched.len()
+                ),
+            );
+        }
+        store_plan(st, &app, Some((topo, new_plan.clone())));
+        for n in touched {
+            send_node_instruction(st, sch, w, &n);
+        }
+        if let Some(hook) = &st.plan_hook {
+            hook(&app, &new_plan);
+        }
     }
 }
 
@@ -582,6 +906,20 @@ fn send_node_instruction(
     w: &mut SvcWorld,
     node: &AceId,
 ) {
+    dispatch_instruction(st, sch, w, node, 0);
+}
+
+/// Render + send attempt number `attempt` of the node's convergent
+/// instruction. Every send (first or retry) re-renders CURRENT intent
+/// under a FRESH seq — retries are convergent, never a stale replay —
+/// records the node as pending, and arms a backoff retry timer.
+fn dispatch_instruction(
+    st: &Rc<PlaneState>,
+    sch: &mut SvcScheduler,
+    w: &mut SvcWorld,
+    node: &AceId,
+    attempt: u32,
+) {
     let now = sch.now();
     let mut services: Vec<(String, String, String)> = Vec::new();
     let mut app_label = String::new();
@@ -595,23 +933,31 @@ fn send_node_instruction(
             }
         }
     }
-    let doc = compose_instruction(&app_label, &services);
+    let seq = st.instr_seq.get() + 1;
+    st.instr_seq.set(seq);
+    let doc = compose_instruction_seq(&app_label, &services, seq);
     let Ok(site) = site_of_node(node) else {
         st.report
             .borrow_mut()
             .log(now, format!("ERROR instruction for malformed node id {node}"));
         return;
     };
+    st.pending
+        .borrow_mut()
+        .insert(node.clone(), PendingInstr { seq, attempt });
     let bytes = doc.len() as u64;
     // the WAN downlink is charged here; the Bridge delivery then pays
     // the TARGET NODE's access link in `Fabric::route` (bridge-arrival
-    // ingress), so instructions contend on the real node's NIC
-    let arrival = match site.cluster {
+    // ingress), so instructions contend on the real node's NIC. The
+    // fault plane rules on the downlink delivery the same way
+    // `Fabric::route` rules on bridged app traffic — the platform's
+    // own channel is NOT exempt from loss.
+    let (arrival, verdict) = match site.cluster {
         ClusterRef::Ec(k) if k < w.fabric.net.num_ecs() => {
             // CC backbone LAN out to the border router first, then the
             // downlink (mirrors `Fabric::route`'s CC→EC bridge arm)
             let at = w.fabric.net.gateway_hop(now, bytes);
-            w.fabric.net.wan_down(k, at, bytes)
+            (w.fabric.net.wan_down(k, at, bytes), w.fabric.net.down_verdict(k, at))
         }
         ClusterRef::Ec(_) => {
             st.report
@@ -619,16 +965,103 @@ fn send_node_instruction(
                 .log(now, format!("ERROR no downlink for {node}'s cluster"));
             return;
         }
-        ClusterRef::Cc => now,
+        // CC-local instructions never cross a fault-bearing link
+        ClusterRef::Cc => (now, Verdict::Deliver),
     };
-    let (topic, syms) = w.fabric.intern(&deploy_topic(node));
-    let body: Rc<dyn Any> = Rc::new(InstructionBody { doc });
-    let msg = GraphMsg { topic, syms, from: usize::MAX, wire_bytes: bytes, body };
-    sch.push_at(arrival, Event::Bridge { origin: ClusterRef::Cc, to: site.cluster, msg });
+    if verdict != Verdict::Drop {
+        let (topic, syms) = w.fabric.intern(&deploy_topic(node));
+        let body: Rc<dyn Any> = Rc::new(InstructionBody { doc });
+        let msg = GraphMsg { topic, syms, from: usize::MAX, wire_bytes: bytes, body };
+        if verdict == Verdict::Duplicate {
+            let dup = msg.clone();
+            sch.push_at(
+                arrival,
+                Event::Bridge { origin: ClusterRef::Cc, to: site.cluster, msg: dup },
+            );
+        }
+        sch.push_at(arrival, Event::Bridge { origin: ClusterRef::Cc, to: site.cluster, msg });
+    }
+    // the controller cannot see the verdict: it logs the send and
+    // relies on the ack/retry loop either way
     st.report.borrow_mut().log(
         now,
         format!("instruction → {node} ({} services, {bytes} B)", services.len()),
     );
+    arm_retry(st, sch, node.clone(), seq);
+}
+
+/// Exponential backoff for attempt `n` (0-based): `base * 2^n`, capped.
+fn backoff(base: SimTime, cap: SimTime, attempt: u32) -> SimTime {
+    base.saturating_mul(1u64 << attempt.min(30)).min(cap)
+}
+
+/// Arm the retry timer for the instruction just sent: if the node has
+/// not acked seq >= `seq` by then, re-send (with doubled backoff) up
+/// to [`MAX_SEND_ATTEMPTS`] total attempts.
+fn arm_retry(st: &Rc<PlaneState>, sch: &mut SvcScheduler, node: AceId, seq: u64) {
+    let attempt = match st.pending.borrow().get(&node) {
+        Some(p) if p.seq == seq => p.attempt,
+        _ => return,
+    };
+    let delay = backoff(st.retry_base, st.retry_cap, attempt);
+    let stc = st.clone();
+    sch.push_at(
+        sch.now() + delay,
+        Event::Call(Box::new(move |sch2: &mut SvcScheduler, w2: &mut SvcWorld| {
+            retry_instruction(&stc, sch2, w2, &node, seq);
+        })),
+    );
+}
+
+/// The retry timer body: abandoned when the instruction was acked,
+/// superseded by a newer send (which armed its own timer), or the
+/// node was failed/shielded in the meantime.
+fn retry_instruction(
+    st: &Rc<PlaneState>,
+    sch: &mut SvcScheduler,
+    w: &mut SvcWorld,
+    node: &AceId,
+    seq: u64,
+) {
+    let now = sch.now();
+    let current = match st.pending.borrow().get(node) {
+        Some(p) if p.seq == seq => *p,
+        _ => return, // acked, cancelled, or superseded
+    };
+    if current.attempt + 1 >= MAX_SEND_ATTEMPTS {
+        st.pending.borrow_mut().remove(node);
+        st.report.borrow_mut().log(
+            now,
+            format!(
+                "ERROR instruction to {node} undeliverable after {} attempts",
+                current.attempt + 1
+            ),
+        );
+        return;
+    }
+    {
+        let mut rep = st.report.borrow_mut();
+        rep.retries += 1;
+        rep.log(now, format!("retry #{}: instruction → {node}", current.attempt + 1));
+    }
+    dispatch_instruction(st, sch, w, node, current.attempt + 1);
+}
+
+/// Record a convergence sample when the LAST outstanding instruction
+/// of a fault episode is acked (or cancelled with the faulty node).
+fn note_converged(st: &Rc<PlaneState>, now: SimTime) {
+    if !st.pending.borrow().is_empty() {
+        return;
+    }
+    if let Some(t0) = st.fault_at.get() {
+        st.fault_at.set(None);
+        let mut rep = st.report.borrow_mut();
+        rep.convergence_us.push(now - t0);
+        rep.log(
+            now,
+            format!("converged: all instructions acked {:.1} ms after fault", to_millis(now - t0)),
+        );
+    }
 }
 
 /// Run one monitor sweep, then re-arm the next one until the horizon
@@ -689,10 +1122,18 @@ fn monitor_sweep(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld) 
     if shielded.is_empty() {
         return;
     }
+    if st.fault_at.get().is_none() {
+        st.fault_at.set(Some(now));
+    }
     for id in &shielded {
-        let mut rep = st.report.borrow_mut();
-        rep.shielded.push(id.to_string());
-        rep.log(now, format!("monitor: heartbeat lost, node {id} shielded"));
+        {
+            let mut rep = st.report.borrow_mut();
+            rep.shielded.push(id.to_string());
+            rep.log(now, format!("monitor: heartbeat lost, node {id} shielded"));
+        }
+        // an unacked instruction to a shielded node will never ack:
+        // cancel it so the episode can converge on the survivors
+        st.pending.borrow_mut().remove(id);
     }
     let apps: Vec<(String, Topology, DeploymentPlan)> = st
         .apps
@@ -757,10 +1198,41 @@ struct NodeAgent {
     site: Site,
     deploy_filter: String,
     status_wire_topic: String,
+    ack_wire_topic: String,
     running: BTreeMap<String, RunningInst>,
+    /// Highest instruction seq applied — the at-least-once dedupe
+    /// watermark. A fresh agent (registration or rejoin) starts at 0:
+    /// a rebooted node has no memory of earlier instructions.
+    last_applied: u64,
 }
 
 impl NodeAgent {
+    fn new(state: Rc<PlaneState>, node: AceId) -> Result<NodeAgent> {
+        let site = site_of_node(&node)?;
+        Ok(NodeAgent {
+            state,
+            deploy_filter: deploy_topic(&node),
+            status_wire_topic: format!("cloud/{}", status_topic(&node)),
+            ack_wire_topic: format!("cloud/{}", ack_topic(&node)),
+            node,
+            site,
+            running: BTreeMap::new(),
+            last_applied: 0,
+        })
+    }
+
+    /// Acknowledge instruction `seq` on the uplink — the controller
+    /// retries until this lands, so it rides the same lossy WAN.
+    fn send_ack(&self, ctx: &mut Ctx, seq: u64) {
+        // sized like the real wire format would be, carried typed
+        let bytes = format!("{{\"node\":\"{}\",\"seq\":{seq}}}", self.node).len() as u64;
+        ctx.publish(
+            &self.ack_wire_topic,
+            bytes,
+            Rc::new(AckBody { node: self.node.clone(), seq }),
+        );
+    }
+
     fn report_status(&self, ctx: &mut Ctx) {
         let instances: Vec<Value> = self
             .running
@@ -802,6 +1274,19 @@ impl Component for NodeAgent {
         let Ok(doc) = yamlite::parse(&ib.doc) else {
             return; // malformed instruction: ignored, status unchanged
         };
+        // at-least-once dedupe: a redelivered (or duplicated-in-flight)
+        // instruction whose seq is not newer than the watermark changes
+        // nothing — but is ALWAYS re-acked, because the controller may
+        // have retried precisely because the first ack was lost
+        let seq = doc.get("seq").as_f64().map(|s| s as u64);
+        if let Some(seq) = seq {
+            if seq <= self.last_applied {
+                self.state.report.borrow_mut().dup_suppressed += 1;
+                self.send_ack(ctx, seq);
+                return;
+            }
+            self.last_applied = seq;
+        }
         let mut target: BTreeMap<String, RunningInst> = BTreeMap::new();
         if let Some(obj) = doc.get("services").as_obj() {
             for (name, svc) in obj {
@@ -884,8 +1369,12 @@ impl Component for NodeAgent {
                 }
             });
         }
-        // immediate status report reflecting the convergence
+        // immediate status report reflecting the convergence, then the
+        // ack closing the at-least-once loop
         self.report_status(ctx);
+        if let Some(seq) = seq {
+            self.send_ack(ctx, seq);
+        }
     }
 
     fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
@@ -921,6 +1410,42 @@ impl Component for MonitorTap {
         obj.insert("last_seen_ms".to_string(), Value::num(to_millis(ctx.now())));
         self.state.api.put(kinds::NODE_STATUS, &key, Value::Obj(obj));
         self.state.report.borrow_mut().status_reports += 1;
+    }
+}
+
+/// The at-least-once channel's controller-side sink: clears a node's
+/// pending entry when its ack (for the CURRENT seq or newer) arrives,
+/// and closes the fault episode's convergence clock when the last
+/// pending entry drains.
+struct AckTap {
+    state: Rc<PlaneState>,
+}
+
+impl Component for AckTap {
+    fn subscriptions(&self) -> Vec<String> {
+        vec![ACK_FILTER.to_string()]
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
+        let Some(ack) = msg.body_as::<AckBody>() else {
+            return;
+        };
+        let cleared = {
+            let mut pending = self.state.pending.borrow_mut();
+            match pending.get(&ack.node) {
+                // acks are cumulative: seq >= the outstanding send
+                // confirms the node converged to at-least-current
+                // intent (stale acks for superseded sends are ignored)
+                Some(p) if ack.seq >= p.seq => {
+                    pending.remove(&ack.node);
+                    true
+                }
+                _ => false,
+            }
+        };
+        if cleared {
+            note_converged(&self.state, ctx.now());
+        }
     }
 }
 
@@ -1012,6 +1537,112 @@ ops:
 ";
         let err = LifecycleScenario::parse(bad).unwrap_err().to_string();
         assert!(err.contains("network"), "{err}");
+    }
+
+    #[test]
+    fn scenario_parses_chaos_ops_and_faults_block() {
+        let s = LifecycleScenario::parse(
+            "
+duration: 30
+faults:
+  seed: 7
+  loss: 0.1
+  dup: 0.02
+ops:
+  - at: 0
+    op: remove
+    app: x
+  - at: 5
+    op: fail-link
+    link: up-ec0
+    for: 3
+  - at: 8
+    op: degrade-nic
+    cluster: ec-1
+    node: rpi1
+    mbps: 2
+  - at: 10
+    op: fail-node
+    node: infra-u/ec-1/minipc
+  - at: 20
+    op: rejoin-node
+    node: infra-u/ec-1/minipc
+",
+        )
+        .unwrap();
+        let f = s.faults.expect("faults block parsed");
+        assert_eq!((f.seed, f.loss, f.dup), (7, 0.1, 0.02));
+        assert!(matches!(&s.steps[1].op,
+            LifecycleOp::FailLink { link, for_us } if link == "up-ec0" && *for_us == secs(3.0)));
+        assert!(matches!(&s.steps[2].op,
+            LifecycleOp::DegradeNic { cluster, node, mbps }
+                if cluster == "ec-1" && node == "rpi1" && *mbps == 2.0));
+        assert!(matches!(&s.steps[4].op, LifecycleOp::RejoinNode(n)
+            if n.to_string() == "infra-u/ec-1/minipc"));
+    }
+
+    #[test]
+    fn scenario_rejects_non_monotonic_times_naming_the_op() {
+        let err = LifecycleScenario::parse(
+            "
+duration: 30
+ops:
+  - at: 10
+    op: remove
+    app: x
+  - at: 5
+    op: remove
+    app: y
+",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("op #1"), "{err}");
+        assert!(err.contains("t=5"), "{err}");
+        assert!(err.contains("non-decreasing"), "{err}");
+        // equal times are allowed (the DES breaks ties by op order)
+        let same_tick = "
+duration: 9
+ops:
+  - at: 3
+    op: remove
+    app: x
+  - at: 3
+    op: remove
+    app: y
+";
+        assert!(LifecycleScenario::parse(same_tick).is_ok());
+    }
+
+    #[test]
+    fn scenario_rejects_unknown_fields_naming_the_op() {
+        let err = LifecycleScenario::parse(
+            "
+duration: 30
+ops:
+  - at: 2
+    op: fail-node
+    node: infra-u/ec-1/rpi1
+    topology: x
+",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("op #0"), "{err}");
+        assert!(err.contains("t=2"), "{err}");
+        assert!(err.contains("'topology'"), "{err}");
+        let err = LifecycleScenario::parse(
+            "duration: 9\nopps: []\nops:\n  - at: 0\n    op: remove\n    app: x\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("unknown field 'opps'"), "{err}");
+        let err = LifecycleScenario::parse(
+            "duration: 9\nfaults:\n  loss: 2\nops:\n  - at: 0\n    op: remove\n    app: x\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("faults"), "{err}");
     }
 
     #[test]

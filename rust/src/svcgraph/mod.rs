@@ -71,6 +71,7 @@ pub mod lifecycle;
 use crate::deploy::{DeploymentPlan, Instance};
 use crate::des::{Scheduler, SimEvent};
 use crate::pubsub::topic::{Sym, SymbolTable, TopicTrie};
+use crate::simnet::faults::Verdict;
 use crate::simnet::NetFabric;
 use crate::util::SimTime;
 use anyhow::{anyhow, bail, Result};
@@ -269,11 +270,13 @@ impl Fabric {
         for &(_, target) in &targets {
             let arrival = match from_site {
                 // bridge arrivals fan out from the cluster message
-                // service: only the receiver's access link is charged
+                // service: only the receiver's access link is charged,
+                // and no fault verdict is consulted — the bridged copy
+                // already survived (or didn't) its WAN link's process
                 None => self.net.ingress(ci, &self.sites[target].node, now, msg.wire_bytes),
                 Some(f) => {
                     if self.sites[target].node == f.node {
-                        now // node-internal hand-off
+                        now // node-internal hand-off: never faulted
                     } else {
                         // hop-by-hop: src NIC (once) → LAN → dst NIC
                         // (free legs are exactly the flat model)
@@ -285,7 +288,19 @@ impl Fabric {
                                 t
                             }
                         };
-                        self.net.lan_hop(ci, &self.sites[target].node, at, msg.wire_bytes)
+                        let d =
+                            self.net.lan_hop(ci, &self.sites[target].node, at, msg.wire_bytes);
+                        // per-delivery fault verdict on the cluster
+                        // segment (the link charged either way: a lost
+                        // frame still occupied the medium)
+                        match self.net.lan_verdict(ci, at) {
+                            Verdict::Drop => continue,
+                            Verdict::Duplicate => {
+                                sch.push_at(d, Event::Msg { target, msg: msg.clone() });
+                            }
+                            Verdict::Deliver => {}
+                        }
+                        d
                     }
                 }
             };
@@ -310,7 +325,7 @@ impl Fabric {
                 }
                 (None, None) => now,
             };
-            let arrival = match (cluster, to) {
+            let (arrival, verdict) = match (cluster, to) {
                 (ClusterRef::Ec(k), ClusterRef::Cc) => {
                     self.bridged_up += 1;
                     // WAN, then the CC backbone LAN: the border router
@@ -319,19 +334,27 @@ impl Fabric {
                     // when the CC LAN is unmodelled — the degenerate
                     // config is unchanged)
                     let t = self.net.wan_up(k, at, msg.wire_bytes);
-                    self.net.gateway_hop(t, msg.wire_bytes)
+                    (self.net.gateway_hop(t, msg.wire_bytes), self.net.up_verdict(k, at))
                 }
                 (ClusterRef::Cc, ClusterRef::Ec(k)) => {
                     self.bridged_down += 1;
                     // CC backbone LAN out to the border router first,
                     // then the downlink
                     let t = self.net.gateway_hop(at, msg.wire_bytes);
-                    self.net.wan_down(k, t, msg.wire_bytes)
+                    (self.net.wan_down(k, t, msg.wire_bytes), self.net.down_verdict(k, at))
                 }
                 // EC↔EC bridges have no modelled WAN link: the egress
-                // leg (already paid) is the whole cost
-                _ => at,
+                // leg (already paid) is the whole cost, and there is no
+                // named link to carry a fault process
+                _ => (at, Verdict::Deliver),
             };
+            match verdict {
+                Verdict::Drop => continue,
+                Verdict::Duplicate => {
+                    sch.push_at(arrival, Event::Bridge { origin, to, msg: msg.clone() });
+                }
+                Verdict::Deliver => {}
+            }
             sch.push_at(arrival, Event::Bridge { origin, to, msg: msg.clone() });
         }
         self.bridge_scratch = rules;

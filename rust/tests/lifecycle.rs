@@ -10,6 +10,7 @@
 use ace::app::fedtrain::{run_fedtrain_scenario, FedConfig};
 use ace::app::videoquery::{run_scenario, CellConfig, Compute, Paradigm, ServiceTimes};
 use ace::metrics::CellMetrics;
+use ace::simnet::faults::FaultSpec;
 use ace::svcgraph::lifecycle::{LifecycleReport, LifecycleScenario};
 use ace::topology::Topology;
 
@@ -17,6 +18,10 @@ use ace::topology::Topology;
 /// (`ace svcrun --scenario scenarios/videoquery_lifecycle.yaml`):
 /// parsing it here keeps the example honest.
 const VIDEOQUERY_SCENARIO: &str = include_str!("../scenarios/videoquery_lifecycle.yaml");
+
+/// The chaos script: fail → rejoin → rebalance under 10% seeded loss
+/// (`ace svcrun --scenario scenarios/videoquery_churn.yaml`).
+const VIDEOQUERY_CHURN: &str = include_str!("../scenarios/videoquery_churn.yaml");
 
 fn fnv(h: &mut u64, bytes: &[u8]) {
     for &b in bytes {
@@ -125,6 +130,102 @@ fn videoquery_lifecycle_golden_is_deterministic_and_complete() {
     assert_eq!(r1.events, r2.events);
 }
 
+/// Acceptance: with every fault knob at ZERO the fault plane draws
+/// nothing and allocates nothing, so an armed-but-inert spec replays
+/// the existing lifecycle golden byte for byte.
+#[test]
+fn zero_fault_knobs_replay_the_lifecycle_golden_byte_for_byte() {
+    let (m1, r1) = run_vq();
+    let mut scenario = LifecycleScenario::parse(VIDEOQUERY_SCENARIO).unwrap();
+    scenario.faults = Some(FaultSpec { seed: 99, loss: 0.0, dup: 0.0 });
+    let out = run_scenario(
+        vq_cfg(),
+        ServiceTimes::synthetic(),
+        Compute::Synthetic { target_bias: 0.05 },
+        &scenario,
+    )
+    .unwrap();
+    assert_eq!(out.report.msgs_lost, 0);
+    assert_eq!(out.report.retries, 0);
+    assert_eq!(out.report.dup_suppressed, 0);
+    assert_eq!(
+        outcome_hash(&m1, &r1),
+        outcome_hash(&out.metrics, &out.report),
+        "a zero-rate fault spec must be invisible"
+    );
+    assert_eq!(r1.events, out.report.events);
+}
+
+fn run_vq_churn() -> (CellMetrics, LifecycleReport) {
+    let scenario = LifecycleScenario::parse(VIDEOQUERY_CHURN).unwrap();
+    let out = run_scenario(
+        vq_cfg(),
+        ServiceTimes::synthetic(),
+        Compute::Synthetic { target_bias: 0.05 },
+        &scenario,
+    )
+    .unwrap();
+    (out.metrics, out.report)
+}
+
+#[test]
+fn videoquery_survives_fail_rejoin_rebalance_under_loss() {
+    let (m1, r1) = run_vq_churn();
+
+    // chaos actually bit: the fault plane dropped messages, and the
+    // at-least-once channel had to work for its convergence
+    assert!(r1.msgs_lost > 0, "10% loss dropped nothing");
+    assert!(r1.retries > 0, "loss never forced an instruction retry");
+    assert!(
+        r1.events.iter().any(|(_, e)| e.contains("link up-ec0 down")),
+        "fail-link op missing from the audit trail"
+    );
+
+    // fail → shield → re-place on a survivor
+    assert!(
+        r1.shielded.iter().any(|n| n.ends_with("ec-1/minipc")),
+        "minipc not shielded: {:?}",
+        r1.shielded
+    );
+    assert!(r1.redeploys >= 1, "shield must trigger a redeploy");
+
+    // rejoin: agent restarted, apps re-placed around the capacity
+    assert!(
+        r1.events
+            .iter()
+            .any(|(_, e)| e.contains("rejoin: node") && e.contains("ec-1/minipc")),
+        "rejoin missing from the audit trail"
+    );
+    assert!(
+        r1.events
+            .iter()
+            .any(|(_, e)| e.contains("rejoin/rebalance 'videoquery'")),
+        "rejoin must re-place the app"
+    );
+
+    // every fault episode converged: all outstanding instructions were
+    // acked, and the convergence-time metric recorded it
+    assert!(
+        !r1.convergence_us.is_empty(),
+        "no fault episode ever converged"
+    );
+    assert!(r1.max_convergence_ms().unwrap() > 0.0);
+
+    // the app survived the whole cycle and remove wound everything down
+    assert!(m1.crops > 50, "only {} crops", m1.crops);
+    assert_eq!(r1.spawned, r1.retired, "leaked instances after remove");
+
+    // the golden: the chaos trajectory replays bit-identically
+    let (m2, r2) = run_vq_churn();
+    assert_eq!(
+        outcome_hash(&m1, &r1),
+        outcome_hash(&m2, &r2),
+        "chaos scenario must replay bit-identically"
+    );
+    assert_eq!(r1.events, r2.events);
+    assert_eq!(r1.convergence_us, r2.convergence_us);
+}
+
 fn fed_topo(replicas: usize, version: u64) -> Topology {
     Topology::parse(&format!(
         "
@@ -162,6 +263,7 @@ fn fed_scenario() -> LifecycleScenario {
         ],
         duration: secs(14.0),
         network: None,
+        faults: None,
     }
 }
 
@@ -204,4 +306,74 @@ fn fedtrain_scales_trainers_up_and_down_mid_run() {
     assert_eq!(report.hash(), report2.hash());
     assert_eq!(m.final_accuracy.to_bits(), m2.final_accuracy.to_bits());
     assert_eq!(m.rounds.len(), m2.rounds.len());
+}
+
+/// Chaos cycle for the SECOND workload: EC-1's trainer node crashes
+/// mid-training (twice — the second fail-node must be a no-op), the
+/// monitor shields it, training continues on the survivors, the node
+/// rejoins and the trainer set rebalances — all under 5% seeded loss
+/// and 2% duplication on every message.
+fn fed_chaos_scenario() -> LifecycleScenario {
+    use ace::svcgraph::lifecycle::{LifecycleOp, ScenarioStep};
+    use ace::util::{secs, AceId};
+    let node = AceId::parse("infra-fed/ec-1/minipc");
+    LifecycleScenario {
+        steps: vec![
+            ScenarioStep { at: secs(0.0), op: LifecycleOp::Deploy(fed_topo(3, 1)) },
+            ScenarioStep { at: secs(5.0), op: LifecycleOp::FailNode(node.clone()) },
+            // by now the sweep has shielded it: this must be a no-op
+            ScenarioStep { at: secs(12.0), op: LifecycleOp::FailNode(node.clone()) },
+            ScenarioStep { at: secs(16.0), op: LifecycleOp::RejoinNode(node) },
+        ],
+        duration: secs(26.0),
+        network: None,
+        faults: Some(FaultSpec { seed: 11, loss: 0.05, dup: 0.02 }),
+    }
+}
+
+#[test]
+fn fedtrain_survives_fail_rejoin_rebalance_under_loss() {
+    let (m, r) = run_fedtrain_scenario(fed_cfg(), &fed_chaos_scenario()).unwrap();
+
+    // chaos bit, and training still made progress across it
+    assert!(r.msgs_lost > 0, "5% loss dropped nothing");
+    assert!(m.rounds.len() >= 5, "only {} rounds completed", m.rounds.len());
+    assert!(m.final_accuracy > 0.5, "final acc {:.3}", m.final_accuracy);
+
+    // fail → shield → rejoin → rebalance, in the audit trail
+    assert!(
+        r.shielded.iter().any(|n| n.ends_with("ec-1/minipc")),
+        "trainer node not shielded: {:?}",
+        r.shielded
+    );
+    assert!(
+        r.events
+            .iter()
+            .any(|(_, e)| e.contains("already shielded, no-op")),
+        "second fail-node on a shielded node must be an audited no-op"
+    );
+    assert_eq!(
+        r.shielded.iter().filter(|n| n.ends_with("ec-1/minipc")).count(),
+        1,
+        "the idempotent fail-node must not shield twice"
+    );
+    assert!(
+        r.events
+            .iter()
+            .any(|(_, e)| e.contains("rejoin: node") && e.contains("ec-1/minipc")),
+        "rejoin missing from the audit trail"
+    );
+    assert!(
+        r.events
+            .iter()
+            .any(|(_, e)| e.contains("rejoin/rebalance 'fedtrain'")),
+        "rejoin must re-place the trainers"
+    );
+    assert!(!r.convergence_us.is_empty(), "no fault episode converged");
+
+    // determinism golden: the whole chaos run replays bit-identically
+    let (m2, r2) = run_fedtrain_scenario(fed_cfg(), &fed_chaos_scenario()).unwrap();
+    assert_eq!(r.hash(), r2.hash());
+    assert_eq!(m.final_accuracy.to_bits(), m2.final_accuracy.to_bits());
+    assert_eq!(r.events, r2.events);
 }

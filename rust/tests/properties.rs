@@ -638,6 +638,191 @@ fn prop_yamlite_roundtrip_on_mappings() {
 }
 
 // ---------------------------------------------------------------------------
+// fault injection: seeded processes are pure, zero knobs draw nothing
+// ---------------------------------------------------------------------------
+
+use ace::simnet::faults::{link_fault_seed, FaultProcess, FaultSpec, Verdict};
+
+/// The same fault seed must produce the IDENTICAL drop/duplicate
+/// decision stream — the determinism bedrock under every chaos golden.
+#[test]
+fn prop_fault_decisions_are_a_pure_function_of_the_seed() {
+    for case in 0..CASES {
+        let mut s = Stream::new(71_000 + case);
+        let seed = s.next_range(0, i64::MAX) as u64;
+        let loss = s.next_f32() as f64 * 0.5;
+        let dup = s.next_f32() as f64 * 0.3;
+        let n = s.next_range(1, 200) as usize;
+        let times: Vec<u64> = (0..n).map(|_| s.next_range(0, 1_000_000) as u64).collect();
+        let mut a = FaultProcess::new(seed, loss, dup);
+        let mut b = FaultProcess::new(seed, loss, dup);
+        let va: Vec<Verdict> = times.iter().map(|&t| a.verdict(t)).collect();
+        let vb: Vec<Verdict> = times.iter().map(|&t| b.verdict(t)).collect();
+        assert_eq!(va, vb, "case {case}: same seed, different decisions");
+        assert_eq!((a.lost, a.duplicated), (b.lost, b.duplicated), "case {case}");
+        // verdicts depend only on the decision INDEX, not on the
+        // times they were drawn at (outage windows aside): replaying
+        // the stream at shifted times decides identically
+        let mut c = FaultProcess::new(seed, loss, dup);
+        let vc: Vec<Verdict> = times.iter().map(|&t| c.verdict(t + 1)).collect();
+        assert_eq!(va, vc, "case {case}: decisions leaked wall-clock time");
+        // per-link seeds keep sibling links on INDEPENDENT streams
+        assert_ne!(
+            link_fault_seed(seed, "up-ec0"),
+            link_fault_seed(seed, "down-ec0"),
+            "case {case}"
+        );
+    }
+}
+
+/// Zero-rate knobs must consume NO prng draws and install NO per-link
+/// state — the invariant that keeps every fault-free golden
+/// byte-for-byte identical to a build without the fault plane.
+#[test]
+fn prop_zero_rate_fault_specs_are_inert() {
+    for case in 0..CASES {
+        let mut s = Stream::new(73_000 + case);
+        let seed = s.next_range(0, i64::MAX) as u64;
+        let mut p = FaultProcess::new(seed, 0.0, 0.0);
+        for _ in 0..s.next_range(1, 300) {
+            let t = s.next_range(0, 1_000_000) as u64;
+            assert_eq!(p.verdict(t), Verdict::Deliver, "case {case}");
+        }
+        assert_eq!((p.lost, p.duplicated), (0, 0));
+        let spec = FaultSpec { seed, loss: 0.0, dup: 0.0 };
+        assert!(!spec.is_active(), "case {case}: zero rates must be inactive");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// at-least-once control channel: loss cannot change the converged plan
+// ---------------------------------------------------------------------------
+
+use ace::infra::{InfraBuilder, Infrastructure, NodeKind};
+use ace::platform::orchestrator::NetHints;
+use ace::simnet::{NetConfig, NetFabric};
+use ace::svcgraph::lifecycle::{
+    ControlPlane, ControlPlaneConfig, InstanceFactory, LifecycleOp, LifecycleReport,
+    LifecycleScenario, ScenarioStep,
+};
+use ace::svcgraph::GraphRuntime;
+use ace::topology::Topology;
+use ace::util::secs;
+use std::rc::Rc;
+
+fn mini_infra() -> Infrastructure {
+    let mut b = InfraBuilder::register("mini");
+    for _ in 0..2 {
+        let ec = b.claim_ec();
+        b.add_edge_node(&ec, "n1", NodeKind::MiniPc, Default::default());
+        b.add_edge_node(&ec, "n2", NodeKind::MiniPc, Default::default());
+    }
+    b.add_cloud_node("gpu-ws", NodeKind::GpuWorkstation, Default::default());
+    b.build()
+}
+
+fn mini_topo() -> Topology {
+    Topology::parse(
+        "
+app: mini
+version: 1
+components:
+  - name: w
+    image: img:1
+    location: edge
+    replicas: 4
+    resources:
+      cpu: 500
+      mem: 128
+    connections: []
+",
+    )
+    .unwrap()
+}
+
+/// Deploy → fail-node → rejoin on a tiny platform-only world (no app
+/// traffic: every message on the wire is an instruction, heartbeat, or
+/// ack). Returns the controller's final plan plus the audit trail.
+fn run_mini_plane(loss: f64, seed: u64) -> (ace::deploy::DeploymentPlan, LifecycleReport) {
+    use ace::util::AceId;
+    let mut net = NetFabric::new(&NetConfig { num_ecs: 2, ..Default::default() });
+    if loss > 0.0 {
+        net.arm_faults(FaultSpec { seed, loss, dup: 0.0 });
+    }
+    let hints = NetHints::from_net(&net);
+    let mut rt = GraphRuntime::new(net);
+    let factory: InstanceFactory = Rc::new(|_inst, _site| Ok(None));
+    let node = AceId::parse("infra-mini/ec-1/n1");
+    let scenario = LifecycleScenario {
+        steps: vec![
+            ScenarioStep { at: secs(0.0), op: LifecycleOp::Deploy(mini_topo()) },
+            ScenarioStep { at: secs(10.0), op: LifecycleOp::FailNode(node.clone()) },
+            ScenarioStep { at: secs(30.0), op: LifecycleOp::RejoinNode(node) },
+        ],
+        duration: secs(60.0),
+        network: None,
+        faults: None, // armed directly on the fabric above
+    };
+    // a LONG failure timeout (vs the 1 s heartbeat) makes a false
+    // shield of a healthy node need 12+ consecutive heartbeat losses
+    // (p ~ 0.2^12): the only shielded node is the scripted one, so the
+    // loss run and the no-loss run see the same infrastructure history
+    let cfg = ControlPlaneConfig {
+        heartbeat_period_s: 1.0,
+        failure_timeout_s: 12.0,
+        sweep_period_s: 4.0,
+        ..Default::default()
+    };
+    let plane =
+        ControlPlane::install(&mut rt, mini_infra(), factory, None, &scenario, cfg, hints)
+            .unwrap();
+    rt.run_until(scenario.duration);
+    (plane.plan("mini").expect("plan survives the run"), plane.report())
+}
+
+/// Under 20% instruction loss the ack/retry channel must converge
+/// every node to EXACTLY the plan a lossless run converges to — loss
+/// changes timing and retry counts, never placement intent.
+#[test]
+fn prop_ack_retry_converges_to_the_no_loss_plan_under_20pct_loss() {
+    let (baseline_plan, baseline_report) = run_mini_plane(0.0, 0);
+    assert_eq!(baseline_report.retries, 0, "no loss, no retries");
+    assert_eq!(baseline_report.dup_suppressed, 0);
+    let mut total_retries = 0;
+    let mut total_convergences = 0;
+    for case in 0..20 {
+        let (plan, report) = run_mini_plane(0.2, 1000 + case);
+        assert_eq!(
+            plan, baseline_plan,
+            "case {case}: loss changed the converged plan"
+        );
+        // the scripted fail/rejoin episodes were noticed and survived
+        assert!(
+            report.shielded.iter().any(|n| n.ends_with("ec-1/n1")),
+            "case {case}: failed node never shielded"
+        );
+        assert!(
+            report.events.iter().any(|(_, e)| e.contains("rejoin: node")),
+            "case {case}: rejoin missing"
+        );
+        total_retries += report.retries;
+        total_convergences += report.convergence_us.len();
+        // and the run is replay-identical under the same fault seed
+        let (plan2, report2) = run_mini_plane(0.2, 1000 + case);
+        assert_eq!(plan, plan2, "case {case}: fault seed not deterministic");
+        assert_eq!(report.hash(), report2.hash(), "case {case}");
+    }
+    assert!(
+        total_retries > 0,
+        "20% loss over 20 seeded runs never forced a retry"
+    );
+    assert!(
+        total_convergences > 0,
+        "no fault episode ever converged across the sweep"
+    );
+}
+
+// ---------------------------------------------------------------------------
 // classifier batching: the splitting loop always covers all crops
 // ---------------------------------------------------------------------------
 
