@@ -74,6 +74,9 @@ pub struct FedConfig {
     /// restarts mid-round never wedge the coordinator. Unused in plain
     /// runs (no deadline is armed).
     pub round_deadline_ms: f64,
+    /// Scheduler event lanes (`--partitions`); the k-way merge keeps
+    /// every trajectory byte-identical to `partitions = 1`.
+    pub partitions: usize,
 }
 
 impl Default for FedConfig {
@@ -89,6 +92,7 @@ impl Default for FedConfig {
             seed: 42,
             step_ms: 2.0,
             round_deadline_ms: 2000.0,
+            partitions: 1,
         }
     }
 }
@@ -572,7 +576,7 @@ pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
         wan_delay: millis(cfg.wan_delay_ms),
         ..Default::default()
     });
-    let mut rt = GraphRuntime::new(net);
+    let mut rt = GraphRuntime::with_lanes(net, cfg.partitions.max(1));
 
     let (test_x, test_y) = make_test_set(&cfg);
     let shared: Shared = Rc::new(FedState {
@@ -623,7 +627,7 @@ pub fn run_fedtrain_scenario(
         net.arm_faults(*spec);
     }
     let hints = NetHints::from_net(&net);
-    let mut rt = GraphRuntime::new(net);
+    let mut rt = GraphRuntime::with_lanes(net, cfg.partitions.max(1));
     let (test_x, test_y) = make_test_set(&cfg);
     let shared: Shared = Rc::new(FedState {
         test_x,

@@ -1,0 +1,763 @@
+//! Metro-scale synthetic workload: N edge clusters of diurnal camera
+//! load, escalating a fraction of frames to the cloud — the system
+//! that exercises the conservative parallel DES end to end
+//! (DESIGN.md §Parallel-DES).
+//!
+//! Each EC runs cameras (timer-driven, diurnal pacing), one
+//! aggregator that escalates every k-th frame over the `cloud/#`
+//! bridge, and one sink for the cloud's replies on `edge/ec<k>/#`.
+//! The CC runs a stateless responder. Cross-cluster traffic rides the
+//! WAN bridges ONLY, so a cluster-partitioned run has the WAN delay as
+//! its lookahead and [`crate::des::par::run_partitioned`] can execute
+//! the clusters on a worker pool without ever reordering an arrival.
+//!
+//! Partition mapping: the CC lands on partition 0 and EC `k` on
+//! `k % partitions`; every shard builds the FULL `NetFabric` (unowned
+//! links idle — each link is charged by exactly one shard, see
+//! `svcgraph::ShardView`) and only its own clusters' components. The
+//! metro network keeps the CC backplane free (`cc_lan_mbps: None`), so
+//! a bridge absorbed on the CC shard reproduces the serial arrival
+//! time exactly: application metrics are IDENTICAL for every partition
+//! count, and window digests are identical for every thread count —
+//! both pinned by `tests/par_des.rs`.
+
+use crate::des::par::{self, Envelope, Partition, FNV_OFFSET};
+use crate::json::Value;
+use crate::simnet::{NetConfig, NetFabric, NicSpec};
+use crate::svcgraph::{
+    cidx, BridgeMsg, ClusterRef, Component, Ctx, GraphMsg, GraphRuntime, ShardCodec, Site,
+};
+use crate::util::prng;
+use crate::util::{millis, secs, SimTime};
+use crate::yamlite;
+use anyhow::{anyhow, bail, Context, Result};
+use std::any::Any;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Relative frame periods over one diurnal cycle: the multiplier slots
+/// a camera walks through (1 = rush hour, 4 = dead of night). Integer
+/// pacing keeps every trajectory exact across partition/thread counts.
+const DIURNAL: [u64; 8] = [1, 1, 2, 3, 4, 3, 2, 1];
+
+/// The metro workload's knobs — plain `Clone + Send` data, so a config
+/// can cross into the worker threads that build each shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetroConfig {
+    /// Seeds camera base periods and phases.
+    pub seed: u64,
+    /// Edge clusters.
+    pub ecs: usize,
+    /// Camera nodes per EC.
+    pub nodes_per_ec: usize,
+    /// Cameras per node.
+    pub cams_per_node: usize,
+    /// Virtual runtime (seconds).
+    pub duration_s: f64,
+    /// Every k-th aggregated frame escalates to the cloud.
+    pub escalate_every: u64,
+    /// Rush-hour camera period floor (ms): each camera draws its base
+    /// period uniformly from `[cam_period_ms, 2.5 * cam_period_ms)`,
+    /// then the diurnal table stretches it. Lower = denser load (the
+    /// bench row uses this to give each safe window real work).
+    pub cam_period_ms: f64,
+    /// Frame size on the wire (camera → aggregator, and the escalated
+    /// crop on the uplink).
+    pub frame_bytes: u64,
+    /// One-way WAN delay (ms) — the partition lookahead.
+    pub wan_delay_ms: f64,
+    /// EC LAN segment bandwidth (Mbps).
+    pub lan_mbps: f64,
+    /// Per camera-node access link (Mbps); `<= 0` = unshaped.
+    pub nic_mbps: f64,
+    /// Length of one diurnal cycle (virtual seconds).
+    pub diurnal_period_s: f64,
+    /// Cluster partitions (clamped to `1..=ecs`); `ace` maps
+    /// `--partitions 0` to the worker-pool default before calling in.
+    pub partitions: usize,
+    /// Worker threads driving the partitions (`<= 1` = the serial
+    /// reference driver — same windows, same digests).
+    pub threads: usize,
+}
+
+impl Default for MetroConfig {
+    fn default() -> Self {
+        MetroConfig {
+            seed: 42,
+            ecs: 4,
+            nodes_per_ec: 4,
+            cams_per_node: 2,
+            duration_s: 30.0,
+            escalate_every: 4,
+            cam_period_ms: 40.0,
+            frame_bytes: 20_000,
+            wan_delay_ms: 20.0,
+            lan_mbps: 1_000.0,
+            nic_mbps: 100.0,
+            diurnal_period_s: 10.0,
+            partitions: 1,
+            threads: 1,
+        }
+    }
+}
+
+impl MetroConfig {
+    /// Named presets backing the generated `scenarios/metro_*.yaml`
+    /// family (small = CI smoke, mid = bench row, large = headroom).
+    pub fn preset(name: &str) -> Result<MetroConfig> {
+        let base = MetroConfig::default();
+        Ok(match name {
+            "small" => MetroConfig { ecs: 4, nodes_per_ec: 2, duration_s: 10.0, ..base },
+            "mid" => MetroConfig { ecs: 8, nodes_per_ec: 4, duration_s: 30.0, ..base },
+            "large" => MetroConfig { ecs: 16, nodes_per_ec: 8, duration_s: 60.0, ..base },
+            other => bail!("unknown metro preset '{other}' (small|mid|large)"),
+        })
+    }
+
+    /// Parse an `app: metro` yamlite scenario. Absent keys fall back
+    /// to the defaults; present keys must be numbers.
+    pub fn from_yaml(src: &str) -> Result<MetroConfig> {
+        let doc = yamlite::parse(src).map_err(|e| anyhow!("{e}"))?;
+        Self::from_value(&doc)
+    }
+
+    /// Build a config from an already-parsed yamlite/JSON value.
+    pub fn from_value(doc: &Value) -> Result<MetroConfig> {
+        match doc.get("app").as_str() {
+            Some("metro") => {}
+            Some(other) => bail!("metro scenario: app is '{other}', expected 'metro'"),
+            None => bail!("metro scenario: missing 'app: metro'"),
+        }
+        let mut cfg = MetroConfig::default();
+        let num = |key: &str, into: &mut f64| -> Result<()> {
+            match doc.get(key) {
+                Value::Null => Ok(()),
+                v => {
+                    *into = v
+                        .as_f64()
+                        .with_context(|| format!("metro scenario: {key} must be a number"))?;
+                    Ok(())
+                }
+            }
+        };
+        let uint = |key: &str, into: &mut u64| -> Result<()> {
+            let mut f = *into as f64;
+            num(key, &mut f)?;
+            if f < 0.0 || f.fract() != 0.0 {
+                bail!("metro scenario: {key} must be a non-negative integer, got {f}");
+            }
+            *into = f as u64;
+            Ok(())
+        };
+        let mut v;
+        uint("seed", &mut cfg.seed)?;
+        v = cfg.ecs as u64;
+        uint("ecs", &mut v)?;
+        cfg.ecs = v as usize;
+        v = cfg.nodes_per_ec as u64;
+        uint("nodes_per_ec", &mut v)?;
+        cfg.nodes_per_ec = v as usize;
+        v = cfg.cams_per_node as u64;
+        uint("cams_per_node", &mut v)?;
+        cfg.cams_per_node = v as usize;
+        num("duration_s", &mut cfg.duration_s)?;
+        uint("escalate_every", &mut cfg.escalate_every)?;
+        num("cam_period_ms", &mut cfg.cam_period_ms)?;
+        uint("frame_bytes", &mut cfg.frame_bytes)?;
+        num("wan_delay_ms", &mut cfg.wan_delay_ms)?;
+        num("lan_mbps", &mut cfg.lan_mbps)?;
+        num("nic_mbps", &mut cfg.nic_mbps)?;
+        num("diurnal_period_s", &mut cfg.diurnal_period_s)?;
+        v = cfg.partitions as u64;
+        uint("partitions", &mut v)?;
+        cfg.partitions = v as usize;
+        v = cfg.threads as u64;
+        uint("threads", &mut v)?;
+        cfg.threads = v as usize;
+        if cfg.ecs == 0 || cfg.nodes_per_ec == 0 || cfg.cams_per_node == 0 {
+            bail!("metro scenario: ecs/nodes_per_ec/cams_per_node must be >= 1");
+        }
+        if cfg.escalate_every == 0 {
+            bail!("metro scenario: escalate_every must be >= 1");
+        }
+        Ok(cfg)
+    }
+
+    /// Emit the scenario back as yamlite — `from_yaml(to_yaml(c)) == c`
+    /// modulo the run-shape knobs (partitions/threads stay CLI-side).
+    pub fn to_yaml(&self) -> String {
+        let v = Value::obj(vec![
+            ("app", Value::str("metro")),
+            ("seed", Value::num(self.seed as f64)),
+            ("ecs", Value::num(self.ecs as f64)),
+            ("nodes_per_ec", Value::num(self.nodes_per_ec as f64)),
+            ("cams_per_node", Value::num(self.cams_per_node as f64)),
+            ("duration_s", Value::num(self.duration_s)),
+            ("escalate_every", Value::num(self.escalate_every as f64)),
+            ("cam_period_ms", Value::num(self.cam_period_ms)),
+            ("frame_bytes", Value::num(self.frame_bytes as f64)),
+            ("wan_delay_ms", Value::num(self.wan_delay_ms)),
+            ("lan_mbps", Value::num(self.lan_mbps)),
+            ("nic_mbps", Value::num(self.nic_mbps)),
+            ("diurnal_period_s", Value::num(self.diurnal_period_s)),
+        ]);
+        format!(
+            "# metro-scale workload (seeded topology: {} ECs x {} nodes x {} cams)\n\
+             # generated by `ace metro-gen` — see app/metro.rs\n{}",
+            self.ecs,
+            self.nodes_per_ec,
+            self.cams_per_node,
+            yamlite::to_string(&v)
+        )
+    }
+
+    /// Total camera count (generator shape).
+    pub fn cams(&self) -> usize {
+        self.ecs * self.nodes_per_ec * self.cams_per_node
+    }
+}
+
+/// The simnet shape for a metro run. The CC backplane stays FREE
+/// (`cc_lan_mbps: None`): the gateway hop is then the identity, so an
+/// EC shard exporting a bridge copy (which defers the CC-side gateway
+/// charge to absorb) lands at the exact serial arrival time — the
+/// cross-partition-count exactness `tests/par_des.rs` pins.
+fn netcfg(cfg: &MetroConfig) -> NetConfig {
+    let mut nics = Vec::new();
+    if cfg.nic_mbps > 0.0 && cfg.nic_mbps.is_finite() {
+        for k in 0..cfg.ecs {
+            for j in 0..cfg.nodes_per_ec {
+                nics.push(NicSpec {
+                    cluster: format!("ec-{}", k + 1),
+                    node: format!("n{j}"),
+                    mbps: cfg.nic_mbps,
+                    delay_us: 200.0,
+                });
+            }
+        }
+    }
+    NetConfig {
+        num_ecs: cfg.ecs,
+        lan_mbps: cfg.lan_mbps,
+        uplink_mbps: 50.0,
+        downlink_mbps: 100.0,
+        wan_delay: millis(cfg.wan_delay_ms),
+        lan_delay: 300,
+        cc_lan_mbps: None,
+        cc_lan_delay: 100,
+        nics,
+    }
+}
+
+/// Which partition owns cluster index `ci` (`cidx` convention: ECs
+/// 0..ecs-1, CC at `ecs`): the CC pins to partition 0, ECs round-robin.
+fn part_of(ci: usize, ecs: usize, parts: usize) -> usize {
+    if ci == ecs {
+        0
+    } else {
+        ci % parts
+    }
+}
+
+/// Escalation request (EC → CC over `cloud/#`). Plain `Clone + Send`
+/// data — the shard codec re-encodes it across thread boundaries.
+#[derive(Clone)]
+struct MetroReq {
+    ec: usize,
+    id: u64,
+    t0: SimTime,
+}
+
+/// Cloud reply (CC → EC over `edge/ec<k>/#`).
+#[derive(Clone)]
+struct MetroRsp {
+    ec: usize,
+    id: u64,
+    t0: SimTime,
+}
+
+/// Re-encode bridge payloads for a thread boundary. Frames (unit
+/// bodies) never match a bridge rule, so only requests and replies
+/// need to cross.
+fn metro_codec() -> ShardCodec {
+    Box::new(|body| {
+        if let Some(r) = body.downcast_ref::<MetroReq>() {
+            return Some(Box::new(r.clone()) as Box<dyn Any + Send>);
+        }
+        if let Some(r) = body.downcast_ref::<MetroRsp>() {
+            return Some(Box::new(r.clone()) as Box<dyn Any + Send>);
+        }
+        None
+    })
+}
+
+/// Per-shard counters, shared by the shard's components.
+#[derive(Default)]
+struct MetroStats {
+    frames: u64,
+    escalated: u64,
+    replies: u64,
+    latency_us_sum: u64,
+    /// Order-sensitive reply fold (id × arrival time × EC).
+    digest: u64,
+}
+
+/// A camera: publishes one frame per period to the EC-local
+/// aggregator topic, with the period stretched by the diurnal table.
+struct MetroCam {
+    topic: String,
+    frame_bytes: u64,
+    /// Seeded per-camera rush-hour period (µs).
+    base_period: SimTime,
+    /// Seeded initial phase, decorrelating camera timers.
+    phase: SimTime,
+    /// One diurnal slot's length (µs).
+    slot_len: SimTime,
+    /// Cameras stop at `duration_s`, so the run drains: every
+    /// in-flight escalation sees its reply inside the margin.
+    stop: SimTime,
+    stats: Rc<RefCell<MetroStats>>,
+}
+
+impl MetroCam {
+    fn period_at(&self, now: SimTime) -> SimTime {
+        let slot = (now / self.slot_len) as usize % DIURNAL.len();
+        self.base_period.saturating_mul(DIURNAL[slot]).max(1)
+    }
+}
+
+impl Component for MetroCam {
+    fn subscriptions(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn on_start(&mut self, ctx: &mut Ctx) {
+        ctx.set_timer(self.phase, 0);
+    }
+
+    fn on_message(&mut self, _ctx: &mut Ctx, _msg: &GraphMsg) {}
+
+    fn on_timer(&mut self, ctx: &mut Ctx, _token: u64) {
+        if ctx.now() >= self.stop {
+            return;
+        }
+        self.stats.borrow_mut().frames += 1;
+        ctx.publish(&self.topic, self.frame_bytes, Rc::new(()));
+        let next = self.period_at(ctx.now());
+        ctx.set_timer(next, 0);
+    }
+}
+
+/// Per-EC aggregator: consumes the cluster's frames, escalates every
+/// k-th one to the cloud with a fresh request id.
+struct MetroAgg {
+    ec: usize,
+    every: u64,
+    seen: u64,
+    next_id: u64,
+    req_bytes: u64,
+    topic_up: String,
+    stats: Rc<RefCell<MetroStats>>,
+}
+
+impl Component for MetroAgg {
+    fn subscriptions(&self) -> Vec<String> {
+        vec![format!("metro/ec{}/agg", self.ec)]
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, _msg: &GraphMsg) {
+        self.seen += 1;
+        if self.seen % self.every == 0 {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.stats.borrow_mut().escalated += 1;
+            let req = MetroReq { ec: self.ec, id, t0: ctx.now() };
+            ctx.publish(&self.topic_up, self.req_bytes, Rc::new(req));
+        }
+    }
+}
+
+/// The CC responder: stateless per request, one small reply back down
+/// the requester's `edge/ec<k>/#` bridge.
+struct MetroCloud {
+    rsp_bytes: u64,
+    /// Reply topics indexed by EC (no per-message formatting).
+    rsp_topics: Vec<String>,
+}
+
+impl Component for MetroCloud {
+    fn subscriptions(&self) -> Vec<String> {
+        vec!["cloud/metro/req/#".to_string()]
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
+        if let Some(req) = msg.body_as::<MetroReq>() {
+            let rsp = MetroRsp { ec: req.ec, id: req.id, t0: req.t0 };
+            let topic = &self.rsp_topics[req.ec];
+            ctx.publish(topic, self.rsp_bytes, Rc::new(rsp));
+        }
+    }
+}
+
+/// Per-EC sink: counts replies and folds the order-sensitive digest.
+struct MetroSink {
+    ec: usize,
+    stats: Rc<RefCell<MetroStats>>,
+}
+
+impl Component for MetroSink {
+    fn subscriptions(&self) -> Vec<String> {
+        vec![format!("edge/ec{}/metro/rsp", self.ec)]
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx, msg: &GraphMsg) {
+        if let Some(rsp) = msg.body_as::<MetroRsp>() {
+            let now = ctx.now();
+            let mut s = self.stats.borrow_mut();
+            s.replies += 1;
+            s.latency_us_sum += now.saturating_sub(rsp.t0);
+            s.digest = par::fnv_mix(s.digest, rsp.id ^ now ^ ((rsp.ec as u64) << 48));
+        }
+    }
+}
+
+/// `Send` blueprint a worker thread turns into a live shard.
+struct MetroBlueprint {
+    cfg: MetroConfig,
+    part: usize,
+    parts: usize,
+}
+
+/// One cluster-partition shard: an `Rc`-laden `GraphRuntime` built and
+/// driven entirely inside its owning worker thread.
+struct MetroShard {
+    rt: GraphRuntime,
+    stats: Rc<RefCell<MetroStats>>,
+    look: SimTime,
+    num_ecs: usize,
+    parts: usize,
+}
+
+fn build_shard(b: MetroBlueprint) -> MetroShard {
+    let cfg = &b.cfg;
+    let ecs = cfg.ecs;
+    let mut rt = GraphRuntime::new(NetFabric::new(&netcfg(cfg)));
+    let owned: Vec<bool> = (0..=ecs).map(|ci| part_of(ci, ecs, b.parts) == b.part).collect();
+    let stats = Rc::new(RefCell::new(MetroStats {
+        digest: FNV_OFFSET,
+        ..MetroStats::default()
+    }));
+    if owned[ecs] {
+        rt.add(
+            Site { cluster: ClusterRef::Cc, node: "srv".into() },
+            Box::new(MetroCloud {
+                rsp_bytes: 256,
+                rsp_topics: (0..ecs).map(|k| format!("edge/ec{k}/metro/rsp")).collect(),
+            }),
+        );
+    }
+    let slot_len = (secs(cfg.diurnal_period_s) / DIURNAL.len() as u64).max(1);
+    for (k, _) in owned.iter().enumerate().take(ecs).filter(|(_, o)| **o) {
+        let hub = Site { cluster: ClusterRef::Ec(k), node: "n0".into() };
+        rt.add(
+            hub.clone(),
+            Box::new(MetroAgg {
+                ec: k,
+                every: cfg.escalate_every,
+                seen: 0,
+                next_id: 0,
+                req_bytes: cfg.frame_bytes,
+                topic_up: format!("cloud/metro/req/ec{k}"),
+                stats: stats.clone(),
+            }),
+        );
+        rt.add(hub, Box::new(MetroSink { ec: k, stats: stats.clone() }));
+        for j in 0..cfg.nodes_per_ec {
+            for c in 0..cfg.cams_per_node {
+                // the GLOBAL camera index seeds period/phase, so the
+                // same camera paces identically whichever shard owns it
+                let i = ((k * cfg.nodes_per_ec + j) * cfg.cams_per_node + c) as u64;
+                let lo = millis(cfg.cam_period_ms).max(1);
+                let base = lo + prng::u64_at(cfg.seed, i) % (lo * 3 / 2).max(1);
+                let phase = prng::u64_at(cfg.seed ^ 0x9e37_79b9, i) % base;
+                rt.add(
+                    Site { cluster: ClusterRef::Ec(k), node: format!("n{j}").into() },
+                    Box::new(MetroCam {
+                        topic: format!("metro/ec{k}/agg"),
+                        frame_bytes: cfg.frame_bytes,
+                        base_period: base,
+                        phase,
+                        slot_len,
+                        stop: secs(cfg.duration_s),
+                        stats: stats.clone(),
+                    }),
+                );
+            }
+        }
+    }
+    rt.set_shard(owned, metro_codec());
+    MetroShard {
+        rt,
+        stats,
+        look: millis(cfg.wan_delay_ms) + 1,
+        num_ecs: ecs,
+        parts: b.parts,
+    }
+}
+
+impl Partition for MetroShard {
+    type Msg = BridgeMsg;
+
+    fn peek(&mut self) -> Option<SimTime> {
+        self.rt.peek_next()
+    }
+
+    fn lookahead(&self) -> SimTime {
+        // the WAN leg is charged before export and ser_time floors
+        // every charge at 1 µs, so arrivals land >= delay + 1 later
+        self.look
+    }
+
+    fn run_window(&mut self, horizon: SimTime, out: &mut Vec<Envelope<BridgeMsg>>) {
+        // run_until is inclusive; the window contract is `at < horizon`
+        self.rt.run_until(horizon - 1);
+        for bm in self.rt.take_shard_outbox() {
+            let dst = part_of(cidx(bm.to, self.num_ecs), self.num_ecs, self.parts);
+            out.push(Envelope { dst, at: bm.at, msg: bm });
+        }
+    }
+
+    fn absorb(&mut self, at: SimTime, msg: BridgeMsg) {
+        debug_assert_eq!(at, msg.at);
+        self.rt.absorb_bridge(msg);
+    }
+
+    fn digest(&mut self) -> u64 {
+        let s = self.stats.borrow();
+        let mut h = FNV_OFFSET;
+        for x in [
+            s.frames,
+            s.escalated,
+            s.replies,
+            s.latency_us_sum,
+            s.digest,
+            self.rt.executed(),
+            self.rt.fabric().wan_bytes(),
+        ] {
+            h = par::fnv_mix(h, x);
+        }
+        h
+    }
+}
+
+/// One shard's `Send` reduction, merged into [`MetroMetrics`].
+struct ShardOut {
+    frames: u64,
+    escalated: u64,
+    replies: u64,
+    latency_us_sum: u64,
+    executed: u64,
+    wan_bytes: u64,
+    bridged_up: u64,
+    bridged_down: u64,
+    digest: u64,
+}
+
+/// Whole-run results (application metrics + run-shape accounting).
+#[derive(Debug, Clone)]
+pub struct MetroMetrics {
+    pub frames: u64,
+    pub escalated: u64,
+    pub replies: u64,
+    /// Mean request→reply round trip (ms).
+    pub mean_latency_ms: f64,
+    /// Total DES events executed across all shards.
+    pub events: u64,
+    pub wan_bytes: u64,
+    pub bridged_up: u64,
+    pub bridged_down: u64,
+    /// Conservative windows the run took.
+    pub windows: u64,
+    /// Partition-ordered digest fold after the LAST window (the
+    /// serial-vs-parallel differential's final probe).
+    pub digest: u64,
+    pub virtual_secs: f64,
+    pub wall_secs: f64,
+    /// `events / wall_secs` — the number `benchkit::metro_scale` rows
+    /// and the BENCH_*.json `metro_events_per_sec` gate compare.
+    pub events_per_sec: f64,
+    pub partitions: usize,
+    pub threads: usize,
+}
+
+/// Run the metro workload under the conservative partitioned driver,
+/// reporting every window's `(horizon, digest)` to `on_window`.
+pub fn run_metro_with(
+    cfg: &MetroConfig,
+    mut on_window: impl FnMut(SimTime, u64),
+) -> MetroMetrics {
+    let parts = cfg.partitions.clamp(1, cfg.ecs.max(1));
+    // margin past the last camera frame so in-flight escalations drain
+    let until = secs(cfg.duration_s) + millis(cfg.wan_delay_ms).saturating_mul(4) + secs(1.0);
+    let blueprints: Vec<MetroBlueprint> = (0..parts)
+        .map(|part| MetroBlueprint { cfg: cfg.clone(), part, parts })
+        .collect();
+    let mut windows = 0u64;
+    let mut digest = FNV_OFFSET;
+    let t0 = Instant::now();
+    let outs = par::run_partitioned(
+        blueprints,
+        cfg.threads.max(1),
+        until,
+        |_, b| build_shard(b),
+        |_, shard: MetroShard| {
+            let s = shard.stats.borrow();
+            ShardOut {
+                frames: s.frames,
+                escalated: s.escalated,
+                replies: s.replies,
+                latency_us_sum: s.latency_us_sum,
+                executed: shard.rt.executed(),
+                wan_bytes: shard.rt.fabric().wan_bytes(),
+                bridged_up: shard.rt.fabric().bridged_up,
+                bridged_down: shard.rt.fabric().bridged_down,
+                digest: s.digest,
+            }
+        },
+        |h, d| {
+            windows += 1;
+            digest = d;
+            on_window(h, d);
+        },
+    );
+    let wall = t0.elapsed().as_secs_f64();
+    let mut m = MetroMetrics {
+        frames: 0,
+        escalated: 0,
+        replies: 0,
+        mean_latency_ms: 0.0,
+        events: 0,
+        wan_bytes: 0,
+        bridged_up: 0,
+        bridged_down: 0,
+        windows,
+        digest,
+        virtual_secs: until as f64 / 1e6,
+        wall_secs: wall,
+        events_per_sec: 0.0,
+        partitions: parts,
+        threads: cfg.threads.max(1),
+    };
+    let mut lat_sum = 0u64;
+    for o in &outs {
+        m.frames += o.frames;
+        m.escalated += o.escalated;
+        m.replies += o.replies;
+        lat_sum += o.latency_us_sum;
+        m.events += o.executed;
+        m.wan_bytes += o.wan_bytes;
+        m.bridged_up += o.bridged_up;
+        m.bridged_down += o.bridged_down;
+        // shard-count independent: fold per-shard reply digests only
+        // for run_metro callers (the windowed fold covers the rest)
+        m.digest = par::fnv_mix(m.digest, o.digest);
+    }
+    m.mean_latency_ms = lat_sum as f64 / m.replies.max(1) as f64 / 1e3;
+    m.events_per_sec = m.events as f64 / wall.max(1e-9);
+    m
+}
+
+/// [`run_metro_with`] without a window probe.
+pub fn run_metro(cfg: &MetroConfig) -> MetroMetrics {
+    run_metro_with(cfg, |_, _| {})
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> MetroConfig {
+        MetroConfig {
+            ecs: 4,
+            nodes_per_ec: 2,
+            cams_per_node: 1,
+            duration_s: 4.0,
+            ..MetroConfig::default()
+        }
+    }
+
+    #[test]
+    fn metro_produces_end_to_end_traffic() {
+        let m = run_metro(&tiny());
+        assert!(m.frames > 0, "cameras must fire");
+        assert!(m.escalated > 0, "aggregators must escalate");
+        assert_eq!(m.replies, m.escalated, "every request drains to a reply");
+        assert_eq!(m.bridged_up, m.escalated);
+        assert_eq!(m.bridged_down, m.replies);
+        assert!(m.mean_latency_ms >= 2.0 * 20.0, "round trip >= 2x WAN delay");
+        assert!(m.windows > 0);
+    }
+
+    #[test]
+    fn app_metrics_are_identical_across_partition_counts() {
+        let base = run_metro(&tiny());
+        for parts in [2, 3, 4] {
+            let m = run_metro(&MetroConfig { partitions: parts, ..tiny() });
+            assert_eq!(m.partitions, parts);
+            assert_eq!(
+                (m.frames, m.escalated, m.replies),
+                (base.frames, base.escalated, base.replies),
+                "{parts} partitions: counts diverged"
+            );
+            // exact up to same-microsecond tie reordering between a
+            // local frame hop and a bridge arrival on one LAN segment
+            assert!(
+                (m.mean_latency_ms - base.mean_latency_ms).abs() < 0.5,
+                "{parts} partitions: latency diverged ({} vs {})",
+                m.mean_latency_ms,
+                base.mean_latency_ms
+            );
+            assert_eq!(m.wan_bytes, base.wan_bytes);
+        }
+    }
+
+    #[test]
+    fn threaded_windows_match_the_serial_reference() {
+        let cfg = MetroConfig { partitions: 4, ..tiny() };
+        let mut w1 = Vec::new();
+        let m1 = run_metro_with(&cfg, |h, d| w1.push((h, d)));
+        for threads in [2, 4] {
+            let mut wt = Vec::new();
+            let mt = run_metro_with(&MetroConfig { threads, ..cfg.clone() }, |h, d| wt.push((h, d)));
+            assert_eq!(w1, wt, "{threads} threads: window digests diverged");
+            assert_eq!(m1.digest, mt.digest);
+            assert_eq!(m1.replies, mt.replies);
+        }
+    }
+
+    #[test]
+    fn yaml_roundtrip_preserves_the_config() {
+        let cfg = MetroConfig { seed: 7, ecs: 6, frame_bytes: 12_345, ..MetroConfig::default() };
+        let parsed = MetroConfig::from_yaml(&cfg.to_yaml()).unwrap();
+        assert_eq!(parsed, cfg);
+    }
+
+    #[test]
+    fn presets_parse_and_scale() {
+        let s = MetroConfig::preset("small").unwrap();
+        let m = MetroConfig::preset("mid").unwrap();
+        assert!(s.cams() < m.cams());
+        assert!(MetroConfig::preset("bogus").is_err());
+        let roundtrip = MetroConfig::from_yaml(&s.to_yaml()).unwrap();
+        assert_eq!(roundtrip, s);
+    }
+
+    #[test]
+    fn yaml_rejects_wrong_app_and_bad_numbers() {
+        assert!(MetroConfig::from_yaml("app: videoquery\n").is_err());
+        assert!(MetroConfig::from_yaml("ecs: 4\n").is_err());
+        assert!(MetroConfig::from_yaml("app: metro\necs: nope\n").is_err());
+        assert!(MetroConfig::from_yaml("app: metro\nescalate_every: 0\n").is_err());
+    }
+}

@@ -1,12 +1,16 @@
 //! Application layer — concrete ECCI applications built on the
 //! generic `svcgraph` runtime. `videoquery` is the paper's §5
 //! evaluation application; `fedtrain` is the §2 training pattern,
-//! proving the runtime generalizes beyond one workload.
+//! proving the runtime generalizes beyond one workload; `metro` is
+//! the metro-scale synthetic load driving the conservative parallel
+//! DES (DESIGN.md §Parallel-DES).
 
 pub mod fedtrain;
+pub mod metro;
 pub mod videoquery;
 
 pub use fedtrain::{run_fedtrain, run_fedtrain_seeds, FedConfig, FedMetrics};
+pub use metro::{run_metro, run_metro_with, MetroConfig, MetroMetrics};
 pub use videoquery::{
     fig5_grid, run_cell, run_sweep, CellConfig, Compute, InferCache, Paradigm, ServiceTimes,
 };

@@ -104,6 +104,12 @@ pub struct CellConfig {
     /// `num_ecs`/`wan_delay_ms`. When set, its `num_ecs`/`wan_delay`
     /// must be kept consistent with this config by the caller.
     pub net: Option<NetConfig>,
+    /// Scheduler event lanes (`--partitions`). The cell runs on one
+    /// thread either way — the `Rc`-shared trace cannot cross threads —
+    /// but laned runs exercise the per-cluster queues the parallel
+    /// driver partitions on, and the k-way merge keeps every
+    /// trajectory byte-identical to `partitions = 1`.
+    pub partitions: usize,
 }
 
 impl Default for CellConfig {
@@ -121,6 +127,7 @@ impl Default for CellConfig {
             channel: None,
             cc_nodes: 1,
             net: None,
+            partitions: 1,
         }
     }
 }
@@ -1025,7 +1032,7 @@ pub fn run_cell(cfg: CellConfig, svc: ServiceTimes, compute: Compute) -> Result<
 
     // ② transport: per-cluster message services bridged over the WAN,
     // hop-charged on the per-node link graph
-    let mut rt = GraphRuntime::new(net);
+    let mut rt = GraphRuntime::with_lanes(net, cfg.partitions.max(1));
     let shared = make_shared(cfg.clone(), svc, compute);
 
     // ③ every placed instance becomes a Component on its node
@@ -1101,7 +1108,7 @@ pub fn run_scenario(
         net.arm_faults(*spec);
     }
     let hints = NetHints::from_net(&net);
-    let mut rt = GraphRuntime::new(net);
+    let mut rt = GraphRuntime::with_lanes(net, cfg.partitions.max(1));
     let interval = secs(cfg.interval_s);
     let shared = make_shared(cfg.clone(), svc, compute);
     let factory: InstanceFactory = {

@@ -717,6 +717,81 @@ components:
     }
 }
 
+/// One serial-or-parallel metro measurement (see [`metro_scale`]).
+#[derive(Debug, Clone)]
+pub struct MetroScaleRow {
+    pub partitions: usize,
+    pub threads: usize,
+    /// DES events executed across all shards (identical app work per
+    /// row — partitioning only changes which runtime executes it).
+    pub events: u64,
+    pub wall_secs: f64,
+    pub events_per_sec: f64,
+}
+
+/// The serial-vs-parallel metro comparison (`BENCH_*.json` →
+/// `metro_scale`).
+#[derive(Debug, Clone)]
+pub struct MetroScaleNumbers {
+    pub ecs: usize,
+    pub cams: usize,
+    pub virtual_secs: f64,
+    /// Row 0 is ALWAYS the serial reference (1 partition, 1 thread).
+    pub rows: Vec<MetroScaleRow>,
+    pub serial_events_per_sec: f64,
+    /// Best parallel rate — the gated `metro_events_per_sec` number.
+    pub best_events_per_sec: f64,
+    pub best_partitions: usize,
+}
+
+/// Run the metro workload serially, then partitioned at each count in
+/// `partition_counts` with one thread per partition, measuring
+/// events/sec for the `metro_scale` row of `BENCH_*.json`. CI's bench
+/// job asserts the parallel rate beats the serial one at >= 4
+/// partitions (see `.github/workflows/ci.yml`).
+pub fn metro_scale(cfg: &crate::app::MetroConfig, partition_counts: &[usize]) -> MetroScaleNumbers {
+    let mut rows = Vec::new();
+    let run = |partitions: usize, threads: usize| -> MetroScaleRow {
+        let m = crate::app::run_metro(&crate::app::MetroConfig {
+            partitions,
+            threads,
+            ..cfg.clone()
+        });
+        MetroScaleRow {
+            partitions: m.partitions,
+            threads: m.threads,
+            events: m.events,
+            wall_secs: m.wall_secs,
+            events_per_sec: m.events_per_sec,
+        }
+    };
+    // untimed warm-up so first-touch costs (thread pool, page faults)
+    // don't land on the serial row
+    run(1, 1);
+    rows.push(run(1, 1));
+    for &p in partition_counts {
+        if p <= 1 {
+            continue;
+        }
+        rows.push(run(p, p));
+    }
+    let serial = rows[0].events_per_sec;
+    let best = rows[1..]
+        .iter()
+        .max_by(|a, b| a.events_per_sec.total_cmp(&b.events_per_sec))
+        .cloned()
+        .unwrap_or_else(|| rows[0].clone());
+    MetroScaleNumbers {
+        ecs: cfg.ecs,
+        cams: cfg.cams(),
+        virtual_secs: cfg.duration_s,
+        serial_events_per_sec: serial,
+        best_events_per_sec: best.events_per_sec,
+        best_partitions: best.partitions,
+        rows,
+    }
+}
+
 // ---------------------------------------------------------------------------
 // bench-regression gate (`ace bench --check BASELINE.json`)
 // ---------------------------------------------------------------------------
@@ -735,6 +810,7 @@ pub const CHECKED_METRICS: &[(&str, &str)] = &[
     ("broker", "replay_subscribes_per_sec"),
     ("netfabric", "hop_pubs_per_sec"),
     ("churn_convergence", "runs_per_sec"),
+    ("metro_scale", "metro_events_per_sec"),
 ];
 
 /// Outcome of comparing a fresh bench record against a baseline.
@@ -870,6 +946,10 @@ mod tests {
                 "churn_convergence",
                 Value::obj(vec![("runs_per_sec", Value::num(100.0 * scale))]),
             ),
+            (
+                "metro_scale",
+                Value::obj(vec![("metro_events_per_sec", Value::num(900_000.0 * scale))]),
+            ),
         ])
     }
 
@@ -970,6 +1050,24 @@ mod tests {
         assert_eq!(n.events, 5_000);
         assert!(n.wheel_events_per_sec > 0.0);
         assert!(n.heap_events_per_sec > 0.0);
+    }
+
+    #[test]
+    fn metro_scale_measures_serial_and_parallel_rows() {
+        let cfg = crate::app::MetroConfig {
+            ecs: 2,
+            nodes_per_ec: 1,
+            cams_per_node: 1,
+            duration_s: 2.0,
+            ..Default::default()
+        };
+        let n = metro_scale(&cfg, &[1, 2]);
+        assert_eq!(n.rows.len(), 2, "serial row + one parallel row");
+        assert_eq!((n.rows[0].partitions, n.rows[0].threads), (1, 1));
+        assert_eq!((n.rows[1].partitions, n.rows[1].threads), (2, 2));
+        assert!(n.rows.iter().all(|r| r.events > 0 && r.events_per_sec > 0.0));
+        assert!(n.serial_events_per_sec > 0.0 && n.best_events_per_sec > 0.0);
+        assert_eq!(n.best_partitions, 2);
     }
 
     #[test]

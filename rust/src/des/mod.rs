@@ -34,6 +34,7 @@
 //! or queue (asserted by the typed-vs-boxed and heap-vs-wheel
 //! differentials in `tests/properties.rs`).
 
+pub mod par;
 pub mod queue;
 
 use crate::util::SimTime;
@@ -62,8 +63,20 @@ impl<W> SimEvent<W> for BoxedEvent<W> {
 /// Virtual-time event scheduler, generic over the event type `E`
 /// (typed lane). `Scheduler<W>` defaults `E` to [`BoxedEvent`], the
 /// closure lane.
+///
+/// The pending store is one or more **partition lanes**, each its own
+/// [`CalendarQueue`] (PR 8). The default is a single lane — exactly the
+/// PR-6 engine. A multi-lane scheduler files each push into the lane
+/// its caller names ([`Scheduler::push_at_lane`]) and pops the k-way
+/// `(at, seq)` minimum across lanes; because `seq` is GLOBAL across
+/// lanes, the merged pop order is identical to a single queue holding
+/// every event, for ANY lane assignment (pinned by
+/// `lane_merge_matches_single_queue`). That is what lets a
+/// cluster-partitioned `svcgraph` run replay single-queue goldens
+/// byte-for-byte, and it is the substrate `des::par` cuts along when it
+/// actually goes wide.
 pub struct Scheduler<W, E: SimEvent<W> = BoxedEvent<W>> {
-    queue: CalendarQueue<E>,
+    lanes: Vec<CalendarQueue<E>>,
     now: SimTime,
     seq: u64,
     executed: u64,
@@ -78,13 +91,42 @@ impl<W, E: SimEvent<W>> Default for Scheduler<W, E> {
 
 impl<W, E: SimEvent<W>> Scheduler<W, E> {
     pub fn new() -> Self {
+        Self::with_lanes(1)
+    }
+
+    /// A scheduler with `n` partition lanes (clamped to >= 1). Lane 0
+    /// is the default lane [`Scheduler::push_at`] files into.
+    pub fn with_lanes(n: usize) -> Self {
+        let n = n.max(1);
         Scheduler {
-            queue: CalendarQueue::new(),
+            lanes: (0..n).map(|_| CalendarQueue::new()).collect(),
             now: 0,
             seq: 0,
             executed: 0,
             _world: PhantomData,
         }
+    }
+
+    /// Number of partition lanes.
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Lane index holding the earliest `(at, seq)` key, or `None` when
+    /// every lane is empty. The single-lane fast path skips the scan.
+    fn argmin_lane(&mut self) -> Option<usize> {
+        if self.lanes.len() == 1 {
+            return if self.lanes[0].is_empty() { None } else { Some(0) };
+        }
+        let mut best: Option<((SimTime, u64), usize)> = None;
+        for (i, q) in self.lanes.iter_mut().enumerate() {
+            if let Some(key) = q.peek_key() {
+                if best.is_none_or(|(bk, _)| key < bk) {
+                    best = Some((key, i));
+                }
+            }
+        }
+        best.map(|(_, i)| i)
     }
 
     /// Current virtual time (microseconds).
@@ -97,9 +139,16 @@ impl<W, E: SimEvent<W>> Scheduler<W, E> {
         self.executed
     }
 
-    /// Pending events.
+    /// Pending events (summed over lanes).
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.lanes.iter().map(|q| q.len()).sum()
+    }
+
+    /// Earliest pending event time across every lane, without popping.
+    /// `des::par` uses this as the partition's local clock floor when
+    /// computing the conservative safe window.
+    pub fn peek_next(&mut self) -> Option<SimTime> {
+        self.lanes.iter_mut().filter_map(|q| q.peek_time()).min()
     }
 
     /// Pre-size the event queue for at least `additional` more pending
@@ -110,28 +159,46 @@ impl<W, E: SimEvent<W>> Scheduler<W, E> {
     /// asserting the capacity is unchanged across the steady-state
     /// window.
     pub fn reserve_events(&mut self, additional: usize) {
-        self.queue.reserve(additional);
+        // an event can be filed into any lane, so each lane is sized
+        // for the full reservation (single-lane: identical to PR 6)
+        for q in &mut self.lanes {
+            q.reserve(additional);
+        }
     }
 
-    /// Current event-queue capacity, summed over the wheel slab and the
-    /// current/overflow heaps (for pre-sizing / no-regrowth assertions;
-    /// see [`reserve_events`](Self::reserve_events)).
+    /// Current event-queue capacity, summed over every lane's wheel
+    /// slab and current/overflow heaps (for pre-sizing / no-regrowth
+    /// assertions; see [`reserve_events`](Self::reserve_events)).
     pub fn heap_capacity(&self) -> usize {
-        self.queue.capacity()
+        self.lanes.iter().map(|q| q.capacity()).sum()
     }
 
     /// Schedule a typed event at absolute time `at` (clamped to now).
     /// The event is stored by value — no allocation beyond amortized
-    /// queue growth.
+    /// queue growth. Files into lane 0.
     pub fn push_at(&mut self, at: SimTime, ev: E) {
-        let at = at.max(self.now);
-        self.seq += 1;
-        self.queue.push(at, self.seq, ev);
+        self.push_at_lane(0, at, ev);
     }
 
-    /// Schedule a typed event after a relative delay.
+    /// Schedule a typed event after a relative delay (lane 0).
     pub fn push_after(&mut self, delay: SimTime, ev: E) {
-        self.push_at(self.now + delay, ev);
+        self.push_at_lane(0, self.now + delay, ev);
+    }
+
+    /// Schedule a typed event at absolute time `at` (clamped to now)
+    /// into partition lane `lane` (clamped into range: a caller keyed
+    /// by a cluster index may address fewer lanes than clusters — the
+    /// `lane % lane_count` fold is applied here, once).
+    pub fn push_at_lane(&mut self, lane: usize, at: SimTime, ev: E) {
+        let at = at.max(self.now);
+        self.seq += 1;
+        let lane = if self.lanes.len() == 1 { 0 } else { lane % self.lanes.len() };
+        self.lanes[lane].push(at, self.seq, ev);
+    }
+
+    /// Schedule a typed event after a relative delay into lane `lane`.
+    pub fn push_after_lane(&mut self, lane: usize, delay: SimTime, ev: E) {
+        self.push_at_lane(lane, self.now + delay, ev);
     }
 
     /// Run until the queue empties or virtual time would exceed `until`,
@@ -139,11 +206,12 @@ impl<W, E: SimEvent<W>> Scheduler<W, E> {
     /// Returns the number of events executed by this call.
     pub fn run_until(&mut self, world: &mut W, until: SimTime) -> u64 {
         let start = self.executed;
-        while let Some(top) = self.queue.peek_time() {
+        while let Some(lane) = self.argmin_lane() {
+            let top = self.lanes[lane].peek_time().expect("argmin lane is non-empty");
             if top > until {
                 break;
             }
-            let (at, _seq, ev) = self.queue.pop().unwrap();
+            let (at, _seq, ev) = self.lanes[lane].pop().unwrap();
             debug_assert!(at >= self.now, "time went backwards");
             self.now = at;
             self.executed += 1;
@@ -156,7 +224,8 @@ impl<W, E: SimEvent<W>> Scheduler<W, E> {
     /// Run to exhaustion (with an event-count safety valve).
     pub fn run(&mut self, world: &mut W, max_events: u64) -> u64 {
         let start = self.executed;
-        while let Some((at, _seq, ev)) = self.queue.pop() {
+        while let Some(lane) = self.argmin_lane() {
+            let (at, _seq, ev) = self.lanes[lane].pop().unwrap();
             debug_assert!(at >= self.now);
             self.now = at;
             self.executed += 1;
@@ -370,6 +439,53 @@ mod tests {
         assert_eq!(s.now(), 55);
         s.run(&mut w, 100);
         assert_eq!(w.last(), Some(&(110, 7)));
+    }
+
+    #[test]
+    fn lane_merge_matches_single_queue() {
+        // the SAME push trace filed into 1..=5 partition lanes
+        // (round-robin by an arbitrary key) must pop in the identical
+        // order: the global seq counter makes the k-way merge exact
+        let plan: Vec<(SimTime, u32)> = (0..500u32)
+            .map(|i| {
+                let at = (i as u64 * 7919) % 50_000; // ties included
+                (at - at % 5, i)
+            })
+            .collect();
+        let reference = {
+            let mut s: Scheduler<Vec<(SimTime, u32)>, Ev> = Scheduler::new();
+            let mut w = Vec::new();
+            for &(at, id) in &plan {
+                s.push_at(at, Ev::Emit(id));
+            }
+            s.run(&mut w, u64::MAX);
+            w
+        };
+        for lanes in 1..=5usize {
+            let mut s: Scheduler<Vec<(SimTime, u32)>, Ev> = Scheduler::with_lanes(lanes);
+            assert_eq!(s.lane_count(), lanes);
+            let mut w = Vec::new();
+            for &(at, id) in &plan {
+                s.push_at_lane(id as usize % 3, at, Ev::Emit(id));
+            }
+            assert_eq!(s.pending(), plan.len());
+            assert_eq!(s.peek_next(), Some(0));
+            s.run(&mut w, u64::MAX);
+            assert_eq!(w, reference, "{lanes} lanes diverged from the single queue");
+        }
+    }
+
+    #[test]
+    fn lane_indices_fold_modulo_lane_count() {
+        // a caller keyed by cluster index may address more lanes than
+        // the scheduler has; the fold happens inside push_at_lane
+        let mut s: Scheduler<Vec<(SimTime, u32)>, Ev> = Scheduler::with_lanes(2);
+        let mut w = Vec::new();
+        s.push_at_lane(7, 10, Ev::Emit(1)); // lane 1
+        s.push_at_lane(100, 5, Ev::Emit(2)); // lane 0
+        s.push_after_lane(3, 20, Ev::Emit(3)); // lane 1, at 20
+        s.run(&mut w, 100);
+        assert_eq!(w, vec![(5, 2), (10, 1), (20, 3)]);
     }
 
     #[test]

@@ -1,0 +1,534 @@
+//! Conservative parallel DES: lock-stepped safe windows over
+//! lookahead-separated partitions (DESIGN.md §Parallel-DES).
+//!
+//! The classic conservative (Chandy–Misra–Bryant-style) window: cut the
+//! simulation into partitions whose ONLY mutual influence is messages
+//! that arrive at least `lookahead` after they were caused. Then every
+//! partition can safely execute all events strictly before
+//!
+//! ```text
+//! H = min_i( peek_i + lookahead_i )
+//! ```
+//!
+//! without ever seeing a cross-partition message "from the past": a
+//! message emitted by partition `j` while executing an event at time
+//! `e >= peek_j` arrives no earlier than `e + lookahead_j >= H`. In our
+//! topology the partitions are clusters and the lookahead is the WAN
+//! bridge delay — bridge hops are the only cross-cluster edges, and
+//! `simnet::Link::ser_time` floors every charge at 1 µs, so lookahead
+//! is always nonzero and every window makes progress (the driver
+//! additionally clamps reported lookaheads to >= 1).
+//!
+//! Determinism: each partition's trajectory is a pure function of its
+//! blueprint, the horizon sequence, and its inbox sequence. Horizons
+//! are computed from (peek, lookahead, undelivered-envelope) state that
+//! evolves identically whether windows run on one thread or many, and
+//! envelopes are merged in the fixed order `(at, src partition, outbox
+//! index)` before delivery. So the serial reference driver and the
+//! threaded driver are bit-identical by construction — pinned here by
+//! the toy-ring test and at system scale by `tests/par_des.rs`.
+//!
+//! Threading model: partitions are built INSIDE worker threads from
+//! `Send` blueprints, so a partition itself (typically an `Rc`-laden
+//! `svcgraph` runtime) never crosses a thread boundary. Only envelopes,
+//! peeks, digests, and final results — all `Send` — move over channels.
+
+use crate::util::SimTime;
+use std::sync::mpsc;
+
+/// FNV-1a offset basis — the starting value for window-digest folds.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a-style mix step folding `x` into `h` (shared by the
+/// window-digest folds here and partition `digest` implementations).
+pub fn fnv_mix(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x0000_0100_0000_01b3)
+}
+
+/// A cross-partition message: deliver `msg` to partition `dst` at
+/// virtual time `at`. The conservative contract requires
+/// `at >= H` for the window that emitted it (see module docs).
+pub struct Envelope<M> {
+    pub dst: usize,
+    pub at: SimTime,
+    pub msg: M,
+}
+
+/// One partition of the simulation. NOT required to be `Send` — the
+/// driver builds each partition inside the thread that runs it.
+pub trait Partition {
+    /// The cross-partition message payload.
+    type Msg: Send;
+
+    /// Earliest pending local event time (`None` = locally idle).
+    fn peek(&mut self) -> Option<SimTime>;
+
+    /// Minimum virtual-time distance between executing an event and the
+    /// earliest cross-partition arrival it can cause (the WAN delay +
+    /// serialization floor for cluster partitions). The driver clamps
+    /// this to >= 1.
+    fn lookahead(&self) -> SimTime;
+
+    /// Execute every local event with `at < horizon`, appending any
+    /// cross-partition messages to `out` in a deterministic local
+    /// order (their position is the merge tiebreak).
+    fn run_window(&mut self, horizon: SimTime, out: &mut Vec<Envelope<Self::Msg>>);
+
+    /// Accept a cross-partition message (delivered before the next
+    /// window runs; `at` is always in that window's future).
+    fn absorb(&mut self, at: SimTime, msg: Self::Msg);
+
+    /// Order-sensitive state digest, folded across partitions after
+    /// every window and handed to the driver's `on_window` hook — the
+    /// probe the serial-vs-parallel differential compares.
+    fn digest(&mut self) -> u64;
+}
+
+/// Shared lock-step state: peeks/lookaheads per partition plus the
+/// envelopes delivered at the end of the previous window (absorbed at
+/// the start of the next). Identical between the serial and threaded
+/// drivers — this is where determinism lives.
+struct SyncState<M> {
+    peeks: Vec<Option<SimTime>>,
+    looks: Vec<SimTime>,
+    inboxes: Vec<Vec<(SimTime, M)>>,
+}
+
+impl<M> SyncState<M> {
+    fn new(n: usize) -> Self {
+        SyncState {
+            peeks: vec![None; n],
+            looks: vec![1; n],
+            inboxes: (0..n).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Next safe horizon: `min_i(eff_peek_i + look_i)` clamped to
+    /// `until + 1`, where `eff_peek` folds in undelivered envelopes.
+    /// `None` when no partition has work at or before `until`.
+    fn horizon(&self, until: SimTime) -> Option<SimTime> {
+        let mut h: Option<SimTime> = None;
+        let mut work = false;
+        for i in 0..self.peeks.len() {
+            let inbox_min = self.inboxes[i].iter().map(|(at, _)| *at).min();
+            let eff = match (self.peeks[i], inbox_min) {
+                (Some(p), Some(m)) => Some(p.min(m)),
+                (p, m) => p.or(m),
+            };
+            let Some(p) = eff else { continue };
+            if p <= until {
+                work = true;
+            }
+            let hi = p.saturating_add(self.looks[i].max(1));
+            h = Some(h.map_or(hi, |x| x.min(hi)));
+        }
+        if !work {
+            return None;
+        }
+        Some(h.expect("work implies a peek").min(until.saturating_add(1)))
+    }
+
+    /// Merge one window's outboxes into the per-partition inboxes in
+    /// the canonical order: `(at, src partition, outbox index)`.
+    fn deliver(&mut self, routed: &mut Vec<(usize, usize, Envelope<M>)>) {
+        routed.sort_by_key(|(src, idx, env)| (env.at, *src, *idx));
+        for (_, _, env) in routed.drain(..) {
+            self.inboxes[env.dst].push((env.at, env.msg));
+        }
+    }
+}
+
+/// Messages between the lock-step driver and a worker thread.
+enum ToWorker<M> {
+    /// Run one window: absorb `inbox` (pre-sorted delivery order,
+    /// tagged with the destination partition), then execute to
+    /// `horizon`.
+    Window { horizon: SimTime, inbox: Vec<(usize, SimTime, M)> },
+    Stop,
+}
+
+enum FromWorker<M, R> {
+    /// Partitions built: initial `(partition, peek, lookahead)`.
+    Hello(Vec<(usize, Option<SimTime>, SimTime)>),
+    /// Window done: `(partition, peek, digest)` plus the outbox as
+    /// `(src partition, outbox index, envelope)`.
+    Report {
+        parts: Vec<(usize, Option<SimTime>, u64)>,
+        outbox: Vec<(usize, usize, Envelope<M>)>,
+    },
+    /// Finished: `(partition, result)`.
+    Done(Vec<(usize, R)>),
+}
+
+/// Run `blueprints.len()` partitions to virtual time `until` under
+/// conservative lock-stepped windows, on `threads` worker threads
+/// (`<= 1`, or a single partition, runs the serial reference path on
+/// the caller's thread — same windows, same merge order, same
+/// digests). `build` turns a blueprint into a live partition inside
+/// its owning thread; `finish` reduces each partition to a `Send`
+/// result after the last window. `on_window(horizon, digest)` fires on
+/// the caller's thread after every window with the partition-ordered
+/// digest fold.
+pub fn run_partitioned<B, P, R, FB, FF>(
+    blueprints: Vec<B>,
+    threads: usize,
+    until: SimTime,
+    build: FB,
+    finish: FF,
+    mut on_window: impl FnMut(SimTime, u64),
+) -> Vec<R>
+where
+    B: Send,
+    P: Partition,
+    R: Send,
+    FB: Fn(usize, B) -> P + Sync,
+    FF: Fn(usize, P) -> R + Sync,
+{
+    let n = blueprints.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads <= 1 || n == 1 {
+        return run_serial(blueprints, until, build, finish, on_window);
+    }
+
+    let nw = threads.min(n);
+    let mut per_worker: Vec<Vec<(usize, B)>> = (0..nw).map(|_| Vec::new()).collect();
+    for (i, b) in blueprints.into_iter().enumerate() {
+        per_worker[i % nw].push((i, b));
+    }
+
+    std::thread::scope(|s| {
+        let (res_tx, res_rx) = mpsc::channel::<FromWorker<P::Msg, R>>();
+        let mut to_workers = Vec::with_capacity(nw);
+        let (build, finish) = (&build, &finish);
+        for my in per_worker {
+            let (tx, rx) = mpsc::channel::<ToWorker<P::Msg>>();
+            to_workers.push(tx);
+            let res_tx = res_tx.clone();
+            s.spawn(move || {
+                let mut parts: Vec<(usize, P)> =
+                    my.into_iter().map(|(i, b)| (i, build(i, b))).collect();
+                let hello = parts
+                    .iter_mut()
+                    .map(|(i, p)| (*i, p.peek(), p.lookahead()))
+                    .collect();
+                if res_tx.send(FromWorker::Hello(hello)).is_err() {
+                    return;
+                }
+                let mut out: Vec<Envelope<P::Msg>> = Vec::new();
+                for msg in rx {
+                    match msg {
+                        ToWorker::Window { horizon, inbox } => {
+                            for (dst, at, m) in inbox {
+                                let (_, p) = parts
+                                    .iter_mut()
+                                    .find(|(gi, _)| *gi == dst)
+                                    .expect("envelope routed to a partition this worker owns");
+                                p.absorb(at, m);
+                            }
+                            let mut report = Vec::with_capacity(parts.len());
+                            let mut outbox = Vec::new();
+                            for (gi, p) in parts.iter_mut() {
+                                out.clear();
+                                p.run_window(horizon, &mut out);
+                                for (idx, env) in out.drain(..).enumerate() {
+                                    outbox.push((*gi, idx, env));
+                                }
+                                report.push((*gi, p.peek(), p.digest()));
+                            }
+                            if res_tx
+                                .send(FromWorker::Report { parts: report, outbox })
+                                .is_err()
+                            {
+                                return;
+                            }
+                        }
+                        ToWorker::Stop => break,
+                    }
+                }
+                let done = parts.drain(..).map(|(i, p)| (i, finish(i, p))).collect();
+                res_tx.send(FromWorker::Done(done)).ok();
+            });
+        }
+        drop(res_tx); // recv() must error (not hang) if every worker dies
+
+        let mut st: SyncState<P::Msg> = SyncState::new(n);
+        let recv = |rx: &mpsc::Receiver<FromWorker<P::Msg, R>>| {
+            rx.recv().expect("a partition worker thread died")
+        };
+        for _ in 0..nw {
+            match recv(&res_rx) {
+                FromWorker::Hello(parts) => {
+                    for (i, peek, look) in parts {
+                        st.peeks[i] = peek;
+                        st.looks[i] = look;
+                    }
+                }
+                _ => unreachable!("hello precedes every report"),
+            }
+        }
+
+        let mut digests = vec![0u64; n];
+        let mut routed: Vec<(usize, usize, Envelope<P::Msg>)> = Vec::new();
+        while let Some(h) = st.horizon(until) {
+            for (w, tx) in to_workers.iter().enumerate() {
+                let mut inbox = Vec::new();
+                for gi in (w..n).step_by(nw) {
+                    for (at, m) in st.inboxes[gi].drain(..) {
+                        inbox.push((gi, at, m));
+                    }
+                }
+                tx.send(ToWorker::Window { horizon: h, inbox })
+                    .expect("a partition worker thread died");
+            }
+            for _ in 0..nw {
+                match recv(&res_rx) {
+                    FromWorker::Report { parts, outbox } => {
+                        for (i, peek, digest) in parts {
+                            st.peeks[i] = peek;
+                            digests[i] = digest;
+                        }
+                        routed.extend(outbox);
+                    }
+                    _ => unreachable!("workers report exactly once per window"),
+                }
+            }
+            st.deliver(&mut routed);
+            let fold = digests.iter().fold(FNV_OFFSET, |h, &d| fnv_mix(h, d));
+            on_window(h, fold);
+        }
+
+        for tx in &to_workers {
+            tx.send(ToWorker::Stop).expect("a partition worker thread died");
+        }
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..nw {
+            match recv(&res_rx) {
+                FromWorker::Done(rs) => {
+                    for (i, r) in rs {
+                        results[i] = Some(r);
+                    }
+                }
+                _ => unreachable!("stop is answered only by done"),
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every partition reports a result"))
+            .collect()
+    })
+}
+
+/// The serial reference path: identical windows, merge order, and
+/// digest folds to the threaded driver, on the caller's thread.
+fn run_serial<B, P, R, FB, FF>(
+    blueprints: Vec<B>,
+    until: SimTime,
+    build: FB,
+    finish: FF,
+    mut on_window: impl FnMut(SimTime, u64),
+) -> Vec<R>
+where
+    P: Partition,
+    FB: Fn(usize, B) -> P,
+    FF: Fn(usize, P) -> R,
+{
+    let n = blueprints.len();
+    let mut parts: Vec<P> =
+        blueprints.into_iter().enumerate().map(|(i, b)| build(i, b)).collect();
+    let mut st: SyncState<P::Msg> = SyncState::new(n);
+    for (i, p) in parts.iter_mut().enumerate() {
+        st.peeks[i] = p.peek();
+        st.looks[i] = p.lookahead();
+    }
+    let mut out: Vec<Envelope<P::Msg>> = Vec::new();
+    let mut routed: Vec<(usize, usize, Envelope<P::Msg>)> = Vec::new();
+    let mut digests = vec![0u64; n];
+    while let Some(h) = st.horizon(until) {
+        for (i, p) in parts.iter_mut().enumerate() {
+            for (at, m) in st.inboxes[i].drain(..) {
+                p.absorb(at, m);
+            }
+            out.clear();
+            p.run_window(h, &mut out);
+            for (idx, env) in out.drain(..).enumerate() {
+                routed.push((i, idx, env));
+            }
+            st.peeks[i] = p.peek();
+            digests[i] = p.digest();
+        }
+        st.deliver(&mut routed);
+        let fold = digests.iter().fold(FNV_OFFSET, |h, &d| fnv_mix(h, d));
+        on_window(h, fold);
+    }
+    parts.into_iter().enumerate().map(|(i, p)| finish(i, p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::{Scheduler, SimEvent};
+
+    /// Toy ring: each partition is a typed-event scheduler whose events
+    /// mix into an order-sensitive accumulator and forward a decremented
+    /// hop counter to the next partition `look` later.
+    struct ToyWorld {
+        idx: usize,
+        n: usize,
+        look: SimTime,
+        acc: u64,
+        out: Vec<Envelope<u64>>,
+    }
+
+    struct Hop(u64);
+
+    impl SimEvent<ToyWorld> for Hop {
+        fn fire(self, sch: &mut Scheduler<ToyWorld, Hop>, w: &mut ToyWorld) {
+            w.acc = fnv_mix(w.acc, sch.now() ^ (self.0 << 17) ^ w.idx as u64);
+            if self.0 > 0 {
+                w.out.push(Envelope {
+                    dst: (w.idx + 1) % w.n,
+                    at: sch.now() + w.look,
+                    msg: self.0 - 1,
+                });
+            }
+        }
+    }
+
+    struct ToyPart {
+        sch: Scheduler<ToyWorld, Hop>,
+        w: ToyWorld,
+    }
+
+    impl Partition for ToyPart {
+        type Msg = u64;
+
+        fn peek(&mut self) -> Option<SimTime> {
+            self.sch.peek_next()
+        }
+
+        fn lookahead(&self) -> SimTime {
+            self.w.look
+        }
+
+        fn run_window(&mut self, horizon: SimTime, out: &mut Vec<Envelope<u64>>) {
+            // run_until processes events at <= its bound, the window
+            // contract is at < horizon
+            self.sch.run_until(&mut self.w, horizon - 1);
+            out.append(&mut self.w.out);
+        }
+
+        fn absorb(&mut self, at: SimTime, msg: u64) {
+            self.sch.push_at(at, Hop(msg));
+        }
+
+        fn digest(&mut self) -> u64 {
+            fnv_mix(self.w.acc, self.sch.executed())
+        }
+    }
+
+    fn build_toy(n: usize, look: SimTime) -> impl Fn(usize, u64) -> ToyPart + Sync {
+        move |idx, seed| {
+            let mut sch = Scheduler::new();
+            let w = ToyWorld { idx, n, look, acc: FNV_OFFSET, out: Vec::new() };
+            // a burst of initial hops, times scattered by the seed
+            for k in 0..8u64 {
+                let at = (seed.wrapping_mul(2654435761).wrapping_add(k * 977)) % 5_000;
+                sch.push_at(at, Hop(6 + (k % 3)));
+            }
+            ToyPart { sch, w }
+        }
+    }
+
+    fn run_toy(n: usize, threads: usize, until: SimTime) -> (Vec<(u64, u64)>, Vec<(SimTime, u64)>) {
+        let mut windows = Vec::new();
+        let results = run_partitioned(
+            (0..n as u64).collect::<Vec<_>>(),
+            threads,
+            until,
+            build_toy(n, 120),
+            |_, p: ToyPart| (p.w.acc, p.sch.executed()),
+            |h, d| windows.push((h, d)),
+        );
+        (results, windows)
+    }
+
+    #[test]
+    fn serial_and_threaded_drivers_are_bit_identical() {
+        let (r1, w1) = run_toy(5, 1, 400_000);
+        assert!(!w1.is_empty(), "toy ring must produce windows");
+        assert!(r1.iter().any(|&(_, ex)| ex > 8), "hops must actually chain");
+        for threads in [2, 3, 8] {
+            let (rt, wt) = run_toy(5, threads, 400_000);
+            assert_eq!(r1, rt, "{threads} threads: results diverged");
+            assert_eq!(w1, wt, "{threads} threads: window digests diverged");
+        }
+    }
+
+    #[test]
+    fn horizons_are_monotone_and_make_progress() {
+        let (_, windows) = run_toy(4, 2, 300_000);
+        for pair in windows.windows(2) {
+            assert!(pair[0].0 < pair[1].0, "horizons must strictly advance");
+        }
+    }
+
+    #[test]
+    fn zero_lookahead_reports_are_clamped() {
+        // a partition reporting lookahead 0 must not wedge the driver
+        struct Lazy {
+            sch: Scheduler<ToyWorld, Hop>,
+            w: ToyWorld,
+        }
+        impl Partition for Lazy {
+            type Msg = u64;
+            fn peek(&mut self) -> Option<SimTime> {
+                self.sch.peek_next()
+            }
+            fn lookahead(&self) -> SimTime {
+                0
+            }
+            fn run_window(&mut self, horizon: SimTime, out: &mut Vec<Envelope<u64>>) {
+                self.sch.run_until(&mut self.w, horizon - 1);
+                out.append(&mut self.w.out);
+            }
+            fn absorb(&mut self, at: SimTime, msg: u64) {
+                self.sch.push_at(at, Hop(msg));
+            }
+            fn digest(&mut self) -> u64 {
+                self.w.acc
+            }
+        }
+        let results = run_partitioned(
+            vec![0u64, 1],
+            1,
+            10_000,
+            |idx, _| {
+                let mut sch = Scheduler::new();
+                sch.push_at(5, Hop(3));
+                Lazy {
+                    sch,
+                    w: ToyWorld { idx, n: 2, look: 50, acc: 0, out: Vec::new() },
+                }
+            },
+            |_, p: Lazy| p.sch.executed(),
+            |_, _| {},
+        );
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().sum::<u64>() >= 4, "hops crossed partitions");
+    }
+
+    #[test]
+    fn empty_blueprints_yield_empty_results() {
+        let results: Vec<u64> = run_partitioned(
+            Vec::<u64>::new(),
+            4,
+            1_000,
+            |_, _| unreachable!("no partitions to build"),
+            |_, _p: ToyPart| unreachable!("no partitions to finish"),
+            |_, _| {},
+        );
+        assert!(results.is_empty());
+    }
+}

@@ -91,6 +91,11 @@ pub trait EventQueue<E>: Default {
     /// Earliest pending time. `&mut` because the calendar queue may
     /// reposition events internally (never dropping or reordering any).
     fn peek_time(&mut self) -> Option<SimTime>;
+    /// Earliest pending `(at, seq)` key — what [`EventQueue::pop`] would
+    /// return next. The multi-lane scheduler's k-way merge argmins over
+    /// this, so it must agree with `pop` exactly (pinned by
+    /// `peek_time_matches_next_pop_and_loses_nothing`).
+    fn peek_key(&mut self) -> Option<(SimTime, u64)>;
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.len() == 0
@@ -123,6 +128,10 @@ impl<E> EventQueue<E> for HeapQueue<E> {
 
     fn peek_time(&mut self) -> Option<SimTime> {
         self.heap.peek().map(|e| e.at)
+    }
+
+    fn peek_key(&mut self) -> Option<(SimTime, u64)> {
+        self.heap.peek().map(|e| (e.at, e.seq))
     }
 
     fn len(&self) -> usize {
@@ -302,6 +311,16 @@ impl<E> EventQueue<E> for CalendarQueue<E> {
         self.current.peek().map(|e| e.at)
     }
 
+    fn peek_key(&mut self) -> Option<(SimTime, u64)> {
+        if self.len == 0 {
+            return None;
+        }
+        // `advance` leaves the `current` top as the global minimum
+        // (module docs: determinism argument), so its key IS the pop key
+        self.advance();
+        self.current.peek().map(|e| (e.at, e.seq))
+    }
+
     fn len(&self) -> usize {
         self.len
     }
@@ -407,8 +426,10 @@ mod tests {
         }
         let mut seen = Vec::new();
         while let Some(at) = q.peek_time() {
-            let (pat, _, id) = q.pop().unwrap();
+            let key = q.peek_key().unwrap();
+            let (pat, pseq, id) = q.pop().unwrap();
             assert_eq!(at, pat, "peek disagreed with pop");
+            assert_eq!(key, (pat, pseq), "peek_key disagreed with pop");
             seen.push(id);
         }
         assert_eq!(seen.len(), times.len());

@@ -62,6 +62,7 @@
 //! rolled matcher (DESIGN.md §Substitutions).
 
 use ace::app::fedtrain::{run_fedtrain, run_fedtrain_scenario, run_fedtrain_seeds, FedConfig};
+use ace::app::metro::{run_metro, MetroConfig};
 use ace::app::videoquery::{
     fig5_grid, run_cell, run_scenario, run_sweep, CellConfig, Compute, InferCache, Paradigm,
     ServiceTimes,
@@ -119,6 +120,15 @@ impl Args {
 
     fn has(&self, k: &str) -> bool {
         self.flags.contains_key(k)
+    }
+}
+
+/// Resolve `--partitions` (scheduler lanes / cluster partitions):
+/// absent = `default`, `0` = auto-detect cores like `--workers`.
+fn partitions_flag(args: &Args, default: usize) -> usize {
+    match args.usize_or("partitions", default) {
+        0 => ace::sweep::default_workers(),
+        p => p,
     }
 }
 
@@ -299,6 +309,21 @@ fn print_report(report: &LifecycleReport) {
 /// (deploy/update/fail-node/remove ops driving the live graph).
 fn cmd_svcrun_scenario(args: &Args, path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    // metro scenarios are plain workload configs, not lifecycle
+    // scripts: dispatch on `app: metro` BEFORE the lifecycle parser
+    // (which would reject the missing `ops` block)
+    if ace::yamlite::parse(&text)
+        .ok()
+        .is_some_and(|d| d.get("app").as_str() == Some("metro"))
+    {
+        let mut cfg = MetroConfig::from_yaml(&text)?;
+        cfg.partitions = partitions_flag(args, cfg.partitions.max(1));
+        cfg.threads = match args.usize_or("threads", cfg.partitions) {
+            0 => ace::sweep::default_workers(),
+            t => t,
+        };
+        return run_and_print_metro(&cfg);
+    }
     let scenario = LifecycleScenario::parse(&text)?;
     let app = scenario
         .first_app()
@@ -317,6 +342,7 @@ fn cmd_svcrun_scenario(args: &Args, path: &str) -> Result<()> {
                 seed: args.f64_or("seed", 1.0) as u64,
                 num_ecs: args.usize_or("ecs", 3),
                 cams_per_ec: args.usize_or("cams", 3),
+                partitions: partitions_flag(args, 1),
                 ..Default::default()
             };
             let (svc, compute) = if args.has("real") {
@@ -349,6 +375,7 @@ fn cmd_svcrun_scenario(args: &Args, path: &str) -> Result<()> {
                 wan_delay_ms: args.f64_or("delay", 0.0),
                 seed: args.f64_or("seed", 42.0) as u64,
                 step_ms: args.f64_or("step-ms", 200.0),
+                partitions: partitions_flag(args, 1),
                 ..Default::default()
             };
             let (m, report) = run_fedtrain_scenario(cfg, &scenario)?;
@@ -390,6 +417,7 @@ fn cmd_svcrun(args: &Args) -> Result<()> {
                 seed: args.f64_or("seed", 1.0) as u64,
                 num_ecs: args.usize_or("ecs", 3),
                 cams_per_ec: args.usize_or("cams", 3),
+                partitions: partitions_flag(args, 1),
                 ..Default::default()
             };
             // --real pushes every crop through the compiled HLO
@@ -427,6 +455,7 @@ fn cmd_svcrun(args: &Args) -> Result<()> {
                 wan_delay_ms: args.f64_or("delay", 0.0),
                 seed: args.f64_or("seed", 42.0) as u64,
                 step_ms: args.f64_or("step-ms", 2.0),
+                partitions: partitions_flag(args, 1),
                 ..Default::default()
             };
             let num_seeds = args.usize_or("seeds", 1);
@@ -481,8 +510,68 @@ fn cmd_svcrun(args: &Args) -> Result<()> {
             );
             Ok(())
         }
-        other => bail!("unknown app '{other}' (videoquery|fedtrain)"),
+        "metro" => {
+            let mut cfg = match args.get("preset") {
+                Some(p) => MetroConfig::preset(p)?,
+                None => MetroConfig::default(),
+            };
+            cfg.seed = args.f64_or("seed", cfg.seed as f64) as u64;
+            cfg.ecs = args.usize_or("ecs", cfg.ecs);
+            cfg.duration_s = args.f64_or("seconds", cfg.duration_s);
+            cfg.wan_delay_ms = args.f64_or("delay", cfg.wan_delay_ms);
+            cfg.partitions = partitions_flag(args, cfg.partitions.max(1));
+            cfg.threads = match args.usize_or("threads", cfg.partitions) {
+                0 => ace::sweep::default_workers(),
+                t => t,
+            };
+            run_and_print_metro(&cfg)
+        }
+        other => bail!("unknown app '{other}' (videoquery|fedtrain|metro)"),
     }
+}
+
+/// Shared reporter for `svcrun --app metro` and metro scenario files.
+fn run_and_print_metro(cfg: &MetroConfig) -> Result<()> {
+    let m = run_metro(cfg);
+    println!(
+        "svcgraph/metro: {} ECs x {} nodes x {} cams -> frames={} escalated={} replies={} \
+         mean RTT {:.1}ms BWC {:.2}MB",
+        cfg.ecs,
+        cfg.nodes_per_ec,
+        cfg.cams_per_node,
+        m.frames,
+        m.escalated,
+        m.replies,
+        m.mean_latency_ms,
+        m.wan_bytes as f64 / 1e6,
+    );
+    println!(
+        "metro run: {} DES events over {} conservative windows in {:.2}s wall \
+         ({:.0} ev/s on {} partition(s) x {} thread(s))",
+        m.events, m.windows, m.wall_secs, m.events_per_sec, m.partitions, m.threads,
+    );
+    Ok(())
+}
+
+/// `ace metro-gen`: emit a seeded `scenarios/metro_*.yaml` workload.
+fn cmd_metro_gen(args: &Args) -> Result<()> {
+    let preset = args.get("preset").unwrap_or("small");
+    let mut cfg = MetroConfig::preset(preset)?;
+    cfg.seed = args.f64_or("seed", cfg.seed as f64) as u64;
+    cfg.ecs = args.usize_or("ecs", cfg.ecs);
+    cfg.duration_s = args.f64_or("seconds", cfg.duration_s);
+    let yaml = cfg.to_yaml();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &yaml).with_context(|| format!("writing {path}"))?;
+            println!(
+                "wrote {path} ({preset}: {} ECs x {} nodes x {} cams, seed {})",
+                cfg.ecs, cfg.nodes_per_ec, cfg.cams_per_node, cfg.seed
+            );
+        }
+        None => print!("{yaml}"),
+    }
+    Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -505,6 +594,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let churn_nodes = args.usize_or("churn-nodes", 4);
     let churn_loss = args.f64_or("churn-loss", 0.2);
     let churn_runs = args.usize_or("churn-runs", 10) as u64;
+    let metro_ecs = args.usize_or("metro-ecs", 8);
+    let metro_secs = args.f64_or("metro-seconds", 20.0);
+    // --partitions caps the parallel metro rows (0 = auto cores)
+    let metro_pmax = partitions_flag(args, 8);
 
     let des = benchkit::des_throughput(events);
     let tstorm = benchkit::des_timer_storm(timers, timer_events);
@@ -513,6 +606,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let broker = benchkit::broker_throughput(broker_subs, broker_pubs, retained, replay_subs);
     let hops = benchkit::netfabric_hops(hop_pubs, hop_sinks);
     let churn = benchkit::churn_convergence(churn_nodes, churn_loss, churn_runs);
+    let metro_counts: Vec<usize> = [2usize, 4, 8].into_iter().filter(|&p| p <= metro_pmax).collect();
+    // denser-than-default metro: fast cameras and a long WAN lookahead
+    // give every safe window enough work to amortize the per-window
+    // barrier, so the parallel rows measure scaling rather than sync
+    let metro = benchkit::metro_scale(
+        &ace::app::MetroConfig {
+            ecs: metro_ecs,
+            nodes_per_ec: 8,
+            cams_per_node: 4,
+            cam_period_ms: 10.0,
+            wan_delay_ms: 50.0,
+            duration_s: metro_secs,
+            ..Default::default()
+        },
+        &metro_counts,
+    );
 
     // one measurement pass serves both renderings: the table goes to
     // stderr so `--json` output stays pipeable AND the log stays
@@ -579,6 +688,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
         churn.msgs_lost,
         churn.retries,
         churn.convergence_ms
+    );
+    for r in &metro.rows {
+        eprintln!(
+            "metro scale: {} ECs x {} cams, {:.0} virtual s -> {} events at {} partition(s) \
+             x {} thread(s): {:.0} ev/s{}",
+            metro.ecs,
+            metro.cams,
+            metro.virtual_secs,
+            r.events,
+            r.partitions,
+            r.threads,
+            r.events_per_sec,
+            if r.partitions == 1 { " (serial reference)" } else { "" },
+        );
+    }
+    eprintln!(
+        "metro scale: best parallel {:.0} ev/s at {} partitions vs serial {:.0} ev/s ({:.2}x)",
+        metro.best_events_per_sec,
+        metro.best_partitions,
+        metro.serial_events_per_sec,
+        metro.best_events_per_sec / metro.serial_events_per_sec.max(1.0)
     );
 
     {
@@ -665,6 +795,37 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     ("convergence_ms", num(churn.convergence_ms)),
                     ("retries", Value::Num(churn.retries as f64)),
                     ("msgs_lost", Value::Num(churn.msgs_lost as f64)),
+                ]),
+            ),
+            (
+                "metro_scale",
+                obj(vec![
+                    ("ecs", Value::Num(metro.ecs as f64)),
+                    ("cams", Value::Num(metro.cams as f64)),
+                    ("duration_s", Value::Num(metro.virtual_secs)),
+                    // gated (higher is better): the best parallel rate
+                    ("metro_events_per_sec", num(metro.best_events_per_sec)),
+                    // informational: the serial reference and the full
+                    // scaling curve CI's parallel>serial check reads
+                    ("serial_events_per_sec", num(metro.serial_events_per_sec)),
+                    ("best_partitions", Value::Num(metro.best_partitions as f64)),
+                    (
+                        "rows",
+                        Value::Arr(
+                            metro
+                                .rows
+                                .iter()
+                                .map(|r| {
+                                    obj(vec![
+                                        ("partitions", Value::Num(r.partitions as f64)),
+                                        ("threads", Value::Num(r.threads as f64)),
+                                        ("events", Value::Num(r.events as f64)),
+                                        ("events_per_sec", num(r.events_per_sec)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
         ]);
@@ -836,12 +997,17 @@ COMMANDS:
                [--interval S] [--delay MS] [--seconds N] [--seed S]
   fig5         the full Figure 5 sweep on a   [--fast] [--seconds N] [--out DIR]
                parallel worker pool           [--workers N] [--synthetic]
-  svcrun       an app end-to-end on the       --app videoquery|fedtrain
+  svcrun       an app end-to-end on the       --app videoquery|fedtrain|metro
                generic svcgraph runtime       [--paradigm P] [--interval S]
                                               [--delay MS] [--seconds N]
                                               [--ecs N] [--cams N] [--rounds N]
                                               [--seed S] [--seeds N] [--workers N]
-                                              [--real]
+                                              [--real] [--partitions N]
+               --partitions N: per-cluster    (0 = auto-detect cores;
+               event lanes; for --app metro   trajectories are byte-identical
+               the clusters also RUN in       whatever the partition count)
+               parallel on a worker pool      [--threads N] [--preset P]
+               under conservative windows
                with --scenario FILE: a        [--scenario FILE] [--step-ms MS]
                scripted lifecycle (deploy,
                incremental update, node
@@ -859,7 +1025,9 @@ COMMANDS:
                                               [--hop-sinks N] [--timers N]
                                               [--timer-events N]
                                               [--churn-nodes N] [--churn-loss P]
-                                              [--churn-runs N]
+                                              [--churn-runs N] [--metro-ecs N]
+                                              [--metro-seconds N]
+                                              [--partitions N]
                with --check FILE: exit        [--check BASELINE.json]
                nonzero on throughput          [--tolerance T]
                regressions beyond T (0.25);   [--require-baseline]
@@ -869,6 +1037,9 @@ COMMANDS:
                --require-baseline also
                fails when the baseline has
                no comparable numbers
+  metro-gen    generate a seeded metro        [--preset small|mid|large]
+               workload yaml                  [--seed S] [--ecs N] [--seconds N]
+               (scenarios/metro_*.yaml)       [--out FILE]
   help         this message"
     );
 }
@@ -884,6 +1055,7 @@ fn main() -> Result<()> {
         "fig5" => cmd_fig5(&args),
         "svcrun" => cmd_svcrun(&args),
         "bench" => cmd_bench(&args),
+        "metro-gen" => cmd_metro_gen(&args),
         _ => {
             help();
             Ok(())

@@ -52,9 +52,9 @@ impl NetHints {
         let num_ecs = net.num_ecs();
         for (ci, cluster) in net.clusters.iter().enumerate() {
             let leaf = crate::simnet::cluster_leaf(ci, num_ecs);
-            for (node, nic) in &cluster.nics {
+            for (node, nic) in cluster.iter_nics() {
                 if let Some(mbps) = nic.mbps() {
-                    nic_mbps.entry(leaf.clone()).or_default().insert(node.clone(), mbps);
+                    nic_mbps.entry(leaf.clone()).or_default().insert(node.to_string(), mbps);
                 }
             }
         }

@@ -204,15 +204,28 @@ impl Nic {
     }
 }
 
+/// Slot value meaning "this node has no NIC" — the free fast path.
+/// Callers that cache a node's NIC slot (`svcgraph::Fabric` caches one
+/// per component at bind time) use this sentinel so the per-message
+/// charge is a dense `Vec` index, never a name lookup.
+pub const NO_NIC: u32 = u32::MAX;
+
 /// One cluster's internal network: an optional shared LAN segment
 /// (`None` = free backplane, the degenerate single-node CC) plus the
-/// access links of the nodes that have one. Nodes absent from `nics`
-/// are unconstrained AND uncounted — the flat-model fast path.
+/// access links of the nodes that have one. Nodes without a NIC are
+/// unconstrained AND uncounted — the flat-model fast path.
+///
+/// NICs live in a dense slab (`Vec<Nic>`) with a name → slot map used
+/// only on admin paths (bind, `degrade-nic`, reports); the per-message
+/// charge methods index the slab directly (PR 8: the routing hot path
+/// must not hash or compare strings).
 #[derive(Debug, Clone, Default)]
 pub struct ClusterNet {
     pub lan: Option<Link>,
-    /// node leaf name → NIC.
-    pub nics: BTreeMap<String, Nic>,
+    /// Dense NIC storage; a slot is never reused for another node.
+    nics: Vec<Nic>,
+    /// node leaf name → slot into `nics` (admin-path only).
+    by_node: BTreeMap<String, u32>,
 }
 
 impl ClusterNet {
@@ -220,8 +233,59 @@ impl ClusterNet {
     pub fn segment(name: String, mbps: Option<f64>, delay: SimTime) -> Self {
         ClusterNet {
             lan: mbps.map(|m| Link::mbps(name, m, delay as f64)),
-            nics: BTreeMap::new(),
+            nics: Vec::new(),
+            by_node: BTreeMap::new(),
         }
+    }
+
+    /// Slot of `node`'s NIC, or `None` when the node has none.
+    pub fn nic_slot(&self, node: &str) -> Option<u32> {
+        self.by_node.get(node).copied()
+    }
+
+    /// NIC at `slot` (`NO_NIC` or out-of-range = none).
+    pub fn nic_at(&self, slot: u32) -> Option<&Nic> {
+        self.nics.get(slot as usize)
+    }
+
+    fn nic_at_mut(&mut self, slot: u32) -> Option<&mut Nic> {
+        self.nics.get_mut(slot as usize)
+    }
+
+    /// Insert or replace `node`'s NIC, returning its slot.
+    pub fn upsert_nic(&mut self, node: &str, nic: Nic) -> u32 {
+        match self.by_node.get(node) {
+            Some(&slot) => {
+                self.nics[slot as usize] = nic;
+                slot
+            }
+            None => {
+                let slot = self.nics.len() as u32;
+                assert!(slot != NO_NIC, "NIC slab exhausted");
+                self.nics.push(nic);
+                self.by_node.insert(node.to_string(), slot);
+                slot
+            }
+        }
+    }
+
+    /// Get-or-create `node`'s NIC (the `degrade-nic` path), returning
+    /// a mutable reference.
+    fn nic_entry(&mut self, node: &str, make: impl FnOnce() -> Nic) -> &mut Nic {
+        let slot = match self.by_node.get(node) {
+            Some(&slot) => slot,
+            None => self.upsert_nic(node, make()),
+        };
+        &mut self.nics[slot as usize]
+    }
+
+    /// All NICs in node-name order (deterministic reports).
+    pub fn iter_nics(&self) -> impl Iterator<Item = (&str, &Nic)> {
+        self.by_node.iter().map(|(name, &slot)| (name.as_str(), &self.nics[slot as usize]))
+    }
+
+    fn iter_nics_mut(&mut self) -> impl Iterator<Item = &mut Nic> {
+        self.nics.iter_mut()
     }
 }
 
@@ -524,7 +588,7 @@ impl NetFabric {
             } else {
                 Nic::unlimited(name)
             };
-            fab.clusters[ci].nics.insert(spec.node.clone(), nic);
+            fab.clusters[ci].upsert_nic(&spec.node, nic);
         }
         fab
     }
@@ -546,7 +610,19 @@ impl NetFabric {
 
     /// Node `node`'s NIC in cluster `ci`, if it has one.
     pub fn nic(&self, ci: usize, node: &str) -> Option<&Nic> {
-        self.clusters.get(ci).and_then(|c| c.nics.get(node))
+        self.clusters
+            .get(ci)
+            .and_then(|c| c.nic_slot(node).and_then(|s| c.nic_at(s)))
+    }
+
+    /// Slot of `node`'s NIC in cluster `ci` — [`NO_NIC`] when the node
+    /// has none (or the cluster is out of shape). Resolve once at bind
+    /// time, then charge through the `*_slot` methods.
+    pub fn nic_slot(&self, ci: usize, node: &str) -> u32 {
+        self.clusters
+            .get(ci)
+            .and_then(|c| c.nic_slot(node))
+            .unwrap_or(NO_NIC)
     }
 
     /// Any bandwidth-constrained NIC anywhere? False = the flat
@@ -557,15 +633,43 @@ impl NetFabric {
     pub fn has_constrained_nics(&self) -> bool {
         self.clusters
             .iter()
-            .any(|c| c.nics.values().any(|n| !n.unlimited))
+            .any(|c| c.iter_nics().any(|(_, n)| !n.unlimited))
     }
 
     /// Charge `node`'s NIC at `now`; nodes without one are free.
     fn nic_send(&mut self, ci: usize, node: &str, now: SimTime, bytes: u64) -> SimTime {
-        match self.clusters[ci].nics.get_mut(node) {
+        let slot = self.clusters[ci].nic_slot(node).unwrap_or(NO_NIC);
+        self.nic_send_slot(ci, slot, now, bytes)
+    }
+
+    /// Charge the NIC in `slot` of cluster `ci` at `now`; [`NO_NIC`]
+    /// is free. The dense-index twin of [`NetFabric::egress`] /
+    /// [`NetFabric::ingress`] name lookups — the per-message hot path.
+    fn nic_send_slot(&mut self, ci: usize, slot: u32, now: SimTime, bytes: u64) -> SimTime {
+        match self.clusters[ci].nic_at_mut(slot) {
             Some(nic) => nic.send(now, bytes),
             None => now,
         }
+    }
+
+    /// Slot-indexed [`NetFabric::egress`]: src NIC only.
+    pub fn egress_slot(&mut self, ci: usize, slot: u32, now: SimTime, bytes: u64) -> SimTime {
+        self.nic_send_slot(ci, slot, now, bytes)
+    }
+
+    /// Slot-indexed [`NetFabric::lan_hop`]: cluster LAN, then the
+    /// receiver's NIC.
+    pub fn lan_hop_slot(&mut self, ci: usize, slot: u32, at: SimTime, bytes: u64) -> SimTime {
+        let t = match &mut self.clusters[ci].lan {
+            Some(lan) => lan.send(at, bytes),
+            None => at,
+        };
+        self.nic_send_slot(ci, slot, t, bytes)
+    }
+
+    /// Slot-indexed [`NetFabric::ingress`]: dst NIC only.
+    pub fn ingress_slot(&mut self, ci: usize, slot: u32, now: SimTime, bytes: u64) -> SimTime {
+        self.nic_send_slot(ci, slot, now, bytes)
     }
 
     /// The egress leg of a publish leaving its node: src NIC only.
@@ -582,11 +686,8 @@ impl NetFabric {
     /// the receiver's NIC, each leg a FIFO queue starting where the
     /// previous one delivered.
     pub fn lan_hop(&mut self, ci: usize, dst: &str, at: SimTime, bytes: u64) -> SimTime {
-        let t = match &mut self.clusters[ci].lan {
-            Some(lan) => lan.send(at, bytes),
-            None => at,
-        };
-        self.nic_send(ci, dst, t, bytes)
+        let slot = self.clusters[ci].nic_slot(dst).unwrap_or(NO_NIC);
+        self.lan_hop_slot(ci, slot, at, bytes)
     }
 
     /// A complete same-cluster cross-node hop (src NIC → LAN → dst
@@ -719,10 +820,7 @@ impl NetFabric {
             }
         };
         let name = format!("nic-{cluster}-{node}");
-        let nic = self.clusters[ci]
-            .nics
-            .entry(node.to_string())
-            .or_insert_with(|| Nic::unlimited(name));
+        let nic = self.clusters[ci].nic_entry(node, || Nic::unlimited(name));
         if mbps.is_finite() && mbps > 0.0 {
             nic.unlimited = false;
             nic.link.set_bw_bps((mbps * 1e6) as u64);
@@ -761,21 +859,21 @@ impl NetFabric {
             if let Some(lan) = &mut c.lan {
                 lan.reset();
             }
-            for nic in c.nics.values_mut() {
+            for nic in c.iter_nics_mut() {
                 nic.link.reset();
             }
         }
     }
 
     /// Per-NIC traffic/occupancy report — one [`LinkUtil`] per
-    /// configured NIC, cluster order then node order (BTreeMap), so
-    /// the listing is deterministic. Unlimited NICs report their byte
+    /// configured NIC, cluster order then node-name order, so the
+    /// listing is deterministic. Unlimited NICs report their byte
     /// counters with zero busy time.
     pub fn nic_utilization(&self) -> Vec<LinkUtil> {
         let num_ecs = self.num_ecs();
         let mut out = Vec::new();
         for (ci, c) in self.clusters.iter().enumerate() {
-            for (node, nic) in &c.nics {
+            for (node, nic) in c.iter_nics() {
                 out.push(LinkUtil {
                     cluster: cluster_leaf(ci, num_ecs),
                     node: node.clone(),

@@ -625,10 +625,15 @@ fn apply_op(st: &Rc<PlaneState>, sch: &mut SvcScheduler, w: &mut SvcWorld, op: L
         LifecycleOp::DegradeNic { cluster, node, mbps } => {
             let now = sch.now();
             match w.fabric.net.degrade_nic(&cluster, &node, mbps) {
-                Ok(()) => st.report.borrow_mut().log(
-                    now,
-                    format!("FAULT injected: NIC {cluster}/{node} reshaped to {mbps} Mbps"),
-                ),
+                Ok(()) => {
+                    // the op may have CREATED a NIC for a previously
+                    // unshaped node: re-resolve the cached slots
+                    w.fabric.refresh_nic_slots();
+                    st.report.borrow_mut().log(
+                        now,
+                        format!("FAULT injected: NIC {cluster}/{node} reshaped to {mbps} Mbps"),
+                    )
+                }
                 Err(e) => st.report.borrow_mut().log(now, format!("ERROR {e}")),
             }
         }

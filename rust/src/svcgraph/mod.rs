@@ -171,11 +171,54 @@ pub trait Component {
     fn on_timer(&mut self, _ctx: &mut Ctx, _token: u64) {}
 }
 
-fn cidx(c: ClusterRef, num_ecs: usize) -> usize {
+/// Dense bus index of a cluster: ECs `0..num_ecs-1`, then the CC.
+/// The same index orders the per-cluster subscription tries, the
+/// scheduler lanes, and a shard view's `owned` flags.
+pub fn cidx(c: ClusterRef, num_ecs: usize) -> usize {
     match c {
         ClusterRef::Ec(k) => k,
         ClusterRef::Cc => num_ecs,
     }
+}
+
+/// Encodes a payload for a thread boundary: a `Send` re-encoding of
+/// the concrete body (typically a clone of the app's payload struct),
+/// or `None` when the type is not meant to cross shards.
+pub type ShardCodec = Box<dyn Fn(&Rc<dyn Any>) -> Option<Box<dyn Any + Send>>>;
+
+/// A message crossing a shard boundary under the conservative parallel
+/// driver (DESIGN.md §Parallel-DES). Everything here is `Send`: the
+/// payload was re-encoded by the shard's [`ShardCodec`], and the topic
+/// travels as a plain string to be re-interned into the destination
+/// shard's own symbol table (each shard keeps its own interner and
+/// routing scratch — nothing `Rc`-shaped leaks across threads).
+pub struct BridgeMsg {
+    /// Cluster the message first entered (loop prevention).
+    pub origin: ClusterRef,
+    /// Destination cluster — owned by the receiving shard.
+    pub to: ClusterRef,
+    /// Topic name (re-interned on absorb).
+    pub topic: String,
+    /// Bytes charged to the links this message still has to cross.
+    pub wire_bytes: u64,
+    /// Delivery time at the shard boundary: the WAN leg is already
+    /// charged by the exporting shard, so `at >= export_now + WAN
+    /// delay` — the lookahead the conservative horizon relies on.
+    pub at: SimTime,
+    /// Re-encoded payload.
+    pub body: Box<dyn Any + Send>,
+}
+
+/// Shard view of a fabric: which clusters THIS runtime owns, plus the
+/// outbox bridge copies bound for un-owned clusters leave through.
+/// Every simnet link is charged by exactly one shard — each EC shard
+/// owns its uplink, the CC shard owns the backbone LAN and every
+/// downlink — so link state never diverges between shards.
+struct ShardView {
+    /// Indexed like `cidx`: ECs 0..num_ecs-1, then the CC.
+    owned: Vec<bool>,
+    codec: ShardCodec,
+    outbox: Vec<BridgeMsg>,
 }
 
 /// The transport fabric: per-cluster subscription tables, bridge rules,
@@ -193,6 +236,13 @@ pub struct Fabric {
     /// cluster), so bridge matching is trie-indexed too.
     bridge_subs: Vec<TopicTrie<ClusterRef>>,
     sites: Vec<Site>,
+    /// Each component's access-link slot in its cluster's NIC slab,
+    /// parallel to `sites` ([`crate::simnet::NO_NIC`] when the node has
+    /// no modelled NIC). Resolved once at bind time so the per-message
+    /// hot path charges links by dense index, never by name lookup.
+    /// Slots are append-only; [`Fabric::refresh_nic_slots`] re-resolves
+    /// after an admin op creates a NIC mid-run.
+    nic_slots: Vec<u32>,
     /// Per-component subscription filters, parallel to `sites` — kept
     /// so [`SvcWorld::retire`] can unindex exactly the retired
     /// component's trie entries (cleared on retirement).
@@ -215,6 +265,8 @@ pub struct Fabric {
     /// Messages forwarded over the EC→CC / CC→EC bridges.
     pub bridged_up: u64,
     pub bridged_down: u64,
+    /// `Some` when this fabric is one shard of a partitioned run.
+    shard: Option<ShardView>,
 }
 
 impl Fabric {
@@ -265,6 +317,10 @@ impl Fabric {
         // swapped out of `self` so the loop bodies can charge links
         // through `&mut self` (and a re-entrant route could not alias
         // them); they go back afterwards, keeping their capacity.
+        // `from_site == Some` only on the publish path, where
+        // `msg.from` is the live publishing component — its cached NIC
+        // slot is the sender's access link (no name lookup)
+        let src_slot = if from_site.is_some() { self.nic_slots[msg.from] } else { crate::simnet::NO_NIC };
         let mut targets = std::mem::take(&mut self.target_scratch);
         self.subs[ci].collect_matches_into_syms(&msg.syms, &mut targets);
         for &(_, target) in &targets {
@@ -273,7 +329,7 @@ impl Fabric {
                 // service: only the receiver's access link is charged,
                 // and no fault verdict is consulted — the bridged copy
                 // already survived (or didn't) its WAN link's process
-                None => self.net.ingress(ci, &self.sites[target].node, now, msg.wire_bytes),
+                None => self.net.ingress_slot(ci, self.nic_slots[target], now, msg.wire_bytes),
                 Some(f) => {
                     if self.sites[target].node == f.node {
                         now // node-internal hand-off: never faulted
@@ -283,20 +339,24 @@ impl Fabric {
                         let at = match src_at {
                             Some(t) => t,
                             None => {
-                                let t = self.net.egress(ci, &f.node, now, msg.wire_bytes);
+                                let t = self.net.egress_slot(ci, src_slot, now, msg.wire_bytes);
                                 src_at = Some(t);
                                 t
                             }
                         };
-                        let d =
-                            self.net.lan_hop(ci, &self.sites[target].node, at, msg.wire_bytes);
+                        let d = self.net.lan_hop_slot(
+                            ci,
+                            self.nic_slots[target],
+                            at,
+                            msg.wire_bytes,
+                        );
                         // per-delivery fault verdict on the cluster
                         // segment (the link charged either way: a lost
                         // frame still occupied the medium)
                         match self.net.lan_verdict(ci, at) {
                             Verdict::Drop => continue,
                             Verdict::Duplicate => {
-                                sch.push_at(d, Event::Msg { target, msg: msg.clone() });
+                                sch.push_at_lane(ci, d, Event::Msg { target, msg: msg.clone() });
                             }
                             Verdict::Deliver => {}
                         }
@@ -304,8 +364,11 @@ impl Fabric {
                     }
                 }
             };
-            // typed by-value event: Rc refcount bumps, no Box
-            sch.push_at(arrival, Event::Msg { target, msg: msg.clone() });
+            // typed by-value event: Rc refcount bumps, no Box. Lane =
+            // the target's cluster — deliveries never leave the bus
+            // they were routed on (merged lanes pop in identical
+            // global (at, seq) order; sharded runs own one lane each)
+            sch.push_at_lane(ci, arrival, Event::Msg { target, msg: msg.clone() });
         }
         self.target_scratch = targets;
         // bridge rules are indexed per FROM-cluster, so only this
@@ -318,13 +381,20 @@ impl Fabric {
             }
             let at = match (src_at, from_site) {
                 (Some(t), _) => t,
-                (None, Some(f)) => {
-                    let t = self.net.egress(ci, &f.node, now, msg.wire_bytes);
+                (None, Some(_)) => {
+                    let t = self.net.egress_slot(ci, src_slot, now, msg.wire_bytes);
                     src_at = Some(t);
                     t
                 }
                 (None, None) => now,
             };
+            // A shard exports bridge copies bound for clusters it does
+            // not own instead of scheduling them locally; it still
+            // charges (and rules on) exactly the links it owns.
+            let foreign = self
+                .shard
+                .as_ref()
+                .is_some_and(|s| !s.owned[cidx(to, self.num_ecs)]);
             let (arrival, verdict) = match (cluster, to) {
                 (ClusterRef::Ec(k), ClusterRef::Cc) => {
                     self.bridged_up += 1;
@@ -332,32 +402,116 @@ impl Fabric {
                     // sits on the CC's segment, so bridged traffic
                     // crosses it to reach the CC message service (free
                     // when the CC LAN is unmodelled — the degenerate
-                    // config is unchanged)
+                    // config is unchanged). Under sharding the backbone
+                    // LAN belongs to the CC shard: the importer charges
+                    // it at absorb time instead.
                     let t = self.net.wan_up(k, at, msg.wire_bytes);
-                    (self.net.gateway_hop(t, msg.wire_bytes), self.net.up_verdict(k, at))
+                    let v = self.net.up_verdict(k, at);
+                    let t = if foreign { t } else { self.net.gateway_hop(t, msg.wire_bytes) };
+                    (t, v)
                 }
                 (ClusterRef::Cc, ClusterRef::Ec(k)) => {
                     self.bridged_down += 1;
                     // CC backbone LAN out to the border router first,
-                    // then the downlink
+                    // then the downlink — both CC-owned, so the export
+                    // time is the final delivery time
                     let t = self.net.gateway_hop(at, msg.wire_bytes);
                     (self.net.wan_down(k, t, msg.wire_bytes), self.net.down_verdict(k, at))
                 }
                 // EC↔EC bridges have no modelled WAN link: the egress
                 // leg (already paid) is the whole cost, and there is no
-                // named link to carry a fault process
-                _ => (at, Verdict::Deliver),
+                // named link to carry a fault process. Zero WAN delay
+                // means zero lookahead — a shard boundary must never
+                // cut one (DESIGN.md §Parallel-DES).
+                _ => {
+                    assert!(!foreign, "EC–EC bridge rule crosses a shard boundary");
+                    (at, Verdict::Deliver)
+                }
             };
+            if foreign {
+                let copies = match verdict {
+                    Verdict::Drop => 0,
+                    Verdict::Deliver => 1,
+                    Verdict::Duplicate => 2,
+                };
+                let shard = self.shard.as_mut().expect("foreign implies a shard view");
+                for _ in 0..copies {
+                    let body = (shard.codec)(&msg.body).unwrap_or_else(|| {
+                        panic!("shard codec cannot encode payload on '{}'", msg.topic)
+                    });
+                    shard.outbox.push(BridgeMsg {
+                        origin,
+                        to,
+                        topic: msg.topic.to_string(),
+                        wire_bytes: msg.wire_bytes,
+                        at: arrival,
+                        body,
+                    });
+                }
+                continue;
+            }
             match verdict {
                 Verdict::Drop => continue,
                 Verdict::Duplicate => {
-                    sch.push_at(arrival, Event::Bridge { origin, to, msg: msg.clone() });
+                    let lane = cidx(to, self.num_ecs);
+                    sch.push_at_lane(lane, arrival, Event::Bridge { origin, to, msg: msg.clone() });
                 }
                 Verdict::Deliver => {}
             }
-            sch.push_at(arrival, Event::Bridge { origin, to, msg: msg.clone() });
+            let lane = cidx(to, self.num_ecs);
+            sch.push_at_lane(lane, arrival, Event::Bridge { origin, to, msg: msg.clone() });
         }
         self.bridge_scratch = rules;
+    }
+
+    /// Restrict this fabric to the clusters marked `true` in `owned`
+    /// (indexed like the busses: ECs `0..num_ecs-1`, then the CC).
+    /// From here on, bridge copies bound for un-owned clusters are
+    /// re-encoded through `codec` and collected in the shard outbox
+    /// ([`Fabric::take_shard_outbox`]) instead of being scheduled.
+    pub fn set_shard(&mut self, owned: Vec<bool>, codec: ShardCodec) {
+        assert_eq!(owned.len(), self.num_ecs + 1, "one owned flag per cluster");
+        self.shard = Some(ShardView { owned, codec, outbox: Vec::new() });
+    }
+
+    /// Drain the bridge copies that left this shard since the last
+    /// call (export order — deterministic, route-generation order).
+    pub fn take_shard_outbox(&mut self) -> Vec<BridgeMsg> {
+        match &mut self.shard {
+            Some(s) => std::mem::take(&mut s.outbox),
+            None => Vec::new(),
+        }
+    }
+
+    /// Absorb a bridge message exported by another shard: charge the
+    /// legs THIS shard owns (the CC backbone LAN on the EC→CC path —
+    /// deferred by the exporter), re-intern the topic into this
+    /// shard's own table, and schedule the bridge re-entry.
+    pub fn absorb_bridge(&mut self, sch: &mut SvcScheduler, bm: BridgeMsg) {
+        let arrival = match bm.to {
+            ClusterRef::Cc => self.net.gateway_hop(bm.at, bm.wire_bytes),
+            ClusterRef::Ec(_) => bm.at,
+        };
+        let (topic, syms) = self.intern(&bm.topic);
+        let body: Box<dyn Any> = bm.body;
+        let msg = GraphMsg {
+            topic,
+            syms,
+            from: usize::MAX,
+            wire_bytes: bm.wire_bytes,
+            body: Rc::from(body),
+        };
+        let lane = cidx(bm.to, self.num_ecs);
+        sch.push_at_lane(lane, arrival, Event::Bridge { origin: bm.origin, to: bm.to, msg });
+    }
+
+    /// Re-resolve every component's cached access-link slot. Slots are
+    /// append-only, so this is only needed after an admin op CREATES a
+    /// NIC mid-run (`degrade_nic` on a previously unshaped node).
+    pub fn refresh_nic_slots(&mut self) {
+        for (i, site) in self.sites.iter().enumerate() {
+            self.nic_slots[i] = self.net.nic_slot(cidx(site.cluster, self.num_ecs), &site.node);
+        }
     }
 
     /// Bytes bridged across the WAN so far (both directions) — reads
@@ -431,6 +585,9 @@ impl SvcWorld {
             subs[ci].insert(table, filter, idx);
         }
         self.fabric.sub_filters.push(filters);
+        // resolve the node's access-link slot once; `route` charges by
+        // dense index from here on
+        self.fabric.nic_slots.push(self.fabric.net.nic_slot(ci, &site.node));
         self.fabric.sites.push(site);
         self.comps.push(Some(comp));
         idx
@@ -443,8 +600,9 @@ impl SvcWorld {
     /// subscribers' delivery order — and therefore their `(at, seq)`
     /// trajectories — are untouched.
     pub fn spawn(&mut self, sch: &mut SvcScheduler, site: Site, comp: Box<dyn Component>) -> usize {
+        let lane = cidx(site.cluster, self.fabric.num_ecs);
         let idx = self.bind(site, comp);
-        sch.push_at(sch.now(), Event::Start { target: idx });
+        sch.push_at_lane(lane, sch.now(), Event::Start { target: idx });
         idx
     }
 
@@ -536,8 +694,9 @@ impl Ctx<'_> {
 
     /// Fire `on_timer(token)` on this component after `delay` µs.
     pub fn set_timer(&mut self, delay: SimTime, token: u64) {
+        let lane = cidx(self.fabric.sites[self.self_idx].cluster, self.fabric.num_ecs);
         self.sch
-            .push_after(delay, Event::Timer { target: self.self_idx, token });
+            .push_after_lane(lane, delay, Event::Timer { target: self.self_idx, token });
     }
 
     /// Schedule a raw closure over the whole world after `delay` µs —
@@ -573,6 +732,16 @@ impl GraphRuntime {
     /// cluster + WAN pairs to the CC), with the standard bridge rules
     /// of §4.3.2: `cloud/#` EC→CC and `edge/ec<k>/#` CC→EC k.
     pub fn new(net: NetFabric) -> Self {
+        Self::with_lanes(net, 1)
+    }
+
+    /// Like [`GraphRuntime::new`] but with `lanes` per-cluster event
+    /// lanes in the scheduler. Events are laned by destination cluster
+    /// (`cidx` modulo the lane count); the sequential k-way merge pops
+    /// in global `(at, seq)` order, so every trajectory is
+    /// byte-identical whatever the lane count — this is what lets the
+    /// lifecycle goldens replay exactly under `--partitions 2/4`.
+    pub fn with_lanes(net: NetFabric, lanes: usize) -> Self {
         let num_ecs = net.num_ecs();
         let mut table = SymbolTable::new();
         let mut bridge_subs: Vec<TopicTrie<ClusterRef>> =
@@ -601,13 +770,15 @@ impl GraphRuntime {
                     sub_filters: Vec::new(),
                     table,
                     topics: HashMap::new(),
+                    nic_slots: Vec::new(),
                     target_scratch: Vec::new(),
                     bridge_scratch: Vec::new(),
                     bridged_up: 0,
                     bridged_down: 0,
+                    shard: None,
                 },
             },
-            sch: Scheduler::new(),
+            sch: Scheduler::with_lanes(lanes),
             started: false,
         }
     }
@@ -666,7 +837,8 @@ impl GraphRuntime {
         }
         self.started = true;
         for idx in 0..self.world.comps.len() {
-            self.sch.push_at(0, Event::Start { target: idx });
+            let lane = cidx(self.world.fabric.sites[idx].cluster, self.world.fabric.num_ecs);
+            self.sch.push_at_lane(lane, 0, Event::Start { target: idx });
         }
     }
 
@@ -686,6 +858,30 @@ impl GraphRuntime {
     /// Current virtual time (µs).
     pub fn now(&self) -> SimTime {
         self.sch.now()
+    }
+
+    /// Earliest pending event time, starting components first — the
+    /// conservative driver's per-partition `peek`.
+    pub fn peek_next(&mut self) -> Option<SimTime> {
+        self.start();
+        self.sch.peek_next()
+    }
+
+    /// Turn this runtime into one shard of a partitioned run (see
+    /// [`Fabric::set_shard`]).
+    pub fn set_shard(&mut self, owned: Vec<bool>, codec: ShardCodec) {
+        self.world.fabric.set_shard(owned, codec);
+    }
+
+    /// Drain bridge messages exported since the last call.
+    pub fn take_shard_outbox(&mut self) -> Vec<BridgeMsg> {
+        self.world.fabric.take_shard_outbox()
+    }
+
+    /// Absorb a bridge message exported by another shard (see
+    /// [`Fabric::absorb_bridge`]).
+    pub fn absorb_bridge(&mut self, bm: BridgeMsg) {
+        self.world.fabric.absorb_bridge(&mut self.sch, bm);
     }
 
     /// Total DES events executed so far.
@@ -1161,6 +1357,96 @@ mod tests {
         let churned = run(true);
         assert!(!quiet.is_empty());
         assert_eq!(quiet, churned, "untouched trajectory must be identical");
+    }
+
+    #[test]
+    fn lane_count_never_changes_a_trajectory() {
+        // the merged-lane exactness property behind the partitioned
+        // golden replays: deliveries pop in global (at, seq) order
+        // whatever the lane count
+        let run = |lanes: usize| {
+            let mut r = GraphRuntime::with_lanes(
+                NetFabric::new(&NetConfig {
+                    num_ecs: 2,
+                    wan_delay: millis(20.0),
+                    ..Default::default()
+                }),
+                lanes,
+            );
+            let log = Rc::new(RefCell::new(Vec::new()));
+            r.add(
+                site(ClusterRef::Cc, "gpu-ws"),
+                Box::new(Probe { filters: vec!["cloud/#".into()], log: log.clone() }),
+            );
+            r.add(
+                site(ClusterRef::Ec(0), "rpi1"),
+                Box::new(Probe { filters: vec!["a/#".into()], log: log.clone() }),
+            );
+            r.add(
+                site(ClusterRef::Ec(0), "rpi2"),
+                Box::new(Pulser { topic: "a/x".into(), period: 700, horizon: 50_000 }),
+            );
+            r.add(
+                site(ClusterRef::Ec(1), "rpi1"),
+                Box::new(Pulser { topic: "cloud/m".into(), period: 1100, horizon: 50_000 }),
+            );
+            r.run(1_000_000);
+            log.borrow().clone()
+        };
+        let one = run(1);
+        assert!(!one.is_empty());
+        for lanes in 2..=4 {
+            assert_eq!(one, run(lanes), "trajectory must not depend on lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn shard_export_and_absorb_match_the_serial_bridge() {
+        // serial reference: EC 1 → CC over the uplink in one runtime
+        let mut s = rt(50.0);
+        let slog = Rc::new(RefCell::new(Vec::new()));
+        s.add(
+            site(ClusterRef::Cc, "gpu-ws"),
+            Box::new(Probe { filters: vec!["cloud/#".into()], log: slog.clone() }),
+        );
+        s.add(
+            site(ClusterRef::Ec(1), "rpi1"),
+            Box::new(Shot { topic: "cloud/up".into(), bytes: 2_500 }),
+        );
+        s.run(1000);
+        assert_eq!(slog.borrow().len(), 1);
+
+        // sharded: the EC shard exports after charging its own uplink;
+        // the CC shard absorbs (gateway hop is free here) and delivers
+        let cfg = NetConfig { num_ecs: 2, wan_delay: millis(50.0), ..Default::default() };
+        let unit_codec = || -> ShardCodec {
+            Box::new(|b| b.downcast_ref::<()>().map(|_| Box::new(()) as Box<dyn Any + Send>))
+        };
+        let mut ec = GraphRuntime::new(NetFabric::new(&cfg));
+        ec.set_shard(vec![true, true, false], unit_codec());
+        ec.add(
+            site(ClusterRef::Ec(1), "rpi1"),
+            Box::new(Shot { topic: "cloud/up".into(), bytes: 2_500 }),
+        );
+        let mut cc = GraphRuntime::new(NetFabric::new(&cfg));
+        cc.set_shard(vec![false, false, true], unit_codec());
+        let clog = Rc::new(RefCell::new(Vec::new()));
+        cc.add(
+            site(ClusterRef::Cc, "gpu-ws"),
+            Box::new(Probe { filters: vec!["cloud/#".into()], log: clog.clone() }),
+        );
+        assert_eq!(ec.peek_next(), Some(0));
+        ec.run_until(10);
+        let out = ec.take_shard_outbox();
+        assert_eq!(out.len(), 1, "the bridge copy must leave through the outbox");
+        assert_eq!(ec.fabric().bridged_up, 1);
+        assert_eq!(ec.net().wan_bytes(), 2_500, "the exporter charges its own uplink");
+        for bm in out {
+            assert_eq!(bm.at, 51_000, "exported at the WAN delivery time");
+            cc.absorb_bridge(bm);
+        }
+        cc.run_until(60_000);
+        assert_eq!(*clog.borrow(), *slog.borrow(), "sharded arrival must match serial");
     }
 
     #[test]

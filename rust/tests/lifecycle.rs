@@ -226,6 +226,63 @@ fn videoquery_survives_fail_rejoin_rebalance_under_loss() {
     assert_eq!(r1.convergence_us, r2.convergence_us);
 }
 
+/// Acceptance for the laned scheduler (DESIGN.md §Parallel-DES): the
+/// sequential k-way merge pops in global `(at, seq)` order whatever
+/// the lane count, so `--partitions 2/4` replays BOTH apps' lifecycle
+/// goldens byte for byte — audit trail, metrics, and chaos included.
+#[test]
+fn lifecycle_goldens_replay_byte_for_byte_under_partitioned_lanes() {
+    let (m1, r1) = run_vq();
+    let base = outcome_hash(&m1, &r1);
+    let scenario = LifecycleScenario::parse(VIDEOQUERY_SCENARIO).unwrap();
+    let churn = LifecycleScenario::parse(VIDEOQUERY_CHURN).unwrap();
+    let (mc1, rc1) = run_vq_churn();
+    let churn_base = outcome_hash(&mc1, &rc1);
+    for partitions in [2, 4] {
+        let out = run_scenario(
+            CellConfig { partitions, ..vq_cfg() },
+            ServiceTimes::synthetic(),
+            Compute::Synthetic { target_bias: 0.05 },
+            &scenario,
+        )
+        .unwrap();
+        assert_eq!(
+            base,
+            outcome_hash(&out.metrics, &out.report),
+            "--partitions {partitions}: videoquery lifecycle golden diverged"
+        );
+        assert_eq!(r1.events, out.report.events);
+
+        // the seeded-chaos trajectory too: fault draws ride the same
+        // merged event order, so loss/dup land on identical messages
+        let out = run_scenario(
+            CellConfig { partitions, ..vq_cfg() },
+            ServiceTimes::synthetic(),
+            Compute::Synthetic { target_bias: 0.05 },
+            &churn,
+        )
+        .unwrap();
+        assert_eq!(
+            churn_base,
+            outcome_hash(&out.metrics, &out.report),
+            "--partitions {partitions}: videoquery chaos golden diverged"
+        );
+    }
+
+    let (mf, rf) = run_fedtrain_scenario(fed_cfg(), &fed_scenario()).unwrap();
+    for partitions in [2, 4] {
+        let (m2, r2) =
+            run_fedtrain_scenario(FedConfig { partitions, ..fed_cfg() }, &fed_scenario()).unwrap();
+        assert_eq!(
+            rf.hash(),
+            r2.hash(),
+            "--partitions {partitions}: fedtrain audit trail diverged"
+        );
+        assert_eq!(mf.final_accuracy.to_bits(), m2.final_accuracy.to_bits());
+        assert_eq!(mf.rounds.len(), m2.rounds.len());
+    }
+}
+
 fn fed_topo(replicas: usize, version: u64) -> Topology {
     Topology::parse(&format!(
         "

@@ -1,0 +1,142 @@
+//! Acceptance for the conservative parallel DES (DESIGN.md
+//! §Parallel-DES) at system scale: the serial and threaded drivers
+//! must be BIT-IDENTICAL over the metro workload — every safe-window
+//! digest, every final metric — across 200 randomized topologies, and
+//! the application's outcome must not depend on how many partitions
+//! the clusters are cut into.
+//!
+//! (The toy-ring driver property lives in `des::par::tests`; the
+//! lifecycle goldens under laned schedulers in `tests/lifecycle.rs`.)
+
+use ace::app::metro::{run_metro, run_metro_with, MetroConfig};
+use ace::util::prng;
+
+/// Derandomized config family: every knob drawn from the case index,
+/// spanning cluster counts, shapes, loads, and WAN delays.
+fn case(i: u64) -> MetroConfig {
+    // range_at draws from [lo, hi)
+    let r = |k: u64, lo: i64, hi: i64| prng::range_at(0xACE0 + i, k, lo, hi) as u64;
+    MetroConfig {
+        seed: prng::u64_at(0xACE1, i),
+        ecs: r(1, 2, 7) as usize,
+        nodes_per_ec: r(2, 1, 4) as usize,
+        cams_per_node: r(3, 1, 3) as usize,
+        duration_s: r(4, 2, 6) as f64,
+        escalate_every: r(5, 2, 7),
+        cam_period_ms: r(9, 20, 81) as f64,
+        frame_bytes: r(6, 5_000, 40_000),
+        wan_delay_ms: r(7, 5, 41) as f64,
+        lan_mbps: 1_000.0,
+        nic_mbps: if i % 3 == 0 { 0.0 } else { 100.0 },
+        diurnal_period_s: r(8, 4, 13) as f64,
+        partitions: 1,
+        threads: 1,
+    }
+}
+
+/// The tentpole differential: 200 random topologies, each run
+/// partitioned under the serial reference driver and the threaded
+/// driver, hashing after EVERY safe window. Any divergence — a
+/// reordered arrival, a horizon off by one, a racy link charge —
+/// shows up as the first differing `(horizon, digest)` pair.
+#[test]
+fn serial_vs_threaded_trajectories_are_identical_over_200_cases() {
+    let mut windows_total = 0usize;
+    for i in 0..200u64 {
+        let mut cfg = case(i);
+        cfg.partitions = 2 + (i % 3) as usize; // 2..=4, clamped to ecs inside
+        let mut serial = Vec::new();
+        let m1 = run_metro_with(&cfg, |h, d| serial.push((h, d)));
+        assert!(!serial.is_empty(), "case {i}: no safe windows ran");
+        windows_total += serial.len();
+
+        let threaded_cfg = MetroConfig { threads: 4, ..cfg.clone() };
+        let mut threaded = Vec::new();
+        let m2 = run_metro_with(&threaded_cfg, |h, d| threaded.push((h, d)));
+
+        if serial != threaded {
+            let first = serial
+                .iter()
+                .zip(&threaded)
+                .position(|(a, b)| a != b)
+                .unwrap_or(serial.len().min(threaded.len()));
+            panic!(
+                "case {i} ({cfg:?}): trajectories diverged at window {first}: \
+                 serial {:?} vs threaded {:?}",
+                serial.get(first),
+                threaded.get(first)
+            );
+        }
+        assert_eq!(m1.digest, m2.digest, "case {i}: final digest diverged");
+        assert_eq!(
+            (m1.frames, m1.escalated, m1.replies, m1.events, m1.wan_bytes),
+            (m2.frames, m2.escalated, m2.replies, m2.events, m2.wan_bytes),
+            "case {i}: final metrics diverged"
+        );
+        assert_eq!(m1.windows, m2.windows);
+    }
+    // the suite actually exercised windows at scale, not degenerate
+    // single-window runs
+    assert!(
+        windows_total > 2_000,
+        "only {windows_total} windows across 200 cases — lookahead too coarse?"
+    );
+}
+
+/// Cutting the same workload into 1, 2, or 4 cluster partitions must
+/// not change what the application OBSERVES: frame/escalation/reply
+/// counts, WAN bytes, and bridge counters are exactly equal (the free
+/// CC backplane makes sharded absorb reproduce serial arrivals).
+#[test]
+fn partition_count_does_not_change_the_application_outcome() {
+    for i in [0u64, 7, 13] {
+        let cfg = MetroConfig { ecs: 4, ..case(i) };
+        let base = run_metro(&cfg);
+        assert!(base.replies > 0, "case {i}: no end-to-end traffic");
+        assert_eq!(base.replies, base.escalated, "case {i}: run must drain");
+        for parts in [2, 4] {
+            let m = run_metro(&MetroConfig { partitions: parts, ..cfg.clone() });
+            assert_eq!(
+                (m.frames, m.escalated, m.replies, m.wan_bytes, m.bridged_up, m.bridged_down),
+                (
+                    base.frames,
+                    base.escalated,
+                    base.replies,
+                    base.wan_bytes,
+                    base.bridged_up,
+                    base.bridged_down
+                ),
+                "case {i}: {parts} partitions changed the app outcome"
+            );
+        }
+    }
+}
+
+/// Threading is pure mechanism: thread counts beyond the partition
+/// count (and odd thread counts) still replay the reference.
+#[test]
+fn surplus_and_odd_thread_counts_replay_the_reference() {
+    let cfg = MetroConfig { ecs: 3, partitions: 3, ..case(42) };
+    let mut reference = Vec::new();
+    run_metro_with(&cfg, |h, d| reference.push((h, d)));
+    for threads in [2, 3, 8] {
+        let mut got = Vec::new();
+        run_metro_with(&MetroConfig { threads, ..cfg.clone() }, |h, d| got.push((h, d)));
+        assert_eq!(reference, got, "{threads} threads diverged");
+    }
+}
+
+/// The committed scenario files stay honest: they parse, match their
+/// generator presets, and the small one runs end to end (the CI
+/// scenario-smoke entry).
+#[test]
+fn committed_metro_scenarios_match_their_presets_and_run() {
+    let small = MetroConfig::from_yaml(include_str!("../scenarios/metro_small.yaml")).unwrap();
+    assert_eq!(small, MetroConfig::preset("small").unwrap());
+    let mid = MetroConfig::from_yaml(include_str!("../scenarios/metro_mid.yaml")).unwrap();
+    assert_eq!(mid, MetroConfig::preset("mid").unwrap());
+
+    let m = run_metro(&MetroConfig { partitions: 4, threads: 2, ..small });
+    assert!(m.frames > 0 && m.replies > 0);
+    assert_eq!(m.replies, m.escalated);
+}
