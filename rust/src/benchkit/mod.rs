@@ -15,7 +15,10 @@
 //! filter-directed retained replay), so `BENCH_*.json` covers both
 //! planes, and, since PR 7, the chaos-ready control plane's full
 //! deploy → fail → rejoin cycle under seeded message loss
-//! (`churn_convergence`).
+//! (`churn_convergence`). The sharded broker adds a MULTI-producer
+//! row (`broker_contention`): N threads publishing disjoint topic
+//! spaces, which the per-first-level shard locks let scale where the
+//! old single `Mutex<Inner>` serialized everything.
 
 use crate::des::queue::{CalendarQueue, EventQueue, HeapQueue};
 use crate::des::{Scheduler, SimEvent};
@@ -356,6 +359,136 @@ pub fn broker_throughput(
         replay_subscribes,
         replayed,
         replay_subscribes_per_s: replay_subscribes as f64 / replay_secs,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// threaded broker: multi-producer contention (the sharded lock story)
+// ---------------------------------------------------------------------------
+
+/// One producer-count measurement from [`broker_contention`].
+#[derive(Debug, Clone)]
+pub struct ContentionRow {
+    pub producers: usize,
+    /// Total publishes across all producers in this row.
+    pub pubs: u64,
+    /// Aggregate publish rate across all producers.
+    pub publishes_per_sec: f64,
+}
+
+/// The multi-producer broker numbers (`BENCH_*.json` →
+/// `broker_contention`). The single-threaded `broker` rows cannot show
+/// the lock: this one publishes from N threads into N disjoint
+/// first-level topic spaces ("lanes"), which the sharded broker routes
+/// under N independent locks. CI asserts the multi-producer aggregate
+/// rate beats the single-producer rate (the old single-mutex broker
+/// could only LOSE throughput with more producers).
+#[derive(Debug, Clone)]
+pub struct ContentionNumbers {
+    pub shards: usize,
+    pub lanes: usize,
+    pub pubs_per_producer: usize,
+    /// Producer count of the gated row (the last in `rows`).
+    pub producers: usize,
+    /// Gated metric: aggregate rate with `producers` producers.
+    pub publishes_per_sec: f64,
+    /// The 1-producer reference rate over the SAME workload shape.
+    pub single_producer_per_sec: f64,
+    pub rows: Vec<ContentionRow>,
+}
+
+/// Measure aggregate publish throughput at 1 and `producers` producer
+/// threads. Every lane has one `lane{i}/#` subscriber whose receiver a
+/// dedicated drainer thread empties (deliveries are part of the
+/// measured publish path, exactly as in the single-threaded `broker`
+/// row). Producers own disjoint lane sets, so with N producers the
+/// sharded broker takes N independent locks; the 1-producer row walks
+/// ALL lanes round-robin so the workload shape (topics, fan-out,
+/// payload) is identical. Delivery completeness is asserted, not
+/// assumed: drained messages must equal published messages.
+pub fn broker_contention(producers: usize, pubs_per_producer: usize) -> ContentionNumbers {
+    use std::sync::Barrier;
+    let producers = producers.max(2);
+    let lanes = producers;
+    let shards = 16;
+    let b = Broker::with_shards("contention", shards);
+
+    let mut drainers = Vec::new();
+    let mut sub_ids = Vec::new();
+    for lane in 0..lanes {
+        let sub = b.subscribe(&format!("lane{lane}/#")).expect("bench filter");
+        sub_ids.push(sub.id);
+        let rx = sub.rx;
+        drainers.push(std::thread::spawn(move || {
+            let mut n = 0u64;
+            while rx.recv().is_ok() {
+                n += 1;
+            }
+            n
+        }));
+    }
+
+    let run = |n_producers: usize| -> ContentionRow {
+        let barrier = std::sync::Arc::new(Barrier::new(n_producers + 1));
+        let mut joins = Vec::new();
+        for p in 0..n_producers {
+            let b = b.clone();
+            let barrier = barrier.clone();
+            // disjoint lane ownership: producer p gets lanes p, p+N, ...
+            let my_lanes: Vec<usize> = (0..lanes).filter(|l| l % n_producers == p).collect();
+            joins.push(std::thread::spawn(move || {
+                // pre-build topics so the measured loop is publish cost,
+                // not format! cost (identical across rows)
+                let topics: Vec<String> = (0..pubs_per_producer)
+                    .map(|i| format!("lane{}/t{}/data", my_lanes[i % my_lanes.len()], i % 32))
+                    .collect();
+                let payload = vec![0u8; 64];
+                barrier.wait();
+                for t in &topics {
+                    b.publish(t, payload.clone()).expect("bench publish");
+                }
+            }));
+        }
+        barrier.wait();
+        let t0 = Instant::now();
+        for j in joins {
+            j.join().expect("producer thread");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let pubs = (n_producers * pubs_per_producer) as u64;
+        ContentionRow {
+            producers: n_producers,
+            pubs,
+            publishes_per_sec: pubs as f64 / dt,
+        }
+    };
+
+    // untimed warm-up (page faults, lazy shard init), then the rows
+    run(producers);
+    let rows = vec![run(1), run(producers)];
+
+    // each publish matches exactly its lane's one subscriber: drained
+    // must equal published (no lost or duplicated deliveries)
+    // warm-up row (N producers) + measured rows (1 and N producers)
+    let expected: u64 = (2 * producers + 1) as u64 * pubs_per_producer as u64;
+    for id in sub_ids {
+        b.unsubscribe(id);
+    }
+    drop(b);
+    let drained: u64 = drainers.into_iter().map(|d| d.join().expect("drainer")).sum();
+    assert_eq!(
+        drained, expected,
+        "every publish (warm-up + rows) must be delivered exactly once"
+    );
+
+    ContentionNumbers {
+        shards,
+        lanes,
+        pubs_per_producer,
+        producers,
+        publishes_per_sec: rows[1].publishes_per_sec,
+        single_producer_per_sec: rows[0].publishes_per_sec,
+        rows,
     }
 }
 
@@ -808,6 +941,7 @@ pub const CHECKED_METRICS: &[(&str, &str)] = &[
     ("broker", "publish_per_sec"),
     ("broker", "deliver_per_sec"),
     ("broker", "replay_subscribes_per_sec"),
+    ("broker_contention", "publishes_per_sec"),
     ("netfabric", "hop_pubs_per_sec"),
     ("churn_convergence", "runs_per_sec"),
     ("metro_scale", "metro_events_per_sec"),
@@ -941,6 +1075,10 @@ mod tests {
                     ("replay_subscribes_per_sec", Value::num(30_000.0 * scale)),
                 ]),
             ),
+            (
+                "broker_contention",
+                Value::obj(vec![("publishes_per_sec", Value::num(400_000.0 * scale))]),
+            ),
             ("netfabric", Value::obj(vec![("hop_pubs_per_sec", Value::num(40_000.0 * scale))])),
             (
                 "churn_convergence",
@@ -1068,6 +1206,20 @@ mod tests {
         assert!(n.rows.iter().all(|r| r.events > 0 && r.events_per_sec > 0.0));
         assert!(n.serial_events_per_sec > 0.0 && n.best_events_per_sec > 0.0);
         assert_eq!(n.best_partitions, 2);
+    }
+
+    #[test]
+    fn broker_contention_measures_both_rows_and_loses_nothing() {
+        // tiny run: the delivery-completeness assertion inside
+        // broker_contention is the real check here
+        let n = broker_contention(2, 400);
+        assert_eq!(n.lanes, 2);
+        assert_eq!(n.rows.len(), 2);
+        assert_eq!(n.rows[0].producers, 1);
+        assert_eq!(n.rows[1].producers, 2);
+        assert_eq!(n.rows[0].pubs, 400);
+        assert_eq!(n.rows[1].pubs, 800);
+        assert!(n.publishes_per_sec > 0.0 && n.single_producer_per_sec > 0.0);
     }
 
     #[test]

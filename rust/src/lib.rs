@@ -17,6 +17,7 @@ pub mod metrics;
 pub mod platform;
 pub mod pubsub;
 pub mod runtime;
+pub mod serve;
 pub mod simnet;
 pub mod storage;
 pub mod svcgraph;

@@ -57,6 +57,17 @@
 //!                                    --floor anchors that baseline to
 //!                                    a committed NUMERIC record via a
 //!                                    per-metric max — the CI bench gate
+//!   ace serve [--port P] [--addr HOST:PORT] [--shards N]
+//!             [--max-frame BYTES] [--name NAME]
+//!                                  — the sharded broker behind a
+//!                                    length-framed JSON TCP front end;
+//!                                    blocks until a client sends a
+//!                                    shutdown op
+//!   ace serve-probe [--addr HOST:PORT] [--no-shutdown]
+//!                                  — in-repo smoke client asserting
+//!                                    pub/sub, retained replay and
+//!                                    malformed-frame recovery against
+//!                                    a live `ace serve`
 //!
 //! clap is unavailable offline; argument parsing is a ~60-line hand
 //! rolled matcher (DESIGN.md §Substitutions).
@@ -604,6 +615,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let route = benchkit::route_scratch(subs, pubs);
     let storm = benchkit::fabric_storm(comps, storm_pubs);
     let broker = benchkit::broker_throughput(broker_subs, broker_pubs, retained, replay_subs);
+    let contention = benchkit::broker_contention(
+        args.usize_or("contention-producers", 4),
+        args.usize_or("contention-pubs", 20_000),
+    );
     let hops = benchkit::netfabric_hops(hop_pubs, hop_sinks);
     let churn = benchkit::churn_convergence(churn_nodes, churn_loss, churn_runs);
     let metro_counts: Vec<usize> = [2usize, 4, 8].into_iter().filter(|&p| p <= metro_pmax).collect();
@@ -667,6 +682,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
         broker.replay_subscribes,
         broker.replayed,
         broker.replay_subscribes_per_s
+    );
+    eprintln!(
+        "broker contention: {} shards, {} lanes, {} pubs/producer; \
+         1 producer {:.0} pubs/s vs {} producers {:.0} pubs/s aggregate ({:.2}x)",
+        contention.shards,
+        contention.lanes,
+        contention.pubs_per_producer,
+        contention.single_producer_per_sec,
+        contention.producers,
+        contention.publishes_per_sec,
+        contention.publishes_per_sec / contention.single_producer_per_sec.max(1.0)
     );
     eprintln!(
         "netfabric hops: {} pubs x {} sinks -> {} deliveries; \
@@ -769,6 +795,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     ("replay_subscribes", Value::Num(broker.replay_subscribes as f64)),
                     ("replayed", Value::Num(broker.replayed as f64)),
                     ("replay_subscribes_per_sec", num(broker.replay_subscribes_per_s)),
+                ]),
+            ),
+            (
+                "broker_contention",
+                obj(vec![
+                    ("shards", Value::Num(contention.shards as f64)),
+                    ("lanes", Value::Num(contention.lanes as f64)),
+                    (
+                        "pubs_per_producer",
+                        Value::Num(contention.pubs_per_producer as f64),
+                    ),
+                    ("producers", Value::Num(contention.producers as f64)),
+                    // gated (higher is better): aggregate multi-producer rate
+                    ("publishes_per_sec", num(contention.publishes_per_sec)),
+                    // informational: the single-producer reference CI's
+                    // parallel>serial check reads
+                    (
+                        "single_producer_per_sec",
+                        num(contention.single_producer_per_sec),
+                    ),
+                    (
+                        "rows",
+                        Value::Arr(
+                            contention
+                                .rows
+                                .iter()
+                                .map(|r| {
+                                    obj(vec![
+                                        ("producers", Value::Num(r.producers as f64)),
+                                        ("pubs", Value::Num(r.pubs as f64)),
+                                        ("publishes_per_sec", num(r.publishes_per_sec)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ]),
             ),
             (
@@ -982,6 +1044,50 @@ fn cmd_fig5(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ace serve`: the sharded broker behind a length-framed JSON TCP
+/// front end. Blocks in the accept loop until a client sends a
+/// `shutdown` op (the CI smoke job does exactly that via serve-probe).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port = args.usize_or("port", 7878);
+    let addr = args
+        .get("addr")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("127.0.0.1:{port}"));
+    let cfg = ace::serve::ServeConfig {
+        shards: args.usize_or("shards", 8),
+        max_frame: args.usize_or("max-frame", ace::serve::frame::DEFAULT_MAX_FRAME),
+        broker_name: args.get("name").unwrap_or("serve").to_string(),
+    };
+    let server = ace::serve::Server::bind(&addr, &cfg)
+        .with_context(|| format!("binding serve listener on {addr}"))?;
+    eprintln!(
+        "ace serve: listening on {} ({} shards, {} max frame)",
+        server.local_addr(),
+        cfg.shards,
+        cfg.max_frame
+    );
+    server.run().context("serve accept loop failed")?;
+    eprintln!("ace serve: shutdown complete");
+    Ok(())
+}
+
+/// `ace serve-probe`: the in-repo smoke client — publish/subscribe/
+/// retained-replay/malformed-frame assertions against a live server,
+/// then (unless --no-shutdown) a clean shutdown op.
+fn cmd_serve_probe(args: &Args) -> Result<()> {
+    let addr = args
+        .get("addr")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("127.0.0.1:{}", args.usize_or("port", 7878)));
+    match ace::serve::probe(&addr, !args.has("no-shutdown")) {
+        Ok(()) => {
+            eprintln!("serve-probe: all checks passed against {addr}");
+            Ok(())
+        }
+        Err(e) => bail!("serve-probe failed against {addr}: {e}"),
+    }
+}
+
 fn help() {
     println!(
         "ace — Application-Centric Edge-Cloud Collaborative Intelligence
@@ -1028,6 +1134,8 @@ COMMANDS:
                                               [--churn-runs N] [--metro-ecs N]
                                               [--metro-seconds N]
                                               [--partitions N]
+                                              [--contention-producers N]
+                                              [--contention-pubs N]
                with --check FILE: exit        [--check BASELINE.json]
                nonzero on throughput          [--tolerance T]
                regressions beyond T (0.25);   [--require-baseline]
@@ -1037,6 +1145,14 @@ COMMANDS:
                --require-baseline also
                fails when the baseline has
                no comparable numbers
+  serve        the sharded broker behind a    [--port P] [--addr HOST:PORT]
+               length-framed JSON TCP front   [--shards N] [--max-frame BYTES]
+               end; runs until a client       [--name NAME]
+               sends a shutdown op
+  serve-probe  in-repo smoke client: pub/sub, [--addr HOST:PORT] [--port P]
+               retained replay, malformed-    [--no-shutdown]
+               frame recovery asserted
+               against a live `ace serve`
   metro-gen    generate a seeded metro        [--preset small|mid|large]
                workload yaml                  [--seed S] [--ecs N] [--seconds N]
                (scenarios/metro_*.yaml)       [--out FILE]
@@ -1055,6 +1171,8 @@ fn main() -> Result<()> {
         "fig5" => cmd_fig5(&args),
         "svcrun" => cmd_svcrun(&args),
         "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "serve-probe" => cmd_serve_probe(&args),
         "metro-gen" => cmd_metro_gen(&args),
         _ => {
             help();

@@ -5,11 +5,16 @@
 //!   `svcgraph::Fabric`), so one publish routes in O(topic depth)
 //!   instead of O(subscriptions).
 //! * `broker` — per-EC / per-CC in-process broker (QoS-0, retained).
+//! * `shard` — the broker's sharded interior: per-first-level trie
+//!   subtrees, each behind its own lock, plus one shared wildcard
+//!   shard, so concurrent producers on distinct topic spaces never
+//!   contend (DESIGN.md §Broker-sharding).
 //! * `bridge` — the long-lasting EC<->CC topic bridge (link ② in
 //!   Figure 2) with loop prevention.
 
 pub mod bridge;
 pub mod broker;
+mod shard;
 pub mod topic;
 
 pub use bridge::Bridge;

@@ -1,0 +1,346 @@
+//! Sharded broker interior — per-first-level topic-trie subtrees, each
+//! behind its own lock, plus one shared wildcard shard.
+//!
+//! The shard map: a topic name routes to `FNV-1a(first level) % N`.
+//! A subscription filter whose level 0 is a LITERAL can only ever match
+//! names sharing that exact first level ([`topic::matches`] compares
+//! level 0 first), so storing it in the same shard as those names keeps
+//! shard-local routing *complete*: every (filter, name) pair that can
+//! match meets inside one shard. Hash collisions put unrelated first
+//! levels in one shard — that is harmless (the trie walk compares
+//! symbols, a co-resident filter for another first level simply never
+//! matches), it only costs a shared lock.
+//!
+//! Filters that start with `+` or `#` ([`topic::filter_crosses_shards`])
+//! can match names with ANY first level, so they live in one shared
+//! *wildcard shard*. A publish then needs at most two locks: its
+//! literal shard, and — only when the wildcard shard is non-empty
+//! (an atomic gauge, checked lock-free) — the wildcard shard. The old
+//! single `Mutex<Inner>` is gone entirely; N producers publishing to
+//! distinct first levels never contend.
+//!
+//! Lock ORDER (deadlock freedom): literal shards ascending by index,
+//! wildcard shard strictly last. Every multi-lock path follows it —
+//! publish takes (literal i, then wildcard), a cross-shard subscribe
+//! takes (literal 0..N ascending, then wildcard) so its retained-replay
+//! snapshot + insertion is atomic against every concurrent publish
+//! (no missed or duplicated delivery around the subscribe boundary).
+//! Publish holds its literal-shard lock ACROSS the wildcard delivery
+//! for the same reason: releasing it mid-publish would let a `#`
+//! subscribe replay a just-retained message AND then receive it live.
+//!
+//! Ordering: per-subscriber delivery order equals the single-mutex
+//! broker's. A subscriber lives in exactly one shard, so its deliveries
+//! serialize under that shard's lock; each producer publishes
+//! sequentially, so its messages enter every shard in program order.
+//! Retained replay order is pinned by a GLOBAL `retain_seq` stamp
+//! (one atomic fetch-add per retain), so a wildcard subscribe that
+//! merges retained messages from all shards replays them in exactly
+//! the order the retains were accepted — byte-identical to the
+//! reference broker (see `tests/broker_shard.rs`).
+
+use super::broker::Message;
+use super::topic::{self, SymbolTable, TopicTrie};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Mutex, MutexGuard};
+
+/// Default literal-shard count for `Broker::new`.
+pub(crate) const DEFAULT_SHARDS: usize = 8;
+
+/// Shard counts are clamped to this, so a subscription id — shard
+/// index in the bits above [`LOCAL_BITS`] — stays below 2^53 and
+/// round-trips exactly through a JSON `f64` (the `ace serve` wire
+/// format).
+pub(crate) const MAX_SHARDS: usize = 1024;
+
+/// Low bits of a subscription id hold the shard-local counter; the
+/// bits above hold `shard index + 1`.
+const LOCAL_BITS: u32 = 40;
+
+struct Subscription {
+    tx: Sender<Message>,
+    id: u64,
+}
+
+/// A retained message stamped with its GLOBAL retain sequence, so
+/// cross-shard replays merge into one total retain order.
+struct Retained {
+    seq: u64,
+    msg: Message,
+}
+
+/// One shard: its own subscription trie, retained trie, and symbol
+/// table (shards never share interned symbols, so their vocabularies
+/// stay small and their locks independent).
+struct ShardInner {
+    subs: TopicTrie<Subscription>,
+    /// id -> filter, so unsubscribe/pruning can address the trie path.
+    filters: HashMap<u64, String>,
+    retained: TopicTrie<Retained>,
+    table: SymbolTable,
+    next_local: u64,
+}
+
+impl ShardInner {
+    fn new() -> Self {
+        ShardInner {
+            subs: TopicTrie::new(),
+            filters: HashMap::new(),
+            retained: TopicTrie::new(),
+            table: SymbolTable::new(),
+            next_local: 1,
+        }
+    }
+}
+
+/// Aggregate effect of routing one publish (the caller folds these
+/// into the broker's lock-free counters).
+#[derive(Default)]
+pub(crate) struct RouteOutcome {
+    pub reached: usize,
+    pub delivered_bytes: u64,
+    /// Dead (receiver-dropped) subscriptions garbage-collected.
+    pub pruned: usize,
+}
+
+/// Aggregate effect of one subscribe (id + retained replay volume).
+pub(crate) struct SubscribeOutcome {
+    pub id: u64,
+    pub replayed: u64,
+    pub replayed_bytes: u64,
+}
+
+/// The sharded broker interior. All locking lives here; the `Broker`
+/// wrapper owns name + counters and validates inputs.
+pub(crate) struct ShardSet {
+    literal: Box<[Mutex<ShardInner>]>,
+    /// Filters with `+`/`#` at level 0 — consulted by every publish,
+    /// but only when `wildcard_subs` says it is non-empty.
+    wildcard: Mutex<ShardInner>,
+    /// Lock-free mirror of `wildcard.subs.len()`: the publish fast
+    /// path reads this instead of taking the wildcard lock.
+    wildcard_subs: AtomicUsize,
+    /// Global retain-order stamp (see module doc).
+    retain_seq: AtomicU64,
+}
+
+/// FNV-1a over one topic level — deterministic across processes (the
+/// differential suite replays identical workloads at several shard
+/// counts), unlike `std`'s seeded `RandomState`.
+fn fnv1a(level: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in level.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn make_id(shard_idx: usize, local: u64) -> u64 {
+    ((shard_idx as u64 + 1) << LOCAL_BITS) | local
+}
+
+impl ShardSet {
+    pub fn new(shards: usize) -> Self {
+        let n = shards.clamp(1, MAX_SHARDS);
+        ShardSet {
+            literal: (0..n).map(|_| Mutex::new(ShardInner::new())).collect(),
+            wildcard: Mutex::new(ShardInner::new()),
+            wildcard_subs: AtomicUsize::new(0),
+            retain_seq: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.literal.len()
+    }
+
+    fn shard_of(&self, first_level: &str) -> usize {
+        (fnv1a(first_level) % self.literal.len() as u64) as usize
+    }
+
+    /// Deliver `msg` to every matching subscription (and retain it
+    /// first if asked). Takes the literal shard lock, then — only if
+    /// the wildcard shard has subscribers — the wildcard lock, in the
+    /// global lock order.
+    pub fn route(&self, msg: &Message, retain: bool) -> RouteOutcome {
+        let mut out = RouteOutcome::default();
+        let si = self.shard_of(topic::first_level(&msg.topic));
+        let mut guard = self.literal[si].lock().unwrap();
+        if retain {
+            // last-writer-wins per topic, stamped with the GLOBAL
+            // retain seq so cross-shard replays merge in retain order
+            let seq = self.retain_seq.fetch_add(1, Ordering::Relaxed);
+            let inner = &mut *guard;
+            inner.retained.remove(&inner.table, &msg.topic, |_| true);
+            inner
+                .retained
+                .insert(&mut inner.table, &msg.topic, Retained { seq, msg: msg.clone() });
+        }
+        deliver(&mut guard, msg, &mut out);
+        // the fast path: no wildcard subscribers, no second lock. The
+        // literal guard stays held so a concurrent `#` subscribe
+        // cannot slip between the two delivery phases (module doc).
+        if self.wildcard_subs.load(Ordering::Acquire) > 0 {
+            let mut wg = self.wildcard.lock().unwrap();
+            deliver(&mut wg, msg, &mut out);
+            self.wildcard_subs.store(wg.subs.len(), Ordering::Release);
+        }
+        drop(guard);
+        out
+    }
+
+    /// Insert a (validated) filter, replaying retained messages in
+    /// global retain order first. Literal-level-0 filters touch one
+    /// shard; `+`/`#`-level-0 filters lock every shard (ascending,
+    /// wildcard last) so snapshot + insert is atomic against all
+    /// concurrent publishes.
+    pub fn subscribe(&self, filter: &str, tx: Sender<Message>) -> SubscribeOutcome {
+        let mut replayed: Vec<(u64, Message)> = Vec::new();
+        if topic::filter_crosses_shards(filter) {
+            let guards: Vec<MutexGuard<'_, ShardInner>> =
+                self.literal.iter().map(|s| s.lock().unwrap()).collect();
+            let mut wg = self.wildcard.lock().unwrap();
+            for g in &guards {
+                g.retained
+                    .for_each_name_match(&g.table, filter, |_, r| replayed.push((r.seq, r.msg.clone())));
+            }
+            let (count, bytes) = send_replay(&mut replayed, &tx);
+            let inner = &mut *wg;
+            let id = make_id(self.literal.len(), inner.next_local);
+            inner.next_local += 1;
+            inner.subs.insert(&mut inner.table, filter, Subscription { tx, id });
+            inner.filters.insert(id, filter.to_string());
+            self.wildcard_subs.store(inner.subs.len(), Ordering::Release);
+            drop(guards);
+            SubscribeOutcome { id, replayed: count, replayed_bytes: bytes }
+        } else {
+            let si = self.shard_of(topic::first_level(filter));
+            let mut guard = self.literal[si].lock().unwrap();
+            let inner = &mut *guard;
+            inner
+                .retained
+                .for_each_name_match(&inner.table, filter, |_, r| replayed.push((r.seq, r.msg.clone())));
+            let (count, bytes) = send_replay(&mut replayed, &tx);
+            let id = make_id(si, inner.next_local);
+            inner.next_local += 1;
+            inner.subs.insert(&mut inner.table, filter, Subscription { tx, id });
+            inner.filters.insert(id, filter.to_string());
+            SubscribeOutcome { id, replayed: count, replayed_bytes: bytes }
+        }
+    }
+
+    /// Remove subscription `id`. The owning shard is encoded in the id
+    /// itself, so this takes exactly one lock. Returns the number of
+    /// subscriptions removed (0 or 1).
+    pub fn unsubscribe(&self, id: u64) -> usize {
+        let Some(idx) = ((id >> LOCAL_BITS) as usize).checked_sub(1) else {
+            return 0;
+        };
+        let shard = if idx == self.literal.len() {
+            &self.wildcard
+        } else if let Some(s) = self.literal.get(idx) {
+            s
+        } else {
+            return 0;
+        };
+        let mut guard = shard.lock().unwrap();
+        let inner = &mut *guard;
+        let mut removed = 0;
+        if let Some(filter) = inner.filters.remove(&id) {
+            removed = inner.subs.remove(&inner.table, &filter, |s| s.id == id);
+        }
+        if idx == self.literal.len() {
+            self.wildcard_subs.store(inner.subs.len(), Ordering::Release);
+        }
+        removed
+    }
+}
+
+/// Deliver to one shard's matches; dead receivers are pruned (each a
+/// targeted trie-path removal, as in the pre-shard broker).
+fn deliver(inner: &mut ShardInner, msg: &Message, out: &mut RouteOutcome) {
+    let mut dead: Vec<u64> = Vec::new();
+    // O(topic depth) trie walk; matches come back in insertion
+    // (i.e. subscription) order
+    for s in inner.subs.collect_matches(&inner.table, &msg.topic) {
+        // Arc payload: per-subscriber clone is a refcount bump
+        if s.tx.send(msg.clone()).is_ok() {
+            out.reached += 1;
+            out.delivered_bytes += msg.payload.len() as u64;
+        } else {
+            dead.push(s.id);
+        }
+    }
+    for id in dead {
+        if let Some(filter) = inner.filters.remove(&id) {
+            out.pruned += inner.subs.remove(&inner.table, &filter, |s| s.id == id);
+        }
+    }
+}
+
+/// Sort a replay batch into global retain order and send it; the
+/// receiver cannot be dropped yet (the caller holds both ends).
+fn send_replay(replayed: &mut Vec<(u64, Message)>, tx: &Sender<Message>) -> (u64, u64) {
+    replayed.sort_unstable_by_key(|&(seq, _)| seq);
+    let (mut count, mut bytes) = (0u64, 0u64);
+    for (_, m) in replayed.drain(..) {
+        let b = m.payload.len() as u64;
+        if tx.send(m).is_ok() {
+            count += 1;
+            bytes += b;
+        }
+    }
+    (count, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn ids_encode_their_shard_and_stay_f64_exact() {
+        let set = ShardSet::new(MAX_SHARDS);
+        // the largest id the first subscription in the last (wildcard)
+        // shard can get must survive an f64 round trip
+        let id = make_id(set.shard_count(), 1);
+        assert_eq!(id as f64 as u64, id);
+        assert!((id as f64) < 2f64.powi(53));
+    }
+
+    #[test]
+    fn shard_count_is_clamped() {
+        assert_eq!(ShardSet::new(0).shard_count(), 1);
+        assert_eq!(ShardSet::new(5).shard_count(), 5);
+        assert_eq!(ShardSet::new(1 << 20).shard_count(), MAX_SHARDS);
+    }
+
+    #[test]
+    fn unsubscribe_routes_by_id_without_scanning() {
+        let set = ShardSet::new(4);
+        let (tx, _rx) = channel();
+        let a = set.subscribe("alpha/x", tx.clone());
+        let b = set.subscribe("#", tx);
+        assert_ne!(a.id, b.id);
+        assert_eq!(set.unsubscribe(a.id), 1);
+        assert_eq!(set.unsubscribe(a.id), 0, "second removal is a no-op");
+        assert_eq!(set.unsubscribe(b.id), 1);
+        assert_eq!(set.unsubscribe(0), 0, "bogus id is rejected, not a panic");
+        assert_eq!(set.unsubscribe(u64::MAX), 0);
+    }
+
+    #[test]
+    fn wildcard_gauge_tracks_level0_wildcards_only() {
+        let set = ShardSet::new(4);
+        let (tx, _rx) = channel();
+        set.subscribe("alpha/#", tx.clone());
+        assert_eq!(set.wildcard_subs.load(Ordering::Acquire), 0, "literal level 0");
+        let w = set.subscribe("+/status", tx);
+        assert_eq!(set.wildcard_subs.load(Ordering::Acquire), 1);
+        set.unsubscribe(w.id);
+        assert_eq!(set.wildcard_subs.load(Ordering::Acquire), 0);
+    }
+}

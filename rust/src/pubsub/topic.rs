@@ -57,6 +57,25 @@ pub fn valid_filter(filter: &str) -> bool {
     true
 }
 
+/// First `/`-separated level of a topic name or filter.
+///
+/// This is the broker's shard key: every filter whose level 0 is a
+/// LITERAL can only ever match names sharing that first level, so
+/// co-locating names and filters by first level keeps shard-local
+/// routing complete (see `pubsub::shard`).
+pub fn first_level(topic: &str) -> &str {
+    topic.split('/').next().unwrap_or("")
+}
+
+/// Does `filter` start with a wildcard level (`+` or `#` at level 0)?
+///
+/// Such a filter can match names with ANY first level, i.e. it crosses
+/// the broker's first-level shard map and must live in the shared
+/// wildcard shard instead of a literal shard.
+pub fn filter_crosses_shards(filter: &str) -> bool {
+    matches!(first_level(filter), "+" | "#")
+}
+
 /// MQTT topic matching: does `filter` match concrete `name`?
 pub fn matches(filter: &str, name: &str) -> bool {
     let mut f = filter.split('/');
@@ -477,6 +496,19 @@ impl<T> TopicTrie<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn first_level_and_shard_crossing() {
+        assert_eq!(first_level("a/b/c"), "a");
+        assert_eq!(first_level("a"), "a");
+        assert_eq!(first_level("+/b"), "+");
+        assert_eq!(first_level("#"), "#");
+        assert!(filter_crosses_shards("#"));
+        assert!(filter_crosses_shards("+/b/c"));
+        assert!(!filter_crosses_shards("a/#"));
+        assert!(!filter_crosses_shards("a/+/c"));
+        assert!(!filter_crosses_shards("a/b"));
+    }
 
     #[test]
     fn exact_match() {

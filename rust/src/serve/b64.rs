@@ -1,0 +1,132 @@
+//! Standard base64 (RFC 4648, with padding) — hand-rolled like the
+//! rest of the offline substitutions (DESIGN.md §Substitutions).
+//!
+//! The serve wire protocol is JSON, and JSON strings cannot carry
+//! arbitrary bytes; `publish` payloads and `message` pushes travel
+//! base64-encoded.
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode `data` with standard alphabet + `=` padding.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b1 = *chunk.first().unwrap_or(&0);
+        let b2 = *chunk.get(1).unwrap_or(&0);
+        let b3 = *chunk.get(2).unwrap_or(&0);
+        let n = (u32::from(b1) << 16) | (u32::from(b2) << 8) | u32::from(b3);
+        out.push(ALPHABET[((n >> 18) & 63) as usize] as char);
+        out.push(ALPHABET[((n >> 12) & 63) as usize] as char);
+        out.push(if chunk.len() > 1 {
+            ALPHABET[((n >> 6) & 63) as usize] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            ALPHABET[(n & 63) as usize] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+fn sextet(c: u8) -> Result<u32, String> {
+    Ok(u32::from(match c {
+        b'A'..=b'Z' => c - b'A',
+        b'a'..=b'z' => c - b'a' + 26,
+        b'0'..=b'9' => c - b'0' + 52,
+        b'+' => 62,
+        b'/' => 63,
+        _ => return Err(format!("invalid base64 byte 0x{c:02x}")),
+    }))
+}
+
+/// Decode standard padded base64. Rejects bad lengths, foreign bytes,
+/// and `=` anywhere but the final chunk's tail.
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    let bytes = s.as_bytes();
+    if bytes.is_empty() {
+        return Ok(Vec::new());
+    }
+    if bytes.len() % 4 != 0 {
+        return Err(format!(
+            "base64 length {} is not a multiple of 4",
+            bytes.len()
+        ));
+    }
+    let chunks = bytes.len() / 4;
+    let mut out = Vec::with_capacity(chunks * 3);
+    for (ci, chunk) in bytes.chunks(4).enumerate() {
+        let pad = if chunk[3] == b'=' {
+            if chunk[2] == b'=' {
+                2
+            } else {
+                1
+            }
+        } else {
+            0
+        };
+        if pad > 0 && ci != chunks - 1 {
+            return Err("padding '=' before the final base64 chunk".into());
+        }
+        let data = &chunk[..4 - pad];
+        if data.contains(&b'=') {
+            return Err("stray '=' inside a base64 chunk".into());
+        }
+        let mut n = 0u32;
+        for &c in data {
+            n = (n << 6) | sextet(c)?;
+        }
+        n <<= 6 * pad;
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        // the RFC 4648 §10 test vectors, both directions
+        let vectors: &[(&str, &str)] = &[
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ];
+        for (plain, enc) in vectors {
+            assert_eq!(encode(plain.as_bytes()), *enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn all_byte_values_roundtrip() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+        for cut in [1, 2, 3, 100, 255] {
+            assert_eq!(decode(&encode(&data[..cut])).unwrap(), &data[..cut]);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode("abc").is_err(), "length not a multiple of 4");
+        assert!(decode("ab!d").is_err(), "foreign byte");
+        assert!(decode("a=bc").is_err(), "stray padding mid-chunk");
+        assert!(decode("ab==cdef").is_err(), "padding before final chunk");
+        assert!(decode("====").is_err(), "all padding");
+    }
+}

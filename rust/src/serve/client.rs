@@ -1,0 +1,214 @@
+//! A small synchronous client for the serve protocol — the in-repo
+//! test client the CI smoke job drives (`ace serve-probe`) and the
+//! integration tests reuse.
+//!
+//! One TCP connection, blocking request/response with client-side
+//! correlation ids. Asynchronous `message` pushes can arrive BETWEEN a
+//! request and its response; the client parks them in a queue that
+//! [`Client::recv_message`] drains.
+
+use super::b64;
+use super::frame::{read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME};
+use crate::json::{self, Value};
+use std::collections::VecDeque;
+use std::io;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// One client connection.
+pub struct Client {
+    stream: TcpStream,
+    /// `message` pushes that arrived while waiting for a response.
+    parked: VecDeque<Value>,
+    next_req: u64,
+}
+
+/// A delivery received over the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delivery {
+    pub subscription_id: u64,
+    pub topic: String,
+    pub payload: Vec<u8>,
+    pub origin: String,
+}
+
+impl Client {
+    /// Connect once.
+    pub fn connect(addr: &str) -> io::Result<Client> {
+        Ok(Client {
+            stream: TcpStream::connect(addr)?,
+            parked: VecDeque::new(),
+            next_req: 1,
+        })
+    }
+
+    /// Connect with retries — lets a probe start before the server
+    /// finishes binding (the CI smoke starts both concurrently).
+    pub fn connect_retry(addr: &str, attempts: u32, delay: Duration) -> io::Result<Client> {
+        let mut last = None;
+        for _ in 0..attempts.max(1) {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| io::Error::other("no connection attempts made")))
+    }
+
+    /// Send raw bytes as one frame — protocol-robustness tests use
+    /// this to inject malformed payloads.
+    pub fn send_raw(&mut self, body: &[u8]) -> io::Result<()> {
+        write_frame(&mut self.stream, body)
+    }
+
+    /// Read the next frame of any kind (responses AND pushes).
+    fn read_envelope(&mut self) -> Result<Value, String> {
+        match read_frame(&mut self.stream, DEFAULT_MAX_FRAME) {
+            Ok(Some(bytes)) => {
+                let text = String::from_utf8(bytes).map_err(|e| e.to_string())?;
+                json::parse(&text).map_err(|e| e.to_string())
+            }
+            Ok(None) => Err("server closed the connection".into()),
+            Err(FrameError::Oversized { len, max }) => {
+                Err(format!("server sent a {len}-byte frame (cap {max})"))
+            }
+            Err(FrameError::Io(e)) => Err(format!("transport error: {e}")),
+        }
+    }
+
+    /// Read frames until a non-`message` envelope arrives, parking any
+    /// pushes; error envelopes become `Err("code: message")`.
+    pub fn read_response(&mut self) -> Result<Value, String> {
+        loop {
+            let v = self.read_envelope()?;
+            match v.get("type").as_str() {
+                Some("message") => self.parked.push_back(v),
+                Some("error") => {
+                    return Err(format!(
+                        "{}: {}",
+                        v.get("code").as_str().unwrap_or("?"),
+                        v.get("message").as_str().unwrap_or("?")
+                    ))
+                }
+                Some(_) => return Ok(v),
+                None => return Err(format!("untyped envelope: {v}")),
+            }
+        }
+    }
+
+    /// One request/response exchange; verifies the echoed requestId.
+    fn rpc(&mut self, mut fields: Vec<(&str, Value)>) -> Result<Value, String> {
+        let rid = format!("r{}", self.next_req);
+        self.next_req += 1;
+        fields.push(("requestId", Value::str(rid.as_str())));
+        let body = json::to_string(&Value::obj(fields));
+        self.send_raw(body.as_bytes())
+            .map_err(|e| format!("send failed: {e}"))?;
+        let resp = self.read_response()?;
+        match resp.get("requestId").as_str() {
+            Some(got) if got == rid => Ok(resp),
+            other => Err(format!("requestId mismatch: sent {rid:?}, got {other:?}")),
+        }
+    }
+
+    /// Publish; returns the number of subscribers reached.
+    pub fn publish(&mut self, topic: &str, payload: &[u8], retain: bool) -> Result<usize, String> {
+        let resp = self.rpc(vec![
+            ("type", Value::str("publish")),
+            ("topic", Value::str(topic)),
+            ("payload", Value::str(b64::encode(payload))),
+            ("retain", Value::Bool(retain)),
+        ])?;
+        resp.get("reached")
+            .as_usize()
+            .ok_or_else(|| format!("malformed publish_ok: {resp}"))
+    }
+
+    /// Subscribe; returns the server-assigned subscription id.
+    pub fn subscribe(&mut self, filter: &str) -> Result<u64, String> {
+        let resp = self.rpc(vec![
+            ("type", Value::str("subscribe")),
+            ("filter", Value::str(filter)),
+        ])?;
+        resp.get("subscriptionId")
+            .as_f64()
+            .map(|f| f as u64)
+            .ok_or_else(|| format!("malformed subscribe_ok: {resp}"))
+    }
+
+    /// Unsubscribe; `Ok(false)` means the id was unknown (or owned by
+    /// another connection).
+    pub fn unsubscribe(&mut self, id: u64) -> Result<bool, String> {
+        let resp = self.rpc(vec![
+            ("type", Value::str("unsubscribe")),
+            ("subscriptionId", Value::num(id as f64)),
+        ])?;
+        resp.get("removed")
+            .as_bool()
+            .ok_or_else(|| format!("malformed unsubscribe_ok: {resp}"))
+    }
+
+    /// The broker's counter snapshot (the raw `stats_ok` envelope).
+    pub fn stats(&mut self) -> Result<Value, String> {
+        self.rpc(vec![("type", Value::str("stats"))])
+    }
+
+    /// Ask the server to stop accepting and exit its accept loop.
+    pub fn shutdown(&mut self) -> Result<(), String> {
+        self.rpc(vec![("type", Value::str("shutdown"))]).map(|_| ())
+    }
+
+    /// Next delivery: a parked push if one is queued, otherwise block
+    /// on the socket up to `timeout`. `Ok(None)` on timeout.
+    pub fn recv_message(&mut self, timeout: Duration) -> Result<Option<Delivery>, String> {
+        let v = if let Some(v) = self.parked.pop_front() {
+            v
+        } else {
+            self.stream
+                .set_read_timeout(Some(timeout))
+                .map_err(|e| e.to_string())?;
+            let got = read_frame(&mut self.stream, DEFAULT_MAX_FRAME);
+            self.stream
+                .set_read_timeout(None)
+                .map_err(|e| e.to_string())?;
+            match got {
+                Ok(Some(bytes)) => {
+                    let text = String::from_utf8(bytes).map_err(|e| e.to_string())?;
+                    json::parse(&text).map_err(|e| e.to_string())?
+                }
+                Ok(None) => return Err("server closed the connection".into()),
+                // a timeout with NO bytes read is a clean "nothing yet";
+                // a timeout mid-frame would surface as UnexpectedEof or
+                // a later desync, which tests never trigger (the server
+                // writes frames atomically before the deadline)
+                Err(FrameError::Io(e))
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(None)
+                }
+                Err(e) => return Err(e.to_string()),
+            }
+        };
+        if v.get("type").as_str() != Some("message") {
+            return Err(format!("expected a message push, got: {v}"));
+        }
+        Ok(Some(Delivery {
+            subscription_id: v.get("subscriptionId").as_f64().unwrap_or(0.0) as u64,
+            topic: v.get("topic").as_str().unwrap_or("").to_string(),
+            payload: b64::decode(v.get("payload").as_str().unwrap_or(""))
+                .map_err(|e| format!("malformed message payload: {e}"))?,
+            origin: v.get("origin").as_str().unwrap_or("").to_string(),
+        }))
+    }
+
+    /// Let tests observe the unsolicited-push backlog.
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
+    }
+}

@@ -1,0 +1,180 @@
+//! Length-framed byte transport for the serve protocol.
+//!
+//! Wire format: a 4-byte big-endian length prefix, then exactly that
+//! many payload bytes (one JSON document). A reader that hits EOF *on*
+//! a frame boundary sees a clean close (`Ok(None)`); EOF *inside* a
+//! frame is an error. Frames above the caller's cap are rejected
+//! WITHOUT reading the body — the server answers with a typed error
+//! envelope and closes only that connection (the byte stream cannot be
+//! resynchronized once a declared length is ignored), leaving every
+//! other client untouched (`tests/serve_proto.rs`).
+
+use std::io::{self, Read, Write};
+
+/// Default frame cap (1 MiB) — generous for JSON control traffic,
+/// small enough that a hostile length prefix cannot balloon memory.
+pub const DEFAULT_MAX_FRAME: usize = 1 << 20;
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Declared length exceeds the cap; the body was NOT consumed.
+    Oversized {
+        /// Length the prefix declared.
+        len: u64,
+        /// The cap it exceeded.
+        max: usize,
+    },
+    /// Transport error (including EOF mid-frame).
+    Io(io::Error),
+}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame of {len} bytes exceeds the {max}-byte cap")
+            }
+            FrameError::Io(e) => write!(f, "frame transport error: {e}"),
+        }
+    }
+}
+
+/// Read one frame. `Ok(None)` means the peer closed cleanly between
+/// frames. Handles arbitrarily split reads (the header loop below and
+/// `read_exact` for the body both tolerate partial reads).
+pub fn read_frame(r: &mut impl Read, max: usize) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut header = [0u8; 4];
+    let mut filled = 0;
+    while filled < header.len() {
+        match r.read(&mut header[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(FrameError::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed inside a frame header",
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > max {
+        return Err(FrameError::Oversized {
+            len: len as u64,
+            max,
+        });
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+/// Write one frame (header + body) and flush.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(body.len())
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "frame body over 4 GiB"))?;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A reader that hands out at most one byte per `read` call —
+    /// the worst possible TCP segmentation.
+    struct Trickle<'a> {
+        data: &'a [u8],
+        pos: usize,
+    }
+
+    impl Read for Trickle<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.pos == self.data.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    fn framed(body: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, body).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_through_one_byte_reads() {
+        let mut wire = framed(b"{\"type\":\"stats\"}");
+        wire.extend_from_slice(&framed(b""));
+        let mut r = Trickle {
+            data: &wire,
+            pos: 0,
+        };
+        assert_eq!(
+            read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap(),
+            b"{\"type\":\"stats\"}"
+        );
+        assert_eq!(read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().unwrap(), b"");
+        assert!(
+            read_frame(&mut r, DEFAULT_MAX_FRAME).unwrap().is_none(),
+            "EOF on the frame boundary is a clean close"
+        );
+    }
+
+    #[test]
+    fn eof_inside_header_or_body_is_an_error() {
+        for cut in [1, 2, 3, 5] {
+            let wire = framed(b"abcd");
+            let mut r = Trickle {
+                data: &wire[..cut],
+                pos: 0,
+            };
+            assert!(
+                matches!(read_frame(&mut r, DEFAULT_MAX_FRAME), Err(FrameError::Io(_))),
+                "truncation at byte {cut} must surface as an I/O error"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_without_reading_the_body() {
+        let mut wire = 9_000_000u32.to_be_bytes().to_vec();
+        wire.extend_from_slice(b"body that never gets read");
+        let mut r = Trickle {
+            data: &wire,
+            pos: 0,
+        };
+        match read_frame(&mut r, 4096) {
+            Err(FrameError::Oversized { len, max }) => {
+                assert_eq!(len, 9_000_000);
+                assert_eq!(max, 4096);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        assert_eq!(r.pos, 4, "only the header was consumed");
+    }
+
+    #[test]
+    fn zero_length_frame_roundtrips() {
+        let wire = framed(b"");
+        assert_eq!(wire, [0, 0, 0, 0]);
+        let mut r = Trickle {
+            data: &wire,
+            pos: 0,
+        };
+        assert_eq!(read_frame(&mut r, 16).unwrap().unwrap(), Vec::<u8>::new());
+    }
+}

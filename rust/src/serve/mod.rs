@@ -1,0 +1,388 @@
+//! `ace serve` — a TCP front end on the sharded threaded broker.
+//!
+//! The paper's platform claim is user-transparent edge-cloud
+//! *services* (§3), not a simulator with a broker inside: external
+//! processes must be able to publish, subscribe, and read stats
+//! against a LIVE broker. This module is that byte-level surface — a
+//! std-thread TCP server speaking the length-framed JSON protocol of
+//! [`proto`] (`type`/`timestamp`/`requestId` envelopes) over the
+//! codec in [`frame`].
+//!
+//! Threading (all std threads, no runtime):
+//!
+//! * one ACCEPT loop ([`Server::run`], usually the main thread);
+//! * per connection, a READER thread owning the request half and a
+//!   WRITER thread owning the response half, joined by an mpsc queue
+//!   of pre-serialized frames — so delivery pushes and responses
+//!   never interleave mid-frame;
+//! * per subscription, a FORWARDER thread draining the broker's mpsc
+//!   receiver into `message` envelopes on the writer queue.
+//!
+//! Error containment: a malformed frame gets a typed `error` envelope
+//! and the connection LIVES ON; an oversized frame gets the error
+//! envelope and then a close (the stream cannot be resynced past an
+//! unread body) — other clients are never affected. A disconnecting
+//! client's subscriptions are torn down by its reader thread.
+//!
+//! Shutdown: the `shutdown` op acknowledges, then flushes and closes
+//! its own connection, sets the stop flag, and pokes the listener with
+//! a wake-up connection; `run` then closes every live connection and
+//! joins all reader threads before returning, so `ace serve` exits
+//! cleanly (the CI smoke `wait`s on exactly this).
+
+pub mod b64;
+pub mod client;
+pub mod frame;
+pub mod proto;
+
+use crate::json::{self, Value};
+use crate::pubsub::{Broker, Message};
+use frame::{read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME};
+use proto::{Envelope, ProtoError, Request};
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+/// Server tuning knobs (`ace serve --shards --max-frame`).
+pub struct ServeConfig {
+    /// Literal-shard count for the underlying broker.
+    pub shards: usize,
+    /// Frame-size cap, bytes (see [`frame`]).
+    pub max_frame: usize,
+    /// Broker (and `Message::origin`) name.
+    pub broker_name: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards: 8,
+            max_frame: DEFAULT_MAX_FRAME,
+            broker_name: "serve".into(),
+        }
+    }
+}
+
+/// A bound (but not yet serving) server.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    broker: Broker,
+    stop: Arc<AtomicBool>,
+    max_frame: usize,
+}
+
+fn now_ts() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`; port 0 for an ephemeral
+    /// port — the integration tests do this).
+    pub fn bind(addr: &str, cfg: &ServeConfig) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            addr,
+            broker: Broker::with_shards(cfg.broker_name.as_str(), cfg.shards),
+            stop: Arc::new(AtomicBool::new(false)),
+            max_frame: cfg.max_frame,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A handle to the underlying broker (for in-process assertions).
+    pub fn broker(&self) -> Broker {
+        self.broker.clone()
+    }
+
+    /// Accept and serve until a client sends `shutdown`. Joins every
+    /// connection thread before returning.
+    pub fn run(self) -> io::Result<()> {
+        // reader-side clones of every live connection, so shutdown can
+        // unblock readers parked in `read_frame`
+        let live: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut readers = Vec::new();
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            if let Ok(clone) = stream.try_clone() {
+                live.lock().unwrap().push(clone);
+            }
+            let broker = self.broker.clone();
+            let stop = self.stop.clone();
+            let addr = self.addr;
+            let max_frame = self.max_frame;
+            readers.push(thread::spawn(move || {
+                handle_conn(stream, broker, stop, addr, max_frame);
+            }));
+        }
+        // stop flag is set: sever every live connection so blocked
+        // readers return, then join them (their writers flush first)
+        for s in live.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for r in readers {
+            let _ = r.join();
+        }
+        Ok(())
+    }
+}
+
+/// Serialize an envelope onto a writer queue (best effort — a gone
+/// writer means the connection is already tearing down).
+fn send(wtx: &Sender<Vec<u8>>, v: &Value) {
+    let _ = wtx.send(json::to_string(v).into_bytes());
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    broker: Broker,
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+    max_frame: usize,
+) {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    let (wtx, wrx) = channel::<Vec<u8>>();
+    let writer_thread = thread::spawn(move || {
+        for body in wrx {
+            if write_frame(&mut writer, &body).is_err() {
+                break;
+            }
+        }
+        let _ = writer.shutdown(Shutdown::Both);
+    });
+    let mut sub_ids: Vec<u64> = Vec::new();
+    let mut shutting_down = false;
+    loop {
+        let bytes = match read_frame(&mut reader, max_frame) {
+            Ok(Some(bytes)) => bytes,
+            // clean close (or severed by shutdown)
+            Ok(None) | Err(FrameError::Io(_)) => break,
+            Err(e @ FrameError::Oversized { .. }) => {
+                // the unread body makes the stream unresumable: answer,
+                // then close THIS connection only
+                send(
+                    &wtx,
+                    &proto::error(
+                        None,
+                        now_ts(),
+                        "oversized-frame",
+                        &format!("{e}; closing this connection"),
+                    ),
+                );
+                break;
+            }
+        };
+        let env = match proto::parse_request(&bytes) {
+            Ok(env) => env,
+            Err(ProtoError {
+                code,
+                message,
+                request_id,
+            }) => {
+                // malformed CONTENT is recoverable: typed error, keep
+                // serving this connection
+                send(
+                    &wtx,
+                    &proto::error(request_id.as_deref(), now_ts(), code, &message),
+                );
+                continue;
+            }
+        };
+        if dispatch(env, &broker, &wtx, &mut sub_ids) {
+            shutting_down = true;
+            break;
+        }
+    }
+    // tear down this connection's subscriptions (forwarder threads see
+    // their channels close and exit), then let the writer drain
+    for id in sub_ids {
+        broker.unsubscribe(id);
+    }
+    drop(wtx);
+    let _ = writer_thread.join();
+    if shutting_down {
+        // only AFTER our writer flushed the shutdown_ok: stop the
+        // accept loop and poke it awake
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(addr);
+    }
+}
+
+/// Handle one request; returns true when the server should shut down.
+fn dispatch(env: Envelope, broker: &Broker, wtx: &Sender<Vec<u8>>, sub_ids: &mut Vec<u64>) -> bool {
+    let rid = env.request_id.as_deref();
+    match env.req {
+        Request::Publish {
+            topic,
+            payload,
+            retain,
+        } => match broker.publish_opts(Message::new(topic, payload), retain) {
+            Ok(reached) => send(wtx, &proto::publish_ok(rid, now_ts(), reached)),
+            Err(e) => send(wtx, &proto::error(rid, now_ts(), "invalid-topic", &e)),
+        },
+        Request::Subscribe { filter } => match broker.subscribe(&filter) {
+            Ok(handle) => {
+                sub_ids.push(handle.id);
+                // ack BEFORE spawning the forwarder, so the client sees
+                // subscribe_ok ahead of any retained replays
+                send(wtx, &proto::subscribe_ok(rid, now_ts(), handle.id));
+                let ftx = wtx.clone();
+                let sub_id = handle.id;
+                thread::spawn(move || {
+                    for m in handle.rx.iter() {
+                        let body = json::to_string(&proto::message(now_ts(), sub_id, &m));
+                        if ftx.send(body.into_bytes()).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            Err(e) => send(wtx, &proto::error(rid, now_ts(), "invalid-filter", &e)),
+        },
+        Request::Unsubscribe { id } => {
+            // only ids owned by THIS connection are removable — one
+            // client cannot sever another's subscription
+            let removed = if let Some(pos) = sub_ids.iter().position(|&s| s == id) {
+                sub_ids.remove(pos);
+                broker.unsubscribe(id);
+                true
+            } else {
+                false
+            };
+            send(wtx, &proto::unsubscribe_ok(rid, now_ts(), removed));
+        }
+        Request::Stats => send(
+            wtx,
+            &proto::stats_ok(
+                rid,
+                now_ts(),
+                &broker.name(),
+                broker.shard_count(),
+                &broker.stats(),
+            ),
+        ),
+        Request::Shutdown => {
+            send(wtx, &proto::shutdown_ok(rid, now_ts()));
+            return true;
+        }
+    }
+    false
+}
+
+/// The in-repo smoke client `ace serve-probe` runs against a live
+/// server: exercises every op end-to-end over localhost, asserts the
+/// results, and (by default) sends `shutdown` so the server exits
+/// cleanly. Returns an error on ANY mismatch — the CI job fails on a
+/// non-zero exit.
+pub fn probe(addr: &str, send_shutdown: bool) -> Result<(), String> {
+    use client::Client;
+    let retry = Duration::from_millis(250);
+    let mut c1 = Client::connect_retry(addr, 40, retry)
+        .map_err(|e| format!("probe could not connect to {addr}: {e}"))?;
+    println!("probe: connected to {addr}");
+
+    let st0 = c1.stats()?;
+    let pubs0 = st0.get("stats").get("pubCount").as_f64().unwrap_or(-1.0);
+    if pubs0 < 0.0 {
+        return Err(format!("malformed stats_ok: {st0}"));
+    }
+    println!(
+        "probe: broker '{}' with {} shards, {} publishes so far",
+        st0.get("broker").as_str().unwrap_or("?"),
+        st0.get("shards").as_f64().unwrap_or(0.0) as usize,
+        pubs0 as u64
+    );
+
+    // live pub/sub across two connections
+    let sub_id = c1.subscribe("probe/#")?;
+    let mut c2 = Client::connect(addr).map_err(|e| format!("second connect failed: {e}"))?;
+    let reached = c2.publish("probe/x/y", b"hello-from-c2", false)?;
+    if reached != 1 {
+        return Err(format!("expected to reach 1 subscriber, reached {reached}"));
+    }
+    let d = c1
+        .recv_message(Duration::from_secs(5))?
+        .ok_or("no delivery within 5s")?;
+    if d.subscription_id != sub_id || d.topic != "probe/x/y" || d.payload != b"hello-from-c2" {
+        return Err(format!("wrong delivery: {d:?}"));
+    }
+    println!("probe: cross-connection delivery OK ({} -> {})", d.origin, d.topic);
+
+    // retained replay for a late subscriber on a third connection
+    c2.publish("probe/cfg/threshold", b"0.8", true)?;
+    if c1
+        .recv_message(Duration::from_secs(5))?
+        .ok_or("no retained-publish delivery within 5s")?
+        .payload
+        != b"0.8"
+    {
+        return Err("wildcard subscriber missed the retained publish".into());
+    }
+    let mut c3 = Client::connect(addr).map_err(|e| format!("third connect failed: {e}"))?;
+    c3.subscribe("probe/cfg/+")?;
+    let replay = c3
+        .recv_message(Duration::from_secs(5))?
+        .ok_or("no retained replay within 5s")?;
+    if replay.topic != "probe/cfg/threshold" || replay.payload != b"0.8" {
+        return Err(format!("wrong retained replay: {replay:?}"));
+    }
+    println!("probe: retained replay to a late subscriber OK");
+
+    // unsubscribe stops delivery
+    if !c1.unsubscribe(sub_id)? {
+        return Err("unsubscribe of a live id reported removed=false".into());
+    }
+    let reached = c2.publish("probe/x/y", b"nobody-home", false)?;
+    if reached != 0 {
+        return Err(format!("expected 0 subscribers after unsubscribe, reached {reached}"));
+    }
+
+    // protocol robustness: malformed JSON answers a typed error and
+    // the connection keeps working
+    c2.send_raw(b"{definitely not json")
+        .map_err(|e| format!("raw send failed: {e}"))?;
+    match c2.read_response() {
+        Err(e) if e.starts_with("bad-json") => {}
+        other => return Err(format!("expected a bad-json error envelope, got {other:?}")),
+    }
+    c2.stats()
+        .map_err(|e| format!("connection died after a malformed frame: {e}"))?;
+    println!("probe: malformed frame answered with a typed error; connection survived");
+
+    // totals: exactly the 3 publishes this probe made
+    let st1 = c1.stats()?;
+    let pubs1 = st1.get("stats").get("pubCount").as_f64().unwrap_or(-1.0);
+    if pubs1 - pubs0 != 3.0 {
+        return Err(format!("expected 3 new publishes, stats says {}", pubs1 - pubs0));
+    }
+
+    if send_shutdown {
+        c1.shutdown()?;
+        println!("probe: shutdown acknowledged");
+    }
+    println!("probe: all checks passed");
+    Ok(())
+}

@@ -1,0 +1,316 @@
+//! The serve wire protocol: JSON request/response envelopes.
+//!
+//! Every frame carries one JSON object with a `type` discriminator.
+//! Requests may carry a client-chosen `requestId` (any string), which
+//! the matching response echoes verbatim; every server-built envelope
+//! carries a `timestamp` (unix seconds, f64). Deliveries are pushed as
+//! unsolicited `message` envelopes, so a client must be prepared to
+//! see them interleaved with responses (see `serve::client`).
+//!
+//! Ops (request `type` → response `type`):
+//!
+//! | request       | fields                                   | response         |
+//! |---------------|------------------------------------------|------------------|
+//! | `publish`     | `topic`, `payload` (base64), `retain`?   | `publish_ok` (`reached`) |
+//! | `subscribe`   | `filter`                                 | `subscribe_ok` (`subscriptionId`) |
+//! | `unsubscribe` | `subscriptionId`                         | `unsubscribe_ok` (`removed`) |
+//! | `stats`       | —                                        | `stats_ok` (`stats`, `broker`, `shards`) |
+//! | `shutdown`    | —                                        | `shutdown_ok`    |
+//!
+//! Any failure becomes an `error` envelope: `code` (stable
+//! machine-readable slug), `message` (human text), plus the echoed
+//! `requestId` when the request got far enough to surface one.
+//! Subscription ids fit exactly in a JSON f64 by construction
+//! (`pubsub::shard` caps shards so ids stay below 2^53).
+
+use super::b64;
+use crate::json::{self, Value};
+use crate::pubsub::{BrokerStats, Message};
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Publish {
+        topic: String,
+        payload: Vec<u8>,
+        retain: bool,
+    },
+    Subscribe {
+        filter: String,
+    },
+    Unsubscribe {
+        id: u64,
+    },
+    Stats,
+    Shutdown,
+}
+
+/// A request plus its envelope metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    /// Client-chosen correlation id, echoed in the response.
+    pub request_id: Option<String>,
+    pub req: Request,
+}
+
+/// A typed protocol error — becomes an `error` envelope on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProtoError {
+    /// Stable machine-readable slug (`bad-json`, `bad-type`, ...).
+    pub code: &'static str,
+    pub message: String,
+    /// Echoed when the envelope parsed far enough to surface one.
+    pub request_id: Option<String>,
+}
+
+impl ProtoError {
+    fn new(code: &'static str, message: impl Into<String>) -> Self {
+        ProtoError {
+            code,
+            message: message.into(),
+            request_id: None,
+        }
+    }
+}
+
+fn required_str(v: &Value, field: &str, op: &str) -> Result<String, ProtoError> {
+    v.get(field).as_str().map(str::to_string).ok_or_else(|| {
+        ProtoError::new(
+            "missing-field",
+            format!("'{op}' needs a string '{field}' field"),
+        )
+    })
+}
+
+/// Parse one frame body into a request envelope.
+pub fn parse_request(bytes: &[u8]) -> Result<Envelope, ProtoError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|e| ProtoError::new("bad-utf8", format!("frame is not UTF-8: {e}")))?;
+    let v = json::parse(text)
+        .map_err(|e| ProtoError::new("bad-json", format!("frame is not JSON: {e}")))?;
+    if v.as_obj().is_none() {
+        return Err(ProtoError::new("bad-envelope", "frame is not a JSON object"));
+    }
+    let request_id = v.get("requestId").as_str().map(str::to_string);
+    let fail = |e: ProtoError| ProtoError {
+        request_id: request_id.clone(),
+        ..e
+    };
+    let Some(kind) = v.get("type").as_str() else {
+        return Err(fail(ProtoError::new(
+            "bad-envelope",
+            "envelope needs a string 'type' field",
+        )));
+    };
+    let req = match kind {
+        "publish" => {
+            let topic = required_str(&v, "topic", "publish").map_err(&fail)?;
+            let payload = match v.get("payload") {
+                Value::Null => Vec::new(),
+                Value::Str(s) => b64::decode(s).map_err(|e| {
+                    fail(ProtoError::new(
+                        "bad-payload",
+                        format!("'payload' is not base64: {e}"),
+                    ))
+                })?,
+                _ => {
+                    return Err(fail(ProtoError::new(
+                        "bad-payload",
+                        "'payload' must be a base64 string",
+                    )))
+                }
+            };
+            let retain = match v.get("retain") {
+                Value::Null => false,
+                other => other.as_bool().ok_or_else(|| {
+                    fail(ProtoError::new("bad-envelope", "'retain' must be a boolean"))
+                })?,
+            };
+            Request::Publish {
+                topic,
+                payload,
+                retain,
+            }
+        }
+        "subscribe" => Request::Subscribe {
+            filter: required_str(&v, "filter", "subscribe").map_err(&fail)?,
+        },
+        "unsubscribe" => {
+            let id = v.get("subscriptionId").as_f64().ok_or_else(|| {
+                fail(ProtoError::new(
+                    "missing-field",
+                    "'unsubscribe' needs a numeric 'subscriptionId' field",
+                ))
+            })?;
+            if id < 0.0 || id.fract() != 0.0 {
+                return Err(fail(ProtoError::new(
+                    "bad-envelope",
+                    "'subscriptionId' must be a non-negative integer",
+                )));
+            }
+            Request::Unsubscribe { id: id as u64 }
+        }
+        "stats" => Request::Stats,
+        "shutdown" => Request::Shutdown,
+        other => {
+            return Err(fail(ProtoError::new(
+                "bad-type",
+                format!(
+                    "unknown op '{other}' (expected publish, subscribe, \
+                     unsubscribe, stats, or shutdown)"
+                ),
+            )))
+        }
+    };
+    Ok(Envelope { request_id, req })
+}
+
+fn envelope(kind: &str, request_id: Option<&str>, ts: f64, mut extra: Vec<(&str, Value)>) -> Value {
+    let mut pairs = vec![
+        ("type", Value::str(kind)),
+        ("timestamp", Value::Num(ts)),
+    ];
+    if let Some(rid) = request_id {
+        pairs.push(("requestId", Value::str(rid)));
+    }
+    pairs.append(&mut extra);
+    Value::obj(pairs)
+}
+
+/// `publish` succeeded; `reached` subscribers got the message now.
+pub fn publish_ok(request_id: Option<&str>, ts: f64, reached: usize) -> Value {
+    envelope(
+        "publish_ok",
+        request_id,
+        ts,
+        vec![("reached", Value::num(reached as f64))],
+    )
+}
+
+/// `subscribe` succeeded; deliveries will carry `subscriptionId`.
+pub fn subscribe_ok(request_id: Option<&str>, ts: f64, id: u64) -> Value {
+    envelope(
+        "subscribe_ok",
+        request_id,
+        ts,
+        vec![("subscriptionId", Value::num(id as f64))],
+    )
+}
+
+/// `unsubscribe` response; `removed` is false for unknown ids.
+pub fn unsubscribe_ok(request_id: Option<&str>, ts: f64, removed: bool) -> Value {
+    envelope(
+        "unsubscribe_ok",
+        request_id,
+        ts,
+        vec![("removed", Value::Bool(removed))],
+    )
+}
+
+/// `stats` response: the broker's lock-free counter snapshot.
+pub fn stats_ok(
+    request_id: Option<&str>,
+    ts: f64,
+    broker: &str,
+    shards: usize,
+    st: &BrokerStats,
+) -> Value {
+    envelope(
+        "stats_ok",
+        request_id,
+        ts,
+        vec![
+            ("broker", Value::str(broker)),
+            ("shards", Value::num(shards as f64)),
+            (
+                "stats",
+                Value::obj(vec![
+                    ("pubCount", Value::num(st.pub_count as f64)),
+                    ("pubBytes", Value::num(st.pub_bytes as f64)),
+                    ("deliverCount", Value::num(st.deliver_count as f64)),
+                    ("deliverBytes", Value::num(st.deliver_bytes as f64)),
+                    ("subscriptions", Value::num(st.subscriptions as f64)),
+                ]),
+            ),
+        ],
+    )
+}
+
+/// `shutdown` acknowledged; the server stops accepting and exits.
+pub fn shutdown_ok(request_id: Option<&str>, ts: f64) -> Value {
+    envelope("shutdown_ok", request_id, ts, vec![])
+}
+
+/// Any failure, as a typed envelope the client can switch on.
+pub fn error(request_id: Option<&str>, ts: f64, code: &str, message: &str) -> Value {
+    envelope(
+        "error",
+        request_id,
+        ts,
+        vec![("code", Value::str(code)), ("message", Value::str(message))],
+    )
+}
+
+/// An asynchronous delivery push for subscription `sub_id`.
+pub fn message(ts: f64, sub_id: u64, m: &Message) -> Value {
+    envelope(
+        "message",
+        None,
+        ts,
+        vec![
+            ("subscriptionId", Value::num(sub_id as f64)),
+            ("topic", Value::str(m.topic.as_str())),
+            ("payload", Value::str(b64::encode(&m.payload))),
+            ("origin", Value::str(&*m.origin)),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_id_survives_op_level_failures() {
+        let e = parse_request(br#"{"type":"publish","requestId":"r9"}"#).unwrap_err();
+        assert_eq!(e.code, "missing-field");
+        assert_eq!(e.request_id.as_deref(), Some("r9"));
+        let e = parse_request(br#"{"type":"warp","requestId":"r10"}"#).unwrap_err();
+        assert_eq!(e.code, "bad-type");
+        assert_eq!(e.request_id.as_deref(), Some("r10"));
+    }
+
+    #[test]
+    fn envelope_level_failures_are_typed() {
+        assert_eq!(parse_request(b"\xff\xfe").unwrap_err().code, "bad-utf8");
+        assert_eq!(parse_request(b"{oops").unwrap_err().code, "bad-json");
+        assert_eq!(parse_request(b"[1,2]").unwrap_err().code, "bad-envelope");
+        assert_eq!(parse_request(b"{}").unwrap_err().code, "bad-envelope");
+        assert_eq!(
+            parse_request(br#"{"type":"publish","topic":"a","payload":"!!"}"#)
+                .unwrap_err()
+                .code,
+            "bad-payload"
+        );
+        assert_eq!(
+            parse_request(br#"{"type":"unsubscribe","subscriptionId":-1}"#)
+                .unwrap_err()
+                .code,
+            "bad-envelope"
+        );
+    }
+
+    #[test]
+    fn optional_fields_default() {
+        let env = parse_request(br#"{"type":"publish","topic":"a/b"}"#).unwrap();
+        assert_eq!(
+            env.req,
+            Request::Publish {
+                topic: "a/b".into(),
+                payload: vec![],
+                retain: false
+            }
+        );
+        assert_eq!(env.request_id, None);
+    }
+}

@@ -1,0 +1,263 @@
+//! The `ace serve` wire surface, pinned end to end:
+//!
+//! * GOLDEN round-trips for every op — exact request parses and exact
+//!   response byte strings (the serializer emits sorted keys and
+//!   integral numbers bare, so these are stable);
+//! * TCP integration against a live server on an ephemeral port —
+//!   split/partial writes reassemble, an oversized frame is answered
+//!   and isolated to its own connection, malformed JSON gets a typed
+//!   error without killing the connection, retained replay arrives in
+//!   retain order after the subscribe ack, and the in-repo probe
+//!   (what CI's smoke job runs) passes with a clean server join.
+
+use ace::json;
+use ace::pubsub::{BrokerStats, Message};
+use ace::serve::client::Client;
+use ace::serve::frame::{read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME};
+use ace::serve::proto::{self, Envelope, Request};
+use ace::serve::{probe, ServeConfig, Server};
+use std::io::Write;
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+// ---------------------------------------------------------------- //
+//  goldens                                                          //
+// ---------------------------------------------------------------- //
+
+#[test]
+fn golden_roundtrip_every_op() {
+    // publish (all fields)
+    let env = proto::parse_request(
+        br#"{"payload":"aGk=","requestId":"r1","retain":true,"topic":"a/b","type":"publish"}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        env,
+        Envelope {
+            request_id: Some("r1".into()),
+            req: Request::Publish {
+                topic: "a/b".into(),
+                payload: b"hi".to_vec(),
+                retain: true
+            }
+        }
+    );
+    assert_eq!(
+        json::to_string(&proto::publish_ok(Some("r1"), 42.0, 2)),
+        r#"{"reached":2,"requestId":"r1","timestamp":42,"type":"publish_ok"}"#
+    );
+
+    // subscribe
+    let env = proto::parse_request(br#"{"filter":"a/#","requestId":"r2","type":"subscribe"}"#)
+        .unwrap();
+    assert_eq!(
+        env.req,
+        Request::Subscribe {
+            filter: "a/#".into()
+        }
+    );
+    let id = (1u64 << 40) | 1; // first subscription in shard 0
+    assert_eq!(
+        json::to_string(&proto::subscribe_ok(Some("r2"), 42.0, id)),
+        r#"{"requestId":"r2","subscriptionId":1099511627777,"timestamp":42,"type":"subscribe_ok"}"#
+    );
+
+    // unsubscribe
+    let env = proto::parse_request(
+        br#"{"requestId":"r3","subscriptionId":1099511627777,"type":"unsubscribe"}"#,
+    )
+    .unwrap();
+    assert_eq!(env.req, Request::Unsubscribe { id });
+    assert_eq!(
+        json::to_string(&proto::unsubscribe_ok(Some("r3"), 42.0, false)),
+        r#"{"removed":false,"requestId":"r3","timestamp":42,"type":"unsubscribe_ok"}"#
+    );
+
+    // stats
+    let env = proto::parse_request(br#"{"requestId":"r4","type":"stats"}"#).unwrap();
+    assert_eq!(env.req, Request::Stats);
+    let st = BrokerStats {
+        pub_count: 4,
+        pub_bytes: 9,
+        deliver_count: 3,
+        deliver_bytes: 7,
+        subscriptions: 2,
+    };
+    assert_eq!(
+        json::to_string(&proto::stats_ok(Some("r4"), 42.5, "serve", 8, &st)),
+        concat!(
+            r#"{"broker":"serve","requestId":"r4","shards":8,"#,
+            r#""stats":{"deliverBytes":7,"deliverCount":3,"pubBytes":9,"pubCount":4,"subscriptions":2},"#,
+            r#""timestamp":42.5,"type":"stats_ok"}"#
+        )
+    );
+
+    // shutdown
+    let env = proto::parse_request(br#"{"requestId":"r5","type":"shutdown"}"#).unwrap();
+    assert_eq!(env.req, Request::Shutdown);
+    assert_eq!(
+        json::to_string(&proto::shutdown_ok(Some("r5"), 42.0)),
+        r#"{"requestId":"r5","timestamp":42,"type":"shutdown_ok"}"#
+    );
+
+    // error + message push
+    assert_eq!(
+        json::to_string(&proto::error(Some("r6"), 42.0, "bad-json", "nope")),
+        r#"{"code":"bad-json","message":"nope","requestId":"r6","timestamp":42,"type":"error"}"#
+    );
+    assert_eq!(
+        json::to_string(&proto::message(42.0, 7, &Message::new("a/b", *b"hi"))),
+        concat!(
+            r#"{"origin":"","payload":"aGk=","subscriptionId":7,"#,
+            r#""timestamp":42,"topic":"a/b","type":"message"}"#
+        )
+    );
+}
+
+// ---------------------------------------------------------------- //
+//  live-server helpers                                              //
+// ---------------------------------------------------------------- //
+
+fn start_server(cfg: &ServeConfig) -> (String, thread::JoinHandle<std::io::Result<()>>) {
+    let server = Server::bind("127.0.0.1:0", cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().to_string();
+    (addr, thread::spawn(move || server.run()))
+}
+
+fn stop_server(addr: &str, handle: thread::JoinHandle<std::io::Result<()>>) {
+    let mut c = Client::connect(addr).expect("connect for shutdown");
+    c.shutdown().expect("shutdown op");
+    handle.join().expect("server thread").expect("clean accept-loop exit");
+}
+
+#[test]
+fn probe_passes_and_server_joins_cleanly() {
+    let (addr, handle) = start_server(&ServeConfig::default());
+    // the exact smoke CI runs: probe sends shutdown itself
+    probe(&addr, true).expect("probe against a live server");
+    handle.join().expect("server thread").expect("clean accept-loop exit");
+}
+
+#[test]
+fn split_and_partial_writes_are_reassembled() {
+    let (addr, handle) = start_server(&ServeConfig::default());
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    let body = br#"{"requestId":"slow","type":"stats"}"#;
+    let mut wire = (body.len() as u32).to_be_bytes().to_vec();
+    wire.extend_from_slice(body);
+    // one byte per write, flushed — the server's frame reader must
+    // reassemble across arbitrarily fragmented reads
+    for b in wire {
+        raw.write_all(&[b]).unwrap();
+        raw.flush().unwrap();
+        thread::sleep(Duration::from_millis(1));
+    }
+    let resp = read_frame(&mut raw, DEFAULT_MAX_FRAME)
+        .unwrap()
+        .expect("a response frame");
+    let v = json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+    assert_eq!(v.get("type").as_str(), Some("stats_ok"));
+    assert_eq!(v.get("requestId").as_str(), Some("slow"));
+    stop_server(&addr, handle);
+}
+
+#[test]
+fn oversized_frame_is_answered_and_isolated_to_its_connection() {
+    let cfg = ServeConfig {
+        max_frame: 1024,
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start_server(&cfg);
+
+    // an innocent bystander with a live subscription
+    let mut bystander = Client::connect(&addr).unwrap();
+    bystander.subscribe("news/#").unwrap();
+
+    // the offender claims a 1 MiB frame against a 1 KiB cap
+    let mut offender = TcpStream::connect(&addr).unwrap();
+    offender
+        .write_all(&(1_048_576u32).to_be_bytes())
+        .unwrap();
+    offender.flush().unwrap();
+    let resp = read_frame(&mut offender, DEFAULT_MAX_FRAME)
+        .unwrap()
+        .expect("an error frame before the close");
+    let v = json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+    assert_eq!(v.get("type").as_str(), Some("error"));
+    assert_eq!(v.get("code").as_str(), Some("oversized-frame"));
+    // ... then the offender's connection (and ONLY its) is closed
+    match read_frame(&mut offender, DEFAULT_MAX_FRAME) {
+        Ok(None) | Err(FrameError::Io(_)) => {}
+        other => panic!("offender connection should be closed, got {other:?}"),
+    }
+
+    // the bystander is unaffected: publishes still flow to it
+    let mut publisher = Client::connect(&addr).unwrap();
+    assert_eq!(publisher.publish("news/x", b"still-alive", false).unwrap(), 1);
+    let d = bystander
+        .recv_message(Duration::from_secs(5))
+        .unwrap()
+        .expect("bystander delivery");
+    assert_eq!(d.payload, b"still-alive");
+    stop_server(&addr, handle);
+}
+
+#[test]
+fn malformed_json_is_recoverable_on_the_same_connection() {
+    let (addr, handle) = start_server(&ServeConfig::default());
+    let mut c = Client::connect(&addr).unwrap();
+    for garbage in [&b"{broken"[..], &b"\xff\xfe"[..], &b"[1,2,3]"[..], &b"{}"[..]] {
+        c.send_raw(garbage).unwrap();
+        let err = c.read_response().expect_err("garbage must be rejected");
+        let code = err.split(':').next().unwrap();
+        assert!(
+            ["bad-json", "bad-utf8", "bad-envelope"].contains(&code),
+            "unexpected error code in {err:?}"
+        );
+    }
+    // four rejects later, the connection still serves requests
+    c.stats().expect("connection survived the garbage");
+    stop_server(&addr, handle);
+}
+
+#[test]
+fn retained_replay_arrives_in_retain_order_after_the_ack() {
+    let cfg = ServeConfig {
+        shards: 4,
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start_server(&cfg);
+    let mut publisher = Client::connect(&addr).unwrap();
+    // distinct first levels, so the retained messages spread across
+    // shards; the replay must still arrive in RETAIN order
+    for i in 0..6 {
+        publisher
+            .publish(&format!("lvl{i}/cfg"), format!("v{i}").as_bytes(), true)
+            .unwrap();
+    }
+    let mut late = Client::connect(&addr).unwrap();
+    let sub_id = late.subscribe("#").unwrap();
+    for i in 0..6 {
+        let d = late
+            .recv_message(Duration::from_secs(5))
+            .unwrap()
+            .unwrap_or_else(|| panic!("replay {i} missing"));
+        assert_eq!(d.subscription_id, sub_id);
+        assert_eq!(d.topic, format!("lvl{i}/cfg"), "replay out of retain order");
+        assert_eq!(d.payload, format!("v{i}").as_bytes());
+    }
+    stop_server(&addr, handle);
+}
+
+#[test]
+fn frames_written_by_the_codec_are_read_back_by_the_codec() {
+    // the client and server share one codec; a zero-copy sanity pin
+    // that the length prefix is big-endian and excludes itself
+    let mut buf = Vec::new();
+    write_frame(&mut buf, b"ping").unwrap();
+    assert_eq!(&buf[..4], &4u32.to_be_bytes());
+    assert_eq!(&buf[4..], b"ping");
+    let mut rd = &buf[..];
+    assert_eq!(read_frame(&mut rd, DEFAULT_MAX_FRAME).unwrap().unwrap(), b"ping");
+}
