@@ -603,6 +603,10 @@ pub fn run_fedtrain(cfg: FedConfig) -> Result<FedMetrics> {
 /// through the control plane's plan hook and closes each round on
 /// whoever reports within the round deadline, so scale-downs and
 /// instance restarts never wedge a round.
+#[deprecated(
+    since = "0.1.0",
+    note = "use svcgraph::scenario::run / run_with — the unified dispatcher for all apps"
+)]
 pub fn run_fedtrain_scenario(
     cfg: FedConfig,
     scenario: &LifecycleScenario,

@@ -1087,6 +1087,10 @@ pub struct ScenarioOutcome {
 /// from `run_cell`: the OD sampling interval comes from
 /// `cfg.interval_s` (the factory outlives any single topology), so an
 /// `od` `interval` param inside a scenario topology is ignored.
+#[deprecated(
+    since = "0.1.0",
+    note = "use svcgraph::scenario::run / run_with — the unified dispatcher for all apps"
+)]
 pub fn run_scenario(
     mut cfg: CellConfig,
     svc: ServiceTimes,

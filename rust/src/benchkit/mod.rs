@@ -18,7 +18,9 @@
 //! (`churn_convergence`). The sharded broker adds a MULTI-producer
 //! row (`broker_contention`): N threads publishing disjoint topic
 //! spaces, which the per-first-level shard locks let scale where the
-//! old single `Mutex<Inner>` serialized everything.
+//! old single `Mutex<Inner>` serialized everything. The same object
+//! carries `serve_rtt_per_sec` — publish round-trips through the
+//! pooled `ace serve` TCP front end ([`serve_rtt`]).
 
 use crate::des::queue::{CalendarQueue, EventQueue, HeapQueue};
 use crate::des::{Scheduler, SimEvent};
@@ -493,6 +495,58 @@ pub fn broker_contention(producers: usize, pubs_per_producer: usize) -> Contenti
 }
 
 // ---------------------------------------------------------------------------
+// serve front end: publish round-trip rate
+// ---------------------------------------------------------------------------
+
+/// The serve-engine row (`BENCH_*.json` → `broker_contention` →
+/// `serve_rtt_per_sec`): publish → `publish_ok` round-trips per second
+/// for one client against an in-process `serve::Server` on a real TCP
+/// loopback socket. This is the end-to-end path a connected client
+/// pays — frame codec, poll loop, worker pool, broker dispatch,
+/// response queue — so a regression here catches engine overhead the
+/// raw broker rows cannot see.
+#[derive(Debug, Clone)]
+pub struct ServeRttNumbers {
+    pub pubs: usize,
+    /// Gated metric: publish round-trips per second.
+    pub rtt_per_sec: f64,
+}
+
+/// Measure `pubs` publish round-trips against an ephemeral loopback
+/// server, then shut it down cleanly (the `shutdown` op, so the bench
+/// also exercises the drain-and-join path every run).
+pub fn serve_rtt(pubs: usize) -> ServeRttNumbers {
+    use crate::serve::{client::Client, ServeConfig, Server};
+    let cfg = ServeConfig {
+        shards: 4,
+        broker_name: "bench".into(),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind("127.0.0.1:0", &cfg).expect("bench serve bind");
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run().expect("bench serve run"));
+    let mut c = Client::connect(&addr).open().expect("bench serve connect");
+    // pre-build topics so the measured loop is round-trip cost, not
+    // format! cost; a warm-up burst absorbs lazy shard/pool init
+    let topics: Vec<String> = (0..32).map(|i| format!("bench/t{i}/data")).collect();
+    let payload = vec![0u8; 64];
+    for t in &topics {
+        c.publish(t, &payload, false).expect("bench warm-up publish");
+    }
+    let t0 = Instant::now();
+    for i in 0..pubs {
+        c.publish(&topics[i % topics.len()], &payload, false).expect("bench publish");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    c.shutdown().expect("bench serve shutdown");
+    handle.join().expect("bench serve thread");
+    ServeRttNumbers {
+        pubs,
+        rtt_per_sec: pubs as f64 / dt.max(1e-9),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // end-to-end fabric publish storm
 // ---------------------------------------------------------------------------
 
@@ -942,6 +996,7 @@ pub const CHECKED_METRICS: &[(&str, &str)] = &[
     ("broker", "deliver_per_sec"),
     ("broker", "replay_subscribes_per_sec"),
     ("broker_contention", "publishes_per_sec"),
+    ("broker_contention", "serve_rtt_per_sec"),
     ("netfabric", "hop_pubs_per_sec"),
     ("churn_convergence", "runs_per_sec"),
     ("metro_scale", "metro_events_per_sec"),
@@ -1077,7 +1132,10 @@ mod tests {
             ),
             (
                 "broker_contention",
-                Value::obj(vec![("publishes_per_sec", Value::num(400_000.0 * scale))]),
+                Value::obj(vec![
+                    ("publishes_per_sec", Value::num(400_000.0 * scale)),
+                    ("serve_rtt_per_sec", Value::num(20_000.0 * scale)),
+                ]),
             ),
             ("netfabric", Value::obj(vec![("hop_pubs_per_sec", Value::num(40_000.0 * scale))])),
             (

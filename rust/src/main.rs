@@ -58,11 +58,16 @@
 //!                                    a committed NUMERIC record via a
 //!                                    per-metric max — the CI bench gate
 //!   ace serve [--port P] [--addr HOST:PORT] [--shards N]
-//!             [--max-frame BYTES] [--name NAME]
+//!             [--max-frame BYTES] [--name NAME] [--pool N]
+//!             [--federate HOST:PORT] [--fed-pull F] [--fed-push F]
 //!                                  — the sharded broker behind a
-//!                                    length-framed JSON TCP front end;
-//!                                    blocks until a client sends a
-//!                                    shutdown op
+//!                                    length-framed JSON TCP front end
+//!                                    (one poll loop + a fixed worker
+//!                                    pool); blocks until a client
+//!                                    sends a shutdown op; --federate
+//!                                    bridges the topic space to a
+//!                                    peer `ace serve` over the same
+//!                                    protocol
 //!   ace serve-probe [--addr HOST:PORT] [--no-shutdown]
 //!                                  — in-repo smoke client asserting
 //!                                    pub/sub, retained replay and
@@ -72,16 +77,16 @@
 //! clap is unavailable offline; argument parsing is a ~60-line hand
 //! rolled matcher (DESIGN.md §Substitutions).
 
-use ace::app::fedtrain::{run_fedtrain, run_fedtrain_scenario, run_fedtrain_seeds, FedConfig};
-use ace::app::metro::{run_metro, MetroConfig};
+use ace::app::fedtrain::{run_fedtrain, run_fedtrain_seeds, FedConfig};
+use ace::app::metro::{run_metro, MetroConfig, MetroMetrics};
 use ace::app::videoquery::{
-    fig5_grid, run_cell, run_scenario, run_sweep, CellConfig, Compute, InferCache, Paradigm,
-    ServiceTimes,
+    fig5_grid, run_cell, run_sweep, CellConfig, Compute, InferCache, Paradigm, ServiceTimes,
 };
 use ace::infra::paper_testbed;
 use ace::platform::orchestrator;
 use ace::runtime::{artifacts_dir, Engine, ModelBank};
-use ace::svcgraph::lifecycle::{LifecycleReport, LifecycleScenario};
+use ace::svcgraph::lifecycle::LifecycleReport;
+use ace::svcgraph::scenario::{self, Knobs, Report, Scenario};
 use ace::topology::{Topology, VIDEOQUERY_TOPOLOGY};
 use ace::util::to_secs;
 use ace::video::synth;
@@ -317,53 +322,53 @@ fn print_report(report: &LifecycleReport) {
 }
 
 /// `--scenario FILE`: run an app under the virtual-time control plane
-/// (deploy/update/fail-node/remove ops driving the live graph).
+/// (deploy/update/fail-node/remove ops driving the live graph). The
+/// dispatch itself lives in `svcgraph::scenario` — this function only
+/// translates CLI flags into [`Knobs`] and prints the per-app report.
 fn cmd_svcrun_scenario(args: &Args, path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    // metro scenarios are plain workload configs, not lifecycle
-    // scripts: dispatch on `app: metro` BEFORE the lifecycle parser
-    // (which would reject the missing `ops` block)
-    if ace::yamlite::parse(&text)
-        .ok()
-        .is_some_and(|d| d.get("app").as_str() == Some("metro"))
-    {
-        let mut cfg = MetroConfig::from_yaml(&text)?;
-        cfg.partitions = partitions_flag(args, cfg.partitions.max(1));
-        cfg.threads = match args.usize_or("threads", cfg.partitions) {
-            0 => ace::sweep::default_workers(),
-            t => t,
-        };
-        return run_and_print_metro(&cfg);
-    }
-    let scenario = LifecycleScenario::parse(&text)?;
-    let app = scenario
-        .first_app()
-        .map(|s| s.to_string())
-        .unwrap_or_else(|| args.get("app").unwrap_or("videoquery").to_string());
-    match app.as_str() {
-        "videoquery" => {
-            let paradigm = paradigm_of(args.get("paradigm").unwrap_or("ace"))?;
-            let cfg = CellConfig {
-                paradigm,
-                interval_s: args.f64_or("interval", 0.2),
-                wan_delay_ms: args.f64_or("delay", 0.0),
-                // without --seconds, sample right up to the scenario
-                // horizon so post-redeploy phases still produce crops
-                duration_s: args.f64_or("seconds", to_secs(scenario.duration)),
-                seed: args.f64_or("seed", 1.0) as u64,
-                num_ecs: args.usize_or("ecs", 3),
-                cams_per_ec: args.usize_or("cams", 3),
-                partitions: partitions_flag(args, 1),
-                ..Default::default()
-            };
-            let (svc, compute) = if args.has("real") {
+    let sc = Scenario::parse_with_fallback(&text, args.get("app").unwrap_or("videoquery"))?;
+    let mut knobs = Knobs::default();
+    match &sc {
+        Scenario::Metro(cfg) => {
+            let partitions = partitions_flag(args, cfg.partitions.max(1));
+            knobs.partitions = Some(partitions);
+            knobs.threads = Some(match args.usize_or("threads", partitions) {
+                0 => ace::sweep::default_workers(),
+                t => t,
+            });
+        }
+        Scenario::Lifecycle { app, .. } if app == "videoquery" => {
+            knobs.paradigm = Some(paradigm_of(args.get("paradigm").unwrap_or("ace"))?);
+            knobs.interval_s = Some(args.f64_or("interval", 0.2));
+            knobs.wan_delay_ms = Some(args.f64_or("delay", 0.0));
+            // without --seconds the dispatcher samples right up to the
+            // scenario horizon, so post-redeploy phases produce crops
+            knobs.duration_s = args.get("seconds").and_then(|v| v.parse().ok());
+            knobs.seed = Some(args.f64_or("seed", 1.0) as u64);
+            knobs.num_ecs = Some(args.usize_or("ecs", 3));
+            knobs.cams_per_ec = Some(args.usize_or("cams", 3));
+            knobs.partitions = Some(partitions_flag(args, 1));
+            knobs.video_compute = Some(if args.has("real") {
                 let (bank, svc) = load_real()?;
                 let cache = Arc::new(Mutex::new(InferCache::new()));
                 (svc, Compute::Real { bank, cache })
             } else {
                 (ServiceTimes::synthetic(), Compute::Synthetic { target_bias: 0.05 })
-            };
-            let out = run_scenario(cfg, svc, compute, &scenario)?;
+            });
+        }
+        Scenario::Lifecycle { .. } => {
+            // fedtrain flags; unknown apps fail inside the dispatcher
+            knobs.rounds = Some(args.usize_or("rounds", 12));
+            knobs.num_ecs = Some(args.usize_or("ecs", 3));
+            knobs.wan_delay_ms = Some(args.f64_or("delay", 0.0));
+            knobs.seed = Some(args.f64_or("seed", 42.0) as u64);
+            knobs.step_ms = Some(args.f64_or("step-ms", 200.0));
+            knobs.partitions = Some(partitions_flag(args, 1));
+        }
+    }
+    match scenario::run_with(&sc, knobs)? {
+        Report::Video(out) => {
             print_report(&out.report);
             let m = &out.metrics;
             println!(
@@ -377,20 +382,9 @@ fn cmd_svcrun_scenario(args: &Args, path: &str) -> Result<()> {
                 m.cloud_decided,
             );
             print_nic_util(m);
-            Ok(())
         }
-        "fedtrain" => {
-            let cfg = FedConfig {
-                rounds: args.usize_or("rounds", 12),
-                num_ecs: args.usize_or("ecs", 3),
-                wan_delay_ms: args.f64_or("delay", 0.0),
-                seed: args.f64_or("seed", 42.0) as u64,
-                step_ms: args.f64_or("step-ms", 200.0),
-                partitions: partitions_flag(args, 1),
-                ..Default::default()
-            };
-            let (m, report) = run_fedtrain_scenario(cfg, &scenario)?;
-            print_report(&report);
+        Report::Fed { metrics: m, lifecycle } => {
+            print_report(&lifecycle);
             println!("| round | trainers | mean loss | global acc |");
             println!("|---|---|---|---|");
             for r in &m.rounds {
@@ -406,10 +400,15 @@ fn cmd_svcrun_scenario(args: &Args, path: &str) -> Result<()> {
                 m.wan_bytes as f64 / 1e6,
                 m.virtual_secs,
             );
-            Ok(())
         }
-        other => bail!("scenario deploys unknown app '{other}' (videoquery|fedtrain)"),
+        Report::Metro(m) => {
+            let Scenario::Metro(cfg) = &sc else {
+                bail!("metro report from a non-metro scenario");
+            };
+            print_metro(cfg, &m);
+        }
     }
+    Ok(())
 }
 
 fn cmd_svcrun(args: &Args) -> Result<()> {
@@ -544,6 +543,13 @@ fn cmd_svcrun(args: &Args) -> Result<()> {
 /// Shared reporter for `svcrun --app metro` and metro scenario files.
 fn run_and_print_metro(cfg: &MetroConfig) -> Result<()> {
     let m = run_metro(cfg);
+    print_metro(cfg, &m);
+    Ok(())
+}
+
+/// The metro summary lines (topology shape comes from the config, the
+/// partition/thread counts the run actually used from the metrics).
+fn print_metro(cfg: &MetroConfig, m: &MetroMetrics) {
     println!(
         "svcgraph/metro: {} ECs x {} nodes x {} cams -> frames={} escalated={} replies={} \
          mean RTT {:.1}ms BWC {:.2}MB",
@@ -561,7 +567,6 @@ fn run_and_print_metro(cfg: &MetroConfig) -> Result<()> {
          ({:.0} ev/s on {} partition(s) x {} thread(s))",
         m.events, m.windows, m.wall_secs, m.events_per_sec, m.partitions, m.threads,
     );
-    Ok(())
 }
 
 /// `ace metro-gen`: emit a seeded `scenarios/metro_*.yaml` workload.
@@ -619,6 +624,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         args.usize_or("contention-producers", 4),
         args.usize_or("contention-pubs", 20_000),
     );
+    let rtt = benchkit::serve_rtt(args.usize_or("rtt-pubs", 2_000));
     let hops = benchkit::netfabric_hops(hop_pubs, hop_sinks);
     let churn = benchkit::churn_convergence(churn_nodes, churn_loss, churn_runs);
     let metro_counts: Vec<usize> = [2usize, 4, 8].into_iter().filter(|&p| p <= metro_pmax).collect();
@@ -693,6 +699,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         contention.producers,
         contention.publishes_per_sec,
         contention.publishes_per_sec / contention.single_producer_per_sec.max(1.0)
+    );
+    eprintln!(
+        "serve rtt: {} publish round-trips through the TCP front end -> {:.0} rtt/s",
+        rtt.pubs, rtt.rtt_per_sec
     );
     eprintln!(
         "netfabric hops: {} pubs x {} sinks -> {} deliveries; \
@@ -809,6 +819,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
                     ("producers", Value::Num(contention.producers as f64)),
                     // gated (higher is better): aggregate multi-producer rate
                     ("publishes_per_sec", num(contention.publishes_per_sec)),
+                    // gated: publish round-trips through the `ace serve`
+                    // TCP front end (single client, loopback)
+                    ("serve_rtt_pubs", Value::Num(rtt.pubs as f64)),
+                    ("serve_rtt_per_sec", num(rtt.rtt_per_sec)),
                     // informational: the single-producer reference CI's
                     // parallel>serial check reads
                     (
@@ -1044,8 +1058,24 @@ fn cmd_fig5(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// A comma-separated filter flag (`--fed-pull "a/#,b/+"`); absent or
+/// empty means the match-all `#`.
+fn filter_list(flag: Option<&str>) -> Vec<String> {
+    let filters: Vec<String> = flag
+        .unwrap_or("")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if filters.is_empty() {
+        vec!["#".to_string()]
+    } else {
+        filters
+    }
+}
+
 /// `ace serve`: the sharded broker behind a length-framed JSON TCP
-/// front end. Blocks in the accept loop until a client sends a
+/// front end. Blocks in the poll loop until a client sends a
 /// `shutdown` op (the CI smoke job does exactly that via serve-probe).
 fn cmd_serve(args: &Args) -> Result<()> {
     let port = args.usize_or("port", 7878);
@@ -1053,18 +1083,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .get("addr")
         .map(str::to_string)
         .unwrap_or_else(|| format!("127.0.0.1:{port}"));
+    // --federate HOST:PORT bridges this server to a peer; --fed-pull /
+    // --fed-push narrow the bridged filters (comma-separated, both
+    // default to the match-all "#")
+    let federate = args.get("federate").map(|peer| ace::serve::federate::FederateConfig {
+        peer: peer.to_string(),
+        pull: filter_list(args.get("fed-pull")),
+        push: filter_list(args.get("fed-push")),
+    });
     let cfg = ace::serve::ServeConfig {
         shards: args.usize_or("shards", 8),
         max_frame: args.usize_or("max-frame", ace::serve::frame::DEFAULT_MAX_FRAME),
         broker_name: args.get("name").unwrap_or("serve").to_string(),
+        pool: args.usize_or("pool", 4),
+        federate,
     };
     let server = ace::serve::Server::bind(&addr, &cfg)
         .with_context(|| format!("binding serve listener on {addr}"))?;
     eprintln!(
-        "ace serve: listening on {} ({} shards, {} max frame)",
+        "ace serve: listening on {} ({} shards, {} max frame, pool {}{})",
         server.local_addr(),
         cfg.shards,
-        cfg.max_frame
+        cfg.max_frame,
+        cfg.pool,
+        match &cfg.federate {
+            Some(f) => format!(", federating with {}", f.peer),
+            None => String::new(),
+        }
     );
     server.run().context("serve accept loop failed")?;
     eprintln!("ace serve: shutdown complete");
@@ -1136,6 +1181,7 @@ COMMANDS:
                                               [--partitions N]
                                               [--contention-producers N]
                                               [--contention-pubs N]
+                                              [--rtt-pubs N]
                with --check FILE: exit        [--check BASELINE.json]
                nonzero on throughput          [--tolerance T]
                regressions beyond T (0.25);   [--require-baseline]
@@ -1147,8 +1193,10 @@ COMMANDS:
                no comparable numbers
   serve        the sharded broker behind a    [--port P] [--addr HOST:PORT]
                length-framed JSON TCP front   [--shards N] [--max-frame BYTES]
-               end; runs until a client       [--name NAME]
-               sends a shutdown op
+               end (poll loop + worker pool); [--name NAME] [--pool N]
+               runs until a client sends a    [--federate HOST:PORT]
+               shutdown op; --federate        [--fed-pull FILTERS]
+               bridges to a peer server       [--fed-push FILTERS]
   serve-probe  in-repo smoke client: pub/sub, [--addr HOST:PORT] [--port P]
                retained replay, malformed-    [--no-shutdown]
                frame recovery asserted

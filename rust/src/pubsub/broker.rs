@@ -27,7 +27,7 @@
 //! subscribe replays only the trie paths its filter selects — in
 //! retain order even when the filter spans shards.
 
-use super::shard::{ShardSet, DEFAULT_SHARDS};
+use super::shard::{ShardSet, SubSink, DEFAULT_SHARDS};
 use super::topic;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -155,7 +155,7 @@ impl Broker {
             return Err(format!("invalid filter '{filter}'"));
         }
         let (tx, rx) = channel();
-        let out = self.shards.subscribe(filter, tx);
+        let out = self.shards.subscribe(filter, SubSink::Chan(tx));
         self.counters.subscriptions.fetch_add(1, Ordering::Relaxed);
         self.counters
             .deliver_count
@@ -164,6 +164,40 @@ impl Broker {
             .deliver_bytes
             .fetch_add(out.replayed_bytes, Ordering::Relaxed);
         Ok(SubHandle { id: out.id, rx })
+    }
+
+    /// Subscribe with a callback sink instead of a channel — the
+    /// shard-side dispatch path the `serve` engine and TCP federation
+    /// ride (no forwarder thread per subscription).
+    ///
+    /// `sink(id, message, retained)` runs INLINE under the owning
+    /// shard's lock: for retained replays (before this call returns)
+    /// and for every later matching publish, from the publisher's
+    /// thread. `retained` is retain-as-published — `true` for replays
+    /// AND for live publishes that asked to retain (what a federation
+    /// link forwards so the peer re-retains). The sink must be quick
+    /// and must NOT call back into broker APIs (publish, subscribe,
+    /// unsubscribe — that deadlocks on the shard lock); enqueue into
+    /// your own queue and wake your own loop instead. Returning
+    /// `false` marks the sink dead: it is pruned like a dropped
+    /// channel receiver on the next matching publish. Returns the
+    /// subscription id (valid for [`Broker::unsubscribe`]).
+    pub fn subscribe_sink<F>(&self, filter: &str, sink: F) -> Result<u64, String>
+    where
+        F: Fn(u64, &Message, bool) -> bool + Send + Sync + 'static,
+    {
+        if !topic::valid_filter(filter) {
+            return Err(format!("invalid filter '{filter}'"));
+        }
+        let out = self.shards.subscribe(filter, SubSink::Fn(Arc::new(sink)));
+        self.counters.subscriptions.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .deliver_count
+            .fetch_add(out.replayed, Ordering::Relaxed);
+        self.counters
+            .deliver_bytes
+            .fetch_add(out.replayed_bytes, Ordering::Relaxed);
+        Ok(out.id)
     }
 
     /// Drop subscription `id`: the owning shard is encoded in the id,
@@ -392,7 +426,45 @@ mod tests {
     fn rejects_invalid() {
         let b = Broker::new("b");
         assert!(b.subscribe("a/#/b").is_err());
+        assert!(b.subscribe_sink("a/#/b", |_, _, _| true).is_err());
         assert!(b.publish("a/+/b", b"".to_vec()).is_err());
+    }
+
+    #[test]
+    fn sink_subscriptions_deliver_inline_with_retain_flags() {
+        // the serve engine's shard-side dispatch: replays arrive inside
+        // subscribe_sink itself (retained=true), live publishes arrive
+        // from the publisher's thread with retain-as-published flags
+        let b = Broker::with_shards("b", 4);
+        b.publish_retained("cfg/a", b"old".to_vec()).unwrap();
+        let seen: Arc<std::sync::Mutex<Vec<(String, bool)>>> = Arc::default();
+        let sink_log = seen.clone();
+        let id = b
+            .subscribe_sink("cfg/#", move |_, m, retained| {
+                sink_log.lock().unwrap().push((m.utf8(), retained));
+                true
+            })
+            .unwrap();
+        b.publish("cfg/live", b"x".to_vec()).unwrap();
+        b.publish_retained("cfg/keep", b"y".to_vec()).unwrap();
+        assert_eq!(
+            *seen.lock().unwrap(),
+            vec![
+                ("old".to_string(), true),
+                ("x".to_string(), false),
+                ("y".to_string(), true)
+            ]
+        );
+        b.unsubscribe(id);
+        assert_eq!(b.publish("cfg/live", b"z".to_vec()).unwrap(), 0);
+    }
+
+    #[test]
+    fn refusing_sinks_are_pruned_like_dropped_receivers() {
+        let b = Broker::new("b");
+        b.subscribe_sink("t/x", |_, _, _| false).unwrap();
+        assert_eq!(b.publish("t/x", b"1".to_vec()).unwrap(), 0);
+        assert_eq!(b.stats().subscriptions, 0);
     }
 
     #[test]

@@ -44,7 +44,7 @@ use super::topic::{self, SymbolTable, TopicTrie};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Default literal-shard count for `Broker::new`.
 pub(crate) const DEFAULT_SHARDS: usize = 8;
@@ -59,8 +59,36 @@ pub(crate) const MAX_SHARDS: usize = 1024;
 /// bits above hold `shard index + 1`.
 const LOCAL_BITS: u32 = 40;
 
+/// Where a subscription's matches go: the classic mpsc channel, or a
+/// callback sink invoked inline under the owning shard's lock (the
+/// `serve` engine's shard-side dispatch — no forwarder thread per
+/// subscription). A sink returning `false` is dead and gets pruned
+/// exactly like a channel whose receiver was dropped.
+///
+/// The `bool` argument is "retain as published": `true` both for
+/// retained replays at subscribe time and for live publishes that
+/// asked to retain — what a federation link needs to re-retain on the
+/// peer (MQTT's retain-as-published). Sinks run under the shard lock,
+/// so they MUST NOT call back into broker APIs (publish, subscribe,
+/// unsubscribe would deadlock); enqueue-and-wake only.
+pub(crate) enum SubSink {
+    Chan(Sender<Message>),
+    Fn(Arc<dyn Fn(u64, &Message, bool) -> bool + Send + Sync>),
+}
+
+impl SubSink {
+    /// Deliver one message; `false` means the sink is dead.
+    fn send(&self, id: u64, msg: &Message, retained: bool) -> bool {
+        match self {
+            // Arc payload: the per-subscriber clone is a refcount bump
+            SubSink::Chan(tx) => tx.send(msg.clone()).is_ok(),
+            SubSink::Fn(f) => f(id, msg, retained),
+        }
+    }
+}
+
 struct Subscription {
-    tx: Sender<Message>,
+    sink: SubSink,
     id: u64,
 }
 
@@ -179,13 +207,13 @@ impl ShardSet {
                 .retained
                 .insert(&mut inner.table, &msg.topic, Retained { seq, msg: msg.clone() });
         }
-        deliver(&mut guard, msg, &mut out);
+        deliver(&mut guard, msg, retain, &mut out);
         // the fast path: no wildcard subscribers, no second lock. The
         // literal guard stays held so a concurrent `#` subscribe
         // cannot slip between the two delivery phases (module doc).
         if self.wildcard_subs.load(Ordering::Acquire) > 0 {
             let mut wg = self.wildcard.lock().unwrap();
-            deliver(&mut wg, msg, &mut out);
+            deliver(&mut wg, msg, retain, &mut out);
             self.wildcard_subs.store(wg.subs.len(), Ordering::Release);
         }
         drop(guard);
@@ -196,8 +224,10 @@ impl ShardSet {
     /// global retain order first. Literal-level-0 filters touch one
     /// shard; `+`/`#`-level-0 filters lock every shard (ascending,
     /// wildcard last) so snapshot + insert is atomic against all
-    /// concurrent publishes.
-    pub fn subscribe(&self, filter: &str, tx: Sender<Message>) -> SubscribeOutcome {
+    /// concurrent publishes. The subscription id is assigned BEFORE
+    /// the replay, so a callback sink already knows its id while the
+    /// retained messages stream through it.
+    pub fn subscribe(&self, filter: &str, sink: SubSink) -> SubscribeOutcome {
         let mut replayed: Vec<(u64, Message)> = Vec::new();
         if topic::filter_crosses_shards(filter) {
             let guards: Vec<MutexGuard<'_, ShardInner>> =
@@ -207,11 +237,11 @@ impl ShardSet {
                 g.retained
                     .for_each_name_match(&g.table, filter, |_, r| replayed.push((r.seq, r.msg.clone())));
             }
-            let (count, bytes) = send_replay(&mut replayed, &tx);
             let inner = &mut *wg;
             let id = make_id(self.literal.len(), inner.next_local);
             inner.next_local += 1;
-            inner.subs.insert(&mut inner.table, filter, Subscription { tx, id });
+            let (count, bytes) = send_replay(&mut replayed, id, &sink);
+            inner.subs.insert(&mut inner.table, filter, Subscription { sink, id });
             inner.filters.insert(id, filter.to_string());
             self.wildcard_subs.store(inner.subs.len(), Ordering::Release);
             drop(guards);
@@ -223,10 +253,10 @@ impl ShardSet {
             inner
                 .retained
                 .for_each_name_match(&inner.table, filter, |_, r| replayed.push((r.seq, r.msg.clone())));
-            let (count, bytes) = send_replay(&mut replayed, &tx);
             let id = make_id(si, inner.next_local);
             inner.next_local += 1;
-            inner.subs.insert(&mut inner.table, filter, Subscription { tx, id });
+            let (count, bytes) = send_replay(&mut replayed, id, &sink);
+            inner.subs.insert(&mut inner.table, filter, Subscription { sink, id });
             inner.filters.insert(id, filter.to_string());
             SubscribeOutcome { id, replayed: count, replayed_bytes: bytes }
         }
@@ -260,14 +290,15 @@ impl ShardSet {
 }
 
 /// Deliver to one shard's matches; dead receivers are pruned (each a
-/// targeted trie-path removal, as in the pre-shard broker).
-fn deliver(inner: &mut ShardInner, msg: &Message, out: &mut RouteOutcome) {
+/// targeted trie-path removal, as in the pre-shard broker). `retained`
+/// is the publish's retain flag, handed to callback sinks verbatim
+/// (retain-as-published).
+fn deliver(inner: &mut ShardInner, msg: &Message, retained: bool, out: &mut RouteOutcome) {
     let mut dead: Vec<u64> = Vec::new();
     // O(topic depth) trie walk; matches come back in insertion
     // (i.e. subscription) order
     for s in inner.subs.collect_matches(&inner.table, &msg.topic) {
-        // Arc payload: per-subscriber clone is a refcount bump
-        if s.tx.send(msg.clone()).is_ok() {
+        if s.sink.send(s.id, msg, retained) {
             out.reached += 1;
             out.delivered_bytes += msg.payload.len() as u64;
         } else {
@@ -281,14 +312,16 @@ fn deliver(inner: &mut ShardInner, msg: &Message, out: &mut RouteOutcome) {
     }
 }
 
-/// Sort a replay batch into global retain order and send it; the
-/// receiver cannot be dropped yet (the caller holds both ends).
-fn send_replay(replayed: &mut Vec<(u64, Message)>, tx: &Sender<Message>) -> (u64, u64) {
+/// Sort a replay batch into global retain order and send it (replays
+/// are retained by definition, so sinks see `retained == true`); a
+/// channel receiver cannot be dropped yet (the caller holds both
+/// ends), a callback sink may already refuse.
+fn send_replay(replayed: &mut Vec<(u64, Message)>, id: u64, sink: &SubSink) -> (u64, u64) {
     replayed.sort_unstable_by_key(|&(seq, _)| seq);
     let (mut count, mut bytes) = (0u64, 0u64);
     for (_, m) in replayed.drain(..) {
         let b = m.payload.len() as u64;
-        if tx.send(m).is_ok() {
+        if sink.send(id, &m, true) {
             count += 1;
             bytes += b;
         }
@@ -322,8 +355,8 @@ mod tests {
     fn unsubscribe_routes_by_id_without_scanning() {
         let set = ShardSet::new(4);
         let (tx, _rx) = channel();
-        let a = set.subscribe("alpha/x", tx.clone());
-        let b = set.subscribe("#", tx);
+        let a = set.subscribe("alpha/x", SubSink::Chan(tx.clone()));
+        let b = set.subscribe("#", SubSink::Chan(tx));
         assert_ne!(a.id, b.id);
         assert_eq!(set.unsubscribe(a.id), 1);
         assert_eq!(set.unsubscribe(a.id), 0, "second removal is a no-op");
@@ -336,9 +369,9 @@ mod tests {
     fn wildcard_gauge_tracks_level0_wildcards_only() {
         let set = ShardSet::new(4);
         let (tx, _rx) = channel();
-        set.subscribe("alpha/#", tx.clone());
+        set.subscribe("alpha/#", SubSink::Chan(tx.clone()));
         assert_eq!(set.wildcard_subs.load(Ordering::Acquire), 0, "literal level 0");
-        let w = set.subscribe("+/status", tx);
+        let w = set.subscribe("+/status", SubSink::Chan(tx));
         assert_eq!(set.wildcard_subs.load(Ordering::Acquire), 1);
         set.unsubscribe(w.id);
         assert_eq!(set.wildcard_subs.load(Ordering::Acquire), 0);

@@ -1,26 +1,242 @@
-//! A small synchronous client for the serve protocol — the in-repo
-//! test client the CI smoke job drives (`ace serve-probe`) and the
-//! integration tests reuse.
+//! A typed synchronous client for the serve protocol — what
+//! `ace serve-probe`, the integration tests, and the federation link
+//! (`serve::federate`) drive.
 //!
 //! One TCP connection, blocking request/response with client-side
-//! correlation ids. Asynchronous `message` pushes can arrive BETWEEN a
-//! request and its response; the client parks them in a queue that
+//! correlation ids, behind a typed surface: [`Client::connect`]
+//! returns a [`Connect`] builder, every op returns a domain value or a
+//! [`ServeError`], and protocol failures carry the server's stable
+//! error slug as an [`ErrorCode`] instead of a stringly-typed prefix.
+//! Asynchronous `message` pushes can arrive BETWEEN a request and its
+//! response; the client parks them in a queue that
 //! [`Client::recv_message`] drains.
 
 use super::b64;
 use super::frame::{read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME};
 use crate::json::{self, Value};
 use std::collections::VecDeque;
+use std::fmt;
 use std::io;
 use std::net::TcpStream;
 use std::time::Duration;
 
-/// One client connection.
-pub struct Client {
-    stream: TcpStream,
-    /// `message` pushes that arrived while waiting for a response.
-    parked: VecDeque<Value>,
-    next_req: u64,
+/// The server's stable machine-readable error slugs, typed. Unknown
+/// slugs (a newer server) land in [`ErrorCode::Other`] instead of
+/// failing to parse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadUtf8,
+    BadJson,
+    BadEnvelope,
+    BadType,
+    MissingField,
+    BadPayload,
+    BadScenario,
+    ScenarioFailed,
+    OversizedFrame,
+    InvalidTopic,
+    InvalidFilter,
+    UnsupportedVersion,
+    Other(String),
+}
+
+impl ErrorCode {
+    /// The typed code for a wire slug.
+    pub fn from_slug(s: &str) -> ErrorCode {
+        match s {
+            "bad-utf8" => ErrorCode::BadUtf8,
+            "bad-json" => ErrorCode::BadJson,
+            "bad-envelope" => ErrorCode::BadEnvelope,
+            "bad-type" => ErrorCode::BadType,
+            "missing-field" => ErrorCode::MissingField,
+            "bad-payload" => ErrorCode::BadPayload,
+            "bad-scenario" => ErrorCode::BadScenario,
+            "scenario-failed" => ErrorCode::ScenarioFailed,
+            "oversized-frame" => ErrorCode::OversizedFrame,
+            "invalid-topic" => ErrorCode::InvalidTopic,
+            "invalid-filter" => ErrorCode::InvalidFilter,
+            "unsupported-version" => ErrorCode::UnsupportedVersion,
+            other => ErrorCode::Other(other.to_string()),
+        }
+    }
+
+    /// The wire slug for this code.
+    pub fn slug(&self) -> &str {
+        match self {
+            ErrorCode::BadUtf8 => "bad-utf8",
+            ErrorCode::BadJson => "bad-json",
+            ErrorCode::BadEnvelope => "bad-envelope",
+            ErrorCode::BadType => "bad-type",
+            ErrorCode::MissingField => "missing-field",
+            ErrorCode::BadPayload => "bad-payload",
+            ErrorCode::BadScenario => "bad-scenario",
+            ErrorCode::ScenarioFailed => "scenario-failed",
+            ErrorCode::OversizedFrame => "oversized-frame",
+            ErrorCode::InvalidTopic => "invalid-topic",
+            ErrorCode::InvalidFilter => "invalid-filter",
+            ErrorCode::UnsupportedVersion => "unsupported-version",
+            ErrorCode::Other(s) => s,
+        }
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.slug())
+    }
+}
+
+/// Everything that can go wrong talking to a serve server.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Socket-level failure (connect, read, write).
+    Io(io::Error),
+    /// The server closed the connection at a frame boundary.
+    Closed,
+    /// The server answered with a typed `error` envelope.
+    Protocol { code: ErrorCode, message: String },
+    /// The server answered with something this client cannot make
+    /// sense of (malformed envelope, mismatched correlation id).
+    Unexpected(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Io(e) => write!(f, "transport error: {e}"),
+            ServeError::Closed => f.write_str("server closed the connection"),
+            // the legacy "code: message" shape, now typed
+            ServeError::Protocol { code, message } => write!(f, "{code}: {message}"),
+            ServeError::Unexpected(s) => f.write_str(s),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for ServeError {
+    fn from(e: io::Error) -> Self {
+        ServeError::Io(e)
+    }
+}
+
+impl ServeError {
+    /// Is this a protocol error with the given code?
+    pub fn is_code(&self, code: &ErrorCode) -> bool {
+        matches!(self, ServeError::Protocol { code: c, .. } if c == code)
+    }
+}
+
+/// The `stats_ok` reply, typed: broker identity, protocol version,
+/// capability slugs, and the counter snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub broker: String,
+    pub shards: usize,
+    /// Protocol version the server speaks (0 on a pre-`v` server).
+    pub v: u64,
+    /// Capability slugs ([`super::proto::CAPABILITIES`]); empty on a
+    /// pre-capability server.
+    pub capabilities: Vec<String>,
+    pub pub_count: u64,
+    pub pub_bytes: u64,
+    pub deliver_count: u64,
+    pub deliver_bytes: u64,
+    pub subscriptions: u64,
+}
+
+impl Stats {
+    /// Does the server advertise `cap`?
+    pub fn has_capability(&self, cap: &str) -> bool {
+        self.capabilities.iter().any(|c| c == cap)
+    }
+
+    fn from_value(v: &Value) -> Result<Stats, ServeError> {
+        let st = v.get("stats");
+        let count = |field: &str| -> Result<u64, ServeError> {
+            st.get(field)
+                .as_f64()
+                .map(|f| f as u64)
+                .ok_or_else(|| ServeError::Unexpected(format!("malformed stats_ok: {v}")))
+        };
+        Ok(Stats {
+            broker: v.get("broker").as_str().unwrap_or("").to_string(),
+            shards: v.get("shards").as_usize().unwrap_or(0),
+            v: v.get("v").as_f64().unwrap_or(0.0) as u64,
+            capabilities: v
+                .get("capabilities")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|c| c.as_str().map(str::to_string)).collect())
+                .unwrap_or_default(),
+            pub_count: count("pubCount")?,
+            pub_bytes: count("pubBytes")?,
+            deliver_count: count("deliverCount")?,
+            deliver_bytes: count("deliverBytes")?,
+            subscriptions: count("subscriptions")?,
+        })
+    }
+}
+
+/// A typed non-push response envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    PublishOk { reached: usize },
+    SubscribeOk { id: u64 },
+    UnsubscribeOk { removed: bool },
+    StatsOk(Stats),
+    ScenarioOk { app: String, report: Value },
+    ShutdownOk,
+}
+
+impl Response {
+    /// Parse a response envelope; `error` envelopes become
+    /// [`ServeError::Protocol`].
+    pub fn parse(v: Value) -> Result<Response, ServeError> {
+        let malformed = |v: &Value, what: &str| {
+            ServeError::Unexpected(format!("malformed {what}: {v}"))
+        };
+        match v.get("type").as_str() {
+            Some("publish_ok") => v
+                .get("reached")
+                .as_usize()
+                .map(|reached| Response::PublishOk { reached })
+                .ok_or_else(|| malformed(&v, "publish_ok")),
+            Some("subscribe_ok") => v
+                .get("subscriptionId")
+                .as_f64()
+                .map(|f| Response::SubscribeOk { id: f as u64 })
+                .ok_or_else(|| malformed(&v, "subscribe_ok")),
+            Some("unsubscribe_ok") => v
+                .get("removed")
+                .as_bool()
+                .map(|removed| Response::UnsubscribeOk { removed })
+                .ok_or_else(|| malformed(&v, "unsubscribe_ok")),
+            Some("stats_ok") => Stats::from_value(&v).map(Response::StatsOk),
+            Some("scenario_ok") => match v.get("app").as_str() {
+                Some(app) => Ok(Response::ScenarioOk {
+                    app: app.to_string(),
+                    report: v.get("report").clone(),
+                }),
+                None => Err(malformed(&v, "scenario_ok")),
+            },
+            Some("shutdown_ok") => Ok(Response::ShutdownOk),
+            Some("error") => Err(ServeError::Protocol {
+                code: ErrorCode::from_slug(v.get("code").as_str().unwrap_or("?")),
+                message: v.get("message").as_str().unwrap_or("?").to_string(),
+            }),
+            Some(other) => Err(ServeError::Unexpected(format!(
+                "unknown response type '{other}': {v}"
+            ))),
+            None => Err(ServeError::Unexpected(format!("untyped envelope: {v}"))),
+        }
+    }
 }
 
 /// A delivery received over the wire.
@@ -29,33 +245,105 @@ pub struct Delivery {
     pub subscription_id: u64,
     pub topic: String,
     pub payload: Vec<u8>,
+    /// Broker the message FIRST entered (federation loop suppression).
     pub origin: String,
+    /// Retain-as-published: a retained replay, or a live publish that
+    /// asked to retain (what a federation link re-retains on its peer).
+    pub retained: bool,
 }
 
-impl Client {
-    /// Connect once.
-    pub fn connect(addr: &str) -> io::Result<Client> {
-        Ok(Client {
-            stream: TcpStream::connect(addr)?,
-            parked: VecDeque::new(),
-            next_req: 1,
+impl Delivery {
+    fn from_value(v: &Value) -> Result<Delivery, ServeError> {
+        Ok(Delivery {
+            subscription_id: v.get("subscriptionId").as_f64().unwrap_or(0.0) as u64,
+            topic: v.get("topic").as_str().unwrap_or("").to_string(),
+            payload: b64::decode(v.get("payload").as_str().unwrap_or("")).map_err(|e| {
+                ServeError::Unexpected(format!("malformed message payload: {e}"))
+            })?,
+            origin: v.get("origin").as_str().unwrap_or("").to_string(),
+            retained: v.get("retained").as_bool().unwrap_or(false),
         })
     }
+}
 
-    /// Connect with retries — lets a probe start before the server
-    /// finishes binding (the CI smoke starts both concurrently).
-    pub fn connect_retry(addr: &str, attempts: u32, delay: Duration) -> io::Result<Client> {
-        let mut last = None;
-        for _ in 0..attempts.max(1) {
-            match Self::connect(addr) {
-                Ok(c) => return Ok(c),
+/// Connection builder: `Client::connect(addr).retries(..).open()`.
+#[derive(Debug, Clone)]
+pub struct Connect {
+    addr: String,
+    attempts: u32,
+    delay: Duration,
+    max_frame: usize,
+}
+
+impl Connect {
+    /// Retry the TCP connect `attempts` times, `delay` apart — lets a
+    /// probe start before the server finishes binding (the CI smoke
+    /// starts both concurrently). Default: one attempt.
+    pub fn retries(mut self, attempts: u32, delay: Duration) -> Connect {
+        self.attempts = attempts.max(1);
+        self.delay = delay;
+        self
+    }
+
+    /// Frame-size cap for INBOUND frames (default
+    /// [`DEFAULT_MAX_FRAME`]).
+    pub fn max_frame(mut self, max: usize) -> Connect {
+        self.max_frame = max;
+        self
+    }
+
+    /// Open the connection.
+    pub fn open(self) -> Result<Client, ServeError> {
+        let mut last: Option<io::Error> = None;
+        for attempt in 0..self.attempts {
+            match TcpStream::connect(&self.addr) {
+                Ok(stream) => {
+                    return Ok(Client {
+                        stream,
+                        parked: VecDeque::new(),
+                        next_req: 1,
+                        max_frame: self.max_frame,
+                    })
+                }
                 Err(e) => {
                     last = Some(e);
-                    std::thread::sleep(delay);
+                    if attempt + 1 < self.attempts {
+                        std::thread::sleep(self.delay);
+                    }
                 }
             }
         }
-        Err(last.unwrap_or_else(|| io::Error::other("no connection attempts made")))
+        Err(ServeError::Io(last.unwrap_or_else(|| {
+            io::Error::other("no connection attempts made")
+        })))
+    }
+}
+
+/// One client connection.
+pub struct Client {
+    stream: TcpStream,
+    /// `message` pushes that arrived while waiting for a response.
+    parked: VecDeque<Value>,
+    next_req: u64,
+    max_frame: usize,
+}
+
+impl Client {
+    /// Start building a connection to `addr` (e.g. `127.0.0.1:7878`).
+    pub fn connect(addr: &str) -> Connect {
+        Connect {
+            addr: addr.to_string(),
+            attempts: 1,
+            delay: Duration::from_millis(250),
+            max_frame: DEFAULT_MAX_FRAME,
+        }
+    }
+
+    /// A raw clone of the underlying stream — the federation link's
+    /// writer half sends fire-and-forget publish envelopes on it while
+    /// the reader half keeps draining this client.
+    pub fn try_clone_stream(&self) -> io::Result<TcpStream> {
+        self.stream.try_clone()
     }
 
     /// Send raw bytes as one frame — protocol-robustness tests use
@@ -65,146 +353,220 @@ impl Client {
     }
 
     /// Read the next frame of any kind (responses AND pushes).
-    fn read_envelope(&mut self) -> Result<Value, String> {
-        match read_frame(&mut self.stream, DEFAULT_MAX_FRAME) {
+    fn read_envelope(&mut self) -> Result<Value, ServeError> {
+        match read_frame(&mut self.stream, self.max_frame) {
             Ok(Some(bytes)) => {
-                let text = String::from_utf8(bytes).map_err(|e| e.to_string())?;
-                json::parse(&text).map_err(|e| e.to_string())
+                let text = String::from_utf8(bytes)
+                    .map_err(|e| ServeError::Unexpected(format!("non-UTF-8 frame: {e}")))?;
+                json::parse(&text)
+                    .map_err(|e| ServeError::Unexpected(format!("non-JSON frame: {e}")))
             }
-            Ok(None) => Err("server closed the connection".into()),
-            Err(FrameError::Oversized { len, max }) => {
-                Err(format!("server sent a {len}-byte frame (cap {max})"))
-            }
-            Err(FrameError::Io(e)) => Err(format!("transport error: {e}")),
+            Ok(None) => Err(ServeError::Closed),
+            Err(FrameError::Oversized { len, max }) => Err(ServeError::Unexpected(format!(
+                "server sent a {len}-byte frame (cap {max})"
+            ))),
+            Err(FrameError::Io(e)) => Err(ServeError::Io(e)),
         }
     }
 
     /// Read frames until a non-`message` envelope arrives, parking any
-    /// pushes; error envelopes become `Err("code: message")`.
-    pub fn read_response(&mut self) -> Result<Value, String> {
+    /// pushes; `error` envelopes become [`ServeError::Protocol`].
+    pub fn read_response(&mut self) -> Result<Response, ServeError> {
         loop {
             let v = self.read_envelope()?;
-            match v.get("type").as_str() {
-                Some("message") => self.parked.push_back(v),
-                Some("error") => {
-                    return Err(format!(
-                        "{}: {}",
-                        v.get("code").as_str().unwrap_or("?"),
-                        v.get("message").as_str().unwrap_or("?")
-                    ))
-                }
-                Some(_) => return Ok(v),
-                None => return Err(format!("untyped envelope: {v}")),
+            if v.get("type").as_str() == Some("message") {
+                self.parked.push_back(v);
+                continue;
             }
+            return Response::parse(v);
         }
     }
 
     /// One request/response exchange; verifies the echoed requestId.
-    fn rpc(&mut self, mut fields: Vec<(&str, Value)>) -> Result<Value, String> {
+    fn rpc(&mut self, mut fields: Vec<(&str, Value)>) -> Result<Response, ServeError> {
         let rid = format!("r{}", self.next_req);
         self.next_req += 1;
         fields.push(("requestId", Value::str(rid.as_str())));
         let body = json::to_string(&Value::obj(fields));
-        self.send_raw(body.as_bytes())
-            .map_err(|e| format!("send failed: {e}"))?;
-        let resp = self.read_response()?;
-        match resp.get("requestId").as_str() {
-            Some(got) if got == rid => Ok(resp),
-            other => Err(format!("requestId mismatch: sent {rid:?}, got {other:?}")),
+        self.send_raw(body.as_bytes())?;
+        loop {
+            let v = self.read_envelope()?;
+            if v.get("type").as_str() == Some("message") {
+                self.parked.push_back(v);
+                continue;
+            }
+            // an error that never parsed far enough to echo the id
+            // still belongs to this in-flight request (the protocol is
+            // strictly one response per request, in order)
+            match v.get("requestId").as_str() {
+                Some(got) if got == rid => {}
+                None if v.get("type").as_str() == Some("error") => {}
+                other => {
+                    return Err(ServeError::Unexpected(format!(
+                        "requestId mismatch: sent {rid:?}, got {other:?}"
+                    )))
+                }
+            }
+            return Response::parse(v);
         }
     }
 
     /// Publish; returns the number of subscribers reached.
-    pub fn publish(&mut self, topic: &str, payload: &[u8], retain: bool) -> Result<usize, String> {
-        let resp = self.rpc(vec![
+    pub fn publish(
+        &mut self,
+        topic: &str,
+        payload: &[u8],
+        retain: bool,
+    ) -> Result<usize, ServeError> {
+        self.publish_fields(topic, payload, retain, None)
+    }
+
+    /// Publish with a pre-stamped origin (federation passthrough — the
+    /// message keeps the broker name it FIRST entered).
+    pub fn publish_from(
+        &mut self,
+        topic: &str,
+        payload: &[u8],
+        retain: bool,
+        origin: &str,
+    ) -> Result<usize, ServeError> {
+        self.publish_fields(topic, payload, retain, Some(origin))
+    }
+
+    fn publish_fields(
+        &mut self,
+        topic: &str,
+        payload: &[u8],
+        retain: bool,
+        origin: Option<&str>,
+    ) -> Result<usize, ServeError> {
+        let mut fields = vec![
             ("type", Value::str("publish")),
             ("topic", Value::str(topic)),
             ("payload", Value::str(b64::encode(payload))),
             ("retain", Value::Bool(retain)),
-        ])?;
-        resp.get("reached")
-            .as_usize()
-            .ok_or_else(|| format!("malformed publish_ok: {resp}"))
+        ];
+        if let Some(o) = origin {
+            fields.push(("origin", Value::str(o)));
+        }
+        match self.rpc(fields)? {
+            Response::PublishOk { reached } => Ok(reached),
+            other => Err(ServeError::Unexpected(format!(
+                "expected publish_ok, got {other:?}"
+            ))),
+        }
     }
 
     /// Subscribe; returns the server-assigned subscription id.
-    pub fn subscribe(&mut self, filter: &str) -> Result<u64, String> {
-        let resp = self.rpc(vec![
+    pub fn subscribe(&mut self, filter: &str) -> Result<u64, ServeError> {
+        match self.rpc(vec![
             ("type", Value::str("subscribe")),
             ("filter", Value::str(filter)),
-        ])?;
-        resp.get("subscriptionId")
-            .as_f64()
-            .map(|f| f as u64)
-            .ok_or_else(|| format!("malformed subscribe_ok: {resp}"))
+        ])? {
+            Response::SubscribeOk { id } => Ok(id),
+            other => Err(ServeError::Unexpected(format!(
+                "expected subscribe_ok, got {other:?}"
+            ))),
+        }
     }
 
     /// Unsubscribe; `Ok(false)` means the id was unknown (or owned by
     /// another connection).
-    pub fn unsubscribe(&mut self, id: u64) -> Result<bool, String> {
-        let resp = self.rpc(vec![
+    pub fn unsubscribe(&mut self, id: u64) -> Result<bool, ServeError> {
+        match self.rpc(vec![
             ("type", Value::str("unsubscribe")),
             ("subscriptionId", Value::num(id as f64)),
-        ])?;
-        resp.get("removed")
-            .as_bool()
-            .ok_or_else(|| format!("malformed unsubscribe_ok: {resp}"))
+        ])? {
+            Response::UnsubscribeOk { removed } => Ok(removed),
+            other => Err(ServeError::Unexpected(format!(
+                "expected unsubscribe_ok, got {other:?}"
+            ))),
+        }
     }
 
-    /// The broker's counter snapshot (the raw `stats_ok` envelope).
-    pub fn stats(&mut self) -> Result<Value, String> {
-        self.rpc(vec![("type", Value::str("stats"))])
+    /// The broker's identity, capabilities, and counter snapshot.
+    pub fn stats(&mut self) -> Result<Stats, ServeError> {
+        match self.rpc(vec![("type", Value::str("stats"))])? {
+            Response::StatsOk(st) => Ok(st),
+            other => Err(ServeError::Unexpected(format!(
+                "expected stats_ok, got {other:?}"
+            ))),
+        }
     }
 
-    /// Ask the server to stop accepting and exit its accept loop.
-    pub fn shutdown(&mut self) -> Result<(), String> {
-        self.rpc(vec![("type", Value::str("shutdown"))]).map(|_| ())
+    /// Run a yamlite scenario document on the server
+    /// (`svcgraph::scenario`); returns the dispatched app and its
+    /// summary report. Blocks until the run completes.
+    pub fn scenario(&mut self, doc: &str) -> Result<(String, Value), ServeError> {
+        match self.rpc(vec![
+            ("type", Value::str("scenario")),
+            ("scenario", Value::str(b64::encode(doc.as_bytes()))),
+        ])? {
+            Response::ScenarioOk { app, report } => Ok((app, report)),
+            other => Err(ServeError::Unexpected(format!(
+                "expected scenario_ok, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Ask the server to stop accepting and exit its serve loop.
+    pub fn shutdown(&mut self) -> Result<(), ServeError> {
+        match self.rpc(vec![("type", Value::str("shutdown"))])? {
+            Response::ShutdownOk => Ok(()),
+            other => Err(ServeError::Unexpected(format!(
+                "expected shutdown_ok, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Next envelope of ANY kind within `timeout` — parked pushes
+    /// first, then the socket. `Ok(None)` on timeout. The federation
+    /// link reads with this (its writer half publishes concurrently,
+    /// so responses and pushes interleave on the read side).
+    pub fn next_envelope(&mut self, timeout: Duration) -> Result<Option<Value>, ServeError> {
+        if let Some(v) = self.parked.pop_front() {
+            return Ok(Some(v));
+        }
+        self.stream.set_read_timeout(Some(timeout))?;
+        let got = read_frame(&mut self.stream, self.max_frame);
+        self.stream.set_read_timeout(None)?;
+        match got {
+            Ok(Some(bytes)) => {
+                let text = String::from_utf8(bytes)
+                    .map_err(|e| ServeError::Unexpected(format!("non-UTF-8 frame: {e}")))?;
+                json::parse(&text)
+                    .map(Some)
+                    .map_err(|e| ServeError::Unexpected(format!("non-JSON frame: {e}")))
+            }
+            Ok(None) => Err(ServeError::Closed),
+            // a timeout with NO bytes read is a clean "nothing yet"; a
+            // timeout mid-frame would surface as UnexpectedEof or a
+            // later desync, which callers never trigger (the server
+            // writes frames atomically before the deadline)
+            Err(FrameError::Io(e))
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                Ok(None)
+            }
+            Err(FrameError::Io(e)) => Err(ServeError::Io(e)),
+            Err(FrameError::Oversized { len, max }) => Err(ServeError::Unexpected(format!(
+                "server sent a {len}-byte frame (cap {max})"
+            ))),
+        }
     }
 
     /// Next delivery: a parked push if one is queued, otherwise block
     /// on the socket up to `timeout`. `Ok(None)` on timeout.
-    pub fn recv_message(&mut self, timeout: Duration) -> Result<Option<Delivery>, String> {
-        let v = if let Some(v) = self.parked.pop_front() {
-            v
-        } else {
-            self.stream
-                .set_read_timeout(Some(timeout))
-                .map_err(|e| e.to_string())?;
-            let got = read_frame(&mut self.stream, DEFAULT_MAX_FRAME);
-            self.stream
-                .set_read_timeout(None)
-                .map_err(|e| e.to_string())?;
-            match got {
-                Ok(Some(bytes)) => {
-                    let text = String::from_utf8(bytes).map_err(|e| e.to_string())?;
-                    json::parse(&text).map_err(|e| e.to_string())?
-                }
-                Ok(None) => return Err("server closed the connection".into()),
-                // a timeout with NO bytes read is a clean "nothing yet";
-                // a timeout mid-frame would surface as UnexpectedEof or
-                // a later desync, which tests never trigger (the server
-                // writes frames atomically before the deadline)
-                Err(FrameError::Io(e))
-                    if matches!(
-                        e.kind(),
-                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
-                    ) =>
-                {
-                    return Ok(None)
-                }
-                Err(e) => return Err(e.to_string()),
+    pub fn recv_message(&mut self, timeout: Duration) -> Result<Option<Delivery>, ServeError> {
+        match self.next_envelope(timeout)? {
+            None => Ok(None),
+            Some(v) if v.get("type").as_str() == Some("message") => {
+                Delivery::from_value(&v).map(Some)
             }
-        };
-        if v.get("type").as_str() != Some("message") {
-            return Err(format!("expected a message push, got: {v}"));
+            Some(v) => Err(ServeError::Unexpected(format!(
+                "expected a message push, got: {v}"
+            ))),
         }
-        Ok(Some(Delivery {
-            subscription_id: v.get("subscriptionId").as_f64().unwrap_or(0.0) as u64,
-            topic: v.get("topic").as_str().unwrap_or("").to_string(),
-            payload: b64::decode(v.get("payload").as_str().unwrap_or(""))
-                .map_err(|e| format!("malformed message payload: {e}"))?,
-            origin: v.get("origin").as_str().unwrap_or("").to_string(),
-        }))
     }
 
     /// Let tests observe the unsolicited-push backlog.

@@ -1,0 +1,288 @@
+//! TCP federation: join two `ace serve` processes into one logical
+//! topic space over the serve protocol itself.
+//!
+//! A [`Link`] is a protocol CLIENT of a peer server, owned by the
+//! local one. It does two things:
+//!
+//! * PULL — subscribe the configured filters on the peer; every
+//!   delivery push that comes back is republished into the local
+//!   broker with its `origin` preserved, and with `retain` set when
+//!   the push carried the retain-as-published flag (so the peer's
+//!   retained state is re-retained locally, including the replay burst
+//!   that fires right at subscribe time).
+//! * PUSH — register `Broker::subscribe_sink` closures on the local
+//!   broker for the configured filters; matching local messages are
+//!   sent to the peer as `publish` envelopes carrying their `origin`
+//!   and retain flag. Registration replays local retained state, so
+//!   the peer inherits it too.
+//!
+//! # Loop suppression
+//!
+//! Two rules make any federation graph loop-free:
+//!
+//! * a message is only ever PUSHED by the broker it first entered
+//!   (`origin == local name`) — a republished copy is never pushed
+//!   onward;
+//! * the pull side never republishes a message whose `origin` is the
+//!   local broker — a copy that came home is dropped.
+//!
+//! Every copy of a message therefore moves strictly away from its
+//! origin broker (one push hop, any number of pull hops), and no
+//! broker republishes the same origin-stamped message it already owns.
+//! Multi-path pull topologies can still deliver duplicates (as in MQTT
+//! bridging); the two-process pairing `ace serve --federate` sets up
+//! cannot.
+//!
+//! The link thread reconnects with backoff until the peer appears,
+//! re-running the subscribe handshake each time; outbound sinks write
+//! straight from the publisher's thread (TCP buffering absorbs bursts;
+//! a slow peer back-pressures local publishers rather than dropping).
+
+use super::b64;
+use super::client::Client;
+use super::frame::write_frame;
+use crate::json::{self, Value};
+use crate::pubsub::{Broker, Message};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// Federation settings (`ace serve --federate <addr>`).
+#[derive(Debug, Clone)]
+pub struct FederateConfig {
+    /// Peer server address (`host:port` of the other `ace serve`).
+    pub peer: String,
+    /// Filters to PULL from the peer into the local broker.
+    pub pull: Vec<String>,
+    /// Filters whose local matches are PUSHED to the peer.
+    pub push: Vec<String>,
+}
+
+impl FederateConfig {
+    /// Federate everything, both directions.
+    pub fn all(peer: impl Into<String>) -> FederateConfig {
+        FederateConfig {
+            peer: peer.into(),
+            pull: vec!["#".into()],
+            push: vec!["#".into()],
+        }
+    }
+}
+
+/// Forwarding counters, snapshot via [`Link::stats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LinkStats {
+    /// Messages republished locally from peer pushes.
+    pub inbound: u64,
+    /// Local messages forwarded to the peer.
+    pub outbound: u64,
+    /// Sessions re-established after the first.
+    pub reconnects: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    inbound: AtomicU64,
+    outbound: AtomicU64,
+    reconnects: AtomicU64,
+}
+
+/// A running federation link (owned by `Server::run`, or directly by
+/// the federation tests).
+pub struct Link {
+    own_stop: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+    thread: JoinHandle<()>,
+}
+
+impl Link {
+    /// Start the link thread: connect (and keep reconnecting) to
+    /// `cfg.peer`, bridging against `local`. The link also winds down
+    /// when `server_stop` flips — the owning server's shutdown.
+    pub fn start(cfg: FederateConfig, local: Broker, server_stop: Arc<AtomicBool>) -> Link {
+        let own_stop = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(Counters::default());
+        let thread = {
+            let own_stop = own_stop.clone();
+            let counters = counters.clone();
+            thread::Builder::new()
+                .name("serve-federate".into())
+                .spawn(move || run_link(cfg, local, server_stop, own_stop, counters))
+                .expect("spawn federation link thread")
+        };
+        Link {
+            own_stop,
+            counters,
+            thread,
+        }
+    }
+
+    /// Forwarding counters so far.
+    pub fn stats(&self) -> LinkStats {
+        LinkStats {
+            inbound: self.counters.inbound.load(Ordering::Relaxed),
+            outbound: self.counters.outbound.load(Ordering::Relaxed),
+            reconnects: self.counters.reconnects.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the link and join its thread (returns within the link's
+    /// 250 ms read tick).
+    pub fn shutdown(self) {
+        self.own_stop.store(true, Ordering::SeqCst);
+        let _ = self.thread.join();
+    }
+}
+
+fn stopped(server_stop: &AtomicBool, own_stop: &AtomicBool) -> bool {
+    server_stop.load(Ordering::SeqCst) || own_stop.load(Ordering::SeqCst)
+}
+
+fn run_link(
+    cfg: FederateConfig,
+    local: Broker,
+    server_stop: Arc<AtomicBool>,
+    own_stop: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+) {
+    let mut sessions = 0u64;
+    while !stopped(&server_stop, &own_stop) {
+        sessions += 1;
+        if sessions > 1 {
+            counters.reconnects.fetch_add(1, Ordering::Relaxed);
+        }
+        if link_session(&cfg, &local, &server_stop, &own_stop, &counters).is_ok() {
+            return; // clean stop
+        }
+        // peer gone (or not up yet): back off, stop-aware
+        for _ in 0..5 {
+            if stopped(&server_stop, &own_stop) {
+                return;
+            }
+            thread::sleep(Duration::from_millis(100));
+        }
+    }
+}
+
+/// One connected session: handshake, subscribe the pulls, register the
+/// push sinks, then pump inbound deliveries until the link stops
+/// (`Ok`) or the connection dies (`Err` — the caller reconnects).
+fn link_session(
+    cfg: &FederateConfig,
+    local: &Broker,
+    server_stop: &AtomicBool,
+    own_stop: &AtomicBool,
+    counters: &Arc<Counters>,
+) -> Result<(), String> {
+    let mut c = Client::connect(&cfg.peer)
+        .open()
+        .map_err(|e| format!("federation connect to {}: {e}", cfg.peer))?;
+    let peer = c.stats().map_err(|e| format!("federation handshake: {e}"))?;
+    if !peer.has_capability("origin-publish") {
+        // without origin passthrough the peer would re-stamp every
+        // forwarded message as its own and loop suppression breaks
+        return Err(format!(
+            "peer '{}' does not advertise the origin-publish capability",
+            peer.broker
+        ));
+    }
+    for f in &cfg.pull {
+        c.subscribe(f).map_err(|e| format!("federation pull subscribe '{f}': {e}"))?;
+    }
+
+    // outbound half: local matches with a LOCAL origin go to the peer
+    // as fire-and-forget publish envelopes on a clone of the stream
+    // (their publish_ok responses are discarded by the pump below)
+    let writer: Arc<Mutex<TcpStream>> = Arc::new(Mutex::new(
+        c.try_clone_stream().map_err(|e| format!("federation stream clone: {e}"))?,
+    ));
+    let alive = Arc::new(AtomicBool::new(true));
+    let local_name = local.name();
+    let mut push_ids = Vec::with_capacity(cfg.push.len());
+    for f in &cfg.push {
+        let writer = writer.clone();
+        let alive = alive.clone();
+        let origin_mine = local_name.clone();
+        let counters = counters.clone();
+        let id = local
+            .subscribe_sink(f, move |_id, m, retained| {
+                if !alive.load(Ordering::SeqCst) {
+                    return false; // session over: let the broker prune us
+                }
+                if m.origin != origin_mine {
+                    // only the origin broker pushes a message onward
+                    return true;
+                }
+                let body = json::to_string(&publish_envelope(m, retained)).into_bytes();
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &body).is_err() {
+                    alive.store(false, Ordering::SeqCst);
+                    return false;
+                }
+                counters.outbound.fetch_add(1, Ordering::Relaxed);
+                true
+            })
+            .map_err(|e| format!("federation push subscribe '{f}': {e}"))?;
+        push_ids.push(id);
+    }
+
+    // inbound pump: republish peer deliveries, drop everything else
+    // (publish_ok chatter from the outbound half)
+    let result = loop {
+        if stopped(server_stop, own_stop) {
+            break Ok(());
+        }
+        if !alive.load(Ordering::SeqCst) {
+            break Err("federation outbound write failed".to_string());
+        }
+        match c.next_envelope(Duration::from_millis(250)) {
+            Ok(None) => continue,
+            Ok(Some(v)) => {
+                if v.get("type").as_str() != Some("message") {
+                    continue;
+                }
+                let origin = v.get("origin").as_str().unwrap_or("");
+                if origin == &*local_name {
+                    continue; // our own message came home: drop it
+                }
+                let Some(topic) = v.get("topic").as_str() else {
+                    continue;
+                };
+                let Ok(payload) = b64::decode(v.get("payload").as_str().unwrap_or("")) else {
+                    continue;
+                };
+                let retained = v.get("retained").as_bool().unwrap_or(false);
+                let mut msg = Message::new(topic, payload);
+                if !origin.is_empty() {
+                    msg.origin = Arc::from(origin);
+                }
+                if local.publish_opts(msg, retained).is_ok() {
+                    counters.inbound.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(e) => break Err(format!("federation read: {e}")),
+        }
+    };
+
+    // session teardown: stop the sinks, drop the peer subscriptions
+    // with the connection itself
+    alive.store(false, Ordering::SeqCst);
+    for id in push_ids {
+        local.unsubscribe(id);
+    }
+    result
+}
+
+/// A `publish` envelope that preserves the message's origin stamp and
+/// retain-as-published flag across the hop.
+fn publish_envelope(m: &Message, retained: bool) -> Value {
+    Value::obj(vec![
+        ("type", Value::str("publish")),
+        ("topic", Value::str(m.topic.as_str())),
+        ("payload", Value::str(b64::encode(&m.payload))),
+        ("retain", Value::Bool(retained)),
+        ("origin", Value::str(&*m.origin)),
+    ])
+}

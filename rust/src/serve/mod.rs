@@ -2,52 +2,77 @@
 //!
 //! The paper's platform claim is user-transparent edge-cloud
 //! *services* (§3), not a simulator with a broker inside: external
-//! processes must be able to publish, subscribe, and read stats
-//! against a LIVE broker. This module is that byte-level surface — a
-//! std-thread TCP server speaking the length-framed JSON protocol of
-//! [`proto`] (`type`/`timestamp`/`requestId` envelopes) over the
-//! codec in [`frame`].
+//! processes must be able to publish, subscribe, run scenarios, and
+//! read stats against a LIVE broker. This module is that byte-level
+//! surface — the length-framed JSON protocol of [`proto`]
+//! (`type`/`timestamp`/`requestId` envelopes) over the codec in
+//! [`frame`], served by a fixed-size pooled engine.
 //!
-//! Threading (all std threads, no runtime):
+//! # Engine (fixed threads, no runtime, no per-connection threads)
 //!
-//! * one ACCEPT loop ([`Server::run`], usually the main thread);
-//! * per connection, a READER thread owning the request half and a
-//!   WRITER thread owning the response half, joined by an mpsc queue
-//!   of pre-serialized frames — so delivery pushes and responses
-//!   never interleave mid-frame;
-//! * per subscription, a FORWARDER thread draining the broker's mpsc
-//!   receiver into `message` envelopes on the writer queue.
+//! * One POLL LOOP ([`Server::run`], usually the main thread) owns ALL
+//!   socket I/O: it multiplexes the listener, a wake pipe, and every
+//!   connection through the hand-rolled `poll(2)` wrapper in [`poll`],
+//!   reads nonblocking sockets into per-connection buffers, slices
+//!   complete frames out, and drains per-connection outbound queues.
+//!   Being the only writer, it can never tear a frame.
+//! * A WORKER POOL of `ServeConfig::pool` threads parses and
+//!   dispatches complete frames. A connection is processed by at most
+//!   one worker at a time (an atomic `scheduled` claim), so responses
+//!   leave in request order; different connections proceed in
+//!   parallel. A `scenario` op occupies its worker for the whole DES
+//!   run — size the pool accordingly.
+//! * Subscription fan-out is SHARD-SIDE: `subscribe` registers a
+//!   `Broker::subscribe_sink` closure that serializes the delivery and
+//!   appends it to the connection's outbound queue — no forwarder
+//!   thread, no channel hop. Sinks run inline under shard locks, so
+//!   they only enqueue and wake the poll loop; a gate buffers retained
+//!   replays until `subscribe_ok` is queued, keeping the ack ahead of
+//!   every delivery. Lock order is gate → out, everywhere.
 //!
 //! Error containment: a malformed frame gets a typed `error` envelope
 //! and the connection LIVES ON; an oversized frame gets the error
-//! envelope and then a close (the stream cannot be resynced past an
-//! unread body) — other clients are never affected. A disconnecting
-//! client's subscriptions are torn down by its reader thread.
+//! envelope (in request order, via the same inbound queue) and then a
+//! close (the stream cannot be resynced past an unread body) — other
+//! clients are never affected. A disconnecting client's subscriptions
+//! are torn down by the poll loop; its sinks then refuse further
+//! deliveries and are pruned by the broker.
 //!
-//! Shutdown: the `shutdown` op acknowledges, then flushes and closes
-//! its own connection, sets the stop flag, and pokes the listener with
-//! a wake-up connection; `run` then closes every live connection and
-//! joins all reader threads before returning, so `ace serve` exits
-//! cleanly (the CI smoke `wait`s on exactly this).
+//! Shutdown: the `shutdown` op queues `shutdown_ok`, marks its
+//! connection close-after-flush, and sets the stop flag. The poll loop
+//! stops accepting, flushes every outbound queue (bounded by a grace
+//! deadline), closes all connections, and joins the pool — so
+//! `ace serve` exits cleanly (the CI smoke `wait`s on exactly this).
+//!
+//! Federation: with `ServeConfig::federate` set, the server runs a
+//! [`federate::Link`] — a protocol client of a PEER server that pulls
+//! matching messages into the local broker and pushes local matches to
+//! the peer, suppressing loops by `Message::origin` (see [`federate`]).
 
 pub mod b64;
 pub mod client;
+pub mod federate;
 pub mod frame;
+pub mod poll;
 pub mod proto;
 
 use crate::json::{self, Value};
 use crate::pubsub::{Broker, Message};
-use frame::{read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME};
+use crate::svcgraph::scenario as svcscenario;
+use frame::{FrameError, DEFAULT_MAX_FRAME};
+use poll::{poll_fds, PollFd, POLLERR, POLLIN, POLLOUT};
 use proto::{Envelope, ProtoError, Request};
-use std::io;
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
-use std::time::{Duration, SystemTime, UNIX_EPOCH};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
-/// Server tuning knobs (`ace serve --shards --max-frame`).
+/// Server tuning knobs (`ace serve --shards --max-frame --pool ...`).
 pub struct ServeConfig {
     /// Literal-shard count for the underlying broker.
     pub shards: usize,
@@ -55,6 +80,11 @@ pub struct ServeConfig {
     pub max_frame: usize,
     /// Broker (and `Message::origin`) name.
     pub broker_name: String,
+    /// Worker-pool size: the fixed number of dispatch threads. Socket
+    /// I/O does not scale with this — it all lives on the poll loop.
+    pub pool: usize,
+    /// Run a federation link against a peer server (see [`federate`]).
+    pub federate: Option<federate::FederateConfig>,
 }
 
 impl Default for ServeConfig {
@@ -63,8 +93,356 @@ impl Default for ServeConfig {
             shards: 8,
             max_frame: DEFAULT_MAX_FRAME,
             broker_name: "serve".into(),
+            pool: 4,
+            federate: None,
         }
     }
+}
+
+fn now_ts() -> f64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Wake the poll loop from any thread: one byte down a nonblocking
+/// pipe (a full pipe means a wake is already pending — dropping the
+/// byte is correct).
+#[derive(Clone)]
+struct Waker(Arc<UnixStream>);
+
+impl Waker {
+    fn wake(&self) {
+        let _ = (&*self.0).write(&[1]);
+    }
+}
+
+/// Outbound frames for one connection: full wire frames (header +
+/// body) plus the partial-write offset into the front frame. Only the
+/// poll loop writes, so frames never interleave.
+struct OutBuf {
+    frames: VecDeque<Vec<u8>>,
+    offset: usize,
+}
+
+/// One complete inbound item, queued for a worker IN ORDER — so even
+/// the oversized-frame error leaves after the responses to the frames
+/// that preceded it.
+enum Inbound {
+    Frame(Vec<u8>),
+    /// Declared length that tripped the cap; answered, then the
+    /// connection closes (the unread body makes the stream unresumable).
+    Oversized(u64),
+}
+
+/// The connection state shared between the poll loop, the worker pool,
+/// and subscription sinks.
+struct ConnShared {
+    out: Mutex<OutBuf>,
+    pending: Mutex<VecDeque<Inbound>>,
+    /// Claimed by at most one worker at a time (per-connection request
+    /// ordering without dedicating a thread).
+    scheduled: AtomicBool,
+    /// Subscription ids owned by this connection.
+    subs: Mutex<Vec<u64>>,
+    /// Torn down: sinks must refuse deliveries so the broker prunes them.
+    closed: AtomicBool,
+    /// Flush the outbound queue, then close (shutdown, oversized, EOF).
+    close_after_flush: AtomicBool,
+    waker: Waker,
+}
+
+impl ConnShared {
+    fn new(waker: Waker) -> Arc<ConnShared> {
+        Arc::new(ConnShared {
+            out: Mutex::new(OutBuf {
+                frames: VecDeque::new(),
+                offset: 0,
+            }),
+            pending: Mutex::new(VecDeque::new()),
+            scheduled: AtomicBool::new(false),
+            subs: Mutex::new(Vec::new()),
+            closed: AtomicBool::new(false),
+            close_after_flush: AtomicBool::new(false),
+            waker,
+        })
+    }
+
+    /// Queue one already-serialized body as a wire frame and wake the
+    /// poll loop. Callable from any thread (workers, sinks).
+    fn send_bytes(&self, body: Vec<u8>) {
+        let mut wire = Vec::with_capacity(body.len() + 4);
+        wire.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        wire.extend_from_slice(&body);
+        self.out.lock().unwrap().frames.push_back(wire);
+        self.waker.wake();
+    }
+
+    fn send(&self, v: &Value) {
+        self.send_bytes(json::to_string(v).into_bytes());
+    }
+
+    fn out_empty(&self) -> bool {
+        self.out.lock().unwrap().frames.is_empty()
+    }
+
+    /// Nothing queued in, nothing queued out, no worker mid-request —
+    /// a close-after-flush connection in this state can be retired.
+    fn idle(&self) -> bool {
+        self.out_empty()
+            && self.pending.lock().unwrap().is_empty()
+            && !self.scheduled.load(Ordering::SeqCst)
+    }
+}
+
+/// Buffers a subscription's deliveries until its `subscribe_ok` is
+/// queued, so the ack always precedes the retained replays that
+/// `subscribe_sink` fires during registration. Lock order: gate → out.
+struct SubGate {
+    state: Mutex<GateState>,
+}
+
+enum GateState {
+    Buffering(Vec<Vec<u8>>),
+    Open,
+}
+
+impl SubGate {
+    fn new() -> Arc<SubGate> {
+        Arc::new(SubGate {
+            state: Mutex::new(GateState::Buffering(Vec::new())),
+        })
+    }
+}
+
+/// The fixed-size worker pool: a job is a connection with pending
+/// inbound items.
+struct Pool {
+    jobs: Mutex<VecDeque<Arc<ConnShared>>>,
+    ready: Condvar,
+    done: AtomicBool,
+}
+
+impl Pool {
+    fn new() -> Arc<Pool> {
+        Arc::new(Pool {
+            jobs: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            done: AtomicBool::new(false),
+        })
+    }
+
+    fn push(&self, job: Arc<ConnShared>) {
+        self.jobs.lock().unwrap().push_back(job);
+        self.ready.notify_one();
+    }
+
+    /// Blocks for work; `None` once shut down and drained.
+    fn pop(&self) -> Option<Arc<ConnShared>> {
+        let mut jobs = self.jobs.lock().unwrap();
+        loop {
+            if let Some(j) = jobs.pop_front() {
+                return Some(j);
+            }
+            if self.done.load(Ordering::SeqCst) {
+                return None;
+            }
+            jobs = self.ready.wait(jobs).unwrap();
+        }
+    }
+
+    fn shutdown(&self) {
+        self.done.store(true, Ordering::SeqCst);
+        self.ready.notify_all();
+    }
+}
+
+/// Hand a connection to the pool unless a worker already holds it.
+fn schedule(pool: &Pool, conn: &Arc<ConnShared>) {
+    if !conn.scheduled.swap(true, Ordering::SeqCst) {
+        pool.push(conn.clone());
+    }
+}
+
+/// What each worker thread needs to dispatch requests.
+struct WorkerCtx {
+    pool: Arc<Pool>,
+    broker: Broker,
+    stop: Arc<AtomicBool>,
+    waker: Waker,
+    max_frame: usize,
+}
+
+fn worker_loop(ctx: WorkerCtx) {
+    while let Some(conn) = ctx.pool.pop() {
+        loop {
+            let item = conn.pending.lock().unwrap().pop_front();
+            let Some(item) = item else {
+                conn.scheduled.store(false, Ordering::SeqCst);
+                // an enqueue racing the store above would be lost:
+                // re-claim if work reappeared and nobody else has
+                if conn.pending.lock().unwrap().is_empty()
+                    || conn.scheduled.swap(true, Ordering::SeqCst)
+                {
+                    break;
+                }
+                continue;
+            };
+            match item {
+                Inbound::Frame(body) => handle_frame(&ctx, &conn, &body),
+                Inbound::Oversized(len) => {
+                    let e = FrameError::Oversized {
+                        len,
+                        max: ctx.max_frame,
+                    };
+                    conn.send(&proto::error(
+                        None,
+                        now_ts(),
+                        "oversized-frame",
+                        &format!("{e}; closing this connection"),
+                    ));
+                    conn.close_after_flush.store(true, Ordering::SeqCst);
+                    ctx.waker.wake();
+                }
+            }
+        }
+    }
+}
+
+fn handle_frame(ctx: &WorkerCtx, conn: &Arc<ConnShared>, body: &[u8]) {
+    match proto::parse_request(body) {
+        Ok(env) => dispatch(ctx, conn, env),
+        Err(ProtoError {
+            code,
+            message,
+            request_id,
+        }) => {
+            // malformed CONTENT is recoverable: typed error, keep
+            // serving this connection
+            conn.send(&proto::error(request_id.as_deref(), now_ts(), code, &message));
+        }
+    }
+}
+
+/// Handle one request on a worker thread.
+fn dispatch(ctx: &WorkerCtx, conn: &Arc<ConnShared>, env: Envelope) {
+    let rid = env.request_id.as_deref();
+    match env.req {
+        Request::Publish {
+            topic,
+            payload,
+            retain,
+            origin,
+        } => {
+            let mut msg = Message::new(topic, payload);
+            if let Some(o) = origin {
+                if !o.is_empty() {
+                    // federation passthrough: keep the broker name the
+                    // message FIRST entered (loop suppression)
+                    msg.origin = Arc::from(o);
+                }
+            }
+            match ctx.broker.publish_opts(msg, retain) {
+                Ok(reached) => conn.send(&proto::publish_ok(rid, now_ts(), reached)),
+                Err(e) => conn.send(&proto::error(rid, now_ts(), "invalid-topic", &e)),
+            }
+        }
+        Request::Subscribe { filter } => {
+            let gate = SubGate::new();
+            let sink_conn = conn.clone();
+            let sink_gate = gate.clone();
+            let res = ctx.broker.subscribe_sink(&filter, move |id, m, retained| {
+                if sink_conn.closed.load(Ordering::SeqCst) {
+                    return false; // connection gone: let the broker prune us
+                }
+                let body = json::to_string(&proto::message(now_ts(), id, m, retained)).into_bytes();
+                let mut st = sink_gate.state.lock().unwrap();
+                match &mut *st {
+                    GateState::Buffering(buf) => buf.push(body),
+                    GateState::Open => sink_conn.send_bytes(body),
+                }
+                true
+            });
+            match res {
+                Ok(id) => {
+                    conn.subs.lock().unwrap().push(id);
+                    // ack FIRST, then the buffered retained replays, all
+                    // under the gate so a live publish cannot jump in
+                    {
+                        let mut st = gate.state.lock().unwrap();
+                        conn.send(&proto::subscribe_ok(rid, now_ts(), id));
+                        if let GateState::Buffering(buf) =
+                            std::mem::replace(&mut *st, GateState::Open)
+                        {
+                            for body in buf {
+                                conn.send_bytes(body);
+                            }
+                        }
+                    }
+                    if conn.closed.load(Ordering::SeqCst) {
+                        // lost the race with teardown: nobody will
+                        // unsubscribe this id for us
+                        ctx.broker.unsubscribe(id);
+                    }
+                }
+                Err(e) => conn.send(&proto::error(rid, now_ts(), "invalid-filter", &e)),
+            }
+        }
+        Request::Unsubscribe { id } => {
+            // only ids owned by THIS connection are removable — one
+            // client cannot sever another's subscription
+            let owned = {
+                let mut subs = conn.subs.lock().unwrap();
+                subs.iter().position(|&s| s == id).map(|pos| subs.remove(pos))
+            };
+            let removed = owned.is_some();
+            if removed {
+                ctx.broker.unsubscribe(id);
+            }
+            conn.send(&proto::unsubscribe_ok(rid, now_ts(), removed));
+        }
+        Request::Stats => conn.send(&proto::stats_ok(
+            rid,
+            now_ts(),
+            &ctx.broker.name(),
+            ctx.broker.shard_count(),
+            &ctx.broker.stats(),
+        )),
+        Request::Scenario { doc } => match svcscenario::Scenario::parse(&doc) {
+            Err(e) => conn.send(&proto::error(rid, now_ts(), "bad-scenario", &e.to_string())),
+            Ok(sc) => match svcscenario::run(&sc) {
+                Ok(report) => conn.send(&proto::scenario_ok(
+                    rid,
+                    now_ts(),
+                    report.app(),
+                    report.summary(),
+                )),
+                Err(e) => {
+                    conn.send(&proto::error(rid, now_ts(), "scenario-failed", &e.to_string()))
+                }
+            },
+        },
+        Request::Shutdown => {
+            conn.send(&proto::shutdown_ok(rid, now_ts()));
+            conn.close_after_flush.store(true, Ordering::SeqCst);
+            ctx.stop.store(true, Ordering::SeqCst);
+            ctx.waker.wake();
+        }
+    }
+}
+
+/// Poll-loop-private connection state (the shared part lives in
+/// [`ConnShared`]).
+struct Conn {
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    /// Raw inbound bytes not yet sliced into frames.
+    inbuf: Vec<u8>,
+    /// Reading stopped (EOF or an oversized header); writes continue
+    /// until the outbound queue drains.
+    input_dead: bool,
+    dead: bool,
 }
 
 /// A bound (but not yet serving) server.
@@ -74,13 +452,8 @@ pub struct Server {
     broker: Broker,
     stop: Arc<AtomicBool>,
     max_frame: usize,
-}
-
-fn now_ts() -> f64 {
-    SystemTime::now()
-        .duration_since(UNIX_EPOCH)
-        .map(|d| d.as_secs_f64())
-        .unwrap_or(0.0)
+    pool_size: usize,
+    federate: Option<federate::FederateConfig>,
 }
 
 impl Server {
@@ -95,6 +468,8 @@ impl Server {
             broker: Broker::with_shards(cfg.broker_name.as_str(), cfg.shards),
             stop: Arc::new(AtomicBool::new(false)),
             max_frame: cfg.max_frame,
+            pool_size: cfg.pool.max(1),
+            federate: cfg.federate.clone(),
         })
     }
 
@@ -103,193 +478,257 @@ impl Server {
         self.addr
     }
 
-    /// A handle to the underlying broker (for in-process assertions).
+    /// A handle to the underlying broker (for in-process assertions and
+    /// the federation differential test).
     pub fn broker(&self) -> Broker {
         self.broker.clone()
     }
 
-    /// Accept and serve until a client sends `shutdown`. Joins every
-    /// connection thread before returning.
+    /// Serve until a client sends `shutdown`: spawn the worker pool
+    /// (and the federation link, if configured), then run the poll loop
+    /// on THIS thread. Flushes, closes every connection, and joins all
+    /// pool threads before returning.
     pub fn run(self) -> io::Result<()> {
-        // reader-side clones of every live connection, so shutdown can
-        // unblock readers parked in `read_frame`
-        let live: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
-        let mut readers = Vec::new();
-        for conn in self.listener.incoming() {
-            if self.stop.load(Ordering::SeqCst) {
-                break;
-            }
-            let stream = match conn {
-                Ok(s) => s,
-                Err(_) => continue,
+        let (wake_rx, wake_tx) = UnixStream::pair()?;
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+        let waker = Waker(Arc::new(wake_tx));
+        self.listener.set_nonblocking(true)?;
+
+        let pool = Pool::new();
+        let mut workers = Vec::with_capacity(self.pool_size);
+        for i in 0..self.pool_size {
+            let ctx = WorkerCtx {
+                pool: pool.clone(),
+                broker: self.broker.clone(),
+                stop: self.stop.clone(),
+                waker: waker.clone(),
+                max_frame: self.max_frame,
             };
-            if let Ok(clone) = stream.try_clone() {
-                live.lock().unwrap().push(clone);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(ctx))?,
+            );
+        }
+        let link = self
+            .federate
+            .as_ref()
+            .map(|cfg| federate::Link::start(cfg.clone(), self.broker.clone(), self.stop.clone()));
+
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut scratch = vec![0u8; 64 * 1024];
+        let mut flush_deadline: Option<Instant> = None;
+        loop {
+            let stopping = self.stop.load(Ordering::SeqCst);
+            if stopping {
+                // stop accepting; leave once every queue is flushed (or
+                // a client stopped reading and the grace period expires)
+                let deadline =
+                    *flush_deadline.get_or_insert_with(|| Instant::now() + Duration::from_secs(2));
+                if conns.iter().all(|c| c.shared.idle()) || Instant::now() >= deadline {
+                    break;
+                }
             }
-            let broker = self.broker.clone();
-            let stop = self.stop.clone();
-            let addr = self.addr;
-            let max_frame = self.max_frame;
-            readers.push(thread::spawn(move || {
-                handle_conn(stream, broker, stop, addr, max_frame);
-            }));
+
+            let mut fds = Vec::with_capacity(conns.len() + 2);
+            fds.push(PollFd::new(wake_rx.as_raw_fd(), POLLIN));
+            let listener_slot = if stopping {
+                None
+            } else {
+                fds.push(PollFd::new(self.listener.as_raw_fd(), POLLIN));
+                Some(fds.len() - 1)
+            };
+            let conn_base = fds.len();
+            let n_polled = conns.len();
+            for c in &conns {
+                let mut ev = 0i16;
+                if !c.input_dead {
+                    ev |= POLLIN;
+                }
+                if !c.shared.out_empty() {
+                    ev |= POLLOUT;
+                }
+                fds.push(PollFd::new(c.stream.as_raw_fd(), ev));
+            }
+            poll_fds(&mut fds, 250)?;
+
+            if fds[0].has(POLLIN) {
+                drain_wake_pipe(&wake_rx, &mut scratch);
+            }
+
+            for idx in 0..n_polled {
+                let pf = fds[conn_base + idx];
+                let c = &mut conns[idx];
+                if pf.has(POLLERR) {
+                    c.dead = true;
+                    continue;
+                }
+                if pf.has(POLLOUT) && flush_out(&mut c.stream, &c.shared).is_err() {
+                    c.dead = true;
+                    continue;
+                }
+                if pf.has(POLLIN) && !c.input_dead {
+                    read_conn(c, &mut scratch, self.max_frame, &pool);
+                }
+            }
+
+            // retire dead connections and flushed-out closers
+            let mut idx = 0;
+            while idx < conns.len() {
+                let retire = conns[idx].dead
+                    || (conns[idx].shared.close_after_flush.load(Ordering::SeqCst)
+                        && conns[idx].shared.idle());
+                if retire {
+                    teardown(conns.swap_remove(idx), &self.broker);
+                } else {
+                    idx += 1;
+                }
+            }
+
+            if let Some(slot) = listener_slot {
+                if fds[slot].has(POLLIN) {
+                    accept_all(&self.listener, &waker, &mut conns);
+                }
+            }
         }
-        // stop flag is set: sever every live connection so blocked
-        // readers return, then join them (their writers flush first)
-        for s in live.lock().unwrap().iter() {
-            let _ = s.shutdown(Shutdown::Both);
+
+        for c in conns.drain(..) {
+            teardown(c, &self.broker);
         }
-        for r in readers {
-            let _ = r.join();
+        pool.shutdown();
+        for w in workers {
+            let _ = w.join();
+        }
+        if let Some(link) = link {
+            link.shutdown();
         }
         Ok(())
     }
 }
 
-/// Serialize an envelope onto a writer queue (best effort — a gone
-/// writer means the connection is already tearing down).
-fn send(wtx: &Sender<Vec<u8>>, v: &Value) {
-    let _ = wtx.send(json::to_string(v).into_bytes());
-}
-
-fn handle_conn(
-    stream: TcpStream,
-    broker: Broker,
-    stop: Arc<AtomicBool>,
-    addr: SocketAddr,
-    max_frame: usize,
-) {
-    let mut reader = match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    };
-    let mut writer = stream;
-    let (wtx, wrx) = channel::<Vec<u8>>();
-    let writer_thread = thread::spawn(move || {
-        for body in wrx {
-            if write_frame(&mut writer, &body).is_err() {
-                break;
-            }
-        }
-        let _ = writer.shutdown(Shutdown::Both);
-    });
-    let mut sub_ids: Vec<u64> = Vec::new();
-    let mut shutting_down = false;
+fn drain_wake_pipe(wake_rx: &UnixStream, scratch: &mut [u8]) {
     loop {
-        let bytes = match read_frame(&mut reader, max_frame) {
-            Ok(Some(bytes)) => bytes,
-            // clean close (or severed by shutdown)
-            Ok(None) | Err(FrameError::Io(_)) => break,
-            Err(e @ FrameError::Oversized { .. }) => {
-                // the unread body makes the stream unresumable: answer,
-                // then close THIS connection only
-                send(
-                    &wtx,
-                    &proto::error(
-                        None,
-                        now_ts(),
-                        "oversized-frame",
-                        &format!("{e}; closing this connection"),
-                    ),
-                );
-                break;
-            }
-        };
-        let env = match proto::parse_request(&bytes) {
-            Ok(env) => env,
-            Err(ProtoError {
-                code,
-                message,
-                request_id,
-            }) => {
-                // malformed CONTENT is recoverable: typed error, keep
-                // serving this connection
-                send(
-                    &wtx,
-                    &proto::error(request_id.as_deref(), now_ts(), code, &message),
-                );
-                continue;
-            }
-        };
-        if dispatch(env, &broker, &wtx, &mut sub_ids) {
-            shutting_down = true;
-            break;
+        match (&*wake_rx).read(scratch) {
+            Ok(0) => break,
+            Ok(_) => continue,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break, // WouldBlock: drained
         }
-    }
-    // tear down this connection's subscriptions (forwarder threads see
-    // their channels close and exit), then let the writer drain
-    for id in sub_ids {
-        broker.unsubscribe(id);
-    }
-    drop(wtx);
-    let _ = writer_thread.join();
-    if shutting_down {
-        // only AFTER our writer flushed the shutdown_ok: stop the
-        // accept loop and poke it awake
-        stop.store(true, Ordering::SeqCst);
-        let _ = TcpStream::connect(addr);
     }
 }
 
-/// Handle one request; returns true when the server should shut down.
-fn dispatch(env: Envelope, broker: &Broker, wtx: &Sender<Vec<u8>>, sub_ids: &mut Vec<u64>) -> bool {
-    let rid = env.request_id.as_deref();
-    match env.req {
-        Request::Publish {
-            topic,
-            payload,
-            retain,
-        } => match broker.publish_opts(Message::new(topic, payload), retain) {
-            Ok(reached) => send(wtx, &proto::publish_ok(rid, now_ts(), reached)),
-            Err(e) => send(wtx, &proto::error(rid, now_ts(), "invalid-topic", &e)),
-        },
-        Request::Subscribe { filter } => match broker.subscribe(&filter) {
-            Ok(handle) => {
-                sub_ids.push(handle.id);
-                // ack BEFORE spawning the forwarder, so the client sees
-                // subscribe_ok ahead of any retained replays
-                send(wtx, &proto::subscribe_ok(rid, now_ts(), handle.id));
-                let ftx = wtx.clone();
-                let sub_id = handle.id;
-                thread::spawn(move || {
-                    for m in handle.rx.iter() {
-                        let body = json::to_string(&proto::message(now_ts(), sub_id, &m));
-                        if ftx.send(body.into_bytes()).is_err() {
-                            break;
-                        }
-                    }
+fn accept_all(listener: &TcpListener, waker: &Waker, conns: &mut Vec<Conn>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                conns.push(Conn {
+                    stream,
+                    shared: ConnShared::new(waker.clone()),
+                    inbuf: Vec::new(),
+                    input_dead: false,
+                    dead: false,
                 });
             }
-            Err(e) => send(wtx, &proto::error(rid, now_ts(), "invalid-filter", &e)),
-        },
-        Request::Unsubscribe { id } => {
-            // only ids owned by THIS connection are removable — one
-            // client cannot sever another's subscription
-            let removed = if let Some(pos) = sub_ids.iter().position(|&s| s == id) {
-                sub_ids.remove(pos);
-                broker.unsubscribe(id);
-                true
-            } else {
-                false
-            };
-            send(wtx, &proto::unsubscribe_ok(rid, now_ts(), removed));
-        }
-        Request::Stats => send(
-            wtx,
-            &proto::stats_ok(
-                rid,
-                now_ts(),
-                &broker.name(),
-                broker.shard_count(),
-                &broker.stats(),
-            ),
-        ),
-        Request::Shutdown => {
-            send(wtx, &proto::shutdown_ok(rid, now_ts()));
-            return true;
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(_) => break,
         }
     }
-    false
+}
+
+/// Drain a readable socket, slice complete frames into the pending
+/// queue (in order), and schedule a worker. EOF and oversized headers
+/// stop input; queued work still completes and flushes before the
+/// close.
+fn read_conn(c: &mut Conn, scratch: &mut [u8], max_frame: usize, pool: &Pool) {
+    let mut eof = false;
+    loop {
+        match c.stream.read(scratch) {
+            Ok(0) => {
+                eof = true;
+                break;
+            }
+            Ok(n) => c.inbuf.extend_from_slice(&scratch[..n]),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    let mut queued = false;
+    {
+        let mut pending = c.shared.pending.lock().unwrap();
+        while c.inbuf.len() >= 4 {
+            let len = u32::from_be_bytes([c.inbuf[0], c.inbuf[1], c.inbuf[2], c.inbuf[3]]) as usize;
+            if len > max_frame {
+                pending.push_back(Inbound::Oversized(len as u64));
+                queued = true;
+                c.input_dead = true;
+                c.inbuf.clear();
+                break;
+            }
+            if c.inbuf.len() < 4 + len {
+                break;
+            }
+            pending.push_back(Inbound::Frame(c.inbuf[4..4 + len].to_vec()));
+            queued = true;
+            c.inbuf.drain(..4 + len);
+        }
+    }
+    if queued {
+        schedule(pool, &c.shared);
+    }
+    if eof {
+        c.input_dead = true;
+        c.shared.close_after_flush.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Write queued frames until the socket would block. Partial writes
+/// park their offset in [`OutBuf`]; only this (poll-loop) path writes,
+/// so frames cannot interleave.
+fn flush_out(stream: &mut TcpStream, shared: &ConnShared) -> io::Result<()> {
+    let mut out = shared.out.lock().unwrap();
+    loop {
+        let front_len;
+        let res = match out.frames.front() {
+            None => break,
+            Some(front) => {
+                front_len = front.len();
+                stream.write(&front[out.offset..])
+            }
+        };
+        match res {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "socket write of 0")),
+            Ok(n) => {
+                out.offset += n;
+                if out.offset == front_len {
+                    out.frames.pop_front();
+                    out.offset = 0;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Close a connection: mark it so sinks refuse deliveries (the broker
+/// prunes them), unsubscribe everything it owned, sever the socket.
+fn teardown(c: Conn, broker: &Broker) {
+    c.shared.closed.store(true, Ordering::SeqCst);
+    let subs: Vec<u64> = std::mem::take(&mut *c.shared.subs.lock().unwrap());
+    for id in subs {
+        broker.unsubscribe(id);
+    }
+    let _ = c.stream.shutdown(Shutdown::Both);
 }
 
 /// The in-repo smoke client `ace serve-probe` runs against a live
@@ -298,33 +737,42 @@ fn dispatch(env: Envelope, broker: &Broker, wtx: &Sender<Vec<u8>>, sub_ids: &mut
 /// cleanly. Returns an error on ANY mismatch — the CI job fails on a
 /// non-zero exit.
 pub fn probe(addr: &str, send_shutdown: bool) -> Result<(), String> {
-    use client::Client;
-    let retry = Duration::from_millis(250);
-    let mut c1 = Client::connect_retry(addr, 40, retry)
+    use client::{Client, ErrorCode, ServeError};
+    let mut c1 = Client::connect(addr)
+        .retries(40, Duration::from_millis(250))
+        .open()
         .map_err(|e| format!("probe could not connect to {addr}: {e}"))?;
     println!("probe: connected to {addr}");
 
-    let st0 = c1.stats()?;
-    let pubs0 = st0.get("stats").get("pubCount").as_f64().unwrap_or(-1.0);
-    if pubs0 < 0.0 {
-        return Err(format!("malformed stats_ok: {st0}"));
-    }
+    let st0 = c1.stats().map_err(|e| format!("stats failed: {e}"))?;
     println!(
-        "probe: broker '{}' with {} shards, {} publishes so far",
-        st0.get("broker").as_str().unwrap_or("?"),
-        st0.get("shards").as_f64().unwrap_or(0.0) as usize,
-        pubs0 as u64
+        "probe: broker '{}' with {} shards speaks v{} [{}], {} publishes so far",
+        st0.broker,
+        st0.shards,
+        st0.v,
+        st0.capabilities.join(", "),
+        st0.pub_count
     );
+    for cap in ["federation", "scenario"] {
+        if !st0.has_capability(cap) {
+            return Err(format!("server does not advertise the '{cap}' capability"));
+        }
+    }
 
     // live pub/sub across two connections
-    let sub_id = c1.subscribe("probe/#")?;
-    let mut c2 = Client::connect(addr).map_err(|e| format!("second connect failed: {e}"))?;
-    let reached = c2.publish("probe/x/y", b"hello-from-c2", false)?;
+    let sub_id = c1.subscribe("probe/#").map_err(|e| format!("subscribe failed: {e}"))?;
+    let mut c2 = Client::connect(addr)
+        .open()
+        .map_err(|e| format!("second connect failed: {e}"))?;
+    let reached = c2
+        .publish("probe/x/y", b"hello-from-c2", false)
+        .map_err(|e| format!("publish failed: {e}"))?;
     if reached != 1 {
         return Err(format!("expected to reach 1 subscriber, reached {reached}"));
     }
     let d = c1
-        .recv_message(Duration::from_secs(5))?
+        .recv_message(Duration::from_secs(5))
+        .map_err(|e| format!("recv failed: {e}"))?
         .ok_or("no delivery within 5s")?;
     if d.subscription_id != sub_id || d.topic != "probe/x/y" || d.payload != b"hello-from-c2" {
         return Err(format!("wrong delivery: {d:?}"));
@@ -332,30 +780,37 @@ pub fn probe(addr: &str, send_shutdown: bool) -> Result<(), String> {
     println!("probe: cross-connection delivery OK ({} -> {})", d.origin, d.topic);
 
     // retained replay for a late subscriber on a third connection
-    c2.publish("probe/cfg/threshold", b"0.8", true)?;
-    if c1
-        .recv_message(Duration::from_secs(5))?
-        .ok_or("no retained-publish delivery within 5s")?
-        .payload
-        != b"0.8"
-    {
-        return Err("wildcard subscriber missed the retained publish".into());
+    c2.publish("probe/cfg/threshold", b"0.8", true)
+        .map_err(|e| format!("retained publish failed: {e}"))?;
+    let live = c1
+        .recv_message(Duration::from_secs(5))
+        .map_err(|e| format!("recv failed: {e}"))?
+        .ok_or("no retained-publish delivery within 5s")?;
+    if live.payload != b"0.8" || !live.retained {
+        return Err(format!(
+            "wildcard subscriber missed the retained publish (or its retained flag): {live:?}"
+        ));
     }
-    let mut c3 = Client::connect(addr).map_err(|e| format!("third connect failed: {e}"))?;
-    c3.subscribe("probe/cfg/+")?;
+    let mut c3 = Client::connect(addr)
+        .open()
+        .map_err(|e| format!("third connect failed: {e}"))?;
+    c3.subscribe("probe/cfg/+").map_err(|e| format!("subscribe failed: {e}"))?;
     let replay = c3
-        .recv_message(Duration::from_secs(5))?
+        .recv_message(Duration::from_secs(5))
+        .map_err(|e| format!("recv failed: {e}"))?
         .ok_or("no retained replay within 5s")?;
-    if replay.topic != "probe/cfg/threshold" || replay.payload != b"0.8" {
+    if replay.topic != "probe/cfg/threshold" || replay.payload != b"0.8" || !replay.retained {
         return Err(format!("wrong retained replay: {replay:?}"));
     }
     println!("probe: retained replay to a late subscriber OK");
 
     // unsubscribe stops delivery
-    if !c1.unsubscribe(sub_id)? {
+    if !c1.unsubscribe(sub_id).map_err(|e| format!("unsubscribe failed: {e}"))? {
         return Err("unsubscribe of a live id reported removed=false".into());
     }
-    let reached = c2.publish("probe/x/y", b"nobody-home", false)?;
+    let reached = c2
+        .publish("probe/x/y", b"nobody-home", false)
+        .map_err(|e| format!("publish failed: {e}"))?;
     if reached != 0 {
         return Err(format!("expected 0 subscribers after unsubscribe, reached {reached}"));
     }
@@ -365,7 +820,10 @@ pub fn probe(addr: &str, send_shutdown: bool) -> Result<(), String> {
     c2.send_raw(b"{definitely not json")
         .map_err(|e| format!("raw send failed: {e}"))?;
     match c2.read_response() {
-        Err(e) if e.starts_with("bad-json") => {}
+        Err(ServeError::Protocol {
+            code: ErrorCode::BadJson,
+            ..
+        }) => {}
         other => return Err(format!("expected a bad-json error envelope, got {other:?}")),
     }
     c2.stats()
@@ -373,14 +831,16 @@ pub fn probe(addr: &str, send_shutdown: bool) -> Result<(), String> {
     println!("probe: malformed frame answered with a typed error; connection survived");
 
     // totals: exactly the 3 publishes this probe made
-    let st1 = c1.stats()?;
-    let pubs1 = st1.get("stats").get("pubCount").as_f64().unwrap_or(-1.0);
-    if pubs1 - pubs0 != 3.0 {
-        return Err(format!("expected 3 new publishes, stats says {}", pubs1 - pubs0));
+    let st1 = c1.stats().map_err(|e| format!("stats failed: {e}"))?;
+    if st1.pub_count - st0.pub_count != 3 {
+        return Err(format!(
+            "expected 3 new publishes, stats says {}",
+            st1.pub_count - st0.pub_count
+        ));
     }
 
     if send_shutdown {
-        c1.shutdown()?;
+        c1.shutdown().map_err(|e| format!("shutdown failed: {e}"))?;
         println!("probe: shutdown acknowledged");
     }
     println!("probe: all checks passed");

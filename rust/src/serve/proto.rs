@@ -11,11 +11,27 @@
 //!
 //! | request       | fields                                   | response         |
 //! |---------------|------------------------------------------|------------------|
-//! | `publish`     | `topic`, `payload` (base64), `retain`?   | `publish_ok` (`reached`) |
+//! | `publish`     | `topic`, `payload` (base64), `retain`?, `origin`? | `publish_ok` (`reached`) |
 //! | `subscribe`   | `filter`                                 | `subscribe_ok` (`subscriptionId`) |
 //! | `unsubscribe` | `subscriptionId`                         | `unsubscribe_ok` (`removed`) |
-//! | `stats`       | —                                        | `stats_ok` (`stats`, `broker`, `shards`) |
+//! | `stats`       | —                                        | `stats_ok` (`stats`, `broker`, `shards`, `v`, `capabilities`) |
+//! | `scenario`    | `scenario` (base64 yamlite)              | `scenario_ok` (`app`, `report`) |
 //! | `shutdown`    | —                                        | `shutdown_ok`    |
+//!
+//! Versioning (negotiable without breaking v1 goldens): every request
+//! may carry an integer `v`; ABSENT means v1, so every pre-`v` client
+//! keeps working byte-for-byte. A `v` the server does not speak is
+//! answered with an `unsupported-version` error. The `stats_ok` reply
+//! advertises the server's `v` plus a `capabilities` string list
+//! ([`CAPABILITIES`]) — how a federation link or a `scenario`-driving
+//! client discovers what the peer can do before using it.
+//!
+//! `publish.origin` is a federation-only passthrough: it pre-stamps
+//! `Message::origin` so a forwarded message keeps the broker name it
+//! FIRST entered (loop suppression, `serve::federate`). Delivery
+//! pushes carry `retained: true` when the message is retain-as-
+//! published (a retained replay, or a live publish that asked to
+//! retain) and omit the field otherwise — v1 pushes are unchanged.
 //!
 //! Any failure becomes an `error` envelope: `code` (stable
 //! machine-readable slug), `message` (human text), plus the echoed
@@ -27,6 +43,13 @@ use super::b64;
 use crate::json::{self, Value};
 use crate::pubsub::{BrokerStats, Message};
 
+/// The protocol version this server speaks (absent `v` ⇒ 1).
+pub const PROTO_V: u64 = 1;
+
+/// Capabilities advertised in `stats_ok` — stable slugs a client or
+/// federation peer switches on instead of sniffing version numbers.
+pub const CAPABILITIES: &[&str] = &["federation", "origin-publish", "retained-flag", "scenario"];
+
 /// A parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -34,6 +57,9 @@ pub enum Request {
         topic: String,
         payload: Vec<u8>,
         retain: bool,
+        /// Pre-stamped `Message::origin` (federation passthrough);
+        /// `None` lets the receiving broker stamp its own name.
+        origin: Option<String>,
     },
     Subscribe {
         filter: String,
@@ -42,6 +68,11 @@ pub enum Request {
         id: u64,
     },
     Stats,
+    /// Run a `svcgraph::scenario` document (yamlite text) to completion
+    /// inside the server and report the per-app summary.
+    Scenario {
+        doc: String,
+    },
     Shutdown,
 }
 
@@ -96,6 +127,28 @@ pub fn parse_request(bytes: &[u8]) -> Result<Envelope, ProtoError> {
         request_id: request_id.clone(),
         ..e
     };
+    match v.get("v") {
+        // absent ⇒ v1: pre-`v` clients keep working unchanged
+        Value::Null => {}
+        other => {
+            let ver = other.as_f64().filter(|f| *f >= 0.0 && f.fract() == 0.0);
+            match ver {
+                Some(f) if f as u64 == PROTO_V => {}
+                Some(f) => {
+                    return Err(fail(ProtoError::new(
+                        "unsupported-version",
+                        format!("this server speaks v{PROTO_V}, request asked for v{f}"),
+                    )))
+                }
+                None => {
+                    return Err(fail(ProtoError::new(
+                        "bad-envelope",
+                        "'v' must be a non-negative integer",
+                    )))
+                }
+            }
+        }
+    }
     let Some(kind) = v.get("type").as_str() else {
         return Err(fail(ProtoError::new(
             "bad-envelope",
@@ -126,10 +179,22 @@ pub fn parse_request(bytes: &[u8]) -> Result<Envelope, ProtoError> {
                     fail(ProtoError::new("bad-envelope", "'retain' must be a boolean"))
                 })?,
             };
+            let origin = match v.get("origin") {
+                Value::Null => None,
+                other => Some(
+                    other
+                        .as_str()
+                        .ok_or_else(|| {
+                            fail(ProtoError::new("bad-envelope", "'origin' must be a string"))
+                        })?
+                        .to_string(),
+                ),
+            };
             Request::Publish {
                 topic,
                 payload,
                 retain,
+                origin,
             }
         }
         "subscribe" => Request::Subscribe {
@@ -151,13 +216,29 @@ pub fn parse_request(bytes: &[u8]) -> Result<Envelope, ProtoError> {
             Request::Unsubscribe { id: id as u64 }
         }
         "stats" => Request::Stats,
+        "scenario" => {
+            let doc64 = required_str(&v, "scenario", "scenario").map_err(&fail)?;
+            let bytes = b64::decode(&doc64).map_err(|e| {
+                fail(ProtoError::new(
+                    "bad-scenario",
+                    format!("'scenario' is not base64: {e}"),
+                ))
+            })?;
+            let doc = String::from_utf8(bytes).map_err(|e| {
+                fail(ProtoError::new(
+                    "bad-scenario",
+                    format!("'scenario' is not UTF-8 yamlite: {e}"),
+                ))
+            })?;
+            Request::Scenario { doc }
+        }
         "shutdown" => Request::Shutdown,
         other => {
             return Err(fail(ProtoError::new(
                 "bad-type",
                 format!(
                     "unknown op '{other}' (expected publish, subscribe, \
-                     unsubscribe, stats, or shutdown)"
+                     unsubscribe, stats, scenario, or shutdown)"
                 ),
             )))
         }
@@ -207,7 +288,9 @@ pub fn unsubscribe_ok(request_id: Option<&str>, ts: f64, removed: bool) -> Value
     )
 }
 
-/// `stats` response: the broker's lock-free counter snapshot.
+/// `stats` response: the broker's lock-free counter snapshot, plus the
+/// protocol version and capability list (the negotiation surface a
+/// federation link reads before subscribing).
 pub fn stats_ok(
     request_id: Option<&str>,
     ts: f64,
@@ -222,6 +305,11 @@ pub fn stats_ok(
         vec![
             ("broker", Value::str(broker)),
             ("shards", Value::num(shards as f64)),
+            ("v", Value::num(PROTO_V as f64)),
+            (
+                "capabilities",
+                Value::Arr(CAPABILITIES.iter().map(|c| Value::str(*c)).collect()),
+            ),
             (
                 "stats",
                 Value::obj(vec![
@@ -233,6 +321,17 @@ pub fn stats_ok(
                 ]),
             ),
         ],
+    )
+}
+
+/// `scenario` finished: the app it dispatched to and its summary
+/// object (see `svcgraph::scenario::Report::summary`).
+pub fn scenario_ok(request_id: Option<&str>, ts: f64, app: &str, report: Value) -> Value {
+    envelope(
+        "scenario_ok",
+        request_id,
+        ts,
+        vec![("app", Value::str(app)), ("report", report)],
     )
 }
 
@@ -252,18 +351,21 @@ pub fn error(request_id: Option<&str>, ts: f64, code: &str, message: &str) -> Va
 }
 
 /// An asynchronous delivery push for subscription `sub_id`.
-pub fn message(ts: f64, sub_id: u64, m: &Message) -> Value {
-    envelope(
-        "message",
-        None,
-        ts,
-        vec![
-            ("subscriptionId", Value::num(sub_id as f64)),
-            ("topic", Value::str(m.topic.as_str())),
-            ("payload", Value::str(b64::encode(&m.payload))),
-            ("origin", Value::str(&*m.origin)),
-        ],
-    )
+///
+/// `retained` is retain-as-published (a retained replay, or a live
+/// publish that asked to retain); the field is only emitted when true
+/// so v1 pushes for ordinary publishes are byte-identical.
+pub fn message(ts: f64, sub_id: u64, m: &Message, retained: bool) -> Value {
+    let mut extra = vec![
+        ("subscriptionId", Value::num(sub_id as f64)),
+        ("topic", Value::str(m.topic.as_str())),
+        ("payload", Value::str(b64::encode(&m.payload))),
+        ("origin", Value::str(&*m.origin)),
+    ];
+    if retained {
+        extra.push(("retained", Value::Bool(true)));
+    }
+    envelope("message", None, ts, extra)
 }
 
 #[cfg(test)]
@@ -308,9 +410,67 @@ mod tests {
             Request::Publish {
                 topic: "a/b".into(),
                 payload: vec![],
-                retain: false
+                retain: false,
+                origin: None
             }
         );
         assert_eq!(env.request_id, None);
+    }
+
+    #[test]
+    fn version_field_negotiates() {
+        // absent and explicit v1 both parse
+        assert!(parse_request(br#"{"type":"stats"}"#).is_ok());
+        assert!(parse_request(br#"{"type":"stats","v":1}"#).is_ok());
+        // a future version is refused with a stable slug, echoing the id
+        let e = parse_request(br#"{"type":"stats","v":9,"requestId":"r2"}"#).unwrap_err();
+        assert_eq!(e.code, "unsupported-version");
+        assert_eq!(e.request_id.as_deref(), Some("r2"));
+        // malformed versions are envelope errors
+        for bad in [
+            br#"{"type":"stats","v":1.5}"#.as_slice(),
+            br#"{"type":"stats","v":-1}"#.as_slice(),
+            br#"{"type":"stats","v":"1"}"#.as_slice(),
+        ] {
+            assert_eq!(parse_request(bad).unwrap_err().code, "bad-envelope");
+        }
+    }
+
+    #[test]
+    fn origin_passthrough_and_scenario_decode() {
+        let env =
+            parse_request(br#"{"type":"publish","topic":"t","origin":"ec-broker"}"#).unwrap();
+        match env.req {
+            Request::Publish { origin, .. } => assert_eq!(origin.as_deref(), Some("ec-broker")),
+            other => panic!("unexpected request {other:?}"),
+        }
+        assert_eq!(
+            parse_request(br#"{"type":"publish","topic":"t","origin":7}"#)
+                .unwrap_err()
+                .code,
+            "bad-envelope"
+        );
+        // scenario docs ride as base64 yamlite
+        let doc64 = b64::encode(b"duration: 5\nops: []\n");
+        let body = format!(r#"{{"type":"scenario","scenario":"{doc64}"}}"#);
+        match parse_request(body.as_bytes()).unwrap().req {
+            Request::Scenario { doc } => assert_eq!(doc, "duration: 5\nops: []\n"),
+            other => panic!("unexpected request {other:?}"),
+        }
+        assert_eq!(
+            parse_request(br#"{"type":"scenario","scenario":"!!"}"#)
+                .unwrap_err()
+                .code,
+            "bad-scenario"
+        );
+    }
+
+    #[test]
+    fn retained_flag_is_omitted_when_false() {
+        let m = Message::new("a/b", b"hi".to_vec());
+        let plain = json::to_string(&message(1.0, 3, &m, false));
+        assert!(!plain.contains("retained"));
+        let kept = json::to_string(&message(1.0, 3, &m, true));
+        assert!(kept.contains(r#""retained":true"#));
     }
 }

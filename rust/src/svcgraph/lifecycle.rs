@@ -169,8 +169,10 @@ impl LifecycleScenario {
     pub fn from_value(doc: &Value) -> Result<LifecycleScenario> {
         let top = doc.as_obj().context("scenario: expected a mapping")?;
         for key in top.keys() {
-            if !matches!(key.as_str(), "duration" | "ops" | "network" | "faults") {
-                bail!("scenario: unknown field '{key}' (duration|ops|network|faults)");
+            // `app` is the svcgraph::scenario dispatch key; accepted
+            // here so one document drives both layers
+            if !matches!(key.as_str(), "app" | "duration" | "ops" | "network" | "faults") {
+                bail!("scenario: unknown field '{key}' (app|duration|ops|network|faults)");
             }
         }
         let duration = secs(

@@ -67,6 +67,7 @@
 //! agents → monitor, Figure 4 steps ②→④).
 
 pub mod lifecycle;
+pub mod scenario;
 
 use crate::deploy::{DeploymentPlan, Instance};
 use crate::des::{Scheduler, SimEvent};

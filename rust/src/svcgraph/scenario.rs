@@ -1,0 +1,302 @@
+//! One scenario format, one entry point.
+//!
+//! Every application driver used to expose its own run function with
+//! its own config plumbing (`app::videoquery::run_scenario`,
+//! `app::fedtrain::run_fedtrain_scenario`, `app::metro::run_metro_with`)
+//! and every caller — `ace svcrun`, the CI scenario matrix, now the
+//! `ace serve` `scenario` op — re-implemented the dispatch. This
+//! module is the single seam: [`Scenario::parse`] resolves WHICH
+//! application a yamlite document drives, [`run`] executes it, and
+//! [`Report`] carries the per-app result behind one type with a
+//! wire-ready [`Report::summary`].
+//!
+//! App resolution, in order:
+//!
+//!   1. a top-level `app:` key (`metro` documents are plain workload
+//!      configs, not lifecycle scripts, and MUST name themselves;
+//!      lifecycle documents may name their app explicitly too);
+//!   2. the app of the first `deploy`/`update` op
+//!      ([`LifecycleScenario::first_app`]);
+//!   3. the caller-provided fallback (the CLI's `--app`, default
+//!      `videoquery`).
+//!
+//! [`Knobs`] are the CLI-flag overrides: every field is an `Option`
+//! and `None` means "the same default `ace svcrun --scenario` always
+//! used", so a knob-free [`run`] (e.g. from a connected serve client)
+//! behaves exactly like the bare CLI invocation.
+
+use super::lifecycle::{LifecycleReport, LifecycleScenario};
+use crate::app::fedtrain::{FedConfig, FedMetrics};
+use crate::app::metro::{MetroConfig, MetroMetrics};
+use crate::app::videoquery::{CellConfig, Compute, Paradigm, ScenarioOutcome, ServiceTimes};
+use crate::json::Value;
+use crate::util::to_secs;
+use crate::yamlite;
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed scenario document, dispatch already resolved.
+#[derive(Debug, Clone)]
+pub enum Scenario {
+    /// A metro workload config (`app: metro`) — no lifecycle ops.
+    Metro(MetroConfig),
+    /// A lifecycle script driving `app` (videoquery | fedtrain).
+    Lifecycle {
+        app: String,
+        scenario: LifecycleScenario,
+    },
+}
+
+impl Scenario {
+    /// Parse a yamlite scenario document, resolving the app with the
+    /// default `videoquery` fallback.
+    pub fn parse(src: &str) -> Result<Scenario> {
+        Self::parse_with_fallback(src, "videoquery")
+    }
+
+    /// Parse with an explicit fallback app for lifecycle documents
+    /// that neither carry an `app:` key nor deploy a topology (the
+    /// CLI passes its `--app` flag here).
+    pub fn parse_with_fallback(src: &str, fallback_app: &str) -> Result<Scenario> {
+        let doc = yamlite::parse(src).map_err(|e| anyhow!("{e}"))?;
+        if doc.get("app").as_str() == Some("metro") {
+            return Ok(Scenario::Metro(MetroConfig::from_value(&doc)?));
+        }
+        let scenario = LifecycleScenario::from_value(&doc)?;
+        let app = doc
+            .get("app")
+            .as_str()
+            .or_else(|| scenario.first_app())
+            .unwrap_or(fallback_app)
+            .to_string();
+        Ok(Scenario::Lifecycle { app, scenario })
+    }
+
+    /// The application this scenario drives.
+    pub fn app(&self) -> &str {
+        match self {
+            Scenario::Metro(_) => "metro",
+            Scenario::Lifecycle { app, .. } => app,
+        }
+    }
+}
+
+/// CLI-flag overrides; `None` = the flag's `ace svcrun` default.
+/// Fields that do not apply to the dispatched app are ignored (the
+/// same contract the CLI flags always had).
+#[derive(Clone, Default)]
+pub struct Knobs {
+    /// videoquery: serving paradigm (default ACE basic policy).
+    pub paradigm: Option<Paradigm>,
+    /// videoquery: OD sampling interval, seconds (default 0.2).
+    pub interval_s: Option<f64>,
+    /// videoquery + fedtrain: one-way WAN delay, ms (default 0).
+    pub wan_delay_ms: Option<f64>,
+    /// videoquery: sampling horizon, seconds (default: the scenario's
+    /// `duration`, so post-redeploy phases still produce crops).
+    pub duration_s: Option<f64>,
+    /// videoquery seed (default 1) / fedtrain seed (default 42).
+    pub seed: Option<u64>,
+    /// videoquery + fedtrain: edge clusters (default 3).
+    pub num_ecs: Option<usize>,
+    /// videoquery: cameras per EC (default 3).
+    pub cams_per_ec: Option<usize>,
+    /// fedtrain: FL rounds (default 12).
+    pub rounds: Option<usize>,
+    /// fedtrain: virtual ms per local SGD step (default 200).
+    pub step_ms: Option<f64>,
+    /// Scheduler lanes / metro cluster partitions (default 1; metro
+    /// documents may set their own).
+    pub partitions: Option<usize>,
+    /// metro: worker threads driving the partitions.
+    pub threads: Option<usize>,
+    /// videoquery: real compiled-model compute instead of the
+    /// synthetic oracle (`ace svcrun --real`).
+    pub video_compute: Option<(ServiceTimes, Compute)>,
+}
+
+/// What a scenario run produced, per app.
+pub enum Report {
+    Video(ScenarioOutcome),
+    Fed {
+        metrics: FedMetrics,
+        lifecycle: LifecycleReport,
+    },
+    Metro(MetroMetrics),
+}
+
+impl Report {
+    /// The application that produced this report.
+    pub fn app(&self) -> &'static str {
+        match self {
+            Report::Video(_) => "videoquery",
+            Report::Fed { .. } => "fedtrain",
+            Report::Metro(_) => "metro",
+        }
+    }
+
+    /// A small wire-ready summary (the `scenario_ok` payload): the
+    /// headline numbers each app's CLI output leads with.
+    pub fn summary(&self) -> Value {
+        match self {
+            Report::Video(out) => {
+                let m = &out.metrics;
+                Value::obj(vec![
+                    ("paradigm", Value::str(&m.paradigm)),
+                    ("crops", Value::num(m.crops as f64)),
+                    ("f1", Value::num(m.f1.f1())),
+                    ("bwcMb", Value::num(m.bwc_mb())),
+                    ("edgeDecided", Value::num(m.edge_decided as f64)),
+                    ("cloudDecided", Value::num(m.cloud_decided as f64)),
+                ])
+            }
+            Report::Fed { metrics, .. } => Value::obj(vec![
+                ("rounds", Value::num(metrics.rounds.len() as f64)),
+                ("finalAccuracy", Value::num(metrics.final_accuracy)),
+                ("wanMb", Value::num(metrics.wan_bytes as f64 / 1e6)),
+                ("virtualSecs", Value::num(metrics.virtual_secs)),
+            ]),
+            Report::Metro(m) => Value::obj(vec![
+                ("frames", Value::num(m.frames as f64)),
+                ("escalated", Value::num(m.escalated as f64)),
+                ("replies", Value::num(m.replies as f64)),
+                ("meanLatencyMs", Value::num(m.mean_latency_ms)),
+                ("windows", Value::num(m.windows as f64)),
+            ]),
+        }
+    }
+}
+
+/// Run a parsed scenario with all-default knobs — what a scenario
+/// arriving over the serve protocol gets.
+pub fn run(sc: &Scenario) -> Result<Report> {
+    run_with(sc, Knobs::default())
+}
+
+/// Run a parsed scenario with explicit CLI-flag overrides.
+pub fn run_with(sc: &Scenario, knobs: Knobs) -> Result<Report> {
+    match sc {
+        Scenario::Metro(cfg) => {
+            let mut cfg = cfg.clone();
+            if let Some(p) = knobs.partitions {
+                cfg.partitions = p;
+            }
+            if let Some(t) = knobs.threads {
+                cfg.threads = t;
+            }
+            Ok(Report::Metro(crate::app::metro::run_metro_with(
+                &cfg,
+                |_, _| {},
+            )))
+        }
+        Scenario::Lifecycle { app, scenario } => match app.as_str() {
+            "videoquery" => {
+                let cfg = CellConfig {
+                    paradigm: knobs.paradigm.unwrap_or(Paradigm::AceBp),
+                    interval_s: knobs.interval_s.unwrap_or(0.2),
+                    wan_delay_ms: knobs.wan_delay_ms.unwrap_or(0.0),
+                    // default: sample right up to the scenario horizon
+                    // so post-redeploy phases still produce crops
+                    duration_s: knobs
+                        .duration_s
+                        .unwrap_or_else(|| to_secs(scenario.duration)),
+                    seed: knobs.seed.unwrap_or(1),
+                    num_ecs: knobs.num_ecs.unwrap_or(3),
+                    cams_per_ec: knobs.cams_per_ec.unwrap_or(3),
+                    partitions: knobs.partitions.unwrap_or(1),
+                    ..Default::default()
+                };
+                let (svc, compute) = knobs.video_compute.unwrap_or((
+                    ServiceTimes::synthetic(),
+                    Compute::Synthetic { target_bias: 0.05 },
+                ));
+                #[allow(deprecated)] // the wrapped per-app entry point
+                let out = crate::app::videoquery::run_scenario(cfg, svc, compute, scenario)?;
+                Ok(Report::Video(out))
+            }
+            "fedtrain" => {
+                let cfg = FedConfig {
+                    rounds: knobs.rounds.unwrap_or(12),
+                    num_ecs: knobs.num_ecs.unwrap_or(3),
+                    wan_delay_ms: knobs.wan_delay_ms.unwrap_or(0.0),
+                    seed: knobs.seed.unwrap_or(42),
+                    step_ms: knobs.step_ms.unwrap_or(200.0),
+                    partitions: knobs.partitions.unwrap_or(1),
+                    ..Default::default()
+                };
+                #[allow(deprecated)] // the wrapped per-app entry point
+                let (metrics, lifecycle) =
+                    crate::app::fedtrain::run_fedtrain_scenario(cfg, scenario)?;
+                Ok(Report::Fed { metrics, lifecycle })
+            }
+            other => bail!("scenario deploys unknown app '{other}' (videoquery|fedtrain|metro)"),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FED_DOC: &str = "\
+app: fedtrain
+duration: 12
+ops:
+  - at: 0
+    op: deploy
+    topology:
+      app: fedtrain
+      components:
+        - name: trainer
+          image: ace/fl-trainer:1
+          location: edge
+          replicas: 2
+          connections: [coordinator]
+        - name: coordinator
+          image: ace/fl-coordinator:1
+          location: cloud
+          connections: []
+";
+
+    #[test]
+    fn metro_documents_dispatch_before_the_lifecycle_parser() {
+        let sc = Scenario::parse("app: metro\nduration_s: 1\n").unwrap();
+        assert_eq!(sc.app(), "metro");
+        match sc {
+            Scenario::Metro(cfg) => assert_eq!(cfg.duration_s, 1.0),
+            other => panic!("expected a metro scenario, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_app_key_wins_and_unknowns_fail_loud() {
+        let sc = Scenario::parse(FED_DOC).unwrap();
+        assert_eq!(sc.app(), "fedtrain");
+        let doc = FED_DOC.replace("app: fedtrain\n", "app: warp\n");
+        let sc = Scenario::parse(&doc).unwrap();
+        // the topology still says fedtrain, but the explicit key wins
+        assert_eq!(sc.app(), "warp");
+        let err = run(&sc).unwrap_err().to_string();
+        assert!(err.contains("unknown app 'warp'"), "got: {err}");
+    }
+
+    #[test]
+    fn dispatcher_runs_a_fedtrain_scenario_end_to_end() {
+        let sc = Scenario::parse(FED_DOC).unwrap();
+        let report = run_with(
+            &sc,
+            Knobs {
+                rounds: Some(2),
+                num_ecs: Some(2),
+                step_ms: Some(1.0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.app(), "fedtrain");
+        match &report {
+            Report::Fed { metrics, .. } => assert_eq!(metrics.rounds.len(), 2),
+            _ => panic!("expected a fedtrain report"),
+        }
+        assert_eq!(report.summary().get("rounds").as_f64(), Some(2.0));
+    }
+}

@@ -1,0 +1,192 @@
+//! The pooled serve engine under load, plus federation semantics:
+//!
+//! * SOAK — 64 concurrent clients (each with a live subscription and a
+//!   full fan-out exchange) must NOT grow the process thread count
+//!   beyond the fixed worker pool: the readiness loop owns every
+//!   socket, so connections are state, not threads. The retired
+//!   thread-per-connection + thread-per-subscription engine would sit
+//!   at 128+ threads in this test.
+//! * FEDERATION differential — a federated pair must deliver the same
+//!   per-subscriber sequence a single broker delivers for the same
+//!   publish sequence, hand retained state across the link, and never
+//!   echo a message back (loop suppression).
+//! * SCENARIO op — a yamlite document sent by a connected client runs
+//!   to completion inside the server and a bad document is a typed,
+//!   recoverable error.
+//!
+//! The tests serialize on a file-local mutex: the soak's thread-count
+//! bound and the link-handshake waits assume no sibling test is
+//! spinning servers up or down concurrently.
+
+use ace::serve::client::{Client, ErrorCode, ServeError};
+use ace::serve::federate::FederateConfig;
+use ace::serve::{ServeConfig, Server};
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // a poisoned lock just means a sibling test failed; run anyway
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn start(cfg: &ServeConfig) -> (String, thread::JoinHandle<std::io::Result<()>>) {
+    let server = Server::bind("127.0.0.1:0", cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().to_string();
+    (addr, thread::spawn(move || server.run()))
+}
+
+fn stop(addr: &str, handle: thread::JoinHandle<std::io::Result<()>>) {
+    let mut c = Client::connect(addr).open().expect("connect for shutdown");
+    c.shutdown().expect("shutdown op");
+    handle.join().expect("server thread").expect("clean serve-loop exit");
+}
+
+fn threads_now() -> usize {
+    std::fs::read_dir("/proc/self/task").expect("procfs task dir").count()
+}
+
+#[test]
+fn worker_pool_bounds_server_threads_under_64_clients() {
+    let _serial = lock();
+    let pool = 4;
+    let cfg = ServeConfig {
+        shards: 4,
+        pool,
+        ..ServeConfig::default()
+    };
+    let baseline = threads_now();
+    let (addr, handle) = start(&cfg);
+    let mut clients: Vec<Client> = (0..64)
+        .map(|_| Client::connect(&addr).open().expect("soak client connect"))
+        .collect();
+    for c in clients.iter_mut() {
+        c.subscribe("soak/#").unwrap();
+    }
+    // everyone publishes once; each publish fans out to all 64
+    for (i, c) in clients.iter_mut().enumerate() {
+        let topic = format!("soak/c{i}");
+        assert_eq!(c.publish(&topic, b"ping", false).unwrap(), 64);
+    }
+    for c in clients.iter_mut() {
+        for _ in 0..64 {
+            c.recv_message(Duration::from_secs(10)).unwrap().expect("soak delivery");
+        }
+    }
+    // 64 live connections + 64 subscriptions mid-exchange: the engine
+    // is still ONE poll thread + `pool` workers (+ slack for runtime
+    // threads), NOT a thread per connection or per subscription
+    let during = threads_now();
+    assert!(
+        during <= baseline + pool + 4,
+        "server thread count exploded: {baseline} -> {during} with pool {pool}"
+    );
+    drop(clients);
+    stop(&addr, handle);
+}
+
+fn collect(c: &mut Client, n: usize) -> Vec<(String, Vec<u8>)> {
+    (0..n)
+        .map(|i| {
+            let d = c
+                .recv_message(Duration::from_secs(5))
+                .unwrap()
+                .unwrap_or_else(|| panic!("delivery {i} missing"));
+            (d.topic, d.payload)
+        })
+        .collect()
+}
+
+#[test]
+fn federated_pair_matches_a_single_broker() {
+    let _serial = lock();
+    // the reference: one broker, the same publish sequence
+    let (addr_ref, h_ref) = start(&ServeConfig::default());
+    // the pair: b is plain; a federates with b in both directions
+    let (addr_b, h_b) = start(&ServeConfig {
+        broker_name: "b".into(),
+        ..ServeConfig::default()
+    });
+    // retained state on b BEFORE the link exists: the pull side must
+    // hand it off and re-retain it on a
+    let mut seed = Client::connect(&addr_b).open().unwrap();
+    seed.publish("cfg/x", b"v1", true).unwrap();
+    let (addr_a, h_a) = start(&ServeConfig {
+        broker_name: "a".into(),
+        federate: Some(FederateConfig::all(addr_b.clone())),
+        ..ServeConfig::default()
+    });
+    // the link is up once a has republished b's retained message
+    let mut probe_a = Client::connect(&addr_a).open().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while probe_a.stats().unwrap().pub_count == 0 {
+        assert!(Instant::now() < deadline, "link never handed off retained state");
+        thread::sleep(Duration::from_millis(25));
+    }
+    // ... and the handoff is RETAINED: a late a-side subscriber
+    // replays it, origin intact
+    let mut late_a = Client::connect(&addr_a).open().unwrap();
+    late_a.subscribe("cfg/#").unwrap();
+    let d = late_a
+        .recv_message(Duration::from_secs(5))
+        .unwrap()
+        .expect("retained handoff replay");
+    assert_eq!(d.topic, "cfg/x");
+    assert_eq!(d.payload, b"v1");
+    assert_eq!(d.origin, "b");
+    assert!(d.retained, "handoff must stay retain-as-published");
+
+    // the differential: publish through a, watch on a, b, and the
+    // reference — every subscriber must see the identical sequence
+    let mut sub_a = Client::connect(&addr_a).open().unwrap();
+    sub_a.subscribe("diff/#").unwrap();
+    let mut sub_b = Client::connect(&addr_b).open().unwrap();
+    sub_b.subscribe("diff/#").unwrap();
+    let mut sub_ref = Client::connect(&addr_ref).open().unwrap();
+    sub_ref.subscribe("diff/#").unwrap();
+    let mut pub_a = Client::connect(&addr_a).open().unwrap();
+    let mut pub_ref = Client::connect(&addr_ref).open().unwrap();
+    for i in 0..20 {
+        let topic = format!("diff/t{i}");
+        let payload = format!("m{i}");
+        assert!(pub_a.publish(&topic, payload.as_bytes(), false).unwrap() >= 1);
+        pub_ref.publish(&topic, payload.as_bytes(), false).unwrap();
+    }
+    let reference = collect(&mut sub_ref, 20);
+    assert_eq!(collect(&mut sub_a, 20), reference, "a-side diverges from the single broker");
+    assert_eq!(collect(&mut sub_b, 20), reference, "b-side diverges from the single broker");
+    // loop suppression: no echoes trickle in afterwards on either side
+    assert!(sub_a.recv_message(Duration::from_millis(300)).unwrap().is_none());
+    assert!(sub_b.recv_message(Duration::from_millis(300)).unwrap().is_none());
+
+    stop(&addr_a, h_a);
+    stop(&addr_b, h_b);
+    stop(&addr_ref, h_ref);
+}
+
+#[test]
+fn scenario_op_runs_a_metro_document_to_completion() {
+    let _serial = lock();
+    let (addr, handle) = start(&ServeConfig::default());
+    let mut c = Client::connect(&addr).open().unwrap();
+    let (app, report) = c
+        .scenario("app: metro\nduration_s: 1\necs: 1\nnodes_per_ec: 1\n")
+        .expect("metro scenario over the wire");
+    assert_eq!(app, "metro");
+    assert!(
+        report.get("frames").as_f64().unwrap_or(0.0) > 0.0,
+        "scenario report carries no frames: {report}"
+    );
+    // a broken document is a typed error, not a dead connection
+    match c.scenario("app: warp\nduration: 1\n").expect_err("bad doc must be refused") {
+        ServeError::Protocol { code, .. } => assert!(
+            matches!(code, ErrorCode::BadScenario | ErrorCode::ScenarioFailed),
+            "unexpected error code {code}"
+        ),
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    c.stats().expect("connection survived the bad scenario");
+    stop(&addr, handle);
+}

@@ -10,9 +10,9 @@
 //!   retain order after the subscribe ack, and the in-repo probe
 //!   (what CI's smoke job runs) passes with a clean server join.
 
-use ace::json;
+use ace::json::{self, Value};
 use ace::pubsub::{BrokerStats, Message};
-use ace::serve::client::Client;
+use ace::serve::client::{Client, ErrorCode, ServeError};
 use ace::serve::frame::{read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME};
 use ace::serve::proto::{self, Envelope, Request};
 use ace::serve::{probe, ServeConfig, Server};
@@ -39,7 +39,8 @@ fn golden_roundtrip_every_op() {
             req: Request::Publish {
                 topic: "a/b".into(),
                 payload: b"hi".to_vec(),
-                retain: true
+                retain: true,
+                origin: None
             }
         }
     );
@@ -74,7 +75,7 @@ fn golden_roundtrip_every_op() {
         r#"{"removed":false,"requestId":"r3","timestamp":42,"type":"unsubscribe_ok"}"#
     );
 
-    // stats
+    // stats (the negotiation surface: v + capability list ride along)
     let env = proto::parse_request(br#"{"requestId":"r4","type":"stats"}"#).unwrap();
     assert_eq!(env.req, Request::Stats);
     let st = BrokerStats {
@@ -87,10 +88,28 @@ fn golden_roundtrip_every_op() {
     assert_eq!(
         json::to_string(&proto::stats_ok(Some("r4"), 42.5, "serve", 8, &st)),
         concat!(
-            r#"{"broker":"serve","requestId":"r4","shards":8,"#,
+            r#"{"broker":"serve","#,
+            r#""capabilities":["federation","origin-publish","retained-flag","scenario"],"#,
+            r#""requestId":"r4","shards":8,"#,
             r#""stats":{"deliverBytes":7,"deliverCount":3,"pubBytes":9,"pubCount":4,"subscriptions":2},"#,
-            r#""timestamp":42.5,"type":"stats_ok"}"#
+            r#""timestamp":42.5,"type":"stats_ok","v":1}"#
         )
+    );
+
+    // scenario (yamlite doc rides base64-encoded)
+    let env = proto::parse_request(
+        br#"{"requestId":"r7","scenario":"YXBwOiBtZXRybw==","type":"scenario"}"#,
+    )
+    .unwrap();
+    assert_eq!(
+        env.req,
+        Request::Scenario {
+            doc: "app: metro".into()
+        }
+    );
+    assert_eq!(
+        json::to_string(&proto::scenario_ok(Some("r7"), 42.0, "metro", Value::obj(vec![]))),
+        r#"{"app":"metro","report":{},"requestId":"r7","timestamp":42,"type":"scenario_ok"}"#
     );
 
     // shutdown
@@ -101,15 +120,22 @@ fn golden_roundtrip_every_op() {
         r#"{"requestId":"r5","timestamp":42,"type":"shutdown_ok"}"#
     );
 
-    // error + message push
+    // error + message push (plain, and retain-as-published)
     assert_eq!(
         json::to_string(&proto::error(Some("r6"), 42.0, "bad-json", "nope")),
         r#"{"code":"bad-json","message":"nope","requestId":"r6","timestamp":42,"type":"error"}"#
     );
     assert_eq!(
-        json::to_string(&proto::message(42.0, 7, &Message::new("a/b", *b"hi"))),
+        json::to_string(&proto::message(42.0, 7, &Message::new("a/b", *b"hi"), false)),
         concat!(
             r#"{"origin":"","payload":"aGk=","subscriptionId":7,"#,
+            r#""timestamp":42,"topic":"a/b","type":"message"}"#
+        )
+    );
+    assert_eq!(
+        json::to_string(&proto::message(42.0, 7, &Message::new("a/b", *b"hi"), true)),
+        concat!(
+            r#"{"origin":"","payload":"aGk=","retained":true,"subscriptionId":7,"#,
             r#""timestamp":42,"topic":"a/b","type":"message"}"#
         )
     );
@@ -126,9 +152,9 @@ fn start_server(cfg: &ServeConfig) -> (String, thread::JoinHandle<std::io::Resul
 }
 
 fn stop_server(addr: &str, handle: thread::JoinHandle<std::io::Result<()>>) {
-    let mut c = Client::connect(addr).expect("connect for shutdown");
+    let mut c = Client::connect(addr).open().expect("connect for shutdown");
     c.shutdown().expect("shutdown op");
-    handle.join().expect("server thread").expect("clean accept-loop exit");
+    handle.join().expect("server thread").expect("clean serve-loop exit");
 }
 
 #[test]
@@ -136,7 +162,7 @@ fn probe_passes_and_server_joins_cleanly() {
     let (addr, handle) = start_server(&ServeConfig::default());
     // the exact smoke CI runs: probe sends shutdown itself
     probe(&addr, true).expect("probe against a live server");
-    handle.join().expect("server thread").expect("clean accept-loop exit");
+    handle.join().expect("server thread").expect("clean serve-loop exit");
 }
 
 #[test]
@@ -159,6 +185,11 @@ fn split_and_partial_writes_are_reassembled() {
     let v = json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
     assert_eq!(v.get("type").as_str(), Some("stats_ok"));
     assert_eq!(v.get("requestId").as_str(), Some("slow"));
+    // the reply advertises the protocol version and capabilities
+    assert_eq!(v.get("v").as_f64(), Some(1.0));
+    let caps = v.get("capabilities").as_arr().expect("capability list");
+    assert!(caps.iter().any(|c| c.as_str() == Some("scenario")));
+    assert!(caps.iter().any(|c| c.as_str() == Some("federation")));
     stop_server(&addr, handle);
 }
 
@@ -171,7 +202,7 @@ fn oversized_frame_is_answered_and_isolated_to_its_connection() {
     let (addr, handle) = start_server(&cfg);
 
     // an innocent bystander with a live subscription
-    let mut bystander = Client::connect(&addr).unwrap();
+    let mut bystander = Client::connect(&addr).open().unwrap();
     bystander.subscribe("news/#").unwrap();
 
     // the offender claims a 1 MiB frame against a 1 KiB cap
@@ -193,7 +224,7 @@ fn oversized_frame_is_answered_and_isolated_to_its_connection() {
     }
 
     // the bystander is unaffected: publishes still flow to it
-    let mut publisher = Client::connect(&addr).unwrap();
+    let mut publisher = Client::connect(&addr).open().unwrap();
     assert_eq!(publisher.publish("news/x", b"still-alive", false).unwrap(), 1);
     let d = bystander
         .recv_message(Duration::from_secs(5))
@@ -206,17 +237,24 @@ fn oversized_frame_is_answered_and_isolated_to_its_connection() {
 #[test]
 fn malformed_json_is_recoverable_on_the_same_connection() {
     let (addr, handle) = start_server(&ServeConfig::default());
-    let mut c = Client::connect(&addr).unwrap();
+    let mut c = Client::connect(&addr).open().unwrap();
     for garbage in [&b"{broken"[..], &b"\xff\xfe"[..], &b"[1,2,3]"[..], &b"{}"[..]] {
         c.send_raw(garbage).unwrap();
-        let err = c.read_response().expect_err("garbage must be rejected");
-        let code = err.split(':').next().unwrap();
-        assert!(
-            ["bad-json", "bad-utf8", "bad-envelope"].contains(&code),
-            "unexpected error code in {err:?}"
-        );
+        match c.read_response().expect_err("garbage must be rejected") {
+            ServeError::Protocol { code, .. } => assert!(
+                [ErrorCode::BadJson, ErrorCode::BadUtf8, ErrorCode::BadEnvelope].contains(&code),
+                "unexpected error code {code}"
+            ),
+            other => panic!("expected a protocol error, got {other:?}"),
+        }
     }
-    // four rejects later, the connection still serves requests
+    // a future protocol version is refused with a stable slug ...
+    c.send_raw(br#"{"type":"stats","v":9}"#).unwrap();
+    match c.read_response().expect_err("v9 must be refused") {
+        ServeError::Protocol { code, .. } => assert_eq!(code, ErrorCode::UnsupportedVersion),
+        other => panic!("expected a protocol error, got {other:?}"),
+    }
+    // ... and five rejects later, the connection still serves requests
     c.stats().expect("connection survived the garbage");
     stop_server(&addr, handle);
 }
@@ -228,7 +266,7 @@ fn retained_replay_arrives_in_retain_order_after_the_ack() {
         ..ServeConfig::default()
     };
     let (addr, handle) = start_server(&cfg);
-    let mut publisher = Client::connect(&addr).unwrap();
+    let mut publisher = Client::connect(&addr).open().unwrap();
     // distinct first levels, so the retained messages spread across
     // shards; the replay must still arrive in RETAIN order
     for i in 0..6 {
@@ -236,7 +274,7 @@ fn retained_replay_arrives_in_retain_order_after_the_ack() {
             .publish(&format!("lvl{i}/cfg"), format!("v{i}").as_bytes(), true)
             .unwrap();
     }
-    let mut late = Client::connect(&addr).unwrap();
+    let mut late = Client::connect(&addr).open().unwrap();
     let sub_id = late.subscribe("#").unwrap();
     for i in 0..6 {
         let d = late
@@ -246,6 +284,8 @@ fn retained_replay_arrives_in_retain_order_after_the_ack() {
         assert_eq!(d.subscription_id, sub_id);
         assert_eq!(d.topic, format!("lvl{i}/cfg"), "replay out of retain order");
         assert_eq!(d.payload, format!("v{i}").as_bytes());
+        // a replayed retained message carries the retained flag
+        assert!(d.retained, "replay {i} must be flagged retained");
     }
     stop_server(&addr, handle);
 }

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Two-process federation smoke for `ace serve --federate`.
+
+Usage: federation_smoke.py HUB_ADDR EDGE_ADDR
+
+The edge server was started with `--federate HUB_ADDR`. This script is
+an independent client implementation of the 4-byte-length-framed JSON
+protocol (so the smoke is not the rust codec talking to itself). It:
+
+  1. waits for the federation link to come up (the link's pull
+     subscription appears in the hub's `stats`);
+  2. publishes on the edge and asserts a hub subscriber receives the
+     message with `origin` = the edge broker's name (the PUSH side);
+  3. publishes on the hub and asserts an edge subscriber receives it
+     with `origin` = the hub broker's name (the PULL side);
+  4. sends both servers a `shutdown` op — the workflow then `wait`s on
+     both PIDs to pin the clean-exit behavior.
+"""
+
+import base64
+import json
+import socket
+import struct
+import sys
+import time
+
+
+def connect(addr, deadline):
+    host, port = addr.rsplit(":", 1)
+    while True:
+        try:
+            s = socket.create_connection((host, int(port)), timeout=2.0)
+            s.settimeout(10.0)
+            return s
+        except OSError:
+            if time.monotonic() > deadline:
+                raise
+            time.sleep(0.2)
+
+
+def send(s, obj):
+    body = json.dumps(obj).encode()
+    s.sendall(struct.pack(">I", len(body)) + body)
+
+
+def recv(s):
+    hdr = b""
+    while len(hdr) < 4:
+        chunk = s.recv(4 - len(hdr))
+        if not chunk:
+            raise RuntimeError("connection closed")
+        hdr += chunk
+    (n,) = struct.unpack(">I", hdr)
+    body = b""
+    while len(body) < n:
+        chunk = s.recv(n - len(body))
+        if not chunk:
+            raise RuntimeError("connection closed mid-frame")
+        body += chunk
+    return json.loads(body)
+
+
+def rpc(s, obj, want):
+    """Send a request; skip delivery pushes; return the typed reply."""
+    send(s, obj)
+    while True:
+        v = recv(s)
+        if v.get("type") == "message":
+            continue
+        if v.get("type") == "error":
+            raise RuntimeError(f"server error: {v}")
+        if v.get("type") != want:
+            raise RuntimeError(f"expected {want}, got {v}")
+        return v
+
+
+def wait_message(s, topic):
+    while True:
+        v = recv(s)  # the socket timeout bounds the wait
+        if v.get("type") == "message" and v.get("topic") == topic:
+            return v
+
+
+def main():
+    hub_addr, edge_addr = sys.argv[1], sys.argv[2]
+    deadline = time.monotonic() + 30.0
+    hub = connect(hub_addr, deadline)
+    edge = connect(edge_addr, deadline)
+
+    # the federation link's pull subscription shows up in hub stats
+    while True:
+        st = rpc(hub, {"type": "stats", "requestId": "h0"}, "stats_ok")
+        if st["stats"]["subscriptions"] >= 1:
+            break
+        if time.monotonic() > deadline:
+            raise RuntimeError("federation link never subscribed on the hub")
+        time.sleep(0.2)
+    caps = st.get("capabilities", [])
+    assert "federation" in caps and "origin-publish" in caps, caps
+    print(f"link up: hub speaks v{st.get('v')} with capabilities {caps}")
+
+    rpc(hub, {"type": "subscribe", "filter": "fed/#", "requestId": "h1"},
+        "subscribe_ok")
+    rpc(edge, {"type": "subscribe", "filter": "fed/#", "requestId": "e1"},
+        "subscribe_ok")
+
+    payload = base64.b64encode(b"over-the-bridge").decode()
+    # edge -> hub: the PUSH side of the link
+    rpc(edge, {"type": "publish", "topic": "fed/up", "payload": payload,
+               "requestId": "e2"}, "publish_ok")
+    m = wait_message(hub, "fed/up")
+    assert base64.b64decode(m["payload"]) == b"over-the-bridge", m
+    assert m.get("origin") == "edge", f"push lost its origin: {m}"
+    # hub -> edge: the PULL side of the link
+    rpc(hub, {"type": "publish", "topic": "fed/down", "payload": payload,
+              "requestId": "h2"}, "publish_ok")
+    m = wait_message(edge, "fed/down")
+    assert base64.b64decode(m["payload"]) == b"over-the-bridge", m
+    assert m.get("origin") == "hub", f"pull lost its origin: {m}"
+
+    # edge first (tears down the link), then the hub
+    rpc(edge, {"type": "shutdown", "requestId": "e9"}, "shutdown_ok")
+    rpc(hub, {"type": "shutdown", "requestId": "h9"}, "shutdown_ok")
+    print("federation smoke OK: both directions delivered, origins intact")
+
+
+if __name__ == "__main__":
+    main()
